@@ -1,0 +1,52 @@
+//! Figure 4 — % of epoch time per training stage for the vanilla (DGL)
+//! execution model on Freebase / ogbn-mag / MAG240M (the motivation:
+//! learnable-feature updates are 24–35% of epoch time), and
+//! Figure 10 — stage breakdown of Heta vs baselines on IGB-HET and
+//! MAG240M (Heta eliminates cross-machine work in sample/fetch/update).
+
+use heta::coordinator::{bench_run, SystemKind};
+use heta::metrics::STAGES;
+use heta::util::bench::table;
+
+fn breakdown_row(label: &str, cfg: &str, sys: SystemKind) -> Vec<String> {
+    let (rep, _) = bench_run(cfg, sys, 1);
+    let mut row = vec![label.to_string(), sys.name().to_string()];
+    for (_, pct) in rep.stages.percentages() {
+        row.push(format!("{pct:.1}%"));
+    }
+    row
+}
+
+fn main() {
+    let header: Vec<&str> = ["workload", "system"]
+        .into_iter()
+        .chain(STAGES.iter().map(|s| s.name()))
+        .collect();
+
+    // Fig. 4: vanilla DGL breakdown — update stage must be a major
+    // fraction on learnable-feature datasets (Freebase, MAG240M).
+    let rows4 = vec![
+        breakdown_row("Freebase", "freebase-bench", SystemKind::DglMetis),
+        breakdown_row("ogbn-mag", "mag-bench", SystemKind::DglMetis),
+        breakdown_row("MAG240M", "mag240m-bench", SystemKind::DglMetis),
+    ];
+    table("Fig 4: vanilla (DGL-METIS) stage breakdown", &header, &rows4);
+
+    // Fig. 10: Heta vs baselines on the large datasets.
+    let mut rows10 = Vec::new();
+    for cfg in ["igb-bench", "mag240m-bench"] {
+        for sys in [
+            SystemKind::Heta,
+            SystemKind::DglMetis,
+            SystemKind::DglOpt,
+            SystemKind::GraphLearn,
+        ] {
+            // GraphLearn unsupported on MAG240M (learnable features).
+            if cfg == "mag240m-bench" && sys == SystemKind::GraphLearn {
+                continue;
+            }
+            rows10.push(breakdown_row(cfg, cfg, sys));
+        }
+    }
+    table("Fig 10: R-GCN stage breakdown, Heta vs baselines", &header, &rows10);
+}

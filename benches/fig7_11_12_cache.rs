@@ -1,0 +1,108 @@
+//! Figure 7 — miss-penalty ratios per node type (Donor, ogbn-mag);
+//! Figure 11 — epoch time under the three cache policies (no cache /
+//! hotness-only / hotness+miss-penalty);
+//! Figure 12 — per-type cache hit rates, Heta vs DGL-Opt vs GraphLearn
+//! (R-GAT on IGB-HET).
+
+use heta::cache::{miss_penalty_ratio, Policy};
+use heta::config::Config;
+use heta::coordinator::{Engine, Session, SystemKind};
+use heta::datagen::{schema, Preset};
+use heta::util::bench::table;
+use heta::util::fmt_secs;
+
+fn fig7() {
+    let cost = heta::comm::CostModel::default();
+    let mut rows = Vec::new();
+    for (preset, label) in [(Preset::Donor, "Donor"), (Preset::Mag, "ogbn-mag")] {
+        let s = schema(preset, 1e-4);
+        for t in &s.node_types {
+            let o = miss_penalty_ratio(&cost, t.feat_dim, t.learnable);
+            rows.push(vec![
+                label.into(),
+                t.name.clone(),
+                t.feat_dim.to_string(),
+                if t.learnable { "learnable" } else { "read-only" }.into(),
+                format!("{:.2}", o * 1e9),
+            ]);
+        }
+    }
+    table(
+        "Fig 7: miss-penalty ratio per node type (ns per feature byte)",
+        &["dataset", "type", "dim", "kind", "o_a (ns/B)"],
+        &rows,
+    );
+}
+
+fn fig11() {
+    let mut rows = Vec::new();
+    for cfg_name in ["donor-bench", "mag240m-bench", "igb-bench", "mag-bench"] {
+        let mut no_cache = f64::NAN;
+        for (policy, label) in [
+            (Policy::None, "no-cache"),
+            (Policy::HotnessOnly, "hotness-only"),
+            (Policy::HotnessMissPenalty, "hotness+miss-penalty"),
+        ] {
+            let mut cfg = Config::load(&format!("configs/{cfg_name}.json")).unwrap();
+            cfg.train.cache_policy = policy;
+            let mut sess = Session::new(&cfg, &format!("artifacts/{cfg_name}")).unwrap();
+            let mut eng = Engine::build(&sess, SystemKind::Heta).unwrap();
+            let rep = eng.run_epoch(&mut sess, 0).unwrap();
+            if policy == Policy::None {
+                no_cache = rep.epoch_time_s;
+            }
+            rows.push(vec![
+                cfg_name.into(),
+                label.into(),
+                fmt_secs(rep.epoch_time_s),
+                format!("{:.2}x", no_cache / rep.epoch_time_s),
+            ]);
+        }
+    }
+    table(
+        "Fig 11: cache-policy ablation (speedup vs no-cache)",
+        &["dataset", "policy", "epoch time", "speedup"],
+        &rows,
+    );
+}
+
+fn fig12() {
+    let cfg_name = "igb-bench-rgat";
+    let mut rows = Vec::new();
+    for sys in [SystemKind::Heta, SystemKind::DglOpt, SystemKind::GraphLearn] {
+        let cfg = Config::load(&format!("configs/{cfg_name}.json")).unwrap();
+        let g = cfg.build_graph();
+        let mut sess = Session::new(&cfg, &format!("artifacts/{cfg_name}")).unwrap();
+        let mut eng = Engine::build(&sess, sys).unwrap();
+        let _ = eng.run_epoch(&mut sess, 0).unwrap();
+        let rates: Vec<Vec<f64>> = match &eng {
+            Engine::Raf(r) => r.hit_rates(),
+            Engine::Vanilla(v) => v.hit_rates(),
+        };
+        // Average across machines per type.
+        if rates.is_empty() {
+            continue;
+        }
+        let types = rates[0].len();
+        for ty in 0..types {
+            let avg: f64 =
+                rates.iter().map(|m| m[ty]).sum::<f64>() / rates.len() as f64;
+            rows.push(vec![
+                sys.name().into(),
+                g.schema.node_types[ty].name.clone(),
+                format!("{:.1}%", avg * 100.0),
+            ]);
+        }
+    }
+    table(
+        "Fig 12: cache hit rate per node type (R-GAT, IGB-HET)",
+        &["system", "node type", "hit rate"],
+        &rows,
+    );
+}
+
+fn main() {
+    fig7();
+    fig11();
+    fig12();
+}

@@ -1,0 +1,73 @@
+//! Figures 8 & 9 — overall epoch time of Heta vs DGL-Random / DGL-METIS
+//! / DGL-Opt / GraphLearn across HGNN models and datasets. Epoch time is
+//! the simulated-clock figure (measured PJRT compute + modeled data
+//! movement; see DESIGN.md substitutions). The paper's shape to
+//! reproduce: Heta fastest everywhere, 1.9–5.8× over DGL variants and
+//! 1.5–2.3× over GraphLearn.
+
+use heta::coordinator::{bench_run, SystemKind};
+use heta::util::bench::table;
+use heta::util::fmt_secs;
+
+fn run_config(rows: &mut Vec<Vec<String>>, cfg: &str, label: &str, systems: &[SystemKind]) {
+    let mut heta_time = f64::NAN;
+    for &sys in systems {
+        let (rep, _) = bench_run(cfg, sys, 1);
+        if sys == SystemKind::Heta {
+            heta_time = rep.epoch_time_s;
+        }
+        rows.push(vec![
+            label.into(),
+            sys.name().into(),
+            fmt_secs(rep.epoch_time_s),
+            if sys == SystemKind::Heta {
+                "1.00x".into()
+            } else {
+                format!("{:.2}x", rep.epoch_time_s / heta_time)
+            },
+        ]);
+    }
+}
+
+fn main() {
+    let all = SystemKind::all();
+    // GraphLearn does not support learnable features → skipped on
+    // datasets with featureless types (paper §8.1); DGL-Opt needs node
+    // features to cache → skipped on Freebase.
+    let no_gl: Vec<SystemKind> = all
+        .iter()
+        .copied()
+        .filter(|s| *s != SystemKind::GraphLearn)
+        .collect();
+    let fb: Vec<SystemKind> = no_gl
+        .iter()
+        .copied()
+        .filter(|s| *s != SystemKind::DglOpt)
+        .collect();
+
+    let mut rows = Vec::new();
+    // Fig. 8: medium datasets × three models.
+    run_config(&mut rows, "mag-bench", "ogbn-mag/R-GCN", &no_gl);
+    run_config(&mut rows, "mag-bench-rgat", "ogbn-mag/R-GAT", &no_gl);
+    run_config(&mut rows, "mag-bench-hgt", "ogbn-mag/HGT", &no_gl);
+    run_config(&mut rows, "freebase-bench", "Freebase/R-GCN", &fb);
+    run_config(&mut rows, "donor-bench", "Donor/R-GCN", &all);
+    run_config(&mut rows, "donor-bench-rgat", "Donor/R-GAT", &all);
+    table(
+        "Fig 8: epoch time, medium datasets (speedup vs Heta)",
+        &["workload", "system", "epoch time", "time/Heta"],
+        &rows,
+    );
+
+    // Fig. 9: large datasets.
+    let mut rows9 = Vec::new();
+    run_config(&mut rows9, "igb-bench", "IGB-HET/R-GCN", &all);
+    run_config(&mut rows9, "igb-bench-rgat", "IGB-HET/R-GAT", &all);
+    run_config(&mut rows9, "mag240m-bench", "MAG240M/R-GCN", &no_gl);
+    run_config(&mut rows9, "mag240m-bench-hgt", "MAG240M/HGT", &no_gl);
+    table(
+        "Fig 9: epoch time, large datasets (speedup vs Heta)",
+        &["workload", "system", "epoch time", "time/Heta"],
+        &rows9,
+    );
+}

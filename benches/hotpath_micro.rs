@@ -1,0 +1,79 @@
+//! Microbenchmarks of the L3 hot paths — sampling, feature gather
+//! (padded-block fill), sparse Adam, cache lookup, partitioning — the
+//! targets of the §Perf optimization pass (EXPERIMENTS.md §Perf records
+//! before/after for each).
+
+use heta::cache::{FeatureCache, Policy, TypeProfile};
+use heta::comm::CostModel;
+use heta::datagen::{generate, GenParams, Preset};
+use heta::hetgraph::MetaTree;
+use heta::kvstore::FeatureStore;
+use heta::optim::{accumulate_rows, sparse_adam_step, AdamParams};
+use heta::sampling::{presample_hotness, sample_tree, PAD};
+use heta::util::bench::{black_box, Bench};
+
+fn main() {
+    let b = Bench::new("hotpath").with_budget(1.0);
+    let g = generate(Preset::Mag, 1e-3, &GenParams::default());
+    let tree = MetaTree::build(&g.schema, 2);
+    let batch: Vec<u32> = g.train_nodes()[..64].to_vec();
+    let fanouts = [10usize, 5];
+
+    b.run("sample_tree/b64_f10x5", || {
+        black_box(sample_tree(&g, &tree, &fanouts, &batch, 0, 7, |_| true));
+    });
+
+    let store = FeatureStore::new(&g, 1);
+    let sample = sample_tree(&g, &tree, &fanouts, &batch, 0, 7, |_| true);
+    let ids = &sample.ids[1];
+    let dim = store.dim(tree.vertices[1].ty);
+    let mut buf = vec![0f32; ids.len() * dim];
+    b.run("gather/640rows", || {
+        black_box(store.gather(tree.vertices[1].ty, ids, &mut buf, |_| false));
+    });
+
+    // Sparse Adam over ~640 rows of a 64-dim table.
+    let n = g.schema.node_types[1].count;
+    let mut w = vec![0.1f32; n * 64];
+    let mut m = vec![0f32; n * 64];
+    let mut v = vec![0f32; n * 64];
+    let grads = vec![0.01f32; ids.len() * 64];
+    b.run("sparse_adam/640rows", || {
+        let rows = accumulate_rows(ids, &grads, 64, PAD);
+        black_box(sparse_adam_step(&rows, &mut w, &mut m, &mut v, 64, 1, AdamParams::default()));
+    });
+
+    // Cache access path.
+    let hotness = presample_hotness(&g, &tree, &fanouts, 64, 1, 3);
+    let profiles: Vec<TypeProfile> = g
+        .schema
+        .node_types
+        .iter()
+        .map(|t| TypeProfile {
+            name: t.name.clone(),
+            count: t.count,
+            feat_dim: t.feat_dim,
+            learnable: t.learnable,
+        })
+        .collect();
+    let cost = CostModel::default();
+    let mut cache = FeatureCache::build(
+        Policy::HotnessMissPenalty,
+        &profiles,
+        &hotness,
+        &cost,
+        4 << 20,
+        2,
+    );
+    b.run("cache_access/640", || {
+        let mut t = 0.0;
+        for &id in ids.iter().filter(|&&i| i != PAD) {
+            t += cache.access(&cost, 1, id, 0, false);
+        }
+        black_box(t);
+    });
+
+    b.run("meta_partition/mag-1e3", || {
+        black_box(heta::partition::meta::meta_partition(&g, 2, 2, None));
+    });
+}

@@ -1,0 +1,61 @@
+//! Cache explorer: reproduce the §6 mechanism interactively — profile
+//! miss-penalty ratios across node types (Fig. 7), build caches under
+//! the three policies (Fig. 11 arms), train one epoch each and report
+//! hit rates + simulated epoch time.
+//!
+//!     cargo run --release --offline --example cache_explorer -- --config donor-bench
+
+use heta::cache::{miss_penalty_ratio, Policy};
+use heta::config::Config;
+use heta::coordinator::{Engine, Session, SystemKind};
+use heta::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let name = args.get_or("config", "donor-bench");
+    let mut cfg = Config::load(&format!("configs/{name}.json"))?;
+    let g = cfg.build_graph();
+
+    println!("miss-penalty ratios (ns per feature byte), {}:", g.schema.name);
+    for t in &g.schema.node_types {
+        let r = miss_penalty_ratio(&cfg.cost, t.feat_dim, t.learnable);
+        println!(
+            "  {:<10} dim {:<5} {}  o_a = {:>8.1} ns/B",
+            t.name,
+            t.feat_dim,
+            if t.learnable { "learnable" } else { "read-only" },
+            r * 1e9
+        );
+    }
+
+    for policy in [Policy::None, Policy::HotnessOnly, Policy::HotnessMissPenalty] {
+        cfg.train.cache_policy = policy;
+        let mut sess = Session::new(&cfg, &format!("artifacts/{name}"))?;
+        let mut engine = Engine::build(&sess, SystemKind::Heta)?;
+        let r = engine.run_epoch(&mut sess, 0)?;
+        let label = match policy {
+            Policy::None => "no-cache",
+            Policy::HotnessOnly => "hotness-only",
+            Policy::HotnessMissPenalty => "hotness+miss-penalty (Heta)",
+        };
+        println!(
+            "\npolicy {label}: simulated epoch {} (fetch {})",
+            heta::util::fmt_secs(r.epoch_time_s),
+            heta::util::fmt_secs(r.stages.get(heta::metrics::Stage::Fetch))
+        );
+        if let Engine::Raf(raf) = &engine {
+            for (p, rates) in raf.hit_rates().iter().enumerate() {
+                let shown: Vec<String> = rates
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &r)| r > 0.0)
+                    .map(|(ty, r)| format!("{}={:.0}%", g.schema.node_types[ty].name, r * 100.0))
+                    .collect();
+                if !shown.is_empty() {
+                    println!("  partition {p} hit rates: {}", shown.join(" "));
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+"""AOT lowering: plan.json -> HLO-text artifacts + manifest.json.
+
+Usage (from ``python/``):
+    python -m compile.aot --plan ../artifacts/<cfg>/plan.json --out ../artifacts/<cfg>
+
+The interchange format is HLO **text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import Plan, build_all
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(art):
+    # keep_unused=True: gradients of linear layers do not read the weight
+    # value, and jit would otherwise DCE those arguments out of the
+    # compiled signature — breaking the manifest's input ordering.
+    lowered = jax.jit(art.fn, keep_unused=True).lower(*art.example_args())
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--plan", required=True)
+    ap.add_argument("--out", required=True)
+    args = ap.parse_args()
+
+    plan = Plan.load(args.plan)
+    os.makedirs(args.out, exist_ok=True)
+    arts = build_all(plan)
+    manifest = {"config": plan.raw["config"], "arch": plan.arch, "artifacts": {}}
+    for art in arts:
+        text = lower_artifact(art)
+        path = os.path.join(args.out, f"{art.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][art.name] = {
+            "inputs": [s.to_json() for s in art.inputs],
+            "outputs": [o.to_json() for o in art.outputs],
+        }
+        print(f"  lowered {art.name}: {len(art.inputs)} inputs, "
+              f"{len(art.outputs)} outputs, {len(text)//1024} KiB HLO")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(arts)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for the HGNN relation-aggregation hot spot.
+
+All kernels run with ``interpret=True`` so the lowered HLO executes on the
+CPU PJRT client (real-TPU Pallas lowers to Mosaic custom-calls the CPU
+plugin cannot run — see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .relation_agg import relation_agg
+from .gat_agg import gat_agg
+from .hgt_agg import hgt_agg
+from . import ref
+
+__all__ = ["relation_agg", "gat_agg", "hgt_agg", "ref"]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal (pytest asserts allclose kernel-vs-ref over hypothesis-generated
+shapes/dtypes)."""
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def relation_agg_ref(x, mask, w):
+    s = (x * mask[:, :, None]).sum(axis=1)
+    cnt = jnp.maximum(mask.sum(axis=1), 1.0)
+    return (s / cnt[:, None]) @ w
+
+
+def gat_agg_ref(x, mask, dst_x, w, wq, al, ar):
+    z = jnp.einsum("skf,fh->skh", x, w)
+    q = dst_x @ wq
+    e = (z * ar).sum(-1) + (q * al).sum(-1)[:, None]
+    e = jnp.where(e > 0, e, 0.2 * e)
+    e = jnp.where(mask > 0, e, NEG)
+    e = e - e.max(axis=1, keepdims=True)
+    a = jnp.exp(e) * mask
+    a = a / jnp.maximum(a.sum(axis=1, keepdims=True), 1e-9)
+    return (a[:, :, None] * z).sum(axis=1)
+
+
+def hgt_agg_ref(x, mask, dst_x, wk, wv, wq, m_out, heads=2):
+    S, K, _ = x.shape
+    H = wk.shape[1]
+    dh = H // heads
+    k = jnp.einsum("skf,fh->skh", x, wk).reshape(S, K, heads, dh)
+    v = jnp.einsum("skf,fh->skh", x, wv).reshape(S, K, heads, dh)
+    q = (dst_x @ wq).reshape(S, heads, dh)
+    e = (k * q[:, None]).sum(-1) / jnp.sqrt(jnp.float32(dh))
+    e = jnp.where(mask[:, :, None] > 0, e, NEG)
+    e = e - e.max(axis=1, keepdims=True)
+    a = jnp.exp(e) * mask[:, :, None]
+    a = a / jnp.maximum(a.sum(axis=1, keepdims=True), 1e-9)
+    out = (a[..., None] * v).sum(axis=1).reshape(S, H)
+    return out @ m_out

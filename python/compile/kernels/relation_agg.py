@@ -1,0 +1,89 @@
+"""Fused masked-mean neighbor aggregation x relation projection (R-GCN's
+``AGG_r``): ``out[s] = mean_{k: mask[s,k]=1}(x[s,k,:]) @ w``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the gather is hoisted to
+the Rust host layer (it is the *system* cost the paper studies); the
+kernel consumes a dense padded ``[S, K, F]`` block. The grid tiles target
+nodes (``bs``) and the hidden dimension (``bh``); per grid cell the
+neighbor tile is mean-reduced on the VPU and immediately fed to the MXU
+matmul, so the reduced ``[bs, F]`` activations never round-trip to HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of ``n`` that is <= target (static shapes only)."""
+    best = 1
+    for d in range(1, n + 1):
+        if n % d == 0 and d <= target:
+            best = d
+    return best
+
+
+def _kernel(x_ref, m_ref, w_ref, o_ref):
+    x = x_ref[...]  # [bs, K, F]
+    m = m_ref[...]  # [bs, K]
+    s = (x * m[:, :, None]).sum(axis=1)  # [bs, F]  (VPU reduce)
+    cnt = jnp.maximum(m.sum(axis=1), 1.0)
+    mean = s / cnt[:, None]
+    o_ref[...] = mean @ w_ref[...]  # [bs, bh]   (MXU)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_h"))
+def relation_agg(x, mask, w, *, block_s: int = 0, block_h: int = 0):
+    """``x``: [S, K, F] gathered neighbor features, ``mask``: [S, K]
+    validity (0/1 f32), ``w``: [F, H] relation weight. Returns [S, H]."""
+    S, K, F = x.shape
+    H = w.shape[1]
+    bs = block_s or pick_block(S)
+    bh = block_h or pick_block(H)
+    grid = (S // bs, H // bh)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, K, F), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((bs, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((F, bh), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bs, bh), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((S, H), x.dtype),
+        interpret=True,
+    )(x, mask, w)
+
+
+def vmem_bytes(S, K, F, H, block_s=0, block_h=0, dtype_bytes=4):
+    """Estimated VMEM footprint of one grid cell (DESIGN/EXPERIMENTS
+    §Perf): x-tile + mask + weight column block + output tile."""
+    bs = block_s or pick_block(S)
+    bh = block_h or pick_block(H)
+    return dtype_bytes * (bs * K * F + bs * K + F * bh + bs * bh)
+
+
+# Differentiable wrapper: Pallas forward, ref-function VJP backward
+# (interpret-mode pallas_call does not support reverse-mode autodiff; the
+# oracle is numerically identical, so gradients are exact).
+import jax as _jax
+from . import ref as _ref
+
+
+@_jax.custom_vjp
+def relation_agg_op(x, mask, w):
+    return relation_agg(x, mask, w)
+
+
+def _ra_fwd(x, mask, w):
+    return relation_agg(x, mask, w), (x, mask, w)
+
+
+def _ra_bwd(res, g):
+    _, vjp = _jax.vjp(_ref.relation_agg_ref, *res)
+    return vjp(g)
+
+
+relation_agg_op.defvjp(_ra_fwd, _ra_bwd)

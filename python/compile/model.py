@@ -1,0 +1,570 @@
+"""Layer-2 HGNN compute graphs (R-GCN / R-GAT / HGT), composed along the
+metatree of a Rust-emitted artifact plan (``artifacts/<cfg>/plan.json``).
+
+The model family follows paper Eq. (1): per metatree vertex, a
+relation-specific aggregation per child edge (Layer-1 Pallas kernels),
+summed across relations (``AGG_all``) with a per-type self term and ReLU.
+Two layers (paper default):
+
+  h1[t]  = relu(x_t @ Wself1_ty + sum_f AGG_f^1(x_children(f)))   (depth-1)
+  p1     = sum_e AGG_e^1(x_child(e))                              (root L1 partials)
+  p2     = sum_e AGG_e^2(h1[child(e)])                            (root L2 partials)
+  leader: h1r = relu(x_root @ Wself1 + p1); h2r = relu(h1r @ Wself2 + p2)
+          loss = CE(h2r @ Whead, labels)
+
+RAF splits the `sum_e` across partitions (each worker emits its p1/p2
+contribution); the leader owns the self/head weights. For R-GAT/HGT, the
+attention query at root level uses the (replicated) raw target features —
+a model-definition choice that keeps RAF single-phase; both engines
+compute the same definition, preserving Prop. 1 equivalence (DESIGN.md).
+
+Every exported artifact is a pure function over a *flat tuple* of f32/i32
+arrays whose order is recorded in a manifest (``manifest.json``) — the
+only contract the Rust runtime needs.
+"""
+
+import json
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gat_agg import gat_agg_op
+from .kernels.hgt_agg import hgt_agg_op
+from .kernels.relation_agg import relation_agg_op
+
+
+# --------------------------------------------------------------------------
+# Plan loading
+# --------------------------------------------------------------------------
+
+@dataclass
+class Plan:
+    raw: dict
+
+    @staticmethod
+    def load(path: str) -> "Plan":
+        with open(path) as f:
+            return Plan(json.load(f))
+
+    @property
+    def arch(self):
+        return self.raw["arch"]
+
+    @property
+    def hidden(self):
+        return self.raw["hidden"]
+
+    @property
+    def heads(self):
+        return self.raw["heads"]
+
+    @property
+    def num_classes(self):
+        return self.raw["num_classes"]
+
+    @property
+    def batch(self):
+        return self.raw["batch"]
+
+    @property
+    def vanilla_batch(self):
+        return self.raw["vanilla_batch"]
+
+    @property
+    def fanouts(self):
+        return self.raw["fanouts"]
+
+    @property
+    def edges(self):
+        return self.raw["edges"]
+
+    @property
+    def vertices(self):
+        return self.raw["vertices"]
+
+    @property
+    def target(self):
+        return self.raw["target"]
+
+    @property
+    def partitions(self):
+        return [p["edges"] for p in self.raw["partitions"]]
+
+    def vertex_sizes(self, batch: int) -> dict:
+        """Padded slot count per vertex for a given root batch."""
+        sizes = {0: batch}
+        for e in self.edges:  # BFS order: parents precede children
+            sizes[e["child"]] = sizes[e["parent"]] * e["k"]
+        return sizes
+
+
+# --------------------------------------------------------------------------
+# Manifest specs
+# --------------------------------------------------------------------------
+
+@dataclass
+class InputSpec:
+    kind: str                  # block|mask|weight|target_feat|labels|grad|partial_sum
+    shape: tuple
+    name: str = ""             # weight name
+    edge: int = -1             # block/mask edge id
+    layer: int = 0             # grad/partial layer
+    dtype: str = "f32"
+    init: str = ""             # glorot|zeros (weights only)
+
+    def to_json(self):
+        d = {"kind": self.kind, "shape": list(self.shape), "dtype": self.dtype}
+        if self.name:
+            d["name"] = self.name
+        if self.edge >= 0:
+            d["edge"] = self.edge
+        if self.layer:
+            d["layer"] = self.layer
+        if self.init:
+            d["init"] = self.init
+        return d
+
+
+@dataclass
+class OutputSpec:
+    kind: str                  # partial|loss|acc|gpartial|wgrad|block_grad|target_feat_grad|logits
+    name: str = ""
+    edge: int = -1
+    layer: int = 0
+
+    def to_json(self):
+        d = {"kind": self.kind}
+        if self.name:
+            d["name"] = self.name
+        if self.edge >= 0:
+            d["edge"] = self.edge
+        if self.layer:
+            d["layer"] = self.layer
+        return d
+
+
+@dataclass
+class Artifact:
+    name: str
+    fn: Callable               # flat-args -> tuple of outputs
+    inputs: list = field(default_factory=list)
+    outputs: list = field(default_factory=list)
+
+    def example_args(self):
+        specs = []
+        for s in self.inputs:
+            dt = jnp.int32 if s.dtype == "i32" else jnp.float32
+            specs.append(jax.ShapeDtypeStruct(tuple(s.shape), dt))
+        return specs
+
+
+# --------------------------------------------------------------------------
+# Weight catalogues per architecture
+# --------------------------------------------------------------------------
+
+def _glorot(shape):
+    return InputSpec("weight", shape, init="glorot")
+
+
+def rel_weight_specs(arch, edge, layer, hidden, heads, f_dst):
+    """Weights of one relation aggregation at a given layer. ``f_dst`` is
+    the destination-side feature dim (attention query input)."""
+    f_in = edge["f_src"] if layer == 1 else hidden
+    r = edge["rel_name"]
+    h = hidden
+    if arch == "rgcn":
+        names = [(f"W{layer}_{r}", (f_in, h))]
+    elif arch == "rgat":
+        names = [
+            (f"W{layer}_{r}", (f_in, h)),
+            (f"Wq{layer}_{r}", (f_dst, h)),
+            (f"al{layer}_{r}", (h,)),
+            (f"ar{layer}_{r}", (h,)),
+        ]
+    elif arch == "hgt":
+        names = [
+            (f"K{layer}_{r}", (f_in, h)),
+            (f"V{layer}_{r}", (f_in, h)),
+            (f"Q{layer}_{r}", (f_dst, h)),
+            (f"M{layer}_{r}", (h, h)),
+        ]
+    else:
+        raise ValueError(arch)
+    out = []
+    for n, shape in names:
+        s = _glorot(shape)
+        s.name = n
+        out.append(s)
+    return out
+
+
+def agg_apply(arch, heads, weights, x, mask, dst_x):
+    """Dispatch one relation aggregation to the Layer-1 kernel."""
+    if arch == "rgcn":
+        (w,) = weights
+        return relation_agg_op(x, mask, w)
+    if arch == "rgat":
+        w, wq, al, ar = weights
+        return gat_agg_op(x, mask, dst_x, w, wq, al, ar)
+    if arch == "hgt":
+        wk, wv, wq, m = weights
+        return hgt_agg_op(x, mask, dst_x, wk, wv, wq, m, heads=heads)
+    raise ValueError(arch)
+
+
+# --------------------------------------------------------------------------
+# Tree forward (shared by worker / vanilla artifacts)
+# --------------------------------------------------------------------------
+
+def build_tree_inputs(plan: Plan, edge_ids, batch):
+    """Input specs for the blocks+masks of a set of tree edges, plus the
+    weights they need, plus (attention archs) the replicated target
+    features. Returns (input_specs, index maps)."""
+    arch, hidden, heads = plan.arch, plan.hidden, plan.heads
+    sizes = plan.vertex_sizes(batch)
+    edges = {e["id"]: e for e in plan.edges}
+    vtx = {v["id"]: v for v in plan.vertices}
+    needs_dst = arch in ("rgat", "hgt")
+
+    specs, block_ix, mask_ix = [], {}, {}
+    for ei in sorted(edge_ids):
+        e = edges[ei]
+        s = sizes[e["parent"]]
+        block_ix[ei] = len(specs)
+        specs.append(InputSpec("block", (s, e["k"], e["f_src"]), edge=ei))
+        mask_ix[ei] = len(specs)
+        specs.append(InputSpec("mask", (s, e["k"]), edge=ei))
+
+    # Weight list: dedup by name, in deterministic (edge, layer) order.
+    weight_ix = {}
+    wspecs = []
+
+    def add_weights(ws):
+        ix = []
+        for s in ws:
+            if s.name not in weight_ix:
+                weight_ix[s.name] = len(wspecs)
+                wspecs.append(s)
+            ix.append(weight_ix[s.name])
+        return ix
+
+    # Per-edge aggregation weights. Root edges (depth 0) are used at both
+    # layers; deeper edges only at layer 1.
+    agg_w = {}
+    for ei in sorted(edge_ids):
+        e = edges[ei]
+        if e["depth"] == 0:
+            f_dst = plan.target["feat_dim"]
+            agg_w[(ei, 1)] = add_weights(
+                rel_weight_specs(arch, e, 1, hidden, heads, f_dst)
+            )
+            agg_w[(ei, 2)] = add_weights(
+                rel_weight_specs(arch, e, 2, hidden, heads, f_dst)
+            )
+        else:
+            f_dst = vtx[e["parent"]]["feat_dim"]
+            agg_w[(ei, 1)] = add_weights(
+                rel_weight_specs(arch, e, 1, hidden, heads, f_dst)
+            )
+
+    # Self weights for depth-1 vertices present in this edge set.
+    self_w = {}
+    for ei in sorted(edge_ids):
+        e = edges[ei]
+        if e["depth"] == 0:
+            tyname = vtx[e["child"]]["type_name"]
+            if tyname not in self_w:
+                s = _glorot((vtx[e["child"]]["feat_dim"], hidden))
+                s.name = f"Wself1_{tyname}"
+                self_w[tyname] = add_weights([s])[0]
+
+    # Target features (attention query at root level).
+    tf_ix = None
+    if needs_dst:
+        tf_ix = len(specs) + len(wspecs)
+        # placeholder — appended after weights below
+
+    all_specs = specs + wspecs
+    if needs_dst:
+        all_specs.append(
+            InputSpec("target_feat", (batch, plan.target["feat_dim"]))
+        )
+
+    ix = {
+        "block": block_ix,
+        "mask": mask_ix,
+        "weight_base": len(specs),
+        "agg_w": agg_w,
+        "self_w": self_w,
+        "target_feat": tf_ix,
+        "num_weights": len(wspecs),
+    }
+    return all_specs, ix
+
+
+def tree_forward(plan: Plan, edge_ids, batch, ix, args):
+    """Compute (p1, p2) root partials for a set of tree edges given flat
+    ``args`` ordered per :func:`build_tree_inputs`."""
+    arch, hidden, heads = plan.arch, plan.hidden, plan.heads
+    edges = {e["id"]: e for e in plan.edges}
+    vtx = {v["id"]: v for v in plan.vertices}
+    wb = ix["weight_base"]
+
+    def W(widx_list):
+        return [args[wb + i] for i in widx_list]
+
+    def blk(ei):
+        return args[ix["block"][ei]], args[ix["mask"][ei]]
+
+    x_root = args[ix["target_feat"]] if ix["target_feat"] is not None else None
+
+    root_edges = [edges[ei] for ei in sorted(edge_ids) if edges[ei]["depth"] == 0]
+    by_parent = {}
+    for ei in sorted(edge_ids):
+        e = edges[ei]
+        if e["depth"] >= 1:
+            by_parent.setdefault(e["parent"], []).append(e)
+
+    # Depth-1 vertex embeddings h1[t].
+    h1 = {}
+    for e in root_edges:
+        t = e["child"]
+        x_e, m_e = blk(e["id"])
+        s_t = x_e.shape[0] * x_e.shape[1]
+        x_t = x_e.reshape(s_t, e["f_src"])
+        m_t = m_e.reshape(s_t)
+        agg = jnp.zeros((s_t, hidden), jnp.float32)
+        for f in by_parent.get(t, []):
+            x_f, m_f = blk(f["id"])
+            agg = agg + agg_apply(
+                arch, heads, W(ix["agg_w"][(f["id"], 1)]), x_f, m_f, x_t
+            )
+        wself = args[wb + ix["self_w"][vtx[t]["type_name"]]]
+        h1[t] = jax.nn.relu(x_t @ wself + agg) * m_t[:, None]
+
+    # Root partials.
+    p1 = jnp.zeros((batch, hidden), jnp.float32)
+    p2 = jnp.zeros((batch, hidden), jnp.float32)
+    for e in root_edges:
+        x_e, m_e = blk(e["id"])
+        p1 = p1 + agg_apply(
+            arch, heads, W(ix["agg_w"][(e["id"], 1)]), x_e, m_e, x_root
+        )
+        h1_t = h1[e["child"]].reshape(batch, e["k"], hidden)
+        p2 = p2 + agg_apply(
+            arch, heads, W(ix["agg_w"][(e["id"], 2)]), h1_t, m_e, x_root
+        )
+    return p1, p2
+
+
+# --------------------------------------------------------------------------
+# Leader / head computation
+# --------------------------------------------------------------------------
+
+def leader_specs(plan: Plan):
+    b, h, f = plan.batch, plan.hidden, plan.target["feat_dim"]
+    c = plan.num_classes
+    specs = [
+        InputSpec("partial_sum", (b, h), layer=1),
+        InputSpec("partial_sum", (b, h), layer=2),
+        InputSpec("target_feat", (b, f)),
+        InputSpec("labels", (b,), dtype="i32"),
+    ]
+    for nm, shape in [("Wself1_target", (f, h)), ("Wself2_target", (h, h)), ("Whead", (h, c))]:
+        s = _glorot(shape)
+        s.name = nm
+        specs.append(s)
+    return specs
+
+
+def head_forward(p1, p2, x_root, labels, wself1, wself2, whead, num_classes):
+    h1 = jax.nn.relu(x_root @ wself1 + p1)
+    h2 = jax.nn.relu(h1 @ wself2 + p2)
+    logits = h2 @ whead
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    loss = -(onehot * logp).sum(-1).mean()
+    acc = (jnp.argmax(logits, -1) == labels).sum().astype(jnp.float32)
+    return loss, acc
+
+
+# --------------------------------------------------------------------------
+# Artifact builders
+# --------------------------------------------------------------------------
+
+def build_worker_fwd(plan: Plan, part: int) -> Artifact:
+    edge_ids = plan.partitions[part]
+    specs, ix = build_tree_inputs(plan, edge_ids, plan.batch)
+
+    def fn(*args):
+        p1, p2 = tree_forward(plan, edge_ids, plan.batch, ix, args)
+        return p1, p2
+
+    return Artifact(
+        name=f"worker_fwd_p{part}",
+        fn=fn,
+        inputs=specs,
+        outputs=[OutputSpec("partial", layer=1), OutputSpec("partial", layer=2)],
+    )
+
+
+def build_worker_bwd(plan: Plan, part: int) -> Artifact:
+    """Backward: same inputs + (g1, g2); recomputes the forward
+    (rematerialization — the L2 memory/compute choice, DESIGN §Perf) and
+    returns weight grads, learnable block grads, and the target-feature
+    grad when attention uses it."""
+    edge_ids = plan.partitions[part]
+    specs, ix = build_tree_inputs(plan, edge_ids, plan.batch)
+    b, h = plan.batch, plan.hidden
+    n_in = len(specs)
+    wb, nw = ix["weight_base"], ix["num_weights"]
+    edges = {e["id"]: e for e in plan.edges}
+    learnable_edges = [
+        ei for ei in sorted(edge_ids) if edges[ei]["src_learnable"]
+    ]
+    has_tf = ix["target_feat"] is not None
+
+    specs_bwd = specs + [
+        InputSpec("grad", (b, h), layer=1),
+        InputSpec("grad", (b, h), layer=2),
+    ]
+
+    def fn(*args):
+        inputs, g1, g2 = args[:n_in], args[n_in], args[n_in + 1]
+
+        def loss_like(weights, blocks, tf):
+            a = list(inputs)
+            a[wb : wb + nw] = weights
+            for ei, blk in zip(learnable_edges, blocks):
+                a[ix["block"][ei]] = blk
+            if has_tf:
+                a[ix["target_feat"]] = tf
+            p1, p2 = tree_forward(plan, edge_ids, b, ix, a)
+            return (p1 * g1).sum() + (p2 * g2).sum()
+
+        weights = tuple(inputs[wb : wb + nw])
+        blocks = tuple(inputs[ix["block"][ei]] for ei in learnable_edges)
+        tf = inputs[ix["target_feat"]] if has_tf else jnp.zeros((1, 1))
+        gw, gb, gtf = jax.grad(loss_like, argnums=(0, 1, 2))(weights, blocks, tf)
+        outs = list(gw) + list(gb)
+        if has_tf:
+            outs.append(gtf)
+        return tuple(outs)
+
+    outputs = [OutputSpec("wgrad", name=specs[wb + i].name) for i in range(nw)]
+    outputs += [OutputSpec("block_grad", edge=ei) for ei in learnable_edges]
+    if has_tf:
+        outputs.append(OutputSpec("target_feat_grad"))
+    return Artifact(
+        name=f"worker_bwd_p{part}", fn=fn, inputs=specs_bwd, outputs=outputs
+    )
+
+
+def build_leader(plan: Plan) -> Artifact:
+    specs = leader_specs(plan)
+    c = plan.num_classes
+
+    def fn(*args):
+        p1, p2, x_root, labels, w1, w2, wh = args
+
+        def loss_fn(p1, p2, x_root, w1, w2, wh):
+            loss, acc = head_forward(p1, p2, x_root, labels, w1, w2, wh, c)
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2, 3, 4, 5), has_aux=True)(
+            p1, p2, x_root, w1, w2, wh
+        )
+        g1, g2, gx, gw1, gw2, gwh = grads
+        return loss, acc, g1, g2, gx, gw1, gw2, gwh
+
+    return Artifact(
+        name="leader",
+        fn=fn,
+        inputs=specs,
+        outputs=[
+            OutputSpec("loss"),
+            OutputSpec("acc"),
+            OutputSpec("gpartial", layer=1),
+            OutputSpec("gpartial", layer=2),
+            OutputSpec("target_feat_grad"),
+            OutputSpec("wgrad", name="Wself1_target"),
+            OutputSpec("wgrad", name="Wself2_target"),
+            OutputSpec("wgrad", name="Whead"),
+        ],
+    )
+
+
+def build_vanilla(plan: Plan) -> Artifact:
+    """Full-model fwd+bwd in one module (the vanilla engine's per-worker
+    data-parallel step over its microbatch)."""
+    all_edges = sorted(e["id"] for e in plan.edges)
+    vb = plan.vanilla_batch
+    specs, ix = build_tree_inputs(plan, all_edges, vb)
+    arch = plan.arch
+    needs_dst = arch in ("rgat", "hgt")
+    f, h, c = plan.target["feat_dim"], plan.hidden, plan.num_classes
+    edges = {e["id"]: e for e in plan.edges}
+    learnable_edges = [ei for ei in all_edges if edges[ei]["src_learnable"]]
+
+    # Vanilla also owns the head weights + target feats + labels.
+    if not needs_dst:
+        specs = specs + [InputSpec("target_feat", (vb, f))]
+        tf_pos = len(specs) - 1
+    else:
+        tf_pos = ix["target_feat"]
+    head_names = [("Wself1_target", (f, h)), ("Wself2_target", (h, h)), ("Whead", (h, c))]
+    head_pos = len(specs)
+    for nm, shape in head_names:
+        s = _glorot(shape)
+        s.name = nm
+        specs.append(s)
+    specs.append(InputSpec("labels", (vb,), dtype="i32"))
+    lab_pos = len(specs) - 1
+
+    wb, nw = ix["weight_base"], ix["num_weights"]
+    n_in = len(specs)
+
+    def fn(*args):
+        inputs = args[:n_in]
+        labels = inputs[lab_pos]
+
+        def loss_fn(weights, blocks, tf, heads_w):
+            a = list(inputs)
+            a[wb : wb + nw] = weights
+            for ei, blk in zip(learnable_edges, blocks):
+                a[ix["block"][ei]] = blk
+            a[tf_pos] = tf
+            p1, p2 = tree_forward(plan, all_edges, vb, ix, a)
+            w1, w2, wh = heads_w
+            loss, acc = head_forward(p1, p2, tf, labels, w1, w2, wh, c)
+            return loss, acc
+
+        weights = tuple(inputs[wb : wb + nw])
+        blocks = tuple(inputs[ix["block"][ei]] for ei in learnable_edges)
+        tf = inputs[tf_pos]
+        heads_w = tuple(inputs[head_pos : head_pos + 3])
+        (loss, acc), grads = jax.value_and_grad(
+            loss_fn, argnums=(0, 1, 2, 3), has_aux=True
+        )(weights, blocks, tf, heads_w)
+        gw, gb, gtf, gh = grads
+        return (loss, acc) + tuple(gw) + tuple(gb) + (gtf,) + tuple(gh)
+
+    outputs = [OutputSpec("loss"), OutputSpec("acc")]
+    outputs += [OutputSpec("wgrad", name=specs[wb + i].name) for i in range(nw)]
+    outputs += [OutputSpec("block_grad", edge=ei) for ei in learnable_edges]
+    outputs += [OutputSpec("target_feat_grad")]
+    outputs += [OutputSpec("wgrad", name=nm) for nm, _ in head_names]
+    return Artifact(name="vanilla", fn=fn, inputs=specs, outputs=outputs)
+
+
+def build_all(plan: Plan):
+    arts = []
+    for p in range(len(plan.partitions)):
+        if plan.partitions[p]:
+            arts.append(build_worker_fwd(plan, p))
+            arts.append(build_worker_bwd(plan, p))
+    arts.append(build_leader(plan))
+    arts.append(build_vanilla(plan))
+    return arts

@@ -1,0 +1,202 @@
+"""Layer-2 model tests: artifact construction from a real plan, shape
+checks, RAF≡vanilla equivalence at the jax level (Prop. 1 — the sum of
+per-partition worker partials fed through the leader must equal the
+vanilla full-tree step), and gradient consistency."""
+
+import json
+import os
+import subprocess
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import Plan, build_all, build_leader, build_vanilla, build_worker_bwd, build_worker_fwd
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def make_plan(config="mag-tiny"):
+    path = os.path.join(REPO, "artifacts", config, "plan.json")
+    if not os.path.exists(path):
+        heta = os.path.join(REPO, "target", "release", "heta")
+        if not os.path.exists(heta):
+            pytest.skip("heta binary not built")
+        subprocess.run(
+            [heta, "plan", "--config", f"configs/{config}.json", "--out", path],
+            cwd=REPO,
+            check=True,
+        )
+    return Plan.load(path)
+
+
+def rand_args(art, seed=0):
+    rng = np.random.default_rng(seed)
+    args = []
+    for s in art.inputs:
+        if s.dtype == "i32":
+            args.append(jnp.asarray(rng.integers(0, 4, size=tuple(s.shape)), jnp.int32))
+        elif s.kind == "mask":
+            args.append(jnp.asarray((rng.random(tuple(s.shape)) > 0.25).astype(np.float32)))
+        else:
+            scale = 0.3 if s.kind == "weight" else 1.0
+            args.append(jnp.asarray(rng.standard_normal(tuple(s.shape)).astype(np.float32) * scale))
+    return args
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return make_plan()
+
+
+class TestArtifactShapes:
+    def test_build_all_artifact_set(self, plan):
+        arts = build_all(plan)
+        names = [a.name for a in arts]
+        assert "leader" in names and "vanilla" in names
+        assert any(n.startswith("worker_fwd_p") for n in names)
+        assert any(n.startswith("worker_bwd_p") for n in names)
+
+    def test_worker_fwd_output_shapes(self, plan):
+        art = build_worker_fwd(plan, 0)
+        p1, p2 = art.fn(*rand_args(art))
+        assert p1.shape == (plan.batch, plan.hidden)
+        assert p2.shape == (plan.batch, plan.hidden)
+        assert np.isfinite(np.asarray(p1)).all()
+
+    def test_worker_bwd_matches_manifest(self, plan):
+        art = build_worker_bwd(plan, 0)
+        outs = art.fn(*rand_args(art))
+        assert len(outs) == len(art.outputs)
+        for o, spec in zip(outs, art.outputs):
+            assert np.isfinite(np.asarray(o)).all(), spec.kind
+
+    def test_leader_shapes(self, plan):
+        art = build_leader(plan)
+        outs = art.fn(*rand_args(art))
+        loss, acc, g1, g2 = outs[0], outs[1], outs[2], outs[3]
+        assert loss.shape == ()
+        assert acc.shape == ()
+        assert g1.shape == (plan.batch, plan.hidden)
+        assert g2.shape == (plan.batch, plan.hidden)
+
+    def test_vanilla_runs(self, plan):
+        art = build_vanilla(plan)
+        outs = art.fn(*rand_args(art))
+        assert len(outs) == len(art.outputs)
+        assert np.isfinite(float(outs[0]))
+
+
+class TestEquivalence:
+    def test_raf_equals_vanilla(self, plan):
+        """Prop. 1: leader(sum of worker partials) == vanilla full step,
+        given identical blocks/weights. We drive the vanilla artifact at
+        the RAF batch by regenerating the plan's vanilla_batch... instead
+        we compare through the shared tree_forward + head path: feed the
+        same named inputs to workers+leader and to a single-partition
+        'all edges' forward."""
+        from compile.model import build_tree_inputs, head_forward, tree_forward
+
+        rng = np.random.default_rng(42)
+        b = plan.batch
+        all_edges = sorted(e["id"] for e in plan.edges)
+        specs_all, ix_all = build_tree_inputs(plan, all_edges, b)
+
+        # One shared pool of named values.
+        pool = {}
+
+        def value_for(spec, key):
+            if key not in pool:
+                if spec.dtype == "i32":
+                    pool[key] = jnp.asarray(rng.integers(0, plan.num_classes, size=tuple(spec.shape)), jnp.int32)
+                elif spec.kind == "mask":
+                    pool[key] = jnp.asarray((rng.random(tuple(spec.shape)) > 0.25).astype(np.float32))
+                else:
+                    pool[key] = jnp.asarray(rng.standard_normal(tuple(spec.shape)).astype(np.float32) * 0.3)
+            return pool[key]
+
+        def key_of(spec):
+            if spec.kind in ("block", "mask"):
+                return (spec.kind, spec.edge)
+            if spec.kind == "weight":
+                return ("weight", spec.name)
+            return (spec.kind, tuple(spec.shape))
+
+        args_all = [value_for(s, key_of(s)) for s in specs_all]
+        p1_full, p2_full = tree_forward(plan, all_edges, b, ix_all, args_all)
+
+        # Per-partition partials with the same pool.
+        p1_sum = jnp.zeros_like(p1_full)
+        p2_sum = jnp.zeros_like(p2_full)
+        for part, edge_ids in enumerate(plan.partitions):
+            if not edge_ids:
+                continue
+            specs_p, ix_p = build_tree_inputs(plan, edge_ids, b)
+            args_p = [value_for(s, key_of(s)) for s in specs_p]
+            p1, p2 = tree_forward(plan, edge_ids, b, ix_p, args_p)
+            p1_sum = p1_sum + p1
+            p2_sum = p2_sum + p2
+
+        np.testing.assert_allclose(
+            np.asarray(p1_sum), np.asarray(p1_full), rtol=2e-5, atol=2e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(p2_sum), np.asarray(p2_full), rtol=2e-5, atol=2e-5
+        )
+
+        # And the head produces identical loss either way.
+        f = plan.target["feat_dim"]
+        x_root = jnp.asarray(rng.standard_normal((b, f)).astype(np.float32))
+        labels = jnp.asarray(rng.integers(0, plan.num_classes, size=(b,)), jnp.int32)
+        w1 = jnp.asarray(rng.standard_normal((f, plan.hidden)).astype(np.float32) * 0.3)
+        w2 = jnp.asarray(rng.standard_normal((plan.hidden, plan.hidden)).astype(np.float32) * 0.3)
+        wh = jnp.asarray(rng.standard_normal((plan.hidden, plan.num_classes)).astype(np.float32) * 0.3)
+        loss_a, _ = head_forward(p1_sum, p2_sum, x_root, labels, w1, w2, wh, plan.num_classes)
+        loss_b, _ = head_forward(p1_full, p2_full, x_root, labels, w1, w2, wh, plan.num_classes)
+        np.testing.assert_allclose(float(loss_a), float(loss_b), rtol=1e-5)
+
+
+class TestGradients:
+    def test_leader_gradients_match_autodiff(self, plan):
+        from compile.model import head_forward
+
+        rng = np.random.default_rng(3)
+        b, h, c = plan.batch, plan.hidden, plan.num_classes
+        f = plan.target["feat_dim"]
+        p1 = jnp.asarray(rng.standard_normal((b, h)).astype(np.float32))
+        p2 = jnp.asarray(rng.standard_normal((b, h)).astype(np.float32))
+        x = jnp.asarray(rng.standard_normal((b, f)).astype(np.float32))
+        lab = jnp.asarray(rng.integers(0, c, size=(b,)), jnp.int32)
+        w1 = jnp.asarray(rng.standard_normal((f, h)).astype(np.float32) * 0.3)
+        w2 = jnp.asarray(rng.standard_normal((h, h)).astype(np.float32) * 0.3)
+        wh = jnp.asarray(rng.standard_normal((h, c)).astype(np.float32) * 0.3)
+
+        art = build_leader(plan)
+        loss, acc, g1, g2, gx, gw1, gw2, gwh = art.fn(p1, p2, x, lab, w1, w2, wh)
+        g1_ref = jax.grad(
+            lambda p1: head_forward(p1, p2, x, lab, w1, w2, wh, c)[0]
+        )(p1)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g1_ref), rtol=1e-5, atol=1e-6)
+        assert 0 <= float(acc) <= b
+
+
+class TestManifest:
+    def test_manifest_serializes(self, plan):
+        arts = build_all(plan)
+        m = {
+            a.name: {
+                "inputs": [s.to_json() for s in a.inputs],
+                "outputs": [o.to_json() for o in a.outputs],
+            }
+            for a in arts
+        }
+        text = json.dumps(m)
+        back = json.loads(text)
+        assert set(back.keys()) == {a.name for a in arts}
+        # Weight specs carry shapes + init.
+        for a in arts:
+            for s in a.inputs:
+                if s.kind == "weight":
+                    assert s.init == "glorot"
+                    assert all(d > 0 for d in s.shape)

@@ -1,0 +1,374 @@
+//! GPU feature cache (paper §6): miss-penalty-aware cache-size
+//! allocation, hotness-ranked fill, hit/miss ledgers, and the
+//! non-replicative hash-split design for mutable learnable features +
+//! optimizer state.
+//!
+//! The GPU itself is simulated (DESIGN.md): a cache *hit* costs nothing
+//! extra (data already on-device), a *miss* charges the transfer lanes of
+//! [`crate::comm::CostModel`] — PCIe H2D for read-only features; DRAM
+//! read + PCIe H2D + PCIe D2H + DRAM write for learnable features and
+//! their optimizer state (the read-modify-write path of Fig. 3 step 5).
+//! The *miss-penalty ratio* `o_a` (µs per byte, Fig. 7) is profiled from
+//! this model exactly like the paper profiles its hardware before
+//! training.
+
+use crate::comm::{CostModel, Lane};
+use crate::hetgraph::NodeId;
+
+/// Cache-size allocation policy (Fig. 11's ablation arms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// No cache at all.
+    None,
+    /// Allocate by node hotness only (PaGraph/GNNLab-style).
+    HotnessOnly,
+    /// Heta: allocate ∝ hotness × miss-penalty ratio (§6).
+    HotnessMissPenalty,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "none" | "no-cache" => Some(Policy::None),
+            "hotness" | "hotness-only" => Some(Policy::HotnessOnly),
+            "heta" | "hotness+miss-penalty" | "miss-penalty" => Some(Policy::HotnessMissPenalty),
+            _ => None,
+        }
+    }
+}
+
+/// Per-type static description the cache needs.
+#[derive(Debug, Clone)]
+pub struct TypeProfile {
+    pub name: String,
+    pub count: usize,
+    pub feat_dim: usize,
+    pub learnable: bool,
+}
+
+/// Profile the miss-penalty ratio `o_a` (seconds per byte of feature
+/// data) of one node type: the time to service a single-row cache miss
+/// divided by the row's feature bytes. Learnable rows pay the full
+/// read-modify-write path — random DRAM reads of the row and its Adam
+/// moments (three separate transactions), H2D, D2H, and the scattered
+/// write-back — so their ratio exceeds a read-only row of the same
+/// dimension (Fig. 7b). Small rows have a higher ratio because the
+/// per-transaction latency amortizes over fewer bytes (Fig. 7a). The 3×
+/// capacity footprint of learnable rows (weight + m + v) is accounted in
+/// [`TypeCache::row_bytes`], not here.
+pub fn miss_penalty_ratio(cost: &CostModel, dim: usize, learnable: bool) -> f64 {
+    let row_bytes = (dim * 4) as u64;
+    if learnable {
+        let state_bytes = row_bytes * 3; // weight + m + v move together
+        // 3 random DRAM reads + H2D + D2H + 3 random DRAM writes.
+        let t = 3.0 * cost.xfer_time(Lane::Dram, state_bytes / 3)
+            + cost.xfer_time(Lane::Pcie, state_bytes)
+            + cost.xfer_time(Lane::Pcie, state_bytes)
+            + 3.0 * cost.xfer_time(Lane::Dram, state_bytes / 3);
+        t / row_bytes as f64
+    } else {
+        let t = cost.xfer_time(Lane::Dram, row_bytes) + cost.xfer_time(Lane::Pcie, row_bytes);
+        t / row_bytes as f64
+    }
+}
+
+/// Per-type cache state: the hottest `capacity_rows` node ids (by
+/// pre-sampled visit count) are resident.
+#[derive(Debug, Clone)]
+pub struct TypeCache {
+    pub capacity_rows: usize,
+    pub row_bytes: u64,
+    pub learnable: bool,
+    pub penalty_ratio: f64,
+    /// Bitmap: `resident[id]` = cached.
+    resident: Vec<bool>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl TypeCache {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The per-machine feature cache across all node types.
+pub struct FeatureCache {
+    pub policy: Policy,
+    pub types: Vec<TypeCache>,
+    /// Number of GPUs sharing the non-replicative split (hash by id).
+    pub num_gpus: usize,
+    pub total_bytes: u64,
+}
+
+impl FeatureCache {
+    /// Build a cache. `hotness[ty][node]` comes from pre-sampling
+    /// (paper §6); `total_bytes` is the per-GPU budget × `num_gpus`
+    /// (non-replicative split pools capacity). Allocation:
+    /// `share_a = count_a · o_a / Σ count_a' · o_a'` (hotness ×
+    /// miss-penalty), or hotness only, per policy.
+    pub fn build(
+        policy: Policy,
+        profiles: &[TypeProfile],
+        hotness: &[Vec<u32>],
+        cost: &CostModel,
+        total_bytes: u64,
+        num_gpus: usize,
+    ) -> FeatureCache {
+        let ratios: Vec<f64> = profiles
+            .iter()
+            .map(|p| miss_penalty_ratio(cost, p.feat_dim, p.learnable))
+            .collect();
+        let visit_totals: Vec<f64> = hotness
+            .iter()
+            .map(|h| h.iter().map(|&c| c as f64).sum())
+            .collect();
+        let scores: Vec<f64> = match policy {
+            Policy::None => vec![0.0; profiles.len()],
+            Policy::HotnessOnly => visit_totals.clone(),
+            Policy::HotnessMissPenalty => visit_totals
+                .iter()
+                .zip(&ratios)
+                .map(|(&v, &r)| v * r * 1e6)
+                .collect(),
+        };
+        let score_sum: f64 = scores.iter().sum();
+
+        let types: Vec<TypeCache> = profiles
+            .iter()
+            .enumerate()
+            .map(|(ty, p)| {
+                let row_bytes = (p.feat_dim * 4) as u64 * if p.learnable { 3 } else { 1 };
+                let budget = if score_sum > 0.0 {
+                    (total_bytes as f64 * scores[ty] / score_sum) as u64
+                } else {
+                    0
+                };
+                let capacity_rows = ((budget / row_bytes.max(1)) as usize).min(p.count);
+                // Fill with the hottest nodes: select top-capacity ids by
+                // visit count (stable by id for determinism).
+                let mut resident = vec![false; p.count];
+                if capacity_rows > 0 {
+                    let mut order: Vec<u32> = (0..p.count as u32).collect();
+                    order.sort_by_key(|&id| {
+                        (std::cmp::Reverse(hotness[ty][id as usize]), id)
+                    });
+                    for &id in order.iter().take(capacity_rows) {
+                        resident[id as usize] = true;
+                    }
+                }
+                TypeCache {
+                    capacity_rows,
+                    row_bytes,
+                    learnable: p.learnable,
+                    penalty_ratio: ratios[ty],
+                    resident,
+                    hits: 0,
+                    misses: 0,
+                }
+            })
+            .collect();
+        FeatureCache {
+            policy,
+            types,
+            num_gpus,
+            total_bytes,
+        }
+    }
+
+    /// Account one access to `(ty, id)` from GPU `gpu`. Returns the
+    /// modeled extra time this access costs (0 for a local hit; p2p for a
+    /// hit on a peer GPU under the non-replicative split; the full miss
+    /// penalty otherwise). `write` marks a learnable update access
+    /// (read-modify-write path).
+    pub fn access(
+        &mut self,
+        cost: &CostModel,
+        ty: usize,
+        id: NodeId,
+        gpu: usize,
+        write: bool,
+    ) -> f64 {
+        let tc = &mut self.types[ty];
+        if self.policy != Policy::None && tc.resident[id as usize] {
+            tc.hits += 1;
+            // Non-replicative split: learnable rows live on GPU
+            // `id % num_gpus` (paper §6 Cache Consistency); peer access
+            // goes over p2p. Read-only rows are replicated per GPU.
+            if tc.learnable && self.num_gpus > 1 && (id as usize) % self.num_gpus != gpu {
+                let factor = if write { 2 } else { 1 };
+                return cost.xfer_time(Lane::P2p, tc.row_bytes * factor);
+            }
+            return 0.0;
+        }
+        tc.misses += 1;
+        // Miss: per-row random DRAM access + H2D at PCIe *bandwidth* —
+        // the runtime batches miss rows into one staging transfer per
+        // block, so the per-transaction PCIe latency amortizes away
+        // (matching the no-cache fetch path's batched accounting).
+        let b = tc.row_bytes;
+        let pcie_bw = cost.bandwidth[Lane::Pcie.index()];
+        if tc.learnable {
+            let mut t = cost.xfer_time(Lane::Dram, b) + b as f64 / pcie_bw;
+            if write {
+                t += b as f64 / pcie_bw + cost.xfer_time(Lane::Dram, b);
+            }
+            t
+        } else {
+            cost.xfer_time(Lane::Dram, b) + b as f64 / pcie_bw
+        }
+    }
+
+    /// Bytes actually allocated (≤ total budget).
+    pub fn used_bytes(&self) -> u64 {
+        self.types
+            .iter()
+            .map(|t| t.capacity_rows as u64 * t.row_bytes)
+            .sum()
+    }
+
+    pub fn hit_rates(&self) -> Vec<f64> {
+        self.types.iter().map(|t| t.hit_rate()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    fn profiles() -> Vec<TypeProfile> {
+        vec![
+            TypeProfile { name: "paper".into(), count: 1000, feat_dim: 128, learnable: false },
+            TypeProfile { name: "author".into(), count: 800, feat_dim: 64, learnable: true },
+            TypeProfile { name: "tag".into(), count: 500, feat_dim: 8, learnable: false },
+        ]
+    }
+
+    fn skewed_hotness(profiles: &[TypeProfile], seed: u64) -> Vec<Vec<u32>> {
+        let mut rng = Rng::new(seed);
+        profiles
+            .iter()
+            .map(|p| {
+                (0..p.count)
+                    .map(|i| (1000 / (i + 1)) as u32 + rng.below(3) as u32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn small_dims_have_larger_penalty_ratio() {
+        // Fig. 7a: smaller feature dimensions ⇒ larger per-byte penalty.
+        let c = CostModel::default();
+        let small = miss_penalty_ratio(&c, 7, false);
+        let large = miss_penalty_ratio(&c, 789, false);
+        assert!(small > 3.0 * large, "small {small} vs large {large}");
+    }
+
+    #[test]
+    fn learnable_penalty_exceeds_readonly() {
+        // Fig. 7b: learnable features pay the write-back path.
+        let c = CostModel::default();
+        let ro = miss_penalty_ratio(&c, 128, false);
+        let lr = miss_penalty_ratio(&c, 128, true);
+        assert!(lr > ro, "learnable {lr} vs read-only {ro}");
+    }
+
+    #[test]
+    fn policy_none_allocates_nothing_and_always_misses() {
+        let p = profiles();
+        let h = skewed_hotness(&p, 1);
+        let c = CostModel::default();
+        let mut cache = FeatureCache::build(Policy::None, &p, &h, &c, 1 << 20, 1);
+        assert_eq!(cache.used_bytes(), 0);
+        let t = cache.access(&c, 0, 0, 0, false);
+        assert!(t > 0.0);
+        assert_eq!(cache.types[0].misses, 1);
+    }
+
+    #[test]
+    fn hottest_nodes_are_resident() {
+        let p = profiles();
+        let h = skewed_hotness(&p, 2);
+        let c = CostModel::default();
+        let mut cache = FeatureCache::build(Policy::HotnessOnly, &p, &h, &c, 64 << 10, 1);
+        // Node 0 is hottest in every type; it must hit if the type got
+        // any budget.
+        for ty in 0..p.len() {
+            if cache.types[ty].capacity_rows > 0 {
+                let t = cache.access(&c, ty, 0, 0, false);
+                assert_eq!(t, 0.0, "hot node missed in type {ty}");
+            }
+        }
+    }
+
+    #[test]
+    fn miss_penalty_policy_shifts_budget_to_penalized_types() {
+        // Two types, identical dim/count/hotness, but one is learnable:
+        // hotness-only splits the budget evenly, while the miss-penalty-
+        // aware policy must give the learnable type (higher o_a) more
+        // cache bytes — the core §6 mechanism.
+        let p = vec![
+            TypeProfile { name: "ro".into(), count: 1000, feat_dim: 128, learnable: false },
+            TypeProfile { name: "lr".into(), count: 1000, feat_dim: 128, learnable: true },
+        ];
+        let h: Vec<Vec<u32>> = vec![vec![5; 1000], vec![5; 1000]];
+        let c = CostModel::default();
+        let ho = FeatureCache::build(Policy::HotnessOnly, &p, &h, &c, 256 << 10, 1);
+        let mp = FeatureCache::build(Policy::HotnessMissPenalty, &p, &h, &c, 256 << 10, 1);
+        let ho_bytes = ho.types[1].capacity_rows as u64 * ho.types[1].row_bytes;
+        let mp_bytes = mp.types[1].capacity_rows as u64 * mp.types[1].row_bytes;
+        assert!(
+            mp_bytes > ho_bytes,
+            "heta gave learnable type {mp_bytes} B vs hotness-only {ho_bytes} B"
+        );
+    }
+
+    #[test]
+    fn p2p_charged_for_peer_gpu_learnable_hits() {
+        let p = profiles();
+        let h = skewed_hotness(&p, 4);
+        let c = CostModel::default();
+        let mut cache =
+            FeatureCache::build(Policy::HotnessMissPenalty, &p, &h, &c, 1 << 22, 4);
+        // Node id 1 lives on GPU 1; access from GPU 0 → p2p time > 0.
+        assert!(cache.types[1].resident[1]);
+        let t = cache.access(&c, 1, 1, 0, false);
+        assert!(t > 0.0 && t < miss_penalty_ratio(&c, 64, true) * cache.types[1].row_bytes as f64 * 2.0);
+        // Same id from its home GPU: free.
+        let t_home = cache.access(&c, 1, 1, 1, false);
+        assert_eq!(t_home, 0.0);
+    }
+
+    #[test]
+    fn prop_budget_never_exceeded_and_capacity_bounded() {
+        proptest::run("cache_budget_invariant", |rng, _| {
+            let p = profiles();
+            let h = skewed_hotness(&p, rng.next_u64());
+            let c = CostModel::default();
+            let budget = 1u64 << (10 + rng.below(14));
+            let policy = [Policy::HotnessOnly, Policy::HotnessMissPenalty][rng.below(2)];
+            let cache = FeatureCache::build(policy, &p, &h, &c, budget, 1 + rng.below(8));
+            crate::prop_assert!(
+                cache.used_bytes() <= budget,
+                "used {} > budget {}",
+                cache.used_bytes(),
+                budget
+            );
+            for (ty, tc) in cache.types.iter().enumerate() {
+                crate::prop_assert!(
+                    tc.capacity_rows <= p[ty].count,
+                    "capacity exceeds population"
+                );
+            }
+            Ok(())
+        });
+    }
+}

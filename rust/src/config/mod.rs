@@ -1,0 +1,402 @@
+//! Configuration system: experiment configs (`configs/*.json`) shared by
+//! the Rust coordinator and the Python AOT compile path, plus the
+//! **artifact plan** — the Rust-emitted JSON contract
+//! (`artifacts/<config>/plan.json`) that tells `python/compile/aot.py`
+//! exactly which padded block shapes, partitions and model dimensions to
+//! lower. Rust owns all schema/partitioning logic; Python owns all model
+//! math; the plan is the only interface between them.
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::CostModel;
+use crate::datagen::{GenParams, Preset};
+use crate::hetgraph::{HetGraph, MetaTree};
+use crate::partition::MetaPartition;
+use crate::util::json::{parse, Json};
+
+/// Model architecture (paper §8.1: R-GCN, R-GAT, HGT).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    RGcn,
+    RGat,
+    Hgt,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s {
+            "rgcn" | "r-gcn" => Some(Arch::RGcn),
+            "rgat" | "r-gat" => Some(Arch::RGat),
+            "hgt" => Some(Arch::Hgt),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::RGcn => "rgcn",
+            Arch::RGat => "rgat",
+            Arch::Hgt => "hgt",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetConfig {
+    pub preset: Preset,
+    pub scale: f64,
+    pub gen: GenParams,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub arch: Arch,
+    pub hidden: usize,
+    pub layers: usize,
+    pub fanouts: Vec<usize>,
+    pub heads: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub batch_size: usize,
+    pub lr: f64,
+    pub num_partitions: usize,
+    pub gpus_per_machine: usize,
+    pub cache_bytes_per_gpu: u64,
+    pub cache_policy: crate::cache::Policy,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub name: String,
+    pub dataset: DatasetConfig,
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+    pub cost: CostModel,
+}
+
+impl Config {
+    pub fn from_json(j: &Json) -> Result<Config> {
+        let name = j
+            .req("name")?
+            .as_str()
+            .context("name must be a string")?
+            .to_string();
+        let d = j.req("dataset")?;
+        let preset_name = d.req("preset")?.as_str().context("preset")?;
+        let preset =
+            Preset::parse(preset_name).with_context(|| format!("unknown preset {preset_name}"))?;
+        let dataset = DatasetConfig {
+            preset,
+            scale: d.req("scale")?.as_f64().context("scale")?,
+            gen: GenParams {
+                seed: d.get("seed").as_u64().unwrap_or(42),
+                avg_degree: d.get("avg_degree").as_f64().unwrap_or(8.0),
+                zipf_alpha: d.get("zipf_alpha").as_f64().unwrap_or(1.05),
+                train_frac: d.get("train_frac").as_f64().unwrap_or(0.6),
+            },
+        };
+        let m = j.req("model")?;
+        let arch_name = m.req("arch")?.as_str().context("arch")?;
+        let fanouts: Vec<usize> = m
+            .req("fanouts")?
+            .as_arr()
+            .context("fanouts")?
+            .iter()
+            .map(|f| f.as_usize().unwrap_or(0))
+            .collect();
+        let layers = m.get("layers").as_usize().unwrap_or(fanouts.len());
+        if layers != fanouts.len() {
+            bail!("layers ({layers}) must equal len(fanouts) ({})", fanouts.len());
+        }
+        let model = ModelConfig {
+            arch: Arch::parse(arch_name).with_context(|| format!("unknown arch {arch_name}"))?,
+            hidden: m.req("hidden")?.as_usize().context("hidden")?,
+            layers,
+            fanouts,
+            heads: m.get("heads").as_usize().unwrap_or(2),
+        };
+        let t = j.req("train")?;
+        let policy_name = t.get("cache_policy").as_str().unwrap_or("heta").to_string();
+        let train = TrainConfig {
+            batch_size: t.req("batch_size")?.as_usize().context("batch_size")?,
+            lr: t.get("lr").as_f64().unwrap_or(0.01),
+            num_partitions: t.get("num_partitions").as_usize().unwrap_or(2),
+            gpus_per_machine: t.get("gpus_per_machine").as_usize().unwrap_or(1),
+            cache_bytes_per_gpu: t.get("cache_bytes_per_gpu").as_u64().unwrap_or(4 << 20),
+            cache_policy: crate::cache::Policy::parse(&policy_name)
+                .with_context(|| format!("unknown cache policy {policy_name}"))?,
+            seed: t.get("seed").as_u64().unwrap_or(7),
+        };
+        let mut cost = CostModel::default();
+        if let Some(c) = j.get("cost").as_obj() {
+            if let Some(v) = c.get("net_gbps").and_then(|v| v.as_f64()) {
+                cost.bandwidth[0] = v * 1e9 / 8.0;
+            }
+            if let Some(v) = c.get("pcie_gbs").and_then(|v| v.as_f64()) {
+                cost.bandwidth[1] = v * 1e9;
+            }
+            if let Some(v) = c.get("dram_gbs").and_then(|v| v.as_f64()) {
+                cost.bandwidth[2] = v * 1e9;
+            }
+            if let Some(v) = c.get("p2p_gbs").and_then(|v| v.as_f64()) {
+                cost.bandwidth[3] = v * 1e9;
+            }
+            if let Some(v) = c.get("compute_scale").and_then(|v| v.as_f64()) {
+                cost.compute_scale = v;
+            }
+        }
+        Ok(Config {
+            name,
+            dataset,
+            model,
+            train,
+            cost,
+        })
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let j = parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Config::from_json(&j)
+    }
+
+    /// Generate the dataset this config describes.
+    pub fn build_graph(&self) -> HetGraph {
+        crate::datagen::generate(self.dataset.preset, self.dataset.scale, &self.dataset.gen)
+    }
+
+    /// Per-machine batch for the vanilla data-parallel engine.
+    pub fn vanilla_batch(&self) -> usize {
+        (self.train.batch_size / self.train.num_partitions).max(1)
+    }
+}
+
+/// Build the AOT artifact plan for a config: metatree topology, padded
+/// block shapes for the RAF batch and the vanilla microbatch, and the
+/// relation→partition assignment. Consumed by `python/compile/aot.py`.
+pub fn build_plan(
+    cfg: &Config,
+    g: &HetGraph,
+    tree: &MetaTree,
+    mp: &MetaPartition,
+) -> Json {
+    let sizes = crate::sampling::vertex_sizes(tree, &cfg.model.fanouts, cfg.train.batch_size);
+    let schema = &g.schema;
+
+    let vertices: Vec<Json> = tree
+        .vertices
+        .iter()
+        .enumerate()
+        .map(|(v, vert)| {
+            let t = &schema.node_types[vert.ty];
+            Json::from_pairs(vec![
+                ("id", Json::num(v as f64)),
+                ("type", Json::num(vert.ty as f64)),
+                ("type_name", Json::str(t.name.clone())),
+                ("depth", Json::num(vert.depth as f64)),
+                ("size", Json::num(sizes[v] as f64)),
+                ("feat_dim", Json::num(t.feat_dim as f64)),
+                ("learnable", Json::Bool(t.learnable)),
+            ])
+        })
+        .collect();
+
+    let edges: Vec<Json> = tree
+        .edges
+        .iter()
+        .enumerate()
+        .map(|(ei, e)| {
+            let rel = &schema.relations[e.rel];
+            let d = tree.vertices[e.parent].depth;
+            Json::from_pairs(vec![
+                ("id", Json::num(ei as f64)),
+                ("parent", Json::num(e.parent as f64)),
+                ("child", Json::num(e.child as f64)),
+                ("depth", Json::num(d as f64)),
+                ("rel", Json::num(e.rel as f64)),
+                ("rel_name", Json::str(rel.name.clone())),
+                ("k", Json::num(cfg.model.fanouts[d] as f64)),
+                ("f_src", Json::num(schema.node_types[rel.src].feat_dim as f64)),
+                ("src_type", Json::num(rel.src as f64)),
+                (
+                    "src_type_name",
+                    Json::str(schema.node_types[rel.src].name.clone()),
+                ),
+                ("src_learnable", Json::Bool(schema.node_types[rel.src].learnable)),
+            ])
+        })
+        .collect();
+
+    // RAF partitions: tree-edge ids per partition (a tree edge belongs to
+    // the partition owning its relation — dedup in Step 4 means each
+    // partition materializes each of its relations once, but the *tree*
+    // may use a relation at several positions; all those positions belong
+    // to that partition).
+    let partitions: Vec<Json> = (0..mp.num_parts)
+        .map(|p| {
+            let edge_ids: Vec<Json> = tree
+                .edges
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| {
+                    // Edge is in partition p if its sub-metatree was
+                    // assigned there.
+                    edge_partition(tree, mp, e) == p
+                })
+                .map(|(ei, _)| Json::num(ei as f64))
+                .collect();
+            Json::from_pairs(vec![("edges", Json::Arr(edge_ids))])
+        })
+        .collect();
+
+    let tt = &schema.node_types[schema.target];
+    Json::from_pairs(vec![
+        ("config", Json::str(cfg.name.clone())),
+        ("arch", Json::str(cfg.model.arch.name())),
+        ("hidden", Json::num(cfg.model.hidden as f64)),
+        ("heads", Json::num(cfg.model.heads as f64)),
+        ("num_classes", Json::num(schema.num_classes as f64)),
+        ("batch", Json::num(cfg.train.batch_size as f64)),
+        ("vanilla_batch", Json::num(cfg.vanilla_batch() as f64)),
+        (
+            "fanouts",
+            Json::Arr(cfg.model.fanouts.iter().map(|&f| Json::num(f as f64)).collect()),
+        ),
+        (
+            "target",
+            Json::from_pairs(vec![
+                ("type", Json::num(schema.target as f64)),
+                ("type_name", Json::str(tt.name.clone())),
+                ("feat_dim", Json::num(tt.feat_dim as f64)),
+                ("learnable", Json::Bool(tt.learnable)),
+            ]),
+        ),
+        ("vertices", Json::Arr(vertices)),
+        ("edges", Json::Arr(edges)),
+        ("partitions", Json::Arr(partitions)),
+    ])
+}
+
+/// Which partition a metatree edge belongs to: the partition of the
+/// sub-metatree containing it.
+pub fn edge_partition(
+    tree: &MetaTree,
+    mp: &MetaPartition,
+    edge: &crate::hetgraph::MetaTreeEdge,
+) -> usize {
+    // Walk up to the root-child ancestor; its sub-metatree index = order
+    // among root children.
+    let mut v = edge.child;
+    loop {
+        let parent = tree.vertices[v].parent.expect("edge child has a parent");
+        if parent == 0 {
+            break;
+        }
+        v = parent;
+    }
+    let sub_idx = tree
+        .edges
+        .iter()
+        .filter(|e| e.parent == 0)
+        .position(|e| e.child == v)
+        .expect("root child subtree");
+    mp.assignment[sub_idx]
+}
+
+/// Index of a metatree edge's partition, as a convenience for the RAF
+/// engine's edge filters.
+pub fn partition_edge_filter<'a>(
+    tree: &'a MetaTree,
+    mp: &'a MetaPartition,
+    part: usize,
+) -> impl Fn(usize) -> bool + 'a {
+    move |ei: usize| edge_partition(tree, mp, &tree.edges[ei]) == part
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::meta::meta_partition;
+
+    pub const TINY: &str = r#"{
+        "name": "mag-tiny",
+        "dataset": {"preset": "mag", "scale": 1e-4, "seed": 42},
+        "model": {"arch": "rgcn", "hidden": 32, "fanouts": [4, 3]},
+        "train": {"batch_size": 32, "num_partitions": 2}
+    }"#;
+
+    #[test]
+    fn parses_minimal_config() {
+        let cfg = Config::from_json(&parse(TINY).unwrap()).unwrap();
+        assert_eq!(cfg.name, "mag-tiny");
+        assert_eq!(cfg.model.hidden, 32);
+        assert_eq!(cfg.model.layers, 2);
+        assert_eq!(cfg.train.num_partitions, 2);
+        assert_eq!(cfg.vanilla_batch(), 16);
+        assert_eq!(cfg.train.cache_policy, crate::cache::Policy::HotnessMissPenalty);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(Config::from_json(&parse(r#"{"name":"x"}"#).unwrap()).is_err());
+        let bad_layers = r#"{
+            "name": "x",
+            "dataset": {"preset": "mag", "scale": 1e-4},
+            "model": {"arch": "rgcn", "hidden": 8, "fanouts": [2], "layers": 3},
+            "train": {"batch_size": 4}
+        }"#;
+        assert!(Config::from_json(&parse(bad_layers).unwrap()).is_err());
+    }
+
+    #[test]
+    fn plan_has_consistent_topology() {
+        let cfg = Config::from_json(&parse(TINY).unwrap()).unwrap();
+        let g = cfg.build_graph();
+        let (mp, tree) = meta_partition(&g, cfg.train.num_partitions, cfg.model.layers, None);
+        let plan = build_plan(&cfg, &g, &tree, &mp);
+        let edges = plan.get("edges").as_arr().unwrap();
+        assert_eq!(edges.len(), tree.edges.len());
+        // Every edge appears in exactly one partition.
+        let mut seen = vec![0usize; edges.len()];
+        for part in plan.get("partitions").as_arr().unwrap() {
+            for e in part.get("edges").as_arr().unwrap() {
+                seen[e.as_usize().unwrap()] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "partition cover: {seen:?}");
+        // Sizes multiply along the tree.
+        let verts = plan.get("vertices").as_arr().unwrap();
+        assert_eq!(verts[0].get("size").as_usize().unwrap(), 32);
+        for e in edges {
+            let p = e.get("parent").as_usize().unwrap();
+            let c = e.get("child").as_usize().unwrap();
+            let k = e.get("k").as_usize().unwrap();
+            assert_eq!(
+                verts[c].get("size").as_usize().unwrap(),
+                verts[p].get("size").as_usize().unwrap() * k
+            );
+        }
+    }
+
+    #[test]
+    fn edge_partition_respects_subtree_assignment() {
+        let cfg = Config::from_json(&parse(TINY).unwrap()).unwrap();
+        let g = cfg.build_graph();
+        let (mp, tree) = meta_partition(&g, 2, 2, None);
+        // All edges of a sub-metatree map to the same partition.
+        for (si, sub) in tree.sub_metatrees().iter().enumerate() {
+            for &ei in sub {
+                assert_eq!(
+                    edge_partition(&tree, &mp, &tree.edges[ei]),
+                    mp.assignment[si]
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+pub use tests::TINY;

@@ -1,0 +1,226 @@
+//! Shared training-session state and input-marshalling helpers used by
+//! both execution engines (RAF and vanilla). Everything an engine needs
+//! to turn a [`TreeSample`] plus the manifest's input specs into the
+//! flat literal list a PJRT executable consumes.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::FeatureCache;
+use crate::comm::Lane;
+use crate::config::Config;
+use crate::hetgraph::{HetGraph, MetaTree, NodeId};
+use crate::kvstore::{FeatureStore, FetchStats};
+use crate::optim::AdamParams;
+use crate::runtime::{lit_f32, lit_i32, ArtifactSpec, ParamStore, Runtime};
+use crate::sampling::{TreeSample, PAD};
+
+/// Extra per-batch inputs supplied by the engine (leader partial sums,
+/// backward gradients), keyed by (kind, layer).
+pub type ExtraInputs = HashMap<(String, usize), Vec<f32>>;
+
+/// One training session: graph, features, parameters, runtime.
+pub struct Session {
+    pub cfg: Config,
+    pub g: HetGraph,
+    pub tree: MetaTree,
+    pub store: FeatureStore,
+    pub params: ParamStore,
+    pub rt: Runtime,
+    /// Shared sparse-Adam timestep for learnable tables.
+    pub adam_t: i32,
+}
+
+impl Session {
+    pub fn new(cfg: &Config, artifacts_dir: &str) -> Result<Session> {
+        let g = cfg.build_graph();
+        let tree = MetaTree::build(&g.schema, cfg.model.layers);
+        let store = FeatureStore::new(&g, cfg.train.seed);
+        let hp = AdamParams {
+            lr: cfg.train.lr as f32,
+            ..Default::default()
+        };
+        let rt = Runtime::load(artifacts_dir)?;
+        Ok(Session {
+            cfg: cfg.clone(),
+            g,
+            tree,
+            store,
+            params: ParamStore::new(cfg.train.seed, hp),
+            rt,
+            adam_t: 0,
+        })
+    }
+
+    /// Child vertex and source type of a metatree edge.
+    pub fn edge_child(&self, edge: usize) -> (usize, usize) {
+        let e = &self.tree.edges[edge];
+        (e.child, self.g.schema.relations[e.rel].src)
+    }
+
+    /// Target-type labels of a batch as i32.
+    pub fn batch_labels(&self, batch: &[NodeId]) -> Vec<i32> {
+        batch.iter().map(|&b| self.g.labels[b as usize] as i32).collect()
+    }
+}
+
+/// Aggregate fetch accounting of one input build.
+#[derive(Debug, Clone, Default)]
+pub struct GatherAccounting {
+    pub stats: FetchStats,
+    /// Modeled cache/miss time (Fetch stage).
+    pub cache_time_s: f64,
+    /// Per-(type,id) rows touched — reused for the learnable write-back.
+    pub touched: Vec<(usize, Vec<NodeId>)>,
+}
+
+/// Build the literal list for an artifact from its manifest spec.
+///
+/// `sample` provides block/mask ids, `extra` provides engine-computed
+/// tensors (partial sums / gradients), `is_remote` classifies feature
+/// rows for locality accounting, and `cache` (if present) is consulted
+/// per fetched row, accumulating modeled miss time.
+#[allow(clippy::too_many_arguments)]
+pub fn build_inputs(
+    sess: &mut Session,
+    spec: &ArtifactSpec,
+    sample: Option<&TreeSample>,
+    batch: &[NodeId],
+    extra: &ExtraInputs,
+    is_remote: &dyn Fn(usize, NodeId) -> bool,
+    cache: Option<&mut FeatureCache>,
+    gpu: usize,
+) -> Result<(Vec<xla::Literal>, GatherAccounting)> {
+    let mut acc = GatherAccounting::default();
+    let mut lits = Vec::with_capacity(spec.inputs.len());
+    let cost = sess.cfg.cost.clone();
+    let mut cache = cache;
+    for inp in &spec.inputs {
+        match inp.kind.as_str() {
+            "block" => {
+                let sample = sample.ok_or_else(|| anyhow!("block input without sample"))?;
+                let (child, src_ty) = sess.edge_child(inp.edge as usize);
+                let ids = &sample.ids[child];
+                let dim = sess.store.dim(src_ty);
+                let mut buf = vec![0f32; ids.len() * dim];
+                let stats = sess
+                    .store
+                    .gather(src_ty, ids, &mut buf, |id| is_remote(src_ty, id));
+                acc.stats.merge(stats);
+                if let Some(c) = cache.as_deref_mut() {
+                    for &id in ids.iter().filter(|&&id| id != PAD) {
+                        acc.cache_time_s += c.access(&cost, src_ty, id, gpu, false);
+                    }
+                }
+                acc.touched.push((src_ty, ids.clone()));
+                lits.push(lit_f32(&buf, &inp.shape)?);
+            }
+            "mask" => {
+                let sample = sample.ok_or_else(|| anyhow!("mask input without sample"))?;
+                let (child, _) = sess.edge_child(inp.edge as usize);
+                let mask: Vec<f32> = sample.ids[child]
+                    .iter()
+                    .map(|&id| if id == PAD { 0.0 } else { 1.0 })
+                    .collect();
+                lits.push(lit_f32(&mask, &inp.shape)?);
+            }
+            "weight" => {
+                sess.params.ensure(inp);
+                lits.push(lit_f32(sess.params.get(&inp.name), &inp.shape)?);
+            }
+            "target_feat" => {
+                let ty = sess.g.schema.target;
+                let dim = sess.store.dim(ty);
+                let mut buf = vec![0f32; batch.len() * dim];
+                let stats = sess
+                    .store
+                    .gather(ty, batch, &mut buf, |id| is_remote(ty, id));
+                acc.stats.merge(stats);
+                if let Some(c) = cache.as_deref_mut() {
+                    for &id in batch {
+                        acc.cache_time_s += c.access(&cost, ty, id, gpu, false);
+                    }
+                }
+                acc.touched.push((ty, batch.to_vec()));
+                lits.push(lit_f32(&buf, &inp.shape)?);
+            }
+            "labels" => {
+                let labels = sess.batch_labels(batch);
+                lits.push(lit_i32(&labels, &inp.shape)?);
+            }
+            "partial_sum" | "grad" => {
+                let key = (inp.kind.clone(), inp.layer);
+                let data = extra
+                    .get(&key)
+                    .ok_or_else(|| anyhow!("missing extra input {key:?}"))?;
+                lits.push(lit_f32(data, &inp.shape)?);
+            }
+            other => anyhow::bail!("unknown input kind '{other}'"),
+        }
+    }
+    Ok((lits, acc))
+}
+
+/// Modeled time to move `bytes` of gathered features host→device over
+/// PCIe in one batched transfer (the Copy stage of Fig. 3).
+pub fn h2d_time(sess: &Session, bytes: u64) -> f64 {
+    sess.cfg.cost.xfer_time(Lane::Pcie, bytes)
+}
+
+/// Sum two equal-length f32 vectors in place.
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// Scale a vector in place.
+pub fn scale(a: &mut [f32], s: f32) {
+    for x in a.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// `FeatureStore`-backed learnable-row update: accumulate row grads and
+/// apply sparse Adam. Returns rows updated.
+pub fn apply_learnable_grads(
+    sess: &mut Session,
+    ty: usize,
+    ids: &[NodeId],
+    grads: &[f32],
+    lr_scale: f32,
+) -> usize {
+    let dim = sess.store.dim(ty);
+    let mut rows = crate::optim::accumulate_rows(ids, grads, dim, PAD);
+    if lr_scale != 1.0 {
+        for (_, g) in &mut rows {
+            scale(g, lr_scale);
+        }
+    }
+    let hp = AdamParams {
+        lr: sess.cfg.train.lr as f32,
+        ..Default::default()
+    };
+    let t = sess.adam_t;
+    if let Some((w, m, v)) = sess.store.learnable_mut(ty) {
+        crate::optim::sparse_adam_step(&rows, w, m, v, dim, t, hp)
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut a = vec![1.0, 2.0];
+        add_assign(&mut a, &[0.5, 0.5]);
+        assert_eq!(a, vec![1.5, 2.5]);
+        scale(&mut a, 2.0);
+        assert_eq!(a, vec![3.0, 5.0]);
+    }
+}

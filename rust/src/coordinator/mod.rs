@@ -1,0 +1,168 @@
+//! Coordinator engines: the RAF (Heta) engine and the vanilla
+//! (DGL/GraphLearn-style) baseline engine, plus the `run_training` entry
+//! point used by the CLI, examples and benches.
+
+pub mod common;
+pub mod raf;
+pub mod vanilla;
+
+use anyhow::{bail, Result};
+
+pub use common::Session;
+pub use raf::RafEngine;
+pub use vanilla::VanillaEngine;
+
+use crate::cache::Policy;
+use crate::config::Config;
+use crate::metrics::EpochReport;
+use crate::partition::{edgecut, meta::meta_partition, metis_like};
+
+/// Which baseline system an engine configuration models (paper §8.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    /// Heta: RAF + meta-partitioning + miss-penalty-aware cache.
+    Heta,
+    /// DGL-Random: vanilla engine, random edge-cut, no cache.
+    DglRandom,
+    /// DGL-METIS: vanilla engine, METIS-like edge-cut, no cache.
+    DglMetis,
+    /// DGL-Opt: DGL-METIS + read-only feature cache.
+    DglOpt,
+    /// GraphLearn: per-type random partitioning + feature cache.
+    GraphLearn,
+}
+
+impl SystemKind {
+    pub fn parse(s: &str) -> Option<SystemKind> {
+        match s {
+            "heta" | "raf" => Some(SystemKind::Heta),
+            "dgl-random" => Some(SystemKind::DglRandom),
+            "dgl-metis" | "vanilla" => Some(SystemKind::DglMetis),
+            "dgl-opt" => Some(SystemKind::DglOpt),
+            "graphlearn" => Some(SystemKind::GraphLearn),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::Heta => "Heta",
+            SystemKind::DglRandom => "DGL-Random",
+            SystemKind::DglMetis => "DGL-METIS",
+            SystemKind::DglOpt => "DGL-Opt",
+            SystemKind::GraphLearn => "GraphLearn",
+        }
+    }
+
+    pub fn all() -> [SystemKind; 5] {
+        [
+            SystemKind::Heta,
+            SystemKind::DglRandom,
+            SystemKind::DglMetis,
+            SystemKind::DglOpt,
+            SystemKind::GraphLearn,
+        ]
+    }
+}
+
+/// Engine wrapper so callers can drive either execution model uniformly.
+pub enum Engine {
+    Raf(RafEngine),
+    Vanilla(VanillaEngine),
+}
+
+impl Engine {
+    /// Build the engine modelling `system` for a session.
+    pub fn build(sess: &Session, system: SystemKind) -> Result<Engine> {
+        let cfg = &sess.cfg;
+        let p = cfg.train.num_partitions;
+        Ok(match system {
+            SystemKind::Heta => {
+                let (mp, _) = meta_partition(&sess.g, p, cfg.model.layers, None);
+                Engine::Raf(RafEngine::new(sess, mp, cfg.train.cache_policy)?)
+            }
+            SystemKind::DglRandom => {
+                let part = edgecut::random(&sess.g, p, cfg.train.seed);
+                Engine::Vanilla(VanillaEngine::new(sess, part, Policy::None)?)
+            }
+            SystemKind::DglMetis => {
+                let part = metis_like::metis_like(&sess.g, p, cfg.train.seed);
+                Engine::Vanilla(VanillaEngine::new(sess, part, Policy::None)?)
+            }
+            SystemKind::DglOpt => {
+                let part = metis_like::metis_like(&sess.g, p, cfg.train.seed);
+                Engine::Vanilla(VanillaEngine::new(sess, part, cfg.train.cache_policy)?)
+            }
+            SystemKind::GraphLearn => {
+                let part = edgecut::by_type(&sess.g, p, cfg.train.seed);
+                Engine::Vanilla(VanillaEngine::new(sess, part, cfg.train.cache_policy)?)
+            }
+        })
+    }
+
+    pub fn run_epoch(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
+        match self {
+            Engine::Raf(e) => e.run_epoch(sess, epoch),
+            Engine::Vanilla(e) => e.run_epoch(sess, epoch),
+        }
+    }
+}
+
+/// CLI entry point: train `epochs` epochs with the named engine and
+/// return the merged report (stage times summed, loss from last epoch).
+pub fn run_training(
+    cfg: &Config,
+    artifacts_dir: &str,
+    engine_name: &str,
+    epochs: usize,
+) -> Result<EpochReport> {
+    let system = match SystemKind::parse(engine_name) {
+        Some(s) => s,
+        None => bail!(
+            "unknown engine '{engine_name}' (expected heta|dgl-random|dgl-metis|dgl-opt|graphlearn)"
+        ),
+    };
+    let mut sess = Session::new(cfg, artifacts_dir)?;
+    let mut engine = Engine::build(&sess, system)?;
+    let mut total = EpochReport::default();
+    for ep in 0..epochs {
+        let rep = engine.run_epoch(&mut sess, ep)?;
+        println!(
+            "epoch {ep}: loss {:.4} acc {:.3} time {}",
+            rep.loss_mean,
+            rep.accuracy,
+            crate::util::fmt_secs(rep.epoch_time_s)
+        );
+        total.epoch_time_s += rep.epoch_time_s;
+        total.stages.merge(&rep.stages);
+        total.comm.merge(&rep.comm);
+        total.loss_mean = rep.loss_mean;
+        total.accuracy = rep.accuracy;
+        total.batches += rep.batches;
+    }
+    Ok(total)
+}
+
+/// Bench/report helper: load `configs/<name>.json`, build the engine for
+/// `system`, run `epochs` epochs and return (merged report, last engine).
+/// Panics on missing artifacts — bench targets require `make artifacts`.
+pub fn bench_run(cfg_name: &str, system: SystemKind, epochs: usize) -> (EpochReport, Engine) {
+    let cfg = Config::load(&format!("configs/{cfg_name}.json"))
+        .unwrap_or_else(|e| panic!("loading config {cfg_name}: {e}"));
+    let dir = format!("artifacts/{cfg_name}");
+    let mut sess = Session::new(&cfg, &dir)
+        .unwrap_or_else(|e| panic!("session for {cfg_name}: {e} (run `make artifacts`)"));
+    let mut engine = Engine::build(&sess, system).unwrap();
+    let mut total = EpochReport::default();
+    for ep in 0..epochs {
+        let rep = engine.run_epoch(&mut sess, ep).unwrap();
+        total.epoch_time_s += rep.epoch_time_s;
+        total.stages.merge(&rep.stages);
+        total.comm.merge(&rep.comm);
+        total.loss_mean = rep.loss_mean;
+        total.accuracy = rep.accuracy;
+        total.batches += rep.batches;
+    }
+    total.epoch_time_s /= epochs.max(1) as f64;
+    (total, engine)
+}

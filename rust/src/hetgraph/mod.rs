@@ -1,0 +1,474 @@
+//! Heterogeneous graph storage: schema (node types, relations, metagraph)
+//! and per-relation CSR adjacency.
+//!
+//! A HetG `G = (V, E, A, R)` (paper §2.1) is stored as a collection of
+//! *mono-relation subgraphs*: one CSR per relation `r = (src_ty, name,
+//! dst_ty)`, indexed by **destination** node, because HGNN aggregation for
+//! a node `v` pulls from in-neighbors `N_r(v)` (the `u` of edges
+//! `(u, v)` of relation `r`). Node ids are local per node type
+//! (`0 .. count(ty)`), matching how features and partitions are stored.
+
+use crate::util::json::Json;
+
+/// Index of a node type in the schema (a "vertex" of the metagraph).
+pub type TypeId = usize;
+/// Index of a relation in the schema (a "link" of the metagraph).
+pub type RelId = usize;
+/// Node id local to its node type.
+pub type NodeId = u32;
+
+/// A node type: name, cardinality and feature profile.
+#[derive(Debug, Clone)]
+pub struct NodeType {
+    pub name: String,
+    pub count: usize,
+    /// Feature dimension. For featureless types this is the dimension of
+    /// the *learnable* embedding assigned to them (paper §1/§2.3).
+    pub feat_dim: usize,
+    /// True if this type has no raw features and uses learnable
+    /// embeddings updated during training.
+    pub learnable: bool,
+}
+
+/// A relation `(src_ty, name, dst_ty)`; `reverse_of` links a reverse
+/// relation to its forward counterpart when the schema declares one.
+#[derive(Debug, Clone)]
+pub struct Relation {
+    pub name: String,
+    pub src: TypeId,
+    pub dst: TypeId,
+    pub reverse_of: Option<RelId>,
+}
+
+/// Graph schema = metagraph `M = (A, R)` plus task metadata.
+#[derive(Debug, Clone)]
+pub struct Schema {
+    pub name: String,
+    pub node_types: Vec<NodeType>,
+    pub relations: Vec<Relation>,
+    /// The target (training) node type carrying labels.
+    pub target: TypeId,
+    pub num_classes: usize,
+}
+
+impl Schema {
+    pub fn type_id(&self, name: &str) -> Option<TypeId> {
+        self.node_types.iter().position(|t| t.name == name)
+    }
+
+    pub fn rel_id(&self, name: &str) -> Option<RelId> {
+        self.relations.iter().position(|r| r.name == name)
+    }
+
+    /// Relations whose destination is `ty` — the links followed by the
+    /// metatree BFS (paper §5, Step 1).
+    pub fn in_relations(&self, ty: TypeId) -> Vec<RelId> {
+        (0..self.relations.len())
+            .filter(|&r| self.relations[r].dst == ty)
+            .collect()
+    }
+
+    /// Human-readable relation triple, e.g. `author-writes->paper`.
+    pub fn rel_triple(&self, r: RelId) -> String {
+        let rel = &self.relations[r];
+        format!(
+            "{}-{}->{}",
+            self.node_types[rel.src].name, rel.name, self.node_types[rel.dst].name
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "node_types",
+                Json::Arr(
+                    self.node_types
+                        .iter()
+                        .map(|t| {
+                            Json::from_pairs(vec![
+                                ("name", Json::str(t.name.clone())),
+                                ("count", Json::num(t.count as f64)),
+                                ("feat_dim", Json::num(t.feat_dim as f64)),
+                                ("learnable", Json::Bool(t.learnable)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "relations",
+                Json::Arr(
+                    self.relations
+                        .iter()
+                        .map(|r| {
+                            Json::from_pairs(vec![
+                                ("name", Json::str(r.name.clone())),
+                                ("src", Json::num(r.src as f64)),
+                                ("dst", Json::num(r.dst as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("target", Json::num(self.target as f64)),
+            ("num_classes", Json::num(self.num_classes as f64)),
+        ])
+    }
+}
+
+/// CSR adjacency of one mono-relation subgraph, indexed by destination
+/// node: in-neighbors of dst `v` are `indices[offsets[v] .. offsets[v+1]]`.
+#[derive(Debug, Clone)]
+pub struct RelCsr {
+    pub rel: RelId,
+    pub offsets: Vec<u64>,
+    pub indices: Vec<NodeId>,
+}
+
+impl RelCsr {
+    /// Build from an edge list of `(src, dst)` pairs using counting sort —
+    /// O(E). `num_dst` is the cardinality of the destination type.
+    pub fn from_edges(rel: RelId, num_dst: usize, edges: &[(NodeId, NodeId)]) -> RelCsr {
+        let mut counts = vec![0u64; num_dst + 1];
+        for &(_, d) in edges {
+            counts[d as usize + 1] += 1;
+        }
+        for i in 1..counts.len() {
+            counts[i] += counts[i - 1];
+        }
+        let offsets = counts.clone();
+        let mut indices = vec![0 as NodeId; edges.len()];
+        let mut cursor = counts;
+        for &(s, d) in edges {
+            indices[cursor[d as usize] as usize] = s;
+            cursor[d as usize] += 1;
+        }
+        RelCsr {
+            rel,
+            offsets,
+            indices,
+        }
+    }
+
+    #[inline]
+    pub fn neighbors(&self, dst: NodeId) -> &[NodeId] {
+        let lo = self.offsets[dst as usize] as usize;
+        let hi = self.offsets[dst as usize + 1] as usize;
+        &self.indices[lo..hi]
+    }
+
+    #[inline]
+    pub fn degree(&self, dst: NodeId) -> usize {
+        (self.offsets[dst as usize + 1] - self.offsets[dst as usize]) as usize
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Bytes consumed by this CSR (for Table 2 peak-memory accounting).
+    pub fn mem_bytes(&self) -> u64 {
+        (self.offsets.len() * 8 + self.indices.len() * 4) as u64
+    }
+}
+
+/// A heterogeneous graph: schema + one CSR per relation + labels for the
+/// target type. Features live in [`crate::kvstore`] so that partitioned /
+/// cached storage is explicit.
+#[derive(Debug, Clone)]
+pub struct HetGraph {
+    pub schema: Schema,
+    pub rels: Vec<RelCsr>,
+    /// Class label per target-type node.
+    pub labels: Vec<u16>,
+    /// Train-split mask over target nodes (the paper's "training nodes").
+    pub train_mask: Vec<bool>,
+}
+
+impl HetGraph {
+    pub fn num_nodes(&self) -> usize {
+        self.schema.node_types.iter().map(|t| t.count).sum()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.rels.iter().map(|r| r.num_edges()).sum()
+    }
+
+    pub fn train_nodes(&self) -> Vec<NodeId> {
+        self.train_mask
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m)
+            .map(|(i, _)| i as NodeId)
+            .collect()
+    }
+
+    pub fn csr(&self, rel: RelId) -> &RelCsr {
+        &self.rels[rel]
+    }
+
+    /// Total topology bytes (Table 2 memory accounting).
+    pub fn mem_bytes(&self) -> u64 {
+        self.rels.iter().map(|r| r.mem_bytes()).sum::<u64>()
+            + self.labels.len() as u64 * 2
+            + self.train_mask.len() as u64
+    }
+
+    /// Storage footprint including features at the given bytes/element
+    /// (paper Table 1 "Storage (GB)" uses fp16 features ⇒ 2 bytes).
+    pub fn storage_bytes(&self, bytes_per_feat: u64) -> u64 {
+        let feat: u64 = self
+            .schema
+            .node_types
+            .iter()
+            .map(|t| (t.count * t.feat_dim) as u64 * bytes_per_feat)
+            .sum();
+        self.mem_bytes() + feat
+    }
+}
+
+/// Metatree: the HGNN computation-dependency tree over the metagraph
+/// (paper §5 Step 1). Vertices are tree positions; the same node type may
+/// appear at several positions (metagraph cycles).
+#[derive(Debug, Clone)]
+pub struct MetaTree {
+    pub vertices: Vec<MetaTreeVertex>,
+    /// Tree edges: (parent vertex, child vertex, relation).
+    pub edges: Vec<MetaTreeEdge>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MetaTreeVertex {
+    pub ty: TypeId,
+    pub depth: usize,
+    pub parent: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MetaTreeEdge {
+    pub parent: usize,
+    pub child: usize,
+    pub rel: RelId,
+}
+
+impl MetaTree {
+    /// k-depth BFS from the target type, following in-relations — exactly
+    /// Algorithm 2 line 4. Deterministic: children expand in relation-id
+    /// order, giving a canonical vertex numbering shared with the AOT plan.
+    pub fn build(schema: &Schema, depth: usize) -> MetaTree {
+        let mut t = MetaTree {
+            vertices: vec![MetaTreeVertex {
+                ty: schema.target,
+                depth: 0,
+                parent: None,
+            }],
+            edges: Vec::new(),
+        };
+        let mut frontier = vec![0usize];
+        for d in 0..depth {
+            let mut next = Vec::new();
+            for &v in &frontier {
+                let ty = t.vertices[v].ty;
+                for r in schema.in_relations(ty) {
+                    let child = t.vertices.len();
+                    t.vertices.push(MetaTreeVertex {
+                        ty: schema.relations[r].src,
+                        depth: d + 1,
+                        parent: Some(v),
+                    });
+                    t.edges.push(MetaTreeEdge {
+                        parent: v,
+                        child,
+                        rel: r,
+                    });
+                    next.push(child);
+                }
+            }
+            frontier = next;
+        }
+        t
+    }
+
+    /// Build from user-provided metapaths (Algorithm 2 line 2): each
+    /// metapath is a sequence of relation ids walked from the root.
+    pub fn from_metapaths(schema: &Schema, metapaths: &[Vec<RelId>]) -> MetaTree {
+        let mut t = MetaTree {
+            vertices: vec![MetaTreeVertex {
+                ty: schema.target,
+                depth: 0,
+                parent: None,
+            }],
+            edges: Vec::new(),
+        };
+        for path in metapaths {
+            let mut at = 0usize;
+            for (d, &r) in path.iter().enumerate() {
+                assert_eq!(
+                    schema.relations[r].dst, t.vertices[at].ty,
+                    "metapath relation {} does not end at current type",
+                    schema.rel_triple(r)
+                );
+                // Reuse an existing child edge with the same relation,
+                // otherwise extend the tree.
+                let existing = t
+                    .edges
+                    .iter()
+                    .find(|e| e.parent == at && e.rel == r)
+                    .map(|e| e.child);
+                at = match existing {
+                    Some(c) => c,
+                    None => {
+                        let child = t.vertices.len();
+                        t.vertices.push(MetaTreeVertex {
+                            ty: schema.relations[r].src,
+                            depth: d + 1,
+                            parent: Some(at),
+                        });
+                        t.edges.push(MetaTreeEdge {
+                            parent: at,
+                            child,
+                            rel: r,
+                        });
+                        child
+                    }
+                };
+            }
+        }
+        t
+    }
+
+    /// Children edges of a vertex, in canonical order.
+    pub fn children_of(&self, v: usize) -> Vec<&MetaTreeEdge> {
+        self.edges.iter().filter(|e| e.parent == v).collect()
+    }
+
+    /// Root-child subtree ids: for each child edge of the root, the set of
+    /// tree-edge indices contained in that sub-metatree (root + child +
+    /// descendants) — paper §5 Step 2.
+    pub fn sub_metatrees(&self) -> Vec<Vec<usize>> {
+        let root_children: Vec<usize> = self
+            .edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.parent == 0)
+            .map(|(i, _)| i)
+            .collect();
+        root_children
+            .iter()
+            .map(|&ei| {
+                let mut contained = vec![ei];
+                let mut stack = vec![self.edges[ei].child];
+                while let Some(v) = stack.pop() {
+                    for (j, e) in self.edges.iter().enumerate() {
+                        if e.parent == v {
+                            contained.push(j);
+                            stack.push(e.child);
+                        }
+                    }
+                }
+                contained.sort();
+                contained
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny ogbn-mag-like schema used across module tests.
+    pub fn mag_schema() -> Schema {
+        Schema {
+            name: "magtest".into(),
+            node_types: vec![
+                NodeType { name: "paper".into(), count: 100, feat_dim: 16, learnable: false },
+                NodeType { name: "author".into(), count: 80, feat_dim: 8, learnable: true },
+                NodeType { name: "inst".into(), count: 10, feat_dim: 8, learnable: true },
+                NodeType { name: "field".into(), count: 20, feat_dim: 8, learnable: true },
+            ],
+            relations: vec![
+                Relation { name: "writes".into(), src: 1, dst: 0, reverse_of: None },
+                Relation { name: "cites".into(), src: 0, dst: 0, reverse_of: None },
+                Relation { name: "topic_rev".into(), src: 3, dst: 0, reverse_of: None },
+                Relation { name: "writes_rev".into(), src: 0, dst: 1, reverse_of: Some(0) },
+                Relation { name: "affil_rev".into(), src: 2, dst: 1, reverse_of: None },
+            ],
+            target: 0,
+            num_classes: 5,
+        }
+    }
+
+    #[test]
+    fn csr_from_edges() {
+        let edges = [(3u32, 0u32), (1, 0), (2, 2), (0, 2)];
+        let csr = RelCsr::from_edges(0, 3, &edges);
+        assert_eq!(csr.neighbors(0), &[3, 1]);
+        assert_eq!(csr.neighbors(1), &[] as &[u32]);
+        assert_eq!(csr.neighbors(2), &[2, 0]);
+        assert_eq!(csr.degree(0), 2);
+        assert_eq!(csr.num_edges(), 4);
+    }
+
+    #[test]
+    fn in_relations_follow_dst() {
+        let s = mag_schema();
+        assert_eq!(s.in_relations(0), vec![0, 1, 2]); // writes, cites, topic_rev
+        assert_eq!(s.in_relations(1), vec![3, 4]);
+    }
+
+    #[test]
+    fn metatree_matches_paper_fig6() {
+        // 2-depth BFS from "paper": root has 3 children (A, P, F);
+        // the A child has 2 children (P via writes_rev... no: in-relations
+        // of author are writes_rev(P->A) and affil_rev(I->A)).
+        let s = mag_schema();
+        let t = MetaTree::build(&s, 2);
+        let root_children = t.children_of(0);
+        assert_eq!(root_children.len(), 3);
+        // Sub-metatrees: one per root child (paper: S1, S2, S3).
+        let subs = t.sub_metatrees();
+        assert_eq!(subs.len(), 3);
+        // The author subtree contains the depth-2 edges under author.
+        let author_sub = &subs[0]; // child via rel 0 = writes (author)
+        assert!(author_sub.len() == 3); // writes + writes_rev + affil_rev
+        // Every edge belongs to exactly one sub-metatree.
+        let mut all: Vec<usize> = subs.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, (0..t.edges.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn metatree_depth1() {
+        let s = mag_schema();
+        let t = MetaTree::build(&s, 1);
+        assert_eq!(t.vertices.len(), 4);
+        assert_eq!(t.edges.len(), 3);
+        assert!(t.vertices[1..].iter().all(|v| v.depth == 1));
+    }
+
+    #[test]
+    fn metapath_tree_shares_prefixes() {
+        let s = mag_schema();
+        // P<-writes-A<-affil_rev-I and P<-writes-A<-writes_rev-P share the
+        // first hop.
+        let t = MetaTree::from_metapaths(&s, &[vec![0, 4], vec![0, 3], vec![1]]);
+        assert_eq!(t.children_of(0).len(), 2); // writes-child and cites-child
+        let subs = t.sub_metatrees();
+        assert_eq!(subs.len(), 2);
+        assert_eq!(subs[0].len(), 3);
+        assert_eq!(subs[1].len(), 1);
+    }
+
+    #[test]
+    fn schema_json_roundtrip_fields() {
+        let s = mag_schema();
+        let j = s.to_json();
+        assert_eq!(j.get("target").as_usize(), Some(0));
+        assert_eq!(j.get("node_types").as_arr().unwrap().len(), 4);
+    }
+}
+
+#[cfg(test)]
+pub use tests::mag_schema;

@@ -1,0 +1,256 @@
+//! Feature KV store (the host-memory "KVStore" of the paper's Fig. 3):
+//! per-node-type feature tables with explicit locality accounting.
+//!
+//! Raw (read-only) features are *lazy* — synthesized on access from a
+//! hash (`datagen::feature_value`), so multi-GB tables never materialize.
+//! Learnable features are *dense* tables with Adam state (they are model
+//! parameters: random-initialized, updated every step — the update path
+//! whose DRAM cost the paper measures at 24–35% of epoch time, Fig. 4).
+//!
+//! `gather` fills the padded block buffers consumed by the PJRT
+//! executables, returning per-call fetch statistics (local vs remote
+//! rows) that the engines charge to the communication cost model.
+
+use crate::datagen::feature_value;
+use crate::hetgraph::{HetGraph, NodeId};
+use crate::sampling::PAD;
+use crate::util::rng::Rng;
+
+/// One node type's storage.
+pub enum Table {
+    /// Read-only features, synthesized lazily (seeded).
+    Lazy { seed: u64 },
+    /// Learnable embeddings + Adam moments (updated during training).
+    Learnable {
+        weight: Vec<f32>,
+        adam_m: Vec<f32>,
+        adam_v: Vec<f32>,
+    },
+}
+
+/// Feature store over all node types of a graph.
+pub struct FeatureStore {
+    pub dims: Vec<usize>,
+    pub counts: Vec<usize>,
+    pub tables: Vec<Table>,
+    /// Labels of target nodes (for feature synthesis correlation).
+    labels: Vec<u16>,
+    target_ty: usize,
+}
+
+/// Statistics of one gather call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FetchStats {
+    pub rows: u64,
+    pub bytes: u64,
+    pub remote_rows: u64,
+    pub remote_bytes: u64,
+}
+
+impl FetchStats {
+    pub fn merge(&mut self, o: FetchStats) {
+        self.rows += o.rows;
+        self.bytes += o.bytes;
+        self.remote_rows += o.remote_rows;
+        self.remote_bytes += o.remote_bytes;
+    }
+}
+
+impl FeatureStore {
+    /// Build the store for a graph. Learnable tables are initialized
+    /// `N(0, 0.1)`; raw features are lazy.
+    pub fn new(g: &HetGraph, seed: u64) -> FeatureStore {
+        let mut rng = Rng::new(seed ^ 0xFEA7);
+        let tables = g
+            .schema
+            .node_types
+            .iter()
+            .enumerate()
+            .map(|(ty, t)| {
+                if t.learnable {
+                    let n = t.count * t.feat_dim;
+                    let mut r = rng.fork(ty as u64);
+                    Table::Learnable {
+                        weight: (0..n).map(|_| (r.gaussian() * 0.1) as f32).collect(),
+                        adam_m: vec![0.0; n],
+                        adam_v: vec![0.0; n],
+                    }
+                } else {
+                    Table::Lazy {
+                        seed: seed ^ (ty as u64) << 8,
+                    }
+                }
+            })
+            .collect();
+        FeatureStore {
+            dims: g.schema.node_types.iter().map(|t| t.feat_dim).collect(),
+            counts: g.schema.node_types.iter().map(|t| t.count).collect(),
+            tables,
+            labels: g.labels.clone(),
+            target_ty: g.schema.target,
+        }
+    }
+
+    pub fn dim(&self, ty: usize) -> usize {
+        self.dims[ty]
+    }
+
+    pub fn is_learnable(&self, ty: usize) -> bool {
+        matches!(self.tables[ty], Table::Learnable { .. })
+    }
+
+    /// Copy the feature row of `(ty, id)` into `out` (len = dim).
+    pub fn read_row(&self, ty: usize, id: NodeId, out: &mut [f32]) {
+        let d = self.dims[ty];
+        debug_assert_eq!(out.len(), d);
+        match &self.tables[ty] {
+            Table::Lazy { seed } => {
+                let hint = if ty == self.target_ty {
+                    self.labels[id as usize]
+                } else {
+                    (id % 16) as u16
+                };
+                for (c, o) in out.iter_mut().enumerate() {
+                    *o = feature_value(*seed, ty, id, c, hint);
+                }
+            }
+            Table::Learnable { weight, .. } => {
+                let base = id as usize * d;
+                out.copy_from_slice(&weight[base..base + d]);
+            }
+        }
+    }
+
+    /// Gather (possibly padded) `ids` into a dense `[len(ids), dim]`
+    /// buffer; padded slots are zero-filled. `is_remote(id)` classifies
+    /// rows for locality accounting (vanilla engine: rows owned by other
+    /// machines must cross the network).
+    pub fn gather(
+        &self,
+        ty: usize,
+        ids: &[NodeId],
+        out: &mut [f32],
+        is_remote: impl Fn(NodeId) -> bool,
+    ) -> FetchStats {
+        let d = self.dims[ty];
+        debug_assert_eq!(out.len(), ids.len() * d);
+        let mut stats = FetchStats::default();
+        for (i, &id) in ids.iter().enumerate() {
+            let dstrow = &mut out[i * d..(i + 1) * d];
+            if id == PAD {
+                dstrow.fill(0.0);
+                continue;
+            }
+            self.read_row(ty, id, dstrow);
+            stats.rows += 1;
+            stats.bytes += (d * 4) as u64;
+            if is_remote(id) {
+                stats.remote_rows += 1;
+                stats.remote_bytes += (d * 4) as u64;
+            }
+        }
+        stats
+    }
+
+    /// Mutable access to a learnable table (sparse Adam update path).
+    pub fn learnable_mut(
+        &mut self,
+        ty: usize,
+    ) -> Option<(&mut Vec<f32>, &mut Vec<f32>, &mut Vec<f32>)> {
+        match &mut self.tables[ty] {
+            Table::Learnable {
+                weight,
+                adam_m,
+                adam_v,
+            } => Some((weight, adam_m, adam_v)),
+            _ => None,
+        }
+    }
+
+    /// Bytes held by learnable tables incl. optimizer state (cache §6
+    /// sizing and Fig. 4's update-cost accounting).
+    pub fn learnable_bytes(&self, ty: usize) -> u64 {
+        match &self.tables[ty] {
+            Table::Learnable { weight, .. } => (weight.len() * 4 * 3) as u64,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, GenParams, Preset};
+
+    fn store() -> (HetGraph, FeatureStore) {
+        let g = generate(Preset::Mag, 1e-4, &GenParams::default());
+        let s = FeatureStore::new(&g, 11);
+        (g, s)
+    }
+
+    #[test]
+    fn lazy_rows_deterministic() {
+        let (_, s) = store();
+        let mut a = vec![0.0; s.dim(0)];
+        let mut b = vec![0.0; s.dim(0)];
+        s.read_row(0, 5, &mut a);
+        s.read_row(0, 5, &mut b);
+        assert_eq!(a, b);
+        s.read_row(0, 6, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn learnable_tables_initialized() {
+        let (g, s) = store();
+        assert!(s.is_learnable(1));
+        assert!(!s.is_learnable(0));
+        let d = s.dim(1);
+        let mut row = vec![0.0; d];
+        s.read_row(1, 0, &mut row);
+        assert!(row.iter().any(|&x| x != 0.0));
+        assert_eq!(
+            s.learnable_bytes(1),
+            (g.schema.node_types[1].count * d * 4 * 3) as u64
+        );
+    }
+
+    #[test]
+    fn gather_pads_and_counts() {
+        let (_, s) = store();
+        let d = s.dim(0);
+        let ids = [1u32, PAD, 3, 7];
+        let mut out = vec![1.0f32; ids.len() * d];
+        let stats = s.gather(0, &ids, &mut out, |id| id == 7);
+        assert_eq!(stats.rows, 3);
+        assert_eq!(stats.remote_rows, 1);
+        assert_eq!(stats.bytes, (3 * d * 4) as u64);
+        assert_eq!(stats.remote_bytes, (d * 4) as u64);
+        assert!(out[d..2 * d].iter().all(|&x| x == 0.0), "pad row not zeroed");
+        assert!(out[..d].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn fetch_stats_merge() {
+        let mut a = FetchStats { rows: 1, bytes: 4, remote_rows: 0, remote_bytes: 0 };
+        a.merge(FetchStats { rows: 2, bytes: 8, remote_rows: 1, remote_bytes: 4 });
+        assert_eq!(a.rows, 3);
+        assert_eq!(a.remote_bytes, 4);
+    }
+
+    #[test]
+    fn target_features_correlate_with_labels() {
+        // Same label ⇒ same boosted coordinate pattern (cosine similarity
+        // higher than across labels, on average).
+        let (g, s) = store();
+        let d = s.dim(0);
+        let mut by_label: std::collections::HashMap<u16, Vec<Vec<f32>>> = Default::default();
+        for id in 0..40u32 {
+            let mut row = vec![0.0; d];
+            s.read_row(0, id, &mut row);
+            by_label.entry(g.labels[id as usize] % 7).or_default().push(row);
+        }
+        // Not a strict statistical test — just checks the label hint is wired.
+        assert!(by_label.len() > 1);
+    }
+}

@@ -1,0 +1,33 @@
+//! # Heta — distributed training of heterogeneous graph neural networks
+//!
+//! A three-layer reproduction of *Heta: Distributed Training of Heterogeneous
+//! Graph Neural Networks* (Zhong et al., 2024):
+//!
+//! * **Layer 3 (this crate)** — the distributed-training coordinator: the
+//!   Relation-Aggregation-First (RAF) execution engine, meta-partitioning,
+//!   the miss-penalty-aware feature cache, and the vanilla (DGL/GraphLearn
+//!   style) baseline engine, together with every substrate they depend on
+//!   (heterogeneous graph storage, synthetic dataset generators, samplers,
+//!   a simulated cluster transport, a distributed KV store, sparse Adam).
+//! * **Layer 2 (python/compile/model.py)** — the HGNN compute graphs
+//!   (R-GCN, R-GAT, HGT) in JAX, AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the
+//!   relation-aggregation hot spot, lowered into the same HLO.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! models once, and the Rust coordinator loads and executes the artifacts
+//! through the PJRT C API (`xla` crate).
+
+pub mod util;
+pub mod hetgraph;
+pub mod datagen;
+pub mod partition;
+pub mod sampling;
+pub mod comm;
+pub mod kvstore;
+pub mod cache;
+pub mod optim;
+pub mod metrics;
+pub mod config;
+pub mod runtime;
+pub mod coordinator;

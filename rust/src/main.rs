@@ -1,0 +1,153 @@
+//! `heta` — launcher CLI for the Heta reproduction.
+//!
+//! Subcommands:
+//!   plan       --config <file> --out <plan.json>   emit the AOT artifact plan
+//!   partition  --config <file> [--method m]        run + report a partitioning
+//!   train      --config <file> --engine raf|vanilla [--epochs n]
+//!   info       --config <file>                     dataset/schema summary
+//!
+//! `plan` is the build-time half of the Rust↔Python contract: it computes
+//! the metatree, meta-partitioning and padded block shapes that
+//! `python/compile/aot.py` lowers into HLO artifacts.
+
+use anyhow::{bail, Context, Result};
+use heta::config::{build_plan, Config};
+use heta::partition::{edgecut, meta::meta_partition, metis_like, quality};
+use heta::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "plan" => cmd_plan(&args),
+        "partition" => cmd_partition(&args),
+        "train" => cmd_train(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: heta <plan|partition|train|info> --config configs/<name>.json [options]\n\
+                 \n\
+                 plan       --out <plan.json>      emit AOT artifact plan\n\
+                 partition  [--method meta|random|metis|bytype] [--parts p]\n\
+                 train      --engine raf|vanilla [--epochs n] [--artifacts dir]\n\
+                 info"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let path = args
+        .get("config")
+        .context("--config <file> is required")?;
+    Config::load(path)
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let out = args.get("out").context("--out <plan.json> is required")?;
+    let g = cfg.build_graph();
+    let (mp, tree) = meta_partition(&g, cfg.train.num_partitions, cfg.model.layers, None);
+    let plan = build_plan(&cfg, &g, &tree, &mp);
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(out, plan.to_string())?;
+    println!(
+        "plan '{}': {} tree edges, {} partitions -> {}",
+        cfg.name,
+        tree.edges.len(),
+        cfg.train.num_partitions,
+        out
+    );
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let g = cfg.build_graph();
+    let parts = args.get_usize("parts", cfg.train.num_partitions);
+    let method = args.get_or("method", "meta");
+    match method.as_str() {
+        "meta" => {
+            let (mp, tree) = meta_partition(&g, parts, cfg.model.layers, None);
+            println!(
+                "meta-partitioning: {} sub-metatrees over {} partitions in {}",
+                tree.sub_metatrees().len(),
+                parts,
+                heta::util::fmt_secs(mp.elapsed_s)
+            );
+            for p in 0..parts {
+                println!(
+                    "  partition {p}: {} relations, load {}, topo {}",
+                    mp.rels_per_part[p].len(),
+                    mp.part_load(&g, p),
+                    heta::util::fmt_bytes(mp.part_topology_bytes(&g, p))
+                );
+            }
+        }
+        m @ ("random" | "metis" | "bytype") => {
+            let p = match m {
+                "random" => edgecut::random(&g, parts, cfg.train.seed),
+                "metis" => metis_like::metis_like(&g, parts, cfg.train.seed),
+                _ => edgecut::by_type(&g, parts, cfg.train.seed),
+            };
+            let cut = quality::edge_cut(&g, &p);
+            let bounds = quality::boundary_nodes(&g, &p);
+            println!(
+                "{}: time {}, peak mem {}, edge cut {} ({:.1}%), max boundary {}",
+                p.method,
+                heta::util::fmt_secs(p.elapsed_s),
+                heta::util::fmt_bytes(p.peak_mem_bytes),
+                cut,
+                cut as f64 / g.num_edges() as f64 * 100.0,
+                bounds.iter().max().unwrap()
+            );
+        }
+        other => bail!("unknown method {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let engine = args.get_or("engine", "raf");
+    let epochs = args.get_usize("epochs", 1);
+    let artifacts = args.get_or("artifacts", &format!("artifacts/{}", cfg.name));
+    let report = heta::coordinator::run_training(&cfg, &artifacts, &engine, epochs)?;
+    report.print(&format!("{}/{}", cfg.name, engine));
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let g = cfg.build_graph();
+    println!("dataset {} (preset {}, scale {})", cfg.name, g.schema.name, cfg.dataset.scale);
+    println!(
+        "  {} nodes / {} node types, {} edges / {} relations, {} classes",
+        g.num_nodes(),
+        g.schema.node_types.len(),
+        g.num_edges(),
+        g.schema.relations.len(),
+        g.schema.num_classes
+    );
+    for (i, t) in g.schema.node_types.iter().enumerate() {
+        println!(
+            "  type {i} {:<10} count {:<8} dim {:<5} {}",
+            t.name,
+            t.count,
+            t.feat_dim,
+            if t.learnable { "learnable" } else { "featured" }
+        );
+    }
+    println!(
+        "  storage (fp16 features): {}",
+        heta::util::fmt_bytes(g.storage_bytes(2))
+    );
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! Training-stage metrics matching the paper's breakdowns (Figs. 4 & 10):
+//! sampling, feature fetching, data copy, forward, backward, gradient
+//! sync, and (learnable-)feature/model update. Each engine accumulates
+//! per-stage simulated seconds; reports render the same rows the paper
+//! plots.
+
+/// The training stages of Fig. 3 / Fig. 10.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Sample,
+    Fetch,
+    Copy,
+    Forward,
+    Backward,
+    GradSync,
+    Update,
+}
+
+pub const STAGES: [Stage; 7] = [
+    Stage::Sample,
+    Stage::Fetch,
+    Stage::Copy,
+    Stage::Forward,
+    Stage::Backward,
+    Stage::GradSync,
+    Stage::Update,
+];
+
+impl Stage {
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Sample => 0,
+            Stage::Fetch => 1,
+            Stage::Copy => 2,
+            Stage::Forward => 3,
+            Stage::Backward => 4,
+            Stage::GradSync => 5,
+            Stage::Update => 6,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Sample => "sample",
+            Stage::Fetch => "fetch",
+            Stage::Copy => "copy",
+            Stage::Forward => "forward",
+            Stage::Backward => "backward",
+            Stage::GradSync => "grad_sync",
+            Stage::Update => "update",
+        }
+    }
+}
+
+/// Per-stage accumulated time (seconds, simulated clock).
+#[derive(Debug, Clone, Default)]
+pub struct StageTimes {
+    pub secs: [f64; 7],
+}
+
+impl StageTimes {
+    pub fn add(&mut self, stage: Stage, secs: f64) {
+        self.secs[stage.index()] += secs;
+    }
+
+    pub fn get(&self, stage: Stage) -> f64 {
+        self.secs[stage.index()]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &StageTimes) {
+        for i in 0..7 {
+            self.secs[i] += other.secs[i];
+        }
+    }
+
+    /// Percentage breakdown (sums to ~100).
+    pub fn percentages(&self) -> Vec<(Stage, f64)> {
+        let total = self.total().max(1e-30);
+        STAGES
+            .iter()
+            .map(|&s| (s, self.get(s) / total * 100.0))
+            .collect()
+    }
+
+    pub fn report_rows(&self) -> Vec<Vec<String>> {
+        self.percentages()
+            .iter()
+            .map(|(s, pct)| {
+                vec![
+                    s.name().to_string(),
+                    crate::util::fmt_secs(self.get(*s)),
+                    format!("{pct:.1}%"),
+                ]
+            })
+            .collect()
+    }
+}
+
+/// Result of one training epoch under either engine.
+#[derive(Debug, Clone, Default)]
+pub struct EpochReport {
+    pub epoch_time_s: f64,
+    pub stages: StageTimes,
+    pub comm: crate::comm::Ledger,
+    pub loss_mean: f64,
+    pub accuracy: f64,
+    pub batches: usize,
+}
+
+impl EpochReport {
+    pub fn print(&self, label: &str) {
+        println!(
+            "[{label}] epoch {} | loss {:.4} acc {:.3} | batches {}",
+            crate::util::fmt_secs(self.epoch_time_s),
+            self.loss_mean,
+            self.accuracy,
+            self.batches
+        );
+        for row in self.stages.report_rows() {
+            println!("    {:<10} {:>12} {:>7}", row[0], row[1], row[2]);
+        }
+        println!(
+            "    comm: net {} | pcie {} | dram {} | p2p {}",
+            crate::util::fmt_bytes(self.comm.bytes[0]),
+            crate::util::fmt_bytes(self.comm.bytes[1]),
+            crate::util::fmt_bytes(self.comm.bytes[2]),
+            crate::util::fmt_bytes(self.comm.bytes[3]),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_accumulation_and_percentages() {
+        let mut st = StageTimes::default();
+        st.add(Stage::Sample, 1.0);
+        st.add(Stage::Fetch, 3.0);
+        st.add(Stage::Sample, 1.0);
+        assert_eq!(st.get(Stage::Sample), 2.0);
+        assert_eq!(st.total(), 5.0);
+        let pct = st.percentages();
+        assert!((pct[0].1 - 40.0).abs() < 1e-9);
+        assert!((pct[1].1 - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds_componentwise() {
+        let mut a = StageTimes::default();
+        a.add(Stage::Forward, 1.0);
+        let mut b = StageTimes::default();
+        b.add(Stage::Forward, 2.0);
+        b.add(Stage::Update, 4.0);
+        a.merge(&b);
+        assert_eq!(a.get(Stage::Forward), 3.0);
+        assert_eq!(a.get(Stage::Update), 4.0);
+    }
+
+    #[test]
+    fn stage_names_unique() {
+        let names: std::collections::HashSet<_> = STAGES.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), STAGES.len());
+    }
+}

@@ -1,0 +1,246 @@
+//! Meta-partitioning (paper §5, Algorithm 2): partition a HetG by its
+//! metagraph using the HGNN computation-dependency metatree.
+//!
+//! Steps — (1) build the metatree by k-depth BFS from the target type
+//! (or from user metapaths); (2) split it into sub-metatrees, one per
+//! root child, each weighted by the node/edge counts of its types and
+//! relations; (3) LPT-assign sub-metatrees to `p` partitions;
+//! (4) deduplicate relations within each partition. Boundary nodes are
+//! confined to the target nodes by construction, which is what gives RAF
+//! its constant communication complexity (Props. 2–3).
+
+use std::time::Instant;
+
+use crate::hetgraph::{HetGraph, MetaTree, RelId};
+
+use super::MetaPartition;
+
+/// Run meta-partitioning. `depth` is the number of HGNN layers (= BFS
+/// depth, Algorithm 2 line 4); `metapaths` optionally overrides BFS
+/// (line 2). If there are more partitions than sub-metatrees the extra
+/// partitions replicate sub-metatrees (paper §5 Discussions: replicas
+/// split target nodes data-parallel); we model that by assigning
+/// round-robin copies.
+pub fn meta_partition(
+    g: &HetGraph,
+    num_parts: usize,
+    depth: usize,
+    metapaths: Option<&[Vec<RelId>]>,
+) -> (MetaPartition, MetaTree) {
+    let start = Instant::now();
+    let schema = &g.schema;
+
+    // Step 1: metatree (BFS over the weighted metagraph, or metapaths).
+    let tree = match metapaths {
+        Some(paths) => MetaTree::from_metapaths(schema, paths),
+        None => MetaTree::build(schema, depth),
+    };
+
+    // Step 2: sub-metatrees, one per root child; weight = Σ node counts of
+    // vertex types + Σ edge counts of link relations (Algorithm 2 l.8).
+    let subs = tree.sub_metatrees();
+    let sub_weights: Vec<u64> = subs
+        .iter()
+        .map(|edges| {
+            let mut w: u64 = schema.node_types[schema.target].count as u64; // root vertex
+            for &ei in edges {
+                let e = &tree.edges[ei];
+                w += schema.node_types[tree.vertices[e.child].ty].count as u64;
+                w += g.rels[e.rel].num_edges() as u64;
+            }
+            w
+        })
+        .collect();
+
+    // Step 3: LPT (longest-processing-time-first) number partitioning.
+    let mut order: Vec<usize> = (0..subs.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(sub_weights[i]));
+    let mut sums = vec![0u64; num_parts];
+    let mut assignment = vec![0usize; subs.len()];
+    for &si in &order {
+        let (best, _) = sums
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &s)| s)
+            .expect("num_parts > 0");
+        assignment[si] = best;
+        sums[best] += sub_weights[si];
+    }
+
+    // Step 4: deduplicate relations within each partition.
+    let mut rels_per_part: Vec<Vec<RelId>> = vec![Vec::new(); num_parts];
+    for (si, sub) in subs.iter().enumerate() {
+        let part = assignment[si];
+        for &ei in sub {
+            let r = tree.edges[ei].rel;
+            if !rels_per_part[part].contains(&r) {
+                rels_per_part[part].push(r);
+            }
+        }
+    }
+    for rels in &mut rels_per_part {
+        rels.sort();
+    }
+
+    // If some partitions ended up empty (more machines than sub-metatrees),
+    // replicate the heaviest sub-metatrees into them (paper Discussions).
+    for part in 0..num_parts {
+        if rels_per_part[part].is_empty() && !subs.is_empty() {
+            let heaviest = order[part % subs.len()];
+            let mut rels: Vec<RelId> = subs[heaviest]
+                .iter()
+                .map(|&ei| tree.edges[ei].rel)
+                .collect();
+            rels.sort();
+            rels.dedup();
+            rels_per_part[part] = rels;
+        }
+    }
+
+    // Weight ownership for relations appearing in multiple partitions.
+    let mut rel_owner = vec![usize::MAX; schema.relations.len()];
+    for (part, rels) in rels_per_part.iter().enumerate() {
+        for &r in rels {
+            if rel_owner[r] == usize::MAX {
+                rel_owner[r] = part;
+            }
+        }
+    }
+
+    // Peak memory: metatree + sub-metatree bookkeeping only — the
+    // algorithm never touches per-node data (its O(|A|log|A| + |R|)
+    // advantage over METIS in Table 2).
+    let peak_mem_bytes = (tree.vertices.len() * 24
+        + tree.edges.len() * 24
+        + subs.iter().map(|s| s.len() * 8).sum::<usize>()
+        + rels_per_part.iter().map(|r| r.len() * 8).sum::<usize>())
+        as u64;
+
+    (
+        MetaPartition {
+            num_parts,
+            rels_per_part,
+            rel_owner,
+            assignment,
+            sub_weights,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            peak_mem_bytes,
+        },
+        tree,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, GenParams, Preset};
+    use crate::util::proptest;
+
+    fn mag() -> HetGraph {
+        generate(Preset::Mag, 1e-4, &GenParams::default())
+    }
+
+    #[test]
+    fn covers_all_relations() {
+        let g = mag();
+        let (mp, _) = meta_partition(&g, 2, 2, None);
+        let mut covered: Vec<RelId> = mp.rels_per_part.iter().flatten().copied().collect();
+        covered.sort();
+        covered.dedup();
+        // Every relation reachable in the 2-depth metatree is covered.
+        let tree = MetaTree::build(&g.schema, 2);
+        let mut reachable: Vec<RelId> = tree.edges.iter().map(|e| e.rel).collect();
+        reachable.sort();
+        reachable.dedup();
+        assert_eq!(covered, reachable);
+    }
+
+    #[test]
+    fn dedup_no_duplicate_relations_within_part() {
+        let g = mag();
+        let (mp, _) = meta_partition(&g, 2, 2, None);
+        for rels in &mp.rels_per_part {
+            let mut sorted = rels.clone();
+            sorted.dedup();
+            assert_eq!(&sorted, rels);
+        }
+    }
+
+    #[test]
+    fn lpt_balances_weights() {
+        let g = mag();
+        let (mp, _) = meta_partition(&g, 2, 2, None);
+        let loads: Vec<f64> = (0..2).map(|p| mp.part_load(&g, p) as f64).collect();
+        let imb = crate::util::stats::imbalance(&loads);
+        // LPT guarantees ≤ 4/3 OPT for number partitioning; with the mag
+        // schema's three sub-metatrees the loads stay within 2×.
+        assert!(imb < 2.0, "imbalance {imb} loads {loads:?}");
+    }
+
+    #[test]
+    fn more_parts_than_subtrees_replicates() {
+        let g = mag();
+        let (mp, _) = meta_partition(&g, 5, 2, None);
+        for p in 0..5 {
+            assert!(!mp.rels_per_part[p].is_empty(), "partition {p} empty");
+        }
+    }
+
+    #[test]
+    fn owner_is_unique_and_valid() {
+        let g = mag();
+        let (mp, tree) = meta_partition(&g, 3, 2, None);
+        let used: std::collections::HashSet<RelId> =
+            tree.edges.iter().map(|e| e.rel).collect();
+        for r in used {
+            let owner = mp.rel_owner[r];
+            assert!(owner < 3);
+            assert!(mp.rels_per_part[owner].contains(&r));
+        }
+    }
+
+    #[test]
+    fn metapath_partitioning_works() {
+        let g = mag();
+        // Two metapaths: paper<-writes-author and paper<-cites-paper.
+        let (mp, tree) = meta_partition(&g, 2, 2, Some(&[vec![0], vec![1]][..]));
+        assert_eq!(tree.children_of(0).len(), 2);
+        assert_eq!(mp.rels_per_part.iter().flatten().count(), 2);
+    }
+
+    #[test]
+    fn prop_every_subtree_assigned_and_loads_bounded() {
+        proptest::run("meta_partition_invariants", |rng, _case| {
+            let scale = 3e-5 + rng.f64() * 2e-4;
+            let parts = 2 + rng.below(4);
+            let preset = [Preset::Mag, Preset::Donor, Preset::Mag240m][rng.below(3)];
+            let g = generate(preset, scale, &GenParams { seed: rng.next_u64(), ..Default::default() });
+            let (mp, tree) = meta_partition(&g, parts, 2, None);
+            crate::prop_assert!(
+                mp.assignment.len() == tree.sub_metatrees().len(),
+                "assignment len mismatch"
+            );
+            crate::prop_assert!(
+                mp.assignment.iter().all(|&p| p < parts),
+                "invalid partition id"
+            );
+            // LPT bound: max load ≤ (4/3 + 1/p) × ideal when weights are
+            // the sub-metatree weights themselves.
+            let sums = {
+                let mut s = vec![0u64; parts];
+                for (si, &p) in mp.assignment.iter().enumerate() {
+                    s[p] += mp.sub_weights[si];
+                }
+                s
+            };
+            let total: u64 = mp.sub_weights.iter().sum();
+            let maxw = *mp.sub_weights.iter().max().unwrap_or(&0);
+            let bound = (total as f64 / parts as f64 * (4.0 / 3.0)).max(maxw as f64) + 1.0;
+            crate::prop_assert!(
+                *sums.iter().max().unwrap() as f64 <= bound,
+                "LPT bound violated: {sums:?} bound {bound}"
+            );
+            Ok(())
+        });
+    }
+}

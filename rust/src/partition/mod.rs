@@ -1,0 +1,116 @@
+//! Graph partitioning: Heta's meta-partitioning (paper §5, Algorithm 2)
+//! and the baselines it is compared against in Table 2 / Figs. 8–9 —
+//! random edge-cut (DGL-Random), a from-scratch METIS-like multilevel
+//! edge-cut partitioner (DGL-METIS), and GraphLearn-style per-type random
+//! partitioning. Also partition-quality metrics (cut edges, boundary
+//! nodes, balance) used by the Prop. 2/3 property tests.
+
+pub mod meta;
+pub mod edgecut;
+pub mod metis_like;
+pub mod quality;
+
+use crate::hetgraph::{HetGraph, RelId};
+
+/// An edge-cut partitioning: every node of every type is owned by exactly
+/// one partition. (Used by the vanilla execution model.)
+#[derive(Debug, Clone)]
+pub struct NodePartition {
+    pub num_parts: usize,
+    /// `owner[type][node]` = partition id.
+    pub owner: Vec<Vec<u8>>,
+    pub method: &'static str,
+    /// Wall-clock partitioning time (seconds).
+    pub elapsed_s: f64,
+    /// Approximate peak auxiliary memory used while partitioning (bytes),
+    /// for Table 2.
+    pub peak_mem_bytes: u64,
+}
+
+impl NodePartition {
+    #[inline]
+    pub fn owner_of(&self, ty: usize, node: u32) -> usize {
+        self.owner[ty][node as usize] as usize
+    }
+
+    /// Per-partition node counts (all types), for balance checks.
+    pub fn part_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.num_parts];
+        for tymap in &self.owner {
+            for &p in tymap {
+                sizes[p as usize] += 1;
+            }
+        }
+        sizes
+    }
+}
+
+/// A meta-partitioning: relations (mono-relation subgraphs) are assigned
+/// to partitions; every partition holds all target nodes (paper §5,
+/// Step 2) plus the nodes of the types its relations touch.
+#[derive(Debug, Clone)]
+pub struct MetaPartition {
+    pub num_parts: usize,
+    /// Deduplicated relations per partition (Algorithm 2, Step 4).
+    pub rels_per_part: Vec<Vec<RelId>>,
+    /// For relations present in several partitions (metagraph cycles),
+    /// the unique owner that applies optimizer updates to its weights.
+    pub rel_owner: Vec<usize>,
+    /// Sub-metatree → partition assignment (LPT), for inspection.
+    pub assignment: Vec<usize>,
+    /// Sub-metatree weights (sum of vertex+link weights, Algorithm 2 l.8).
+    pub sub_weights: Vec<u64>,
+    pub elapsed_s: f64,
+    pub peak_mem_bytes: u64,
+}
+
+impl MetaPartition {
+    /// Node types present in a partition (types touched by its relations,
+    /// plus the target type which every partition holds).
+    pub fn types_in_part(&self, g: &HetGraph, part: usize) -> Vec<usize> {
+        let mut present = vec![false; g.schema.node_types.len()];
+        present[g.schema.target] = true;
+        for &r in &self.rels_per_part[part] {
+            present[g.schema.relations[r].src] = true;
+            present[g.schema.relations[r].dst] = true;
+        }
+        (0..present.len()).filter(|&t| present[t]).collect()
+    }
+
+    /// Per-partition load = Σ (nodes of types present) + Σ (edges of
+    /// relations present); used for the balance property test.
+    pub fn part_load(&self, g: &HetGraph, part: usize) -> u64 {
+        let nodes: u64 = self
+            .types_in_part(g, part)
+            .iter()
+            .map(|&t| g.schema.node_types[t].count as u64)
+            .sum();
+        let edges: u64 = self.rels_per_part[part]
+            .iter()
+            .map(|&r| g.rels[r].num_edges() as u64)
+            .sum();
+        nodes + edges
+    }
+
+    /// Bytes needed to store a partition's topology (complete
+    /// mono-relation subgraphs) — Table 2 memory accounting.
+    pub fn part_topology_bytes(&self, g: &HetGraph, part: usize) -> u64 {
+        self.rels_per_part[part]
+            .iter()
+            .map(|&r| g.rels[r].mem_bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, GenParams, Preset};
+
+    #[test]
+    fn node_partition_sizes_sum() {
+        let g = generate(Preset::Mag, 1e-4, &GenParams::default());
+        let p = edgecut::random(&g, 4, 1);
+        assert_eq!(p.part_sizes().iter().sum::<usize>(), g.num_nodes());
+    }
+}

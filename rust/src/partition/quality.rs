@@ -1,0 +1,142 @@
+//! Partition-quality metrics: cross-partition edge cut, boundary-node
+//! counts, and balance — the quantities in the paper's communication
+//! analysis (Props. 2–3: `max_i |B(G_i)| ≤ E(G_1, G_2)`) and in the
+//! partitioning objective (Eq. 2).
+
+use std::collections::HashSet;
+
+use crate::hetgraph::HetGraph;
+
+use super::{MetaPartition, NodePartition};
+
+/// Number of edges whose endpoints live in different partitions
+/// (the vanilla execution model's communication driver).
+pub fn edge_cut(g: &HetGraph, p: &NodePartition) -> u64 {
+    let mut cut = 0u64;
+    for rel in &g.rels {
+        let (sty, dty) = {
+            let r = &g.schema.relations[rel.rel];
+            (r.src, r.dst)
+        };
+        for dst in 0..(rel.offsets.len() - 1) as u32 {
+            let dp = p.owner_of(dty, dst);
+            for &src in rel.neighbors(dst) {
+                if p.owner_of(sty, src) != dp {
+                    cut += 1;
+                }
+            }
+        }
+    }
+    cut
+}
+
+/// Boundary nodes per partition: nodes with at least one neighbor in a
+/// different partition (`B(G_i)` in the paper).
+pub fn boundary_nodes(g: &HetGraph, p: &NodePartition) -> Vec<u64> {
+    let mut boundary: Vec<HashSet<(usize, u32)>> = vec![HashSet::new(); p.num_parts];
+    for rel in &g.rels {
+        let (sty, dty) = {
+            let r = &g.schema.relations[rel.rel];
+            (r.src, r.dst)
+        };
+        for dst in 0..(rel.offsets.len() - 1) as u32 {
+            let dp = p.owner_of(dty, dst);
+            for &src in rel.neighbors(dst) {
+                let sp = p.owner_of(sty, src);
+                if sp != dp {
+                    boundary[sp].insert((sty, src));
+                    boundary[dp].insert((dty, dst));
+                }
+            }
+        }
+    }
+    boundary.iter().map(|b| b.len() as u64).collect()
+}
+
+/// Boundary nodes of a meta-partitioning: by construction confined to the
+/// target nodes — every partition holds all target nodes, and a target
+/// node is a boundary node iff some other partition computes partials for
+/// it (i.e. whenever there is more than one partition). Returns the
+/// per-partition bound (|targets|) actually attained.
+pub fn meta_boundary_nodes(g: &HetGraph, mp: &MetaPartition) -> Vec<u64> {
+    let targets = g.schema.node_types[g.schema.target].count as u64;
+    (0..mp.num_parts)
+        .map(|_| if mp.num_parts > 1 { targets } else { 0 })
+        .collect()
+}
+
+/// Balance (max/mean) of per-partition node counts.
+pub fn node_balance(p: &NodePartition) -> f64 {
+    let sizes: Vec<f64> = p.part_sizes().iter().map(|&s| s as f64).collect();
+    crate::util::stats::imbalance(&sizes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, GenParams, Preset};
+    use crate::partition::{edgecut, meta::meta_partition};
+    use crate::util::proptest;
+
+    fn graph(seed: u64) -> HetGraph {
+        generate(Preset::Mag, 8e-5, &GenParams { seed, ..Default::default() })
+    }
+
+    #[test]
+    fn prop3_boundary_le_cut() {
+        // Proposition 3: max_i |B(G_i)| ≤ E(G_1, G_2) for edge-cut
+        // partitions, across random graphs and partitioners.
+        proptest::run("prop3_boundary_le_cut", |rng, _| {
+            let g = graph(rng.next_u64());
+            let p = if rng.below(2) == 0 {
+                edgecut::random(&g, 2, rng.next_u64())
+            } else {
+                edgecut::by_type(&g, 2, rng.next_u64())
+            };
+            let cut = edge_cut(&g, &p);
+            let bounds = boundary_nodes(&g, &p);
+            let maxb = *bounds.iter().max().unwrap();
+            crate::prop_assert!(
+                maxb <= cut,
+                "Prop 3 violated: max|B|={maxb} > cut={cut}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn meta_boundary_bounded_by_targets() {
+        // §5 Step 2: boundary nodes of meta-partitioning are confined to
+        // target nodes — upper bound |V_target| for every partition.
+        let g = graph(3);
+        let (mp, _) = meta_partition(&g, 3, 2, None);
+        let targets = g.schema.node_types[g.schema.target].count as u64;
+        for b in meta_boundary_nodes(&g, &mp) {
+            assert!(b <= targets);
+        }
+    }
+
+    #[test]
+    fn meta_boundary_usually_below_edgecut_boundary() {
+        // The motivating comparison: with skewed multi-hop expansion the
+        // number of random-partition boundary nodes far exceeds the target
+        // count that bounds meta-partitioning.
+        let g = graph(4);
+        let p = edgecut::random(&g, 2, 9);
+        let rb = boundary_nodes(&g, &p);
+        let (mp, _) = meta_partition(&g, 2, 2, None);
+        let mb = meta_boundary_nodes(&g, &mp);
+        assert!(
+            mb.iter().max().unwrap() < rb.iter().max().unwrap(),
+            "meta {mb:?} vs random {rb:?}"
+        );
+    }
+
+    #[test]
+    fn edge_cut_zero_for_single_partition() {
+        let g = graph(5);
+        let p = edgecut::random(&g, 1, 1);
+        assert_eq!(edge_cut(&g, &p), 0);
+        assert_eq!(boundary_nodes(&g, &p), vec![0]);
+    }
+}

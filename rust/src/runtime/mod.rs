@@ -1,0 +1,305 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts, compile them
+//! on the CPU PJRT client (`xla` crate), and execute them from the
+//! training hot path. Also hosts the manifest parser (the Python-emitted
+//! input/output orderings) and the parameter store (deterministic
+//! name-keyed Glorot init + Adam state — both engines initialize the
+//! same weights, which is what makes the Prop. 1 equivalence test
+//! byte-meaningful).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::optim::{Adam, AdamParams};
+use crate::util::json::parse;
+use crate::util::rng::Rng;
+
+/// One artifact input slot (mirrors `InputSpec.to_json` in model.py).
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub kind: String,
+    pub shape: Vec<usize>,
+    pub name: String,
+    pub edge: i64,
+    pub layer: usize,
+    pub dtype: String,
+    pub init: String,
+}
+
+/// One artifact output slot.
+#[derive(Debug, Clone)]
+pub struct OutputSpec {
+    pub kind: String,
+    pub name: String,
+    pub edge: i64,
+    pub layer: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<OutputSpec>,
+}
+
+/// The manifest for one artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: String,
+    pub arch: String,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} (run `make artifacts`)"))?;
+        let j = parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        let mut artifacts = HashMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj().context("artifacts")? {
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(|s| InputSpec {
+                    kind: s.get("kind").as_str().unwrap_or("").to_string(),
+                    shape: s
+                        .get("shape")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    name: s.get("name").as_str().unwrap_or("").to_string(),
+                    edge: s.get("edge").as_f64().map(|v| v as i64).unwrap_or(-1),
+                    layer: s.get("layer").as_usize().unwrap_or(0),
+                    dtype: s.get("dtype").as_str().unwrap_or("f32").to_string(),
+                    init: s.get("init").as_str().unwrap_or("").to_string(),
+                })
+                .collect();
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(|s| OutputSpec {
+                    kind: s.get("kind").as_str().unwrap_or("").to_string(),
+                    name: s.get("name").as_str().unwrap_or("").to_string(),
+                    edge: s.get("edge").as_f64().map(|v| v as i64).unwrap_or(-1),
+                    layer: s.get("layer").as_usize().unwrap_or(0),
+                })
+                .collect();
+            artifacts.insert(name.clone(), ArtifactSpec { inputs, outputs });
+        }
+        Ok(Manifest {
+            config: j.get("config").as_str().unwrap_or("").to_string(),
+            arch: j.get("arch").as_str().unwrap_or("").to_string(),
+            artifacts,
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+}
+
+/// Compiled-executable registry over one artifact directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: String,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client and load the manifest; artifacts are
+    /// compiled lazily on first use (and cached).
+    pub fn load(dir: &str) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: HashMap::new(),
+            dir: dir.to_string(),
+        })
+    }
+
+    fn compile(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = format!("{}/{}.hlo.txt", self.dir, name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on a flat list of input literals; returns the
+    /// decomposed output tuple (artifacts are lowered with
+    /// `return_tuple=True`).
+    pub fn exec(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.compile(name)?;
+        let exe = self.exes.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Read an f32 literal back into a Vec (any shape).
+pub fn lit_to_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+}
+
+/// Read a scalar f32 output.
+pub fn lit_scalar(l: &xla::Literal) -> Result<f32> {
+    l.get_first_element::<f32>()
+        .map_err(|e| anyhow!("literal scalar: {e:?}"))
+}
+
+/// Name-keyed parameter store with deterministic init and per-tensor
+/// Adam state. Weight names are globally unique (the manifest guarantees
+/// it), so the RAF and vanilla engines construct identical parameters.
+pub struct ParamStore {
+    pub params: HashMap<String, Vec<f32>>,
+    pub shapes: HashMap<String, Vec<usize>>,
+    adam: HashMap<String, Adam>,
+    seed: u64,
+    hp: AdamParams,
+}
+
+impl ParamStore {
+    pub fn new(seed: u64, hp: AdamParams) -> ParamStore {
+        ParamStore {
+            params: HashMap::new(),
+            shapes: HashMap::new(),
+            adam: HashMap::new(),
+            seed,
+            hp,
+        }
+    }
+
+    fn name_seed(&self, name: &str) -> u64 {
+        let mut h = self.seed ^ 0xCBF2_9CE4_8422_2325;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01B3);
+        }
+        h
+    }
+
+    /// Get-or-init a parameter per its manifest spec (Glorot uniform).
+    pub fn ensure(&mut self, spec: &InputSpec) {
+        if self.params.contains_key(&spec.name) {
+            return;
+        }
+        let n: usize = spec.shape.iter().product();
+        let (fan_in, fan_out) = match spec.shape.len() {
+            2 => (spec.shape[0], spec.shape[1]),
+            1 => (spec.shape[0], spec.shape[0]),
+            _ => (n, n),
+        };
+        let a = (6.0 / (fan_in + fan_out) as f64).sqrt();
+        let mut rng = Rng::new(self.name_seed(&spec.name));
+        let data: Vec<f32> = (0..n).map(|_| ((rng.f64() * 2.0 - 1.0) * a) as f32).collect();
+        self.adam.insert(spec.name.clone(), Adam::new(n, self.hp));
+        self.shapes.insert(spec.name.clone(), spec.shape.clone());
+        self.params.insert(spec.name.clone(), data);
+    }
+
+    pub fn get(&self, name: &str) -> &Vec<f32> {
+        &self.params[name]
+    }
+
+    /// Apply one Adam step with the given gradient.
+    pub fn step(&mut self, name: &str, grad: &[f32]) {
+        let p = self.params.get_mut(name).expect("param exists");
+        self.adam.get_mut(name).expect("adam state").step(p, grad);
+    }
+
+    /// Total parameter elements (gradient-allreduce volume accounting).
+    pub fn total_elems(&self) -> usize {
+        self.params.values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wspec(name: &str, shape: Vec<usize>) -> InputSpec {
+        InputSpec {
+            kind: "weight".into(),
+            shape,
+            name: name.into(),
+            edge: -1,
+            layer: 0,
+            dtype: "f32".into(),
+            init: "glorot".into(),
+        }
+    }
+
+    #[test]
+    fn param_store_deterministic_by_name() {
+        let spec = wspec("W1_writes", vec![4, 8]);
+        let mut a = ParamStore::new(7, AdamParams::default());
+        let mut b = ParamStore::new(7, AdamParams::default());
+        a.ensure(&spec);
+        b.ensure(&spec);
+        assert_eq!(a.get("W1_writes"), b.get("W1_writes"));
+        let mut c = ParamStore::new(8, AdamParams::default());
+        c.ensure(&spec);
+        assert_ne!(a.get("W1_writes"), c.get("W1_writes"));
+    }
+
+    #[test]
+    fn glorot_bounds() {
+        let mut s = ParamStore::new(1, AdamParams::default());
+        s.ensure(&wspec("w", vec![10, 10]));
+        let a = (6.0f64 / 20.0).sqrt() as f32;
+        assert!(s.get("w").iter().all(|&x| x.abs() <= a));
+        assert!(s.get("w").iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn step_updates_parameters() {
+        let mut s = ParamStore::new(1, AdamParams::default());
+        s.ensure(&wspec("w", vec![4]));
+        let before = s.get("w").clone();
+        s.step("w", &[1.0, 1.0, 1.0, 1.0]);
+        assert_ne!(&before, s.get("w"));
+        assert_eq!(s.total_elems(), 4);
+    }
+}

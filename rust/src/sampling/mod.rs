@@ -1,0 +1,330 @@
+//! Neighbor sampling along the metatree.
+//!
+//! Both execution models compute the same HGNN over the same sampled
+//! aggregation tree (that is what makes Prop. 1's equivalence testable):
+//! for a minibatch of `B` target nodes, every metatree edge with fanout
+//! `K` samples up to `K` distinct in-neighbors per parent slot, producing
+//! **padded, fixed-shape blocks** (`[S_parent × K]` node ids plus a
+//! validity mask) — the static shapes the AOT-compiled HLO requires.
+//!
+//! Sampling is *per-slot deterministic*: the RNG for a given (edge,
+//! parent-slot, parent-node) triple is derived from the batch seed, so
+//! the RAF engine (each partition sampling only its own relations) and
+//! the vanilla engine (one worker sampling the full tree) reproduce
+//! byte-identical neighbor sets — the basis of the equivalence test.
+
+use crate::hetgraph::{HetGraph, MetaTree, NodeId};
+use crate::util::rng::Rng;
+
+/// Sentinel id marking a padded (invalid) slot.
+pub const PAD: NodeId = NodeId::MAX;
+
+/// The sampled tree for one minibatch: per metatree vertex, a padded id
+/// array (root = the batch itself); slot `i*K + j` of a child vertex is
+/// the j-th sampled neighbor of the parent's slot `i`.
+#[derive(Debug, Clone)]
+pub struct TreeSample {
+    /// Node ids per metatree vertex (padded with [`PAD`]).
+    pub ids: Vec<Vec<NodeId>>,
+    /// Fanout used at each metatree edge.
+    pub fanouts: Vec<usize>,
+}
+
+impl TreeSample {
+    /// Number of valid (non-pad) ids at a vertex.
+    pub fn valid_count(&self, vertex: usize) -> usize {
+        self.ids[vertex].iter().filter(|&&id| id != PAD).count()
+    }
+}
+
+/// Expected (padded) slot count per metatree vertex for batch size `b`.
+pub fn vertex_sizes(tree: &MetaTree, fanouts: &[usize], b: usize) -> Vec<usize> {
+    let mut sizes = vec![0usize; tree.vertices.len()];
+    sizes[0] = b;
+    // Vertices are in BFS order; parents precede children.
+    for e in &tree.edges {
+        let d = tree.vertices[e.parent].depth;
+        sizes[e.child] = sizes[e.parent] * fanouts[d];
+    }
+    sizes
+}
+
+#[inline]
+fn slot_rng(seed: u64, edge: usize, slot: usize, parent: NodeId) -> Rng {
+    let mut h = seed ^ 0xD6E8_FEB8_6659_FD93;
+    for v in [edge as u64 + 1, slot as u64 + 1, parent as u64 + 1] {
+        h ^= v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = h.rotate_left(29).wrapping_mul(0x94D0_49BB_1331_11EB);
+    }
+    Rng::new(h)
+}
+
+/// Sample the full tree (vanilla engine) or a filtered subset of tree
+/// edges (RAF engine: `edge_filter` keeps only the partition's edges;
+/// unsampled vertices stay fully padded). `seed` identifies the batch.
+///
+/// `root_offset` is the global index of `batch[0]` within the full
+/// minibatch: the per-slot RNG keys on *global* slot positions, so a
+/// data-parallel microbatch (vanilla engine, worker `w` sampling rows
+/// `[w·vb, (w+1)·vb)`) reproduces byte-identical neighbor sets to the
+/// RAF engine's full-batch sample — the substrate of the Prop. 1
+/// equivalence test.
+pub fn sample_tree(
+    g: &HetGraph,
+    tree: &MetaTree,
+    fanouts: &[usize],
+    batch: &[NodeId],
+    root_offset: usize,
+    seed: u64,
+    edge_filter: impl Fn(usize) -> bool,
+) -> TreeSample {
+    let sizes = vertex_sizes(tree, fanouts, batch.len());
+    let mut ids: Vec<Vec<NodeId>> = sizes.iter().map(|&s| vec![PAD; s]).collect();
+    ids[0][..batch.len()].copy_from_slice(batch);
+    // Global-slot multiplier per vertex: Π fanouts along the path.
+    let mult: Vec<usize> = sizes.iter().map(|&s| s / batch.len().max(1)).collect();
+
+    // BFS order: metatree edges are already ordered parent-before-child.
+    for (ei, e) in tree.edges.iter().enumerate() {
+        if !edge_filter(ei) {
+            continue;
+        }
+        let k = fanouts[tree.vertices[e.parent].depth];
+        let csr = g.csr(e.rel);
+        // Parent ids may themselves be padded (or unsampled for this
+        // partition — for RAF that cannot happen: meta-partitioning keeps
+        // a child and its descendants in one partition).
+        let parent_ids = ids[e.parent].clone();
+        let global_base = root_offset * mult[e.parent];
+        let child = &mut ids[e.child];
+        for (slot, &p) in parent_ids.iter().enumerate() {
+            if p == PAD {
+                continue;
+            }
+            let nbrs = csr.neighbors(p);
+            if nbrs.is_empty() {
+                continue;
+            }
+            let mut rng = slot_rng(seed, ei, global_base + slot, p);
+            let base = slot * k;
+            if nbrs.len() <= k {
+                for (j, &u) in nbrs.iter().enumerate() {
+                    child[base + j] = u;
+                }
+            } else {
+                for (j, idx) in rng.sample_distinct(nbrs.len(), k).into_iter().enumerate() {
+                    child[base + j] = nbrs[idx];
+                }
+            }
+        }
+    }
+    TreeSample {
+        ids,
+        fanouts: fanouts.to_vec(),
+    }
+}
+
+/// Pre-sampling hotness profiler (paper §6: sample for `epochs` epochs
+/// before training, recording per-node visit counts). Returns
+/// `counts[type][node]`.
+pub fn presample_hotness(
+    g: &HetGraph,
+    tree: &MetaTree,
+    fanouts: &[usize],
+    batch_size: usize,
+    epochs: usize,
+    seed: u64,
+) -> Vec<Vec<u32>> {
+    let mut counts: Vec<Vec<u32>> = g
+        .schema
+        .node_types
+        .iter()
+        .map(|t| vec![0u32; t.count])
+        .collect();
+    let mut train = g.train_nodes();
+    let mut rng = Rng::new(seed);
+    for epoch in 0..epochs {
+        rng.shuffle(&mut train);
+        for (bi, chunk) in train.chunks(batch_size).enumerate() {
+            let s = sample_tree(g, tree, fanouts, chunk, 0, seed ^ ((epoch * 131 + bi) as u64), |_| true);
+            for (v, vertex_ids) in s.ids.iter().enumerate() {
+                let ty = tree.vertices[v].ty;
+                for &id in vertex_ids {
+                    if id != PAD {
+                        counts[ty][id as usize] += 1;
+                    }
+                }
+            }
+        }
+    }
+    counts
+}
+
+/// Count sampled nodes that are *remote* under an edge-cut partition map,
+/// from the perspective of worker `me` — the vanilla engine's
+/// feature-fetching communication driver (paper §4's 92.3 MB example).
+pub fn remote_counts(
+    tree: &MetaTree,
+    sample: &TreeSample,
+    owner: &crate::partition::NodePartition,
+    me: usize,
+) -> RemoteStats {
+    let mut stats = RemoteStats::default();
+    for (v, vertex_ids) in sample.ids.iter().enumerate() {
+        let ty = tree.vertices[v].ty;
+        for &id in vertex_ids {
+            if id == PAD {
+                continue;
+            }
+            stats.total += 1;
+            if owner.owner_of(ty, id) != me {
+                stats.remote += 1;
+            }
+        }
+    }
+    stats
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RemoteStats {
+    pub total: u64,
+    pub remote: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, GenParams, Preset};
+    use crate::hetgraph::MetaTree;
+    use crate::util::proptest;
+
+    fn setup() -> (HetGraph, MetaTree) {
+        let g = generate(Preset::Mag, 1e-4, &GenParams::default());
+        let t = MetaTree::build(&g.schema, 2);
+        (g, t)
+    }
+
+    #[test]
+    fn vertex_sizes_multiply() {
+        let (_, t) = setup();
+        let sizes = vertex_sizes(&t, &[4, 3], 8);
+        assert_eq!(sizes[0], 8);
+        for e in &t.edges {
+            let d = t.vertices[e.parent].depth;
+            assert_eq!(sizes[e.child], sizes[e.parent] * [4, 3][d]);
+        }
+    }
+
+    #[test]
+    fn sampled_ids_are_real_neighbors() {
+        let (g, t) = setup();
+        let batch: Vec<NodeId> = (0..8).collect();
+        let s = sample_tree(&g, &t, &[4, 3], &batch, 0, 7, |_| true);
+        for (ei, e) in t.edges.iter().enumerate() {
+            let k = s.fanouts[t.vertices[e.parent].depth];
+            for (slot, &p) in s.ids[e.parent].iter().enumerate() {
+                let children = &s.ids[e.child][slot * k..(slot + 1) * k];
+                if p == PAD {
+                    assert!(children.iter().all(|&c| c == PAD), "edge {ei}");
+                } else {
+                    let nbrs = g.csr(e.rel).neighbors(p);
+                    for &c in children.iter().filter(|&&c| c != PAD) {
+                        assert!(nbrs.contains(&c), "edge {ei}: {c} not a neighbor of {p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_partition_consistent() {
+        // RAF (filtered) sampling must reproduce exactly the slots the
+        // full-tree sample produced for those edges — Prop. 1's substrate.
+        let (g, t) = setup();
+        let batch: Vec<NodeId> = (3..19).collect();
+        let full = sample_tree(&g, &t, &[4, 3], &batch, 0, 99, |_| true);
+        let keep = |ei: usize| ei % 2 == 0;
+        let part = sample_tree(&g, &t, &[4, 3], &batch, 0, 99, keep);
+        for (ei, e) in t.edges.iter().enumerate() {
+            if keep(ei) && keep_ancestors(&t, ei, &keep) {
+                assert_eq!(part.ids[e.child], full.ids[e.child], "edge {ei} diverged");
+            }
+        }
+    }
+
+    fn keep_ancestors(t: &MetaTree, ei: usize, keep: &impl Fn(usize) -> bool) -> bool {
+        // An edge's sample matches the full tree only if all ancestor
+        // edges were also sampled.
+        let mut v = t.edges[ei].parent;
+        while let Some(p) = t.vertices[v].parent {
+            let pe = t
+                .edges
+                .iter()
+                .position(|e| e.child == v)
+                .expect("parent edge");
+            if !keep(pe) {
+                return false;
+            }
+            v = p;
+        }
+        true
+    }
+
+    #[test]
+    fn no_duplicate_neighbors_per_slot() {
+        let (g, t) = setup();
+        let batch: Vec<NodeId> = (0..16).collect();
+        let s = sample_tree(&g, &t, &[4, 3], &batch, 0, 1, |_| true);
+        for e in &t.edges {
+            let k = s.fanouts[t.vertices[e.parent].depth];
+            for slot in 0..s.ids[e.parent].len() {
+                let chunk: Vec<_> = s.ids[e.child][slot * k..(slot + 1) * k]
+                    .iter()
+                    .filter(|&&c| c != PAD)
+                    .collect();
+                let set: std::collections::HashSet<_> = chunk.iter().collect();
+                assert_eq!(set.len(), chunk.len(), "duplicates in slot");
+            }
+        }
+    }
+
+    #[test]
+    fn presample_counts_are_populated_and_skewed() {
+        let (g, t) = setup();
+        let counts = presample_hotness(&g, &t, &[4, 3], 16, 1, 5);
+        assert_eq!(counts.len(), g.schema.node_types.len());
+        // Author type (Zipf sources) must show skew: max count >> median.
+        let mut author: Vec<u32> = counts[1].clone();
+        author.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(author[0] > 0);
+        assert!(author[0] >= 4 * author[author.len() / 2].max(1));
+    }
+
+    #[test]
+    fn prop_padded_slots_have_padded_subtrees() {
+        proptest::run("sampling_pad_closure", |rng, _| {
+            let g = generate(
+                Preset::Mag240m,
+                5e-5,
+                &GenParams { seed: rng.next_u64(), avg_degree: 3.0, ..Default::default() },
+            );
+            let t = MetaTree::build(&g.schema, 2);
+            let b = 4 + rng.below(12);
+            let batch: Vec<NodeId> = (0..b as u32).collect();
+            let s = sample_tree(&g, &t, &[3, 2], &batch, 0, rng.next_u64(), |_| true);
+            for e in &t.edges {
+                let k = s.fanouts[t.vertices[e.parent].depth];
+                for (slot, &p) in s.ids[e.parent].iter().enumerate() {
+                    if p == PAD {
+                        let child = &s.ids[e.child][slot * k..(slot + 1) * k];
+                        crate::prop_assert!(
+                            child.iter().all(|&c| c == PAD),
+                            "pad slot has sampled children"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

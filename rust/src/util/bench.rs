@@ -1,0 +1,169 @@
+//! Criterion-style benchmark harness (the `criterion` crate is
+//! unavailable offline). Bench targets are declared with
+//! `harness = false` in `Cargo.toml`; each is a plain binary that builds
+//! a [`Bench`] runner, registers closures, and prints a stable,
+//! greppable report. `cargo bench` therefore works end to end.
+
+use std::time::Instant;
+
+use super::stats::Samples;
+
+/// One benchmark measurement: warmup, then timed iterations with
+/// per-iteration samples.
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    min_iters: usize,
+    max_seconds: f64,
+    filter: Option<String>,
+}
+
+/// Result row of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub stddev_s: f64,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // `cargo bench -- <filter>` passes the filter as a positional arg.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        println!("== bench suite: {suite} ==");
+        Bench {
+            name: suite.to_string(),
+            warmup_iters: 3,
+            min_iters: 10,
+            max_seconds: 2.0,
+            filter,
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, min_iters: usize) -> Self {
+        self.warmup_iters = warmup;
+        self.min_iters = min_iters;
+        self
+    }
+
+    pub fn with_budget(mut self, seconds: f64) -> Self {
+        self.max_seconds = seconds;
+        self
+    }
+
+    /// Time `f`, which performs one full iteration per call. Returns the
+    /// result row (also printed).
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> Option<BenchResult> {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return None;
+            }
+        }
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Samples::new();
+        let start = Instant::now();
+        let mut iters = 0;
+        while iters < self.min_iters || start.elapsed().as_secs_f64() < self.max_seconds {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+            iters += 1;
+            if iters >= self.min_iters && start.elapsed().as_secs_f64() >= self.max_seconds {
+                break;
+            }
+            if iters >= 10_000 {
+                break;
+            }
+        }
+        let r = BenchResult {
+            name: format!("{}/{}", self.name, name),
+            iters,
+            mean_s: samples.mean(),
+            p50_s: samples.p50(),
+            stddev_s: samples.stddev(),
+        };
+        println!(
+            "bench {:<52} {:>10}/iter (p50 {:>10}, sd {:>9}, n={})",
+            r.name,
+            super::fmt_secs(r.mean_s),
+            super::fmt_secs(r.p50_s),
+            super::fmt_secs(r.stddev_s),
+            r.iters
+        );
+        Some(r)
+    }
+}
+
+/// Print a labelled metric row (for benches that report model-derived
+/// numbers — bytes, hit rates, simulated seconds — rather than wallclock).
+pub fn report(metric: &str, value: impl std::fmt::Display) {
+    println!("metric {metric:<58} {value}");
+}
+
+/// Print a table with a header; used by the figure/table reproduction
+/// benches so the output matches the paper's rows/series.
+pub fn table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n--- {title} ---");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Black-box hint to keep the optimizer from eliding benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bench::new("selftest").with_iters(1, 3).with_budget(0.01);
+        let r = b.run("noop", || {
+            black_box(1 + 1);
+        });
+        // The default-arg filter may swallow runs under `cargo test` only if
+        // a positional arg matches; in-test there is none matching "noop"
+        // unless no filter is present, in which case we must get a result.
+        if let Some(r) = r {
+            assert!(r.iters >= 3);
+            assert!(r.mean_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        table(
+            "t",
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+}

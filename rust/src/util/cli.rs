@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser: `--key value`, `--flag`, and positional
+//! arguments. Replaces `clap` (unavailable offline). Every binary in this
+//! repo (launcher, examples, benches) parses through this.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable). `--key=value` and
+    /// `--key value` are both accepted; `--flag` followed by another
+    /// option or nothing is a boolean flag.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let argv: Vec<String> = it.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    args.options
+                        .insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // Note: `--key value` is greedy, so boolean flags must use the
+        // trailing position or `--flag=`-free placement after positionals.
+        let a = parse(&["run", "--config", "x.json", "--parts=4", "data", "--verbose"]);
+        assert_eq!(a.positional, vec!["run", "data"]);
+        assert_eq!(a.get("config"), Some("x.json"));
+        assert_eq!(a.get_usize("parts", 1), 4);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_f64("r", 0.5), 0.5);
+        assert!(!a.has_flag("v"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--fast"]);
+        assert!(a.has_flag("fast"));
+    }
+}

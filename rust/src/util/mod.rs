@@ -1,0 +1,68 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is offline and the usual ecosystem crates
+//! (serde/serde_json, rand, clap, proptest, criterion) are unavailable, so
+//! this module provides purpose-built replacements: a JSON parser/emitter,
+//! a SplitMix64/xoshiro256++ PRNG with distribution helpers, summary
+//! statistics, a CLI flag parser, a property-testing harness, and a
+//! criterion-style benchmark harness (used by `cargo bench` through
+//! `harness = false` bench targets).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod cli;
+pub mod proptest;
+pub mod bench;
+
+/// Format a byte count with binary-prefix units (e.g. `1.50 MiB`).
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration given in seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 60.0 {
+        format!("{:.1} min", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(1536), "1.50 KiB");
+        assert_eq!(fmt_bytes(92_300_000), "88.02 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(120.0), "2.0 min");
+        assert_eq!(fmt_secs(1.5), "1.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_secs(5e-9), "5.0 ns");
+    }
+}

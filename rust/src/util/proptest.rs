@@ -1,0 +1,110 @@
+//! Property-testing harness (replacement for the unavailable `proptest`
+//! crate). Runs a property over many seeded random cases; on failure it
+//! reports the seed and case index so the exact input can be replayed
+//! deterministically. Coordinator invariants (routing, batching,
+//! partition properties) are checked through this.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // HETA_PROPTEST_CASES / HETA_PROPTEST_SEED allow widening or
+        // replaying runs without recompiling.
+        let cases = std::env::var("HETA_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("HETA_PROPTEST_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0x48455441); // "HETA"
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. The property receives a
+/// per-case RNG and the case index; it returns `Err(msg)` to fail.
+pub fn run_with(cfg: Config, name: &str, mut prop: impl FnMut(&mut Rng, usize) -> Result<(), String>) {
+    let mut master = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = master.fork(case as u64);
+        if let Err(msg) = prop(&mut case_rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} (seed={}, replay with \
+                 HETA_PROPTEST_SEED={} HETA_PROPTEST_CASES={}): {msg}",
+                cfg.seed,
+                cfg.seed,
+                case + 1
+            );
+        }
+    }
+}
+
+/// Run with the default configuration.
+pub fn run(name: &str, prop: impl FnMut(&mut Rng, usize) -> Result<(), String>) {
+    run_with(Config::default(), name, prop)
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_with(
+            Config { cases: 10, seed: 1 },
+            "count",
+            |_rng, _case| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        run_with(Config { cases: 5, seed: 2 }, "fails", |rng, _| {
+            let x = rng.below(10);
+            if x < 10 {
+                Err(format!("x={x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut first = Vec::new();
+        run_with(Config { cases: 5, seed: 3 }, "a", |rng, _| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        run_with(Config { cases: 5, seed: 3 }, "b", |rng, _| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

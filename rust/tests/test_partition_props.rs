@@ -1,0 +1,112 @@
+//! Integration property tests for the paper's partitioning propositions
+//! (Props. 2–3) and meta-partitioning invariants (§5), across datasets,
+//! partition counts and seeds.
+
+use heta::datagen::{generate, GenParams, Preset};
+use heta::partition::{edgecut, meta::meta_partition, metis_like, quality};
+use heta::util::proptest;
+
+#[test]
+fn prop3_max_boundary_le_cut_all_partitioners() {
+    proptest::run_with(
+        proptest::Config { cases: 24, seed: 0x1234 },
+        "prop3_all",
+        |rng, _| {
+            let preset = [Preset::Mag, Preset::Donor, Preset::Mag240m][rng.below(3)];
+            let g = generate(
+                preset,
+                6e-5,
+                &GenParams { seed: rng.next_u64(), ..Default::default() },
+            );
+            let k = 2 + rng.below(3);
+            let p = match rng.below(3) {
+                0 => edgecut::random(&g, k, rng.next_u64()),
+                1 => edgecut::by_type(&g, k, rng.next_u64()),
+                _ => metis_like::metis_like(&g, k, rng.next_u64()),
+            };
+            let cut = quality::edge_cut(&g, &p);
+            let bounds = quality::boundary_nodes(&g, &p);
+            heta::prop_assert!(
+                *bounds.iter().max().unwrap() <= cut.max(1),
+                "max|B|={} > cut={} ({})",
+                bounds.iter().max().unwrap(),
+                cut,
+                p.method
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn meta_partition_boundary_constant_in_fanout() {
+    // The §8.6 scalability/sampling claim: meta-partitioning's boundary
+    // set (= target nodes) does not grow with partitions or fanout.
+    let g = generate(Preset::Mag, 2e-4, &GenParams::default());
+    let targets = g.schema.node_types[g.schema.target].count as u64;
+    for parts in [2, 3, 4] {
+        let (mp, _) = meta_partition(&g, parts, 2, None);
+        let b = quality::meta_boundary_nodes(&g, &mp);
+        assert!(b.iter().all(|&x| x <= targets));
+    }
+}
+
+#[test]
+fn meta_partition_faster_than_metis_like() {
+    // Table 2's time ordering at equal input size.
+    let g = generate(Preset::Mag, 1e-3, &GenParams::default());
+    let t0 = std::time::Instant::now();
+    let (_, _) = meta_partition(&g, 2, 2, None);
+    let meta_t = t0.elapsed().as_secs_f64();
+    let p = metis_like::metis_like(&g, 2, 1);
+    assert!(
+        meta_t < p.elapsed_s,
+        "meta {meta_t}s should beat metis-like {}s",
+        p.elapsed_s
+    );
+}
+
+#[test]
+fn meta_partition_memory_below_edge_cut_methods() {
+    // Table 2's peak-memory ordering.
+    let g = generate(Preset::Mag, 5e-4, &GenParams::default());
+    let (mp, _) = meta_partition(&g, 2, 2, None);
+    let r = edgecut::random(&g, 2, 1);
+    let m = metis_like::metis_like(&g, 2, 1);
+    assert!(mp.peak_mem_bytes < r.peak_mem_bytes / 10);
+    assert!(mp.peak_mem_bytes < m.peak_mem_bytes / 10);
+}
+
+#[test]
+fn partition_cover_is_exact() {
+    proptest::run_with(
+        proptest::Config { cases: 16, seed: 0x777 },
+        "meta_cover",
+        |rng, _| {
+            let g = generate(
+                Preset::Donor,
+                8e-5,
+                &GenParams { seed: rng.next_u64(), ..Default::default() },
+            );
+            let parts = 2 + rng.below(4);
+            let (mp, tree) = meta_partition(&g, parts, 2, None);
+            // Every tree-reachable relation is in ≥1 partition; no
+            // partition holds duplicates.
+            let mut reach: Vec<usize> = tree.edges.iter().map(|e| e.rel).collect();
+            reach.sort();
+            reach.dedup();
+            for r in reach {
+                heta::prop_assert!(
+                    mp.rels_per_part.iter().any(|rs| rs.contains(&r)),
+                    "relation {r} uncovered"
+                );
+            }
+            for rs in &mp.rels_per_part {
+                let mut d = rs.clone();
+                d.dedup();
+                heta::prop_assert!(d.len() == rs.len(), "duplicate relations in partition");
+            }
+            Ok(())
+        },
+    );
+}
