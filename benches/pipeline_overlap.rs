@@ -1,0 +1,100 @@
+//! Sequential vs cluster-pipelined RAF epoch time on the `fig8_9`
+//! overall config. Reports the classic summed epoch time next to the
+//! overlap-aware critical path of the double-buffered cluster runtime,
+//! and emits a `BENCH_pipeline.json` entry with the overlap saving.
+//! The acceptance shape: the pipelined critical path is strictly lower
+//! than the sequential runtime's epoch time (sampling of batch i+1
+//! hides inside batch i's leader phase).
+
+use heta::config::{Config, RuntimeKind};
+use heta::coordinator::{Engine, Session, SystemKind};
+use heta::metrics::EpochReport;
+use heta::util::bench::{report, table};
+use heta::util::fmt_secs;
+use heta::util::json::Json;
+
+fn run(cfg: &Config, runtime: RuntimeKind, pipeline: bool) -> EpochReport {
+    let mut cfg = cfg.clone();
+    cfg.train.runtime = runtime;
+    cfg.train.pipeline = pipeline;
+    let dir = format!("artifacts/{}", cfg.name);
+    let mut sess = Session::new(&cfg, &dir)
+        .unwrap_or_else(|e| panic!("session for {}: {e} (run `make artifacts`)", cfg.name));
+    let mut engine = Engine::build(&sess, SystemKind::Heta).unwrap();
+    engine.run_epoch(&mut sess, 0).unwrap()
+}
+
+fn main() {
+    let cfg_name = "mag-bench";
+    if !std::path::Path::new(&format!("artifacts/{cfg_name}/manifest.json")).exists() {
+        println!("skipping pipeline_overlap: artifacts/{cfg_name} missing (run `make artifacts`)");
+        return;
+    }
+    let cfg = Config::load(&format!("configs/{cfg_name}.json"))
+        .unwrap_or_else(|e| panic!("loading config {cfg_name}: {e}"));
+
+    let seq = run(&cfg, RuntimeKind::Sequential, false);
+    let clu_nopipe = run(&cfg, RuntimeKind::Cluster, false);
+    let clu_pipe = run(&cfg, RuntimeKind::Cluster, true);
+
+    let rows = vec![
+        vec![
+            "sequential".to_string(),
+            fmt_secs(seq.epoch_time_s),
+            fmt_secs(seq.critical_path_s),
+            "1.00x".to_string(),
+        ],
+        vec![
+            "cluster/no-pipeline".to_string(),
+            fmt_secs(clu_nopipe.epoch_time_s),
+            fmt_secs(clu_nopipe.critical_path_s),
+            format!("{:.2}x", seq.critical_path_s / clu_nopipe.critical_path_s),
+        ],
+        vec![
+            "cluster/pipelined".to_string(),
+            fmt_secs(clu_pipe.epoch_time_s),
+            fmt_secs(clu_pipe.critical_path_s),
+            format!("{:.2}x", seq.critical_path_s / clu_pipe.critical_path_s),
+        ],
+    ];
+    table(
+        "Pipeline overlap: RAF epoch time, fig8_9 overall config",
+        &["runtime", "summed", "critical path", "speedup"],
+        &rows,
+    );
+
+    let saving = clu_pipe.epoch_time_s - clu_pipe.critical_path_s;
+    report("pipeline/overlap_saving_s", format!("{saving:.6}"));
+    report(
+        "pipeline/critical_path_below_sequential",
+        clu_pipe.critical_path_s < seq.critical_path_s,
+    );
+    assert_eq!(
+        seq.loss_mean, clu_pipe.loss_mean,
+        "runtimes must train identically"
+    );
+
+    let entry = Json::from_pairs(vec![
+        ("config", Json::str(cfg_name)),
+        ("engine", Json::str("raf")),
+        ("sequential_epoch_s", Json::num(seq.epoch_time_s)),
+        ("cluster_summed_s", Json::num(clu_pipe.epoch_time_s)),
+        ("cluster_critical_path_s", Json::num(clu_pipe.critical_path_s)),
+        (
+            "cluster_nopipeline_critical_path_s",
+            Json::num(clu_nopipe.critical_path_s),
+        ),
+        ("overlap_saving_s", Json::num(saving)),
+        (
+            "speedup_vs_sequential",
+            Json::num(seq.critical_path_s / clu_pipe.critical_path_s),
+        ),
+        (
+            "worker_busy_s",
+            Json::Arr(clu_pipe.worker_busy_s.iter().map(|&b| Json::num(b)).collect()),
+        ),
+    ]);
+    let out = Json::from_pairs(vec![("pipeline_overlap", entry)]).to_string();
+    std::fs::write("BENCH_pipeline.json", &out).expect("write BENCH_pipeline.json");
+    println!("wrote BENCH_pipeline.json");
+}

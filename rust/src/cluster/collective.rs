@@ -1,0 +1,216 @@
+//! Leader/worker collectives over the mailbox transport.
+//!
+//! [`star`] wires `n` worker ranks to one leader rank with a pair of
+//! typed meshes (one per direction). The leader's [`Hub`] gathers one
+//! contribution per worker — always reassembled in **worker-id order**,
+//! never arrival order, which is what keeps floating-point reductions
+//! byte-identical under arbitrary thread interleavings — and scatters
+//! or broadcasts responses. A `((), ())` star doubles as the
+//! leader/worker [`Hub::barrier`].
+//!
+//! Collectives move data only; the engines charge the modeled cost of
+//! each collective through [`crate::comm::SimNet`] with the same calls
+//! the sequential runtime makes (see the accounting contract in
+//! [`super::mailbox`]).
+
+use anyhow::{bail, ensure, Result};
+
+use super::mailbox::Mailbox;
+
+/// Leader endpoint of a star: receives `U`p messages, sends `D`own.
+pub struct Hub<U, D> {
+    up: Mailbox<U>,
+    down: Mailbox<D>,
+    workers: usize,
+}
+
+/// Worker endpoint of a star.
+pub struct Port<U, D> {
+    up: Mailbox<U>,
+    down: Mailbox<D>,
+    leader: usize,
+}
+
+/// Build a star of `workers` worker ranks plus one leader rank.
+pub fn star<U: Send, D: Send>(workers: usize) -> (Hub<U, D>, Vec<Port<U, D>>) {
+    let (up_hub, up_spokes) = Mailbox::<U>::star(workers);
+    let (down_hub, down_spokes) = Mailbox::<D>::star(workers);
+    let hub = Hub {
+        up: up_hub,
+        down: down_hub,
+        workers,
+    };
+    let ports = up_spokes
+        .into_iter()
+        .zip(down_spokes)
+        .map(|(u, d)| Port {
+            up: u,
+            down: d,
+            leader: workers,
+        })
+        .collect();
+    (hub, ports)
+}
+
+impl<U: Send, D: Send> Hub<U, D> {
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Collect exactly one contribution per worker, ordered by worker
+    /// id. Errors on a hung-up, out-of-range or duplicate sender.
+    pub fn gather(&self) -> Result<Vec<U>> {
+        let mut slots: Vec<Option<U>> = (0..self.workers).map(|_| None).collect();
+        for _ in 0..self.workers {
+            let e = self.up.recv()?;
+            ensure!(
+                e.from < self.workers,
+                "gather contribution from unexpected rank {}",
+                e.from
+            );
+            ensure!(
+                slots[e.from].is_none(),
+                "duplicate gather contribution from worker {}",
+                e.from
+            );
+            slots[e.from] = Some(e.payload);
+        }
+        let out: Vec<U> = slots.into_iter().flatten().collect();
+        ensure!(out.len() == self.workers, "gather lost contributions");
+        Ok(out)
+    }
+
+    /// Send `items[w]` to worker `w`.
+    pub fn scatter(&self, items: Vec<D>) -> Result<()> {
+        ensure!(
+            items.len() == self.workers,
+            "scatter of {} items across {} workers",
+            items.len(),
+            self.workers
+        );
+        for (w, item) in items.into_iter().enumerate() {
+            self.down.send(w, item)?;
+        }
+        Ok(())
+    }
+
+    /// Send a copy of `item` to every worker.
+    pub fn broadcast(&self, item: D) -> Result<()>
+    where
+        D: Clone,
+    {
+        for w in 0..self.workers {
+            self.down.send(w, item.clone())?;
+        }
+        Ok(())
+    }
+}
+
+impl<U: Send, D: Send> Port<U, D> {
+    pub fn id(&self) -> usize {
+        self.up.rank
+    }
+
+    /// Ship this worker's contribution to the leader.
+    pub fn send(&self, payload: U) -> Result<()> {
+        self.up.send(self.leader, payload)
+    }
+
+    /// Wait for the leader's scatter/broadcast item.
+    pub fn recv(&self) -> Result<D> {
+        let e = self.down.recv()?;
+        if e.from != self.leader {
+            bail!("worker {} received non-leader message from {}", self.id(), e.from);
+        }
+        Ok(e.payload)
+    }
+}
+
+impl Hub<(), ()> {
+    /// Leader half of the epoch barrier: wait for every worker, then
+    /// release them all.
+    pub fn barrier(&self) -> Result<()> {
+        self.gather()?;
+        self.broadcast(())
+    }
+}
+
+impl Port<(), ()> {
+    /// Worker half of the epoch barrier.
+    pub fn barrier(&self) -> Result<()> {
+        self.send(())?;
+        self.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_orders_by_worker_id() {
+        let (hub, ports) = star::<usize, usize>(4);
+        let handles: Vec<_> = ports
+            .into_iter()
+            .map(|p| {
+                std::thread::spawn(move || -> Result<()> {
+                    // Stagger sends so arrival order != worker order.
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        (7 * (4 - p.id())) as u64,
+                    ));
+                    p.send(p.id() * 10)?;
+                    let back = p.recv()?;
+                    assert_eq!(back, p.id() + 100);
+                    Ok(())
+                })
+            })
+            .collect();
+        let got = hub.gather().unwrap();
+        assert_eq!(got, vec![0, 10, 20, 30]);
+        hub.scatter(vec![100, 101, 102, 103]).unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn barrier_releases_all_workers() {
+        let (hub, ports) = star::<(), ()>(3);
+        let handles: Vec<_> = ports
+            .into_iter()
+            .map(|p| std::thread::spawn(move || p.barrier()))
+            .collect();
+        hub.barrier().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn dead_worker_surfaces_as_error() {
+        let (hub, mut ports) = star::<u32, u32>(2);
+        let p1 = ports.pop().unwrap();
+        let p0 = ports.pop().unwrap();
+        p0.send(5).unwrap();
+        drop(p1); // worker 1 dies before contributing
+        drop(p0);
+        assert!(hub.gather().is_err());
+    }
+
+    #[test]
+    fn dead_leader_unblocks_workers() {
+        let (hub, ports) = star::<u32, u32>(1);
+        drop(hub);
+        assert!(ports[0].recv().is_err());
+        assert!(ports[0].send(1).is_err());
+    }
+
+    #[test]
+    fn broadcast_reaches_everyone() {
+        let (hub, ports) = star::<u32, String>(2);
+        hub.broadcast("go".to_string()).unwrap();
+        for p in &ports {
+            assert_eq!(p.recv().unwrap(), "go");
+        }
+    }
+}

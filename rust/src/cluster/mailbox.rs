@@ -1,0 +1,179 @@
+//! Typed mailbox transport between cluster ranks.
+//!
+//! A [`Mailbox`] is one rank's endpoint in a full mesh of in-process
+//! channels: it can `send` a typed message to any peer rank and `recv`
+//! the next [`Envelope`] addressed to it. Envelopes carry the sender's
+//! rank so collectives can reassemble results in deterministic worker
+//! order regardless of thread interleaving.
+//!
+//! Transport errors (a peer thread exited and dropped its endpoint)
+//! surface as `anyhow::Result` — never panics — so one failed worker
+//! unwinds the whole epoch as an error instead of a poisoned mutex.
+//!
+//! Accounting contract: the mailbox moves data; it does not price it.
+//! The engines charge every transfer of the *modeled* system through
+//! [`crate::comm::SimNet`] at the collective boundaries with exactly
+//! the same calls the sequential runtime makes, so ledger bytes stay
+//! exact and runtime-independent. (Control metadata like `Ready`
+//! messages and the shipping of model-parallel gradients that the
+//! modeled system applies locally are free, as in the sequential
+//! engines.)
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+/// Wire-size of a message: the bytes the modeled system would put on
+/// the network for it (tensor payloads only; metadata is free).
+pub trait Wire {
+    fn wire_bytes(&self) -> u64;
+}
+
+/// Bytes of a dense slice payload.
+pub fn slice_bytes<T>(v: &[T]) -> u64 {
+    std::mem::size_of_val(v) as u64
+}
+
+/// A message in flight, tagged with its sender rank.
+#[derive(Debug)]
+pub struct Envelope<T> {
+    pub from: usize,
+    pub payload: T,
+}
+
+/// One rank's endpoint of the mesh.
+///
+/// The slot for the rank's own sender is intentionally empty: holding a
+/// sender to oneself would keep one's receiver alive forever, so a rank
+/// waiting on peers that all exited would block instead of erroring.
+pub struct Mailbox<T> {
+    pub rank: usize,
+    rx: Receiver<Envelope<T>>,
+    peers: Vec<Option<Sender<Envelope<T>>>>,
+}
+
+impl<T: Send> Mailbox<T> {
+    /// Build a full mesh of `n` ranks; returns one mailbox per rank.
+    pub fn mesh(n: usize) -> Vec<Mailbox<T>> {
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| channel::<Envelope<T>>()).unzip();
+        rxs.into_iter()
+            .enumerate()
+            .map(|(rank, rx)| Mailbox {
+                rank,
+                rx,
+                peers: txs
+                    .iter()
+                    .enumerate()
+                    .map(|(to, tx)| (to != rank).then(|| tx.clone()))
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Build a hub-and-spoke wiring: rank `workers` is the hub, wired
+    /// to and from every spoke; spokes are wired only to the hub. A
+    /// spoke's receiver is reachable solely from the hub (and vice
+    /// versa), so the death of one side disconnects the other instead
+    /// of leaving it blocked on a queue kept alive by third parties —
+    /// the property the collectives rely on for error propagation.
+    pub fn star(workers: usize) -> (Mailbox<T>, Vec<Mailbox<T>>) {
+        let n = workers + 1;
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| channel::<Envelope<T>>()).unzip();
+        let mut rxs = rxs.into_iter();
+        let spokes: Vec<Mailbox<T>> = (0..workers)
+            .map(|rank| Mailbox {
+                rank,
+                rx: rxs.next().expect("one receiver per rank"),
+                peers: (0..n)
+                    .map(|to| (to == workers).then(|| txs[to].clone()))
+                    .collect(),
+            })
+            .collect();
+        let hub = Mailbox {
+            rank: workers,
+            rx: rxs.next().expect("one receiver per rank"),
+            peers: (0..n)
+                .map(|to| (to < workers).then(|| txs[to].clone()))
+                .collect(),
+        };
+        (hub, spokes)
+    }
+
+    /// Number of ranks in the mesh.
+    pub fn ranks(&self) -> usize {
+        self.peers.len()
+    }
+
+    /// Send `payload` to rank `to` (sending to oneself is an error).
+    pub fn send(&self, to: usize, payload: T) -> Result<()> {
+        let tx = self
+            .peers
+            .get(to)
+            .ok_or_else(|| anyhow!("rank {to} outside {}-rank mesh", self.peers.len()))?
+            .as_ref()
+            .ok_or_else(|| anyhow!("rank {to} cannot mail itself"))?;
+        tx.send(Envelope {
+            from: self.rank,
+            payload,
+        })
+        .map_err(|_| anyhow!("rank {to} hung up (worker thread exited early)"))
+    }
+
+    /// Receive the next message addressed to this rank, blocking.
+    pub fn recv(&self) -> Result<Envelope<T>> {
+        self.rx.recv().map_err(|_| {
+            anyhow!(
+                "all peers of rank {} hung up (cluster tore down mid-epoch)",
+                self.rank
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_routes_by_rank() {
+        let mut boxes = Mailbox::<u32>::mesh(3);
+        let c = boxes.pop().unwrap();
+        let b = boxes.pop().unwrap();
+        let a = boxes.pop().unwrap();
+        a.send(2, 7).unwrap();
+        b.send(2, 8).unwrap();
+        let mut got = vec![c.recv().unwrap(), c.recv().unwrap()];
+        got.sort_by_key(|e| e.from);
+        assert_eq!((got[0].from, got[0].payload), (0, 7));
+        assert_eq!((got[1].from, got[1].payload), (1, 8));
+        assert!(a.send(9, 0).is_err());
+    }
+
+    #[test]
+    fn hangup_is_an_error_not_a_panic() {
+        let mut boxes = Mailbox::<u32>::mesh(2);
+        let b = boxes.pop().unwrap();
+        let a = boxes.pop().unwrap();
+        drop(b);
+        // `a`'s own sender into the mesh keeps its queue alive, but the
+        // dropped peer can no longer be sent to once its receiver died.
+        assert!(a.send(1, 1).is_err());
+    }
+
+    #[test]
+    fn threads_exchange_through_the_mesh() {
+        let mut boxes = Mailbox::<Vec<f32>>::mesh(2);
+        let worker = boxes.pop().unwrap();
+        let leader = boxes.pop().unwrap();
+        let t = std::thread::spawn(move || -> Result<()> {
+            let e = worker.recv()?;
+            worker.send(0, e.payload.iter().map(|x| x * 2.0).collect())?;
+            Ok(())
+        });
+        leader.send(1, vec![1.0, 2.0]).unwrap();
+        let back = leader.recv().unwrap();
+        assert_eq!(back.payload, vec![2.0, 4.0]);
+        t.join().unwrap().unwrap();
+        assert_eq!(slice_bytes(&[0f32; 4]), 16);
+    }
+}

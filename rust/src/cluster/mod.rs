@@ -1,0 +1,70 @@
+//! The cluster runtime: thread-per-partition workers with pipelined
+//! minibatch execution.
+//!
+//! The sequential coordinator engines play every "worker" in one thread,
+//! so epoch time is the *sum* of per-worker stage times. This subsystem
+//! gives each partition a real OS-thread worker:
+//!
+//! * [`mailbox`] — typed mailbox transport between ranks (mesh or
+//!   hub-and-spoke), with hangup-as-error semantics so one failed
+//!   worker unwinds the epoch as `anyhow::Error`.
+//! * [`collective`] — leader/worker barrier plus gather/scatter/
+//!   broadcast built over the mailboxes. Gathers reassemble in worker-id
+//!   order, never arrival order, which keeps every floating-point
+//!   reduction byte-identical under arbitrary thread interleavings —
+//!   the cluster runtime reproduces the sequential runtime's sampled
+//!   trees, losses and parameter trajectories exactly (Prop. 1 still
+//!   holds; `tests/test_cluster_determinism.rs` checks it).
+//! * [`raf`] / [`vanilla`] — the two coordinator engines ported onto
+//!   the runtime. Per batch, workers sample and fetch concurrently,
+//!   ship partials/gradients through the collectives, and the leader
+//!   reduces, steps and updates. The double-buffered pipeline prefetches
+//!   batch `i+1`'s sampling (and models read-only cache fetch ahead)
+//!   while batch `i` sits in the leader phase, which is where the
+//!   critical-path win over the sequential runtime comes from (see
+//!   [`crate::metrics::timeline`]).
+//!
+//! Every transfer of the *modeled* system is still charged through
+//! [`crate::comm::CostModel`] ledgers with the same calls the
+//! sequential engines make, so reported communication bytes are exact
+//! and runtime-independent. Select the runtime with the
+//! `train.runtime` config flag (`"sequential"` | `"cluster"`); the
+//! `train.pipeline` flag isolates the double-buffering for A/B runs.
+
+pub mod collective;
+pub mod mailbox;
+pub mod raf;
+pub mod vanilla;
+
+use std::sync::{Mutex, MutexGuard};
+
+use anyhow::{anyhow, Result};
+
+/// Lock a mutex, converting poisoning (a panic on another thread) into
+/// an `anyhow` error instead of propagating the panic.
+pub fn lock<'a, T>(m: &'a Mutex<T>, what: &str) -> Result<MutexGuard<'a, T>> {
+    m.lock()
+        .map_err(|_| anyhow!("{what} mutex poisoned by a failed worker thread"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_reports_poison_as_error() {
+        let m = std::sync::Arc::new(Mutex::new(1u32));
+        {
+            let g = lock(&m, "counter").unwrap();
+            assert_eq!(*g, 1);
+        }
+        let m2 = std::sync::Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let e = lock(&m, "counter").unwrap_err();
+        assert!(e.to_string().contains("counter"));
+    }
+}

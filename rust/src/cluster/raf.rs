@@ -1,0 +1,652 @@
+//! The RAF engine on the cluster runtime.
+//!
+//! One OS thread per partition; the calling thread is the leader. Per
+//! batch: workers sample their own relations and execute `worker_fwd`
+//! concurrently (artifact execution serializes on the shared-session
+//! mutex — one CPU PJRT client — but sampling runs lock-free), the
+//! leader gathers partials in worker order, runs the `leader` artifact,
+//! scatters `∂partials`, gathers worker gradients in worker order and
+//! applies all updates. With `train.pipeline` on, each worker prefetches
+//! batch `i+1`'s sample right after shipping its batch-`i` partials, so
+//! prefetch work hides inside the leader phase — the double-buffered
+//! schedule priced by [`crate::metrics::timeline`].
+//!
+//! Every floating-point reduction folds in (worker, output) order —
+//! exactly the order the sequential engine uses — so losses and
+//! parameter trajectories are byte-identical to the sequential runtime
+//! under any thread interleaving.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cache::FeatureCache;
+use crate::comm::SimNet;
+use crate::config::{partition_edge_filter, Config};
+use crate::coordinator::common::{
+    add_assign, apply_learnable_grads, build_inputs, ExtraInputs, Session,
+};
+use crate::hetgraph::{HetGraph, MetaTree, NodeId};
+use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WorkerSpan};
+use crate::metrics::{EpochReport, Stage, StageTimes};
+use crate::partition::MetaPartition;
+use crate::sampling::{sample_tree, TreeSample, PAD};
+use crate::util::rng::Rng;
+
+use super::collective::{star, Hub, Port};
+use super::lock;
+use super::mailbox::{slice_bytes, Wire};
+
+/// Worker → leader messages.
+enum Up {
+    Fwd {
+        p1: Vec<f32>,
+        p2: Vec<f32>,
+        span: WorkerSpan,
+        stages: StageTimes,
+    },
+    Bwd {
+        /// One entry per `wgrad` output, unmerged — the leader folds
+        /// them in (worker, output) order to match the sequential
+        /// engine's float-accumulation order exactly.
+        wgrads: Vec<(String, Vec<f32>)>,
+        /// `(src_ty, sampled ids, grads)` per `block_grad` output.
+        row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)>,
+        /// One entry per `target_feat_grad` output, unmerged.
+        gx: Vec<Vec<f32>>,
+        bwd_s: f64,
+        stages: StageTimes,
+    },
+    /// Best-effort death notice: without it, a leader gathering from a
+    /// dead worker would block forever while live workers keep the
+    /// channel connected.
+    Failed(String),
+}
+
+impl Wire for Up {
+    fn wire_bytes(&self) -> u64 {
+        match self {
+            // The 2·[B,H] forward partials per worker (Props. 2–3).
+            Up::Fwd { p1, p2, .. } => slice_bytes(p1) + slice_bytes(p2),
+            // Model-parallel weight/row grads are applied locally by
+            // their owning partition in the modeled system; shipping
+            // them to the shared session is an in-process artifact, not
+            // wire traffic. Replica sync is charged separately, exactly
+            // as in the sequential engine.
+            Up::Bwd { .. } => 0,
+            Up::Failed(_) => 0,
+        }
+    }
+}
+
+/// Leader → worker messages.
+#[derive(Clone)]
+enum Down {
+    Grads { g1: Vec<f32>, g2: Vec<f32> },
+    Ready,
+}
+
+impl Wire for Down {
+    fn wire_bytes(&self) -> u64 {
+        match self {
+            // The 2·[B,H] backward partial-gradients per worker.
+            Down::Grads { g1, g2 } => slice_bytes(g1) + slice_bytes(g2),
+            Down::Ready => 0,
+        }
+    }
+}
+
+/// Run one RAF epoch on the cluster runtime.
+pub fn run_epoch(
+    mp: &MetaPartition,
+    caches: &mut [FeatureCache],
+    replica_count: &HashMap<String, usize>,
+    leader_part: usize,
+    sess: &mut Session,
+    epoch: usize,
+) -> Result<EpochReport> {
+    let cfg = sess.cfg.clone();
+    let parts = mp.num_parts;
+    let gpus = cfg.train.gpus_per_machine.max(1);
+    let pipeline = cfg.train.pipeline;
+    let g = Arc::clone(&sess.g);
+    let tree = Arc::clone(&sess.tree);
+
+    let mut train = sess.g.train_nodes();
+    let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
+    shuffle_rng.shuffle(&mut train);
+    let b = cfg.train.batch_size;
+    let batches: Vec<Vec<NodeId>> = train
+        .chunks(b)
+        .filter(|c| c.len() == b) // drop the ragged tail (static shapes)
+        .map(|c| c.to_vec())
+        .collect();
+
+    let cache_mx: Vec<Mutex<&mut FeatureCache>> = caches.iter_mut().map(Mutex::new).collect();
+    let sess_mx = Mutex::new(sess);
+    let (hub, ports) = star::<Up, Down>(parts);
+    let (bhub, bports) = star::<(), ()>(parts);
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(parts);
+        for ((p, port), bport) in ports.into_iter().enumerate().zip(bports) {
+            let cfg = &cfg;
+            let g = &g;
+            let tree = &tree;
+            let batches = &batches;
+            let sess_mx = &sess_mx;
+            let cache = &cache_mx[p];
+            handles.push(s.spawn(move || {
+                worker_loop(
+                    p, gpus, cfg, epoch, batches, g, tree, mp, sess_mx, cache, &port, &bport,
+                    pipeline,
+                )
+            }));
+        }
+        let led = leader_loop(
+            hub,
+            bhub,
+            &cfg,
+            parts,
+            leader_part,
+            replica_count,
+            &batches,
+            &sess_mx,
+            &cache_mx,
+            pipeline,
+        );
+        let mut worker_err: Option<anyhow::Error> = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if worker_err.is_none() {
+                        worker_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if worker_err.is_none() {
+                        worker_err = Some(anyhow!("worker thread panicked"));
+                    }
+                }
+            }
+        }
+        // The leader's error already embeds worker root causes (via
+        // `Up::Failed`), so it wins; worker errors cover the remainder.
+        match (led, worker_err) {
+            (Ok(rep), None) => Ok(rep),
+            (Err(e), _) => Err(e),
+            (Ok(_), Some(we)) => Err(we),
+        }
+    })
+}
+
+/// Runs the worker body; on error, ships a best-effort death notice so
+/// the leader's gather fails fast instead of blocking on a dead peer.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    p: usize,
+    gpus: usize,
+    cfg: &Config,
+    epoch: usize,
+    batches: &[Vec<NodeId>],
+    g: &Arc<HetGraph>,
+    tree: &Arc<MetaTree>,
+    mp: &MetaPartition,
+    sess_mx: &Mutex<&mut Session>,
+    cache_mx: &Mutex<&mut FeatureCache>,
+    port: &Port<Up, Down>,
+    bport: &Port<(), ()>,
+    pipeline: bool,
+) -> Result<()> {
+    // Contain panics too: a panicked worker that never notified the
+    // leader would leave the gather blocked while live peers keep the
+    // channel connected.
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        worker_run(
+            p, gpus, cfg, epoch, batches, g, tree, mp, sess_mx, cache_mx, port, bport, pipeline,
+        )
+    }));
+    let r = caught.unwrap_or_else(|_| Err(anyhow!("worker {p} panicked")));
+    if let Err(e) = &r {
+        let _ = port.send(Up::Failed(format!("{e:#}")));
+    }
+    r
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_run(
+    p: usize,
+    gpus: usize,
+    cfg: &Config,
+    epoch: usize,
+    batches: &[Vec<NodeId>],
+    g: &Arc<HetGraph>,
+    tree: &Arc<MetaTree>,
+    mp: &MetaPartition,
+    sess_mx: &Mutex<&mut Session>,
+    cache_mx: &Mutex<&mut FeatureCache>,
+    port: &Port<Up, Down>,
+    bport: &Port<(), ()>,
+    pipeline: bool,
+) -> Result<()> {
+    bport.barrier()?;
+    let scale = cfg.cost.compute_scale;
+    // Per-partition artifact specs are constant across batches: clone
+    // them once instead of per batch inside the serialized section.
+    let art = format!("worker_fwd_p{p}");
+    let art_b = format!("worker_bwd_p{p}");
+    let (spec_f, spec_b) = {
+        let guard = lock(sess_mx, "session")?;
+        (
+            guard.rt.manifest.spec(&art)?.clone(),
+            guard.rt.manifest.spec(&art_b)?.clone(),
+        )
+    };
+    let mut prefetched: Option<(TreeSample, f64)> = None;
+
+    for (bi, chunk) in batches.iter().enumerate() {
+        if bi > 0 {
+            // Batch i's forward needs batch i-1's updated weights.
+            match port.recv()? {
+                Down::Ready => {}
+                Down::Grads { .. } => bail!("worker {p}: gradients arrived before Ready"),
+            }
+        }
+        let (sample, sample_s) = match prefetched.take() {
+            Some(s) => s,
+            None => {
+                let t0 = Instant::now();
+                let filter = partition_edge_filter(tree, mp, p);
+                let s = sample_tree(
+                    g,
+                    tree,
+                    &cfg.model.fanouts,
+                    chunk,
+                    0,
+                    cfg.train.batch_seed(epoch, bi),
+                    filter,
+                );
+                (s, t0.elapsed().as_secs_f64() * scale)
+            }
+        };
+
+        // ---- forward: marshal + execute under the session lock ----
+        let (p1, p2, span) = {
+            let mut guard = lock(sess_mx, "session")?;
+            let sess: &mut Session = &mut **guard;
+            let t1 = Instant::now();
+            let extra = ExtraInputs::new();
+            let mut cguard = lock(cache_mx, "cache")?;
+            let (lits, acc) = build_inputs(
+                sess,
+                &spec_f,
+                Some(&sample),
+                chunk,
+                &extra,
+                &|_, _| false, // meta-partitioning: all fetches local
+                Some(&mut **cguard),
+                p % gpus,
+            )?;
+            drop(cguard);
+            let copy_s = t1.elapsed().as_secs_f64() * scale;
+            let t2 = Instant::now();
+            let outs = sess.rt.exec(&art, &lits)?;
+            let fwd_s = t2.elapsed().as_secs_f64() * scale / gpus as f64;
+            let p1 = crate::runtime::lit_to_vec(
+                outs.first().ok_or_else(|| anyhow!("{art}: no outputs"))?,
+            )?;
+            let p2 = crate::runtime::lit_to_vec(
+                outs.get(1).ok_or_else(|| anyhow!("{art}: missing output 1"))?,
+            )?;
+            let span = WorkerSpan {
+                sample_s,
+                fetch_ro_s: acc.cache_time_ro_s,
+                fetch_lr_s: acc.cache_time_s - acc.cache_time_ro_s,
+                copy_s,
+                fwd_s,
+                bwd_s: 0.0,
+            };
+            (p1, p2, span)
+        };
+        let mut stages = StageTimes::default();
+        stages.add(Stage::Sample, span.sample_s);
+        stages.add(Stage::Copy, span.copy_s);
+        stages.add(Stage::Fetch, span.fetch_ro_s + span.fetch_lr_s);
+        stages.add(Stage::Forward, span.fwd_s);
+        port.send(Up::Fwd {
+            p1,
+            p2,
+            span,
+            stages,
+        })?;
+
+        // ---- double-buffer: prefetch batch i+1 during the leader phase ----
+        if pipeline && bi + 1 < batches.len() {
+            let t = Instant::now();
+            let filter = partition_edge_filter(tree, mp, p);
+            let s = sample_tree(
+                g,
+                tree,
+                &cfg.model.fanouts,
+                &batches[bi + 1],
+                0,
+                cfg.train.batch_seed(epoch, bi + 1),
+                filter,
+            );
+            prefetched = Some((s, t.elapsed().as_secs_f64() * scale));
+        }
+
+        // ---- backward ----
+        let (g1, g2) = match port.recv()? {
+            Down::Grads { g1, g2 } => (g1, g2),
+            Down::Ready => bail!("worker {p}: Ready arrived before gradients"),
+        };
+        let (wgrads, row_grads, gx, bwd_s) = {
+            let mut guard = lock(sess_mx, "session")?;
+            let sess: &mut Session = &mut **guard;
+            let mut extra = ExtraInputs::new();
+            extra.insert(("grad".into(), 1), g1);
+            extra.insert(("grad".into(), 2), g2);
+            let t5 = Instant::now();
+            let (lits, _) = build_inputs(
+                sess,
+                &spec_b,
+                Some(&sample),
+                chunk,
+                &extra,
+                &|_, _| false,
+                None, // rows already resident from forward
+                p % gpus,
+            )?;
+            let outs = sess.rt.exec(&art_b, &lits)?;
+            let bwd_s = t5.elapsed().as_secs_f64() * scale / gpus as f64;
+            let mut wgrads: Vec<(String, Vec<f32>)> = Vec::new();
+            let mut row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)> = Vec::new();
+            let mut gx: Vec<Vec<f32>> = Vec::new();
+            for (o, out) in spec_b.outputs.iter().zip(&outs) {
+                match o.kind.as_str() {
+                    "wgrad" => {
+                        wgrads.push((o.name.clone(), crate::runtime::lit_to_vec(out)?));
+                    }
+                    "block_grad" => {
+                        let (child, src_ty) = sess.edge_child(o.edge as usize);
+                        row_grads.push((
+                            src_ty,
+                            sample.ids[child].clone(),
+                            crate::runtime::lit_to_vec(out)?,
+                        ));
+                    }
+                    "target_feat_grad" => {
+                        gx.push(crate::runtime::lit_to_vec(out)?);
+                    }
+                    _ => {}
+                }
+            }
+            (wgrads, row_grads, gx, bwd_s)
+        };
+        let mut bstages = StageTimes::default();
+        bstages.add(Stage::Backward, bwd_s);
+        port.send(Up::Bwd {
+            wgrads,
+            row_grads,
+            gx,
+            bwd_s,
+            stages: bstages,
+        })?;
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn leader_loop(
+    hub: Hub<Up, Down>,
+    bhub: Hub<(), ()>,
+    cfg: &Config,
+    parts: usize,
+    leader_part: usize,
+    replica_count: &HashMap<String, usize>,
+    batches: &[Vec<NodeId>],
+    sess_mx: &Mutex<&mut Session>,
+    caches: &[Mutex<&mut FeatureCache>],
+    pipeline: bool,
+) -> Result<EpochReport> {
+    bhub.barrier()?;
+    let scale = cfg.cost.compute_scale;
+    let b = cfg.train.batch_size;
+    let h = cfg.model.hidden;
+    let mut net = SimNet::new(parts, cfg.cost.clone());
+    let mut timeline = EpochTimeline::new(parts);
+    let mut stages = StageTimes::default();
+    let mut loss_sum = 0.0f64;
+    let mut acc_sum = 0.0f64;
+    let mut batches_done = 0usize;
+
+    for (bi, chunk) in batches.iter().enumerate() {
+        // ---- gather worker partials (worker-id order) ----
+        let ups = hub.gather()?;
+        let wire: Vec<u64> = ups.iter().map(|u| u.wire_bytes()).collect();
+        let mut partial_sums = vec![vec![0f32; b * h]; 2];
+        let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
+        for (w, up) in ups.into_iter().enumerate() {
+            match up {
+                Up::Fwd {
+                    p1,
+                    p2,
+                    span,
+                    stages: wstages,
+                } => {
+                    add_assign(&mut partial_sums[0], &p1);
+                    add_assign(&mut partial_sums[1], &p2);
+                    worker_spans.push(span);
+                    stages.merge(&wstages);
+                }
+                Up::Bwd { .. } => bail!("protocol error: Bwd before Fwd from worker {w}"),
+                Up::Failed(msg) => bail!("worker {w} failed: {msg}"),
+            }
+        }
+        // The leader partition's partials are machine-local.
+        let gather_bytes: Vec<u64> = wire
+            .iter()
+            .enumerate()
+            .map(|(w, &bytes)| if w == leader_part { 0 } else { bytes })
+            .collect();
+        let t_gather = net.gather(leader_part, &gather_bytes)?;
+        stages.add(Stage::Forward, t_gather);
+
+        // ---- leader step: cross-relation agg + head + loss + backward ----
+        let (loss, acc, g1, g2, mut gx_root, t4_s, leader_t) = {
+            let mut guard = lock(sess_mx, "session")?;
+            let sess: &mut Session = &mut **guard;
+            sess.adam_t += 1;
+            let spec = sess.rt.manifest.spec("leader")?.clone();
+            let mut extra = ExtraInputs::new();
+            extra.insert(("partial_sum".into(), 1), partial_sums[0].clone());
+            extra.insert(("partial_sum".into(), 2), partial_sums[1].clone());
+            let t3 = Instant::now();
+            let mut lc = lock(&caches[leader_part], "leader cache")?;
+            let (lits, _acc) = build_inputs(
+                sess,
+                &spec,
+                None,
+                chunk,
+                &extra,
+                &|_, _| false,
+                Some(&mut **lc),
+                0,
+            )?;
+            drop(lc);
+            let outs = sess.rt.exec("leader", &lits)?;
+            let leader_t = t3.elapsed().as_secs_f64() * scale;
+            if outs.len() < 5 {
+                bail!("leader artifact returned {} outputs, expected >= 5", outs.len());
+            }
+            let loss = crate::runtime::lit_scalar(&outs[0])? as f64;
+            let acc = crate::runtime::lit_scalar(&outs[1])? as f64;
+            let g1 = crate::runtime::lit_to_vec(&outs[2])?;
+            let g2 = crate::runtime::lit_to_vec(&outs[3])?;
+            let gx_root = crate::runtime::lit_to_vec(&outs[4])?;
+            // Leader's own (head) weight updates.
+            let t4 = Instant::now();
+            for (o, out) in spec.outputs.iter().zip(&outs) {
+                if o.kind == "wgrad" {
+                    let grad = crate::runtime::lit_to_vec(out)?;
+                    sess.params.step(&o.name, &grad)?;
+                }
+            }
+            let t4_s = t4.elapsed().as_secs_f64();
+            (loss, acc, g1, g2, gx_root, t4_s, leader_t)
+        };
+        stages.add(Stage::Forward, leader_t * 0.5);
+        stages.add(Stage::Backward, leader_t * 0.5);
+        stages.add(Stage::Update, t4_s);
+        loss_sum += loss;
+        acc_sum += acc;
+
+        // ---- scatter gradients back (2 tensors per worker, symmetric) ----
+        let t_scatter = net.gather(leader_part, &gather_bytes)?;
+        stages.add(Stage::Backward, t_scatter);
+        hub.broadcast(Down::Grads { g1, g2 })?;
+
+        // ---- gather worker gradients (worker-id order) ----
+        let ups = hub.gather()?;
+        let mut wgrads_all: HashMap<String, Vec<f32>> = HashMap::new();
+        let mut row_grads_all: HashMap<usize, (Vec<NodeId>, Vec<f32>)> = HashMap::new();
+        let mut gx_extra: Vec<f32> = Vec::new();
+        for (w, up) in ups.into_iter().enumerate() {
+            match up {
+                Up::Bwd {
+                    wgrads,
+                    row_grads,
+                    gx,
+                    bwd_s,
+                    stages: wstages,
+                } => {
+                    for (name, gvec) in wgrads {
+                        match wgrads_all.get_mut(&name) {
+                            Some(acc) => add_assign(acc, &gvec),
+                            None => {
+                                wgrads_all.insert(name, gvec);
+                            }
+                        }
+                    }
+                    for (ty, ids, gvec) in row_grads {
+                        let entry = row_grads_all
+                            .entry(ty)
+                            .or_insert_with(|| (Vec::new(), Vec::new()));
+                        entry.0.extend_from_slice(&ids);
+                        entry.1.extend_from_slice(&gvec);
+                    }
+                    for gvec in gx {
+                        if gx_extra.is_empty() {
+                            gx_extra = gvec;
+                        } else {
+                            add_assign(&mut gx_extra, &gvec);
+                        }
+                    }
+                    if let Some(span) = worker_spans.get_mut(w) {
+                        span.bwd_s = bwd_s;
+                    }
+                    stages.merge(&wstages);
+                }
+                Up::Fwd { .. } => bail!("protocol error: Fwd before Bwd from worker {w}"),
+                Up::Failed(msg) => bail!("worker {w} failed: {msg}"),
+            }
+        }
+
+        // ---- model-parallel weight + learnable-feature updates ----
+        let (update_t, lf_t, sync_t) = {
+            let mut guard = lock(sess_mx, "session")?;
+            let sess: &mut Session = &mut **guard;
+            let t6 = Instant::now();
+            let mut sync_bytes = 0u64;
+            for (name, grad) in &wgrads_all {
+                // Replicated relations: replicas push grads to the owner.
+                let replicas = replica_count.get(name).copied().unwrap_or(1);
+                if replicas > 1 {
+                    sync_bytes += (grad.len() * 4 * (replicas - 1)) as u64;
+                }
+                sess.params.step(name, grad)?;
+            }
+            let update_t = t6.elapsed().as_secs_f64();
+            let sync_t = if sync_bytes > 0 {
+                net.send(1 % parts, leader_part, sync_bytes)?
+            } else {
+                0.0
+            };
+
+            // Learnable-feature updates (sparse Adam, local rows).
+            let t7 = Instant::now();
+            let mut cache_write_t = 0.0;
+            if !gx_extra.is_empty() {
+                add_assign(&mut gx_root, &gx_extra);
+            }
+            let tgt = sess.g.schema.target;
+            if sess.store.is_learnable(tgt) {
+                apply_learnable_grads(sess, tgt, chunk, &gx_root, 1.0);
+                let cost = cfg.cost.clone();
+                let mut lc = lock(&caches[leader_part], "leader cache")?;
+                for &id in chunk {
+                    cache_write_t += lc.access(&cost, tgt, id, 0, true);
+                }
+            }
+            for (ty, (ids, grads)) in &row_grads_all {
+                apply_learnable_grads(sess, *ty, ids, grads, 1.0);
+                let cost = cfg.cost.clone();
+                // Write-back path through the owning partition's cache.
+                let mut c0 = lock(&caches[0], "cache 0")?;
+                for &id in ids.iter().filter(|&&id| id != PAD) {
+                    cache_write_t += c0.access(&cost, *ty, id, 0, true);
+                }
+            }
+            let lf_t = t7.elapsed().as_secs_f64() + cache_write_t;
+            (update_t, lf_t, sync_t)
+        };
+        stages.add(Stage::Update, update_t + lf_t);
+        if sync_t > 0.0 {
+            stages.add(Stage::GradSync, sync_t);
+        }
+
+        timeline.push_batch(
+            worker_spans,
+            LeaderSpan {
+                gather_s: t_gather,
+                leader_s: leader_t,
+                scatter_s: t_scatter,
+                update_s: t4_s + update_t + lf_t,
+                sync_s: sync_t,
+            },
+        );
+        batches_done += 1;
+        if bi + 1 < batches.len() {
+            hub.broadcast(Down::Ready)?;
+        }
+    }
+
+    let epoch_time_s = timeline.sequential_time();
+    let critical_path_s = if pipeline {
+        timeline.pipelined_time()
+    } else {
+        epoch_time_s
+    };
+    Ok(EpochReport {
+        epoch_time_s,
+        critical_path_s,
+        worker_busy_s: timeline.worker_busy_s(),
+        stages,
+        comm: net.total(),
+        loss_mean: if batches_done > 0 {
+            loss_sum / batches_done as f64
+        } else {
+            f64::NAN
+        },
+        accuracy: if batches_done > 0 {
+            acc_sum / (batches_done * b) as f64
+        } else {
+            f64::NAN
+        },
+        batches: batches_done,
+    })
+}

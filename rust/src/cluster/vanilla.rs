@@ -1,0 +1,503 @@
+//! The vanilla (DGL/GraphLearn-style) engine on the cluster runtime.
+//!
+//! Data parallelism: each worker thread samples the full k-hop tree for
+//! its microbatch, fetches features (remote rows cross the modeled
+//! network), and runs the fused `vanilla` train-step artifact; the
+//! leader prices the ring all-reduce, applies the mean gradients and
+//! the sparse learnable-feature updates, then releases the next batch.
+//! With `train.pipeline` on, workers prefetch batch `i+1`'s sample
+//! while the leader runs batch `i`'s all-reduce + update phase.
+//!
+//! As with the RAF port, every reduction folds in (worker, output)
+//! order, so losses and parameter trajectories are byte-identical to
+//! the sequential vanilla engine.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cache::FeatureCache;
+use crate::comm::{Lane, SimNet};
+use crate::config::Config;
+use crate::coordinator::common::{
+    add_assign, apply_learnable_grads, build_inputs, vanilla_fetch_time,
+    vanilla_learnable_update_cost, ExtraInputs, Session,
+};
+use crate::hetgraph::{HetGraph, MetaTree, NodeId};
+use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WorkerSpan};
+use crate::metrics::{EpochReport, Stage, StageTimes};
+use crate::partition::NodePartition;
+use crate::sampling::{remote_counts, sample_tree, TreeSample, PAD};
+use crate::util::rng::Rng;
+
+use super::collective::{star, Hub, Port};
+use super::lock;
+use super::mailbox::Wire;
+
+/// Worker → leader message: one fused train step's results.
+struct StepMsg {
+    loss: f64,
+    acc: f64,
+    /// Per-output weight grads, unmerged (leader folds in worker order).
+    wgrads: Vec<(String, Vec<f32>)>,
+    /// `(ty, ids, grads)` per learnable-row grad output.
+    row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)>,
+    remote_learnable_rows: u64,
+    span: WorkerSpan,
+    stages: StageTimes,
+}
+
+impl Wire for StepMsg {
+    fn wire_bytes(&self) -> u64 {
+        // Dense gradients move via the ring all-reduce the leader
+        // charges to every worker ledger (the modeled system never
+        // ships raw per-worker grads to a coordinator).
+        0
+    }
+}
+
+/// `Err` is a worker's best-effort death notice: without it a leader
+/// gathering from a dead worker would block forever while live workers
+/// keep the channel connected.
+type StepResult = std::result::Result<StepMsg, String>;
+
+#[derive(Clone)]
+struct ReadyMsg;
+
+impl Wire for ReadyMsg {
+    fn wire_bytes(&self) -> u64 {
+        0
+    }
+}
+
+/// Run one vanilla epoch on the cluster runtime.
+pub fn run_epoch(
+    part: &NodePartition,
+    caches: Option<&mut Vec<FeatureCache>>,
+    sess: &mut Session,
+    epoch: usize,
+) -> Result<EpochReport> {
+    let cfg = sess.cfg.clone();
+    let parts = part.num_parts;
+    let b = cfg.train.batch_size;
+    let vb = (b / parts).max(1);
+    let pipeline = cfg.train.pipeline;
+    let g = Arc::clone(&sess.g);
+    let tree = Arc::clone(&sess.tree);
+
+    let mut train = sess.g.train_nodes();
+    let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
+    shuffle_rng.shuffle(&mut train);
+    let mut batches: Vec<Vec<NodeId>> = Vec::new();
+    for c in train.chunks(b) {
+        if c.len() < vb * parts {
+            break;
+        }
+        batches.push(c.to_vec());
+    }
+
+    let cache_mx: Option<Vec<Mutex<&mut FeatureCache>>> =
+        caches.map(|cs| cs.iter_mut().map(Mutex::new).collect());
+    let net_mx = Mutex::new(SimNet::new(parts, cfg.cost.clone()));
+    let sess_mx = Mutex::new(sess);
+    let (hub, ports) = star::<StepResult, ReadyMsg>(parts);
+    let (bhub, bports) = star::<(), ()>(parts);
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(parts);
+        for ((w, port), bport) in ports.into_iter().enumerate().zip(bports) {
+            let cfg = &cfg;
+            let g = &g;
+            let tree = &tree;
+            let batches = &batches;
+            let sess_mx = &sess_mx;
+            let net_mx = &net_mx;
+            let cache = cache_mx.as_ref().map(|v| &v[w]);
+            handles.push(s.spawn(move || {
+                worker_loop(
+                    w, parts, vb, cfg, epoch, batches, g, tree, part, sess_mx, net_mx, cache,
+                    &port, &bport, pipeline,
+                )
+            }));
+        }
+        let led = leader_loop(
+            hub, bhub, &cfg, parts, vb, &batches, &sess_mx, &net_mx, pipeline,
+        );
+        let mut worker_err: Option<anyhow::Error> = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if worker_err.is_none() {
+                        worker_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if worker_err.is_none() {
+                        worker_err = Some(anyhow!("worker thread panicked"));
+                    }
+                }
+            }
+        }
+        // The leader's error already embeds worker root causes (via
+        // the `Err` death notice), so it wins; worker errors cover the
+        // remainder.
+        match (led, worker_err) {
+            (Ok(rep), None) => Ok(rep),
+            (Err(e), _) => Err(e),
+            (Ok(_), Some(we)) => Err(we),
+        }
+    })
+}
+
+/// Runs the worker body; on error, ships a best-effort death notice so
+/// the leader's gather fails fast instead of blocking on a dead peer.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    w: usize,
+    parts: usize,
+    vb: usize,
+    cfg: &Config,
+    epoch: usize,
+    batches: &[Vec<NodeId>],
+    g: &Arc<HetGraph>,
+    tree: &Arc<MetaTree>,
+    part: &NodePartition,
+    sess_mx: &Mutex<&mut Session>,
+    net_mx: &Mutex<SimNet>,
+    cache_mx: Option<&Mutex<&mut FeatureCache>>,
+    port: &Port<StepResult, ReadyMsg>,
+    bport: &Port<(), ()>,
+    pipeline: bool,
+) -> Result<()> {
+    // Contain panics too: a panicked worker that never notified the
+    // leader would leave the gather blocked while live peers keep the
+    // channel connected.
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        worker_run(
+            w, parts, vb, cfg, epoch, batches, g, tree, part, sess_mx, net_mx, cache_mx, port,
+            bport, pipeline,
+        )
+    }));
+    let r = caught.unwrap_or_else(|_| Err(anyhow!("worker {w} panicked")));
+    if let Err(e) = &r {
+        let _ = port.send(Err(format!("{e:#}")));
+    }
+    r
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_run(
+    w: usize,
+    parts: usize,
+    vb: usize,
+    cfg: &Config,
+    epoch: usize,
+    batches: &[Vec<NodeId>],
+    g: &Arc<HetGraph>,
+    tree: &Arc<MetaTree>,
+    part: &NodePartition,
+    sess_mx: &Mutex<&mut Session>,
+    net_mx: &Mutex<SimNet>,
+    cache_mx: Option<&Mutex<&mut FeatureCache>>,
+    port: &Port<StepResult, ReadyMsg>,
+    bport: &Port<(), ()>,
+    pipeline: bool,
+) -> Result<()> {
+    bport.barrier()?;
+    let scale = cfg.cost.compute_scale;
+    let gpus = cfg.train.gpus_per_machine.max(1);
+    let layers = cfg.model.layers;
+    let cost = cfg.cost.clone();
+    // The manifest is immutable during an epoch: clone the fused-step
+    // spec once instead of per batch inside the serialized section.
+    let spec = {
+        let guard = lock(sess_mx, "session")?;
+        guard.rt.manifest.spec("vanilla")?.clone()
+    };
+    let mut prefetched: Option<(TreeSample, f64)> = None;
+
+    for (bi, chunk) in batches.iter().enumerate() {
+        if bi > 0 {
+            port.recv()?;
+        }
+        let micro = &chunk[w * vb..(w + 1) * vb];
+        let batch_seed = cfg.train.batch_seed(epoch, bi);
+
+        // -- sampling over the whole graph: remote hops are RPCs --
+        let (sample, mut sample_t) = match prefetched.take() {
+            Some(s) => s,
+            None => {
+                let t0 = Instant::now();
+                let s = sample_tree(g, tree, &cfg.model.fanouts, micro, w * vb, batch_seed, |_| {
+                    true
+                });
+                (s, t0.elapsed().as_secs_f64() * scale)
+            }
+        };
+        let rstats = remote_counts(tree, &sample, part, w);
+        sample_t += cost.xfer_time_msgs(
+            Lane::Net,
+            rstats.remote * 8,
+            (layers * (parts - 1)).max(1) as u64,
+        );
+        lock(net_mx, "net")?.charge(w, Lane::Net, rstats.remote * 8, 0.0)?;
+
+        // -- fetch + fused step under the session lock --
+        let (msg_core, fetch_t, copy_s, step_t) = {
+            let mut guard = lock(sess_mx, "session")?;
+            let sess: &mut Session = &mut **guard;
+            let t1 = Instant::now();
+            let extra = ExtraInputs::new();
+            let mut cguard = match cache_mx {
+                Some(m) => Some(lock(m, "cache")?),
+                None => None,
+            };
+            let (lits, acc) = build_inputs(
+                sess,
+                &spec,
+                Some(&sample),
+                micro,
+                &extra,
+                &|ty, id| part.owner_of(ty, id) != w,
+                cguard.as_mut().map(|gd| &mut ***gd),
+                0,
+            )?;
+            drop(cguard);
+            let copy_s = t1.elapsed().as_secs_f64() * scale;
+            let fetch_t = vanilla_fetch_time(&cost, &acc, cache_mx.is_some(), parts);
+            lock(net_mx, "net")?.charge(w, Lane::Net, acc.stats.remote_bytes, 0.0)?;
+
+            let t2 = Instant::now();
+            let outs = sess.rt.exec("vanilla", &lits)?;
+            let step_t = t2.elapsed().as_secs_f64() * scale / gpus as f64;
+            if outs.len() < 2 {
+                bail!("vanilla artifact returned {} outputs, expected >= 2", outs.len());
+            }
+            let loss = crate::runtime::lit_scalar(&outs[0])? as f64;
+            let acc_v = crate::runtime::lit_scalar(&outs[1])? as f64;
+
+            let mut wgrads: Vec<(String, Vec<f32>)> = Vec::new();
+            let mut row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)> = Vec::new();
+            let mut remote_learnable_rows = 0u64;
+            for (o, out) in spec.outputs.iter().zip(&outs) {
+                match o.kind.as_str() {
+                    "wgrad" => {
+                        wgrads.push((o.name.clone(), crate::runtime::lit_to_vec(out)?));
+                    }
+                    "block_grad" => {
+                        let (child, src_ty) = sess.edge_child(o.edge as usize);
+                        for &id in &sample.ids[child] {
+                            if id != PAD && part.owner_of(src_ty, id) != w {
+                                remote_learnable_rows += 1;
+                            }
+                        }
+                        row_grads.push((
+                            src_ty,
+                            sample.ids[child].clone(),
+                            crate::runtime::lit_to_vec(out)?,
+                        ));
+                    }
+                    "target_feat_grad" => {
+                        if sess.store.is_learnable(sess.g.schema.target) {
+                            row_grads.push((
+                                sess.g.schema.target,
+                                micro.to_vec(),
+                                crate::runtime::lit_to_vec(out)?,
+                            ));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            (
+                (loss, acc_v, wgrads, row_grads, remote_learnable_rows),
+                fetch_t,
+                copy_s,
+                step_t,
+            )
+        };
+        let (loss, acc_v, wgrads, row_grads, remote_learnable_rows) = msg_core;
+
+        let mut stages = StageTimes::default();
+        stages.add(Stage::Sample, sample_t);
+        stages.add(Stage::Copy, copy_s);
+        stages.add(Stage::Fetch, fetch_t);
+        stages.add(Stage::Forward, step_t * 0.45);
+        stages.add(Stage::Backward, step_t * 0.55);
+        let span = WorkerSpan {
+            sample_s: sample_t,
+            // Vanilla fetch mixes remote and learnable rows, so the
+            // whole fetch stays slot-bound (conservative); sampling is
+            // the prefetchable stage here.
+            fetch_ro_s: 0.0,
+            fetch_lr_s: fetch_t,
+            copy_s,
+            fwd_s: step_t,
+            bwd_s: 0.0,
+        };
+        port.send(Ok(StepMsg {
+            loss,
+            acc: acc_v,
+            wgrads,
+            row_grads,
+            remote_learnable_rows,
+            span,
+            stages,
+        }))?;
+
+        // -- double-buffer: prefetch the next microbatch's sample --
+        if pipeline && bi + 1 < batches.len() {
+            let nseed = cfg.train.batch_seed(epoch, bi + 1);
+            let t = Instant::now();
+            let s = sample_tree(
+                g,
+                tree,
+                &cfg.model.fanouts,
+                &batches[bi + 1][w * vb..(w + 1) * vb],
+                w * vb,
+                nseed,
+                |_| true,
+            );
+            prefetched = Some((s, t.elapsed().as_secs_f64() * scale));
+        }
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn leader_loop(
+    hub: Hub<StepResult, ReadyMsg>,
+    bhub: Hub<(), ()>,
+    cfg: &Config,
+    parts: usize,
+    vb: usize,
+    batches: &[Vec<NodeId>],
+    sess_mx: &Mutex<&mut Session>,
+    net_mx: &Mutex<SimNet>,
+    pipeline: bool,
+) -> Result<EpochReport> {
+    bhub.barrier()?;
+    let mut timeline = EpochTimeline::new(parts);
+    let mut stages = StageTimes::default();
+    let mut loss_sum = 0.0f64;
+    let mut acc_sum = 0.0f64;
+    let mut batches_done = 0usize;
+
+    for bi in 0..batches.len() {
+        let msgs = hub.gather()?;
+        let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
+        let mut wgrads: HashMap<String, Vec<f32>> = HashMap::new();
+        let mut row_grads: HashMap<usize, (Vec<NodeId>, Vec<f32>)> = HashMap::new();
+        let mut remote_learnable_rows = 0u64;
+        for (wid, m) in msgs.into_iter().enumerate() {
+            let m = match m {
+                Ok(m) => m,
+                Err(e) => bail!("worker {wid} failed: {e}"),
+            };
+            loss_sum += m.loss / parts as f64;
+            acc_sum += m.acc;
+            for (name, gvec) in m.wgrads {
+                match wgrads.get_mut(&name) {
+                    Some(acc) => add_assign(acc, &gvec),
+                    None => {
+                        wgrads.insert(name, gvec);
+                    }
+                }
+            }
+            for (ty, ids, gvec) in m.row_grads {
+                let entry = row_grads.entry(ty).or_insert_with(|| (Vec::new(), Vec::new()));
+                entry.0.extend_from_slice(&ids);
+                entry.1.extend_from_slice(&gvec);
+            }
+            remote_learnable_rows += m.remote_learnable_rows;
+            worker_spans.push(m.span);
+            stages.merge(&m.stages);
+        }
+
+        // -- dense gradient all-reduce + updates under the session lock --
+        let (t_ar, upd_t, lf_t) = {
+            let mut guard = lock(sess_mx, "session")?;
+            let sess: &mut Session = &mut **guard;
+            sess.adam_t += 1;
+            let grad_bytes = (sess.params.total_elems() * 4) as u64;
+            let mut net = lock(net_mx, "net")?;
+            let t_ar = net.allreduce(grad_bytes);
+
+            // -- model update (every replica applies the mean grad) --
+            let t3 = Instant::now();
+            let inv = 1.0 / parts as f32;
+            for (name, mut grad) in wgrads.drain() {
+                for gv in grad.iter_mut() {
+                    *gv *= inv;
+                }
+                sess.params.step(&name, &grad)?;
+            }
+            let upd_t = t3.elapsed().as_secs_f64();
+
+            // -- learnable-feature updates: remote rows pay the network --
+            let t4 = Instant::now();
+            for (ty, (ids, grads)) in &row_grads {
+                apply_learnable_grads(sess, *ty, ids, grads, inv);
+            }
+            let mut lf_t = t4.elapsed().as_secs_f64();
+            let total_rows: u64 = row_grads.values().map(|(i, _)| i.len() as u64).sum();
+            let (cost_t, remote_bytes) = vanilla_learnable_update_cost(
+                &net.cost,
+                total_rows,
+                remote_learnable_rows,
+                parts,
+            );
+            lf_t += cost_t;
+            if remote_bytes > 0 {
+                net.charge(0, Lane::Net, remote_bytes, 0.0)?;
+            }
+            (t_ar, upd_t, lf_t)
+        };
+        stages.add(Stage::GradSync, t_ar);
+        stages.add(Stage::Update, upd_t + lf_t);
+
+        timeline.push_batch(
+            worker_spans,
+            LeaderSpan {
+                gather_s: t_ar,
+                leader_s: 0.0,
+                scatter_s: 0.0,
+                update_s: upd_t + lf_t,
+                sync_s: 0.0,
+            },
+        );
+        batches_done += 1;
+        if bi + 1 < batches.len() {
+            hub.broadcast(ReadyMsg)?;
+        }
+    }
+
+    let comm = lock(net_mx, "net")?.total();
+    let epoch_time_s = timeline.sequential_time();
+    let critical_path_s = if pipeline {
+        timeline.pipelined_time()
+    } else {
+        epoch_time_s
+    };
+    Ok(EpochReport {
+        epoch_time_s,
+        critical_path_s,
+        worker_busy_s: timeline.worker_busy_s(),
+        stages,
+        comm,
+        loss_mean: if batches_done > 0 {
+            loss_sum / batches_done as f64
+        } else {
+            f64::NAN
+        },
+        accuracy: if batches_done > 0 {
+            acc_sum / (batches_done * vb * parts) as f64
+        } else {
+            f64::NAN
+        },
+        batches: batches_done,
+    })
+}

@@ -9,6 +9,8 @@
 //! model, so communication *volumes* are exact and times follow one
 //! consistent model for Heta and the baselines alike.
 
+use anyhow::{ensure, Result};
+
 /// Transfer lanes with distinct latency/bandwidth profiles.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Lane {
@@ -149,16 +151,29 @@ impl SimNet {
     }
 
     /// Point-to-point send (`from` pays the send, `to` is implicit).
-    pub fn send(&mut self, from: usize, _to: usize, bytes: u64) -> f64 {
+    /// Errors (rather than panicking) on an out-of-range worker so a
+    /// cluster worker thread can surface the fault as `anyhow::Error`.
+    pub fn send(&mut self, from: usize, to: usize, bytes: u64) -> Result<f64> {
+        ensure!(
+            from < self.ledgers.len() && to < self.ledgers.len(),
+            "send {from}->{to} outside {}-worker net",
+            self.ledgers.len()
+        );
         let t = self.cost.xfer_time(Lane::Net, bytes);
         self.ledgers[from].charge(Lane::Net, bytes, t);
-        t
+        Ok(t)
     }
 
     /// Gather `bytes_per_worker[i]` from every worker i≠root to `root`.
     /// Senders transmit in parallel; the root's NIC serializes reception,
     /// so critical path = max(sender times) bounded below by total/bw.
-    pub fn gather(&mut self, root: usize, bytes_per_worker: &[u64]) -> f64 {
+    pub fn gather(&mut self, root: usize, bytes_per_worker: &[u64]) -> Result<f64> {
+        ensure!(
+            root < self.ledgers.len() && bytes_per_worker.len() <= self.ledgers.len(),
+            "gather to {root} over {} senders exceeds {}-worker net",
+            bytes_per_worker.len(),
+            self.ledgers.len()
+        );
         let mut max_sender = 0f64;
         let mut total = 0u64;
         for (i, &b) in bytes_per_worker.iter().enumerate() {
@@ -171,20 +186,21 @@ impl SimNet {
             max_sender = max_sender.max(t);
         }
         let recv_bound = total as f64 / self.cost.bandwidth[Lane::Net.index()];
-        max_sender.max(recv_bound)
+        Ok(max_sender.max(recv_bound))
     }
 
     /// Broadcast `bytes` from `root` to all other workers.
-    pub fn broadcast(&mut self, root: usize, bytes: u64) -> f64 {
+    pub fn broadcast(&mut self, root: usize, bytes: u64) -> Result<f64> {
         let n = self.workers();
+        ensure!(root < n, "broadcast root {root} outside {n}-worker net");
         if n <= 1 || bytes == 0 {
-            return 0.0;
+            return Ok(0.0);
         }
         // Tree broadcast: ⌈log2 n⌉ rounds.
         let rounds = (n as f64).log2().ceil();
         let t = self.cost.xfer_time(Lane::Net, bytes) * rounds;
         self.ledgers[root].charge(Lane::Net, bytes * (n as u64 - 1), t);
-        t
+        Ok(t)
     }
 
     /// Ring all-reduce of `bytes` across all workers: each worker sends
@@ -206,15 +222,33 @@ impl SimNet {
         t
     }
 
+    /// Charge bytes (with a precomputed time) to one worker's ledger —
+    /// the entry point the cluster transport uses so mailbox traffic
+    /// lands in the same ledgers as the sequential engines'.
+    pub fn charge(&mut self, worker: usize, lane: Lane, bytes: u64, time_s: f64) -> Result<()> {
+        ensure!(
+            worker < self.ledgers.len(),
+            "charge to worker {worker} outside {}-worker net",
+            self.ledgers.len()
+        );
+        self.ledgers[worker].charge(lane, bytes, time_s);
+        Ok(())
+    }
+
     /// Charge a host-local transfer (PCIe copy, DRAM access, p2p) to a
     /// worker, modelling `msgs` distinct transactions.
-    pub fn local(&mut self, worker: usize, lane: Lane, bytes: u64, msgs: u64) -> f64 {
+    pub fn local(&mut self, worker: usize, lane: Lane, bytes: u64, msgs: u64) -> Result<f64> {
+        ensure!(
+            worker < self.ledgers.len(),
+            "local charge to worker {worker} outside {}-worker net",
+            self.ledgers.len()
+        );
         let t = self.cost.xfer_time_msgs(lane, bytes, msgs);
         let i = lane.index();
         self.ledgers[worker].bytes[i] += bytes;
         self.ledgers[worker].time_s[i] += t;
         self.ledgers[worker].msgs[i] += msgs;
-        t
+        Ok(t)
     }
 
     /// Aggregate ledger across workers.
@@ -251,8 +285,9 @@ mod tests {
     #[test]
     fn gather_charges_senders_not_root() {
         let mut net = SimNet::new(3, CostModel::default());
-        let t = net.gather(0, &[0, 1000, 2000]);
+        let t = net.gather(0, &[0, 1000, 2000]).unwrap();
         assert!(t > 0.0);
+        assert!(net.gather(7, &[0, 0, 0]).is_err());
         assert_eq!(net.ledgers[0].bytes[Lane::Net.index()], 0);
         assert_eq!(net.ledgers[1].bytes[Lane::Net.index()], 1000);
         assert_eq!(net.ledgers[2].bytes[Lane::Net.index()], 2000);
@@ -272,7 +307,7 @@ mod tests {
     fn single_worker_collectives_are_free() {
         let mut net = SimNet::new(1, CostModel::default());
         assert_eq!(net.allreduce(1_000_000), 0.0);
-        assert_eq!(net.broadcast(0, 1_000_000), 0.0);
+        assert_eq!(net.broadcast(0, 1_000_000).unwrap(), 0.0);
     }
 
     #[test]

@@ -56,6 +56,35 @@ pub struct ModelConfig {
     pub heads: usize,
 }
 
+/// Which worker runtime executes an epoch (`train.runtime` in configs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuntimeKind {
+    /// One thread plays every worker in sequence (the seed behaviour);
+    /// kept for A/B against the cluster runtime.
+    Sequential,
+    /// Thread-per-partition cluster runtime (`crate::cluster`): typed
+    /// mailbox transport, channel collectives, and the double-buffered
+    /// minibatch pipeline.
+    Cluster,
+}
+
+impl RuntimeKind {
+    pub fn parse(s: &str) -> Option<RuntimeKind> {
+        match s {
+            "sequential" | "seq" => Some(RuntimeKind::Sequential),
+            "cluster" | "threads" => Some(RuntimeKind::Cluster),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuntimeKind::Sequential => "sequential",
+            RuntimeKind::Cluster => "cluster",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub batch_size: usize,
@@ -65,6 +94,28 @@ pub struct TrainConfig {
     pub cache_bytes_per_gpu: u64,
     pub cache_policy: crate::cache::Policy,
     pub seed: u64,
+    /// Worker runtime (`"sequential"` default, `"cluster"` for the
+    /// thread-per-partition runtime).
+    pub runtime: RuntimeKind,
+    /// Double-buffered prefetch in the cluster runtime (default true);
+    /// `false` runs the cluster runtime without overlap, isolating the
+    /// pipelining gain for A/B benches.
+    pub pipeline: bool,
+}
+
+impl TrainConfig {
+    /// Seed of the epoch-level batch shuffle. Single source of truth:
+    /// every runtime (and the determinism tests) must derive the same
+    /// batch order for Prop. 1 to hold across runtimes.
+    pub fn shuffle_seed(&self, epoch: usize) -> u64 {
+        self.seed ^ (epoch as u64) << 32 ^ 0xE9
+    }
+
+    /// Per-batch sampling seed — the key of the per-(edge, slot, node)
+    /// deterministic RNG contract. Same single-source-of-truth rule.
+    pub fn batch_seed(&self, epoch: usize, bi: usize) -> u64 {
+        self.seed ^ ((epoch * 7919 + bi) as u64) << 8
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -119,6 +170,7 @@ impl Config {
         };
         let t = j.req("train")?;
         let policy_name = t.get("cache_policy").as_str().unwrap_or("heta").to_string();
+        let runtime_name = t.get("runtime").as_str().unwrap_or("sequential").to_string();
         let train = TrainConfig {
             batch_size: t.req("batch_size")?.as_usize().context("batch_size")?,
             lr: t.get("lr").as_f64().unwrap_or(0.01),
@@ -128,6 +180,9 @@ impl Config {
             cache_policy: crate::cache::Policy::parse(&policy_name)
                 .with_context(|| format!("unknown cache policy {policy_name}"))?,
             seed: t.get("seed").as_u64().unwrap_or(7),
+            runtime: RuntimeKind::parse(&runtime_name)
+                .with_context(|| format!("unknown runtime {runtime_name}"))?,
+            pipeline: t.get("pipeline").as_bool().unwrap_or(true),
         };
         let mut cost = CostModel::default();
         if let Some(c) = j.get("cost").as_obj() {
@@ -337,6 +392,22 @@ mod tests {
         assert_eq!(cfg.train.num_partitions, 2);
         assert_eq!(cfg.vanilla_batch(), 16);
         assert_eq!(cfg.train.cache_policy, crate::cache::Policy::HotnessMissPenalty);
+        assert_eq!(cfg.train.runtime, RuntimeKind::Sequential);
+        assert!(cfg.train.pipeline);
+    }
+
+    #[test]
+    fn parses_cluster_runtime_flag() {
+        let text = r#"{
+            "name": "x",
+            "dataset": {"preset": "mag", "scale": 1e-4},
+            "model": {"arch": "rgcn", "hidden": 8, "fanouts": [2]},
+            "train": {"batch_size": 8, "runtime": "cluster", "pipeline": false}
+        }"#;
+        let cfg = Config::from_json(&parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.train.runtime, RuntimeKind::Cluster);
+        assert!(!cfg.train.pipeline);
+        assert!(RuntimeKind::parse("bogus").is_none());
     }
 
     #[test]

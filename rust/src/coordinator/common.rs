@@ -4,6 +4,7 @@
 //! flat literal list a PJRT executable consumes.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -21,10 +22,14 @@ use crate::sampling::{TreeSample, PAD};
 pub type ExtraInputs = HashMap<(String, usize), Vec<f32>>;
 
 /// One training session: graph, features, parameters, runtime.
+///
+/// The immutable substrates (`g`, `tree`) are `Arc`-shared so the
+/// cluster runtime's worker threads can sample lock-free while the
+/// mutable state (store/params/runtime) sits behind the session mutex.
 pub struct Session {
     pub cfg: Config,
-    pub g: HetGraph,
-    pub tree: MetaTree,
+    pub g: Arc<HetGraph>,
+    pub tree: Arc<MetaTree>,
     pub store: FeatureStore,
     pub params: ParamStore,
     pub rt: Runtime,
@@ -44,8 +49,8 @@ impl Session {
         let rt = Runtime::load(artifacts_dir)?;
         Ok(Session {
             cfg: cfg.clone(),
-            g,
-            tree,
+            g: Arc::new(g),
+            tree: Arc::new(tree),
             store,
             params: ParamStore::new(cfg.train.seed, hp),
             rt,
@@ -69,8 +74,13 @@ impl Session {
 #[derive(Debug, Clone, Default)]
 pub struct GatherAccounting {
     pub stats: FetchStats,
-    /// Modeled cache/miss time (Fetch stage).
+    /// Modeled cache/miss time (Fetch stage), all node types.
     pub cache_time_s: f64,
+    /// The read-only share of `cache_time_s`. Read-only rows are
+    /// immutable during training, so the cluster pipeline may prefetch
+    /// them for batch `i+1` while batch `i` executes; learnable rows
+    /// (the remainder) must wait for batch `i`'s update.
+    pub cache_time_ro_s: f64,
     /// Per-(type,id) rows touched — reused for the learnable write-back.
     pub touched: Vec<(usize, Vec<NodeId>)>,
 }
@@ -106,11 +116,16 @@ pub fn build_inputs(
                 let mut buf = vec![0f32; ids.len() * dim];
                 let stats = sess
                     .store
-                    .gather(src_ty, ids, &mut buf, |id| is_remote(src_ty, id));
+                    .gather(src_ty, ids, &mut buf, |id| is_remote(src_ty, id))?;
                 acc.stats.merge(stats);
                 if let Some(c) = cache.as_deref_mut() {
+                    let learnable = sess.store.is_learnable(src_ty);
                     for &id in ids.iter().filter(|&&id| id != PAD) {
-                        acc.cache_time_s += c.access(&cost, src_ty, id, gpu, false);
+                        let t = c.access(&cost, src_ty, id, gpu, false);
+                        acc.cache_time_s += t;
+                        if !learnable {
+                            acc.cache_time_ro_s += t;
+                        }
                     }
                 }
                 acc.touched.push((src_ty, ids.clone()));
@@ -135,11 +150,16 @@ pub fn build_inputs(
                 let mut buf = vec![0f32; batch.len() * dim];
                 let stats = sess
                     .store
-                    .gather(ty, batch, &mut buf, |id| is_remote(ty, id));
+                    .gather(ty, batch, &mut buf, |id| is_remote(ty, id))?;
                 acc.stats.merge(stats);
                 if let Some(c) = cache.as_deref_mut() {
+                    let learnable = sess.store.is_learnable(ty);
                     for &id in batch {
-                        acc.cache_time_s += c.access(&cost, ty, id, gpu, false);
+                        let t = c.access(&cost, ty, id, gpu, false);
+                        acc.cache_time_s += t;
+                        if !learnable {
+                            acc.cache_time_ro_s += t;
+                        }
                     }
                 }
                 acc.touched.push((ty, batch.to_vec()));
@@ -166,6 +186,54 @@ pub fn build_inputs(
 /// PCIe in one batched transfer (the Copy stage of Fig. 3).
 pub fn h2d_time(sess: &Session, bytes: u64) -> f64 {
     sess.cfg.cost.xfer_time(Lane::Pcie, bytes)
+}
+
+/// Modeled feature-fetch time of one vanilla-engine input build: local
+/// rows through the cache model (or the full DRAM+PCIe miss path when
+/// uncached), remote rows over the network + PCIe. Single source of
+/// truth for both runtimes — the sequential-vs-cluster A/B timing is
+/// only meaningful if they price fetches identically.
+pub fn vanilla_fetch_time(
+    cost: &crate::comm::CostModel,
+    acc: &GatherAccounting,
+    cached: bool,
+    parts: usize,
+) -> f64 {
+    let mut fetch_t = acc.cache_time_s;
+    if !cached {
+        // No cache: every local row pays DRAM + PCIe.
+        let local_bytes = acc.stats.bytes - acc.stats.remote_bytes;
+        fetch_t += cost.xfer_time_msgs(
+            Lane::Dram,
+            local_bytes,
+            acc.stats.rows - acc.stats.remote_rows,
+        ) + cost.xfer_time(Lane::Pcie, local_bytes);
+    }
+    fetch_t
+        + cost.xfer_time_msgs(Lane::Net, acc.stats.remote_bytes, (parts - 1).max(1) as u64)
+        + cost.xfer_time(Lane::Pcie, acc.stats.remote_bytes)
+}
+
+/// Modeled cost of the vanilla engine's sparse learnable-feature
+/// update: per-row random DRAM read-modify-write of weight + moments,
+/// plus the network round trip for remote rows. Returns the modeled
+/// seconds and the remote bytes to charge to the network ledger.
+pub fn vanilla_learnable_update_cost(
+    cost: &crate::comm::CostModel,
+    total_rows: u64,
+    remote_rows: u64,
+    parts: usize,
+) -> (f64, u64) {
+    // Row dimension is approximated — the engines don't thread per-type
+    // dims through this path (matches the seed accounting).
+    const DIM_GUESS: u64 = 64;
+    let mut t = cost.xfer_time_msgs(Lane::Dram, total_rows * DIM_GUESS * 4 * 3, total_rows * 2);
+    let mut remote_bytes = 0;
+    if remote_rows > 0 {
+        remote_bytes = remote_rows * DIM_GUESS * 4;
+        t += cost.xfer_time_msgs(Lane::Net, remote_bytes, (parts - 1).max(1) as u64);
+    }
+    (t, remote_bytes)
 }
 
 /// Sum two equal-length f32 vectors in place.

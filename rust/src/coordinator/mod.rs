@@ -128,17 +128,14 @@ pub fn run_training(
     for ep in 0..epochs {
         let rep = engine.run_epoch(&mut sess, ep)?;
         println!(
-            "epoch {ep}: loss {:.4} acc {:.3} time {}",
+            "epoch {ep}: loss {:.4} acc {:.3} time {} (critical path {}, {} runtime)",
             rep.loss_mean,
             rep.accuracy,
-            crate::util::fmt_secs(rep.epoch_time_s)
+            crate::util::fmt_secs(rep.epoch_time_s),
+            crate::util::fmt_secs(rep.critical_path_s),
+            cfg.train.runtime.name(),
         );
-        total.epoch_time_s += rep.epoch_time_s;
-        total.stages.merge(&rep.stages);
-        total.comm.merge(&rep.comm);
-        total.loss_mean = rep.loss_mean;
-        total.accuracy = rep.accuracy;
-        total.batches += rep.batches;
+        total.absorb(&rep);
     }
     Ok(total)
 }
@@ -156,13 +153,9 @@ pub fn bench_run(cfg_name: &str, system: SystemKind, epochs: usize) -> (EpochRep
     let mut total = EpochReport::default();
     for ep in 0..epochs {
         let rep = engine.run_epoch(&mut sess, ep).unwrap();
-        total.epoch_time_s += rep.epoch_time_s;
-        total.stages.merge(&rep.stages);
-        total.comm.merge(&rep.comm);
-        total.loss_mean = rep.loss_mean;
-        total.accuracy = rep.accuracy;
-        total.batches += rep.batches;
+        total.absorb(&rep);
     }
     total.epoch_time_s /= epochs.max(1) as f64;
+    total.critical_path_s /= epochs.max(1) as f64;
     (total, engine)
 }

@@ -20,8 +20,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cache::{FeatureCache, Policy, TypeProfile};
-use crate::comm::{Lane, SimNet};
-use crate::config::partition_edge_filter;
+use crate::comm::SimNet;
+use crate::config::{partition_edge_filter, RuntimeKind};
 use crate::hetgraph::NodeId;
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::MetaPartition;
@@ -112,8 +112,26 @@ impl RafEngine {
         })
     }
 
-    /// Run one epoch; `epoch` seeds the batch shuffle.
+    /// Run one epoch; `epoch` seeds the batch shuffle. Dispatches to the
+    /// runtime selected by `train.runtime` — the thread-per-partition
+    /// cluster runtime or the sequential (seed) path. Both produce
+    /// byte-identical samples, losses and parameter trajectories.
     pub fn run_epoch(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
+        match sess.cfg.train.runtime {
+            RuntimeKind::Cluster => crate::cluster::raf::run_epoch(
+                &self.mp,
+                &mut self.caches,
+                &self.replica_count,
+                self.leader,
+                sess,
+                epoch,
+            ),
+            RuntimeKind::Sequential => self.run_epoch_sequential(sess, epoch),
+        }
+    }
+
+    /// The sequential (single-thread) epoch, kept for A/B comparison.
+    fn run_epoch_sequential(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
         let cfg = sess.cfg.clone();
         let b = cfg.train.batch_size;
         let h = cfg.model.hidden;
@@ -125,9 +143,10 @@ impl RafEngine {
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         let mut batches = 0usize;
+        let mut worker_busy = vec![0.0f64; parts];
 
         let mut train = sess.g.train_nodes();
-        let mut shuffle_rng = Rng::new(cfg.train.seed ^ (epoch as u64) << 32 ^ 0xE9);
+        let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
         shuffle_rng.shuffle(&mut train);
 
         for (bi, chunk) in train.chunks(b).enumerate() {
@@ -135,7 +154,7 @@ impl RafEngine {
                 break; // drop the ragged tail (static shapes)
             }
             sess.adam_t += 1;
-            let batch_seed = cfg.train.seed ^ ((epoch * 7919 + bi) as u64) << 8;
+            let batch_seed = cfg.train.batch_seed(epoch, bi);
 
             // ---- worker forward phase (parallel across machines) ----
             let mut fwd_worker_time = vec![0.0f64; parts];
@@ -187,13 +206,16 @@ impl RafEngine {
                 stage_max(&mut stages, &st);
             }
             epoch_time += fwd_worker_time.iter().cloned().fold(0.0, f64::max);
+            for p in 0..parts {
+                worker_busy[p] += fwd_worker_time[p];
+            }
 
             // ---- gather partials at the leader (2 tensors per worker) ----
             let per_worker = (2 * b * h * 4) as u64;
             let gather_bytes: Vec<u64> = (0..parts)
                 .map(|p| if p == self.leader { 0 } else { per_worker })
                 .collect();
-            let t_gather = net.gather(self.leader, &gather_bytes);
+            let t_gather = net.gather(self.leader, &gather_bytes)?;
             stages.add(Stage::Forward, t_gather);
             epoch_time += t_gather;
 
@@ -232,14 +254,14 @@ impl RafEngine {
             for (o, out) in spec.outputs.iter().zip(&outs) {
                 if o.kind == "wgrad" {
                     let grad = crate::runtime::lit_to_vec(out)?;
-                    sess.params.step(&o.name, &grad);
+                    sess.params.step(&o.name, &grad)?;
                 }
             }
             stages.add(Stage::Update, t4.elapsed().as_secs_f64());
             epoch_time += t4.elapsed().as_secs_f64();
 
             // ---- scatter gradients back (2 tensors per worker) ----
-            let t_scatter = net.gather(self.leader, &gather_bytes); // symmetric
+            let t_scatter = net.gather(self.leader, &gather_bytes)?; // symmetric
             stages.add(Stage::Backward, t_scatter);
             epoch_time += t_scatter;
 
@@ -304,6 +326,9 @@ impl RafEngine {
                 stage_max(&mut stages, &st);
             }
             epoch_time += bwd_worker_time.iter().cloned().fold(0.0, f64::max);
+            for p in 0..parts {
+                worker_busy[p] += bwd_worker_time[p];
+            }
 
             // ---- model-parallel weight updates (local per partition) ----
             let t6 = Instant::now();
@@ -314,13 +339,13 @@ impl RafEngine {
                 if replicas > 1 {
                     sync_bytes += (grad.len() * 4 * (replicas - 1)) as u64;
                 }
-                sess.params.step(name, grad);
+                sess.params.step(name, grad)?;
             }
             let update_t = t6.elapsed().as_secs_f64();
             stages.add(Stage::Update, update_t);
             epoch_time += update_t;
             if sync_bytes > 0 {
-                let t = net.send(1 % parts, self.leader, sync_bytes);
+                let t = net.send(1 % parts, self.leader, sync_bytes)?;
                 stages.add(Stage::GradSync, t);
                 epoch_time += t;
             }
@@ -355,14 +380,13 @@ impl RafEngine {
             batches += 1;
         }
 
-        // Charge cache-modeled time into the epoch ledger.
-        let mut comm = net.total();
-        for l in &net.ledgers {
-            let _ = l;
-        }
-        comm.time_s[Lane::Net.index()] += 0.0;
+        let comm = net.total();
         Ok(EpochReport {
             epoch_time_s: epoch_time,
+            // No overlap in the sequential runtime: the critical path
+            // is the summed epoch time itself.
+            critical_path_s: epoch_time,
+            worker_busy_s: worker_busy,
             stages,
             comm,
             loss_mean: if batches > 0 { loss_sum / batches as f64 } else { f64::NAN },

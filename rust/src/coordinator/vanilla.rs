@@ -18,6 +18,7 @@ use anyhow::Result;
 
 use crate::cache::{FeatureCache, Policy, TypeProfile};
 use crate::comm::{Lane, SimNet};
+use crate::config::RuntimeKind;
 use crate::hetgraph::NodeId;
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::NodePartition;
@@ -96,7 +97,22 @@ impl VanillaEngine {
         Ok(VanillaEngine { part, caches })
     }
 
+    /// Run one epoch, dispatching to the runtime selected by
+    /// `train.runtime`; both runtimes produce byte-identical losses.
     pub fn run_epoch(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
+        match sess.cfg.train.runtime {
+            RuntimeKind::Cluster => crate::cluster::vanilla::run_epoch(
+                &self.part,
+                self.caches.as_mut(),
+                sess,
+                epoch,
+            ),
+            RuntimeKind::Sequential => self.run_epoch_sequential(sess, epoch),
+        }
+    }
+
+    /// The sequential (single-thread) epoch, kept for A/B comparison.
+    fn run_epoch_sequential(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
         let cfg = sess.cfg.clone();
         let b = cfg.train.batch_size;
         let parts = self.part.num_parts;
@@ -109,9 +125,10 @@ impl VanillaEngine {
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         let mut batches = 0usize;
+        let mut worker_busy = vec![0.0f64; parts];
 
         let mut train = sess.g.train_nodes();
-        let mut shuffle_rng = Rng::new(cfg.train.seed ^ (epoch as u64) << 32 ^ 0xE9);
+        let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
         shuffle_rng.shuffle(&mut train);
 
         let spec = sess.rt.manifest.spec("vanilla")?.clone();
@@ -121,7 +138,7 @@ impl VanillaEngine {
                 break;
             }
             sess.adam_t += 1;
-            let batch_seed = cfg.train.seed ^ ((epoch * 7919 + bi) as u64) << 8;
+            let batch_seed = cfg.train.batch_seed(epoch, bi);
 
             let mut worker_time = vec![0.0f64; parts];
             let mut wgrads: HashMap<String, Vec<f32>> = HashMap::new();
@@ -171,23 +188,8 @@ impl VanillaEngine {
                     0,
                 )?;
                 st.add(Stage::Copy, t1.elapsed().as_secs_f64() * cfg.cost.compute_scale);
-                // Local-row path: cache model (or full miss path when no
-                // cache). Remote rows: network fetch + H2D.
-                let mut fetch_t = acc.cache_time_s;
-                if self.caches.is_none() {
-                    // No cache: every local row pays DRAM + PCIe.
-                    let local_bytes = acc.stats.bytes - acc.stats.remote_bytes;
-                    fetch_t += net.cost.xfer_time_msgs(
-                        Lane::Dram,
-                        local_bytes,
-                        acc.stats.rows - acc.stats.remote_rows,
-                    ) + net.cost.xfer_time(Lane::Pcie, local_bytes);
-                }
-                fetch_t += net.cost.xfer_time_msgs(
-                    Lane::Net,
-                    acc.stats.remote_bytes,
-                    (parts - 1).max(1) as u64,
-                ) + net.cost.xfer_time(Lane::Pcie, acc.stats.remote_bytes);
+                let fetch_t =
+                    super::common::vanilla_fetch_time(&net.cost, &acc, self.caches.is_some(), parts);
                 net.ledgers[w].charge(Lane::Net, acc.stats.remote_bytes, 0.0);
                 st.add(Stage::Fetch, fetch_t);
 
@@ -245,6 +247,9 @@ impl VanillaEngine {
                 }
             }
             epoch_time += worker_time.iter().cloned().fold(0.0, f64::max);
+            for w in 0..parts {
+                worker_busy[w] += worker_time[w];
+            }
 
             // -- dense gradient all-reduce (data parallelism) --
             let grad_bytes = (sess.params.total_elems() * 4) as u64;
@@ -259,7 +264,7 @@ impl VanillaEngine {
                 for g in grad.iter_mut() {
                     *g *= inv;
                 }
-                sess.params.step(&name, &grad);
+                sess.params.step(&name, &grad)?;
             }
             let upd_t = t3.elapsed().as_secs_f64();
             stages.add(Stage::Update, upd_t);
@@ -271,18 +276,16 @@ impl VanillaEngine {
                 apply_learnable_grads(sess, *ty, ids, grads, inv);
             }
             let mut lf_t = t4.elapsed().as_secs_f64();
-            // Each updated row is a random DRAM read-modify-write of
-            // weight + moments; remote rows additionally cross the net.
-            let dim_guess = 64u64;
-            lf_t += net.cost.xfer_time_msgs(
-                Lane::Dram,
-                row_grads.values().map(|(i, _)| i.len() as u64).sum::<u64>() * dim_guess * 4 * 3,
-                row_grads.values().map(|(i, _)| i.len() as u64).sum::<u64>() * 2,
+            let total_rows: u64 = row_grads.values().map(|(i, _)| i.len() as u64).sum();
+            let (cost_t, remote_bytes) = super::common::vanilla_learnable_update_cost(
+                &net.cost,
+                total_rows,
+                remote_learnable_rows,
+                parts,
             );
-            if remote_learnable_rows > 0 {
-                let bytes = remote_learnable_rows * dim_guess * 4;
-                lf_t += net.cost.xfer_time_msgs(Lane::Net, bytes, (parts - 1).max(1) as u64);
-                net.ledgers[0].charge(Lane::Net, bytes, 0.0);
+            lf_t += cost_t;
+            if remote_bytes > 0 {
+                net.ledgers[0].charge(Lane::Net, remote_bytes, 0.0);
             }
             stages.add(Stage::Update, lf_t);
             epoch_time += lf_t;
@@ -292,6 +295,9 @@ impl VanillaEngine {
 
         Ok(EpochReport {
             epoch_time_s: epoch_time,
+            // No overlap in the sequential runtime.
+            critical_path_s: epoch_time,
+            worker_busy_s: worker_busy,
             stages,
             comm: net.total(),
             loss_mean: if batches > 0 { loss_sum / batches as f64 } else { f64::NAN },

@@ -11,6 +11,8 @@
 //! executables, returning per-call fetch statistics (local vs remote
 //! rows) that the engines charge to the communication cost model.
 
+use anyhow::{ensure, Result};
+
 use crate::datagen::feature_value;
 use crate::hetgraph::{HetGraph, NodeId};
 use crate::sampling::PAD;
@@ -100,9 +102,22 @@ impl FeatureStore {
     }
 
     /// Copy the feature row of `(ty, id)` into `out` (len = dim).
-    pub fn read_row(&self, ty: usize, id: NodeId, out: &mut [f32]) {
+    /// Errors on an out-of-range type/id or a mis-sized buffer so a
+    /// bad fetch from a worker thread surfaces as `anyhow::Error`
+    /// instead of a panic that poisons shared-session mutexes.
+    pub fn read_row(&self, ty: usize, id: NodeId, out: &mut [f32]) -> Result<()> {
+        ensure!(ty < self.tables.len(), "read_row: type {ty} out of range");
+        ensure!(
+            (id as usize) < self.counts[ty],
+            "read_row: id {id} out of range for type {ty} ({} rows)",
+            self.counts[ty]
+        );
         let d = self.dims[ty];
-        debug_assert_eq!(out.len(), d);
+        ensure!(
+            out.len() == d,
+            "read_row: buffer {} != dim {d} for type {ty}",
+            out.len()
+        );
         match &self.tables[ty] {
             Table::Lazy { seed } => {
                 let hint = if ty == self.target_ty {
@@ -119,6 +134,7 @@ impl FeatureStore {
                 out.copy_from_slice(&weight[base..base + d]);
             }
         }
+        Ok(())
     }
 
     /// Gather (possibly padded) `ids` into a dense `[len(ids), dim]`
@@ -131,9 +147,15 @@ impl FeatureStore {
         ids: &[NodeId],
         out: &mut [f32],
         is_remote: impl Fn(NodeId) -> bool,
-    ) -> FetchStats {
+    ) -> Result<FetchStats> {
+        ensure!(ty < self.tables.len(), "gather: type {ty} out of range");
         let d = self.dims[ty];
-        debug_assert_eq!(out.len(), ids.len() * d);
+        ensure!(
+            out.len() == ids.len() * d,
+            "gather: buffer {} != {} rows x dim {d} for type {ty}",
+            out.len(),
+            ids.len()
+        );
         let mut stats = FetchStats::default();
         for (i, &id) in ids.iter().enumerate() {
             let dstrow = &mut out[i * d..(i + 1) * d];
@@ -141,7 +163,7 @@ impl FeatureStore {
                 dstrow.fill(0.0);
                 continue;
             }
-            self.read_row(ty, id, dstrow);
+            self.read_row(ty, id, dstrow)?;
             stats.rows += 1;
             stats.bytes += (d * 4) as u64;
             if is_remote(id) {
@@ -149,7 +171,7 @@ impl FeatureStore {
                 stats.remote_bytes += (d * 4) as u64;
             }
         }
-        stats
+        Ok(stats)
     }
 
     /// Mutable access to a learnable table (sparse Adam update path).
@@ -193,11 +215,13 @@ mod tests {
         let (_, s) = store();
         let mut a = vec![0.0; s.dim(0)];
         let mut b = vec![0.0; s.dim(0)];
-        s.read_row(0, 5, &mut a);
-        s.read_row(0, 5, &mut b);
+        s.read_row(0, 5, &mut a).unwrap();
+        s.read_row(0, 5, &mut b).unwrap();
         assert_eq!(a, b);
-        s.read_row(0, 6, &mut b);
+        s.read_row(0, 6, &mut b).unwrap();
         assert_ne!(a, b);
+        assert!(s.read_row(99, 0, &mut b).is_err());
+        assert!(s.read_row(0, u32::MAX - 1, &mut b).is_err());
     }
 
     #[test]
@@ -207,7 +231,7 @@ mod tests {
         assert!(!s.is_learnable(0));
         let d = s.dim(1);
         let mut row = vec![0.0; d];
-        s.read_row(1, 0, &mut row);
+        s.read_row(1, 0, &mut row).unwrap();
         assert!(row.iter().any(|&x| x != 0.0));
         assert_eq!(
             s.learnable_bytes(1),
@@ -221,7 +245,7 @@ mod tests {
         let d = s.dim(0);
         let ids = [1u32, PAD, 3, 7];
         let mut out = vec![1.0f32; ids.len() * d];
-        let stats = s.gather(0, &ids, &mut out, |id| id == 7);
+        let stats = s.gather(0, &ids, &mut out, |id| id == 7).unwrap();
         assert_eq!(stats.rows, 3);
         assert_eq!(stats.remote_rows, 1);
         assert_eq!(stats.bytes, (3 * d * 4) as u64);
@@ -247,7 +271,7 @@ mod tests {
         let mut by_label: std::collections::HashMap<u16, Vec<Vec<f32>>> = Default::default();
         for id in 0..40u32 {
             let mut row = vec![0.0; d];
-            s.read_row(0, id, &mut row);
+            s.read_row(0, id, &mut row).unwrap();
             by_label.entry(g.labels[id as usize] % 7).or_default().push(row);
         }
         // Not a strict statistical test — just checks the label hint is wired.

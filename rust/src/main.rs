@@ -34,6 +34,7 @@ fn main() -> Result<()> {
                  plan       --out <plan.json>      emit AOT artifact plan\n\
                  partition  [--method meta|random|metis|bytype] [--parts p]\n\
                  train      --engine raf|vanilla [--epochs n] [--artifacts dir]\n\
+                 \x20          [--runtime sequential|cluster] [--no-pipeline]\n\
                  info"
             );
             Ok(())
@@ -115,12 +116,24 @@ fn cmd_partition(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    if let Some(rt) = args.get("runtime") {
+        cfg.train.runtime = heta::config::RuntimeKind::parse(rt)
+            .with_context(|| format!("unknown runtime '{rt}' (sequential|cluster)"))?;
+    }
+    if args.has_flag("no-pipeline") {
+        cfg.train.pipeline = false;
+    }
     let engine = args.get_or("engine", "raf");
     let epochs = args.get_usize("epochs", 1);
     let artifacts = args.get_or("artifacts", &format!("artifacts/{}", cfg.name));
     let report = heta::coordinator::run_training(&cfg, &artifacts, &engine, epochs)?;
-    report.print(&format!("{}/{}", cfg.name, engine));
+    report.print(&format!(
+        "{}/{}/{}",
+        cfg.name,
+        engine,
+        cfg.train.runtime.name()
+    ));
     Ok(())
 }
 

@@ -3,6 +3,12 @@
 //! sync, and (learnable-)feature/model update. Each engine accumulates
 //! per-stage simulated seconds; reports render the same rows the paper
 //! plots.
+//!
+//! [`timeline`] adds the per-worker event timeline both runtimes fill,
+//! from which [`EpochReport::critical_path_s`] (max-over-workers,
+//! overlap-aware) is derived alongside the classic summed epoch time.
+
+pub mod timeline;
 
 /// The training stages of Fig. 3 / Fig. 10.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -102,7 +108,16 @@ impl StageTimes {
 /// Result of one training epoch under either engine.
 #[derive(Debug, Clone, Default)]
 pub struct EpochReport {
+    /// Classic no-overlap accounting (per batch: slowest worker forward,
+    /// leader phases, slowest worker backward — summed).
     pub epoch_time_s: f64,
+    /// Overlap-aware critical path from the per-worker event timeline:
+    /// max-over-workers with the double-buffered prefetch schedule. For
+    /// the sequential runtime this equals `epoch_time_s`; the pipelined
+    /// cluster runtime reports the (lower) pipelined schedule.
+    pub critical_path_s: f64,
+    /// Busy seconds per worker (sum of that worker's stage spans).
+    pub worker_busy_s: Vec<f64>,
     pub stages: StageTimes,
     pub comm: crate::comm::Ledger,
     pub loss_mean: f64,
@@ -111,10 +126,29 @@ pub struct EpochReport {
 }
 
 impl EpochReport {
+    /// Fold another epoch's report into this one (totals accumulate;
+    /// loss/accuracy take the latest epoch's value).
+    pub fn absorb(&mut self, rep: &EpochReport) {
+        self.epoch_time_s += rep.epoch_time_s;
+        self.critical_path_s += rep.critical_path_s;
+        if self.worker_busy_s.len() < rep.worker_busy_s.len() {
+            self.worker_busy_s.resize(rep.worker_busy_s.len(), 0.0);
+        }
+        for (b, r) in self.worker_busy_s.iter_mut().zip(&rep.worker_busy_s) {
+            *b += r;
+        }
+        self.stages.merge(&rep.stages);
+        self.comm.merge(&rep.comm);
+        self.loss_mean = rep.loss_mean;
+        self.accuracy = rep.accuracy;
+        self.batches += rep.batches;
+    }
+
     pub fn print(&self, label: &str) {
         println!(
-            "[{label}] epoch {} | loss {:.4} acc {:.3} | batches {}",
+            "[{label}] epoch {} (critical path {}) | loss {:.4} acc {:.3} | batches {}",
             crate::util::fmt_secs(self.epoch_time_s),
+            crate::util::fmt_secs(self.critical_path_s),
             self.loss_mean,
             self.accuracy,
             self.batches
@@ -129,6 +163,15 @@ impl EpochReport {
             crate::util::fmt_bytes(self.comm.bytes[2]),
             crate::util::fmt_bytes(self.comm.bytes[3]),
         );
+        if !self.worker_busy_s.is_empty() {
+            let rows: Vec<String> = self
+                .worker_busy_s
+                .iter()
+                .enumerate()
+                .map(|(w, &b)| format!("w{w} {}", crate::util::fmt_secs(b)))
+                .collect();
+            println!("    workers: {}", rows.join(" | "));
+        }
     }
 }
 
@@ -159,6 +202,25 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.get(Stage::Forward), 3.0);
         assert_eq!(a.get(Stage::Update), 4.0);
+    }
+
+    #[test]
+    fn absorb_accumulates_totals_and_tracks_latest_loss() {
+        let mut total = EpochReport::default();
+        let mut a = EpochReport::default();
+        a.epoch_time_s = 2.0;
+        a.critical_path_s = 1.5;
+        a.worker_busy_s = vec![1.0, 0.5];
+        a.loss_mean = 3.0;
+        a.batches = 4;
+        total.absorb(&a);
+        a.loss_mean = 2.0;
+        total.absorb(&a);
+        assert_eq!(total.epoch_time_s, 4.0);
+        assert_eq!(total.critical_path_s, 3.0);
+        assert_eq!(total.worker_busy_s, vec![2.0, 1.0]);
+        assert_eq!(total.loss_mean, 2.0);
+        assert_eq!(total.batches, 8);
     }
 
     #[test]

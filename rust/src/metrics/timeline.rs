@@ -1,0 +1,306 @@
+//! Per-worker event timeline of one training epoch (simulated clock).
+//!
+//! Both execution runtimes record, per batch, the modeled duration of
+//! every stage on every worker plus the leader-side phases. From one
+//! timeline two epoch times are derived:
+//!
+//! * [`EpochTimeline::sequential_time`] — the classic accounting the
+//!   seed engines reported: per batch, the slowest worker's
+//!   sample+fetch+copy+forward, then the leader phases, then the
+//!   slowest worker's backward, all summed (no overlap).
+//! * [`EpochTimeline::pipelined_time`] — the double-buffered cluster
+//!   schedule: each worker prefetches batch `i+1`'s sampling and
+//!   read-only cache fetches while the leader runs batch `i`'s
+//!   gather → leader-step → scatter, so prefetch work is hidden
+//!   whenever it fits inside the leader phase. This is the
+//!   critical-path (max-over-workers, overlap-aware) epoch time.
+//!
+//! The schedule is a deterministic function of the recorded durations —
+//! thread interleavings of the real runtime never affect it.
+
+/// Modeled per-worker durations for one batch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerSpan {
+    /// Neighbor sampling (prefetchable).
+    pub sample_s: f64,
+    /// Cache fetch of read-only feature rows (prefetchable).
+    pub fetch_ro_s: f64,
+    /// Cache fetch of learnable rows (must follow the previous update).
+    pub fetch_lr_s: f64,
+    /// Input marshalling / H2D copy.
+    pub copy_s: f64,
+    /// Worker forward artifact execution.
+    pub fwd_s: f64,
+    /// Worker backward artifact execution + gradient extraction.
+    pub bwd_s: f64,
+}
+
+impl WorkerSpan {
+    /// Work that the pipeline may run ahead for the next batch.
+    pub fn prefetchable_s(&self) -> f64 {
+        self.sample_s + self.fetch_ro_s
+    }
+
+    /// Work bound to the batch's execution slot.
+    pub fn exec_fwd_s(&self) -> f64 {
+        self.fetch_lr_s + self.copy_s + self.fwd_s
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.prefetchable_s() + self.exec_fwd_s() + self.bwd_s
+    }
+}
+
+/// Modeled leader-side durations for one batch (between the workers'
+/// forward and backward phases, plus the post-backward update).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LeaderSpan {
+    /// Gather of worker partials at the leader (RAF) or the dense
+    /// gradient all-reduce (vanilla).
+    pub gather_s: f64,
+    /// Leader artifact execution (cross-relation agg + head + loss).
+    pub leader_s: f64,
+    /// Scatter of gradients back to the workers.
+    pub scatter_s: f64,
+    /// Weight / learnable-feature updates closing the batch.
+    pub update_s: f64,
+    /// Replica gradient synchronization.
+    pub sync_s: f64,
+}
+
+impl LeaderSpan {
+    /// The window overlapping the workers' prefetch of batch `i+1`.
+    pub fn mid_s(&self) -> f64 {
+        self.gather_s + self.leader_s + self.scatter_s
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.mid_s() + self.update_s + self.sync_s
+    }
+}
+
+/// One batch: per-worker spans plus the leader phase.
+#[derive(Debug, Clone, Default)]
+pub struct BatchSpans {
+    pub workers: Vec<WorkerSpan>,
+    pub leader: LeaderSpan,
+}
+
+/// The event timeline of a whole epoch.
+#[derive(Debug, Clone, Default)]
+pub struct EpochTimeline {
+    pub workers: usize,
+    pub batches: Vec<BatchSpans>,
+}
+
+fn max_over(xs: impl Iterator<Item = f64>) -> f64 {
+    xs.fold(0.0, f64::max)
+}
+
+impl EpochTimeline {
+    pub fn new(workers: usize) -> EpochTimeline {
+        EpochTimeline {
+            workers,
+            batches: Vec::new(),
+        }
+    }
+
+    /// Record one batch. `workers` must have one span per worker;
+    /// short rows are padded with zero spans (defensive, not expected).
+    pub fn push_batch(&mut self, mut workers: Vec<WorkerSpan>, leader: LeaderSpan) {
+        workers.resize(self.workers, WorkerSpan::default());
+        self.batches.push(BatchSpans { workers, leader });
+    }
+
+    /// No-overlap accounting: per batch, slowest worker forward phase
+    /// (including its prefetchable work), leader phases, slowest
+    /// backward, summed over batches.
+    pub fn sequential_time(&self) -> f64 {
+        let mut t = 0.0;
+        for b in &self.batches {
+            t += max_over(b.workers.iter().map(|w| w.prefetchable_s() + w.exec_fwd_s()));
+            t += b.leader.mid_s();
+            t += max_over(b.workers.iter().map(|w| w.bwd_s));
+            t += b.leader.update_s + b.leader.sync_s;
+        }
+        t
+    }
+
+    /// Double-buffered schedule: worker `w` prefetches batch `i+1`
+    /// (sampling + read-only fetch) immediately after shipping its
+    /// batch-`i` partials, concurrently with the leader's
+    /// gather → leader-step → scatter. Forward execution of batch `i`
+    /// still waits for batch `i-1`'s update (weights/learnable rows
+    /// must be current — the equivalence contract), so the speedup
+    /// comes exactly from hiding prefetch work inside the leader phase.
+    pub fn pipelined_time(&self) -> f64 {
+        let n = self.batches.len();
+        if n == 0 {
+            return 0.0;
+        }
+        // pf_done[w]: when w's prefetch for the *current* batch is done.
+        let mut pf_done: Vec<f64> = self.batches[0]
+            .workers
+            .iter()
+            .map(|w| w.prefetchable_s())
+            .collect();
+        let mut ready = 0.0f64; // params for the current batch are current
+        for (i, b) in self.batches.iter().enumerate() {
+            let fwd_done: Vec<f64> = b
+                .workers
+                .iter()
+                .zip(&pf_done)
+                .map(|(w, &pf)| pf.max(ready) + w.exec_fwd_s())
+                .collect();
+            let scatter_done = max_over(fwd_done.iter().copied()) + b.leader.mid_s();
+            // Prefetch of batch i+1 starts right after each worker's send.
+            if i + 1 < n {
+                for (w, (&fd, span)) in fwd_done
+                    .iter()
+                    .zip(&self.batches[i + 1].workers)
+                    .enumerate()
+                {
+                    pf_done[w] = fd + span.prefetchable_s();
+                }
+            }
+            let bwd_done = b.workers.iter().enumerate().map(|(w, span)| {
+                let free = if i + 1 < n { pf_done[w] } else { fwd_done[w] };
+                free.max(scatter_done) + span.bwd_s
+            });
+            ready = max_over(bwd_done) + b.leader.update_s + b.leader.sync_s;
+        }
+        ready
+    }
+
+    /// Seconds the pipeline hides relative to sequential execution.
+    pub fn overlap_saving_s(&self) -> f64 {
+        (self.sequential_time() - self.pipelined_time()).max(0.0)
+    }
+
+    /// Total busy seconds per worker (sum of that worker's spans).
+    pub fn worker_busy_s(&self) -> Vec<f64> {
+        let mut busy = vec![0.0f64; self.workers];
+        for b in &self.batches {
+            for (w, span) in b.workers.iter().enumerate() {
+                busy[w] += span.total_s();
+            }
+        }
+        busy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn span(sample: f64, fwd: f64, bwd: f64) -> WorkerSpan {
+        WorkerSpan {
+            sample_s: sample,
+            fetch_ro_s: sample * 0.1,
+            fetch_lr_s: sample * 0.05,
+            copy_s: 0.01,
+            fwd_s: fwd,
+            bwd_s: bwd,
+        }
+    }
+
+    fn leader(mid: f64, upd: f64) -> LeaderSpan {
+        LeaderSpan {
+            gather_s: mid * 0.2,
+            leader_s: mid * 0.6,
+            scatter_s: mid * 0.2,
+            update_s: upd,
+            sync_s: 0.0,
+        }
+    }
+
+    fn tl(batches: usize, workers: usize, seed: u64) -> EpochTimeline {
+        let mut rng = Rng::new(seed);
+        let mut t = EpochTimeline::new(workers);
+        for _ in 0..batches {
+            let spans: Vec<WorkerSpan> = (0..workers)
+                .map(|_| span(rng.f64() * 0.2, rng.f64() * 0.1, rng.f64() * 0.1))
+                .collect();
+            t.push_batch(spans, leader(rng.f64() * 0.3, rng.f64() * 0.02));
+        }
+        t
+    }
+
+    #[test]
+    fn pipelined_never_exceeds_sequential() {
+        for seed in 0..50 {
+            let t = tl(1 + (seed as usize % 7), 1 + (seed as usize % 4), seed);
+            let seq = t.sequential_time();
+            let pipe = t.pipelined_time();
+            assert!(
+                pipe <= seq + 1e-12,
+                "pipelined {pipe} > sequential {seq} (seed {seed})"
+            );
+        }
+    }
+
+    #[test]
+    fn overlap_hides_prefetch_inside_leader_phase() {
+        // Two identical batches: prefetch (0.1s) fits inside the leader
+        // phase (0.3s), so the pipeline saves exactly one prefetch per
+        // overlapped batch boundary.
+        let mut t = EpochTimeline::new(2);
+        let w = WorkerSpan {
+            sample_s: 0.1,
+            fwd_s: 0.2,
+            bwd_s: 0.1,
+            ..Default::default()
+        };
+        let l = LeaderSpan {
+            leader_s: 0.3,
+            update_s: 0.05,
+            ..Default::default()
+        };
+        t.push_batch(vec![w, w], l);
+        t.push_batch(vec![w, w], l);
+        let seq = t.sequential_time();
+        let pipe = t.pipelined_time();
+        assert!((seq - 2.0 * (0.1 + 0.2 + 0.3 + 0.1 + 0.05)).abs() < 1e-12);
+        // Batch 1's 0.1s sample is fully hidden under batch 0's leader phase.
+        assert!((seq - pipe - 0.1).abs() < 1e-12, "seq {seq} pipe {pipe}");
+        assert!(pipe < seq);
+    }
+
+    #[test]
+    fn single_batch_has_no_overlap() {
+        let t = tl(1, 3, 9);
+        assert!((t.sequential_time() - t.pipelined_time()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn long_prefetch_degrades_gracefully() {
+        // Prefetch longer than the leader phase: pipeline stalls on it
+        // but still beats sequential (partial hiding).
+        let mut t = EpochTimeline::new(1);
+        let w = WorkerSpan {
+            sample_s: 0.5,
+            fwd_s: 0.1,
+            bwd_s: 0.1,
+            ..Default::default()
+        };
+        let l = LeaderSpan {
+            leader_s: 0.2,
+            ..Default::default()
+        };
+        t.push_batch(vec![w], l);
+        t.push_batch(vec![w], l);
+        let seq = t.sequential_time();
+        let pipe = t.pipelined_time();
+        // Only 0.2s of the 0.5s prefetch hides per boundary.
+        assert!((seq - pipe - 0.2).abs() < 1e-12, "seq {seq} pipe {pipe}");
+    }
+
+    #[test]
+    fn worker_busy_accounts_all_spans() {
+        let t = tl(4, 3, 11);
+        let busy = t.worker_busy_s();
+        assert_eq!(busy.len(), 3);
+        assert!(busy.iter().all(|&b| b > 0.0));
+    }
+}

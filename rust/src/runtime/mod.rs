@@ -243,10 +243,19 @@ impl ParamStore {
         &self.params[name]
     }
 
-    /// Apply one Adam step with the given gradient.
-    pub fn step(&mut self, name: &str, grad: &[f32]) {
-        let p = self.params.get_mut(name).expect("param exists");
-        self.adam.get_mut(name).expect("adam state").step(p, grad);
+    /// Apply one Adam step with the given gradient. Errors (instead of
+    /// panicking) on an unknown parameter so a cluster worker/leader
+    /// thread can surface the fault through its `Result` channel.
+    pub fn step(&mut self, name: &str, grad: &[f32]) -> Result<()> {
+        let p = self
+            .params
+            .get_mut(name)
+            .with_context(|| format!("step on unknown parameter '{name}'"))?;
+        self.adam
+            .get_mut(name)
+            .with_context(|| format!("missing Adam state for '{name}'"))?
+            .step(p, grad);
+        Ok(())
     }
 
     /// Total parameter elements (gradient-allreduce volume accounting).
@@ -298,8 +307,9 @@ mod tests {
         let mut s = ParamStore::new(1, AdamParams::default());
         s.ensure(&wspec("w", vec![4]));
         let before = s.get("w").clone();
-        s.step("w", &[1.0, 1.0, 1.0, 1.0]);
+        s.step("w", &[1.0, 1.0, 1.0, 1.0]).unwrap();
         assert_ne!(&before, s.get("w"));
         assert_eq!(s.total_elems(), 4);
+        assert!(s.step("missing", &[1.0]).is_err());
     }
 }

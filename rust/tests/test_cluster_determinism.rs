@@ -1,0 +1,217 @@
+//! Sampling determinism under concurrency, and sequential≡cluster
+//! equivalence (Prop. 1 must be runtime-independent).
+//!
+//! The first half needs no AOT artifacts: it drives the cluster
+//! transport (threads + mailbox collectives) through the same
+//! per-partition sampling the RAF cluster workers perform — including
+//! the double-buffered prefetch order — and asserts byte-identical
+//! `TreeSample` ids against the sequential path across 3 epochs.
+//!
+//! The second half (artifact-gated, like `test_equivalence`) runs full
+//! training on both runtimes and asserts *identical* loss trajectories
+//! — not merely close: the cluster collectives reduce in worker-id
+//! order, so float accumulation order matches the sequential engine
+//! exactly.
+
+use heta::cluster::collective::star;
+use heta::config::{partition_edge_filter, Config, RuntimeKind};
+use heta::coordinator::{Engine, Session, SystemKind};
+use heta::hetgraph::NodeId;
+use heta::partition::meta::meta_partition;
+use heta::sampling::{sample_tree, TreeSample};
+use heta::util::json::parse;
+use heta::util::rng::Rng;
+
+const CFG: &str = r#"{
+    "name": "determinism",
+    "dataset": {"preset": "mag", "scale": 2e-4, "seed": 11},
+    "model": {"arch": "rgcn", "hidden": 16, "fanouts": [4, 3]},
+    "train": {"batch_size": 24, "num_partitions": 3, "seed": 5}
+}"#;
+
+/// Batch list exactly as the engines build it (shuffle + drop tail).
+fn epoch_batches(cfg: &Config, g: &heta::hetgraph::HetGraph, epoch: usize) -> Vec<Vec<NodeId>> {
+    let mut train = g.train_nodes();
+    let mut rng = Rng::new(cfg.train.shuffle_seed(epoch));
+    rng.shuffle(&mut train);
+    train
+        .chunks(cfg.train.batch_size)
+        .filter(|c| c.len() == cfg.train.batch_size)
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+#[test]
+fn threaded_prefetching_workers_sample_identically_to_sequential() {
+    let cfg = Config::from_json(&parse(CFG).unwrap()).unwrap();
+    let g = std::sync::Arc::new(cfg.build_graph());
+    let (mp, tree) = meta_partition(&g, cfg.train.num_partitions, cfg.model.layers, None);
+    let tree = std::sync::Arc::new(tree);
+    let parts = mp.num_parts;
+
+    for epoch in 0..3 {
+        let batches = epoch_batches(&cfg, &g, epoch);
+        assert!(batches.len() >= 2, "need ≥2 batches to exercise prefetch");
+
+        // Sequential reference: batch-major, partition-minor.
+        let mut reference: Vec<Vec<TreeSample>> = Vec::new();
+        for (bi, chunk) in batches.iter().enumerate() {
+            let mut per_part = Vec::new();
+            for p in 0..parts {
+                let filter = partition_edge_filter(&tree, &mp, p);
+                per_part.push(sample_tree(
+                    &g,
+                    &tree,
+                    &cfg.model.fanouts,
+                    chunk,
+                    0,
+                    cfg.train.batch_seed(epoch, bi),
+                    filter,
+                ));
+            }
+            reference.push(per_part);
+        }
+
+        // Cluster path: one thread per partition, sampling in the
+        // runtime's double-buffered order (batch i+1 prefetched before
+        // batch i's result ships), gathered in worker-id order.
+        let (hub, ports) = star::<Vec<Vec<NodeId>>, ()>(parts);
+        let gathered: Vec<Vec<Vec<Vec<NodeId>>>> = std::thread::scope(|s| {
+            for port in ports {
+                let cfg = &cfg;
+                let g = &g;
+                let tree = &tree;
+                let mp = &mp;
+                let batches = &batches;
+                s.spawn(move || {
+                    let p = port.id();
+                    let mut prefetched: Option<TreeSample> = None;
+                    for bi in 0..batches.len() {
+                        let sample = prefetched.take().unwrap_or_else(|| {
+                            let filter = partition_edge_filter(tree, mp, p);
+                            sample_tree(
+                                g,
+                                tree,
+                                &cfg.model.fanouts,
+                                &batches[bi],
+                                0,
+                                cfg.train.batch_seed(epoch, bi),
+                                filter,
+                            )
+                        });
+                        // Prefetch the next batch before shipping this
+                        // one — the pipeline's out-of-order schedule.
+                        if bi + 1 < batches.len() {
+                            let filter = partition_edge_filter(tree, mp, p);
+                            prefetched = Some(sample_tree(
+                                g,
+                                tree,
+                                &cfg.model.fanouts,
+                                &batches[bi + 1],
+                                0,
+                                cfg.train.batch_seed(epoch, bi + 1),
+                                filter,
+                            ));
+                        }
+                        port.send(sample.ids).unwrap();
+                        // Wait for the leader's release, like the
+                        // runtime's Ready gate, so one gather round
+                        // never sees two messages from one worker.
+                        if bi + 1 < batches.len() {
+                            port.recv().unwrap();
+                        }
+                    }
+                });
+            }
+            (0..batches.len())
+                .map(|bi| {
+                    let round = hub.gather().unwrap();
+                    if bi + 1 < batches.len() {
+                        hub.broadcast(()).unwrap();
+                    }
+                    round
+                })
+                .collect()
+        });
+
+        for (bi, per_part) in gathered.iter().enumerate() {
+            for (p, ids) in per_part.iter().enumerate() {
+                assert_eq!(
+                    ids, &reference[bi][p].ids,
+                    "epoch {epoch} batch {bi} partition {p}: sampled tree diverged"
+                );
+            }
+        }
+    }
+}
+
+// ---- artifact-gated full-training equivalence ----
+
+fn artifacts_ready(cfg: &str) -> bool {
+    std::path::Path::new(&format!("artifacts/{cfg}/manifest.json")).exists()
+}
+
+fn run_with_runtime(
+    system: SystemKind,
+    cfg_name: &str,
+    runtime: RuntimeKind,
+    epochs: usize,
+) -> Vec<(f64, f64, f64, f64)> {
+    let mut cfg = Config::load(&format!("configs/{cfg_name}.json")).unwrap();
+    cfg.train.runtime = runtime;
+    let dir = format!("artifacts/{cfg_name}");
+    let mut sess = Session::new(&cfg, &dir).unwrap();
+    let mut engine = Engine::build(&sess, system).unwrap();
+    (0..epochs)
+        .map(|ep| {
+            let r = engine.run_epoch(&mut sess, ep).unwrap();
+            (r.loss_mean, r.accuracy, r.epoch_time_s, r.critical_path_s)
+        })
+        .collect()
+}
+
+#[test]
+fn cluster_runtime_reproduces_sequential_losses_exactly() {
+    if !artifacts_ready("mag-tiny") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    for system in [SystemKind::Heta, SystemKind::DglMetis] {
+        let seq = run_with_runtime(system, "mag-tiny", RuntimeKind::Sequential, 3);
+        let clu = run_with_runtime(system, "mag-tiny", RuntimeKind::Cluster, 3);
+        for (ep, ((ls, acc_s, _, _), (lc, acc_c, et, cp))) in seq.iter().zip(&clu).enumerate() {
+            assert_eq!(
+                ls, lc,
+                "{system:?} epoch {ep}: cluster loss {lc} != sequential {ls}"
+            );
+            assert_eq!(acc_s, acc_c, "{system:?} epoch {ep}: accuracy diverged");
+            assert!(
+                cp <= et,
+                "{system:?} epoch {ep}: critical path {cp} exceeds summed time {et}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipelined_critical_path_beats_sequential_runtime() {
+    if !artifacts_ready("mag-tiny") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let seq = run_with_runtime(SystemKind::Heta, "mag-tiny", RuntimeKind::Sequential, 1);
+    let clu = run_with_runtime(SystemKind::Heta, "mag-tiny", RuntimeKind::Cluster, 1);
+    let (_, _, seq_time, seq_cp) = seq[0];
+    let (_, _, clu_time, clu_cp) = clu[0];
+    assert_eq!(seq_time, seq_cp, "sequential runtime has no overlap");
+    // Within one cluster run the summed and pipelined times price the
+    // same event set, so the overlap saving is measurement-noise-free.
+    assert!(
+        clu_cp < clu_time,
+        "pipeline hid no work: critical path {clu_cp} vs summed {clu_time}"
+    );
+    assert!(
+        clu_cp < seq_cp,
+        "pipelined critical path {clu_cp} not below sequential {seq_cp}"
+    );
+}
