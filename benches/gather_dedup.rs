@@ -1,0 +1,248 @@
+//! Deduplicated-frontier gather A/B (the PR-2 tentpole): per-slot
+//! gather + per-occurrence cache accounting (seed path, `dedup_fetch =
+//! false`) vs frontier staging + in-memory scatter + batched cache
+//! accounting (`dedup_fetch = true`).
+//!
+//! The artifact-free half measures the input-build mechanics directly —
+//! rows fetched, bytes moved, wall-clock per input build — on a sampled
+//! Mag tree. The artifact-gated half (skipped without `make artifacts`)
+//! runs full epochs on both engines and both runtimes with the flag on
+//! and off, asserting byte-identical losses and strictly fewer fetched
+//! rows/bytes. Always emits `BENCH_gather.json`.
+
+use heta::cache::{FeatureCache, Policy, TypeProfile};
+use heta::comm::CostModel;
+use heta::config::{Config, RuntimeKind};
+use heta::coordinator::{Engine, Session, SystemKind};
+use heta::datagen::{generate, GenParams, Preset};
+use heta::hetgraph::{HetGraph, MetaTree};
+use heta::kvstore::{scatter_rows, FeatureStore, FetchStats};
+use heta::metrics::EpochReport;
+use heta::sampling::{presample_hotness, sample_tree, Frontier, TreeSample, PAD};
+use heta::util::bench::{black_box, report, table, Bench};
+use heta::util::json::Json;
+
+/// Seed-path input build: every padded slot of every block input
+/// gathered independently, cache consulted per occurrence.
+#[allow(clippy::too_many_arguments)]
+fn build_slots(
+    g: &HetGraph,
+    tree: &MetaTree,
+    store: &FeatureStore,
+    sample: &TreeSample,
+    batch: &[u32],
+    cache: &mut FeatureCache,
+    cost: &CostModel,
+    bufs: &mut Vec<Vec<f32>>,
+) -> (FetchStats, f64) {
+    let mut stats = FetchStats::default();
+    let mut cache_t = 0.0;
+    for (ei, e) in tree.edges.iter().enumerate() {
+        let ty = tree.vertices[e.child].ty;
+        let ids = &sample.ids[e.child];
+        let dim = store.dim(ty);
+        let buf = &mut bufs[ei];
+        buf.resize(ids.len() * dim, 0.0);
+        stats.merge(store.gather(ty, ids, buf, |_| false).unwrap());
+        for &id in ids.iter().filter(|&&id| id != PAD) {
+            cache_t += cache.access(cost, ty, id, 0, false);
+        }
+    }
+    // Target features of the root batch.
+    let tgt = g.schema.target;
+    let dim = store.dim(tgt);
+    let buf = bufs.last_mut().unwrap();
+    buf.resize(batch.len() * dim, 0.0);
+    stats.merge(store.gather(tgt, batch, buf, |_| false).unwrap());
+    for &id in batch {
+        cache_t += cache.access(cost, tgt, id, 0, false);
+    }
+    (stats, cache_t)
+}
+
+/// Dedup-path input build: frontier rebuild, one unique-row staging
+/// gather + one batched cache consultation per type, scatter per input.
+#[allow(clippy::too_many_arguments)]
+fn build_dedup(
+    g: &HetGraph,
+    tree: &MetaTree,
+    store: &FeatureStore,
+    sample: &TreeSample,
+    batch: &[u32],
+    cache: &mut FeatureCache,
+    cost: &CostModel,
+    fr: &mut Frontier,
+    staging: &mut Vec<Vec<f32>>,
+    bufs: &mut Vec<Vec<f32>>,
+) -> (FetchStats, f64) {
+    let ntypes = g.schema.node_types.len();
+    fr.rebuild(tree, sample, ntypes, true);
+    let mut stats = FetchStats::default();
+    let mut cache_t = 0.0;
+    for ty in 0..ntypes {
+        let uniq = fr.rows(ty);
+        let dim = store.dim(ty);
+        staging[ty].resize(uniq.len() * dim, 0.0);
+        stats.merge(store.gather_unique(ty, uniq, &mut staging[ty], |_| false).unwrap());
+        cache_t += cache.access_unique(cost, ty, uniq, 0);
+    }
+    for (ei, e) in tree.edges.iter().enumerate() {
+        let ty = tree.vertices[e.child].ty;
+        let dim = store.dim(ty);
+        let inv = &fr.slot_to_unique[e.child];
+        let buf = &mut bufs[ei];
+        buf.resize(inv.len() * dim, 0.0);
+        scatter_rows(&staging[ty], inv, dim, buf);
+    }
+    let tgt = g.schema.target;
+    let dim = store.dim(tgt);
+    let buf = bufs.last_mut().unwrap();
+    buf.resize(batch.len() * dim, 0.0);
+    for (i, &id) in batch.iter().enumerate() {
+        let u = fr.unique_index(tgt, id).expect("root batch is in the frontier");
+        buf[i * dim..(i + 1) * dim].copy_from_slice(&staging[tgt][u * dim..(u + 1) * dim]);
+    }
+    (stats, cache_t)
+}
+
+fn engine_epoch(cfg: &Config, system: SystemKind, runtime: RuntimeKind, dedup: bool) -> EpochReport {
+    let mut cfg = cfg.clone();
+    cfg.train.runtime = runtime;
+    cfg.train.dedup_fetch = dedup;
+    let dir = format!("artifacts/{}", cfg.name);
+    let mut sess = Session::new(&cfg, &dir)
+        .unwrap_or_else(|e| panic!("session for {}: {e} (run `make artifacts`)", cfg.name));
+    let mut engine = Engine::build(&sess, system).unwrap();
+    engine.run_epoch(&mut sess, 0).unwrap()
+}
+
+fn main() {
+    let b = Bench::new("gather_dedup").with_budget(1.5);
+    let g = generate(Preset::Mag, 1e-3, &GenParams::default());
+    let tree = MetaTree::build(&g.schema, 2);
+    let fanouts = [10usize, 5];
+    let batch: Vec<u32> = g.train_nodes()[..64].to_vec();
+    let sample = sample_tree(&g, &tree, &fanouts, &batch, 0, 7, |_| true);
+    let store = FeatureStore::new(&g, 1);
+    let cost = CostModel::default();
+    let hotness = presample_hotness(&g, &tree, &fanouts, 64, 1, 3);
+    let profiles: Vec<TypeProfile> = g
+        .schema
+        .node_types
+        .iter()
+        .map(|t| TypeProfile {
+            name: t.name.clone(),
+            count: t.count,
+            feat_dim: t.feat_dim,
+            learnable: t.learnable,
+        })
+        .collect();
+    let mut cache =
+        FeatureCache::build(Policy::HotnessMissPenalty, &profiles, &hotness, &cost, 4 << 20, 1);
+
+    let nbufs = tree.edges.len() + 1;
+    let mut bufs: Vec<Vec<f32>> = vec![Vec::new(); nbufs];
+    let mut staging: Vec<Vec<f32>> = vec![Vec::new(); g.schema.node_types.len()];
+    let mut fr = Frontier::default();
+
+    // One untimed pass of each to collect the accounting.
+    let (slot_stats, _) =
+        build_slots(&g, &tree, &store, &sample, &batch, &mut cache, &cost, &mut bufs);
+    let (uniq_stats, _) = build_dedup(
+        &g, &tree, &store, &sample, &batch, &mut cache, &cost, &mut fr, &mut staging, &mut bufs,
+    );
+    assert!(uniq_stats.rows < slot_stats.rows, "dedup must fetch fewer rows");
+    assert!(uniq_stats.bytes < slot_stats.bytes, "dedup must move fewer bytes");
+
+    let r_slots = b.run("input_build/per_slot", || {
+        black_box(build_slots(
+            &g, &tree, &store, &sample, &batch, &mut cache, &cost, &mut bufs,
+        ));
+    });
+    let r_dedup = b.run("input_build/frontier_dedup", || {
+        black_box(build_dedup(
+            &g, &tree, &store, &sample, &batch, &mut cache, &cost, &mut fr, &mut staging,
+            &mut bufs,
+        ));
+    });
+
+    report("gather/rows_per_slot", slot_stats.rows);
+    report("gather/rows_unique", uniq_stats.rows);
+    report("gather/bytes_per_slot", slot_stats.bytes);
+    report("gather/bytes_unique", uniq_stats.bytes);
+    let mut pairs = vec![
+        ("rows_per_slot", Json::num(slot_stats.rows as f64)),
+        ("rows_unique", Json::num(uniq_stats.rows as f64)),
+        ("bytes_per_slot", Json::num(slot_stats.bytes as f64)),
+        ("bytes_unique", Json::num(uniq_stats.bytes as f64)),
+    ];
+    if let (Some(rs), Some(rd)) = (&r_slots, &r_dedup) {
+        report("gather/build_s_per_slot", format!("{:.9}", rs.mean_s));
+        report("gather/build_s_dedup", format!("{:.9}", rd.mean_s));
+        report("gather/build_speedup", format!("{:.2}x", rs.mean_s / rd.mean_s));
+        pairs.push(("build_s_per_slot", Json::num(rs.mean_s)));
+        pairs.push(("build_s_dedup", Json::num(rd.mean_s)));
+        pairs.push(("build_speedup", Json::num(rs.mean_s / rd.mean_s)));
+    }
+    let micro = Json::from_pairs(pairs);
+
+    // ---- artifact-gated engine A/B (sequential vs cluster) ----
+    let cfg_name = "mag-bench";
+    let engines = if std::path::Path::new(&format!("artifacts/{cfg_name}/manifest.json")).exists()
+    {
+        let cfg = Config::load(&format!("configs/{cfg_name}.json"))
+            .unwrap_or_else(|e| panic!("loading config {cfg_name}: {e}"));
+        let mut rows = Vec::new();
+        let mut entries = Vec::new();
+        for (system, sname) in [(SystemKind::Heta, "raf"), (SystemKind::DglOpt, "vanilla")] {
+            for (runtime, rname) in [
+                (RuntimeKind::Sequential, "sequential"),
+                (RuntimeKind::Cluster, "cluster"),
+            ] {
+                let on = engine_epoch(&cfg, system, runtime, true);
+                let off = engine_epoch(&cfg, system, runtime, false);
+                assert_eq!(
+                    on.loss_mean, off.loss_mean,
+                    "{sname}/{rname}: dedup_fetch must not change losses"
+                );
+                assert!(
+                    on.fetch.rows < off.fetch.rows && on.fetch.bytes < off.fetch.bytes,
+                    "{sname}/{rname}: dedup must strictly reduce fetched rows/bytes"
+                );
+                rows.push(vec![
+                    format!("{sname}/{rname}"),
+                    format!("{}", off.fetch.rows),
+                    format!("{}", on.fetch.rows),
+                    format!("{:.2}x", off.fetch.rows as f64 / on.fetch.rows.max(1) as f64),
+                ]);
+                entries.push((
+                    format!("{sname}_{rname}"),
+                    Json::from_pairs(vec![
+                        ("rows_off", Json::num(off.fetch.rows as f64)),
+                        ("rows_on", Json::num(on.fetch.rows as f64)),
+                        ("bytes_off", Json::num(off.fetch.bytes as f64)),
+                        ("bytes_on", Json::num(on.fetch.bytes as f64)),
+                        ("loss", Json::num(on.loss_mean)),
+                    ]),
+                ));
+            }
+        }
+        table(
+            "Dedup gather: fetched rows per epoch (off vs on)",
+            &["engine/runtime", "rows off", "rows on", "reduction"],
+            &rows,
+        );
+        Some(Json::Obj(entries.into_iter().collect()))
+    } else {
+        println!("skipping engine A/B: artifacts/{cfg_name} missing (run `make artifacts`)");
+        None
+    };
+
+    let mut top = vec![("micro", micro)];
+    if let Some(e) = engines {
+        top.push(("engines", e));
+    }
+    let out = Json::from_pairs(vec![("gather_dedup", Json::from_pairs(top))]).to_string();
+    std::fs::write("BENCH_gather.json", &out).expect("write BENCH_gather.json");
+    println!("wrote BENCH_gather.json");
+}

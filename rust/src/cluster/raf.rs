@@ -26,13 +26,14 @@ use crate::cache::FeatureCache;
 use crate::comm::SimNet;
 use crate::config::{partition_edge_filter, Config};
 use crate::coordinator::common::{
-    add_assign, apply_learnable_grads, build_inputs, ExtraInputs, Session,
+    add_assign, apply_learnable_grads, build_inputs, BatchArena, ExtraInputs, Session,
 };
 use crate::hetgraph::{HetGraph, MetaTree, NodeId};
+use crate::kvstore::FetchStats;
 use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::MetaPartition;
-use crate::sampling::{sample_tree, TreeSample, PAD};
+use crate::sampling::{sample_tree, Frontier, TreeSample, PAD};
 use crate::util::rng::Rng;
 
 use super::collective::{star, Hub, Port};
@@ -44,6 +45,9 @@ enum Up {
     Fwd {
         p1: Vec<f32>,
         p2: Vec<f32>,
+        /// KV-store fetch accounting of the forward input build (unique
+        /// rows per batch when dedup gather is on).
+        stats: FetchStats,
         span: WorkerSpan,
         stages: StageTimes,
     },
@@ -234,6 +238,7 @@ fn worker_run(
 ) -> Result<()> {
     bport.barrier()?;
     let scale = cfg.cost.compute_scale;
+    let ntypes = g.schema.node_types.len();
     // Per-partition artifact specs are constant across batches: clone
     // them once instead of per batch inside the serialized section.
     let art = format!("worker_fwd_p{p}");
@@ -245,7 +250,16 @@ fn worker_run(
             guard.rt.manifest.spec(&art_b)?.clone(),
         )
     };
-    let mut prefetched: Option<(TreeSample, f64)> = None;
+    // Root (target) rows join the fetch frontier only if this worker's
+    // artifact actually gathers them — the leader fetches the batch's
+    // target rows itself.
+    let needs_root = spec_f.inputs.iter().any(|i| i.kind == "target_feat");
+    // Per-thread marshalling scratch; `spare` lets two frontier
+    // allocations ping-pong with the double-buffered prefetch (the
+    // in-flight batch holds one while the prefetch fills the other).
+    let mut arena = BatchArena::new();
+    let mut spare: Option<Frontier> = None;
+    let mut prefetched: Option<(TreeSample, Option<Frontier>, f64)> = None;
 
     for (bi, chunk) in batches.iter().enumerate() {
         if bi > 0 {
@@ -255,7 +269,7 @@ fn worker_run(
                 Down::Grads { .. } => bail!("worker {p}: gradients arrived before Ready"),
             }
         }
-        let (sample, sample_s) = match prefetched.take() {
+        let (sample, frontier, sample_s) = match prefetched.take() {
             Some(s) => s,
             None => {
                 let t0 = Instant::now();
@@ -269,12 +283,17 @@ fn worker_run(
                     cfg.train.batch_seed(epoch, bi),
                     filter,
                 );
-                (s, t0.elapsed().as_secs_f64() * scale)
+                let fr = cfg
+                    .train
+                    .dedup_fetch
+                    .then(|| Frontier::take_rebuilt(&mut spare, tree, &s, ntypes, needs_root));
+                (s, fr, t0.elapsed().as_secs_f64() * scale)
             }
         };
 
         // ---- forward: marshal + execute under the session lock ----
-        let (p1, p2, span) = {
+        arena.begin_batch(ntypes);
+        let (p1, p2, stats, span) = {
             let mut guard = lock(sess_mx, "session")?;
             let sess: &mut Session = &mut **guard;
             let t1 = Instant::now();
@@ -284,11 +303,13 @@ fn worker_run(
                 sess,
                 &spec_f,
                 Some(&sample),
+                frontier.as_ref(),
                 chunk,
                 &extra,
                 &|_, _| false, // meta-partitioning: all fetches local
                 Some(&mut **cguard),
                 p % gpus,
+                &mut arena,
             )?;
             drop(cguard);
             let copy_s = t1.elapsed().as_secs_f64() * scale;
@@ -309,7 +330,7 @@ fn worker_run(
                 fwd_s,
                 bwd_s: 0.0,
             };
-            (p1, p2, span)
+            (p1, p2, acc.stats, span)
         };
         let mut stages = StageTimes::default();
         stages.add(Stage::Sample, span.sample_s);
@@ -319,11 +340,14 @@ fn worker_run(
         port.send(Up::Fwd {
             p1,
             p2,
+            stats,
             span,
             stages,
         })?;
 
-        // ---- double-buffer: prefetch batch i+1 during the leader phase ----
+        // ---- double-buffer: prefetch batch i+1 during the leader phase
+        // (sampling *and* the dedup frontier, so the dedup work overlaps
+        // the leader's gather/step/scatter) ----
         if pipeline && bi + 1 < batches.len() {
             let t = Instant::now();
             let filter = partition_edge_filter(tree, mp, p);
@@ -336,7 +360,11 @@ fn worker_run(
                 cfg.train.batch_seed(epoch, bi + 1),
                 filter,
             );
-            prefetched = Some((s, t.elapsed().as_secs_f64() * scale));
+            let fr = cfg
+                .train
+                .dedup_fetch
+                .then(|| Frontier::take_rebuilt(&mut spare, tree, &s, ntypes, needs_root));
+            prefetched = Some((s, fr, t.elapsed().as_secs_f64() * scale));
         }
 
         // ---- backward ----
@@ -351,15 +379,19 @@ fn worker_run(
             extra.insert(("grad".into(), 1), g1);
             extra.insert(("grad".into(), 2), g2);
             let t5 = Instant::now();
+            // Reuses the forward pass's staged rows: same batch, same
+            // frontier, features unmodified until the update phase.
             let (lits, _) = build_inputs(
                 sess,
                 &spec_b,
                 Some(&sample),
+                frontier.as_ref(),
                 chunk,
                 &extra,
                 &|_, _| false,
                 None, // rows already resident from forward
                 p % gpus,
+                &mut arena,
             )?;
             let outs = sess.rt.exec(&art_b, &lits)?;
             let bwd_s = t5.elapsed().as_secs_f64() * scale / gpus as f64;
@@ -396,6 +428,11 @@ fn worker_run(
             bwd_s,
             stages: bstages,
         })?;
+        // Batch done; recycle the frontier allocation for a later
+        // prefetch (the i+1 prefetch above already took the other one).
+        if let Some(f) = frontier {
+            spare = Some(f);
+        }
     }
     Ok(())
 }
@@ -423,6 +460,10 @@ fn leader_loop(
     let mut loss_sum = 0.0f64;
     let mut acc_sum = 0.0f64;
     let mut batches_done = 0usize;
+    let mut fetch = FetchStats::default();
+    // The leader's own marshalling scratch (its artifact has no sample,
+    // so no frontier — batch ids are already unique).
+    let mut leader_arena = BatchArena::new();
 
     for (bi, chunk) in batches.iter().enumerate() {
         // ---- gather worker partials (worker-id order) ----
@@ -435,11 +476,13 @@ fn leader_loop(
                 Up::Fwd {
                     p1,
                     p2,
+                    stats,
                     span,
                     stages: wstages,
                 } => {
                     add_assign(&mut partial_sums[0], &p1);
                     add_assign(&mut partial_sums[1], &p2);
+                    fetch.merge(stats);
                     worker_spans.push(span);
                     stages.merge(&wstages);
                 }
@@ -467,17 +510,20 @@ fn leader_loop(
             extra.insert(("partial_sum".into(), 2), partial_sums[1].clone());
             let t3 = Instant::now();
             let mut lc = lock(&caches[leader_part], "leader cache")?;
-            let (lits, _acc) = build_inputs(
+            let (lits, leader_acc) = build_inputs(
                 sess,
                 &spec,
+                None,
                 None,
                 chunk,
                 &extra,
                 &|_, _| false,
                 Some(&mut **lc),
                 0,
+                &mut leader_arena,
             )?;
             drop(lc);
+            fetch.merge(leader_acc.stats);
             let outs = sess.rt.exec("leader", &lits)?;
             let leader_t = t3.elapsed().as_secs_f64() * scale;
             if outs.len() < 5 {
@@ -637,6 +683,7 @@ fn leader_loop(
         worker_busy_s: timeline.worker_busy_s(),
         stages,
         comm: net.total(),
+        fetch,
         loss_mean: if batches_done > 0 {
             loss_sum / batches_done as f64
         } else {

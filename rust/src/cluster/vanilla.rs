@@ -22,14 +22,15 @@ use crate::cache::FeatureCache;
 use crate::comm::{Lane, SimNet};
 use crate::config::Config;
 use crate::coordinator::common::{
-    add_assign, apply_learnable_grads, build_inputs, vanilla_fetch_time,
-    vanilla_learnable_update_cost, ExtraInputs, Session,
+    add_assign, apply_learnable_grads, build_inputs, learnable_rows_sorted, vanilla_fetch_time,
+    vanilla_learnable_update_cost, BatchArena, ExtraInputs, Session,
 };
 use crate::hetgraph::{HetGraph, MetaTree, NodeId};
+use crate::kvstore::FetchStats;
 use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::NodePartition;
-use crate::sampling::{remote_counts, sample_tree, TreeSample, PAD};
+use crate::sampling::{remote_counts, sample_tree, Frontier, TreeSample, PAD};
 use crate::util::rng::Rng;
 
 use super::collective::{star, Hub, Port};
@@ -44,7 +45,12 @@ struct StepMsg {
     wgrads: Vec<(String, Vec<f32>)>,
     /// `(ty, ids, grads)` per learnable-row grad output.
     row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)>,
-    remote_learnable_rows: u64,
+    /// `(ty, valid rows, remote rows)` per learnable type, sorted by
+    /// type — the leader's sparse-update cost model (real dims).
+    learnable_rows: Vec<(usize, u64, u64)>,
+    /// KV-store fetch accounting of this worker's input build (unique
+    /// rows per batch when dedup gather is on).
+    stats: FetchStats,
     span: WorkerSpan,
     stages: StageTimes,
 }
@@ -210,6 +216,7 @@ fn worker_run(
     let scale = cfg.cost.compute_scale;
     let gpus = cfg.train.gpus_per_machine.max(1);
     let layers = cfg.model.layers;
+    let ntypes = g.schema.node_types.len();
     let cost = cfg.cost.clone();
     // The manifest is immutable during an epoch: clone the fused-step
     // spec once instead of per batch inside the serialized section.
@@ -217,7 +224,14 @@ fn worker_run(
         let guard = lock(sess_mx, "session")?;
         guard.rt.manifest.spec("vanilla")?.clone()
     };
-    let mut prefetched: Option<(TreeSample, f64)> = None;
+    // Root (target) rows join the fetch frontier only if the artifact
+    // actually gathers them.
+    let needs_root = spec.inputs.iter().any(|i| i.kind == "target_feat");
+    // Per-thread marshalling scratch; `spare` lets one frontier
+    // allocation ping-pong with the double-buffered prefetch.
+    let mut arena = BatchArena::new();
+    let mut spare: Option<Frontier> = None;
+    let mut prefetched: Option<(TreeSample, Option<Frontier>, f64)> = None;
 
     for (bi, chunk) in batches.iter().enumerate() {
         if bi > 0 {
@@ -227,14 +241,18 @@ fn worker_run(
         let batch_seed = cfg.train.batch_seed(epoch, bi);
 
         // -- sampling over the whole graph: remote hops are RPCs --
-        let (sample, mut sample_t) = match prefetched.take() {
+        let (sample, frontier, mut sample_t) = match prefetched.take() {
             Some(s) => s,
             None => {
                 let t0 = Instant::now();
                 let s = sample_tree(g, tree, &cfg.model.fanouts, micro, w * vb, batch_seed, |_| {
                     true
                 });
-                (s, t0.elapsed().as_secs_f64() * scale)
+                let fr = cfg
+                    .train
+                    .dedup_fetch
+                    .then(|| Frontier::take_rebuilt(&mut spare, tree, &s, ntypes, needs_root));
+                (s, fr, t0.elapsed().as_secs_f64() * scale)
             }
         };
         let rstats = remote_counts(tree, &sample, part, w);
@@ -246,6 +264,7 @@ fn worker_run(
         lock(net_mx, "net")?.charge(w, Lane::Net, rstats.remote * 8, 0.0)?;
 
         // -- fetch + fused step under the session lock --
+        arena.begin_batch(ntypes);
         let (msg_core, fetch_t, copy_s, step_t) = {
             let mut guard = lock(sess_mx, "session")?;
             let sess: &mut Session = &mut **guard;
@@ -259,11 +278,13 @@ fn worker_run(
                 sess,
                 &spec,
                 Some(&sample),
+                frontier.as_ref(),
                 micro,
                 &extra,
                 &|ty, id| part.owner_of(ty, id) != w,
                 cguard.as_mut().map(|gd| &mut ***gd),
                 0,
+                &mut arena,
             )?;
             drop(cguard);
             let copy_s = t1.elapsed().as_secs_f64() * scale;
@@ -281,7 +302,8 @@ fn worker_run(
 
             let mut wgrads: Vec<(String, Vec<f32>)> = Vec::new();
             let mut row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)> = Vec::new();
-            let mut remote_learnable_rows = 0u64;
+            // type → (valid rows, remote rows) for the update-cost model.
+            let mut learnable_counts: HashMap<usize, (u64, u64)> = HashMap::new();
             for (o, out) in spec.outputs.iter().zip(&outs) {
                 match o.kind.as_str() {
                     "wgrad" => {
@@ -289,9 +311,13 @@ fn worker_run(
                     }
                     "block_grad" => {
                         let (child, src_ty) = sess.edge_child(o.edge as usize);
+                        let counts = learnable_counts.entry(src_ty).or_insert((0, 0));
                         for &id in &sample.ids[child] {
-                            if id != PAD && part.owner_of(src_ty, id) != w {
-                                remote_learnable_rows += 1;
+                            if id != PAD {
+                                counts.0 += 1;
+                                if part.owner_of(src_ty, id) != w {
+                                    counts.1 += 1;
+                                }
                             }
                         }
                         row_grads.push((
@@ -302,6 +328,10 @@ fn worker_run(
                     }
                     "target_feat_grad" => {
                         if sess.store.is_learnable(sess.g.schema.target) {
+                            let counts = learnable_counts
+                                .entry(sess.g.schema.target)
+                                .or_insert((0, 0));
+                            counts.0 += micro.len() as u64;
                             row_grads.push((
                                 sess.g.schema.target,
                                 micro.to_vec(),
@@ -312,14 +342,19 @@ fn worker_run(
                     _ => {}
                 }
             }
+            let mut learnable_rows: Vec<(usize, u64, u64)> = learnable_counts
+                .into_iter()
+                .map(|(ty, (rows, remote))| (ty, rows, remote))
+                .collect();
+            learnable_rows.sort_unstable_by_key(|e| e.0);
             (
-                (loss, acc_v, wgrads, row_grads, remote_learnable_rows),
+                (loss, acc_v, wgrads, row_grads, learnable_rows, acc.stats),
                 fetch_t,
                 copy_s,
                 step_t,
             )
         };
-        let (loss, acc_v, wgrads, row_grads, remote_learnable_rows) = msg_core;
+        let (loss, acc_v, wgrads, row_grads, learnable_rows, stats) = msg_core;
 
         let mut stages = StageTimes::default();
         stages.add(Stage::Sample, sample_t);
@@ -343,12 +378,20 @@ fn worker_run(
             acc: acc_v,
             wgrads,
             row_grads,
-            remote_learnable_rows,
+            learnable_rows,
+            stats,
             span,
             stages,
         }))?;
+        // This batch's frontier is done; recycle its allocation for the
+        // prefetch below (ping-pong, no steady-state allocation).
+        if let Some(f) = frontier {
+            spare = Some(f);
+        }
 
-        // -- double-buffer: prefetch the next microbatch's sample --
+        // -- double-buffer: prefetch the next microbatch's sample (and
+        // its dedup frontier, so the dedup work overlaps the leader
+        // phase of batch `bi`) --
         if pipeline && bi + 1 < batches.len() {
             let nseed = cfg.train.batch_seed(epoch, bi + 1);
             let t = Instant::now();
@@ -361,7 +404,11 @@ fn worker_run(
                 nseed,
                 |_| true,
             );
-            prefetched = Some((s, t.elapsed().as_secs_f64() * scale));
+            let fr = cfg
+                .train
+                .dedup_fetch
+                .then(|| Frontier::take_rebuilt(&mut spare, tree, &s, ntypes, needs_root));
+            prefetched = Some((s, fr, t.elapsed().as_secs_f64() * scale));
         }
     }
     Ok(())
@@ -385,13 +432,15 @@ fn leader_loop(
     let mut loss_sum = 0.0f64;
     let mut acc_sum = 0.0f64;
     let mut batches_done = 0usize;
+    let mut fetch = FetchStats::default();
 
     for bi in 0..batches.len() {
         let msgs = hub.gather()?;
         let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
         let mut wgrads: HashMap<String, Vec<f32>> = HashMap::new();
         let mut row_grads: HashMap<usize, (Vec<NodeId>, Vec<f32>)> = HashMap::new();
-        let mut remote_learnable_rows = 0u64;
+        // type → (valid rows, remote rows), merged across workers.
+        let mut learnable_counts: HashMap<usize, (u64, u64)> = HashMap::new();
         for (wid, m) in msgs.into_iter().enumerate() {
             let m = match m {
                 Ok(m) => m,
@@ -412,7 +461,12 @@ fn leader_loop(
                 entry.0.extend_from_slice(&ids);
                 entry.1.extend_from_slice(&gvec);
             }
-            remote_learnable_rows += m.remote_learnable_rows;
+            for (ty, rows, remote) in m.learnable_rows {
+                let counts = learnable_counts.entry(ty).or_insert((0, 0));
+                counts.0 += rows;
+                counts.1 += remote;
+            }
+            fetch.merge(m.stats);
             worker_spans.push(m.span);
             stages.merge(&m.stages);
         }
@@ -443,13 +497,8 @@ fn leader_loop(
                 apply_learnable_grads(sess, *ty, ids, grads, inv);
             }
             let mut lf_t = t4.elapsed().as_secs_f64();
-            let total_rows: u64 = row_grads.values().map(|(i, _)| i.len() as u64).sum();
-            let (cost_t, remote_bytes) = vanilla_learnable_update_cost(
-                &net.cost,
-                total_rows,
-                remote_learnable_rows,
-                parts,
-            );
+            let lr = learnable_rows_sorted(learnable_counts, &sess.store);
+            let (cost_t, remote_bytes) = vanilla_learnable_update_cost(&net.cost, &lr, parts);
             lf_t += cost_t;
             if remote_bytes > 0 {
                 net.charge(0, Lane::Net, remote_bytes, 0.0)?;
@@ -488,6 +537,7 @@ fn leader_loop(
         worker_busy_s: timeline.worker_busy_s(),
         stages,
         comm,
+        fetch,
         loss_mean: if batches_done > 0 {
             loss_sum / batches_done as f64
         } else {

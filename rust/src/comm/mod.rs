@@ -94,6 +94,18 @@ impl CostModel {
         let i = lane.index();
         msgs as f64 * self.latency_s[i] + bytes as f64 / self.bandwidth[i]
     }
+
+    /// One batched host→device staging transfer (paper §6: "batches miss
+    /// rows into one staging transfer"): `rows` random DRAM touches
+    /// assemble the staging buffer (per-row DRAM latency, shared
+    /// bandwidth), then a single PCIe copy moves all `bytes` at once —
+    /// the per-row PCIe latency amortizes away. Shared by the no-cache
+    /// fetch path and the cache's batched-miss accounting so both price
+    /// staging identically.
+    #[inline]
+    pub fn staging_time(&self, bytes: u64, rows: u64) -> f64 {
+        self.xfer_time_msgs(Lane::Dram, bytes, rows) + self.xfer_time(Lane::Pcie, bytes)
+    }
 }
 
 /// Byte/time/message ledger per lane; one per worker plus one global.
@@ -280,6 +292,23 @@ mod tests {
         let one = c.xfer_time_msgs(Lane::Pcie, 1024, 1);
         let many = c.xfer_time_msgs(Lane::Pcie, 1024, 100);
         assert!(many > one * 50.0);
+    }
+
+    #[test]
+    fn staging_beats_per_row_transfers() {
+        // One staged transfer of r rows must undercut r row-sized PCIe
+        // messages (that's the amortization the batched path models),
+        // while still charging every DRAM row touch.
+        let c = CostModel::default();
+        let (rows, row_bytes) = (512u64, 256u64);
+        let staged = c.staging_time(rows * row_bytes, rows);
+        let per_row: f64 = (0..rows)
+            .map(|_| c.xfer_time(Lane::Dram, row_bytes) + c.xfer_time(Lane::Pcie, row_bytes))
+            .sum();
+        assert!(staged < per_row, "staged {staged} vs per-row {per_row}");
+        let expected = c.xfer_time_msgs(Lane::Dram, rows * row_bytes, rows)
+            + c.xfer_time(Lane::Pcie, rows * row_bytes);
+        assert!((staged - expected).abs() < 1e-15);
     }
 
     #[test]

@@ -101,6 +101,13 @@ pub struct TrainConfig {
     /// `false` runs the cluster runtime without overlap, isolating the
     /// pipelining gain for A/B benches.
     pub pipeline: bool,
+    /// Deduplicated-frontier feature gather (default true): each batch
+    /// fetches every distinct node id once into a staging buffer and
+    /// scatters padded blocks in memory, with cache hit/miss ledgers
+    /// advancing once per unique id. `false` reproduces the seed's
+    /// per-slot gather and per-occurrence cache accounting for A/B
+    /// comparisons; losses are byte-identical either way.
+    pub dedup_fetch: bool,
 }
 
 impl TrainConfig {
@@ -183,6 +190,7 @@ impl Config {
             runtime: RuntimeKind::parse(&runtime_name)
                 .with_context(|| format!("unknown runtime {runtime_name}"))?,
             pipeline: t.get("pipeline").as_bool().unwrap_or(true),
+            dedup_fetch: t.get("dedup_fetch").as_bool().unwrap_or(true),
         };
         let mut cost = CostModel::default();
         if let Some(c) = j.get("cost").as_obj() {
@@ -394,6 +402,19 @@ mod tests {
         assert_eq!(cfg.train.cache_policy, crate::cache::Policy::HotnessMissPenalty);
         assert_eq!(cfg.train.runtime, RuntimeKind::Sequential);
         assert!(cfg.train.pipeline);
+        assert!(cfg.train.dedup_fetch, "dedup gather must default on");
+    }
+
+    #[test]
+    fn parses_dedup_fetch_flag() {
+        let text = r#"{
+            "name": "x",
+            "dataset": {"preset": "mag", "scale": 1e-4},
+            "model": {"arch": "rgcn", "hidden": 8, "fanouts": [2]},
+            "train": {"batch_size": 8, "dedup_fetch": false}
+        }"#;
+        let cfg = Config::from_json(&parse(text).unwrap()).unwrap();
+        assert!(!cfg.train.dedup_fetch);
     }
 
     #[test]

@@ -23,12 +23,15 @@ use crate::cache::{FeatureCache, Policy, TypeProfile};
 use crate::comm::SimNet;
 use crate::config::{partition_edge_filter, RuntimeKind};
 use crate::hetgraph::NodeId;
+use crate::kvstore::FetchStats;
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::MetaPartition;
-use crate::sampling::{presample_hotness, sample_tree};
+use crate::sampling::{presample_hotness, sample_tree, Frontier};
 use crate::util::rng::Rng;
 
-use super::common::{add_assign, apply_learnable_grads, build_inputs, ExtraInputs, Session};
+use super::common::{
+    add_assign, apply_learnable_grads, build_inputs, BatchArena, ExtraInputs, Session,
+};
 
 pub struct RafEngine {
     pub mp: MetaPartition,
@@ -38,6 +41,13 @@ pub struct RafEngine {
     /// cycles duplicate relations; replicas ship grads to the owner).
     replica_count: HashMap<String, usize>,
     pub leader: usize,
+    /// Per-partition marshalling scratch + dedup frontier, recycled
+    /// across batches (sequential runtime; the cluster runtime keeps its
+    /// own per-thread arenas). The forward pass stages each type's
+    /// distinct rows once; the backward rebuild scatters from the same
+    /// staging.
+    arenas: Vec<BatchArena>,
+    frontiers: Vec<Frontier>,
 }
 
 impl RafEngine {
@@ -104,11 +114,15 @@ impl RafEngine {
                 }
             }
         }
+        let arenas = (0..mp.num_parts).map(|_| BatchArena::new()).collect();
+        let frontiers = vec![Frontier::default(); mp.num_parts];
         Ok(RafEngine {
             mp,
             caches,
             replica_count,
             leader: 0,
+            arenas,
+            frontiers,
         })
     }
 
@@ -137,6 +151,7 @@ impl RafEngine {
         let h = cfg.model.hidden;
         let parts = self.mp.num_parts;
         let gpus = cfg.train.gpus_per_machine.max(1);
+        let ntypes = sess.g.schema.node_types.len();
         let mut net = SimNet::new(parts, cfg.cost.clone());
         let mut stages = StageTimes::default();
         let mut epoch_time = 0.0f64;
@@ -144,6 +159,7 @@ impl RafEngine {
         let mut acc_sum = 0.0f64;
         let mut batches = 0usize;
         let mut worker_busy = vec![0.0f64; parts];
+        let mut fetch = FetchStats::default();
 
         let mut train = sess.g.train_nodes();
         let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
@@ -180,18 +196,32 @@ impl RafEngine {
                 let spec = sess.rt.manifest.spec(&art)?.clone();
                 let t1 = Instant::now();
                 let extra = ExtraInputs::new();
+                let frontier = if cfg.train.dedup_fetch {
+                    // Root (target) rows join the fetch frontier only if
+                    // this worker's artifact actually gathers them — the
+                    // leader fetches the batch's target rows itself.
+                    let needs_root = spec.inputs.iter().any(|i| i.kind == "target_feat");
+                    self.frontiers[p].rebuild(&sess.tree, &sample, ntypes, needs_root);
+                    Some(&self.frontiers[p])
+                } else {
+                    None
+                };
+                self.arenas[p].begin_batch(ntypes);
                 let (lits, acc) = build_inputs(
                     sess,
                     &spec,
                     Some(&sample),
+                    frontier,
                     chunk,
                     &extra,
                     &|_, _| false, // meta-partitioning: all fetches local
                     Some(&mut self.caches[p]),
                     p % gpus,
+                    &mut self.arenas[p],
                 )?;
                 st.add(Stage::Copy, t1.elapsed().as_secs_f64() * cfg.cost.compute_scale);
                 st.add(Stage::Fetch, acc.cache_time_s);
+                fetch.merge(acc.stats);
 
                 let t2 = Instant::now();
                 let outs = sess.rt.exec(&art, &lits)?;
@@ -225,16 +255,19 @@ impl RafEngine {
             extra.insert(("partial_sum".into(), 1), partial_sums[0].clone());
             extra.insert(("partial_sum".into(), 2), partial_sums[1].clone());
             let t3 = Instant::now();
-            let (lits, _acc) = build_inputs(
+            let (lits, leader_acc) = build_inputs(
                 sess,
                 &spec,
                 None,
+                None, // no sample → no frontier; batch ids are unique anyway
                 chunk,
                 &extra,
                 &|_, _| false,
                 Some(&mut self.caches[self.leader]),
                 0,
+                &mut self.arenas[self.leader],
             )?;
+            fetch.merge(leader_acc.stats);
             let outs = sess.rt.exec("leader", &lits)?;
             let leader_t = t3.elapsed().as_secs_f64() * cfg.cost.compute_scale;
             stages.add(Stage::Forward, leader_t * 0.5);
@@ -278,15 +311,20 @@ impl RafEngine {
                 extra.insert(("grad".into(), 1), g1.clone());
                 extra.insert(("grad".into(), 2), g2.clone());
                 let t5 = Instant::now();
+                // Reuses the forward pass's staged rows: same batch, same
+                // frontier, features unmodified until the update phase.
+                let frontier = cfg.train.dedup_fetch.then(|| &self.frontiers[p]);
                 let (lits, _) = build_inputs(
                     sess,
                     &spec,
                     Some(&samples[p]),
+                    frontier,
                     chunk,
                     &extra,
                     &|_, _| false,
                     None, // rows already resident from forward
                     p % gpus,
+                    &mut self.arenas[p],
                 )?;
                 let outs = sess.rt.exec(&art, &lits)?;
                 st.add(Stage::Backward, t5.elapsed().as_secs_f64() * cfg.cost.compute_scale / gpus as f64);
@@ -389,6 +427,7 @@ impl RafEngine {
             worker_busy_s: worker_busy,
             stages,
             comm,
+            fetch,
             loss_mean: if batches > 0 { loss_sum / batches as f64 } else { f64::NAN },
             accuracy: if batches > 0 {
                 acc_sum / (batches * b) as f64

@@ -20,17 +20,25 @@ use crate::cache::{FeatureCache, Policy, TypeProfile};
 use crate::comm::{Lane, SimNet};
 use crate::config::RuntimeKind;
 use crate::hetgraph::NodeId;
+use crate::kvstore::FetchStats;
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::NodePartition;
-use crate::sampling::{presample_hotness, remote_counts, sample_tree, PAD};
+use crate::sampling::{presample_hotness, remote_counts, sample_tree, Frontier, PAD};
 use crate::util::rng::Rng;
 
-use super::common::{add_assign, apply_learnable_grads, build_inputs, ExtraInputs, Session};
+use super::common::{
+    add_assign, apply_learnable_grads, build_inputs, BatchArena, ExtraInputs, Session,
+};
 
 pub struct VanillaEngine {
     pub part: NodePartition,
     /// Per-worker feature cache (None = DGL-Random/METIS baseline).
     caches: Option<Vec<FeatureCache>>,
+    /// Per-worker marshalling scratch + dedup frontier, recycled across
+    /// batches (sequential runtime; the cluster runtime keeps its own
+    /// per-thread arenas).
+    arenas: Vec<BatchArena>,
+    frontiers: Vec<Frontier>,
 }
 
 impl VanillaEngine {
@@ -94,7 +102,14 @@ impl VanillaEngine {
                     .collect(),
             )
         };
-        Ok(VanillaEngine { part, caches })
+        let arenas = (0..part.num_parts).map(|_| BatchArena::new()).collect();
+        let frontiers = vec![Frontier::default(); part.num_parts];
+        Ok(VanillaEngine {
+            part,
+            caches,
+            arenas,
+            frontiers,
+        })
     }
 
     /// Run one epoch, dispatching to the runtime selected by
@@ -119,6 +134,7 @@ impl VanillaEngine {
         let vb = (b / parts).max(1);
         let gpus = cfg.train.gpus_per_machine.max(1);
         let layers = cfg.model.layers;
+        let ntypes = sess.g.schema.node_types.len();
         let mut net = SimNet::new(parts, cfg.cost.clone());
         let mut stages = StageTimes::default();
         let mut epoch_time = 0.0f64;
@@ -126,12 +142,16 @@ impl VanillaEngine {
         let mut acc_sum = 0.0f64;
         let mut batches = 0usize;
         let mut worker_busy = vec![0.0f64; parts];
+        let mut fetch = FetchStats::default();
 
         let mut train = sess.g.train_nodes();
         let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
         shuffle_rng.shuffle(&mut train);
 
         let spec = sess.rt.manifest.spec("vanilla")?.clone();
+        // Root (target) rows join the fetch frontier only if the
+        // artifact actually gathers them.
+        let needs_root = spec.inputs.iter().any(|i| i.kind == "target_feat");
 
         for (bi, chunk) in train.chunks(b).enumerate() {
             if chunk.len() < vb * parts {
@@ -143,7 +163,8 @@ impl VanillaEngine {
             let mut worker_time = vec![0.0f64; parts];
             let mut wgrads: HashMap<String, Vec<f32>> = HashMap::new();
             let mut row_grads: HashMap<usize, (Vec<NodeId>, Vec<f32>)> = HashMap::new();
-            let mut remote_learnable_rows = 0u64;
+            // type → (valid rows, remote rows) for the update-cost model.
+            let mut learnable_rows: HashMap<usize, (u64, u64)> = HashMap::new();
 
             for w in 0..parts {
                 let mut st = StageTimes::default();
@@ -176,18 +197,28 @@ impl VanillaEngine {
                 let owner = &self.part;
                 let t1 = Instant::now();
                 let extra = ExtraInputs::new();
+                let frontier = if cfg.train.dedup_fetch {
+                    self.frontiers[w].rebuild(&sess.tree, &sample, ntypes, needs_root);
+                    Some(&self.frontiers[w])
+                } else {
+                    None
+                };
+                self.arenas[w].begin_batch(ntypes);
                 let cache = self.caches.as_mut().map(|c| &mut c[w]);
                 let (lits, acc) = build_inputs(
                     sess,
                     &spec,
                     Some(&sample),
+                    frontier,
                     micro,
                     &extra,
                     &|ty, id| owner.owner_of(ty, id) != w,
                     cache,
                     0,
+                    &mut self.arenas[w],
                 )?;
                 st.add(Stage::Copy, t1.elapsed().as_secs_f64() * cfg.cost.compute_scale);
+                fetch.merge(acc.stats);
                 let fetch_t =
                     super::common::vanilla_fetch_time(&net.cost, &acc, self.caches.is_some(), parts);
                 net.ledgers[w].charge(Lane::Net, acc.stats.remote_bytes, 0.0);
@@ -220,9 +251,13 @@ impl VanillaEngine {
                             let entry = row_grads
                                 .entry(src_ty)
                                 .or_insert_with(|| (Vec::new(), Vec::new()));
+                            let counts = learnable_rows.entry(src_ty).or_insert((0, 0));
                             for &id in &sample.ids[child] {
-                                if id != PAD && owner.owner_of(src_ty, id) != w {
-                                    remote_learnable_rows += 1;
+                                if id != PAD {
+                                    counts.0 += 1;
+                                    if owner.owner_of(src_ty, id) != w {
+                                        counts.1 += 1;
+                                    }
                                 }
                             }
                             entry.0.extend_from_slice(&sample.ids[child]);
@@ -234,6 +269,9 @@ impl VanillaEngine {
                                 let entry = row_grads
                                     .entry(sess.g.schema.target)
                                     .or_insert_with(|| (Vec::new(), Vec::new()));
+                                let counts =
+                                    learnable_rows.entry(sess.g.schema.target).or_insert((0, 0));
+                                counts.0 += micro.len() as u64;
                                 entry.0.extend_from_slice(micro);
                                 entry.1.extend_from_slice(&g);
                             }
@@ -276,13 +314,9 @@ impl VanillaEngine {
                 apply_learnable_grads(sess, *ty, ids, grads, inv);
             }
             let mut lf_t = t4.elapsed().as_secs_f64();
-            let total_rows: u64 = row_grads.values().map(|(i, _)| i.len() as u64).sum();
-            let (cost_t, remote_bytes) = super::common::vanilla_learnable_update_cost(
-                &net.cost,
-                total_rows,
-                remote_learnable_rows,
-                parts,
-            );
+            let lr = super::common::learnable_rows_sorted(learnable_rows, &sess.store);
+            let (cost_t, remote_bytes) =
+                super::common::vanilla_learnable_update_cost(&net.cost, &lr, parts);
             lf_t += cost_t;
             if remote_bytes > 0 {
                 net.ledgers[0].charge(Lane::Net, remote_bytes, 0.0);
@@ -300,6 +334,7 @@ impl VanillaEngine {
             worker_busy_s: worker_busy,
             stages,
             comm: net.total(),
+            fetch,
             loss_mean: if batches > 0 { loss_sum / batches as f64 } else { f64::NAN },
             accuracy: if batches > 0 {
                 acc_sum / (batches * vb * parts) as f64

@@ -174,6 +174,27 @@ impl FeatureStore {
         Ok(stats)
     }
 
+    /// Gather the **distinct** rows of a batch frontier into a dense
+    /// `[len(ids), dim]` staging buffer — each row read exactly once, so
+    /// the returned [`FetchStats`] (and the remote/locality accounting
+    /// derived from it) price unique rows only. `ids` must be sorted
+    /// distinct non-[`PAD`] ids, as produced by
+    /// [`Frontier::unique`](crate::sampling::Frontier); padded block
+    /// literals are then reconstructed by [`scatter_rows`].
+    pub fn gather_unique(
+        &self,
+        ty: usize,
+        ids: &[NodeId],
+        out: &mut [f32],
+        is_remote: impl Fn(NodeId) -> bool,
+    ) -> Result<FetchStats> {
+        debug_assert!(
+            ids.windows(2).all(|w| w[0] < w[1]) && !ids.contains(&PAD),
+            "gather_unique expects sorted distinct non-PAD ids"
+        );
+        self.gather(ty, ids, out, is_remote)
+    }
+
     /// Mutable access to a learnable table (sparse Adam update path).
     pub fn learnable_mut(
         &mut self,
@@ -195,6 +216,25 @@ impl FeatureStore {
         match &self.tables[ty] {
             Table::Learnable { weight, .. } => (weight.len() * 4 * 3) as u64,
             _ => 0,
+        }
+    }
+}
+
+/// Scatter staged unique rows into a padded block buffer:
+/// `out[slot] = staging[inv[slot]]` with zeros for
+/// [`NO_ROW`](crate::sampling::NO_ROW) (padded) slots. This is the
+/// in-memory half of the staging-then-scatter gather: the staging buffer
+/// was filled once per distinct id by [`FeatureStore::gather_unique`],
+/// so duplicated slots cost a memcpy, not a re-fetch.
+pub fn scatter_rows(staging: &[f32], inv: &[u32], dim: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), inv.len() * dim);
+    for (slot, &u) in inv.iter().enumerate() {
+        let dst = &mut out[slot * dim..(slot + 1) * dim];
+        if u == crate::sampling::NO_ROW {
+            dst.fill(0.0);
+        } else {
+            let base = u as usize * dim;
+            dst.copy_from_slice(&staging[base..base + dim]);
         }
     }
 }
@@ -252,6 +292,30 @@ mod tests {
         assert_eq!(stats.remote_bytes, (d * 4) as u64);
         assert!(out[d..2 * d].iter().all(|&x| x == 0.0), "pad row not zeroed");
         assert!(out[..d].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn gather_unique_then_scatter_matches_direct_gather() {
+        let (_, s) = store();
+        let d = s.dim(0);
+        // Padded slot list with heavy duplication.
+        let slots = [3u32, 7, PAD, 3, 9, 7, 3, PAD];
+        let unique = [3u32, 7, 9];
+        let inv = [0u32, 1, crate::sampling::NO_ROW, 0, 2, 1, 0, crate::sampling::NO_ROW];
+
+        let mut direct = vec![1.0f32; slots.len() * d];
+        let direct_stats = s.gather(0, &slots, &mut direct, |id| id == 9).unwrap();
+
+        let mut staging = vec![0.0f32; unique.len() * d];
+        let unique_stats = s.gather_unique(0, &unique, &mut staging, |id| id == 9).unwrap();
+        let mut scattered = vec![1.0f32; slots.len() * d];
+        scatter_rows(&staging, &inv, d, &mut scattered);
+
+        assert_eq!(direct, scattered, "scatter must be byte-identical");
+        assert_eq!(direct_stats.rows, 6, "direct pays every occurrence");
+        assert_eq!(unique_stats.rows, 3, "unique pays each row once");
+        assert_eq!(unique_stats.remote_rows, 1);
+        assert_eq!(unique_stats.bytes, (3 * d * 4) as u64);
     }
 
     #[test]

@@ -35,6 +35,7 @@ fn main() -> Result<()> {
                  partition  [--method meta|random|metis|bytype] [--parts p]\n\
                  train      --engine raf|vanilla [--epochs n] [--artifacts dir]\n\
                  \x20          [--runtime sequential|cluster] [--no-pipeline]\n\
+                 \x20          [--no-dedup-fetch]\n\
                  info"
             );
             Ok(())
@@ -123,6 +124,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if args.has_flag("no-pipeline") {
         cfg.train.pipeline = false;
+    }
+    if args.has_flag("no-dedup-fetch") {
+        cfg.train.dedup_fetch = false;
     }
     let engine = args.get_or("engine", "raf");
     let epochs = args.get_usize("epochs", 1);

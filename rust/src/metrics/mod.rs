@@ -120,6 +120,11 @@ pub struct EpochReport {
     pub worker_busy_s: Vec<f64>,
     pub stages: StageTimes,
     pub comm: crate::comm::Ledger,
+    /// Feature rows/bytes fetched from the KV store during input builds
+    /// (fetch-stage builds only; backward rebuilds are excluded). With
+    /// `train.dedup_fetch` on these count **unique** rows per batch —
+    /// the A/B lever the dedup-gather bench asserts on.
+    pub fetch: crate::kvstore::FetchStats,
     pub loss_mean: f64,
     pub accuracy: f64,
     pub batches: usize,
@@ -139,6 +144,7 @@ impl EpochReport {
         }
         self.stages.merge(&rep.stages);
         self.comm.merge(&rep.comm);
+        self.fetch.merge(rep.fetch);
         self.loss_mean = rep.loss_mean;
         self.accuracy = rep.accuracy;
         self.batches += rep.batches;
@@ -156,6 +162,13 @@ impl EpochReport {
         for row in self.stages.report_rows() {
             println!("    {:<10} {:>12} {:>7}", row[0], row[1], row[2]);
         }
+        println!(
+            "    fetch: {} rows ({}), {} remote rows ({})",
+            self.fetch.rows,
+            crate::util::fmt_bytes(self.fetch.bytes),
+            self.fetch.remote_rows,
+            crate::util::fmt_bytes(self.fetch.remote_bytes),
+        );
         println!(
             "    comm: net {} | pcie {} | dram {} | p2p {}",
             crate::util::fmt_bytes(self.comm.bytes[0]),

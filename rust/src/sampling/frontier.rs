@@ -1,0 +1,293 @@
+//! Per-batch deduplicated fetch frontier.
+//!
+//! A sampled tree addresses features through *padded slots*: the same
+//! node id typically occupies many slots (a hot author is sampled under
+//! hundreds of papers), yet each slot used to trigger its own feature
+//! read and cache consultation. The [`Frontier`] collapses one
+//! [`TreeSample`](super::TreeSample) into, per node type, the **sorted
+//! distinct** ids it touches plus an inverse index from every padded
+//! slot back to its unique row. Downstream, the KV store gathers each
+//! distinct row once into a staging buffer
+//! ([`FeatureStore::gather_unique`](crate::kvstore::FeatureStore::gather_unique)),
+//! the cache model is consulted once per unique id
+//! ([`FeatureCache::access_unique`](crate::cache::FeatureCache::access_unique)),
+//! and padded block literals are produced by an in-memory scatter
+//! ([`scatter_rows`](crate::kvstore::scatter_rows)) — the unique-row
+//! staging-then-scatter pipeline of the paper's §6 runtime.
+//!
+//! The frontier also caches per-vertex valid-slot counts and per-unique
+//! occurrence multiplicities, so hotness profiling and communication
+//! accounting reuse the same single pass over the slots.
+//!
+//! Frontiers are designed to be **recycled**: [`Frontier::rebuild`]
+//! refills an existing instance, reusing every interior allocation, so
+//! the per-batch cost is the sort/dedup itself, not the allocator.
+
+use crate::hetgraph::{MetaTree, NodeId};
+
+use super::{TreeSample, PAD};
+
+/// Sentinel in [`Frontier::slot_to_unique`] marking a padded slot.
+pub const NO_ROW: u32 = u32::MAX;
+
+/// The deduplicated fetch set of one sampled tree.
+#[derive(Debug, Clone, Default)]
+pub struct Frontier {
+    /// Per node type: sorted distinct non-[`PAD`] ids across every
+    /// metatree vertex of that type (the root batch joins only when the
+    /// frontier was built with `include_root` — see [`Frontier::build`]).
+    pub unique: Vec<Vec<NodeId>>,
+    /// Per node type: how many padded slots reference each unique id
+    /// (aligned with `unique`). Σ multiplicity = valid slots of the
+    /// type's indexed vertices (all of them under `include_root`).
+    pub multiplicity: Vec<Vec<u32>>,
+    /// Per metatree vertex: padded slot → index into `unique[ty]`
+    /// (`NO_ROW` for padded slots).
+    pub slot_to_unique: Vec<Vec<u32>>,
+    /// Per metatree vertex: number of valid (non-pad) slots — the cached
+    /// answer to [`TreeSample::valid_count`].
+    pub valid_counts: Vec<usize>,
+}
+
+impl Frontier {
+    /// Build a fresh frontier for one sampled tree. `include_root`
+    /// selects whether vertex 0 (the target batch itself) joins the
+    /// fetch set: pass `true` when the consuming artifact gathers
+    /// target features (the vanilla engine, hotness profiling) and
+    /// `false` for RAF worker builds, whose artifacts only reference
+    /// child vertices — staging root rows there would fetch and charge
+    /// rows the leader gathers separately.
+    pub fn build(
+        tree: &MetaTree,
+        sample: &TreeSample,
+        num_types: usize,
+        include_root: bool,
+    ) -> Frontier {
+        let mut f = Frontier::default();
+        f.rebuild(tree, sample, num_types, include_root);
+        f
+    }
+
+    /// Recompute this frontier for a new sample, recycling all interior
+    /// allocations (the per-batch arena contract: no steady-state
+    /// allocation in the hot path). See [`Frontier::build`] for
+    /// `include_root`; `valid_counts` always covers every vertex.
+    pub fn rebuild(
+        &mut self,
+        tree: &MetaTree,
+        sample: &TreeSample,
+        num_types: usize,
+        include_root: bool,
+    ) {
+        if self.unique.len() < num_types {
+            self.unique.resize_with(num_types, Vec::new);
+            self.multiplicity.resize_with(num_types, Vec::new);
+        }
+        if self.slot_to_unique.len() < sample.ids.len() {
+            self.slot_to_unique.resize_with(sample.ids.len(), Vec::new);
+        }
+        self.slot_to_unique.truncate(sample.ids.len());
+        for u in &mut self.unique {
+            u.clear();
+        }
+        self.valid_counts.clear();
+        self.valid_counts.resize(sample.ids.len(), 0);
+
+        // Pass 1: collect valid ids per type and count valid slots.
+        for (v, ids) in sample.ids.iter().enumerate() {
+            let ty = tree.vertices[v].ty;
+            let bucket = &mut self.unique[ty];
+            let mut valid = 0usize;
+            for &id in ids {
+                if id != PAD {
+                    if v > 0 || include_root {
+                        bucket.push(id);
+                    }
+                    valid += 1;
+                }
+            }
+            self.valid_counts[v] = valid;
+        }
+        for u in &mut self.unique {
+            u.sort_unstable();
+            u.dedup();
+        }
+        for (ty, m) in self.multiplicity.iter_mut().enumerate() {
+            m.clear();
+            m.resize(self.unique[ty].len(), 0);
+        }
+
+        // Pass 2: inverse index (slot → unique row) + multiplicities.
+        let unique = &self.unique;
+        let mult = &mut self.multiplicity;
+        for (v, ids) in sample.ids.iter().enumerate() {
+            let ty = tree.vertices[v].ty;
+            let bucket = &unique[ty];
+            let inv = &mut self.slot_to_unique[v];
+            inv.clear();
+            inv.reserve(ids.len());
+            if v == 0 && !include_root {
+                // Excluded root: keep the shape invariant, map no slot.
+                inv.resize(ids.len(), NO_ROW);
+                continue;
+            }
+            for &id in ids {
+                if id == PAD {
+                    inv.push(NO_ROW);
+                    continue;
+                }
+                let u = bucket
+                    .binary_search(&id)
+                    .expect("frontier pass 1 indexed every valid id") as u32;
+                inv.push(u);
+                mult[ty][u as usize] += 1;
+            }
+        }
+    }
+
+    /// Cluster-worker ping-pong: take the recycled frontier out of
+    /// `spare` (or allocate the first one), rebuild it for `sample`,
+    /// and return it. Single source of truth for the four worker-side
+    /// build sites, so the rebuild arguments and recycling protocol
+    /// cannot drift apart per engine.
+    pub fn take_rebuilt(
+        spare: &mut Option<Frontier>,
+        tree: &MetaTree,
+        sample: &TreeSample,
+        num_types: usize,
+        include_root: bool,
+    ) -> Frontier {
+        let mut f = spare.take().unwrap_or_default();
+        f.rebuild(tree, sample, num_types, include_root);
+        f
+    }
+
+    /// Distinct rows of one node type.
+    pub fn rows(&self, ty: usize) -> &[NodeId] {
+        &self.unique[ty]
+    }
+
+    /// Index of `id` within `unique[ty]`, if the batch touches it.
+    pub fn unique_index(&self, ty: usize, id: NodeId) -> Option<usize> {
+        self.unique.get(ty)?.binary_search(&id).ok()
+    }
+
+    /// Total distinct rows across all types (the dedup'd fetch volume).
+    pub fn total_unique_rows(&self) -> usize {
+        self.unique.iter().map(|u| u.len()).sum()
+    }
+
+    /// Total valid slots across all vertices (the pre-dedup volume).
+    pub fn total_valid_slots(&self) -> usize {
+        self.valid_counts.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, GenParams, Preset};
+    use crate::sampling::sample_tree;
+
+    fn setup() -> (crate::hetgraph::HetGraph, MetaTree, TreeSample) {
+        let g = generate(Preset::Mag, 1e-4, &GenParams::default());
+        let t = MetaTree::build(&g.schema, 2);
+        let batch: Vec<NodeId> = (0..16).collect();
+        let s = sample_tree(&g, &t, &[4, 3], &batch, 0, 13, |_| true);
+        (g, t, s)
+    }
+
+    #[test]
+    fn unique_ids_sorted_distinct_and_complete() {
+        let (g, t, s) = setup();
+        let f = Frontier::build(&t, &s, g.schema.node_types.len(), true);
+        for u in &f.unique {
+            assert!(u.windows(2).all(|w| w[0] < w[1]), "not sorted-distinct");
+            assert!(u.iter().all(|&id| id != PAD));
+        }
+        // Every valid slot id appears in its type's unique set.
+        for (v, ids) in s.ids.iter().enumerate() {
+            let ty = t.vertices[v].ty;
+            for &id in ids.iter().filter(|&&id| id != PAD) {
+                assert!(f.unique_index(ty, id).is_some(), "id {id} missing");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_index_roundtrips_slots() {
+        let (g, t, s) = setup();
+        let f = Frontier::build(&t, &s, g.schema.node_types.len(), true);
+        for (v, ids) in s.ids.iter().enumerate() {
+            let ty = t.vertices[v].ty;
+            assert_eq!(f.slot_to_unique[v].len(), ids.len());
+            for (slot, &id) in ids.iter().enumerate() {
+                let u = f.slot_to_unique[v][slot];
+                if id == PAD {
+                    assert_eq!(u, NO_ROW);
+                } else {
+                    assert_eq!(f.unique[ty][u as usize], id, "vertex {v} slot {slot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn valid_counts_and_multiplicity_agree_with_rescan() {
+        let (g, t, s) = setup();
+        let f = Frontier::build(&t, &s, g.schema.node_types.len(), true);
+        for v in 0..s.ids.len() {
+            assert_eq!(f.valid_counts[v], s.valid_count(v), "vertex {v}");
+        }
+        // Multiplicities sum to the valid-slot count per type.
+        let mut per_ty = vec![0usize; g.schema.node_types.len()];
+        for (v, &c) in f.valid_counts.iter().enumerate() {
+            per_ty[t.vertices[v].ty] += c;
+        }
+        for (ty, m) in f.multiplicity.iter().enumerate() {
+            assert_eq!(m.iter().map(|&c| c as usize).sum::<usize>(), per_ty[ty]);
+        }
+        assert_eq!(f.total_valid_slots(), per_ty.iter().sum::<usize>());
+        assert!(f.total_unique_rows() <= f.total_valid_slots());
+    }
+
+    #[test]
+    fn excluding_root_drops_only_root_only_ids() {
+        let (g, t, s) = setup();
+        let full = Frontier::build(&t, &s, g.schema.node_types.len(), true);
+        let worker = Frontier::build(&t, &s, g.schema.node_types.len(), false);
+        // Root slots map to nothing in the worker view…
+        assert_eq!(worker.slot_to_unique[0].len(), s.ids[0].len());
+        assert!(worker.slot_to_unique[0].iter().all(|&u| u == NO_ROW));
+        // …but valid counts still cover every vertex.
+        assert_eq!(worker.valid_counts, full.valid_counts);
+        // Non-root vertices are indexed identically (same distinct ids).
+        for (v, ids) in s.ids.iter().enumerate().skip(1) {
+            let ty = t.vertices[v].ty;
+            for (slot, &id) in ids.iter().enumerate() {
+                if id != PAD {
+                    assert_eq!(worker.unique[ty][worker.slot_to_unique[v][slot] as usize], id);
+                }
+            }
+        }
+        // The worker view never exceeds the full fetch set.
+        for ty in 0..g.schema.node_types.len() {
+            assert!(worker.unique[ty].len() <= full.unique[ty].len());
+            assert!(worker.unique[ty].iter().all(|id| full.unique[ty].contains(id)));
+        }
+    }
+
+    #[test]
+    fn rebuild_recycles_and_matches_fresh_build() {
+        let (g, t, s1) = setup();
+        let batch: Vec<NodeId> = (20..44).collect();
+        let s2 = sample_tree(&g, &t, &[4, 3], &batch, 0, 99, |_| true);
+        let mut f = Frontier::build(&t, &s1, g.schema.node_types.len(), true);
+        f.rebuild(&t, &s2, g.schema.node_types.len(), true);
+        let fresh = Frontier::build(&t, &s2, g.schema.node_types.len(), true);
+        assert_eq!(f.unique, fresh.unique);
+        assert_eq!(f.multiplicity, fresh.multiplicity);
+        assert_eq!(f.slot_to_unique, fresh.slot_to_unique);
+        assert_eq!(f.valid_counts, fresh.valid_counts);
+    }
+}

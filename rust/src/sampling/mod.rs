@@ -13,6 +13,10 @@
 //! the vanilla engine (one worker sampling the full tree) reproduce
 //! byte-identical neighbor sets — the basis of the equivalence test.
 
+pub mod frontier;
+
+pub use frontier::{Frontier, NO_ROW};
+
 use crate::hetgraph::{HetGraph, MetaTree, NodeId};
 use crate::util::rng::Rng;
 
@@ -31,7 +35,9 @@ pub struct TreeSample {
 }
 
 impl TreeSample {
-    /// Number of valid (non-pad) ids at a vertex.
+    /// Number of valid (non-pad) ids at a vertex. O(slots) rescan — hot
+    /// paths that already carry a [`Frontier`] should read its cached
+    /// `valid_counts[vertex]` instead.
     pub fn valid_count(&self, vertex: usize) -> usize {
         self.ids[vertex].iter().filter(|&&id| id != PAD).count()
     }
@@ -85,6 +91,8 @@ pub fn sample_tree(
     let mult: Vec<usize> = sizes.iter().map(|&s| s / batch.len().max(1)).collect();
 
     // BFS order: metatree edges are already ordered parent-before-child.
+    // Scratch for Floyd sampling, reused across every slot of every edge.
+    let mut picks: Vec<usize> = Vec::new();
     for (ei, e) in tree.edges.iter().enumerate() {
         if !edge_filter(ei) {
             continue;
@@ -93,10 +101,13 @@ pub fn sample_tree(
         let csr = g.csr(e.rel);
         // Parent ids may themselves be padded (or unsampled for this
         // partition — for RAF that cannot happen: meta-partitioning keeps
-        // a child and its descendants in one partition).
-        let parent_ids = ids[e.parent].clone();
+        // a child and its descendants in one partition). Vertices are in
+        // BFS order, so `e.parent < e.child` always holds and a split
+        // borrow reads the parent slots while writing the child's.
+        let (head, tail) = ids.split_at_mut(e.child);
+        let parent_ids: &[NodeId] = &head[e.parent];
         let global_base = root_offset * mult[e.parent];
-        let child = &mut ids[e.child];
+        let child = &mut tail[0];
         for (slot, &p) in parent_ids.iter().enumerate() {
             if p == PAD {
                 continue;
@@ -112,7 +123,8 @@ pub fn sample_tree(
                     child[base + j] = u;
                 }
             } else {
-                for (j, idx) in rng.sample_distinct(nbrs.len(), k).into_iter().enumerate() {
+                rng.sample_distinct_into(nbrs.len(), k, &mut picks);
+                for (j, &idx) in picks.iter().enumerate() {
                     child[base + j] = nbrs[idx];
                 }
             }
@@ -127,6 +139,16 @@ pub fn sample_tree(
 /// Pre-sampling hotness profiler (paper §6: sample for `epochs` epochs
 /// before training, recording per-node visit counts). Returns
 /// `counts[type][node]`.
+///
+/// Counts flow through the batch [`Frontier`]: one frontier (recycled
+/// across batches) collapses each sampled tree to distinct ids with
+/// occurrence multiplicities, so the per-node accumulation touches each
+/// distinct id once per batch — the counts are identical to a per-slot
+/// rescan, by the frontier's multiplicity invariant
+/// (`tests/test_gather_dedup.rs` pins the equality). The frontier build
+/// pays a sort/dedup the old direct count did not, but this runs once
+/// at profiling time, off the training hot path, and exercises the same
+/// machinery the gather path depends on.
 pub fn presample_hotness(
     g: &HetGraph,
     tree: &MetaTree,
@@ -135,6 +157,7 @@ pub fn presample_hotness(
     epochs: usize,
     seed: u64,
 ) -> Vec<Vec<u32>> {
+    let num_types = g.schema.node_types.len();
     let mut counts: Vec<Vec<u32>> = g
         .schema
         .node_types
@@ -143,16 +166,15 @@ pub fn presample_hotness(
         .collect();
     let mut train = g.train_nodes();
     let mut rng = Rng::new(seed);
+    let mut fr = Frontier::default();
     for epoch in 0..epochs {
         rng.shuffle(&mut train);
         for (bi, chunk) in train.chunks(batch_size).enumerate() {
             let s = sample_tree(g, tree, fanouts, chunk, 0, seed ^ ((epoch * 131 + bi) as u64), |_| true);
-            for (v, vertex_ids) in s.ids.iter().enumerate() {
-                let ty = tree.vertices[v].ty;
-                for &id in vertex_ids {
-                    if id != PAD {
-                        counts[ty][id as usize] += 1;
-                    }
+            fr.rebuild(tree, &s, num_types, true);
+            for (ty, uniq) in fr.unique.iter().enumerate() {
+                for (u, &id) in uniq.iter().enumerate() {
+                    counts[ty][id as usize] += fr.multiplicity[ty][u];
                 }
             }
         }

@@ -1,0 +1,260 @@
+//! Deduplicated-frontier gather correctness (the PR-2 tentpole).
+//!
+//! Property tests (artifact-free): the staging-then-scatter gather must
+//! produce **byte-identical** padded blocks to the seed's per-slot
+//! gather on random Mag-preset graphs and samples, the frontier's
+//! cached valid counts and occurrence multiplicities must agree with a
+//! per-slot rescan (so `presample_hotness` counts are unchanged), and
+//! the cache's batched entry point must advance hit/miss ledgers
+//! exactly once per unique id per batch.
+//!
+//! The artifact-gated half runs full training with `dedup_fetch` on and
+//! off, on both runtimes, asserting identical loss trajectories and
+//! strictly fewer fetched rows — skipped until `make artifacts` exists.
+
+use heta::cache::{FeatureCache, Policy, TypeProfile};
+use heta::comm::CostModel;
+use heta::config::{Config, RuntimeKind};
+use heta::coordinator::{Engine, Session, SystemKind};
+use heta::datagen::{generate, GenParams, Preset};
+use heta::hetgraph::{MetaTree, NodeId};
+use heta::kvstore::{scatter_rows, FeatureStore};
+use heta::sampling::{presample_hotness, sample_tree, Frontier, PAD};
+use heta::util::proptest;
+use heta::util::rng::Rng;
+
+#[test]
+fn prop_dedup_gather_blocks_byte_identical() {
+    proptest::run("dedup_gather_blocks", |rng, _| {
+        let g = generate(
+            Preset::Mag,
+            1e-4,
+            &GenParams { seed: rng.next_u64(), avg_degree: 6.0, ..Default::default() },
+        );
+        let tree = MetaTree::build(&g.schema, 2);
+        let store = FeatureStore::new(&g, rng.next_u64());
+        let b = 4 + rng.below(12);
+        let batch: Vec<NodeId> = (0..b as u32).collect();
+        let sample = sample_tree(&g, &tree, &[3, 2], &batch, 0, rng.next_u64(), |_| true);
+        let fr = Frontier::build(&tree, &sample, g.schema.node_types.len(), true);
+
+        // Stage every type's distinct rows once.
+        let mut staging: Vec<Vec<f32>> = Vec::new();
+        let mut unique_rows = 0u64;
+        for ty in 0..g.schema.node_types.len() {
+            let dim = store.dim(ty);
+            let mut buf = vec![0.0f32; fr.rows(ty).len() * dim];
+            let stats = store
+                .gather_unique(ty, fr.rows(ty), &mut buf, |_| false)
+                .map_err(|e| format!("gather_unique: {e}"))?;
+            unique_rows += stats.rows;
+            staging.push(buf);
+        }
+
+        // Every block literal reconstructed by scatter must match the
+        // seed's direct per-slot gather bit-for-bit.
+        let mut slot_rows = 0u64;
+        for e in &tree.edges {
+            let ty = tree.vertices[e.child].ty;
+            let dim = store.dim(ty);
+            let ids = &sample.ids[e.child];
+            let mut direct = vec![7.0f32; ids.len() * dim];
+            let stats = store
+                .gather(ty, ids, &mut direct, |_| false)
+                .map_err(|e| format!("gather: {e}"))?;
+            slot_rows += stats.rows;
+            let mut scattered = vec![3.0f32; ids.len() * dim];
+            scatter_rows(&staging[ty], &fr.slot_to_unique[e.child], dim, &mut scattered);
+            heta::prop_assert!(
+                direct == scattered,
+                "block for child {} diverged from per-slot gather",
+                e.child
+            );
+        }
+        // Root/target features scatter from the same staging.
+        let tgt = g.schema.target;
+        let dim = store.dim(tgt);
+        let mut direct = vec![0.0f32; batch.len() * dim];
+        store
+            .gather(tgt, &batch, &mut direct, |_| false)
+            .map_err(|e| format!("gather target: {e}"))?;
+        slot_rows += batch.len() as u64;
+        let mut scattered = vec![1.0f32; batch.len() * dim];
+        for (i, &id) in batch.iter().enumerate() {
+            let u = fr
+                .unique_index(tgt, id)
+                .ok_or_else(|| format!("batch id {id} missing from frontier"))?;
+            scattered[i * dim..(i + 1) * dim]
+                .copy_from_slice(&staging[tgt][u * dim..(u + 1) * dim]);
+        }
+        heta::prop_assert!(direct == scattered, "target features diverged");
+        heta::prop_assert!(
+            unique_rows <= slot_rows,
+            "unique rows {unique_rows} exceed slot rows {slot_rows}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_frontier_counts_match_per_slot_rescan() {
+    proptest::run("frontier_counts", |rng, _| {
+        let g = generate(
+            Preset::Mag240m,
+            5e-5,
+            &GenParams { seed: rng.next_u64(), avg_degree: 4.0, ..Default::default() },
+        );
+        let tree = MetaTree::build(&g.schema, 2);
+        let b = 4 + rng.below(12);
+        let batch: Vec<NodeId> = (0..b as u32).collect();
+        let sample = sample_tree(&g, &tree, &[3, 2], &batch, 0, rng.next_u64(), |_| true);
+        let fr = Frontier::build(&tree, &sample, g.schema.node_types.len(), true);
+        // Cached valid counts == O(slots) rescan.
+        for v in 0..sample.ids.len() {
+            heta::prop_assert!(
+                fr.valid_counts[v] == sample.valid_count(v),
+                "valid count diverged at vertex {v}"
+            );
+        }
+        // Frontier multiplicities reproduce per-slot visit counts.
+        let mut direct: Vec<std::collections::HashMap<NodeId, u32>> =
+            vec![Default::default(); g.schema.node_types.len()];
+        for (v, ids) in sample.ids.iter().enumerate() {
+            let ty = tree.vertices[v].ty;
+            for &id in ids.iter().filter(|&&id| id != PAD) {
+                *direct[ty].entry(id).or_insert(0) += 1;
+            }
+        }
+        for (ty, m) in fr.multiplicity.iter().enumerate() {
+            heta::prop_assert!(
+                m.len() == direct[ty].len(),
+                "type {ty}: unique count diverged"
+            );
+            for (u, &id) in fr.rows(ty).iter().enumerate() {
+                heta::prop_assert!(
+                    direct[ty].get(&id) == Some(&m[u]),
+                    "type {ty} id {id}: multiplicity diverged"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn presample_hotness_unchanged_by_frontier_path() {
+    // Same counts as a hand-rolled per-slot rescan over the same
+    // sampling schedule (the function's seed behaviour).
+    let g = generate(Preset::Mag, 1e-4, &GenParams::default());
+    let tree = MetaTree::build(&g.schema, 2);
+    let (bsz, epochs, seed) = (16usize, 2usize, 5u64);
+    let counts = presample_hotness(&g, &tree, &[4, 3], bsz, epochs, seed);
+
+    let mut expect: Vec<Vec<u32>> = g
+        .schema
+        .node_types
+        .iter()
+        .map(|t| vec![0u32; t.count])
+        .collect();
+    let mut train = g.train_nodes();
+    let mut rng = Rng::new(seed);
+    for epoch in 0..epochs {
+        rng.shuffle(&mut train);
+        for (bi, chunk) in train.chunks(bsz).enumerate() {
+            let s = sample_tree(&g, &tree, &[4, 3], chunk, 0, seed ^ ((epoch * 131 + bi) as u64), |_| true);
+            for (v, ids) in s.ids.iter().enumerate() {
+                let ty = tree.vertices[v].ty;
+                for &id in ids.iter().filter(|&&id| id != PAD) {
+                    expect[ty][id as usize] += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(counts, expect, "frontier-based hotness counts diverged");
+}
+
+#[test]
+fn cache_ledgers_count_each_unique_id_once_per_batch() {
+    let g = generate(Preset::Mag, 1e-4, &GenParams::default());
+    let tree = MetaTree::build(&g.schema, 2);
+    let batch: Vec<NodeId> = (0..16).collect();
+    let sample = sample_tree(&g, &tree, &[4, 3], &batch, 0, 3, |_| true);
+    let fr = Frontier::build(&tree, &sample, g.schema.node_types.len(), true);
+    let profiles: Vec<TypeProfile> = g
+        .schema
+        .node_types
+        .iter()
+        .map(|t| TypeProfile {
+            name: t.name.clone(),
+            count: t.count,
+            feat_dim: t.feat_dim,
+            learnable: t.learnable,
+        })
+        .collect();
+    let hotness = presample_hotness(&g, &tree, &[4, 3], 16, 1, 9);
+    let cost = CostModel::default();
+    let mut cache =
+        FeatureCache::build(Policy::HotnessMissPenalty, &profiles, &hotness, &cost, 1 << 20, 1);
+    for ty in 0..profiles.len() {
+        cache.access_unique(&cost, ty, fr.rows(ty), 0);
+        let tc = &cache.types[ty];
+        assert_eq!(
+            tc.hits + tc.misses,
+            fr.rows(ty).len() as u64,
+            "type {ty}: ledgers must advance once per unique id"
+        );
+    }
+}
+
+// ---- artifact-gated full-training A/B ----
+
+fn artifacts_ready(cfg: &str) -> bool {
+    std::path::Path::new(&format!("artifacts/{cfg}/manifest.json")).exists()
+}
+
+fn run_epochs(
+    system: SystemKind,
+    cfg_name: &str,
+    runtime: RuntimeKind,
+    dedup: bool,
+    epochs: usize,
+) -> Vec<(f64, u64, u64)> {
+    let mut cfg = Config::load(&format!("configs/{cfg_name}.json")).unwrap();
+    cfg.train.runtime = runtime;
+    cfg.train.dedup_fetch = dedup;
+    let dir = format!("artifacts/{cfg_name}");
+    let mut sess = Session::new(&cfg, &dir).unwrap();
+    let mut engine = Engine::build(&sess, system).unwrap();
+    (0..epochs)
+        .map(|ep| {
+            let r = engine.run_epoch(&mut sess, ep).unwrap();
+            (r.loss_mean, r.fetch.rows, r.fetch.bytes)
+        })
+        .collect()
+}
+
+#[test]
+fn dedup_fetch_preserves_losses_and_reduces_rows_across_runtimes() {
+    if !artifacts_ready("mag-tiny") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    for system in [SystemKind::Heta, SystemKind::DglOpt] {
+        for runtime in [RuntimeKind::Sequential, RuntimeKind::Cluster] {
+            let on = run_epochs(system, "mag-tiny", runtime, true, 2);
+            let off = run_epochs(system, "mag-tiny", runtime, false, 2);
+            for (ep, (&(l_on, r_on, b_on), &(l_off, r_off, b_off))) in
+                on.iter().zip(&off).enumerate()
+            {
+                assert_eq!(
+                    l_on, l_off,
+                    "{system:?}/{runtime:?} epoch {ep}: dedup changed the loss"
+                );
+                assert!(
+                    r_on < r_off && b_on < b_off,
+                    "{system:?}/{runtime:?} epoch {ep}: rows {r_on} !< {r_off} or bytes {b_on} !< {b_off}"
+                );
+            }
+        }
+    }
+}
