@@ -1,0 +1,36 @@
+# Build the AOT artifacts every artifact-gated test and bench loads.
+#
+# Two-step contract per config (see rust/src/config/mod.rs):
+#   1. `heta plan` (Rust) computes the metatree, meta-partitioning and
+#      padded block shapes  ->  artifacts/<cfg>/plan.json
+#   2. python -m compile.aot (JAX) lowers the models to HLO text plus
+#      manifest.json         ->  artifacts/<cfg>/*.hlo.txt
+#
+# Requirements: the Rust toolchain, and python with jax installed
+# (`pip install "jax[cpu]"`). Without artifacts, gated tests/benches
+# print a skip message pointing here; nothing fails.
+#
+# `rust/configs` and `rust/artifacts` are symlinks to the repo-root
+# directories, because cargo runs tests/benches with cwd = rust/.
+
+# Test-tier configs first (fast to lower), then the bench tier.
+CONFIGS := mag-tiny mag-tiny-rgat mag-tiny-hgt \
+           mag-bench mag-bench-h64 mag-bench-h128 mag-bench-rgat mag-bench-hgt \
+           mag240m-bench mag240m-bench-hgt donor-bench donor-bench-rgat \
+           freebase-bench igb-bench igb-bench-rgat
+
+MANIFESTS := $(foreach c,$(CONFIGS),artifacts/$(c)/manifest.json)
+
+.PHONY: artifacts artifacts-test clean-artifacts
+
+artifacts: $(MANIFESTS)
+
+# Just the three tiny configs the test suite gates on.
+artifacts-test: $(foreach c,mag-tiny mag-tiny-rgat mag-tiny-hgt,artifacts/$(c)/manifest.json)
+
+artifacts/%/manifest.json: configs/%.json python/compile/aot.py python/compile/model.py
+	cargo run --release --bin heta -- plan --config configs/$*.json --out artifacts/$*/plan.json
+	cd python && python -m compile.aot --plan ../artifacts/$*/plan.json --out ../artifacts/$*
+
+clean-artifacts:
+	rm -rf artifacts

@@ -1,0 +1,92 @@
+//! Per-worker execution contexts vs the shared-session escape hatch
+//! (the PR-3 tentpole A/B): for both engines on the cluster runtime,
+//! measure the **real wall-clock** epoch duration and the modeled
+//! critical path with `train.shared_session` on (every marshal+execute
+//! serialized on one token — the PR-1 behavior) and off (each worker
+//! executes on its own PJRT client). Reports the peak number of
+//! concurrent forward executions as the overlap evidence, asserts the
+//! losses are byte-identical, and emits `BENCH_exec.json` (uploaded by
+//! CI next to `BENCH_gather.json`).
+
+use std::time::Instant;
+
+use heta::config::{Config, RuntimeKind};
+use heta::coordinator::{Engine, Session, SystemKind};
+use heta::metrics::EpochReport;
+use heta::util::bench::{report, table};
+use heta::util::fmt_secs;
+use heta::util::json::Json;
+
+/// One cluster epoch; returns the report plus the real wall seconds.
+fn run(cfg: &Config, system: SystemKind, shared_session: bool) -> (EpochReport, f64) {
+    let mut cfg = cfg.clone();
+    cfg.train.runtime = RuntimeKind::Cluster;
+    cfg.train.shared_session = shared_session;
+    let dir = format!("artifacts/{}", cfg.name);
+    let mut sess = Session::new(&cfg, &dir)
+        .unwrap_or_else(|e| panic!("session for {}: {e} (run `make artifacts`)", cfg.name));
+    let mut engine = Engine::build(&mut sess, system).unwrap();
+    let t0 = Instant::now();
+    let rep = engine.run_epoch(&mut sess, 0).unwrap();
+    (rep, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let cfg_name = "mag-bench";
+    if !heta::util::artifacts_ready(cfg_name) {
+        return;
+    }
+    let cfg = Config::load(&format!("configs/{cfg_name}.json"))
+        .unwrap_or_else(|e| panic!("loading config {cfg_name}: {e}"));
+
+    let mut rows = Vec::new();
+    let mut entries = Vec::new();
+    for (system, label) in [(SystemKind::Heta, "raf"), (SystemKind::DglMetis, "vanilla")] {
+        let (shared, shared_wall) = run(&cfg, system, true);
+        let (split, split_wall) = run(&cfg, system, false);
+        assert_eq!(
+            shared.loss_mean, split.loss_mean,
+            "{label}: per-worker contexts changed the loss"
+        );
+        let peak_shared = shared.wall.max_concurrent_forward();
+        let peak_split = split.wall.max_concurrent_forward();
+        for (mode, rep, wall, peak) in [
+            ("shared-session", &shared, shared_wall, peak_shared),
+            ("per-worker", &split, split_wall, peak_split),
+        ] {
+            rows.push(vec![
+                label.to_string(),
+                mode.to_string(),
+                fmt_secs(wall),
+                fmt_secs(rep.critical_path_s),
+                format!("{peak}"),
+            ]);
+        }
+        report(
+            &format!("exec/{label}/wall_speedup"),
+            format!("{:.2}x", shared_wall / split_wall.max(1e-12)),
+        );
+        report(&format!("exec/{label}/peak_concurrent_forward"), peak_split);
+        entries.push(Json::from_pairs(vec![
+            ("engine", Json::str(label)),
+            ("config", Json::str(cfg_name)),
+            ("shared_wall_s", Json::num(shared_wall)),
+            ("per_worker_wall_s", Json::num(split_wall)),
+            ("wall_speedup", Json::num(shared_wall / split_wall.max(1e-12))),
+            ("shared_critical_path_s", Json::num(shared.critical_path_s)),
+            ("per_worker_critical_path_s", Json::num(split.critical_path_s)),
+            ("peak_concurrent_forward_shared", Json::num(peak_shared as f64)),
+            ("peak_concurrent_forward", Json::num(peak_split as f64)),
+            ("loss_identical", Json::Bool(shared.loss_mean == split.loss_mean)),
+        ]));
+    }
+    table(
+        "Exec contexts: shared session vs per-worker, cluster runtime",
+        &["engine", "mode", "wall epoch", "critical path", "peak fwd||"],
+        &rows,
+    );
+
+    let out = Json::from_pairs(vec![("exec_overlap", Json::Arr(entries))]).to_string();
+    std::fs::write("BENCH_exec.json", &out).expect("write BENCH_exec.json");
+    println!("wrote BENCH_exec.json");
+}

@@ -53,7 +53,7 @@ fn fig14() {
             if parts == 2 {
                 let mut sess =
                     Session::new(&cfg, "artifacts/donor-bench-rgat").unwrap();
-                let mut eng = Engine::build(&sess, sys).unwrap();
+                let mut eng = Engine::build(&mut sess, sys).unwrap();
                 let rep = eng.run_epoch(&mut sess, 0).unwrap();
                 rows.push(vec![
                     format!("{parts} machines ({} GPUs)", parts * 8),

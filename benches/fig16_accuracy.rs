@@ -12,9 +12,9 @@ fn curves(cfg_name: &str, epochs: usize) {
     let cfg = Config::load(&format!("configs/{cfg_name}.json")).unwrap();
     let dir = format!("artifacts/{cfg_name}");
     let mut s_raf = Session::new(&cfg, &dir).unwrap();
-    let mut raf = Engine::build(&s_raf, SystemKind::Heta).unwrap();
+    let mut raf = Engine::build(&mut s_raf, SystemKind::Heta).unwrap();
     let mut s_van = Session::new(&cfg, &dir).unwrap();
-    let mut van = Engine::build(&s_van, SystemKind::DglMetis).unwrap();
+    let mut van = Engine::build(&mut s_van, SystemKind::DglMetis).unwrap();
 
     let mut rows = Vec::new();
     let mut max_div = 0.0f64;

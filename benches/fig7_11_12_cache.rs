@@ -46,7 +46,7 @@ fn fig11() {
             let mut cfg = Config::load(&format!("configs/{cfg_name}.json")).unwrap();
             cfg.train.cache_policy = policy;
             let mut sess = Session::new(&cfg, &format!("artifacts/{cfg_name}")).unwrap();
-            let mut eng = Engine::build(&sess, SystemKind::Heta).unwrap();
+            let mut eng = Engine::build(&mut sess, SystemKind::Heta).unwrap();
             let rep = eng.run_epoch(&mut sess, 0).unwrap();
             if policy == Policy::None {
                 no_cache = rep.epoch_time_s;
@@ -73,7 +73,7 @@ fn fig12() {
         let cfg = Config::load(&format!("configs/{cfg_name}.json")).unwrap();
         let g = cfg.build_graph();
         let mut sess = Session::new(&cfg, &format!("artifacts/{cfg_name}")).unwrap();
-        let mut eng = Engine::build(&sess, sys).unwrap();
+        let mut eng = Engine::build(&mut sess, sys).unwrap();
         let _ = eng.run_epoch(&mut sess, 0).unwrap();
         let rates: Vec<Vec<f64>> = match &eng {
             Engine::Raf(r) => r.hit_rates(),

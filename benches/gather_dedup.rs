@@ -112,7 +112,7 @@ fn engine_epoch(cfg: &Config, system: SystemKind, runtime: RuntimeKind, dedup: b
     let dir = format!("artifacts/{}", cfg.name);
     let mut sess = Session::new(&cfg, &dir)
         .unwrap_or_else(|e| panic!("session for {}: {e} (run `make artifacts`)", cfg.name));
-    let mut engine = Engine::build(&sess, system).unwrap();
+    let mut engine = Engine::build(&mut sess, system).unwrap();
     engine.run_epoch(&mut sess, 0).unwrap()
 }
 
@@ -188,8 +188,7 @@ fn main() {
 
     // ---- artifact-gated engine A/B (sequential vs cluster) ----
     let cfg_name = "mag-bench";
-    let engines = if std::path::Path::new(&format!("artifacts/{cfg_name}/manifest.json")).exists()
-    {
+    let engines = if heta::util::artifacts_ready(cfg_name) {
         let cfg = Config::load(&format!("configs/{cfg_name}.json"))
             .unwrap_or_else(|e| panic!("loading config {cfg_name}: {e}"));
         let mut rows = Vec::new();

@@ -20,14 +20,13 @@ fn run(cfg: &Config, runtime: RuntimeKind, pipeline: bool) -> EpochReport {
     let dir = format!("artifacts/{}", cfg.name);
     let mut sess = Session::new(&cfg, &dir)
         .unwrap_or_else(|e| panic!("session for {}: {e} (run `make artifacts`)", cfg.name));
-    let mut engine = Engine::build(&sess, SystemKind::Heta).unwrap();
+    let mut engine = Engine::build(&mut sess, SystemKind::Heta).unwrap();
     engine.run_epoch(&mut sess, 0).unwrap()
 }
 
 fn main() {
     let cfg_name = "mag-bench";
-    if !std::path::Path::new(&format!("artifacts/{cfg_name}/manifest.json")).exists() {
-        println!("skipping pipeline_overlap: artifacts/{cfg_name} missing (run `make artifacts`)");
+    if !heta::util::artifacts_ready(cfg_name) {
         return;
     }
     let cfg = Config::load(&format!("configs/{cfg_name}.json"))

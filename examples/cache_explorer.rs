@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     for policy in [Policy::None, Policy::HotnessOnly, Policy::HotnessMissPenalty] {
         cfg.train.cache_policy = policy;
         let mut sess = Session::new(&cfg, &format!("artifacts/{name}"))?;
-        let mut engine = Engine::build(&sess, SystemKind::Heta)?;
+        let mut engine = Engine::build(&mut sess, SystemKind::Heta)?;
         let r = engine.run_epoch(&mut sess, 0)?;
         let label = match policy {
             Policy::None => "no-cache",

@@ -20,9 +20,9 @@ fn main() -> anyhow::Result<()> {
     let dir = format!("artifacts/{name}");
 
     let mut raf_sess = Session::new(&cfg, &dir)?;
-    let mut raf = Engine::build(&raf_sess, SystemKind::Heta)?;
+    let mut raf = Engine::build(&mut raf_sess, SystemKind::Heta)?;
     let mut van_sess = Session::new(&cfg, &dir)?;
-    let mut van = Engine::build(&van_sess, SystemKind::DglMetis)?;
+    let mut van = Engine::build(&mut van_sess, SystemKind::DglMetis)?;
 
     println!("step  raf_loss  vanilla_loss  raf_acc  vanilla_acc");
     let mut steps = 0usize;

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
 
     // Train with the RAF engine (Algorithm 1).
     let mut sess = Session::new(&cfg, &format!("artifacts/{}", cfg.name))?;
-    let mut engine = Engine::build(&sess, SystemKind::Heta)?;
+    let mut engine = Engine::build(&mut sess, SystemKind::Heta)?;
     for ep in 0..4 {
         let r = engine.run_epoch(&mut sess, ep)?;
         println!(

@@ -12,6 +12,8 @@
 //! this model exactly like the paper profiles its hardware before
 //! training.
 
+use std::sync::Arc;
+
 use crate::comm::{CostModel, Lane};
 use crate::hetgraph::NodeId;
 
@@ -80,8 +82,11 @@ pub struct TypeCache {
     pub row_bytes: u64,
     pub learnable: bool,
     pub penalty_ratio: f64,
-    /// Bitmap: `resident[id]` = cached.
-    resident: Vec<bool>,
+    /// Bitmap: `resident[id]` = cached. Immutable after [`FeatureCache::build`]
+    /// (hotness-ranked static fill), hence `Arc`-shared between a cache
+    /// and its [`FeatureCache::fork_ledger`] views — only the hit/miss
+    /// ledgers are per-view.
+    resident: Arc<Vec<bool>>,
     pub hits: u64,
     pub misses: u64,
 }
@@ -167,7 +172,7 @@ impl FeatureCache {
                     row_bytes,
                     learnable: p.learnable,
                     penalty_ratio: ratios[ty],
-                    resident,
+                    resident: Arc::new(resident),
                     hits: 0,
                     misses: 0,
                 }
@@ -257,6 +262,46 @@ impl FeatureCache {
             t += cost.staging_time(miss_rows * tc.row_bytes, miss_rows);
         }
         t
+    }
+
+    /// A zero-ledger view of this cache sharing the (immutable, static)
+    /// residency bitmaps. The RAF leader role uses forks to price its
+    /// target-row fetches and update-phase write-backs against a
+    /// partition's cache **without** holding any reference to the worker
+    /// thread that owns the primary — residency is shared, so every
+    /// access returns byte-identical modeled times, and
+    /// [`FeatureCache::absorb_ledger`] folds the view's hit/miss counts
+    /// back into the owner once the epoch's worker threads are done.
+    pub fn fork_ledger(&self) -> FeatureCache {
+        FeatureCache {
+            policy: self.policy,
+            types: self
+                .types
+                .iter()
+                .map(|t| TypeCache {
+                    capacity_rows: t.capacity_rows,
+                    row_bytes: t.row_bytes,
+                    learnable: t.learnable,
+                    penalty_ratio: t.penalty_ratio,
+                    resident: Arc::clone(&t.resident),
+                    hits: 0,
+                    misses: 0,
+                })
+                .collect(),
+            num_gpus: self.num_gpus,
+            total_bytes: self.total_bytes,
+        }
+    }
+
+    /// Fold a [`FeatureCache::fork_ledger`] view's hit/miss counts back
+    /// into this (owning) cache, keeping epoch-level hit rates identical
+    /// to the single-owner accounting.
+    pub fn absorb_ledger(&mut self, fork: &FeatureCache) {
+        debug_assert_eq!(self.types.len(), fork.types.len(), "ledger shape mismatch");
+        for (t, f) in self.types.iter_mut().zip(&fork.types) {
+            t.hits += f.hits;
+            t.misses += f.misses;
+        }
     }
 
     /// Bytes actually allocated (≤ total budget).
@@ -412,6 +457,28 @@ mod tests {
         }
         assert_eq!(per_occ.types[0].misses, 3 * misses, "occurrences triple-count");
         assert!(t < t_occ, "dedup'd {t} not below per-occurrence {t_occ}");
+    }
+
+    #[test]
+    fn fork_ledger_shares_residency_and_absorbs_counts() {
+        let p = profiles();
+        let h = skewed_hotness(&p, 6);
+        let c = CostModel::default();
+        let mut owner = FeatureCache::build(Policy::HotnessOnly, &p, &h, &c, 64 << 10, 1);
+        let mut fork = owner.fork_ledger();
+        // Identical residency ⇒ identical modeled time for any access.
+        for id in [0u32, 3, 400, 999] {
+            assert_eq!(
+                owner.access(&c, 0, id, 0, false),
+                fork.access(&c, 0, id, 0, false),
+                "fork priced id {id} differently"
+            );
+        }
+        let (oh, om) = (owner.types[0].hits, owner.types[0].misses);
+        assert_eq!((fork.types[0].hits, fork.types[0].misses), (oh, om));
+        owner.absorb_ledger(&fork);
+        assert_eq!(owner.types[0].hits, 2 * oh);
+        assert_eq!(owner.types[0].misses, 2 * om);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The cluster runtime: thread-per-partition workers with pipelined
-//! minibatch execution.
+//! minibatch execution over per-worker execution contexts.
 //!
 //! The sequential coordinator engines play every "worker" in one thread,
 //! so epoch time is the *sum* of per-worker stage times. This subsystem
@@ -15,13 +15,20 @@
 //!   the cluster runtime reproduces the sequential runtime's sampled
 //!   trees, losses and parameter trajectories exactly (Prop. 1 still
 //!   holds; `tests/test_cluster_determinism.rs` checks it).
-//! * [`raf`] / [`vanilla`] — the two coordinator engines ported onto
-//!   the runtime. Per batch, workers sample and fetch concurrently,
-//!   ship partials/gradients through the collectives, and the leader
-//!   reduces, steps and updates. The double-buffered pipeline prefetches
-//!   batch `i+1`'s sampling (and models read-only cache fetch ahead)
-//!   while batch `i` sits in the leader phase, which is where the
-//!   critical-path win over the sequential runtime comes from (see
+//! * [`raf`] / [`vanilla`] — thin thread-per-partition schedulers over
+//!   the shared stage pipeline in [`crate::exec::BatchPlan`]. Each
+//!   worker thread exclusively owns its
+//!   [`ExecContext`](crate::exec::ExecContext) — its own PJRT client,
+//!   compiled executables, feature cache and marshalling arena — so
+//!   forward/backward of different partitions execute **genuinely
+//!   concurrently**: there is no shared session and no lock around
+//!   artifact execution (PR 1's serialized shared session survives only
+//!   behind the `train.shared_session` escape hatch in the exec layer).
+//!   Parameters reach workers as versioned read-only snapshots
+//!   broadcast by the leader each batch; the feature KV store is read
+//!   concurrently during marshal and written only by the leader's
+//!   update phase. The double-buffered pipeline still prefetches batch
+//!   `i+1`'s sampling while batch `i` sits in the leader phase (see
 //!   [`crate::metrics::timeline`]).
 //!
 //! Every transfer of the *modeled* system is still charged through
@@ -29,42 +36,10 @@
 //! sequential engines make, so reported communication bytes are exact
 //! and runtime-independent. Select the runtime with the
 //! `train.runtime` config flag (`"sequential"` | `"cluster"`); the
-//! `train.pipeline` flag isolates the double-buffering for A/B runs.
+//! `train.pipeline` flag isolates the double-buffering for A/B runs and
+//! `train.shared_session` reproduces the old serialized execution.
 
 pub mod collective;
 pub mod mailbox;
 pub mod raf;
 pub mod vanilla;
-
-use std::sync::{Mutex, MutexGuard};
-
-use anyhow::{anyhow, Result};
-
-/// Lock a mutex, converting poisoning (a panic on another thread) into
-/// an `anyhow` error instead of propagating the panic.
-pub fn lock<'a, T>(m: &'a Mutex<T>, what: &str) -> Result<MutexGuard<'a, T>> {
-    m.lock()
-        .map_err(|_| anyhow!("{what} mutex poisoned by a failed worker thread"))
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn lock_reports_poison_as_error() {
-        let m = std::sync::Arc::new(Mutex::new(1u32));
-        {
-            let g = lock(&m, "counter").unwrap();
-            assert_eq!(*g, 1);
-        }
-        let m2 = std::sync::Arc::clone(&m);
-        let _ = std::thread::spawn(move || {
-            let _g = m2.lock().unwrap();
-            panic!("poison it");
-        })
-        .join();
-        let e = lock(&m, "counter").unwrap_err();
-        assert!(e.to_string().contains("counter"));
-    }
-}

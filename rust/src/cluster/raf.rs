@@ -1,15 +1,24 @@
 //! The RAF engine on the cluster runtime.
 //!
-//! One OS thread per partition; the calling thread is the leader. Per
-//! batch: workers sample their own relations and execute `worker_fwd`
-//! concurrently (artifact execution serializes on the shared-session
-//! mutex — one CPU PJRT client — but sampling runs lock-free), the
-//! leader gathers partials in worker order, runs the `leader` artifact,
-//! scatters `∂partials`, gathers worker gradients in worker order and
-//! applies all updates. With `train.pipeline` on, each worker prefetches
-//! batch `i+1`'s sample right after shipping its batch-`i` partials, so
-//! prefetch work hides inside the leader phase — the double-buffered
-//! schedule priced by [`crate::metrics::timeline`].
+//! One OS thread per partition; the calling thread is the leader. Each
+//! worker thread exclusively owns its partition's
+//! [`ExecContext`](crate::exec::ExecContext), so per batch the workers
+//! sample, marshal and execute `worker_fwd` **concurrently** on their
+//! own PJRT clients; the leader gathers partials in worker order, runs
+//! the `leader` artifact on its own context, scatters `∂partials` (with
+//! the post-head-update parameter snapshot), gathers worker gradients
+//! in worker order and applies all updates. With `train.pipeline` on,
+//! each worker prefetches batch `i+1`'s sample right after shipping its
+//! batch-`i` partials, so prefetch work hides inside the leader phase —
+//! the double-buffered schedule priced by [`crate::metrics::timeline`].
+//!
+//! Parameters are leader-owned: workers marshal weights from the
+//! versioned read-only snapshot broadcast at each batch's release (the
+//! `Ready` message) and the backward pass from the refreshed snapshot
+//! riding the gradient scatter. The leader's cache traffic goes through
+//! fork-ledger views of the partition caches (shared residency, private
+//! hit/miss counters), folded back after the worker threads exit — the
+//! runtime is lock-free end to end.
 //!
 //! Every floating-point reduction folds in (worker, output) order —
 //! exactly the order the sequential engine uses — so losses and
@@ -17,27 +26,26 @@
 //! under any thread interleaving.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::cache::FeatureCache;
 use crate::comm::SimNet;
 use crate::config::{partition_edge_filter, Config};
-use crate::coordinator::common::{
-    add_assign, apply_learnable_grads, build_inputs, BatchArena, ExtraInputs, Session,
-};
-use crate::hetgraph::{HetGraph, MetaTree, NodeId};
+use crate::coordinator::common::Session;
+use crate::exec::plan::raf_apply_updates;
+use crate::exec::{BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView};
+use crate::hetgraph::NodeId;
 use crate::kvstore::FetchStats;
-use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WorkerSpan};
+use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::MetaPartition;
-use crate::sampling::{sample_tree, Frontier, TreeSample, PAD};
-use crate::util::rng::Rng;
+use crate::runtime::ParamSnapshot;
+use crate::sampling::{sample_tree, Frontier, TreeSample};
+use crate::util::{add_assign, rng::Rng};
 
 use super::collective::{star, Hub, Port};
-use super::lock;
 use super::mailbox::{slice_bytes, Wire};
 
 /// Worker → leader messages.
@@ -50,16 +58,15 @@ enum Up {
         stats: FetchStats,
         span: WorkerSpan,
         stages: StageTimes,
+        /// Wall-clock forward-execution interval (epoch-relative) — the
+        /// per-context overlap evidence.
+        wall_fwd: (f64, f64),
     },
     Bwd {
-        /// One entry per `wgrad` output, unmerged — the leader folds
-        /// them in (worker, output) order to match the sequential
-        /// engine's float-accumulation order exactly.
-        wgrads: Vec<(String, Vec<f32>)>,
-        /// `(src_ty, sampled ids, grads)` per `block_grad` output.
-        row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)>,
-        /// One entry per `target_feat_grad` output, unmerged.
-        gx: Vec<Vec<f32>>,
+        /// Unreduced gradient outputs — the leader folds them in
+        /// (worker, output) order to match the sequential engine's
+        /// float-accumulation order exactly.
+        grads: crate::exec::WorkerGrads,
         bwd_s: f64,
         stages: StageTimes,
     },
@@ -76,44 +83,59 @@ impl Wire for Up {
             Up::Fwd { p1, p2, .. } => slice_bytes(p1) + slice_bytes(p2),
             // Model-parallel weight/row grads are applied locally by
             // their owning partition in the modeled system; shipping
-            // them to the shared session is an in-process artifact, not
-            // wire traffic. Replica sync is charged separately, exactly
-            // as in the sequential engine.
+            // them to the leader-owned store is an in-process artifact,
+            // not wire traffic. Replica sync is charged separately,
+            // exactly as in the sequential engine.
             Up::Bwd { .. } => 0,
             Up::Failed(_) => 0,
         }
     }
 }
 
-/// Leader → worker messages.
+/// Leader → worker messages. Both carry the current parameter snapshot:
+/// `Ready` releases the next batch with the post-update weights,
+/// `Grads` ships `∂partials` plus the post-head-update weights the
+/// backward rebuild marshals from. In the modeled system each partition
+/// owns its weights locally (model parallelism), so snapshot
+/// distribution is an in-process artifact of the single-machine
+/// harness, not wire traffic — only the 2·[B,H] gradients count.
 #[derive(Clone)]
 enum Down {
-    Grads { g1: Vec<f32>, g2: Vec<f32> },
-    Ready,
+    Grads {
+        g1: Vec<f32>,
+        g2: Vec<f32>,
+        params: Arc<ParamSnapshot>,
+    },
+    Ready {
+        params: Arc<ParamSnapshot>,
+    },
 }
 
 impl Wire for Down {
     fn wire_bytes(&self) -> u64 {
         match self {
             // The 2·[B,H] backward partial-gradients per worker.
-            Down::Grads { g1, g2 } => slice_bytes(g1) + slice_bytes(g2),
-            Down::Ready => 0,
+            Down::Grads { g1, g2, .. } => slice_bytes(g1) + slice_bytes(g2),
+            Down::Ready { .. } => 0,
         }
     }
 }
 
 /// Run one RAF epoch on the cluster runtime.
+#[allow(clippy::too_many_arguments)]
 pub fn run_epoch(
+    plan: &BatchPlan,
+    contexts: &mut [ExecContext],
+    leader_ctx: &mut ExecContext,
     mp: &MetaPartition,
-    caches: &mut [FeatureCache],
     replica_count: &HashMap<String, usize>,
     leader_part: usize,
+    gate: Option<&ExecGate>,
     sess: &mut Session,
     epoch: usize,
 ) -> Result<EpochReport> {
     let cfg = sess.cfg.clone();
     let parts = mp.num_parts;
-    let gpus = cfg.train.gpus_per_machine.max(1);
     let pipeline = cfg.train.pipeline;
     let g = Arc::clone(&sess.g);
     let tree = Arc::clone(&sess.tree);
@@ -127,38 +149,57 @@ pub fn run_epoch(
         .filter(|c| c.len() == b) // drop the ragged tail (static shapes)
         .map(|c| c.to_vec())
         .collect();
+    if batches.is_empty() {
+        // Nothing to release: spawning workers would race the initial
+        // Ready broadcast against their immediate teardown.
+        return Ok(EpochReport::empty(parts));
+    }
 
-    let cache_mx: Vec<Mutex<&mut FeatureCache>> = caches.iter_mut().map(Mutex::new).collect();
-    let sess_mx = Mutex::new(sess);
+    // The leader's cache traffic runs through fork-ledger views while
+    // the worker threads own the primaries; counts fold back below.
+    let mut fork_leader = contexts[leader_part]
+        .cache
+        .as_ref()
+        .map(|c| c.fork_ledger());
+    let mut fork_p0 = contexts[0].cache.as_ref().map(|c| c.fork_ledger());
+
+    let world = EpochWorld {
+        cfg: &cfg,
+        g: &g,
+        tree: &tree,
+        store: &sess.store,
+        gate,
+        epoch_t0: Instant::now(),
+    };
+    let params = &mut sess.params;
+    let adam_t = &mut sess.adam_t;
+
     let (hub, ports) = star::<Up, Down>(parts);
     let (bhub, bports) = star::<(), ()>(parts);
 
-    std::thread::scope(|s| {
+    let report = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(parts);
-        for ((p, port), bport) in ports.into_iter().enumerate().zip(bports) {
-            let cfg = &cfg;
-            let g = &g;
-            let tree = &tree;
+        for ((ctx, port), bport) in contexts.iter_mut().zip(ports).zip(bports) {
+            let world = &world;
             let batches = &batches;
-            let sess_mx = &sess_mx;
-            let cache = &cache_mx[p];
             handles.push(s.spawn(move || {
-                worker_loop(
-                    p, gpus, cfg, epoch, batches, g, tree, mp, sess_mx, cache, &port, &bport,
-                    pipeline,
-                )
+                worker_loop(ctx, plan, world, mp, epoch, batches, &port, &bport, pipeline)
             }));
         }
         let led = leader_loop(
             hub,
             bhub,
-            &cfg,
-            parts,
-            leader_part,
+            plan,
+            &world,
+            leader_ctx,
+            params,
+            adam_t,
+            fork_leader.as_mut(),
+            fork_p0.as_mut(),
             replica_count,
             &batches,
-            &sess_mx,
-            &cache_mx,
+            parts,
+            leader_part,
             pipeline,
         );
         let mut worker_err: Option<anyhow::Error> = None;
@@ -184,23 +225,31 @@ pub fn run_epoch(
             (Err(e), _) => Err(e),
             (Ok(_), Some(we)) => Err(we),
         }
-    })
+    });
+
+    if let Some(f) = fork_leader {
+        if let Some(c) = contexts[leader_part].cache.as_mut() {
+            c.absorb_ledger(&f);
+        }
+    }
+    if let Some(f) = fork_p0 {
+        if let Some(c) = contexts[0].cache.as_mut() {
+            c.absorb_ledger(&f);
+        }
+    }
+    report
 }
 
 /// Runs the worker body; on error, ships a best-effort death notice so
 /// the leader's gather fails fast instead of blocking on a dead peer.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    p: usize,
-    gpus: usize,
-    cfg: &Config,
+    ctx: &mut ExecContext,
+    plan: &BatchPlan,
+    world: &EpochWorld<'_>,
+    mp: &MetaPartition,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    g: &Arc<HetGraph>,
-    tree: &Arc<MetaTree>,
-    mp: &MetaPartition,
-    sess_mx: &Mutex<&mut Session>,
-    cache_mx: &Mutex<&mut FeatureCache>,
     port: &Port<Up, Down>,
     bport: &Port<(), ()>,
     pipeline: bool,
@@ -208,10 +257,9 @@ fn worker_loop(
     // Contain panics too: a panicked worker that never notified the
     // leader would leave the gather blocked while live peers keep the
     // channel connected.
+    let p = ctx.worker;
     let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        worker_run(
-            p, gpus, cfg, epoch, batches, g, tree, mp, sess_mx, cache_mx, port, bport, pipeline,
-        )
+        worker_run(ctx, plan, world, mp, epoch, batches, port, bport, pipeline)
     }));
     let r = caught.unwrap_or_else(|_| Err(anyhow!("worker {p} panicked")));
     if let Err(e) = &r {
@@ -222,61 +270,43 @@ fn worker_loop(
 
 #[allow(clippy::too_many_arguments)]
 fn worker_run(
-    p: usize,
-    gpus: usize,
-    cfg: &Config,
+    ctx: &mut ExecContext,
+    plan: &BatchPlan,
+    world: &EpochWorld<'_>,
+    mp: &MetaPartition,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    g: &Arc<HetGraph>,
-    tree: &Arc<MetaTree>,
-    mp: &MetaPartition,
-    sess_mx: &Mutex<&mut Session>,
-    cache_mx: &Mutex<&mut FeatureCache>,
     port: &Port<Up, Down>,
     bport: &Port<(), ()>,
     pipeline: bool,
 ) -> Result<()> {
     bport.barrier()?;
+    let p = ctx.worker;
+    let cfg: &Config = world.cfg;
     let scale = cfg.cost.compute_scale;
-    let ntypes = g.schema.node_types.len();
-    // Per-partition artifact specs are constant across batches: clone
-    // them once instead of per batch inside the serialized section.
-    let art = format!("worker_fwd_p{p}");
-    let art_b = format!("worker_bwd_p{p}");
-    let (spec_f, spec_b) = {
-        let guard = lock(sess_mx, "session")?;
-        (
-            guard.rt.manifest.spec(&art)?.clone(),
-            guard.rt.manifest.spec(&art_b)?.clone(),
-        )
-    };
-    // Root (target) rows join the fetch frontier only if this worker's
-    // artifact actually gathers them — the leader fetches the batch's
-    // target rows itself.
-    let needs_root = spec_f.inputs.iter().any(|i| i.kind == "target_feat");
-    // Per-thread marshalling scratch; `spare` lets two frontier
+    let ntypes = world.g.schema.node_types.len();
+    let wp = &plan.workers[p];
+    // Per-thread dedup-frontier scratch; `spare` lets two frontier
     // allocations ping-pong with the double-buffered prefetch (the
     // in-flight batch holds one while the prefetch fills the other).
-    let mut arena = BatchArena::new();
     let mut spare: Option<Frontier> = None;
     let mut prefetched: Option<(TreeSample, Option<Frontier>, f64)> = None;
 
     for (bi, chunk) in batches.iter().enumerate() {
-        if bi > 0 {
-            // Batch i's forward needs batch i-1's updated weights.
-            match port.recv()? {
-                Down::Ready => {}
-                Down::Grads { .. } => bail!("worker {p}: gradients arrived before Ready"),
-            }
-        }
+        // Batch i's forward needs batch i-1's updated weights: the
+        // Ready release carries the current parameter snapshot.
+        let snapshot = match port.recv()? {
+            Down::Ready { params } => params,
+            Down::Grads { .. } => bail!("worker {p}: gradients arrived before Ready"),
+        };
         let (sample, frontier, sample_s) = match prefetched.take() {
             Some(s) => s,
             None => {
                 let t0 = Instant::now();
-                let filter = partition_edge_filter(tree, mp, p);
+                let filter = partition_edge_filter(world.tree, mp, p);
                 let s = sample_tree(
-                    g,
-                    tree,
+                    world.g,
+                    world.tree,
                     &cfg.model.fanouts,
                     chunk,
                     0,
@@ -286,63 +316,28 @@ fn worker_run(
                 let fr = cfg
                     .train
                     .dedup_fetch
-                    .then(|| Frontier::take_rebuilt(&mut spare, tree, &s, ntypes, needs_root));
+                    .then(|| Frontier::take_rebuilt(&mut spare, world.tree, &s, ntypes, wp.needs_root));
                 (s, fr, t0.elapsed().as_secs_f64() * scale)
             }
         };
 
-        // ---- forward: marshal + execute under the session lock ----
-        arena.begin_batch(ntypes);
-        let (p1, p2, stats, span) = {
-            let mut guard = lock(sess_mx, "session")?;
-            let sess: &mut Session = &mut **guard;
-            let t1 = Instant::now();
-            let extra = ExtraInputs::new();
-            let mut cguard = lock(cache_mx, "cache")?;
-            let (lits, acc) = build_inputs(
-                sess,
-                &spec_f,
-                Some(&sample),
-                frontier.as_ref(),
-                chunk,
-                &extra,
-                &|_, _| false, // meta-partitioning: all fetches local
-                Some(&mut **cguard),
-                p % gpus,
-                &mut arena,
-            )?;
-            drop(cguard);
-            let copy_s = t1.elapsed().as_secs_f64() * scale;
-            let t2 = Instant::now();
-            let outs = sess.rt.exec(&art, &lits)?;
-            let fwd_s = t2.elapsed().as_secs_f64() * scale / gpus as f64;
-            let p1 = crate::runtime::lit_to_vec(
-                outs.first().ok_or_else(|| anyhow!("{art}: no outputs"))?,
-            )?;
-            let p2 = crate::runtime::lit_to_vec(
-                outs.get(1).ok_or_else(|| anyhow!("{art}: missing output 1"))?,
-            )?;
-            let span = WorkerSpan {
-                sample_s,
-                fetch_ro_s: acc.cache_time_ro_s,
-                fetch_lr_s: acc.cache_time_s - acc.cache_time_ro_s,
-                copy_s,
-                fwd_s,
-                bwd_s: 0.0,
-            };
-            (p1, p2, acc.stats, span)
-        };
-        let mut stages = StageTimes::default();
-        stages.add(Stage::Sample, span.sample_s);
-        stages.add(Stage::Copy, span.copy_s);
-        stages.add(Stage::Fetch, span.fetch_ro_s + span.fetch_lr_s);
-        stages.add(Stage::Forward, span.fwd_s);
+        // ---- forward stage on this worker's own context ----
+        let fwd = wp.raf_forward(
+            ctx,
+            world,
+            ParamsView::Snapshot(&snapshot),
+            &sample,
+            frontier.as_ref(),
+            chunk,
+            sample_s,
+        )?;
         port.send(Up::Fwd {
-            p1,
-            p2,
-            stats,
-            span,
-            stages,
+            p1: fwd.p1,
+            p2: fwd.p2,
+            stats: fwd.stats,
+            span: fwd.span,
+            stages: fwd.stages,
+            wall_fwd: fwd.wall_fwd,
         })?;
 
         // ---- double-buffer: prefetch batch i+1 during the leader phase
@@ -350,10 +345,10 @@ fn worker_run(
         // the leader's gather/step/scatter) ----
         if pipeline && bi + 1 < batches.len() {
             let t = Instant::now();
-            let filter = partition_edge_filter(tree, mp, p);
+            let filter = partition_edge_filter(world.tree, mp, p);
             let s = sample_tree(
-                g,
-                tree,
+                world.g,
+                world.tree,
                 &cfg.model.fanouts,
                 &batches[bi + 1],
                 0,
@@ -363,70 +358,29 @@ fn worker_run(
             let fr = cfg
                 .train
                 .dedup_fetch
-                .then(|| Frontier::take_rebuilt(&mut spare, tree, &s, ntypes, needs_root));
+                .then(|| Frontier::take_rebuilt(&mut spare, world.tree, &s, ntypes, wp.needs_root));
             prefetched = Some((s, fr, t.elapsed().as_secs_f64() * scale));
         }
 
-        // ---- backward ----
-        let (g1, g2) = match port.recv()? {
-            Down::Grads { g1, g2 } => (g1, g2),
-            Down::Ready => bail!("worker {p}: Ready arrived before gradients"),
+        // ---- backward stage: ∂partials + the post-head-update snapshot ----
+        let (g1, g2, snapshot) = match port.recv()? {
+            Down::Grads { g1, g2, params } => (g1, g2, params),
+            Down::Ready { .. } => bail!("worker {p}: Ready arrived before gradients"),
         };
-        let (wgrads, row_grads, gx, bwd_s) = {
-            let mut guard = lock(sess_mx, "session")?;
-            let sess: &mut Session = &mut **guard;
-            let mut extra = ExtraInputs::new();
-            extra.insert(("grad".into(), 1), g1);
-            extra.insert(("grad".into(), 2), g2);
-            let t5 = Instant::now();
-            // Reuses the forward pass's staged rows: same batch, same
-            // frontier, features unmodified until the update phase.
-            let (lits, _) = build_inputs(
-                sess,
-                &spec_b,
-                Some(&sample),
-                frontier.as_ref(),
-                chunk,
-                &extra,
-                &|_, _| false,
-                None, // rows already resident from forward
-                p % gpus,
-                &mut arena,
-            )?;
-            let outs = sess.rt.exec(&art_b, &lits)?;
-            let bwd_s = t5.elapsed().as_secs_f64() * scale / gpus as f64;
-            let mut wgrads: Vec<(String, Vec<f32>)> = Vec::new();
-            let mut row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)> = Vec::new();
-            let mut gx: Vec<Vec<f32>> = Vec::new();
-            for (o, out) in spec_b.outputs.iter().zip(&outs) {
-                match o.kind.as_str() {
-                    "wgrad" => {
-                        wgrads.push((o.name.clone(), crate::runtime::lit_to_vec(out)?));
-                    }
-                    "block_grad" => {
-                        let (child, src_ty) = sess.edge_child(o.edge as usize);
-                        row_grads.push((
-                            src_ty,
-                            sample.ids[child].clone(),
-                            crate::runtime::lit_to_vec(out)?,
-                        ));
-                    }
-                    "target_feat_grad" => {
-                        gx.push(crate::runtime::lit_to_vec(out)?);
-                    }
-                    _ => {}
-                }
-            }
-            (wgrads, row_grads, gx, bwd_s)
-        };
-        let mut bstages = StageTimes::default();
-        bstages.add(Stage::Backward, bwd_s);
+        let bwd = wp.raf_backward(
+            ctx,
+            world,
+            ParamsView::Snapshot(&snapshot),
+            &sample,
+            frontier.as_ref(),
+            chunk,
+            g1,
+            g2,
+        )?;
         port.send(Up::Bwd {
-            wgrads,
-            row_grads,
-            gx,
-            bwd_s,
-            stages: bstages,
+            grads: bwd.grads,
+            bwd_s: bwd.bwd_s,
+            stages: bwd.stages,
         })?;
         // Batch done; recycle the frontier allocation for a later
         // prefetch (the i+1 prefetch above already took the other one).
@@ -441,35 +395,43 @@ fn worker_run(
 fn leader_loop(
     hub: Hub<Up, Down>,
     bhub: Hub<(), ()>,
-    cfg: &Config,
-    parts: usize,
-    leader_part: usize,
+    plan: &BatchPlan,
+    world: &EpochWorld<'_>,
+    leader_ctx: &mut ExecContext,
+    params: &mut crate::runtime::ParamStore,
+    adam_t: &mut i32,
+    mut fork_leader: Option<&mut crate::cache::FeatureCache>,
+    mut fork_p0: Option<&mut crate::cache::FeatureCache>,
     replica_count: &HashMap<String, usize>,
     batches: &[Vec<NodeId>],
-    sess_mx: &Mutex<&mut Session>,
-    caches: &[Mutex<&mut FeatureCache>],
+    parts: usize,
+    leader_part: usize,
     pipeline: bool,
 ) -> Result<EpochReport> {
     bhub.barrier()?;
-    let scale = cfg.cost.compute_scale;
+    let cfg = world.cfg;
     let b = cfg.train.batch_size;
     let h = cfg.model.hidden;
     let mut net = SimNet::new(parts, cfg.cost.clone());
     let mut timeline = EpochTimeline::new(parts);
     let mut stages = StageTimes::default();
+    let mut worker_stages = vec![StageTimes::default(); parts];
+    let mut wall = WallClock::new(parts);
     let mut loss_sum = 0.0f64;
     let mut acc_sum = 0.0f64;
     let mut batches_done = 0usize;
     let mut fetch = FetchStats::default();
-    // The leader's own marshalling scratch (its artifact has no sample,
-    // so no frontier — batch ids are already unique).
-    let mut leader_arena = BatchArena::new();
+
+    // Release batch 0 with the initial weights.
+    hub.broadcast(Down::Ready {
+        params: Arc::new(params.snapshot()),
+    })?;
 
     for (bi, chunk) in batches.iter().enumerate() {
         // ---- gather worker partials (worker-id order) ----
         let ups = hub.gather()?;
         let wire: Vec<u64> = ups.iter().map(|u| u.wire_bytes()).collect();
-        let mut partial_sums = vec![vec![0f32; b * h]; 2];
+        let mut partial_sums = [vec![0f32; b * h], vec![0f32; b * h]];
         let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
         for (w, up) in ups.into_iter().enumerate() {
             match up {
@@ -479,12 +441,15 @@ fn leader_loop(
                     stats,
                     span,
                     stages: wstages,
+                    wall_fwd,
                 } => {
                     add_assign(&mut partial_sums[0], &p1);
                     add_assign(&mut partial_sums[1], &p2);
                     fetch.merge(stats);
                     worker_spans.push(span);
                     stages.merge(&wstages);
+                    worker_stages[w].merge(&wstages);
+                    wall.record_forward(w, wall_fwd);
                 }
                 Up::Bwd { .. } => bail!("protocol error: Bwd before Fwd from worker {w}"),
                 Up::Failed(msg) => bail!("worker {w} failed: {msg}"),
@@ -499,175 +464,92 @@ fn leader_loop(
         let t_gather = net.gather(leader_part, &gather_bytes)?;
         stages.add(Stage::Forward, t_gather);
 
-        // ---- leader step: cross-relation agg + head + loss + backward ----
-        let (loss, acc, g1, g2, mut gx_root, t4_s, leader_t) = {
-            let mut guard = lock(sess_mx, "session")?;
-            let sess: &mut Session = &mut **guard;
-            sess.adam_t += 1;
-            let spec = sess.rt.manifest.spec("leader")?.clone();
-            let mut extra = ExtraInputs::new();
-            extra.insert(("partial_sum".into(), 1), partial_sums[0].clone());
-            extra.insert(("partial_sum".into(), 2), partial_sums[1].clone());
-            let t3 = Instant::now();
-            let mut lc = lock(&caches[leader_part], "leader cache")?;
-            let (lits, leader_acc) = build_inputs(
-                sess,
-                &spec,
-                None,
-                None,
-                chunk,
-                &extra,
-                &|_, _| false,
-                Some(&mut **lc),
-                0,
-                &mut leader_arena,
-            )?;
-            drop(lc);
-            fetch.merge(leader_acc.stats);
-            let outs = sess.rt.exec("leader", &lits)?;
-            let leader_t = t3.elapsed().as_secs_f64() * scale;
-            if outs.len() < 5 {
-                bail!("leader artifact returned {} outputs, expected >= 5", outs.len());
-            }
-            let loss = crate::runtime::lit_scalar(&outs[0])? as f64;
-            let acc = crate::runtime::lit_scalar(&outs[1])? as f64;
-            let g1 = crate::runtime::lit_to_vec(&outs[2])?;
-            let g2 = crate::runtime::lit_to_vec(&outs[3])?;
-            let gx_root = crate::runtime::lit_to_vec(&outs[4])?;
-            // Leader's own (head) weight updates.
-            let t4 = Instant::now();
-            for (o, out) in spec.outputs.iter().zip(&outs) {
-                if o.kind == "wgrad" {
-                    let grad = crate::runtime::lit_to_vec(out)?;
-                    sess.params.step(&o.name, &grad)?;
-                }
-            }
-            let t4_s = t4.elapsed().as_secs_f64();
-            (loss, acc, g1, g2, gx_root, t4_s, leader_t)
-        };
-        stages.add(Stage::Forward, leader_t * 0.5);
-        stages.add(Stage::Backward, leader_t * 0.5);
-        stages.add(Stage::Update, t4_s);
-        loss_sum += loss;
-        acc_sum += acc;
+        // ---- leader stage: cross-relation agg + head + loss + bwd ----
+        let lo = plan.raf_leader_step(
+            leader_ctx,
+            world,
+            params,
+            adam_t,
+            fork_leader.as_deref_mut(),
+            &partial_sums,
+            chunk,
+        )?;
+        fetch.merge(lo.stats);
+        stages.add(Stage::Forward, lo.leader_s * 0.5);
+        stages.add(Stage::Backward, lo.leader_s * 0.5);
+        stages.add(Stage::Update, lo.head_update_s);
+        loss_sum += lo.loss;
+        acc_sum += lo.acc;
 
-        // ---- scatter gradients back (2 tensors per worker, symmetric) ----
+        // ---- scatter gradients back (2 tensors per worker, symmetric),
+        // with the post-head-update snapshot the backward marshals from ----
         let t_scatter = net.gather(leader_part, &gather_bytes)?;
         stages.add(Stage::Backward, t_scatter);
-        hub.broadcast(Down::Grads { g1, g2 })?;
+        hub.broadcast(Down::Grads {
+            g1: lo.g1,
+            g2: lo.g2,
+            params: Arc::new(params.snapshot()),
+        })?;
 
         // ---- gather worker gradients (worker-id order) ----
         let ups = hub.gather()?;
-        let mut wgrads_all: HashMap<String, Vec<f32>> = HashMap::new();
-        let mut row_grads_all: HashMap<usize, (Vec<NodeId>, Vec<f32>)> = HashMap::new();
-        let mut gx_extra: Vec<f32> = Vec::new();
+        let mut gacc = GradAccumulator::default();
         for (w, up) in ups.into_iter().enumerate() {
             match up {
                 Up::Bwd {
-                    wgrads,
-                    row_grads,
-                    gx,
+                    grads,
                     bwd_s,
                     stages: wstages,
                 } => {
-                    for (name, gvec) in wgrads {
-                        match wgrads_all.get_mut(&name) {
-                            Some(acc) => add_assign(acc, &gvec),
-                            None => {
-                                wgrads_all.insert(name, gvec);
-                            }
-                        }
-                    }
-                    for (ty, ids, gvec) in row_grads {
-                        let entry = row_grads_all
-                            .entry(ty)
-                            .or_insert_with(|| (Vec::new(), Vec::new()));
-                        entry.0.extend_from_slice(&ids);
-                        entry.1.extend_from_slice(&gvec);
-                    }
-                    for gvec in gx {
-                        if gx_extra.is_empty() {
-                            gx_extra = gvec;
-                        } else {
-                            add_assign(&mut gx_extra, &gvec);
-                        }
-                    }
+                    gacc.absorb(grads);
                     if let Some(span) = worker_spans.get_mut(w) {
                         span.bwd_s = bwd_s;
                     }
                     stages.merge(&wstages);
+                    worker_stages[w].merge(&wstages);
                 }
                 Up::Fwd { .. } => bail!("protocol error: Fwd before Bwd from worker {w}"),
                 Up::Failed(msg) => bail!("worker {w} failed: {msg}"),
             }
         }
 
-        // ---- model-parallel weight + learnable-feature updates ----
-        let (update_t, lf_t, sync_t) = {
-            let mut guard = lock(sess_mx, "session")?;
-            let sess: &mut Session = &mut **guard;
-            let t6 = Instant::now();
-            let mut sync_bytes = 0u64;
-            for (name, grad) in &wgrads_all {
-                // Replicated relations: replicas push grads to the owner.
-                let replicas = replica_count.get(name).copied().unwrap_or(1);
-                if replicas > 1 {
-                    sync_bytes += (grad.len() * 4 * (replicas - 1)) as u64;
-                }
-                sess.params.step(name, grad)?;
-            }
-            let update_t = t6.elapsed().as_secs_f64();
-            let sync_t = if sync_bytes > 0 {
-                net.send(1 % parts, leader_part, sync_bytes)?
-            } else {
-                0.0
-            };
-
-            // Learnable-feature updates (sparse Adam, local rows).
-            let t7 = Instant::now();
-            let mut cache_write_t = 0.0;
-            if !gx_extra.is_empty() {
-                add_assign(&mut gx_root, &gx_extra);
-            }
-            let tgt = sess.g.schema.target;
-            if sess.store.is_learnable(tgt) {
-                apply_learnable_grads(sess, tgt, chunk, &gx_root, 1.0);
-                let cost = cfg.cost.clone();
-                let mut lc = lock(&caches[leader_part], "leader cache")?;
-                for &id in chunk {
-                    cache_write_t += lc.access(&cost, tgt, id, 0, true);
-                }
-            }
-            for (ty, (ids, grads)) in &row_grads_all {
-                apply_learnable_grads(sess, *ty, ids, grads, 1.0);
-                let cost = cfg.cost.clone();
-                // Write-back path through the owning partition's cache.
-                let mut c0 = lock(&caches[0], "cache 0")?;
-                for &id in ids.iter().filter(|&&id| id != PAD) {
-                    cache_write_t += c0.access(&cost, *ty, id, 0, true);
-                }
-            }
-            let lf_t = t7.elapsed().as_secs_f64() + cache_write_t;
-            (update_t, lf_t, sync_t)
+        // ---- update stage (weights + learnable features) ----
+        let mut gx_root = lo.gx_root;
+        let upd = raf_apply_updates(
+            world,
+            params,
+            *adam_t,
+            replica_count,
+            &gacc,
+            &mut gx_root,
+            chunk,
+            fork_leader.as_deref_mut(),
+            fork_p0.as_deref_mut(),
+        )?;
+        stages.add(Stage::Update, upd.update_s + upd.lf_s);
+        let sync_t = if upd.sync_bytes > 0 {
+            let t = net.send(1 % parts, leader_part, upd.sync_bytes)?;
+            stages.add(Stage::GradSync, t);
+            t
+        } else {
+            0.0
         };
-        stages.add(Stage::Update, update_t + lf_t);
-        if sync_t > 0.0 {
-            stages.add(Stage::GradSync, sync_t);
-        }
 
         timeline.push_batch(
             worker_spans,
             LeaderSpan {
                 gather_s: t_gather,
-                leader_s: leader_t,
+                leader_s: lo.leader_s,
                 scatter_s: t_scatter,
-                update_s: t4_s + update_t + lf_t,
+                update_s: lo.head_update_s + upd.update_s + upd.lf_s,
                 sync_s: sync_t,
             },
         );
         batches_done += 1;
         if bi + 1 < batches.len() {
-            hub.broadcast(Down::Ready)?;
+            hub.broadcast(Down::Ready {
+                params: Arc::new(params.snapshot()),
+            })?;
         }
     }
 
@@ -681,6 +563,8 @@ fn leader_loop(
         epoch_time_s,
         critical_path_s,
         worker_busy_s: timeline.worker_busy_s(),
+        worker_stages,
+        wall,
         stages,
         comm: net.total(),
         fetch,

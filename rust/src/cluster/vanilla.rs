@@ -1,58 +1,61 @@
 //! The vanilla (DGL/GraphLearn-style) engine on the cluster runtime.
 //!
 //! Data parallelism: each worker thread samples the full k-hop tree for
-//! its microbatch, fetches features (remote rows cross the modeled
-//! network), and runs the fused `vanilla` train-step artifact; the
-//! leader prices the ring all-reduce, applies the mean gradients and
-//! the sparse learnable-feature updates, then releases the next batch.
-//! With `train.pipeline` on, workers prefetch batch `i+1`'s sample
-//! while the leader runs batch `i`'s all-reduce + update phase.
+//! its microbatch and runs the fused `vanilla` train-step artifact on
+//! its **own** execution context — concurrently with every other
+//! worker; the leader prices the ring all-reduce, applies the mean
+//! gradients and the sparse learnable-feature updates, then releases
+//! the next batch with a fresh parameter snapshot. With
+//! `train.pipeline` on, workers prefetch batch `i+1`'s sample while the
+//! leader runs batch `i`'s all-reduce + update phase.
+//!
+//! The runtime is lock-free: workers charge nothing to shared ledgers —
+//! they ship their remote-byte counts up with the step results, and the
+//! leader (the only owner of the [`SimNet`]) charges them in worker-id
+//! order, exactly matching the sequential engine's totals.
 //!
 //! As with the RAF port, every reduction folds in (worker, output)
 //! order, so losses and parameter trajectories are byte-identical to
 //! the sequential vanilla engine.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::cache::FeatureCache;
 use crate::comm::{Lane, SimNet};
 use crate::config::Config;
-use crate::coordinator::common::{
-    add_assign, apply_learnable_grads, build_inputs, learnable_rows_sorted, vanilla_fetch_time,
-    vanilla_learnable_update_cost, BatchArena, ExtraInputs, Session,
-};
-use crate::hetgraph::{HetGraph, MetaTree, NodeId};
+use crate::coordinator::common::Session;
+use crate::exec::plan::vanilla_apply_updates;
+use crate::exec::{BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView};
+use crate::hetgraph::NodeId;
 use crate::kvstore::FetchStats;
-use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WorkerSpan};
+use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::NodePartition;
-use crate::sampling::{remote_counts, sample_tree, Frontier, TreeSample, PAD};
+use crate::runtime::ParamSnapshot;
+use crate::sampling::{remote_counts, sample_tree, Frontier, TreeSample};
 use crate::util::rng::Rng;
 
 use super::collective::{star, Hub, Port};
-use super::lock;
 use super::mailbox::Wire;
 
 /// Worker → leader message: one fused train step's results.
 struct StepMsg {
     loss: f64,
     acc: f64,
-    /// Per-output weight grads, unmerged (leader folds in worker order).
-    wgrads: Vec<(String, Vec<f32>)>,
-    /// `(ty, ids, grads)` per learnable-row grad output.
-    row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)>,
-    /// `(ty, valid rows, remote rows)` per learnable type, sorted by
-    /// type — the leader's sparse-update cost model (real dims).
-    learnable_rows: Vec<(usize, u64, u64)>,
+    /// Unreduced gradient outputs (leader folds in worker order).
+    grads: crate::exec::WorkerGrads,
     /// KV-store fetch accounting of this worker's input build (unique
-    /// rows per batch when dedup gather is on).
+    /// rows per batch when dedup gather is on; `remote_bytes` is what
+    /// the leader charges to this worker's network ledger).
     stats: FetchStats,
+    /// Remote-neighbor-lookup id traffic of the sampling stage, charged
+    /// by the leader (workers own no ledgers — the runtime is lock-free).
+    sample_remote_bytes: u64,
     span: WorkerSpan,
     stages: StageTimes,
+    wall_fwd: (f64, f64),
 }
 
 impl Wire for StepMsg {
@@ -69,8 +72,14 @@ impl Wire for StepMsg {
 /// keep the channel connected.
 type StepResult = std::result::Result<StepMsg, String>;
 
+/// Batch release carrying the post-update parameter snapshot every
+/// replica applies identically (data parallelism); snapshot
+/// distribution is an in-process artifact of the single-machine
+/// harness — the all-reduce already priced the gradient exchange.
 #[derive(Clone)]
-struct ReadyMsg;
+struct ReadyMsg {
+    params: Arc<ParamSnapshot>,
+}
 
 impl Wire for ReadyMsg {
     fn wire_bytes(&self) -> u64 {
@@ -80,8 +89,10 @@ impl Wire for ReadyMsg {
 
 /// Run one vanilla epoch on the cluster runtime.
 pub fn run_epoch(
+    plan: &BatchPlan,
+    contexts: &mut [ExecContext],
     part: &NodePartition,
-    caches: Option<&mut Vec<FeatureCache>>,
+    gate: Option<&ExecGate>,
     sess: &mut Session,
     epoch: usize,
 ) -> Result<EpochReport> {
@@ -103,33 +114,39 @@ pub fn run_epoch(
         }
         batches.push(c.to_vec());
     }
+    if batches.is_empty() {
+        // Nothing to release: spawning workers would race the initial
+        // Ready broadcast against their immediate teardown.
+        return Ok(EpochReport::empty(parts));
+    }
 
-    let cache_mx: Option<Vec<Mutex<&mut FeatureCache>>> =
-        caches.map(|cs| cs.iter_mut().map(Mutex::new).collect());
-    let net_mx = Mutex::new(SimNet::new(parts, cfg.cost.clone()));
-    let sess_mx = Mutex::new(sess);
+    let world = EpochWorld {
+        cfg: &cfg,
+        g: &g,
+        tree: &tree,
+        store: &sess.store,
+        gate,
+        epoch_t0: Instant::now(),
+    };
+    let params = &mut sess.params;
+    let adam_t = &mut sess.adam_t;
+
     let (hub, ports) = star::<StepResult, ReadyMsg>(parts);
     let (bhub, bports) = star::<(), ()>(parts);
 
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(parts);
-        for ((w, port), bport) in ports.into_iter().enumerate().zip(bports) {
-            let cfg = &cfg;
-            let g = &g;
-            let tree = &tree;
+        for ((ctx, port), bport) in contexts.iter_mut().zip(ports).zip(bports) {
+            let world = &world;
             let batches = &batches;
-            let sess_mx = &sess_mx;
-            let net_mx = &net_mx;
-            let cache = cache_mx.as_ref().map(|v| &v[w]);
             handles.push(s.spawn(move || {
                 worker_loop(
-                    w, parts, vb, cfg, epoch, batches, g, tree, part, sess_mx, net_mx, cache,
-                    &port, &bport, pipeline,
+                    ctx, plan, world, part, vb, epoch, batches, &port, &bport, pipeline,
                 )
             }));
         }
         let led = leader_loop(
-            hub, bhub, &cfg, parts, vb, &batches, &sess_mx, &net_mx, pipeline,
+            hub, bhub, &world, params, adam_t, parts, vb, &batches, pipeline,
         );
         let mut worker_err: Option<anyhow::Error> = None;
         for h in handles {
@@ -162,18 +179,13 @@ pub fn run_epoch(
 /// the leader's gather fails fast instead of blocking on a dead peer.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    w: usize,
-    parts: usize,
+    ctx: &mut ExecContext,
+    plan: &BatchPlan,
+    world: &EpochWorld<'_>,
+    part: &NodePartition,
     vb: usize,
-    cfg: &Config,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    g: &Arc<HetGraph>,
-    tree: &Arc<MetaTree>,
-    part: &NodePartition,
-    sess_mx: &Mutex<&mut Session>,
-    net_mx: &Mutex<SimNet>,
-    cache_mx: Option<&Mutex<&mut FeatureCache>>,
     port: &Port<StepResult, ReadyMsg>,
     bport: &Port<(), ()>,
     pipeline: bool,
@@ -181,11 +193,9 @@ fn worker_loop(
     // Contain panics too: a panicked worker that never notified the
     // leader would leave the gather blocked while live peers keep the
     // channel connected.
+    let w = ctx.worker;
     let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        worker_run(
-            w, parts, vb, cfg, epoch, batches, g, tree, part, sess_mx, net_mx, cache_mx, port,
-            bport, pipeline,
-        )
+        worker_run(ctx, plan, world, part, vb, epoch, batches, port, bport, pipeline)
     }));
     let r = caught.unwrap_or_else(|_| Err(anyhow!("worker {w} panicked")));
     if let Err(e) = &r {
@@ -196,192 +206,86 @@ fn worker_loop(
 
 #[allow(clippy::too_many_arguments)]
 fn worker_run(
-    w: usize,
-    parts: usize,
+    ctx: &mut ExecContext,
+    plan: &BatchPlan,
+    world: &EpochWorld<'_>,
+    part: &NodePartition,
     vb: usize,
-    cfg: &Config,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    g: &Arc<HetGraph>,
-    tree: &Arc<MetaTree>,
-    part: &NodePartition,
-    sess_mx: &Mutex<&mut Session>,
-    net_mx: &Mutex<SimNet>,
-    cache_mx: Option<&Mutex<&mut FeatureCache>>,
     port: &Port<StepResult, ReadyMsg>,
     bport: &Port<(), ()>,
     pipeline: bool,
 ) -> Result<()> {
     bport.barrier()?;
+    let w = ctx.worker;
+    let cfg: &Config = world.cfg;
     let scale = cfg.cost.compute_scale;
-    let gpus = cfg.train.gpus_per_machine.max(1);
     let layers = cfg.model.layers;
-    let ntypes = g.schema.node_types.len();
-    let cost = cfg.cost.clone();
-    // The manifest is immutable during an epoch: clone the fused-step
-    // spec once instead of per batch inside the serialized section.
-    let spec = {
-        let guard = lock(sess_mx, "session")?;
-        guard.rt.manifest.spec("vanilla")?.clone()
-    };
-    // Root (target) rows join the fetch frontier only if the artifact
-    // actually gathers them.
-    let needs_root = spec.inputs.iter().any(|i| i.kind == "target_feat");
-    // Per-thread marshalling scratch; `spare` lets one frontier
+    let parts = part.num_parts;
+    let ntypes = world.g.schema.node_types.len();
+    let wp = &plan.workers[w];
+    // Per-thread dedup-frontier scratch; `spare` lets one frontier
     // allocation ping-pong with the double-buffered prefetch.
-    let mut arena = BatchArena::new();
     let mut spare: Option<Frontier> = None;
     let mut prefetched: Option<(TreeSample, Option<Frontier>, f64)> = None;
 
     for (bi, chunk) in batches.iter().enumerate() {
-        if bi > 0 {
-            port.recv()?;
-        }
+        let snapshot = port.recv()?.params;
         let micro = &chunk[w * vb..(w + 1) * vb];
         let batch_seed = cfg.train.batch_seed(epoch, bi);
 
         // -- sampling over the whole graph: remote hops are RPCs --
-        let (sample, frontier, mut sample_t) = match prefetched.take() {
+        let (sample, frontier, mut sample_s) = match prefetched.take() {
             Some(s) => s,
             None => {
                 let t0 = Instant::now();
-                let s = sample_tree(g, tree, &cfg.model.fanouts, micro, w * vb, batch_seed, |_| {
-                    true
-                });
+                let s = sample_tree(
+                    world.g,
+                    world.tree,
+                    &cfg.model.fanouts,
+                    micro,
+                    w * vb,
+                    batch_seed,
+                    |_| true,
+                );
                 let fr = cfg
                     .train
                     .dedup_fetch
-                    .then(|| Frontier::take_rebuilt(&mut spare, tree, &s, ntypes, needs_root));
+                    .then(|| Frontier::take_rebuilt(&mut spare, world.tree, &s, ntypes, wp.needs_root));
                 (s, fr, t0.elapsed().as_secs_f64() * scale)
             }
         };
-        let rstats = remote_counts(tree, &sample, part, w);
-        sample_t += cost.xfer_time_msgs(
+        let rstats = remote_counts(world.tree, &sample, part, w);
+        // Remote neighbor lookups: id traffic + one RPC per hop per
+        // remote machine; the byte count ships up for the leader-owned
+        // ledger.
+        sample_s += cfg.cost.xfer_time_msgs(
             Lane::Net,
             rstats.remote * 8,
             (layers * (parts - 1)).max(1) as u64,
         );
-        lock(net_mx, "net")?.charge(w, Lane::Net, rstats.remote * 8, 0.0)?;
 
-        // -- fetch + fused step under the session lock --
-        arena.begin_batch(ntypes);
-        let (msg_core, fetch_t, copy_s, step_t) = {
-            let mut guard = lock(sess_mx, "session")?;
-            let sess: &mut Session = &mut **guard;
-            let t1 = Instant::now();
-            let extra = ExtraInputs::new();
-            let mut cguard = match cache_mx {
-                Some(m) => Some(lock(m, "cache")?),
-                None => None,
-            };
-            let (lits, acc) = build_inputs(
-                sess,
-                &spec,
-                Some(&sample),
-                frontier.as_ref(),
-                micro,
-                &extra,
-                &|ty, id| part.owner_of(ty, id) != w,
-                cguard.as_mut().map(|gd| &mut ***gd),
-                0,
-                &mut arena,
-            )?;
-            drop(cguard);
-            let copy_s = t1.elapsed().as_secs_f64() * scale;
-            let fetch_t = vanilla_fetch_time(&cost, &acc, cache_mx.is_some(), parts);
-            lock(net_mx, "net")?.charge(w, Lane::Net, acc.stats.remote_bytes, 0.0)?;
-
-            let t2 = Instant::now();
-            let outs = sess.rt.exec("vanilla", &lits)?;
-            let step_t = t2.elapsed().as_secs_f64() * scale / gpus as f64;
-            if outs.len() < 2 {
-                bail!("vanilla artifact returned {} outputs, expected >= 2", outs.len());
-            }
-            let loss = crate::runtime::lit_scalar(&outs[0])? as f64;
-            let acc_v = crate::runtime::lit_scalar(&outs[1])? as f64;
-
-            let mut wgrads: Vec<(String, Vec<f32>)> = Vec::new();
-            let mut row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)> = Vec::new();
-            // type → (valid rows, remote rows) for the update-cost model.
-            let mut learnable_counts: HashMap<usize, (u64, u64)> = HashMap::new();
-            for (o, out) in spec.outputs.iter().zip(&outs) {
-                match o.kind.as_str() {
-                    "wgrad" => {
-                        wgrads.push((o.name.clone(), crate::runtime::lit_to_vec(out)?));
-                    }
-                    "block_grad" => {
-                        let (child, src_ty) = sess.edge_child(o.edge as usize);
-                        let counts = learnable_counts.entry(src_ty).or_insert((0, 0));
-                        for &id in &sample.ids[child] {
-                            if id != PAD {
-                                counts.0 += 1;
-                                if part.owner_of(src_ty, id) != w {
-                                    counts.1 += 1;
-                                }
-                            }
-                        }
-                        row_grads.push((
-                            src_ty,
-                            sample.ids[child].clone(),
-                            crate::runtime::lit_to_vec(out)?,
-                        ));
-                    }
-                    "target_feat_grad" => {
-                        if sess.store.is_learnable(sess.g.schema.target) {
-                            let counts = learnable_counts
-                                .entry(sess.g.schema.target)
-                                .or_insert((0, 0));
-                            counts.0 += micro.len() as u64;
-                            row_grads.push((
-                                sess.g.schema.target,
-                                micro.to_vec(),
-                                crate::runtime::lit_to_vec(out)?,
-                            ));
-                        }
-                    }
-                    _ => {}
-                }
-            }
-            let mut learnable_rows: Vec<(usize, u64, u64)> = learnable_counts
-                .into_iter()
-                .map(|(ty, (rows, remote))| (ty, rows, remote))
-                .collect();
-            learnable_rows.sort_unstable_by_key(|e| e.0);
-            (
-                (loss, acc_v, wgrads, row_grads, learnable_rows, acc.stats),
-                fetch_t,
-                copy_s,
-                step_t,
-            )
-        };
-        let (loss, acc_v, wgrads, row_grads, learnable_rows, stats) = msg_core;
-
-        let mut stages = StageTimes::default();
-        stages.add(Stage::Sample, sample_t);
-        stages.add(Stage::Copy, copy_s);
-        stages.add(Stage::Fetch, fetch_t);
-        stages.add(Stage::Forward, step_t * 0.45);
-        stages.add(Stage::Backward, step_t * 0.55);
-        let span = WorkerSpan {
-            sample_s: sample_t,
-            // Vanilla fetch mixes remote and learnable rows, so the
-            // whole fetch stays slot-bound (conservative); sampling is
-            // the prefetchable stage here.
-            fetch_ro_s: 0.0,
-            fetch_lr_s: fetch_t,
-            copy_s,
-            fwd_s: step_t,
-            bwd_s: 0.0,
-        };
+        // -- fused marshal + train step on this worker's own context --
+        let step = wp.vanilla_step(
+            ctx,
+            world,
+            ParamsView::Snapshot(&snapshot),
+            part,
+            &sample,
+            frontier.as_ref(),
+            micro,
+            sample_s,
+        )?;
         port.send(Ok(StepMsg {
-            loss,
-            acc: acc_v,
-            wgrads,
-            row_grads,
-            learnable_rows,
-            stats,
-            span,
-            stages,
+            loss: step.loss,
+            acc: step.acc,
+            grads: step.grads,
+            stats: step.stats,
+            sample_remote_bytes: rstats.remote * 8,
+            span: step.span,
+            stages: step.stages,
+            wall_fwd: step.wall_fwd,
         }))?;
         // This batch's frontier is done; recycle its allocation for the
         // prefetch below (ping-pong, no steady-state allocation).
@@ -396,8 +300,8 @@ fn worker_run(
             let nseed = cfg.train.batch_seed(epoch, bi + 1);
             let t = Instant::now();
             let s = sample_tree(
-                g,
-                tree,
+                world.g,
+                world.tree,
                 &cfg.model.fanouts,
                 &batches[bi + 1][w * vb..(w + 1) * vb],
                 w * vb,
@@ -407,7 +311,7 @@ fn worker_run(
             let fr = cfg
                 .train
                 .dedup_fetch
-                .then(|| Frontier::take_rebuilt(&mut spare, tree, &s, ntypes, needs_root));
+                .then(|| Frontier::take_rebuilt(&mut spare, world.tree, &s, ntypes, wp.needs_root));
             prefetched = Some((s, fr, t.elapsed().as_secs_f64() * scale));
         }
     }
@@ -418,113 +322,76 @@ fn worker_run(
 fn leader_loop(
     hub: Hub<StepResult, ReadyMsg>,
     bhub: Hub<(), ()>,
-    cfg: &Config,
+    world: &EpochWorld<'_>,
+    params: &mut crate::runtime::ParamStore,
+    adam_t: &mut i32,
     parts: usize,
     vb: usize,
     batches: &[Vec<NodeId>],
-    sess_mx: &Mutex<&mut Session>,
-    net_mx: &Mutex<SimNet>,
     pipeline: bool,
 ) -> Result<EpochReport> {
     bhub.barrier()?;
+    let mut net = SimNet::new(parts, world.cfg.cost.clone());
     let mut timeline = EpochTimeline::new(parts);
     let mut stages = StageTimes::default();
+    let mut worker_stages = vec![StageTimes::default(); parts];
+    let mut wall = WallClock::new(parts);
     let mut loss_sum = 0.0f64;
     let mut acc_sum = 0.0f64;
     let mut batches_done = 0usize;
     let mut fetch = FetchStats::default();
 
+    // Release batch 0 with the initial weights.
+    hub.broadcast(ReadyMsg {
+        params: Arc::new(params.snapshot()),
+    })?;
+
     for bi in 0..batches.len() {
         let msgs = hub.gather()?;
         let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
-        let mut wgrads: HashMap<String, Vec<f32>> = HashMap::new();
-        let mut row_grads: HashMap<usize, (Vec<NodeId>, Vec<f32>)> = HashMap::new();
-        // type → (valid rows, remote rows), merged across workers.
-        let mut learnable_counts: HashMap<usize, (u64, u64)> = HashMap::new();
+        let mut gacc = GradAccumulator::default();
         for (wid, m) in msgs.into_iter().enumerate() {
             let m = match m {
                 Ok(m) => m,
                 Err(e) => bail!("worker {wid} failed: {e}"),
             };
+            // Charge the worker's remote traffic to its ledger — same
+            // calls, same totals as the sequential engine.
+            net.charge(wid, Lane::Net, m.sample_remote_bytes, 0.0)?;
+            net.charge(wid, Lane::Net, m.stats.remote_bytes, 0.0)?;
             loss_sum += m.loss / parts as f64;
             acc_sum += m.acc;
-            for (name, gvec) in m.wgrads {
-                match wgrads.get_mut(&name) {
-                    Some(acc) => add_assign(acc, &gvec),
-                    None => {
-                        wgrads.insert(name, gvec);
-                    }
-                }
-            }
-            for (ty, ids, gvec) in m.row_grads {
-                let entry = row_grads.entry(ty).or_insert_with(|| (Vec::new(), Vec::new()));
-                entry.0.extend_from_slice(&ids);
-                entry.1.extend_from_slice(&gvec);
-            }
-            for (ty, rows, remote) in m.learnable_rows {
-                let counts = learnable_counts.entry(ty).or_insert((0, 0));
-                counts.0 += rows;
-                counts.1 += remote;
-            }
+            gacc.absorb(m.grads);
             fetch.merge(m.stats);
             worker_spans.push(m.span);
             stages.merge(&m.stages);
+            worker_stages[wid].merge(&m.stages);
+            wall.record_forward(wid, m.wall_fwd);
         }
 
-        // -- dense gradient all-reduce + updates under the session lock --
-        let (t_ar, upd_t, lf_t) = {
-            let mut guard = lock(sess_mx, "session")?;
-            let sess: &mut Session = &mut **guard;
-            sess.adam_t += 1;
-            let grad_bytes = (sess.params.total_elems() * 4) as u64;
-            let mut net = lock(net_mx, "net")?;
-            let t_ar = net.allreduce(grad_bytes);
-
-            // -- model update (every replica applies the mean grad) --
-            let t3 = Instant::now();
-            let inv = 1.0 / parts as f32;
-            for (name, mut grad) in wgrads.drain() {
-                for gv in grad.iter_mut() {
-                    *gv *= inv;
-                }
-                sess.params.step(&name, &grad)?;
-            }
-            let upd_t = t3.elapsed().as_secs_f64();
-
-            // -- learnable-feature updates: remote rows pay the network --
-            let t4 = Instant::now();
-            for (ty, (ids, grads)) in &row_grads {
-                apply_learnable_grads(sess, *ty, ids, grads, inv);
-            }
-            let mut lf_t = t4.elapsed().as_secs_f64();
-            let lr = learnable_rows_sorted(learnable_counts, &sess.store);
-            let (cost_t, remote_bytes) = vanilla_learnable_update_cost(&net.cost, &lr, parts);
-            lf_t += cost_t;
-            if remote_bytes > 0 {
-                net.charge(0, Lane::Net, remote_bytes, 0.0)?;
-            }
-            (t_ar, upd_t, lf_t)
-        };
-        stages.add(Stage::GradSync, t_ar);
-        stages.add(Stage::Update, upd_t + lf_t);
+        // -- all-reduce + model + learnable updates (shared stage) --
+        let upd = vanilla_apply_updates(world, params, adam_t, gacc, &mut net, parts)?;
+        stages.add(Stage::GradSync, upd.allreduce_s);
+        stages.add(Stage::Update, upd.update_s + upd.lf_s);
 
         timeline.push_batch(
             worker_spans,
             LeaderSpan {
-                gather_s: t_ar,
+                gather_s: upd.allreduce_s,
                 leader_s: 0.0,
                 scatter_s: 0.0,
-                update_s: upd_t + lf_t,
+                update_s: upd.update_s + upd.lf_s,
                 sync_s: 0.0,
             },
         );
         batches_done += 1;
         if bi + 1 < batches.len() {
-            hub.broadcast(ReadyMsg)?;
+            hub.broadcast(ReadyMsg {
+                params: Arc::new(params.snapshot()),
+            })?;
         }
     }
 
-    let comm = lock(net_mx, "net")?.total();
     let epoch_time_s = timeline.sequential_time();
     let critical_path_s = if pipeline {
         timeline.pipelined_time()
@@ -535,8 +402,10 @@ fn leader_loop(
         epoch_time_s,
         critical_path_s,
         worker_busy_s: timeline.worker_busy_s(),
+        worker_stages,
+        wall,
         stages,
-        comm,
+        comm: net.total(),
         fetch,
         loss_mean: if batches_done > 0 {
             loss_sum / batches_done as f64

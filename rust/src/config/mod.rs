@@ -108,6 +108,14 @@ pub struct TrainConfig {
     /// per-slot gather and per-occurrence cache accounting for A/B
     /// comparisons; losses are byte-identical either way.
     pub dedup_fetch: bool,
+    /// Escape hatch (default false): serialize every marshal+execute
+    /// stage on one token, reproducing the pre-exec-layer behavior
+    /// where all artifact executions shared a single session. With the
+    /// default per-worker execution contexts, cluster workers execute
+    /// their artifacts genuinely concurrently. Losses are byte-identical
+    /// either way (reductions fold in worker-id order); only wall-clock
+    /// overlap changes — the A/B lever of `benches/exec_overlap.rs`.
+    pub shared_session: bool,
 }
 
 impl TrainConfig {
@@ -191,6 +199,7 @@ impl Config {
                 .with_context(|| format!("unknown runtime {runtime_name}"))?,
             pipeline: t.get("pipeline").as_bool().unwrap_or(true),
             dedup_fetch: t.get("dedup_fetch").as_bool().unwrap_or(true),
+            shared_session: t.get("shared_session").as_bool().unwrap_or(false),
         };
         let mut cost = CostModel::default();
         if let Some(c) = j.get("cost").as_obj() {
@@ -403,6 +412,22 @@ mod tests {
         assert_eq!(cfg.train.runtime, RuntimeKind::Sequential);
         assert!(cfg.train.pipeline);
         assert!(cfg.train.dedup_fetch, "dedup gather must default on");
+        assert!(
+            !cfg.train.shared_session,
+            "per-worker execution contexts must default on"
+        );
+    }
+
+    #[test]
+    fn parses_shared_session_flag() {
+        let text = r#"{
+            "name": "x",
+            "dataset": {"preset": "mag", "scale": 1e-4},
+            "model": {"arch": "rgcn", "hidden": 8, "fanouts": [2]},
+            "train": {"batch_size": 8, "shared_session": true}
+        }"#;
+        let cfg = Config::from_json(&parse(text).unwrap()).unwrap();
+        assert!(cfg.train.shared_session);
     }
 
     #[test]

@@ -1,51 +1,54 @@
-//! Shared training-session state and input-marshalling helpers used by
-//! both execution engines (RAF and vanilla). Everything an engine needs
-//! to turn a [`TreeSample`] plus the manifest's input specs into the
-//! flat literal list a PJRT executable consumes.
+//! The training session: the state one training run *shares* across
+//! its workers, after PR 3 split everything execution-related out into
+//! per-worker [`crate::exec::ExecContext`]s.
 //!
-//! The hot path is the **deduplicated-frontier gather**: when the caller
-//! supplies a batch [`Frontier`], each node type's distinct rows are
-//! fetched once per batch into a [`BatchArena`] staging buffer
-//! ([`FeatureStore::gather_unique`]), the cache model is consulted once
-//! per unique id with misses charged as one batched staging transfer
-//! ([`FeatureCache::access_unique`]), and every padded block literal is
-//! produced by an in-memory scatter. Without a frontier
-//! (`train.dedup_fetch = false`) the seed's per-slot gather and
-//! per-occurrence cache accounting are reproduced exactly, which is the
-//! A/B baseline. Gathered bytes are identical either way — only where
-//! the copies and charges happen moves — so losses are byte-identical
-//! across both settings and both runtimes.
+//! What remains here is exactly the state with distributed-system
+//! semantics:
+//!
+//! * the immutable substrates (`cfg`, `g`, `tree`, the parsed artifact
+//!   [`Manifest`]) — `Arc`-shared, read lock-free;
+//! * the feature KV store behind a reader-writer lock (the "KVStore"
+//!   of the paper's Fig. 3): marshal stages on any worker read
+//!   concurrently, the leader's update stage is the only writer, and
+//!   the batch protocol keeps the two phases disjoint;
+//! * the leader-owned [`ParamStore`] plus the shared sparse-Adam
+//!   timestep — workers never touch either; they marshal weights from
+//!   the per-batch [`ParamSnapshot`](crate::runtime::ParamSnapshot)
+//!   broadcast.
+//!
+//! The old monolithic `Session` also owned the PJRT runtime and every
+//! marshalling buffer, which is why all artifact execution used to
+//! serialize on one session mutex; those now live in each worker's
+//! `ExecContext`, and the marshalling stage itself
+//! (`build_inputs`, `BatchArena`) in [`crate::exec::marshal`].
 
-use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-use crate::cache::FeatureCache;
-use crate::comm::{CostModel, Lane};
 use crate::config::Config;
-use crate::hetgraph::{HetGraph, MetaTree, NodeId};
-use crate::kvstore::{scatter_rows, FeatureStore, FetchStats};
+use crate::hetgraph::{HetGraph, MetaTree};
+use crate::kvstore::FeatureStore;
 use crate::optim::AdamParams;
-use crate::runtime::{lit_f32, lit_i32, ArtifactSpec, ParamStore, Runtime};
-use crate::sampling::{Frontier, TreeSample, PAD};
+use crate::runtime::{Manifest, ParamStore};
 
-/// Extra per-batch inputs supplied by the engine (leader partial sums,
-/// backward gradients), keyed by (kind, layer).
-pub type ExtraInputs = HashMap<(String, usize), Vec<f32>>;
-
-/// One training session: graph, features, parameters, runtime.
-///
-/// The immutable substrates (`g`, `tree`) are `Arc`-shared so the
-/// cluster runtime's worker threads can sample lock-free while the
-/// mutable state (store/params/runtime) sits behind the session mutex.
+/// One training session: graph, features, parameters, artifact manifest.
 pub struct Session {
     pub cfg: Config,
     pub g: Arc<HetGraph>,
     pub tree: Arc<MetaTree>,
-    pub store: FeatureStore,
+    /// The distributed feature KV store. Reader-writer semantics: any
+    /// worker's marshal stage reads concurrently; the leader's update
+    /// stage writes (learnable tables) in a phase where no worker
+    /// marshals.
+    pub store: RwLock<FeatureStore>,
+    /// Leader-owned parameters; workers read per-batch snapshots.
     pub params: ParamStore,
-    pub rt: Runtime,
+    /// The parsed artifact manifest, shared by every worker context's
+    /// runtime.
+    pub manifest: Arc<Manifest>,
+    /// Where the artifacts live (worker contexts compile from here).
+    pub artifacts_dir: String,
     /// Shared sparse-Adam timestep for learnable tables.
     pub adam_t: i32,
 }
@@ -59,501 +62,27 @@ impl Session {
             lr: cfg.train.lr as f32,
             ..Default::default()
         };
-        let rt = Runtime::load(artifacts_dir)?;
+        let manifest = Arc::new(Manifest::load(artifacts_dir)?);
         Ok(Session {
             cfg: cfg.clone(),
             g: Arc::new(g),
             tree: Arc::new(tree),
-            store,
+            store: RwLock::new(store),
             params: ParamStore::new(cfg.train.seed, hp),
-            rt,
+            manifest,
+            artifacts_dir: artifacts_dir.to_string(),
             adam_t: 0,
         })
     }
 
     /// Child vertex and source type of a metatree edge.
     pub fn edge_child(&self, edge: usize) -> (usize, usize) {
-        let e = &self.tree.edges[edge];
-        (e.child, self.g.schema.relations[e.rel].src)
+        crate::exec::marshal::edge_child(&self.g, &self.tree, edge)
     }
-}
-
-/// Aggregate fetch accounting of one input build.
-///
-/// With a dedup frontier, `stats` counts **unique** rows only (each
-/// distinct id fetched once per batch); without one it counts padded
-/// slots, matching the seed accounting. The learnable write-back no
-/// longer needs a per-input id clone here — engines hold the batch's
-/// [`Frontier`] and the sample itself for that.
-#[derive(Debug, Clone, Default)]
-pub struct GatherAccounting {
-    pub stats: FetchStats,
-    /// Modeled cache/miss time (Fetch stage), all node types.
-    pub cache_time_s: f64,
-    /// The read-only share of `cache_time_s`. Read-only rows are
-    /// immutable during training, so the cluster pipeline may prefetch
-    /// them for batch `i+1` while batch `i` executes; learnable rows
-    /// (the remainder) must wait for batch `i`'s update.
-    pub cache_time_ro_s: f64,
-}
-
-/// Reusable per-worker marshalling scratch, recycled across batches so
-/// the input-build hot loop performs no steady-state allocation.
-///
-/// `staging[ty]` holds the batch frontier's distinct rows of type `ty`,
-/// gathered once per batch on first use and then scattered into every
-/// padded block literal that references the type — including the
-/// backward pass's rebuild of the same batch (feature rows cannot change
-/// between a batch's forward and backward, so restaging would be pure
-/// waste). `block` / `mask` / `labels` are literal scratch: literals
-/// copy out of them, so one buffer serves every input of every batch.
-#[derive(Debug, Default)]
-pub struct BatchArena {
-    staging: Vec<Vec<f32>>,
-    staged: Vec<bool>,
-    block: Vec<f32>,
-    mask: Vec<f32>,
-    labels: Vec<i32>,
-}
-
-impl BatchArena {
-    pub fn new() -> BatchArena {
-        BatchArena::default()
-    }
-
-    /// Invalidate the per-batch staging (learnable rows may have been
-    /// updated since the previous batch); buffer capacity survives.
-    /// Call once per (worker, batch) before the batch's first
-    /// `build_inputs`; later builds of the *same* batch (the backward
-    /// pass) then reuse the staged rows.
-    pub fn begin_batch(&mut self, num_types: usize) {
-        self.staged.clear();
-        self.staged.resize(num_types, false);
-        if self.staging.len() < num_types {
-            self.staging.resize_with(num_types, Vec::new);
-        }
-    }
-
-    /// Grow-and-slice helper for the literal scratch buffers.
-    fn block_slice(&mut self, n: usize) -> &mut [f32] {
-        if self.block.len() < n {
-            self.block.resize(n, 0.0);
-        }
-        &mut self.block[..n]
-    }
-}
-
-/// Fetch `ty`'s distinct frontier rows into the arena staging buffer —
-/// once per batch — merging unique-row fetch stats and the batched
-/// cache accounting on first staging only.
-#[allow(clippy::too_many_arguments)]
-fn stage_type(
-    store: &FeatureStore,
-    cost: &CostModel,
-    fr: &Frontier,
-    ty: usize,
-    is_remote: &dyn Fn(usize, NodeId) -> bool,
-    cache: &mut Option<&mut FeatureCache>,
-    gpu: usize,
-    arena: &mut BatchArena,
-    acc: &mut GatherAccounting,
-) -> Result<()> {
-    // `begin_batch` owns the per-batch invalidation; a missing call must
-    // fail fast (index panic / this assert), never silently scatter the
-    // previous batch's staged rows.
-    debug_assert!(
-        arena.staged.len() > ty && arena.staging.len() > ty,
-        "stage_type before BatchArena::begin_batch"
-    );
-    if arena.staged[ty] {
-        return Ok(());
-    }
-    let uniq = fr.rows(ty);
-    let dim = store.dim(ty);
-    let buf = &mut arena.staging[ty];
-    buf.resize(uniq.len() * dim, 0.0);
-    let stats = store.gather_unique(ty, uniq, buf, |id| is_remote(ty, id))?;
-    acc.stats.merge(stats);
-    if let Some(c) = cache.as_deref_mut() {
-        let t = c.access_unique(cost, ty, uniq, gpu);
-        acc.cache_time_s += t;
-        if !store.is_learnable(ty) {
-            acc.cache_time_ro_s += t;
-        }
-    }
-    arena.staged[ty] = true;
-    Ok(())
-}
-
-/// Build the literal list for an artifact from its manifest spec.
-///
-/// `sample` provides block/mask ids, `extra` provides engine-computed
-/// tensors (partial sums / gradients), `is_remote` classifies feature
-/// rows for locality accounting, and `cache` (if present) accumulates
-/// modeled miss time. With `frontier` present (the dedup hot path),
-/// feature rows are staged once per distinct id through `arena` and
-/// scattered into the padded literals; with `frontier = None` the
-/// seed's per-slot gather and per-occurrence cache accounting run
-/// instead (byte-identical literals either way).
-#[allow(clippy::too_many_arguments)]
-pub fn build_inputs(
-    sess: &mut Session,
-    spec: &ArtifactSpec,
-    sample: Option<&TreeSample>,
-    frontier: Option<&Frontier>,
-    batch: &[NodeId],
-    extra: &ExtraInputs,
-    is_remote: &dyn Fn(usize, NodeId) -> bool,
-    cache: Option<&mut FeatureCache>,
-    gpu: usize,
-    arena: &mut BatchArena,
-) -> Result<(Vec<xla::Literal>, GatherAccounting)> {
-    let mut acc = GatherAccounting::default();
-    let mut lits = Vec::with_capacity(spec.inputs.len());
-    let cost = sess.cfg.cost.clone();
-    let mut cache = cache;
-    for inp in &spec.inputs {
-        match inp.kind.as_str() {
-            "block" => {
-                let sample = sample.ok_or_else(|| anyhow!("block input without sample"))?;
-                let (child, src_ty) = sess.edge_child(inp.edge as usize);
-                let ids = &sample.ids[child];
-                let dim = sess.store.dim(src_ty);
-                let need = ids.len() * dim;
-                if let Some(fr) = frontier {
-                    // Dedup path: stage distinct rows once, then scatter
-                    // slots from staging (every slot written: copies for
-                    // valid rows, zero-fill for pads).
-                    stage_type(
-                        &sess.store,
-                        &cost,
-                        fr,
-                        src_ty,
-                        is_remote,
-                        &mut cache,
-                        gpu,
-                        arena,
-                        &mut acc,
-                    )?;
-                    if arena.block.len() < need {
-                        arena.block.resize(need, 0.0);
-                    }
-                    scatter_rows(
-                        &arena.staging[src_ty],
-                        &fr.slot_to_unique[child],
-                        dim,
-                        &mut arena.block[..need],
-                    );
-                    lits.push(lit_f32(&arena.block[..need], &inp.shape)?);
-                } else {
-                    // Seed path: every padded slot gathered independently,
-                    // cache consulted per occurrence.
-                    let buf = arena.block_slice(need);
-                    let stats = sess
-                        .store
-                        .gather(src_ty, ids, buf, |id| is_remote(src_ty, id))?;
-                    acc.stats.merge(stats);
-                    if let Some(c) = cache.as_deref_mut() {
-                        let learnable = sess.store.is_learnable(src_ty);
-                        for &id in ids.iter().filter(|&&id| id != PAD) {
-                            let t = c.access(&cost, src_ty, id, gpu, false);
-                            acc.cache_time_s += t;
-                            if !learnable {
-                                acc.cache_time_ro_s += t;
-                            }
-                        }
-                    }
-                    lits.push(lit_f32(&arena.block[..need], &inp.shape)?);
-                }
-            }
-            "mask" => {
-                let sample = sample.ok_or_else(|| anyhow!("mask input without sample"))?;
-                let (child, _) = sess.edge_child(inp.edge as usize);
-                let ids = &sample.ids[child];
-                if arena.mask.len() < ids.len() {
-                    arena.mask.resize(ids.len(), 0.0);
-                }
-                let mask = &mut arena.mask[..ids.len()];
-                for (m, &id) in mask.iter_mut().zip(ids) {
-                    *m = if id == PAD { 0.0 } else { 1.0 };
-                }
-                lits.push(lit_f32(mask, &inp.shape)?);
-            }
-            "weight" => {
-                sess.params.ensure(inp);
-                lits.push(lit_f32(sess.params.get(&inp.name), &inp.shape)?);
-            }
-            "target_feat" => {
-                let ty = sess.g.schema.target;
-                let dim = sess.store.dim(ty);
-                let need = batch.len() * dim;
-                if let Some(fr) = frontier {
-                    stage_type(
-                        &sess.store,
-                        &cost,
-                        fr,
-                        ty,
-                        is_remote,
-                        &mut cache,
-                        gpu,
-                        arena,
-                        &mut acc,
-                    )?;
-                    if arena.block.len() < need {
-                        arena.block.resize(need, 0.0);
-                    }
-                    let block = &mut arena.block[..need];
-                    let staging = &arena.staging[ty];
-                    for (i, &id) in batch.iter().enumerate() {
-                        let dst = &mut block[i * dim..(i + 1) * dim];
-                        match fr.unique_index(ty, id) {
-                            Some(u) => dst.copy_from_slice(&staging[u * dim..(u + 1) * dim]),
-                            None => {
-                                // Defensive: callers whose spec gathers
-                                // target features build the frontier with
-                                // `include_root`, which covers the batch;
-                                // an out-of-frontier id falls back to a
-                                // per-row gather with its own accounting.
-                                let stats = sess.store.gather(
-                                    ty,
-                                    std::slice::from_ref(&id),
-                                    dst,
-                                    |id| is_remote(ty, id),
-                                )?;
-                                acc.stats.merge(stats);
-                                if let Some(c) = cache.as_deref_mut() {
-                                    let t = c.access(&cost, ty, id, gpu, false);
-                                    acc.cache_time_s += t;
-                                    if !sess.store.is_learnable(ty) {
-                                        acc.cache_time_ro_s += t;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    lits.push(lit_f32(&arena.block[..need], &inp.shape)?);
-                } else {
-                    let buf = arena.block_slice(need);
-                    let stats = sess.store.gather(ty, batch, buf, |id| is_remote(ty, id))?;
-                    acc.stats.merge(stats);
-                    if let Some(c) = cache.as_deref_mut() {
-                        let learnable = sess.store.is_learnable(ty);
-                        for &id in batch {
-                            let t = c.access(&cost, ty, id, gpu, false);
-                            acc.cache_time_s += t;
-                            if !learnable {
-                                acc.cache_time_ro_s += t;
-                            }
-                        }
-                    }
-                    lits.push(lit_f32(&arena.block[..need], &inp.shape)?);
-                }
-            }
-            "labels" => {
-                arena.labels.clear();
-                arena
-                    .labels
-                    .extend(batch.iter().map(|&b| sess.g.labels[b as usize] as i32));
-                lits.push(lit_i32(&arena.labels, &inp.shape)?);
-            }
-            "partial_sum" | "grad" => {
-                let key = (inp.kind.clone(), inp.layer);
-                let data = extra
-                    .get(&key)
-                    .ok_or_else(|| anyhow!("missing extra input {key:?}"))?;
-                lits.push(lit_f32(data, &inp.shape)?);
-            }
-            other => anyhow::bail!("unknown input kind '{other}'"),
-        }
-    }
-    Ok((lits, acc))
 }
 
 /// Modeled time to move `bytes` of gathered features host→device over
 /// PCIe in one batched transfer (the Copy stage of Fig. 3).
 pub fn h2d_time(sess: &Session, bytes: u64) -> f64 {
-    sess.cfg.cost.xfer_time(Lane::Pcie, bytes)
-}
-
-/// Modeled feature-fetch time of one vanilla-engine input build: local
-/// rows through the cache model (or the full DRAM+PCIe miss path when
-/// uncached), remote rows over the network + PCIe. Single source of
-/// truth for both runtimes — the sequential-vs-cluster A/B timing is
-/// only meaningful if they price fetches identically.
-pub fn vanilla_fetch_time(
-    cost: &crate::comm::CostModel,
-    acc: &GatherAccounting,
-    cached: bool,
-    parts: usize,
-) -> f64 {
-    let mut fetch_t = acc.cache_time_s;
-    if !cached {
-        // No cache: every local row pays the batched DRAM→staging→PCIe
-        // path. With a dedup frontier, `acc.stats` holds unique rows
-        // only, so staging prices each distinct row exactly once.
-        let local_bytes = acc.stats.bytes - acc.stats.remote_bytes;
-        fetch_t += cost.staging_time(local_bytes, acc.stats.rows - acc.stats.remote_rows);
-    }
-    fetch_t
-        + cost.xfer_time_msgs(Lane::Net, acc.stats.remote_bytes, (parts - 1).max(1) as u64)
-        + cost.xfer_time(Lane::Pcie, acc.stats.remote_bytes)
-}
-
-/// Per-type row counts of one batch's sparse learnable-feature update.
-#[derive(Debug, Clone, Copy)]
-pub struct LearnableRows {
-    /// Feature dimension of the type, threaded from [`FeatureStore`]
-    /// (replaces the seed's flat `DIM_GUESS = 64` approximation).
-    pub dim: usize,
-    /// Valid (non-pad) gradient rows of the type this batch.
-    pub rows: u64,
-    /// The subset owned by other machines (vanilla edge-cut).
-    pub remote_rows: u64,
-}
-
-/// Convert per-type `(valid rows, remote rows)` counts into the sorted
-/// [`LearnableRows`] list [`vanilla_learnable_update_cost`] expects.
-/// Single source of truth for both vanilla runtimes: sorted by type so
-/// the float summation order is deterministic, real dims from the store.
-pub fn learnable_rows_sorted(
-    counts: HashMap<usize, (u64, u64)>,
-    store: &FeatureStore,
-) -> Vec<LearnableRows> {
-    let mut by_ty: Vec<(usize, u64, u64)> = counts
-        .into_iter()
-        .map(|(ty, (rows, remote))| (ty, rows, remote))
-        .collect();
-    by_ty.sort_unstable_by_key(|e| e.0);
-    by_ty
-        .into_iter()
-        .map(|(ty, rows, remote_rows)| LearnableRows {
-            dim: store.dim(ty),
-            rows,
-            remote_rows,
-        })
-        .collect()
-}
-
-/// Modeled cost of the vanilla engine's sparse learnable-feature
-/// update: per-row random DRAM read-modify-write of weight + moments at
-/// each type's **real** dimension, plus one network round trip covering
-/// all remote rows. Returns the modeled seconds and the remote bytes to
-/// charge to the network ledger. Callers pass `rows` sorted by type
-/// ([`learnable_rows_sorted`]) so the float summation order is
-/// deterministic across runtimes.
-pub fn vanilla_learnable_update_cost(
-    cost: &crate::comm::CostModel,
-    rows: &[LearnableRows],
-    parts: usize,
-) -> (f64, u64) {
-    let mut t = 0.0f64;
-    let mut remote_bytes = 0u64;
-    for r in rows {
-        let row_bytes = r.dim as u64 * 4;
-        t += cost.xfer_time_msgs(Lane::Dram, r.rows * row_bytes * 3, r.rows * 2);
-        remote_bytes += r.remote_rows * row_bytes;
-    }
-    if remote_bytes > 0 {
-        t += cost.xfer_time_msgs(Lane::Net, remote_bytes, (parts - 1).max(1) as u64);
-    }
-    (t, remote_bytes)
-}
-
-/// Sum two equal-length f32 vectors in place.
-pub fn add_assign(a: &mut [f32], b: &[f32]) {
-    debug_assert_eq!(a.len(), b.len());
-    for (x, y) in a.iter_mut().zip(b) {
-        *x += y;
-    }
-}
-
-/// Scale a vector in place.
-pub fn scale(a: &mut [f32], s: f32) {
-    for x in a.iter_mut() {
-        *x *= s;
-    }
-}
-
-/// `FeatureStore`-backed learnable-row update: accumulate row grads and
-/// apply sparse Adam. Returns rows updated.
-pub fn apply_learnable_grads(
-    sess: &mut Session,
-    ty: usize,
-    ids: &[NodeId],
-    grads: &[f32],
-    lr_scale: f32,
-) -> usize {
-    let dim = sess.store.dim(ty);
-    let mut rows = crate::optim::accumulate_rows(ids, grads, dim, PAD);
-    if lr_scale != 1.0 {
-        for (_, g) in &mut rows {
-            scale(g, lr_scale);
-        }
-    }
-    let hp = AdamParams {
-        lr: sess.cfg.train.lr as f32,
-        ..Default::default()
-    };
-    let t = sess.adam_t;
-    if let Some((w, m, v)) = sess.store.learnable_mut(ty) {
-        crate::optim::sparse_adam_step(&rows, w, m, v, dim, t, hp)
-    } else {
-        0
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn add_assign_and_scale() {
-        let mut a = vec![1.0, 2.0];
-        add_assign(&mut a, &[0.5, 0.5]);
-        assert_eq!(a, vec![1.5, 2.5]);
-        scale(&mut a, 2.0);
-        assert_eq!(a, vec![3.0, 5.0]);
-    }
-
-    #[test]
-    fn learnable_update_cost_threads_real_dims() {
-        let cost = CostModel::default();
-        let small = vanilla_learnable_update_cost(
-            &cost,
-            &[LearnableRows { dim: 8, rows: 10, remote_rows: 2 }],
-            2,
-        );
-        let big = vanilla_learnable_update_cost(
-            &cost,
-            &[LearnableRows { dim: 512, rows: 10, remote_rows: 2 }],
-            2,
-        );
-        assert!(big.0 > small.0, "bigger rows must cost more DRAM time");
-        assert_eq!(small.1, 2 * 8 * 4);
-        assert_eq!(big.1, 2 * 512 * 4);
-        assert_eq!(vanilla_learnable_update_cost(&cost, &[], 2), (0.0, 0));
-        // Two types accumulate both time and remote bytes.
-        let both = vanilla_learnable_update_cost(
-            &cost,
-            &[
-                LearnableRows { dim: 8, rows: 10, remote_rows: 2 },
-                LearnableRows { dim: 512, rows: 10, remote_rows: 2 },
-            ],
-            2,
-        );
-        assert!(both.0 > big.0);
-        assert_eq!(both.1, small.1 + big.1);
-    }
-
-    #[test]
-    fn arena_begin_batch_invalidates_staging_keeps_capacity() {
-        let mut a = BatchArena::new();
-        a.begin_batch(3);
-        a.staging[1].resize(128, 1.0);
-        a.staged[1] = true;
-        let cap = a.staging[1].capacity();
-        a.begin_batch(3);
-        assert!(a.staged.iter().all(|&s| !s), "staging must be invalidated");
-        assert!(a.staging[1].capacity() >= cap, "buffers must be recycled");
-    }
+    sess.cfg.cost.xfer_time(crate::comm::Lane::Pcie, bytes)
 }

@@ -72,9 +72,14 @@ pub enum Engine {
 }
 
 impl Engine {
-    /// Build the engine modelling `system` for a session.
-    pub fn build(sess: &Session, system: SystemKind) -> Result<Engine> {
-        let cfg = &sess.cfg;
+    /// Build the engine modelling `system` for a session. Takes the
+    /// session mutably to initialize every weight the engine's
+    /// artifacts declare up front — marshalling (and the per-batch
+    /// parameter snapshots the cluster runtime broadcasts) is then
+    /// read-only over the parameter store.
+    pub fn build(sess: &mut Session, system: SystemKind) -> Result<Engine> {
+        let cfg = sess.cfg.clone();
+        let cfg = &cfg;
         let p = cfg.train.num_partitions;
         Ok(match system {
             SystemKind::Heta => {
@@ -123,7 +128,7 @@ pub fn run_training(
         ),
     };
     let mut sess = Session::new(cfg, artifacts_dir)?;
-    let mut engine = Engine::build(&sess, system)?;
+    let mut engine = Engine::build(&mut sess, system)?;
     let mut total = EpochReport::default();
     for ep in 0..epochs {
         let rep = engine.run_epoch(&mut sess, ep)?;
@@ -149,7 +154,7 @@ pub fn bench_run(cfg_name: &str, system: SystemKind, epochs: usize) -> (EpochRep
     let dir = format!("artifacts/{cfg_name}");
     let mut sess = Session::new(&cfg, &dir)
         .unwrap_or_else(|e| panic!("session for {cfg_name}: {e} (run `make artifacts`)"));
-    let mut engine = Engine::build(&sess, system).unwrap();
+    let mut engine = Engine::build(&mut sess, system).unwrap();
     let mut total = EpochReport::default();
     for ep in 0..epochs {
         let rep = engine.run_epoch(&mut sess, ep).unwrap();

@@ -13,8 +13,16 @@
 //! rematerializing) and updates its local weights and learnable features.
 //! Wire traffic per batch per worker: `2·[B,H]` forward + `2·[B,H]`
 //! backward — Θ(|targets|), independent of fan-out (Props. 2–3).
+//!
+//! Since PR 3 the per-batch stage bodies live in
+//! [`crate::exec::BatchPlan`]; this file owns only engine construction
+//! (caches, per-worker [`ExecContext`]s, replica counts) and the
+//! *sequential* scheduling of those stages — the thread-per-partition
+//! scheduling lives in [`crate::cluster::raf`]. Both runtimes produce
+//! byte-identical samples, losses and parameter trajectories.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -22,36 +30,41 @@ use anyhow::Result;
 use crate::cache::{FeatureCache, Policy, TypeProfile};
 use crate::comm::SimNet;
 use crate::config::{partition_edge_filter, RuntimeKind};
-use crate::hetgraph::NodeId;
+use crate::exec::plan::raf_apply_updates;
+use crate::exec::{BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView};
 use crate::kvstore::FetchStats;
+use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::MetaPartition;
 use crate::sampling::{presample_hotness, sample_tree, Frontier};
-use crate::util::rng::Rng;
+use crate::util::{add_assign, rng::Rng};
 
-use super::common::{
-    add_assign, apply_learnable_grads, build_inputs, BatchArena, ExtraInputs, Session,
-};
+use super::common::Session;
 
 pub struct RafEngine {
     pub mp: MetaPartition,
-    /// One cache per machine (non-replicative split across its GPUs).
-    caches: Vec<FeatureCache>,
+    /// The per-batch stage pipeline (resolved artifact specs).
+    plan: BatchPlan,
+    /// One execution context per partition: the worker's own PJRT
+    /// client + executables, its cache, its marshalling scratch.
+    contexts: Vec<ExecContext>,
+    /// The leader role's own context (the `leader` artifact); its cache
+    /// accounting goes through fork-ledger views of the partition
+    /// caches.
+    leader_ctx: ExecContext,
     /// Weight name → number of partitions holding a replica (metagraph
     /// cycles duplicate relations; replicas ship grads to the owner).
     replica_count: HashMap<String, usize>,
     pub leader: usize,
-    /// Per-partition marshalling scratch + dedup frontier, recycled
-    /// across batches (sequential runtime; the cluster runtime keeps its
-    /// own per-thread arenas). The forward pass stages each type's
-    /// distinct rows once; the backward rebuild scatters from the same
-    /// staging.
-    arenas: Vec<BatchArena>,
+    /// Per-partition dedup frontiers, recycled across batches
+    /// (sequential runtime; cluster workers ping-pong their own).
     frontiers: Vec<Frontier>,
+    /// `Some` iff `train.shared_session` — serializes marshal+execute.
+    gate: Option<ExecGate>,
 }
 
 impl RafEngine {
-    pub fn new(sess: &Session, mp: MetaPartition, policy: Policy) -> Result<RafEngine> {
+    pub fn new(sess: &mut Session, mp: MetaPartition, policy: Policy) -> Result<RafEngine> {
         let cfg = &sess.cfg;
         // Pre-sampling hotness (paper §6) + per-partition cache build over
         // the node types that partition actually holds — the locality that
@@ -64,7 +77,8 @@ impl RafEngine {
             2,
             cfg.train.seed ^ 0x807,
         );
-        let mut caches = Vec::new();
+        let gpus = cfg.train.gpus_per_machine.max(1);
+        let mut contexts = Vec::with_capacity(mp.num_parts);
         for part in 0..mp.num_parts {
             let present = mp.types_in_part(&sess.g, part);
             let profiles: Vec<TypeProfile> = sess
@@ -92,21 +106,35 @@ impl RafEngine {
                     }
                 })
                 .collect();
-            caches.push(FeatureCache::build(
+            let cache = FeatureCache::build(
                 policy,
                 &profiles,
                 &hot,
                 &cfg.cost,
                 cfg.train.cache_bytes_per_gpu * cfg.train.gpus_per_machine as u64,
                 cfg.train.gpus_per_machine,
-            ));
+            );
+            contexts.push(ExecContext::new(
+                part,
+                part % gpus,
+                &sess.artifacts_dir,
+                Arc::clone(&sess.manifest),
+                Some(cache),
+            )?);
         }
+        let leader_ctx = ExecContext::new(
+            mp.num_parts,
+            0,
+            &sess.artifacts_dir,
+            Arc::clone(&sess.manifest),
+            None,
+        )?;
         // Replica counts from the manifest: a weight appearing in several
         // worker artifacts is replicated across those partitions.
         let mut replica_count: HashMap<String, usize> = HashMap::new();
         for part in 0..mp.num_parts {
             let name = format!("worker_fwd_p{part}");
-            if let Ok(spec) = sess.rt.manifest.spec(&name) {
+            if let Ok(spec) = sess.manifest.spec(&name) {
                 for inp in &spec.inputs {
                     if inp.kind == "weight" {
                         *replica_count.entry(inp.name.clone()).or_insert(0) += 1;
@@ -114,29 +142,47 @@ impl RafEngine {
                 }
             }
         }
-        let arenas = (0..mp.num_parts).map(|_| BatchArena::new()).collect();
+        let plan = BatchPlan::raf(&sess.manifest, mp.num_parts)?;
+        // Initialize every weight the pipeline's artifacts declare, so
+        // marshalling (and the per-batch snapshots) is read-only.
+        let art_names: Vec<String> = plan
+            .workers
+            .iter()
+            .flat_map(|w| [Some(w.fwd_art.clone()), w.bwd_art.clone()])
+            .flatten()
+            .chain([plan.leader_art.clone()])
+            .collect();
+        sess.params
+            .ensure_artifacts(&sess.manifest, art_names.iter().map(|s| s.as_str()));
         let frontiers = vec![Frontier::default(); mp.num_parts];
+        let gate = sess.cfg.train.shared_session.then(ExecGate::new);
         Ok(RafEngine {
             mp,
-            caches,
+            plan,
+            contexts,
+            leader_ctx,
             replica_count,
             leader: 0,
-            arenas,
             frontiers,
+            gate,
         })
     }
 
     /// Run one epoch; `epoch` seeds the batch shuffle. Dispatches to the
     /// runtime selected by `train.runtime` — the thread-per-partition
-    /// cluster runtime or the sequential (seed) path. Both produce
-    /// byte-identical samples, losses and parameter trajectories.
+    /// cluster runtime or the sequential (seed) path. Both drive the
+    /// same [`BatchPlan`] stages and produce byte-identical samples,
+    /// losses and parameter trajectories.
     pub fn run_epoch(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
         match sess.cfg.train.runtime {
             RuntimeKind::Cluster => crate::cluster::raf::run_epoch(
+                &self.plan,
+                &mut self.contexts,
+                &mut self.leader_ctx,
                 &self.mp,
-                &mut self.caches,
                 &self.replica_count,
                 self.leader,
+                self.gate.as_ref(),
                 sess,
                 epoch,
             ),
@@ -144,22 +190,44 @@ impl RafEngine {
         }
     }
 
-    /// The sequential (single-thread) epoch, kept for A/B comparison.
+    /// The sequential (single-thread) driver, kept for A/B comparison:
+    /// plays every worker's stages in turn on one thread.
     fn run_epoch_sequential(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
         let cfg = sess.cfg.clone();
         let b = cfg.train.batch_size;
         let h = cfg.model.hidden;
         let parts = self.mp.num_parts;
-        let gpus = cfg.train.gpus_per_machine.max(1);
         let ntypes = sess.g.schema.node_types.len();
+        let g = Arc::clone(&sess.g);
+        let tree = Arc::clone(&sess.tree);
         let mut net = SimNet::new(parts, cfg.cost.clone());
+        let mut timeline = EpochTimeline::new(parts);
         let mut stages = StageTimes::default();
-        let mut epoch_time = 0.0f64;
+        let mut worker_stages = vec![StageTimes::default(); parts];
+        let mut wall = WallClock::new(parts);
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         let mut batches = 0usize;
-        let mut worker_busy = vec![0.0f64; parts];
         let mut fetch = FetchStats::default();
+
+        // The leader role prices its cache traffic through fork-ledger
+        // views (shared residency ⇒ identical modeled times), folded
+        // back into the owning contexts at epoch end — the same scheme
+        // the cluster runtime uses, so hit rates match across runtimes.
+        let mut fork_leader = self.contexts[self.leader]
+            .cache
+            .as_ref()
+            .map(|c| c.fork_ledger());
+        let mut fork_p0 = self.contexts[0].cache.as_ref().map(|c| c.fork_ledger());
+
+        let world = EpochWorld {
+            cfg: &cfg,
+            g: &g,
+            tree: &tree,
+            store: &sess.store,
+            gate: self.gate.as_ref(),
+            epoch_t0: Instant::now(),
+        };
 
         let mut train = sess.g.train_nodes();
         let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
@@ -169,75 +237,47 @@ impl RafEngine {
             if chunk.len() < b {
                 break; // drop the ragged tail (static shapes)
             }
-            sess.adam_t += 1;
             let batch_seed = cfg.train.batch_seed(epoch, bi);
 
-            // ---- worker forward phase (parallel across machines) ----
-            let mut fwd_worker_time = vec![0.0f64; parts];
+            // ---- worker forward stages (played in partition order) ----
+            let mut partial_sums = [vec![0f32; b * h], vec![0f32; b * h]];
             let mut samples = Vec::with_capacity(parts);
-            let mut partial_sums = vec![vec![0f32; b * h]; 2];
-            let mut worker_partials: Vec<[Vec<f32>; 2]> = Vec::with_capacity(parts);
+            let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
             for p in 0..parts {
-                let mut st = StageTimes::default();
                 let t0 = Instant::now();
-                let filter = partition_edge_filter(&sess.tree, &self.mp, p);
-                let sample = sample_tree(
-                    &sess.g,
-                    &sess.tree,
-                    &cfg.model.fanouts,
-                    chunk,
-                    0,
-                    batch_seed,
-                    filter,
-                );
-                st.add(Stage::Sample, t0.elapsed().as_secs_f64() * cfg.cost.compute_scale);
-
-                let art = format!("worker_fwd_p{p}");
-                let spec = sess.rt.manifest.spec(&art)?.clone();
-                let t1 = Instant::now();
-                let extra = ExtraInputs::new();
-                let frontier = if cfg.train.dedup_fetch {
+                let filter = partition_edge_filter(&tree, &self.mp, p);
+                let sample =
+                    sample_tree(&g, &tree, &cfg.model.fanouts, chunk, 0, batch_seed, filter);
+                let sample_s = t0.elapsed().as_secs_f64() * cfg.cost.compute_scale;
+                if cfg.train.dedup_fetch {
                     // Root (target) rows join the fetch frontier only if
                     // this worker's artifact actually gathers them — the
                     // leader fetches the batch's target rows itself.
-                    let needs_root = spec.inputs.iter().any(|i| i.kind == "target_feat");
-                    self.frontiers[p].rebuild(&sess.tree, &sample, ntypes, needs_root);
-                    Some(&self.frontiers[p])
-                } else {
-                    None
-                };
-                self.arenas[p].begin_batch(ntypes);
-                let (lits, acc) = build_inputs(
-                    sess,
-                    &spec,
-                    Some(&sample),
+                    self.frontiers[p].rebuild(
+                        &tree,
+                        &sample,
+                        ntypes,
+                        self.plan.workers[p].needs_root,
+                    );
+                }
+                let frontier = cfg.train.dedup_fetch.then(|| &self.frontiers[p]);
+                let fwd = self.plan.workers[p].raf_forward(
+                    &mut self.contexts[p],
+                    &world,
+                    ParamsView::Owner(&sess.params),
+                    &sample,
                     frontier,
                     chunk,
-                    &extra,
-                    &|_, _| false, // meta-partitioning: all fetches local
-                    Some(&mut self.caches[p]),
-                    p % gpus,
-                    &mut self.arenas[p],
+                    sample_s,
                 )?;
-                st.add(Stage::Copy, t1.elapsed().as_secs_f64() * cfg.cost.compute_scale);
-                st.add(Stage::Fetch, acc.cache_time_s);
-                fetch.merge(acc.stats);
-
-                let t2 = Instant::now();
-                let outs = sess.rt.exec(&art, &lits)?;
-                st.add(Stage::Forward, t2.elapsed().as_secs_f64() * cfg.cost.compute_scale / gpus as f64);
-                let p1 = crate::runtime::lit_to_vec(&outs[0])?;
-                let p2 = crate::runtime::lit_to_vec(&outs[1])?;
-                add_assign(&mut partial_sums[0], &p1);
-                add_assign(&mut partial_sums[1], &p2);
-                worker_partials.push([p1, p2]);
+                add_assign(&mut partial_sums[0], &fwd.p1);
+                add_assign(&mut partial_sums[1], &fwd.p2);
+                fetch.merge(fwd.stats);
+                stages.merge(&fwd.stages);
+                worker_stages[p].merge(&fwd.stages);
+                wall.record_forward(p, fwd.wall_fwd);
+                worker_spans.push(fwd.span);
                 samples.push(sample);
-                fwd_worker_time[p] = st.total();
-                stage_max(&mut stages, &st);
-            }
-            epoch_time += fwd_worker_time.iter().cloned().fold(0.0, f64::max);
-            for p in 0..parts {
-                worker_busy[p] += fwd_worker_time[p];
             }
 
             // ---- gather partials at the leader (2 tensors per worker) ----
@@ -247,186 +287,107 @@ impl RafEngine {
                 .collect();
             let t_gather = net.gather(self.leader, &gather_bytes)?;
             stages.add(Stage::Forward, t_gather);
-            epoch_time += t_gather;
 
-            // ---- leader: cross-relation agg + head + loss + backward ----
-            let spec = sess.rt.manifest.spec("leader")?.clone();
-            let mut extra = ExtraInputs::new();
-            extra.insert(("partial_sum".into(), 1), partial_sums[0].clone());
-            extra.insert(("partial_sum".into(), 2), partial_sums[1].clone());
-            let t3 = Instant::now();
-            let (lits, leader_acc) = build_inputs(
-                sess,
-                &spec,
-                None,
-                None, // no sample → no frontier; batch ids are unique anyway
+            // ---- leader stage: cross-relation agg + head + loss + bwd ----
+            let lo = self.plan.raf_leader_step(
+                &mut self.leader_ctx,
+                &world,
+                &mut sess.params,
+                &mut sess.adam_t,
+                fork_leader.as_mut(),
+                &partial_sums,
                 chunk,
-                &extra,
-                &|_, _| false,
-                Some(&mut self.caches[self.leader]),
-                0,
-                &mut self.arenas[self.leader],
             )?;
-            fetch.merge(leader_acc.stats);
-            let outs = sess.rt.exec("leader", &lits)?;
-            let leader_t = t3.elapsed().as_secs_f64() * cfg.cost.compute_scale;
-            stages.add(Stage::Forward, leader_t * 0.5);
-            stages.add(Stage::Backward, leader_t * 0.5);
-            epoch_time += leader_t;
-
-            let loss = crate::runtime::lit_scalar(&outs[0])? as f64;
-            let acc = crate::runtime::lit_scalar(&outs[1])? as f64;
-            let g1 = crate::runtime::lit_to_vec(&outs[2])?;
-            let g2 = crate::runtime::lit_to_vec(&outs[3])?;
-            let mut gx_root = crate::runtime::lit_to_vec(&outs[4])?;
-            loss_sum += loss;
-            acc_sum += acc;
-
-            // Leader's own (head) weight updates.
-            let t4 = Instant::now();
-            for (o, out) in spec.outputs.iter().zip(&outs) {
-                if o.kind == "wgrad" {
-                    let grad = crate::runtime::lit_to_vec(out)?;
-                    sess.params.step(&o.name, &grad)?;
-                }
-            }
-            stages.add(Stage::Update, t4.elapsed().as_secs_f64());
-            epoch_time += t4.elapsed().as_secs_f64();
+            fetch.merge(lo.stats);
+            stages.add(Stage::Forward, lo.leader_s * 0.5);
+            stages.add(Stage::Backward, lo.leader_s * 0.5);
+            stages.add(Stage::Update, lo.head_update_s);
+            loss_sum += lo.loss;
+            acc_sum += lo.acc;
 
             // ---- scatter gradients back (2 tensors per worker) ----
             let t_scatter = net.gather(self.leader, &gather_bytes)?; // symmetric
             stages.add(Stage::Backward, t_scatter);
-            epoch_time += t_scatter;
 
-            // ---- worker backward + updates ----
-            let mut bwd_worker_time = vec![0.0f64; parts];
-            let mut wgrads: HashMap<String, Vec<f32>> = HashMap::new();
-            let mut row_grads: HashMap<usize, (Vec<NodeId>, Vec<f32>)> = HashMap::new();
-            let mut gx_extra: Vec<f32> = Vec::new();
+            // ---- worker backward stages ----
+            let mut gacc = GradAccumulator::default();
             for p in 0..parts {
-                let mut st = StageTimes::default();
-                let art = format!("worker_bwd_p{p}");
-                let spec = sess.rt.manifest.spec(&art)?.clone();
-                let mut extra = ExtraInputs::new();
-                extra.insert(("grad".into(), 1), g1.clone());
-                extra.insert(("grad".into(), 2), g2.clone());
-                let t5 = Instant::now();
                 // Reuses the forward pass's staged rows: same batch, same
                 // frontier, features unmodified until the update phase.
                 let frontier = cfg.train.dedup_fetch.then(|| &self.frontiers[p]);
-                let (lits, _) = build_inputs(
-                    sess,
-                    &spec,
-                    Some(&samples[p]),
+                let bwd = self.plan.workers[p].raf_backward(
+                    &mut self.contexts[p],
+                    &world,
+                    ParamsView::Owner(&sess.params),
+                    &samples[p],
                     frontier,
                     chunk,
-                    &extra,
-                    &|_, _| false,
-                    None, // rows already resident from forward
-                    p % gpus,
-                    &mut self.arenas[p],
+                    lo.g1.clone(),
+                    lo.g2.clone(),
                 )?;
-                let outs = sess.rt.exec(&art, &lits)?;
-                st.add(Stage::Backward, t5.elapsed().as_secs_f64() * cfg.cost.compute_scale / gpus as f64);
-
-                for (o, out) in spec.outputs.iter().zip(&outs) {
-                    match o.kind.as_str() {
-                        "wgrad" => {
-                            let g = crate::runtime::lit_to_vec(out)?;
-                            match wgrads.get_mut(&o.name) {
-                                Some(acc) => add_assign(acc, &g),
-                                None => {
-                                    wgrads.insert(o.name.clone(), g);
-                                }
-                            }
-                        }
-                        "block_grad" => {
-                            let (child, src_ty) = sess.edge_child(o.edge as usize);
-                            let g = crate::runtime::lit_to_vec(out)?;
-                            let entry = row_grads
-                                .entry(src_ty)
-                                .or_insert_with(|| (Vec::new(), Vec::new()));
-                            entry.0.extend_from_slice(&samples[p].ids[child]);
-                            entry.1.extend_from_slice(&g);
-                        }
-                        "target_feat_grad" => {
-                            let g = crate::runtime::lit_to_vec(out)?;
-                            if gx_extra.is_empty() {
-                                gx_extra = g;
-                            } else {
-                                add_assign(&mut gx_extra, &g);
-                            }
-                        }
-                        _ => {}
-                    }
-                }
-                bwd_worker_time[p] = st.total();
-                stage_max(&mut stages, &st);
-            }
-            epoch_time += bwd_worker_time.iter().cloned().fold(0.0, f64::max);
-            for p in 0..parts {
-                worker_busy[p] += bwd_worker_time[p];
+                stages.merge(&bwd.stages);
+                worker_stages[p].merge(&bwd.stages);
+                worker_spans[p].bwd_s = bwd.bwd_s;
+                gacc.absorb(bwd.grads);
             }
 
-            // ---- model-parallel weight updates (local per partition) ----
-            let t6 = Instant::now();
-            let mut sync_bytes = 0u64;
-            for (name, grad) in &wgrads {
-                // Replicated relations: replicas push grads to the owner.
-                let replicas = self.replica_count.get(name).copied().unwrap_or(1);
-                if replicas > 1 {
-                    sync_bytes += (grad.len() * 4 * (replicas - 1)) as u64;
-                }
-                sess.params.step(name, grad)?;
-            }
-            let update_t = t6.elapsed().as_secs_f64();
-            stages.add(Stage::Update, update_t);
-            epoch_time += update_t;
-            if sync_bytes > 0 {
-                let t = net.send(1 % parts, self.leader, sync_bytes)?;
+            // ---- update stage (weights + learnable features) ----
+            let mut gx_root = lo.gx_root;
+            let upd = raf_apply_updates(
+                &world,
+                &mut sess.params,
+                sess.adam_t,
+                &self.replica_count,
+                &gacc,
+                &mut gx_root,
+                chunk,
+                fork_leader.as_mut(),
+                fork_p0.as_mut(),
+            )?;
+            stages.add(Stage::Update, upd.update_s + upd.lf_s);
+            let sync_t = if upd.sync_bytes > 0 {
+                let t = net.send(1 % parts, self.leader, upd.sync_bytes)?;
                 stages.add(Stage::GradSync, t);
-                epoch_time += t;
-            }
+                t
+            } else {
+                0.0
+            };
 
-            // ---- learnable-feature updates (sparse Adam, local rows) ----
-            let t7 = Instant::now();
-            let mut cache_write_t = 0.0;
-            if !gx_extra.is_empty() {
-                add_assign(&mut gx_root, &gx_extra);
-            }
-            let tgt = sess.g.schema.target;
-            if sess.store.is_learnable(tgt) {
-                apply_learnable_grads(sess, tgt, chunk, &gx_root, 1.0);
-                let cost = cfg.cost.clone();
-                for &id in chunk {
-                    cache_write_t +=
-                        self.caches[self.leader].access(&cost, tgt, id, 0, true);
-                }
-            }
-            for (ty, (ids, grads)) in &row_grads {
-                apply_learnable_grads(sess, *ty, ids, grads, 1.0);
-                let cost = cfg.cost.clone();
-                // Write-back path through the owning partition's cache.
-                for &id in ids.iter().filter(|&&id| id != crate::sampling::PAD) {
-                    cache_write_t += self.caches[0].access(&cost, *ty, id, 0, true);
-                }
-            }
-            let t_upd = t7.elapsed().as_secs_f64() + cache_write_t;
-            stages.add(Stage::Update, t_upd);
-            epoch_time += t_upd;
-
+            timeline.push_batch(
+                worker_spans,
+                LeaderSpan {
+                    gather_s: t_gather,
+                    leader_s: lo.leader_s,
+                    scatter_s: t_scatter,
+                    update_s: lo.head_update_s + upd.update_s + upd.lf_s,
+                    sync_s: sync_t,
+                },
+            );
             batches += 1;
         }
 
-        let comm = net.total();
+        if let Some(f) = fork_leader {
+            if let Some(c) = self.contexts[self.leader].cache.as_mut() {
+                c.absorb_ledger(&f);
+            }
+        }
+        if let Some(f) = fork_p0 {
+            if let Some(c) = self.contexts[0].cache.as_mut() {
+                c.absorb_ledger(&f);
+            }
+        }
+
+        // No overlap in the sequential runtime: the critical path is the
+        // summed schedule itself.
+        let epoch_time_s = timeline.sequential_time();
         Ok(EpochReport {
-            epoch_time_s: epoch_time,
-            // No overlap in the sequential runtime: the critical path
-            // is the summed epoch time itself.
-            critical_path_s: epoch_time,
-            worker_busy_s: worker_busy,
+            epoch_time_s,
+            critical_path_s: epoch_time_s,
+            worker_busy_s: timeline.worker_busy_s(),
+            worker_stages,
+            wall,
             stages,
-            comm,
+            comm: net.total(),
             fetch,
             loss_mean: if batches > 0 { loss_sum / batches as f64 } else { f64::NAN },
             accuracy: if batches > 0 {
@@ -440,19 +401,9 @@ impl RafEngine {
 
     /// Cache hit-rate report per node type (Fig. 12).
     pub fn hit_rates(&self) -> Vec<Vec<f64>> {
-        self.caches.iter().map(|c| c.hit_rates()).collect()
-    }
-}
-
-/// Accumulate per-stage maxima across parallel workers: for each stage,
-/// the slowest worker defines the critical path.
-fn stage_max(total: &mut StageTimes, worker: &StageTimes) {
-    for i in 0..total.secs.len() {
-        // Stages are accumulated per batch; take max by adding only the
-        // excess over what's already recorded for this batch's workers.
-        // (Approximation documented in DESIGN.md §Perf.)
-        if worker.secs[i] > 0.0 {
-            total.secs[i] += worker.secs[i];
-        }
+        self.contexts
+            .iter()
+            .filter_map(|c| c.cache.as_ref().map(|c| c.hit_rates()))
+            .collect()
     }
 }

@@ -10,8 +10,13 @@
 //! Baseline variants (paper §8.1): DGL-Random / DGL-METIS (no cache),
 //! DGL-Opt (read-only feature cache), GraphLearn (per-type partitioning
 //! + feature cache, no learnable-feature support).
+//!
+//! Since PR 3 the fused-step and update bodies live in
+//! [`crate::exec::BatchPlan`]; this file owns engine construction and
+//! the sequential scheduling — the thread-per-partition scheduling
+//! lives in [`crate::cluster::vanilla`].
 
-use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -19,26 +24,29 @@ use anyhow::Result;
 use crate::cache::{FeatureCache, Policy, TypeProfile};
 use crate::comm::{Lane, SimNet};
 use crate::config::RuntimeKind;
-use crate::hetgraph::NodeId;
+use crate::exec::plan::vanilla_apply_updates;
+use crate::exec::{BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView};
 use crate::kvstore::FetchStats;
+use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::NodePartition;
-use crate::sampling::{presample_hotness, remote_counts, sample_tree, Frontier, PAD};
+use crate::sampling::{presample_hotness, remote_counts, sample_tree, Frontier};
 use crate::util::rng::Rng;
 
-use super::common::{
-    add_assign, apply_learnable_grads, build_inputs, BatchArena, ExtraInputs, Session,
-};
+use super::common::Session;
 
 pub struct VanillaEngine {
     pub part: NodePartition,
-    /// Per-worker feature cache (None = DGL-Random/METIS baseline).
-    caches: Option<Vec<FeatureCache>>,
-    /// Per-worker marshalling scratch + dedup frontier, recycled across
-    /// batches (sequential runtime; the cluster runtime keeps its own
-    /// per-thread arenas).
-    arenas: Vec<BatchArena>,
+    /// The per-batch stage pipeline (the fused `vanilla` step).
+    plan: BatchPlan,
+    /// One execution context per worker; `cache` is `None` for the
+    /// DGL-Random/METIS baselines.
+    contexts: Vec<ExecContext>,
+    /// Per-worker dedup frontiers, recycled across batches (sequential
+    /// runtime; cluster workers ping-pong their own).
     frontiers: Vec<Frontier>,
+    /// `Some` iff `train.shared_session` — serializes marshal+execute.
+    gate: Option<ExecGate>,
 }
 
 impl VanillaEngine {
@@ -47,13 +55,13 @@ impl VanillaEngine {
     /// non-replicated learnable rows buys them nothing because remote
     /// workers still fetch over the network (paper §8.1).
     pub fn new(
-        sess: &Session,
+        sess: &mut Session,
         part: NodePartition,
         cache_policy: Policy,
     ) -> Result<VanillaEngine> {
         let cfg = &sess.cfg;
-        let caches = if cache_policy == Policy::None {
-            None
+        let mut caches: Vec<Option<FeatureCache>> = if cache_policy == Policy::None {
+            (0..part.num_parts).map(|_| None).collect()
         } else {
             let hotness = presample_hotness(
                 &sess.g,
@@ -87,38 +95,52 @@ impl VanillaEngine {
                     }
                 })
                 .collect();
-            Some(
-                (0..part.num_parts)
-                    .map(|_| {
-                        FeatureCache::build(
-                            cache_policy,
-                            &profiles,
-                            &hot,
-                            &cfg.cost,
-                            cfg.train.cache_bytes_per_gpu * cfg.train.gpus_per_machine as u64,
-                            cfg.train.gpus_per_machine,
-                        )
-                    })
-                    .collect(),
-            )
+            (0..part.num_parts)
+                .map(|_| {
+                    Some(FeatureCache::build(
+                        cache_policy,
+                        &profiles,
+                        &hot,
+                        &cfg.cost,
+                        cfg.train.cache_bytes_per_gpu * cfg.train.gpus_per_machine as u64,
+                        cfg.train.gpus_per_machine,
+                    ))
+                })
+                .collect()
         };
-        let arenas = (0..part.num_parts).map(|_| BatchArena::new()).collect();
+        let mut contexts = Vec::with_capacity(part.num_parts);
+        for w in 0..part.num_parts {
+            contexts.push(ExecContext::new(
+                w,
+                0,
+                &sess.artifacts_dir,
+                Arc::clone(&sess.manifest),
+                caches[w].take(),
+            )?);
+        }
+        let plan = BatchPlan::vanilla(&sess.manifest, part.num_parts)?;
+        sess.params.ensure_artifacts(&sess.manifest, ["vanilla"]);
         let frontiers = vec![Frontier::default(); part.num_parts];
+        let gate = sess.cfg.train.shared_session.then(ExecGate::new);
         Ok(VanillaEngine {
             part,
-            caches,
-            arenas,
+            plan,
+            contexts,
             frontiers,
+            gate,
         })
     }
 
     /// Run one epoch, dispatching to the runtime selected by
-    /// `train.runtime`; both runtimes produce byte-identical losses.
+    /// `train.runtime`; both runtimes drive the same [`BatchPlan`]
+    /// stages and produce byte-identical losses.
     pub fn run_epoch(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
         match sess.cfg.train.runtime {
             RuntimeKind::Cluster => crate::cluster::vanilla::run_epoch(
+                &self.plan,
+                &mut self.contexts,
                 &self.part,
-                self.caches.as_mut(),
+                self.gate.as_ref(),
                 sess,
                 epoch,
             ),
@@ -126,212 +148,131 @@ impl VanillaEngine {
         }
     }
 
-    /// The sequential (single-thread) epoch, kept for A/B comparison.
+    /// The sequential (single-thread) driver, kept for A/B comparison.
     fn run_epoch_sequential(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
         let cfg = sess.cfg.clone();
         let b = cfg.train.batch_size;
         let parts = self.part.num_parts;
         let vb = (b / parts).max(1);
-        let gpus = cfg.train.gpus_per_machine.max(1);
         let layers = cfg.model.layers;
         let ntypes = sess.g.schema.node_types.len();
+        let g = Arc::clone(&sess.g);
+        let tree = Arc::clone(&sess.tree);
         let mut net = SimNet::new(parts, cfg.cost.clone());
+        let mut timeline = EpochTimeline::new(parts);
         let mut stages = StageTimes::default();
-        let mut epoch_time = 0.0f64;
+        let mut worker_stages = vec![StageTimes::default(); parts];
+        let mut wall = WallClock::new(parts);
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         let mut batches = 0usize;
-        let mut worker_busy = vec![0.0f64; parts];
         let mut fetch = FetchStats::default();
+
+        let world = EpochWorld {
+            cfg: &cfg,
+            g: &g,
+            tree: &tree,
+            store: &sess.store,
+            gate: self.gate.as_ref(),
+            epoch_t0: Instant::now(),
+        };
 
         let mut train = sess.g.train_nodes();
         let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
         shuffle_rng.shuffle(&mut train);
 
-        let spec = sess.rt.manifest.spec("vanilla")?.clone();
-        // Root (target) rows join the fetch frontier only if the
-        // artifact actually gathers them.
-        let needs_root = spec.inputs.iter().any(|i| i.kind == "target_feat");
-
         for (bi, chunk) in train.chunks(b).enumerate() {
             if chunk.len() < vb * parts {
                 break;
             }
-            sess.adam_t += 1;
             let batch_seed = cfg.train.batch_seed(epoch, bi);
-
-            let mut worker_time = vec![0.0f64; parts];
-            let mut wgrads: HashMap<String, Vec<f32>> = HashMap::new();
-            let mut row_grads: HashMap<usize, (Vec<NodeId>, Vec<f32>)> = HashMap::new();
-            // type → (valid rows, remote rows) for the update-cost model.
-            let mut learnable_rows: HashMap<usize, (u64, u64)> = HashMap::new();
+            let mut gacc = GradAccumulator::default();
+            let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
 
             for w in 0..parts {
-                let mut st = StageTimes::default();
                 let micro = &chunk[w * vb..(w + 1) * vb];
 
                 // -- sampling over the whole graph: remote hops are RPCs --
                 let t0 = Instant::now();
-                let sample = sample_tree(
-                    &sess.g,
-                    &sess.tree,
-                    &cfg.model.fanouts,
-                    micro,
-                    w * vb,
-                    batch_seed,
-                    |_| true,
-                );
-                let mut sample_t = t0.elapsed().as_secs_f64() * cfg.cost.compute_scale;
-                let rstats = remote_counts(&sess.tree, &sample, &self.part, w);
+                let sample =
+                    sample_tree(&g, &tree, &cfg.model.fanouts, micro, w * vb, batch_seed, |_| {
+                        true
+                    });
+                let mut sample_s = t0.elapsed().as_secs_f64() * cfg.cost.compute_scale;
+                let rstats = remote_counts(&tree, &sample, &self.part, w);
                 // Remote neighbor lookups: id traffic + one RPC per hop
                 // per remote machine.
-                sample_t += net.cost.xfer_time_msgs(
+                sample_s += cfg.cost.xfer_time_msgs(
                     Lane::Net,
                     rstats.remote * 8,
                     (layers * (parts - 1)).max(1) as u64,
                 );
                 net.ledgers[w].charge(Lane::Net, rstats.remote * 8, 0.0);
-                st.add(Stage::Sample, sample_t);
 
-                // -- feature fetching: local via cache, remote via net --
-                let owner = &self.part;
-                let t1 = Instant::now();
-                let extra = ExtraInputs::new();
-                let frontier = if cfg.train.dedup_fetch {
-                    self.frontiers[w].rebuild(&sess.tree, &sample, ntypes, needs_root);
-                    Some(&self.frontiers[w])
-                } else {
-                    None
-                };
-                self.arenas[w].begin_batch(ntypes);
-                let cache = self.caches.as_mut().map(|c| &mut c[w]);
-                let (lits, acc) = build_inputs(
-                    sess,
-                    &spec,
-                    Some(&sample),
+                // -- fused marshal + train step (the shared stage) --
+                if cfg.train.dedup_fetch {
+                    self.frontiers[w].rebuild(
+                        &tree,
+                        &sample,
+                        ntypes,
+                        self.plan.workers[w].needs_root,
+                    );
+                }
+                let frontier = cfg.train.dedup_fetch.then(|| &self.frontiers[w]);
+                let step = self.plan.workers[w].vanilla_step(
+                    &mut self.contexts[w],
+                    &world,
+                    ParamsView::Owner(&sess.params),
+                    &self.part,
+                    &sample,
                     frontier,
                     micro,
-                    &extra,
-                    &|ty, id| owner.owner_of(ty, id) != w,
-                    cache,
-                    0,
-                    &mut self.arenas[w],
+                    sample_s,
                 )?;
-                st.add(Stage::Copy, t1.elapsed().as_secs_f64() * cfg.cost.compute_scale);
-                fetch.merge(acc.stats);
-                let fetch_t =
-                    super::common::vanilla_fetch_time(&net.cost, &acc, self.caches.is_some(), parts);
-                net.ledgers[w].charge(Lane::Net, acc.stats.remote_bytes, 0.0);
-                st.add(Stage::Fetch, fetch_t);
-
-                // -- fused fwd+bwd step --
-                let t2 = Instant::now();
-                let outs = sess.rt.exec("vanilla", &lits)?;
-                let step_t = t2.elapsed().as_secs_f64() * cfg.cost.compute_scale / gpus as f64;
-                st.add(Stage::Forward, step_t * 0.45);
-                st.add(Stage::Backward, step_t * 0.55);
-
-                loss_sum += crate::runtime::lit_scalar(&outs[0])? as f64 / parts as f64;
-                acc_sum += crate::runtime::lit_scalar(&outs[1])? as f64;
-
-                for (o, out) in spec.outputs.iter().zip(&outs) {
-                    match o.kind.as_str() {
-                        "wgrad" => {
-                            let g = crate::runtime::lit_to_vec(out)?;
-                            match wgrads.get_mut(&o.name) {
-                                Some(accg) => add_assign(accg, &g),
-                                None => {
-                                    wgrads.insert(o.name.clone(), g);
-                                }
-                            }
-                        }
-                        "block_grad" => {
-                            let (child, src_ty) = sess.edge_child(o.edge as usize);
-                            let g = crate::runtime::lit_to_vec(out)?;
-                            let entry = row_grads
-                                .entry(src_ty)
-                                .or_insert_with(|| (Vec::new(), Vec::new()));
-                            let counts = learnable_rows.entry(src_ty).or_insert((0, 0));
-                            for &id in &sample.ids[child] {
-                                if id != PAD {
-                                    counts.0 += 1;
-                                    if owner.owner_of(src_ty, id) != w {
-                                        counts.1 += 1;
-                                    }
-                                }
-                            }
-                            entry.0.extend_from_slice(&sample.ids[child]);
-                            entry.1.extend_from_slice(&g);
-                        }
-                        "target_feat_grad" => {
-                            if sess.store.is_learnable(sess.g.schema.target) {
-                                let g = crate::runtime::lit_to_vec(out)?;
-                                let entry = row_grads
-                                    .entry(sess.g.schema.target)
-                                    .or_insert_with(|| (Vec::new(), Vec::new()));
-                                let counts =
-                                    learnable_rows.entry(sess.g.schema.target).or_insert((0, 0));
-                                counts.0 += micro.len() as u64;
-                                entry.0.extend_from_slice(micro);
-                                entry.1.extend_from_slice(&g);
-                            }
-                        }
-                        _ => {}
-                    }
-                }
-                worker_time[w] = st.total();
-                for i in 0..stages.secs.len() {
-                    stages.secs[i] += st.secs[i];
-                }
-            }
-            epoch_time += worker_time.iter().cloned().fold(0.0, f64::max);
-            for w in 0..parts {
-                worker_busy[w] += worker_time[w];
+                net.ledgers[w].charge(Lane::Net, step.stats.remote_bytes, 0.0);
+                loss_sum += step.loss / parts as f64;
+                acc_sum += step.acc;
+                fetch.merge(step.stats);
+                stages.merge(&step.stages);
+                worker_stages[w].merge(&step.stages);
+                wall.record_forward(w, step.wall_fwd);
+                worker_spans.push(step.span);
+                gacc.absorb(step.grads);
             }
 
-            // -- dense gradient all-reduce (data parallelism) --
-            let grad_bytes = (sess.params.total_elems() * 4) as u64;
-            let t_ar = net.allreduce(grad_bytes);
-            stages.add(Stage::GradSync, t_ar);
-            epoch_time += t_ar;
+            // -- all-reduce + model + learnable updates (shared stage) --
+            let upd = vanilla_apply_updates(
+                &world,
+                &mut sess.params,
+                &mut sess.adam_t,
+                gacc,
+                &mut net,
+                parts,
+            )?;
+            stages.add(Stage::GradSync, upd.allreduce_s);
+            stages.add(Stage::Update, upd.update_s + upd.lf_s);
 
-            // -- model update (every replica applies the mean grad) --
-            let t3 = Instant::now();
-            let inv = 1.0 / parts as f32;
-            for (name, mut grad) in wgrads {
-                for g in grad.iter_mut() {
-                    *g *= inv;
-                }
-                sess.params.step(&name, &grad)?;
-            }
-            let upd_t = t3.elapsed().as_secs_f64();
-            stages.add(Stage::Update, upd_t);
-            epoch_time += upd_t;
-
-            // -- learnable-feature updates: remote rows pay the network --
-            let t4 = Instant::now();
-            for (ty, (ids, grads)) in &row_grads {
-                apply_learnable_grads(sess, *ty, ids, grads, inv);
-            }
-            let mut lf_t = t4.elapsed().as_secs_f64();
-            let lr = super::common::learnable_rows_sorted(learnable_rows, &sess.store);
-            let (cost_t, remote_bytes) =
-                super::common::vanilla_learnable_update_cost(&net.cost, &lr, parts);
-            lf_t += cost_t;
-            if remote_bytes > 0 {
-                net.ledgers[0].charge(Lane::Net, remote_bytes, 0.0);
-            }
-            stages.add(Stage::Update, lf_t);
-            epoch_time += lf_t;
-
+            timeline.push_batch(
+                worker_spans,
+                LeaderSpan {
+                    gather_s: upd.allreduce_s,
+                    leader_s: 0.0,
+                    scatter_s: 0.0,
+                    update_s: upd.update_s + upd.lf_s,
+                    sync_s: 0.0,
+                },
+            );
             batches += 1;
         }
 
+        // No overlap in the sequential runtime.
+        let epoch_time_s = timeline.sequential_time();
         Ok(EpochReport {
-            epoch_time_s: epoch_time,
-            // No overlap in the sequential runtime.
-            critical_path_s: epoch_time,
-            worker_busy_s: worker_busy,
+            epoch_time_s,
+            critical_path_s: epoch_time_s,
+            worker_busy_s: timeline.worker_busy_s(),
+            worker_stages,
+            wall,
             stages,
             comm: net.total(),
             fetch,
@@ -346,9 +287,9 @@ impl VanillaEngine {
     }
 
     pub fn hit_rates(&self) -> Vec<Vec<f64>> {
-        self.caches
-            .as_ref()
-            .map(|cs| cs.iter().map(|c| c.hit_rates()).collect())
-            .unwrap_or_default()
+        self.contexts
+            .iter()
+            .filter_map(|c| c.cache.as_ref().map(|c| c.hit_rates()))
+            .collect()
     }
 }

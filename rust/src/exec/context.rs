@@ -1,0 +1,194 @@
+//! Per-worker execution contexts and the epoch-scoped shared world.
+
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::cache::FeatureCache;
+use crate::config::Config;
+use crate::hetgraph::{HetGraph, MetaTree};
+use crate::kvstore::FeatureStore;
+use crate::runtime::{Manifest, ParamSnapshot, ParamStore, Runtime};
+
+use super::marshal::BatchArena;
+
+/// Everything one worker **owns** for artifact execution: its own PJRT
+/// client with its own compiled executables, its partition's feature
+/// cache, and its reusable marshalling scratch. Cluster worker threads
+/// hold an exclusive `&mut ExecContext` for the whole epoch; the
+/// sequential runtime iterates the same contexts one at a time. The
+/// type is `Send` by construction — moving a context to a worker thread
+/// needs no lock, which is the compile-level guarantee
+/// `tests/test_exec_contexts.rs` pins.
+pub struct ExecContext {
+    /// Worker / partition id this context belongs to.
+    pub worker: usize,
+    /// GPU index of this worker on its machine (for the cache's
+    /// non-replicative split accounting).
+    pub gpu: usize,
+    /// This worker's own artifact registry: one PJRT client, executables
+    /// compiled lazily on first use.
+    pub rt: Runtime,
+    /// The partition's feature cache (`None` for cache-less baselines).
+    pub cache: Option<FeatureCache>,
+    /// Reusable per-batch marshalling scratch.
+    pub arena: BatchArena,
+}
+
+impl ExecContext {
+    /// Build the context for `worker`, creating its own PJRT client over
+    /// the shared parsed manifest.
+    pub fn new(
+        worker: usize,
+        gpu: usize,
+        artifacts_dir: &str,
+        manifest: Arc<Manifest>,
+        cache: Option<FeatureCache>,
+    ) -> Result<ExecContext> {
+        let rt = Runtime::with_manifest(artifacts_dir, manifest)
+            .with_context(|| format!("execution context for worker {worker}"))?;
+        Ok(ExecContext {
+            worker,
+            gpu,
+            rt,
+            cache,
+            arena: BatchArena::new(),
+        })
+    }
+}
+
+/// The `train.shared_session = true` escape hatch: a serialization
+/// token acquired around every marshal+execute stage, reproducing the
+/// pre-PR-3 behavior where all artifact executions serialized on one
+/// shared session. Used only for A/B timing (`benches/exec_overlap.rs`);
+/// per-worker contexts (the default) never construct one. Lives in the
+/// exec layer on purpose — the cluster runtime itself is lock-free.
+#[derive(Default)]
+pub struct ExecGate {
+    token: Mutex<()>,
+}
+
+impl ExecGate {
+    pub fn new() -> ExecGate {
+        ExecGate::default()
+    }
+
+    /// Hold the returned guard for the duration of one serialized
+    /// marshal+execute stage. Poisoning is impossible to observe
+    /// meaningfully here (the token guards no data), so a poisoned
+    /// token is re-entered rather than treated as an error.
+    pub fn acquire(&self) -> MutexGuard<'_, ()> {
+        self.token.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// The state every worker shares **read-only** during one epoch, plus
+/// the epoch's wall-clock origin for overlap spans. The feature store
+/// sits behind a reader-writer lock: marshal stages take concurrent
+/// read guards, and the leader's update stage (the only writer) runs in
+/// a protocol phase where no worker is marshalling.
+pub struct EpochWorld<'a> {
+    pub cfg: &'a Config,
+    pub g: &'a HetGraph,
+    pub tree: &'a MetaTree,
+    pub store: &'a RwLock<FeatureStore>,
+    /// `Some` iff `train.shared_session` — the serialized escape hatch.
+    pub gate: Option<&'a ExecGate>,
+    /// Wall-clock origin; forward-execution spans are recorded relative
+    /// to it so the timeline can show per-context overlap.
+    pub epoch_t0: Instant,
+}
+
+impl<'a> EpochWorld<'a> {
+    /// Read access to the feature KV store (concurrent across workers).
+    pub fn store(&self) -> RwLockReadGuard<'a, FeatureStore> {
+        self.store.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Write access for the leader's update stage.
+    pub fn store_mut(&self) -> RwLockWriteGuard<'a, FeatureStore> {
+        self.store.write().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Acquire the serialization token if the shared-session escape
+    /// hatch is active; a no-op (`None`) under per-worker contexts.
+    pub fn serialize(&self) -> Option<MutexGuard<'a, ()>> {
+        self.gate.map(|g| g.acquire())
+    }
+
+    /// Seconds since the epoch's wall-clock origin.
+    pub fn now(&self) -> f64 {
+        self.epoch_t0.elapsed().as_secs_f64()
+    }
+}
+
+/// How a marshal stage reads parameters: the sequential runtime and the
+/// leader read the store they own; cluster workers read the batch's
+/// broadcast snapshot. Both views yield byte-identical tensors — the
+/// snapshot is a copy-on-write capture of the same store.
+#[derive(Clone, Copy)]
+pub enum ParamsView<'a> {
+    Owner(&'a ParamStore),
+    Snapshot(&'a ParamSnapshot),
+}
+
+impl<'a> ParamsView<'a> {
+    pub fn get(&self, name: &str) -> Result<&'a [f32]> {
+        match self {
+            ParamsView::Owner(store) => {
+                store
+                    .params
+                    .get(name)
+                    .map(|v| v.as_slice())
+                    .with_context(|| format!("parameter '{name}' not initialized (ensure_artifacts)"))
+            }
+            ParamsView::Snapshot(snap) => snap.get(name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_context_is_send() {
+        // The whole point of per-worker contexts: moving one to a worker
+        // thread requires no lock. Compile-time assertion.
+        fn assert_send<T: Send>() {}
+        assert_send::<ExecContext>();
+        assert_send::<BatchArena>();
+    }
+
+    #[test]
+    fn gate_serializes_and_recovers_from_poison() {
+        let gate = ExecGate::new();
+        {
+            let _g = gate.acquire();
+        }
+        let _g2 = gate.acquire();
+    }
+
+    #[test]
+    fn params_view_reads_owner_and_snapshot_identically() {
+        use crate::optim::AdamParams;
+        use crate::runtime::InputSpec;
+        let mut store = ParamStore::new(5, AdamParams::default());
+        store.ensure(&InputSpec {
+            kind: "weight".into(),
+            shape: vec![2, 3],
+            name: "w".into(),
+            edge: -1,
+            layer: 0,
+            dtype: "f32".into(),
+            init: "glorot".into(),
+        });
+        let snap = store.snapshot();
+        let owner = ParamsView::Owner(&store);
+        let view = ParamsView::Snapshot(&snap);
+        assert_eq!(owner.get("w").unwrap(), view.get("w").unwrap());
+        assert!(owner.get("nope").is_err());
+        assert!(view.get("nope").is_err());
+    }
+}

@@ -1,0 +1,365 @@
+//! The marshal stage: turn a [`TreeSample`] plus an artifact's manifest
+//! input specs into the flat literal list a PJRT executable consumes.
+//! Moved here from `coordinator/common.rs` when the exec layer landed —
+//! the stage is written once and driven by every engine.
+//!
+//! The hot path is the **deduplicated-frontier gather**: when the caller
+//! supplies a batch [`Frontier`], each node type's distinct rows are
+//! fetched once per batch into a [`BatchArena`] staging buffer
+//! ([`FeatureStore::gather_unique`]), the cache model is consulted once
+//! per unique id with misses charged as one batched staging transfer
+//! ([`FeatureCache::access_unique`]), and every padded block literal is
+//! produced by an in-memory scatter. Without a frontier
+//! (`train.dedup_fetch = false`) the seed's per-slot gather and
+//! per-occurrence cache accounting are reproduced exactly, which is the
+//! A/B baseline. Gathered bytes are identical either way — only where
+//! the copies and charges happen moves — so losses are byte-identical
+//! across both settings and both runtimes.
+//!
+//! Unlike the pre-exec-layer version, marshalling is **read-only over
+//! shared state**: weights come from a [`ParamsView`] (leader store or
+//! broadcast snapshot — both initialized up front via
+//! [`ParamStore::ensure_artifacts`](crate::runtime::ParamStore::ensure_artifacts)),
+//! and the feature store is borrowed behind a read guard. All mutation
+//! lands in the caller-owned [`BatchArena`] and cache ledgers.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::FeatureCache;
+use crate::comm::CostModel;
+use crate::hetgraph::{HetGraph, MetaTree, NodeId};
+use crate::kvstore::{scatter_rows, FeatureStore};
+use crate::runtime::{lit_f32, lit_i32, ArtifactSpec};
+use crate::sampling::{Frontier, TreeSample, PAD};
+
+use super::context::ParamsView;
+
+/// Extra per-batch inputs supplied by the engine (leader partial sums,
+/// backward gradients), keyed by (kind, layer).
+pub type ExtraInputs = HashMap<(String, usize), Vec<f32>>;
+
+/// Child vertex and source type of a metatree edge.
+pub fn edge_child(g: &HetGraph, tree: &MetaTree, edge: usize) -> (usize, usize) {
+    let e = &tree.edges[edge];
+    (e.child, g.schema.relations[e.rel].src)
+}
+
+/// Aggregate fetch accounting of one input build.
+///
+/// With a dedup frontier, `stats` counts **unique** rows only (each
+/// distinct id fetched once per batch); without one it counts padded
+/// slots, matching the seed accounting.
+#[derive(Debug, Clone, Default)]
+pub struct GatherAccounting {
+    pub stats: crate::kvstore::FetchStats,
+    /// Modeled cache/miss time (Fetch stage), all node types.
+    pub cache_time_s: f64,
+    /// The read-only share of `cache_time_s`. Read-only rows are
+    /// immutable during training, so the cluster pipeline may prefetch
+    /// them for batch `i+1` while batch `i` executes; learnable rows
+    /// (the remainder) must wait for batch `i`'s update.
+    pub cache_time_ro_s: f64,
+}
+
+/// Reusable per-worker marshalling scratch, recycled across batches so
+/// the input-build hot loop performs no steady-state allocation. Owned
+/// by a worker's [`ExecContext`](super::ExecContext).
+///
+/// `staging[ty]` holds the batch frontier's distinct rows of type `ty`,
+/// gathered once per batch on first use and then scattered into every
+/// padded block literal that references the type — including the
+/// backward pass's rebuild of the same batch (feature rows cannot change
+/// between a batch's forward and backward, so restaging would be pure
+/// waste). `block` / `mask` / `labels` are literal scratch: literals
+/// copy out of them, so one buffer serves every input of every batch.
+#[derive(Debug, Default)]
+pub struct BatchArena {
+    staging: Vec<Vec<f32>>,
+    staged: Vec<bool>,
+    block: Vec<f32>,
+    mask: Vec<f32>,
+    labels: Vec<i32>,
+}
+
+impl BatchArena {
+    pub fn new() -> BatchArena {
+        BatchArena::default()
+    }
+
+    /// Invalidate the per-batch staging (learnable rows may have been
+    /// updated since the previous batch); buffer capacity survives.
+    /// Call once per (worker, batch) before the batch's first
+    /// `build_inputs`; later builds of the *same* batch (the backward
+    /// pass) then reuse the staged rows.
+    pub fn begin_batch(&mut self, num_types: usize) {
+        self.staged.clear();
+        self.staged.resize(num_types, false);
+        if self.staging.len() < num_types {
+            self.staging.resize_with(num_types, Vec::new);
+        }
+    }
+
+    /// Grow-and-slice helper for the literal scratch buffers.
+    fn block_slice(&mut self, n: usize) -> &mut [f32] {
+        if self.block.len() < n {
+            self.block.resize(n, 0.0);
+        }
+        &mut self.block[..n]
+    }
+}
+
+/// The read-only world one marshal call runs against: cost model, graph
+/// topology, the feature store (borrowed behind the caller's read
+/// guard), and the parameter view. Mutable state (cache ledgers, arena)
+/// is passed separately — it is per-worker-owned.
+pub struct MarshalEnv<'a> {
+    pub cost: &'a CostModel,
+    pub g: &'a HetGraph,
+    pub tree: &'a MetaTree,
+    pub store: &'a FeatureStore,
+    pub params: ParamsView<'a>,
+}
+
+/// Fetch `ty`'s distinct frontier rows into the arena staging buffer —
+/// once per batch — merging unique-row fetch stats and the batched
+/// cache accounting on first staging only.
+#[allow(clippy::too_many_arguments)]
+fn stage_type(
+    store: &FeatureStore,
+    cost: &CostModel,
+    fr: &Frontier,
+    ty: usize,
+    is_remote: &dyn Fn(usize, NodeId) -> bool,
+    cache: &mut Option<&mut FeatureCache>,
+    gpu: usize,
+    arena: &mut BatchArena,
+    acc: &mut GatherAccounting,
+) -> Result<()> {
+    // `begin_batch` owns the per-batch invalidation; a missing call must
+    // fail fast (index panic / this assert), never silently scatter the
+    // previous batch's staged rows.
+    debug_assert!(
+        arena.staged.len() > ty && arena.staging.len() > ty,
+        "stage_type before BatchArena::begin_batch"
+    );
+    if arena.staged[ty] {
+        return Ok(());
+    }
+    let uniq = fr.rows(ty);
+    let dim = store.dim(ty);
+    let buf = &mut arena.staging[ty];
+    buf.resize(uniq.len() * dim, 0.0);
+    let stats = store.gather_unique(ty, uniq, buf, |id| is_remote(ty, id))?;
+    acc.stats.merge(stats);
+    if let Some(c) = cache.as_deref_mut() {
+        let t = c.access_unique(cost, ty, uniq, gpu);
+        acc.cache_time_s += t;
+        if !store.is_learnable(ty) {
+            acc.cache_time_ro_s += t;
+        }
+    }
+    arena.staged[ty] = true;
+    Ok(())
+}
+
+/// Build the literal list for an artifact from its manifest spec.
+///
+/// `sample` provides block/mask ids, `extra` provides engine-computed
+/// tensors (partial sums / gradients), `is_remote` classifies feature
+/// rows for locality accounting, and `cache` (if present) accumulates
+/// modeled miss time. With `frontier` present (the dedup hot path),
+/// feature rows are staged once per distinct id through `arena` and
+/// scattered into the padded literals; with `frontier = None` the
+/// seed's per-slot gather and per-occurrence cache accounting run
+/// instead (byte-identical literals either way).
+#[allow(clippy::too_many_arguments)]
+pub fn build_inputs(
+    env: &MarshalEnv<'_>,
+    spec: &ArtifactSpec,
+    sample: Option<&TreeSample>,
+    frontier: Option<&Frontier>,
+    batch: &[NodeId],
+    extra: &ExtraInputs,
+    is_remote: &dyn Fn(usize, NodeId) -> bool,
+    cache: Option<&mut FeatureCache>,
+    gpu: usize,
+    arena: &mut BatchArena,
+) -> Result<(Vec<xla::Literal>, GatherAccounting)> {
+    let mut acc = GatherAccounting::default();
+    let mut lits = Vec::with_capacity(spec.inputs.len());
+    let cost = env.cost;
+    let mut cache = cache;
+    for inp in &spec.inputs {
+        match inp.kind.as_str() {
+            "block" => {
+                let sample = sample.ok_or_else(|| anyhow!("block input without sample"))?;
+                let (child, src_ty) = edge_child(env.g, env.tree, inp.edge as usize);
+                let ids = &sample.ids[child];
+                let dim = env.store.dim(src_ty);
+                let need = ids.len() * dim;
+                if let Some(fr) = frontier {
+                    // Dedup path: stage distinct rows once, then scatter
+                    // slots from staging (every slot written: copies for
+                    // valid rows, zero-fill for pads).
+                    stage_type(
+                        env.store,
+                        cost,
+                        fr,
+                        src_ty,
+                        is_remote,
+                        &mut cache,
+                        gpu,
+                        arena,
+                        &mut acc,
+                    )?;
+                    if arena.block.len() < need {
+                        arena.block.resize(need, 0.0);
+                    }
+                    scatter_rows(
+                        &arena.staging[src_ty],
+                        &fr.slot_to_unique[child],
+                        dim,
+                        &mut arena.block[..need],
+                    );
+                    lits.push(lit_f32(&arena.block[..need], &inp.shape)?);
+                } else {
+                    // Seed path: every padded slot gathered independently,
+                    // cache consulted per occurrence.
+                    let buf = arena.block_slice(need);
+                    let stats = env
+                        .store
+                        .gather(src_ty, ids, buf, |id| is_remote(src_ty, id))?;
+                    acc.stats.merge(stats);
+                    if let Some(c) = cache.as_deref_mut() {
+                        let learnable = env.store.is_learnable(src_ty);
+                        for &id in ids.iter().filter(|&&id| id != PAD) {
+                            let t = c.access(cost, src_ty, id, gpu, false);
+                            acc.cache_time_s += t;
+                            if !learnable {
+                                acc.cache_time_ro_s += t;
+                            }
+                        }
+                    }
+                    lits.push(lit_f32(&arena.block[..need], &inp.shape)?);
+                }
+            }
+            "mask" => {
+                let sample = sample.ok_or_else(|| anyhow!("mask input without sample"))?;
+                let (child, _) = edge_child(env.g, env.tree, inp.edge as usize);
+                let ids = &sample.ids[child];
+                if arena.mask.len() < ids.len() {
+                    arena.mask.resize(ids.len(), 0.0);
+                }
+                let mask = &mut arena.mask[..ids.len()];
+                for (m, &id) in mask.iter_mut().zip(ids) {
+                    *m = if id == PAD { 0.0 } else { 1.0 };
+                }
+                lits.push(lit_f32(mask, &inp.shape)?);
+            }
+            "weight" => {
+                lits.push(lit_f32(env.params.get(&inp.name)?, &inp.shape)?);
+            }
+            "target_feat" => {
+                let ty = env.g.schema.target;
+                let dim = env.store.dim(ty);
+                let need = batch.len() * dim;
+                if let Some(fr) = frontier {
+                    stage_type(
+                        env.store,
+                        cost,
+                        fr,
+                        ty,
+                        is_remote,
+                        &mut cache,
+                        gpu,
+                        arena,
+                        &mut acc,
+                    )?;
+                    if arena.block.len() < need {
+                        arena.block.resize(need, 0.0);
+                    }
+                    let block = &mut arena.block[..need];
+                    let staging = &arena.staging[ty];
+                    for (i, &id) in batch.iter().enumerate() {
+                        let dst = &mut block[i * dim..(i + 1) * dim];
+                        match fr.unique_index(ty, id) {
+                            Some(u) => dst.copy_from_slice(&staging[u * dim..(u + 1) * dim]),
+                            None => {
+                                // Defensive: callers whose spec gathers
+                                // target features build the frontier with
+                                // `include_root`, which covers the batch;
+                                // an out-of-frontier id falls back to a
+                                // per-row gather with its own accounting.
+                                let stats = env.store.gather(
+                                    ty,
+                                    std::slice::from_ref(&id),
+                                    dst,
+                                    |id| is_remote(ty, id),
+                                )?;
+                                acc.stats.merge(stats);
+                                if let Some(c) = cache.as_deref_mut() {
+                                    let t = c.access(cost, ty, id, gpu, false);
+                                    acc.cache_time_s += t;
+                                    if !env.store.is_learnable(ty) {
+                                        acc.cache_time_ro_s += t;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    lits.push(lit_f32(&arena.block[..need], &inp.shape)?);
+                } else {
+                    let buf = arena.block_slice(need);
+                    let stats = env.store.gather(ty, batch, buf, |id| is_remote(ty, id))?;
+                    acc.stats.merge(stats);
+                    if let Some(c) = cache.as_deref_mut() {
+                        let learnable = env.store.is_learnable(ty);
+                        for &id in batch {
+                            let t = c.access(cost, ty, id, gpu, false);
+                            acc.cache_time_s += t;
+                            if !learnable {
+                                acc.cache_time_ro_s += t;
+                            }
+                        }
+                    }
+                    lits.push(lit_f32(&arena.block[..need], &inp.shape)?);
+                }
+            }
+            "labels" => {
+                arena.labels.clear();
+                arena
+                    .labels
+                    .extend(batch.iter().map(|&b| env.g.labels[b as usize] as i32));
+                lits.push(lit_i32(&arena.labels, &inp.shape)?);
+            }
+            "partial_sum" | "grad" => {
+                let key = (inp.kind.clone(), inp.layer);
+                let data = extra
+                    .get(&key)
+                    .ok_or_else(|| anyhow!("missing extra input {key:?}"))?;
+                lits.push(lit_f32(data, &inp.shape)?);
+            }
+            other => anyhow::bail!("unknown input kind '{other}'"),
+        }
+    }
+    Ok((lits, acc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_begin_batch_invalidates_staging_keeps_capacity() {
+        let mut a = BatchArena::new();
+        a.begin_batch(3);
+        a.staging[1].resize(128, 1.0);
+        a.staged[1] = true;
+        let cap = a.staging[1].capacity();
+        a.begin_batch(3);
+        assert!(a.staged.iter().all(|&s| !s), "staging must be invalidated");
+        assert!(a.staging[1].capacity() >= cap, "buffers must be recycled");
+    }
+}

@@ -1,0 +1,46 @@
+//! The execution layer (PR 3): per-worker execution contexts and the
+//! unified per-batch stage pipeline shared by all four engine drivers.
+//!
+//! Before this layer existed, the per-batch marshal → forward →
+//! partial-agg exchange → backward → update bodies were copy-pasted
+//! four ways across `coordinator/{raf,vanilla}.rs` and
+//! `cluster/{raf,vanilla}.rs`, and every artifact execution serialized
+//! on one `Mutex`-guarded monolithic `Session`. The split:
+//!
+//! * [`ExecContext`] — what one worker *owns*: its own PJRT client and
+//!   lazily compiled executables ([`crate::runtime::Runtime`]), its
+//!   feature cache, and its marshalling scratch ([`BatchArena`]). Each
+//!   cluster worker thread holds an exclusive `&mut ExecContext`, so
+//!   forward/backward of different partitions genuinely run
+//!   concurrently — there is no shared session and no lock around
+//!   artifact execution.
+//! * [`ParamSnapshot`](crate::runtime::ParamSnapshot) /
+//!   [`ParamsView`] — parameters are leader-owned and distributed per
+//!   batch as a versioned read-only snapshot broadcast through the
+//!   collectives (copy-on-write, so a published snapshot can never be
+//!   mutated under a marshalling worker). The sequential runtime reads
+//!   the store directly through [`ParamsView::Owner`]; byte-identical
+//!   either way.
+//! * [`EpochWorld`] — the state workers share read-only during an
+//!   epoch: config, graph, metatree, and the feature KV store behind a
+//!   reader-writer lock (many concurrent marshal-stage readers; the
+//!   leader's update stage is the only writer, and the two phases never
+//!   overlap in the batch protocol).
+//! * [`BatchPlan`] — the per-batch stage pipeline, expressed **once**:
+//!   resolved artifact specs per worker plus the stage functions
+//!   (`raf_forward`, `raf_leader_step`, `raf_backward`,
+//!   `raf_apply_updates`, `vanilla_step`, `vanilla_apply_updates`).
+//!   The four engine drivers are thin schedulers over these stages.
+//! * [`ExecGate`] — the `train.shared_session = true` escape hatch: an
+//!   explicit serialization token that reproduces the pre-PR-3
+//!   one-execution-at-a-time behavior for A/B timing. Losses are
+//!   byte-identical across both settings and both runtimes regardless
+//!   (reductions fold in worker-id order).
+
+pub mod context;
+pub mod marshal;
+pub mod plan;
+
+pub use context::{EpochWorld, ExecContext, ExecGate, ParamsView};
+pub use marshal::{build_inputs, BatchArena, ExtraInputs, GatherAccounting, MarshalEnv};
+pub use plan::{BatchPlan, GradAccumulator, WorkerGrads, WorkerPlan};

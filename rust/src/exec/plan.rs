@@ -1,0 +1,939 @@
+//! The per-batch stage pipeline, expressed once.
+//!
+//! A [`BatchPlan`] resolves, at engine-build time, which artifact each
+//! worker role executes per stage (RAF: `worker_fwd_p*` → `leader` →
+//! `worker_bwd_p*`; vanilla: the fused `vanilla` step) and carries the
+//! stage functions every runtime drives:
+//!
+//! ```text
+//! marshal → forward → partial-agg exchange → backward → update
+//! ```
+//!
+//! The four engine drivers — `coordinator/{raf,vanilla}.rs` (sequential
+//! scheduling) and `cluster/{raf,vanilla}.rs` (thread-per-partition
+//! scheduling) — differ only in *when* and *on which thread* each stage
+//! runs and how its results move (direct calls vs. collectives). The
+//! stage bodies themselves live here and are written once, so an
+//! execution-model change (e.g. backward-of-`i` / forward-of-`i+1`
+//! overlap) is implemented in one place.
+//!
+//! Determinism contract: stage functions never reduce across workers —
+//! they return per-worker results, and [`GradAccumulator`] folds them
+//! in (worker, output) order, exactly the order the sequential engine
+//! uses, so losses and parameter trajectories are byte-identical across
+//! runtimes, `shared_session` settings, and thread interleavings.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cache::FeatureCache;
+use crate::comm::{CostModel, Lane, SimNet};
+use crate::hetgraph::NodeId;
+use crate::kvstore::{FeatureStore, FetchStats};
+use crate::metrics::timeline::WorkerSpan;
+use crate::metrics::{Stage, StageTimes};
+use crate::optim::AdamParams;
+use crate::partition::NodePartition;
+use crate::runtime::{lit_scalar, lit_to_vec, ArtifactSpec, Manifest, ParamStore};
+use crate::sampling::{Frontier, TreeSample, PAD};
+use crate::util::{add_assign, scale};
+
+use super::context::{EpochWorld, ExecContext, ParamsView};
+use super::marshal::{build_inputs, edge_child, ExtraInputs, MarshalEnv};
+
+/// One worker role's resolved artifacts within a [`BatchPlan`].
+pub struct WorkerPlan {
+    /// Forward artifact (`worker_fwd_p{p}`) or the fused train step
+    /// (`vanilla`).
+    pub fwd_art: String,
+    pub spec_fwd: ArtifactSpec,
+    /// Backward artifact (`worker_bwd_p{p}`); `None` when the forward
+    /// artifact is a fused fwd+bwd step.
+    pub bwd_art: Option<String>,
+    pub spec_bwd: Option<ArtifactSpec>,
+    /// Whether the forward artifact gathers target features — only then
+    /// do root rows join this worker's dedup frontier.
+    pub needs_root: bool,
+}
+
+/// The engine's per-batch stage pipeline: one [`WorkerPlan`] per
+/// partition plus the RAF cross-relation leader artifact (absent for
+/// the vanilla engine, whose exchange stage is the dense all-reduce).
+pub struct BatchPlan {
+    pub workers: Vec<WorkerPlan>,
+    pub leader_art: String,
+    pub leader_spec: Option<ArtifactSpec>,
+}
+
+impl BatchPlan {
+    /// Resolve the RAF pipeline: per-partition forward/backward worker
+    /// artifacts plus the `leader` cross-relation step.
+    pub fn raf(manifest: &Manifest, parts: usize) -> Result<BatchPlan> {
+        let mut workers = Vec::with_capacity(parts);
+        for p in 0..parts {
+            let fwd_art = format!("worker_fwd_p{p}");
+            let bwd_art = format!("worker_bwd_p{p}");
+            let spec_fwd = manifest.spec(&fwd_art)?.clone();
+            let spec_bwd = manifest.spec(&bwd_art)?.clone();
+            let needs_root = spec_fwd.inputs.iter().any(|i| i.kind == "target_feat");
+            workers.push(WorkerPlan {
+                fwd_art,
+                spec_fwd,
+                bwd_art: Some(bwd_art),
+                spec_bwd: Some(spec_bwd),
+                needs_root,
+            });
+        }
+        Ok(BatchPlan {
+            workers,
+            leader_art: "leader".to_string(),
+            leader_spec: Some(manifest.spec("leader")?.clone()),
+        })
+    }
+
+    /// Resolve the vanilla pipeline: every worker drives the same fused
+    /// `vanilla` train-step artifact; there is no leader artifact.
+    pub fn vanilla(manifest: &Manifest, parts: usize) -> Result<BatchPlan> {
+        let spec = manifest.spec("vanilla")?.clone();
+        let needs_root = spec.inputs.iter().any(|i| i.kind == "target_feat");
+        let workers = (0..parts)
+            .map(|_| WorkerPlan {
+                fwd_art: "vanilla".to_string(),
+                spec_fwd: spec.clone(),
+                bwd_art: None,
+                spec_bwd: None,
+                needs_root,
+            })
+            .collect();
+        Ok(BatchPlan {
+            workers,
+            leader_art: String::new(),
+            leader_spec: None,
+        })
+    }
+}
+
+/// Where a `target_feat_grad` output goes during gradient collection.
+pub enum TargetGrads<'a> {
+    /// RAF: accumulate into the partial root gradient shipped upward.
+    Accumulate,
+    /// Vanilla with a learnable target type: sparse rows of the
+    /// microbatch.
+    Rows(&'a [NodeId]),
+    /// Vanilla with read-only target features: nothing to update.
+    Discard,
+}
+
+/// One worker's unreduced gradient outputs. Shipped (or handed) to the
+/// accumulator **unmerged** so the fold happens in (worker, output)
+/// order regardless of runtime.
+#[derive(Debug, Default)]
+pub struct WorkerGrads {
+    /// One entry per `wgrad` output.
+    pub wgrads: Vec<(String, Vec<f32>)>,
+    /// `(src_ty, sampled ids, grads)` per `block_grad` output (plus the
+    /// learnable-target rows under [`TargetGrads::Rows`]).
+    pub row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)>,
+    /// One entry per `target_feat_grad` output under
+    /// [`TargetGrads::Accumulate`].
+    pub gx: Vec<Vec<f32>>,
+    /// `(ty, valid rows, remote rows)` per learnable type, sorted by
+    /// type — filled only when the caller supplies a remote classifier
+    /// (the vanilla update-cost model).
+    pub learnable_rows: Vec<(usize, u64, u64)>,
+}
+
+/// Classify one artifact execution's outputs into [`WorkerGrads`] —
+/// the collection loop previously copy-pasted across all four engines.
+pub fn collect_worker_grads(
+    env_g: &crate::hetgraph::HetGraph,
+    tree: &crate::hetgraph::MetaTree,
+    spec: &ArtifactSpec,
+    outs: &[xla::Literal],
+    sample: &TreeSample,
+    target: TargetGrads<'_>,
+    count_remote: Option<&dyn Fn(usize, NodeId) -> bool>,
+) -> Result<WorkerGrads> {
+    let mut wg = WorkerGrads::default();
+    let mut counts: HashMap<usize, (u64, u64)> = HashMap::new();
+    for (o, out) in spec.outputs.iter().zip(outs) {
+        match o.kind.as_str() {
+            "wgrad" => wg.wgrads.push((o.name.clone(), lit_to_vec(out)?)),
+            "block_grad" => {
+                let (child, src_ty) = edge_child(env_g, tree, o.edge as usize);
+                if let Some(is_remote) = count_remote {
+                    let c = counts.entry(src_ty).or_insert((0, 0));
+                    for &id in sample.ids[child].iter().filter(|&&id| id != PAD) {
+                        c.0 += 1;
+                        if is_remote(src_ty, id) {
+                            c.1 += 1;
+                        }
+                    }
+                }
+                wg.row_grads
+                    .push((src_ty, sample.ids[child].clone(), lit_to_vec(out)?));
+            }
+            "target_feat_grad" => match target {
+                TargetGrads::Accumulate => wg.gx.push(lit_to_vec(out)?),
+                TargetGrads::Rows(micro) => {
+                    if count_remote.is_some() {
+                        counts.entry(env_g.schema.target).or_insert((0, 0)).0 +=
+                            micro.len() as u64;
+                    }
+                    wg.row_grads
+                        .push((env_g.schema.target, micro.to_vec(), lit_to_vec(out)?));
+                }
+                TargetGrads::Discard => {}
+            },
+            _ => {}
+        }
+    }
+    let mut lr: Vec<(usize, u64, u64)> =
+        counts.into_iter().map(|(ty, (r, rem))| (ty, r, rem)).collect();
+    lr.sort_unstable_by_key(|e| e.0);
+    wg.learnable_rows = lr;
+    Ok(wg)
+}
+
+/// Worker-order gradient accumulator: the reduction half of the
+/// exchange stage, shared by every driver. Absorbing in worker-id order
+/// is what keeps float accumulation byte-identical across runtimes.
+#[derive(Debug, Default)]
+pub struct GradAccumulator {
+    pub wgrads: HashMap<String, Vec<f32>>,
+    pub row_grads: HashMap<usize, (Vec<NodeId>, Vec<f32>)>,
+    /// Accumulated `target_feat_grad` (RAF).
+    pub gx: Vec<f32>,
+    /// type → (valid rows, remote rows), merged across workers
+    /// (vanilla update-cost model).
+    pub learnable_counts: HashMap<usize, (u64, u64)>,
+}
+
+impl GradAccumulator {
+    pub fn absorb(&mut self, wg: WorkerGrads) {
+        for (name, gvec) in wg.wgrads {
+            match self.wgrads.get_mut(&name) {
+                Some(acc) => add_assign(acc, &gvec),
+                None => {
+                    self.wgrads.insert(name, gvec);
+                }
+            }
+        }
+        for (ty, ids, gvec) in wg.row_grads {
+            let entry = self
+                .row_grads
+                .entry(ty)
+                .or_insert_with(|| (Vec::new(), Vec::new()));
+            entry.0.extend_from_slice(&ids);
+            entry.1.extend_from_slice(&gvec);
+        }
+        for gvec in wg.gx {
+            if self.gx.is_empty() {
+                self.gx = gvec;
+            } else {
+                add_assign(&mut self.gx, &gvec);
+            }
+        }
+        for (ty, rows, remote) in wg.learnable_rows {
+            let c = self.learnable_counts.entry(ty).or_insert((0, 0));
+            c.0 += rows;
+            c.1 += remote;
+        }
+    }
+}
+
+/// Result of one RAF worker forward stage (marshal + execute).
+pub struct RafForward {
+    pub p1: Vec<f32>,
+    pub p2: Vec<f32>,
+    pub stats: FetchStats,
+    pub span: WorkerSpan,
+    pub stages: StageTimes,
+    /// Wall-clock marshal+forward-execution interval relative to the
+    /// epoch origin — the overlap evidence per-worker contexts exist
+    /// for (and exactly the region the shared-session token covers).
+    pub wall_fwd: (f64, f64),
+}
+
+/// Result of the RAF leader stage.
+pub struct RafLeaderOut {
+    pub loss: f64,
+    pub acc: f64,
+    pub g1: Vec<f32>,
+    pub g2: Vec<f32>,
+    pub gx_root: Vec<f32>,
+    pub stats: FetchStats,
+    /// Marshal + cross-relation-agg + head + loss + backward (scaled).
+    pub leader_s: f64,
+    /// The leader's own head-weight updates.
+    pub head_update_s: f64,
+}
+
+/// Result of one RAF worker backward stage.
+pub struct RafBackward {
+    pub grads: WorkerGrads,
+    pub bwd_s: f64,
+    pub stages: StageTimes,
+}
+
+/// Result of the RAF update stage.
+pub struct RafUpdateOut {
+    pub update_s: f64,
+    pub lf_s: f64,
+    pub sync_bytes: u64,
+}
+
+/// Result of one vanilla fused-step stage.
+pub struct VanillaStep {
+    pub loss: f64,
+    pub acc: f64,
+    pub grads: WorkerGrads,
+    pub stats: FetchStats,
+    pub fetch_s: f64,
+    pub span: WorkerSpan,
+    pub stages: StageTimes,
+    pub wall_fwd: (f64, f64),
+}
+
+/// Result of the vanilla update stage.
+pub struct VanillaUpdateOut {
+    pub allreduce_s: f64,
+    pub update_s: f64,
+    pub lf_s: f64,
+}
+
+impl WorkerPlan {
+    /// RAF stages 1–2 for one worker: marshal the sampled mono-relation
+    /// blocks (dedup-staged through the context's arena) and execute
+    /// the worker-forward artifact, producing the layer partials.
+    /// Meta-partitioning makes every fetch local, hence no remote
+    /// classifier.
+    pub fn raf_forward(
+        &self,
+        ctx: &mut ExecContext,
+        world: &EpochWorld<'_>,
+        params: ParamsView<'_>,
+        sample: &TreeSample,
+        frontier: Option<&Frontier>,
+        chunk: &[NodeId],
+        sample_s: f64,
+    ) -> Result<RafForward> {
+        let cfg = world.cfg;
+        let scale = cfg.cost.compute_scale;
+        let gpus = cfg.train.gpus_per_machine.max(1) as f64;
+        ctx.arena.begin_batch(world.g.schema.node_types.len());
+        let _token = world.serialize();
+        // Wall span covers marshal + execute: exactly the region the
+        // shared-session token serializes, so per-context overlap (and
+        // its absence under the escape hatch) is directly observable.
+        let w0 = world.now();
+        let extra = ExtraInputs::new();
+        let t1 = Instant::now();
+        let (lits, acc) = {
+            let store = world.store();
+            let env = MarshalEnv {
+                cost: &cfg.cost,
+                g: world.g,
+                tree: world.tree,
+                store: &store,
+                params,
+            };
+            build_inputs(
+                &env,
+                &self.spec_fwd,
+                Some(sample),
+                frontier,
+                chunk,
+                &extra,
+                &|_, _| false,
+                ctx.cache.as_mut(),
+                ctx.gpu,
+                &mut ctx.arena,
+            )?
+        };
+        let copy_s = t1.elapsed().as_secs_f64() * scale;
+        let t2 = Instant::now();
+        let outs = ctx.rt.exec(&self.fwd_art, &lits)?;
+        let fwd_s = t2.elapsed().as_secs_f64() * scale / gpus;
+        let w1 = world.now();
+        let art = &self.fwd_art;
+        let p1 = lit_to_vec(outs.first().ok_or_else(|| anyhow!("{art}: no outputs"))?)?;
+        let p2 = lit_to_vec(outs.get(1).ok_or_else(|| anyhow!("{art}: missing output 1"))?)?;
+        let span = WorkerSpan {
+            sample_s,
+            fetch_ro_s: acc.cache_time_ro_s,
+            fetch_lr_s: acc.cache_time_s - acc.cache_time_ro_s,
+            copy_s,
+            fwd_s,
+            bwd_s: 0.0,
+        };
+        let mut stages = StageTimes::default();
+        stages.add(Stage::Sample, span.sample_s);
+        stages.add(Stage::Copy, span.copy_s);
+        stages.add(Stage::Fetch, span.fetch_ro_s + span.fetch_lr_s);
+        stages.add(Stage::Forward, span.fwd_s);
+        Ok(RafForward {
+            p1,
+            p2,
+            stats: acc.stats,
+            span,
+            stages,
+            wall_fwd: (w0, w1),
+        })
+    }
+
+    /// RAF stage 4 for one worker: rebuild the batch's inputs from the
+    /// forward pass's staged rows (same batch, same frontier — features
+    /// cannot change until the update stage), execute the
+    /// worker-backward artifact and classify its gradient outputs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn raf_backward(
+        &self,
+        ctx: &mut ExecContext,
+        world: &EpochWorld<'_>,
+        params: ParamsView<'_>,
+        sample: &TreeSample,
+        frontier: Option<&Frontier>,
+        chunk: &[NodeId],
+        g1: Vec<f32>,
+        g2: Vec<f32>,
+    ) -> Result<RafBackward> {
+        let cfg = world.cfg;
+        let scale = cfg.cost.compute_scale;
+        let gpus = cfg.train.gpus_per_machine.max(1) as f64;
+        let art = self
+            .bwd_art
+            .as_ref()
+            .ok_or_else(|| anyhow!("{}: no backward artifact (fused step?)", self.fwd_art))?;
+        let spec = self.spec_bwd.as_ref().expect("bwd_art implies spec_bwd");
+        let mut extra = ExtraInputs::new();
+        extra.insert(("grad".into(), 1), g1);
+        extra.insert(("grad".into(), 2), g2);
+        let _token = world.serialize();
+        let t5 = Instant::now();
+        let (lits, _) = {
+            let store = world.store();
+            let env = MarshalEnv {
+                cost: &cfg.cost,
+                g: world.g,
+                tree: world.tree,
+                store: &store,
+                params,
+            };
+            build_inputs(
+                &env,
+                spec,
+                Some(sample),
+                frontier,
+                chunk,
+                &extra,
+                &|_, _| false,
+                None, // rows already resident from forward
+                ctx.gpu,
+                &mut ctx.arena,
+            )?
+        };
+        let outs = ctx.rt.exec(art, &lits)?;
+        let bwd_s = t5.elapsed().as_secs_f64() * scale / gpus;
+        let grads = collect_worker_grads(
+            world.g,
+            world.tree,
+            spec,
+            &outs,
+            sample,
+            TargetGrads::Accumulate,
+            None,
+        )?;
+        let mut stages = StageTimes::default();
+        stages.add(Stage::Backward, bwd_s);
+        Ok(RafBackward {
+            grads,
+            bwd_s,
+            stages,
+        })
+    }
+
+    /// The vanilla fused stage (marshal + fwd+bwd step) for one worker.
+    /// `is_remote` classifies feature rows against the edge-cut
+    /// partition; the caller owns the sampling (and its remote-RPC
+    /// pricing) because only scheduling differs between runtimes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn vanilla_step(
+        &self,
+        ctx: &mut ExecContext,
+        world: &EpochWorld<'_>,
+        params: ParamsView<'_>,
+        part: &NodePartition,
+        sample: &TreeSample,
+        frontier: Option<&Frontier>,
+        micro: &[NodeId],
+        sample_s: f64,
+    ) -> Result<VanillaStep> {
+        let cfg = world.cfg;
+        let scale = cfg.cost.compute_scale;
+        let gpus = cfg.train.gpus_per_machine.max(1) as f64;
+        let parts = part.num_parts;
+        let w = ctx.worker;
+        let is_remote = |ty: usize, id: NodeId| part.owner_of(ty, id) != w;
+        ctx.arena.begin_batch(world.g.schema.node_types.len());
+        let _token = world.serialize();
+        // Wall span covers marshal + execute (see `raf_forward`).
+        let w0 = world.now();
+        let extra = ExtraInputs::new();
+        let t1 = Instant::now();
+        let (lits, acc, target_learnable) = {
+            let store = world.store();
+            let env = MarshalEnv {
+                cost: &cfg.cost,
+                g: world.g,
+                tree: world.tree,
+                store: &store,
+                params,
+            };
+            let (lits, acc) = build_inputs(
+                &env,
+                &self.spec_fwd,
+                Some(sample),
+                frontier,
+                micro,
+                &extra,
+                &is_remote,
+                ctx.cache.as_mut(),
+                ctx.gpu,
+                &mut ctx.arena,
+            )?;
+            (lits, acc, store.is_learnable(world.g.schema.target))
+        };
+        let copy_s = t1.elapsed().as_secs_f64() * scale;
+        let fetch_s = vanilla_fetch_time(&cfg.cost, &acc, ctx.cache.is_some(), parts);
+        let t2 = Instant::now();
+        let outs = ctx.rt.exec(&self.fwd_art, &lits)?;
+        let step_s = t2.elapsed().as_secs_f64() * scale / gpus;
+        let w1 = world.now();
+        if outs.len() < 2 {
+            bail!(
+                "{} artifact returned {} outputs, expected >= 2",
+                self.fwd_art,
+                outs.len()
+            );
+        }
+        let loss = lit_scalar(&outs[0])? as f64;
+        let acc_v = lit_scalar(&outs[1])? as f64;
+        let target = if target_learnable {
+            TargetGrads::Rows(micro)
+        } else {
+            TargetGrads::Discard
+        };
+        let grads = collect_worker_grads(
+            world.g,
+            world.tree,
+            &self.spec_fwd,
+            &outs,
+            sample,
+            target,
+            Some(&is_remote),
+        )?;
+        let mut stages = StageTimes::default();
+        stages.add(Stage::Sample, sample_s);
+        stages.add(Stage::Copy, copy_s);
+        stages.add(Stage::Fetch, fetch_s);
+        stages.add(Stage::Forward, step_s * 0.45);
+        stages.add(Stage::Backward, step_s * 0.55);
+        let span = WorkerSpan {
+            sample_s,
+            // Vanilla fetch mixes remote and learnable rows, so the
+            // whole fetch stays slot-bound (conservative); sampling is
+            // the prefetchable stage here.
+            fetch_ro_s: 0.0,
+            fetch_lr_s: fetch_s,
+            copy_s,
+            fwd_s: step_s,
+            bwd_s: 0.0,
+        };
+        Ok(VanillaStep {
+            loss,
+            acc: acc_v,
+            grads,
+            stats: acc.stats,
+            fetch_s,
+            span,
+            stages,
+            wall_fwd: (w0, w1),
+        })
+    }
+}
+
+impl BatchPlan {
+    /// RAF stage 3 (leader): cross-relation aggregation + head + loss +
+    /// backward over the summed partials, then the leader's own head
+    /// weight updates. Bumps the shared sparse-Adam timestep — both
+    /// runtimes call this exactly once per batch, before any update.
+    #[allow(clippy::too_many_arguments)]
+    pub fn raf_leader_step(
+        &self,
+        ctx: &mut ExecContext,
+        world: &EpochWorld<'_>,
+        params: &mut ParamStore,
+        adam_t: &mut i32,
+        cache: Option<&mut FeatureCache>,
+        partial_sums: &[Vec<f32>; 2],
+        chunk: &[NodeId],
+    ) -> Result<RafLeaderOut> {
+        let cfg = world.cfg;
+        let spec = self
+            .leader_spec
+            .as_ref()
+            .ok_or_else(|| anyhow!("batch plan has no leader artifact"))?;
+        *adam_t += 1;
+        let mut extra = ExtraInputs::new();
+        extra.insert(("partial_sum".into(), 1), partial_sums[0].clone());
+        extra.insert(("partial_sum".into(), 2), partial_sums[1].clone());
+        let _token = world.serialize();
+        let t3 = Instant::now();
+        let (lits, leader_acc) = {
+            let store = world.store();
+            let env = MarshalEnv {
+                cost: &cfg.cost,
+                g: world.g,
+                tree: world.tree,
+                store: &store,
+                params: ParamsView::Owner(params),
+            };
+            build_inputs(
+                &env,
+                spec,
+                None,
+                None, // no sample → no frontier; batch ids are unique anyway
+                chunk,
+                &extra,
+                &|_, _| false,
+                cache,
+                0,
+                &mut ctx.arena,
+            )?
+        };
+        let outs = ctx.rt.exec(&self.leader_art, &lits)?;
+        let leader_s = t3.elapsed().as_secs_f64() * cfg.cost.compute_scale;
+        if outs.len() < 5 {
+            bail!("leader artifact returned {} outputs, expected >= 5", outs.len());
+        }
+        let loss = lit_scalar(&outs[0])? as f64;
+        let acc = lit_scalar(&outs[1])? as f64;
+        let g1 = lit_to_vec(&outs[2])?;
+        let g2 = lit_to_vec(&outs[3])?;
+        let gx_root = lit_to_vec(&outs[4])?;
+        // Leader's own (head) weight updates.
+        let t4 = Instant::now();
+        for (o, out) in spec.outputs.iter().zip(&outs) {
+            if o.kind == "wgrad" {
+                let grad = lit_to_vec(out)?;
+                params.step(&o.name, &grad)?;
+            }
+        }
+        let head_update_s = t4.elapsed().as_secs_f64();
+        Ok(RafLeaderOut {
+            loss,
+            acc,
+            g1,
+            g2,
+            gx_root,
+            stats: leader_acc.stats,
+            leader_s,
+            head_update_s,
+        })
+    }
+}
+
+/// RAF stage 5: model-parallel weight updates (replicas push grads to
+/// the owner — priced as `sync_bytes`), then the sparse learnable-
+/// feature updates with write-back through the owning partition's
+/// cache. The caller passes the leader-partition and partition-0 cache
+/// handles (direct in the sequential runtime, fork-ledger views in the
+/// cluster runtime — residency is shared, so times are identical).
+#[allow(clippy::too_many_arguments)]
+pub fn raf_apply_updates(
+    world: &EpochWorld<'_>,
+    params: &mut ParamStore,
+    adam_t: i32,
+    replica_count: &HashMap<String, usize>,
+    acc: &GradAccumulator,
+    gx_root: &mut Vec<f32>,
+    chunk: &[NodeId],
+    cache_leader: Option<&mut FeatureCache>,
+    cache_p0: Option<&mut FeatureCache>,
+) -> Result<RafUpdateOut> {
+    let cfg = world.cfg;
+    let t6 = Instant::now();
+    let mut sync_bytes = 0u64;
+    for (name, grad) in &acc.wgrads {
+        // Replicated relations: replicas push grads to the owner.
+        let replicas = replica_count.get(name).copied().unwrap_or(1);
+        if replicas > 1 {
+            sync_bytes += (grad.len() * 4 * (replicas - 1)) as u64;
+        }
+        params.step(name, grad)?;
+    }
+    let update_s = t6.elapsed().as_secs_f64();
+
+    // Learnable-feature updates (sparse Adam, local rows).
+    let t7 = Instant::now();
+    let mut cache_write_s = 0.0;
+    if !acc.gx.is_empty() {
+        add_assign(gx_root, &acc.gx);
+    }
+    let lr = cfg.train.lr as f32;
+    let tgt = world.g.schema.target;
+    let mut store = world.store_mut();
+    if store.is_learnable(tgt) {
+        apply_learnable_grads(&mut store, lr, adam_t, tgt, chunk, gx_root, 1.0);
+        if let Some(c) = cache_leader {
+            for &id in chunk {
+                cache_write_s += c.access(&cfg.cost, tgt, id, 0, true);
+            }
+        }
+    }
+    let mut cache_p0 = cache_p0;
+    for (ty, (ids, grads)) in &acc.row_grads {
+        apply_learnable_grads(&mut store, lr, adam_t, *ty, ids, grads, 1.0);
+        // Write-back path through the owning partition's cache.
+        if let Some(c) = cache_p0.as_deref_mut() {
+            for &id in ids.iter().filter(|&&id| id != PAD) {
+                cache_write_s += c.access(&cfg.cost, *ty, id, 0, true);
+            }
+        }
+    }
+    let lf_s = t7.elapsed().as_secs_f64() + cache_write_s;
+    Ok(RafUpdateOut {
+        update_s,
+        lf_s,
+        sync_bytes,
+    })
+}
+
+/// Vanilla stage 3+5: price the ring all-reduce of the dense gradients,
+/// apply the mean gradient to every replica, then the sparse
+/// learnable-feature updates (remote rows pay a network round trip).
+/// Bumps the shared sparse-Adam timestep.
+pub fn vanilla_apply_updates(
+    world: &EpochWorld<'_>,
+    params: &mut ParamStore,
+    adam_t: &mut i32,
+    mut acc: GradAccumulator,
+    net: &mut SimNet,
+    parts: usize,
+) -> Result<VanillaUpdateOut> {
+    *adam_t += 1;
+    let grad_bytes = (params.total_elems() * 4) as u64;
+    let allreduce_s = net.allreduce(grad_bytes);
+
+    // Model update: every replica applies the mean grad.
+    let t3 = Instant::now();
+    let inv = 1.0 / parts as f32;
+    for (name, mut grad) in acc.wgrads.drain() {
+        scale(&mut grad, inv);
+        params.step(&name, &grad)?;
+    }
+    let update_s = t3.elapsed().as_secs_f64();
+
+    // Learnable-feature updates: remote rows pay the network.
+    let t4 = Instant::now();
+    let lr = world.cfg.train.lr as f32;
+    let mut store = world.store_mut();
+    for (ty, (ids, grads)) in &acc.row_grads {
+        apply_learnable_grads(&mut store, lr, *adam_t, *ty, ids, grads, inv);
+    }
+    let mut lf_s = t4.elapsed().as_secs_f64();
+    let lrows = learnable_rows_sorted(std::mem::take(&mut acc.learnable_counts), &store);
+    let (cost_s, remote_bytes) = vanilla_learnable_update_cost(&net.cost, &lrows, parts);
+    lf_s += cost_s;
+    if remote_bytes > 0 {
+        net.charge(0, Lane::Net, remote_bytes, 0.0)?;
+    }
+    Ok(VanillaUpdateOut {
+        allreduce_s,
+        update_s,
+        lf_s,
+    })
+}
+
+/// `FeatureStore`-backed learnable-row update: accumulate row grads and
+/// apply sparse Adam. Returns rows updated.
+pub fn apply_learnable_grads(
+    store: &mut FeatureStore,
+    lr: f32,
+    adam_t: i32,
+    ty: usize,
+    ids: &[NodeId],
+    grads: &[f32],
+    lr_scale: f32,
+) -> usize {
+    let dim = store.dim(ty);
+    let mut rows = crate::optim::accumulate_rows(ids, grads, dim, PAD);
+    if lr_scale != 1.0 {
+        for (_, g) in &mut rows {
+            scale(g, lr_scale);
+        }
+    }
+    let hp = AdamParams {
+        lr,
+        ..Default::default()
+    };
+    if let Some((w, m, v)) = store.learnable_mut(ty) {
+        crate::optim::sparse_adam_step(&rows, w, m, v, dim, adam_t, hp)
+    } else {
+        0
+    }
+}
+
+/// Modeled feature-fetch time of one vanilla-engine input build: local
+/// rows through the cache model (or the full DRAM+PCIe miss path when
+/// uncached), remote rows over the network + PCIe. Single source of
+/// truth for both runtimes — the sequential-vs-cluster A/B timing is
+/// only meaningful if they price fetches identically.
+pub fn vanilla_fetch_time(
+    cost: &CostModel,
+    acc: &super::marshal::GatherAccounting,
+    cached: bool,
+    parts: usize,
+) -> f64 {
+    let mut fetch_t = acc.cache_time_s;
+    if !cached {
+        // No cache: every local row pays the batched DRAM→staging→PCIe
+        // path. With a dedup frontier, `acc.stats` holds unique rows
+        // only, so staging prices each distinct row exactly once.
+        let local_bytes = acc.stats.bytes - acc.stats.remote_bytes;
+        fetch_t += cost.staging_time(local_bytes, acc.stats.rows - acc.stats.remote_rows);
+    }
+    fetch_t
+        + cost.xfer_time_msgs(Lane::Net, acc.stats.remote_bytes, (parts - 1).max(1) as u64)
+        + cost.xfer_time(Lane::Pcie, acc.stats.remote_bytes)
+}
+
+/// Per-type row counts of one batch's sparse learnable-feature update.
+#[derive(Debug, Clone, Copy)]
+pub struct LearnableRows {
+    /// Feature dimension of the type, threaded from [`FeatureStore`].
+    pub dim: usize,
+    /// Valid (non-pad) gradient rows of the type this batch.
+    pub rows: u64,
+    /// The subset owned by other machines (vanilla edge-cut).
+    pub remote_rows: u64,
+}
+
+/// Convert per-type `(valid rows, remote rows)` counts into the sorted
+/// [`LearnableRows`] list [`vanilla_learnable_update_cost`] expects.
+/// Single source of truth for both vanilla runtimes: sorted by type so
+/// the float summation order is deterministic, real dims from the store.
+pub fn learnable_rows_sorted(
+    counts: HashMap<usize, (u64, u64)>,
+    store: &FeatureStore,
+) -> Vec<LearnableRows> {
+    let mut by_ty: Vec<(usize, u64, u64)> = counts
+        .into_iter()
+        .map(|(ty, (rows, remote))| (ty, rows, remote))
+        .collect();
+    by_ty.sort_unstable_by_key(|e| e.0);
+    by_ty
+        .into_iter()
+        .map(|(ty, rows, remote_rows)| LearnableRows {
+            dim: store.dim(ty),
+            rows,
+            remote_rows,
+        })
+        .collect()
+}
+
+/// Modeled cost of the vanilla engine's sparse learnable-feature
+/// update: per-row random DRAM read-modify-write of weight + moments at
+/// each type's **real** dimension, plus one network round trip covering
+/// all remote rows. Returns the modeled seconds and the remote bytes to
+/// charge to the network ledger. Callers pass `rows` sorted by type
+/// ([`learnable_rows_sorted`]) so the float summation order is
+/// deterministic across runtimes.
+pub fn vanilla_learnable_update_cost(
+    cost: &CostModel,
+    rows: &[LearnableRows],
+    parts: usize,
+) -> (f64, u64) {
+    let mut t = 0.0f64;
+    let mut remote_bytes = 0u64;
+    for r in rows {
+        let row_bytes = r.dim as u64 * 4;
+        t += cost.xfer_time_msgs(Lane::Dram, r.rows * row_bytes * 3, r.rows * 2);
+        remote_bytes += r.remote_rows * row_bytes;
+    }
+    if remote_bytes > 0 {
+        t += cost.xfer_time_msgs(Lane::Net, remote_bytes, (parts - 1).max(1) as u64);
+    }
+    (t, remote_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learnable_update_cost_threads_real_dims() {
+        let cost = CostModel::default();
+        let small = vanilla_learnable_update_cost(
+            &cost,
+            &[LearnableRows { dim: 8, rows: 10, remote_rows: 2 }],
+            2,
+        );
+        let big = vanilla_learnable_update_cost(
+            &cost,
+            &[LearnableRows { dim: 512, rows: 10, remote_rows: 2 }],
+            2,
+        );
+        assert!(big.0 > small.0, "bigger rows must cost more DRAM time");
+        assert_eq!(small.1, 2 * 8 * 4);
+        assert_eq!(big.1, 2 * 512 * 4);
+        assert_eq!(vanilla_learnable_update_cost(&cost, &[], 2), (0.0, 0));
+        // Two types accumulate both time and remote bytes.
+        let both = vanilla_learnable_update_cost(
+            &cost,
+            &[
+                LearnableRows { dim: 8, rows: 10, remote_rows: 2 },
+                LearnableRows { dim: 512, rows: 10, remote_rows: 2 },
+            ],
+            2,
+        );
+        assert!(both.0 > big.0);
+        assert_eq!(both.1, small.1 + big.1);
+    }
+
+    #[test]
+    fn accumulator_folds_in_worker_order() {
+        let mut acc = GradAccumulator::default();
+        acc.absorb(WorkerGrads {
+            wgrads: vec![("w".into(), vec![1.0, 2.0])],
+            row_grads: vec![(0, vec![1, 2], vec![0.5, 0.5])],
+            gx: vec![vec![1.0]],
+            learnable_rows: vec![(0, 2, 1)],
+        });
+        acc.absorb(WorkerGrads {
+            wgrads: vec![("w".into(), vec![10.0, 20.0])],
+            row_grads: vec![(0, vec![3], vec![0.25])],
+            gx: vec![vec![2.0]],
+            learnable_rows: vec![(0, 1, 0)],
+        });
+        assert_eq!(acc.wgrads["w"], vec![11.0, 22.0]);
+        assert_eq!(acc.row_grads[&0].0, vec![1, 2, 3]);
+        assert_eq!(acc.row_grads[&0].1, vec![0.5, 0.5, 0.25]);
+        assert_eq!(acc.gx, vec![3.0]);
+        assert_eq!(acc.learnable_counts[&0], (3, 1));
+    }
+
+    #[test]
+    fn batch_plan_raf_requires_manifest_artifacts() {
+        let manifest = Manifest {
+            config: String::new(),
+            arch: String::new(),
+            artifacts: HashMap::new(),
+        };
+        assert!(BatchPlan::raf(&manifest, 2).is_err());
+        assert!(BatchPlan::vanilla(&manifest, 2).is_err());
+    }
+}

@@ -46,8 +46,19 @@
 //!   byte-identical to the sequential runtime under any thread
 //!   interleaving (Prop. 1 is runtime-independent).
 //!
+//! Both runtimes are thin schedulers over the [`exec`] layer: each
+//! worker owns an [`exec::ExecContext`] (its own PJRT client, compiled
+//! executables, cache, and marshalling arena), parameters travel as
+//! versioned read-only snapshots published by the leader each batch,
+//! and the per-batch marshal → forward → exchange → backward → update
+//! stages are expressed once in [`exec::BatchPlan`]. Cluster workers
+//! therefore execute artifacts genuinely concurrently — no shared
+//! session, no lock around execution (`train.shared_session = true`
+//! restores the old serialized behavior for A/B timing).
+//!
 //! [`metrics::timeline`] records a per-worker event timeline either
-//! way; [`metrics::EpochReport`] reports both the classic summed epoch
+//! way (plus wall-clock forward spans showing real context overlap);
+//! [`metrics::EpochReport`] reports both the classic summed epoch
 //! time and the overlap-aware critical-path time derived from it.
 
 pub mod util;
@@ -62,5 +73,6 @@ pub mod optim;
 pub mod metrics;
 pub mod config;
 pub mod runtime;
+pub mod exec;
 pub mod cluster;
 pub mod coordinator;

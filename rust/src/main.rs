@@ -35,7 +35,7 @@ fn main() -> Result<()> {
                  partition  [--method meta|random|metis|bytype] [--parts p]\n\
                  train      --engine raf|vanilla [--epochs n] [--artifacts dir]\n\
                  \x20          [--runtime sequential|cluster] [--no-pipeline]\n\
-                 \x20          [--no-dedup-fetch]\n\
+                 \x20          [--no-dedup-fetch] [--shared-session]\n\
                  info"
             );
             Ok(())
@@ -127,6 +127,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if args.has_flag("no-dedup-fetch") {
         cfg.train.dedup_fetch = false;
+    }
+    if args.has_flag("shared-session") {
+        // Escape hatch: serialize artifact execution on one token,
+        // reproducing the pre-exec-layer shared-session behavior.
+        cfg.train.shared_session = true;
     }
     let engine = args.get_or("engine", "raf");
     let epochs = args.get_usize("epochs", 1);

@@ -118,6 +118,17 @@ pub struct EpochReport {
     pub critical_path_s: f64,
     /// Busy seconds per worker (sum of that worker's stage spans).
     pub worker_busy_s: Vec<f64>,
+    /// Per-worker stage breakdown (worker-side stages only: sample /
+    /// fetch / copy / forward / backward), so forward-stage overlap is
+    /// inspectable per worker without reading the timeline. Leader-side
+    /// phases (gather, leader step, updates, sync) appear only in the
+    /// global `stages`.
+    pub worker_stages: Vec<StageTimes>,
+    /// Wall-clock forward-execution spans per worker, recorded by both
+    /// runtimes. ≥ 2 concurrent spans is the per-worker-context overlap
+    /// evidence (cluster runtime, default config); the sequential
+    /// runtime and the `shared_session` escape hatch serialize at 1.
+    pub wall: timeline::WallClock,
     pub stages: StageTimes,
     pub comm: crate::comm::Ledger,
     /// Feature rows/bytes fetched from the KV store during input builds
@@ -131,6 +142,20 @@ pub struct EpochReport {
 }
 
 impl EpochReport {
+    /// The report of an epoch with no full batch to train on (the
+    /// ragged-tail filter consumed everything): zero times, NaN loss,
+    /// per-worker vectors sized for `workers`.
+    pub fn empty(workers: usize) -> EpochReport {
+        EpochReport {
+            worker_busy_s: vec![0.0; workers],
+            worker_stages: vec![StageTimes::default(); workers],
+            wall: timeline::WallClock::new(workers),
+            loss_mean: f64::NAN,
+            accuracy: f64::NAN,
+            ..Default::default()
+        }
+    }
+
     /// Fold another epoch's report into this one (totals accumulate;
     /// loss/accuracy take the latest epoch's value).
     pub fn absorb(&mut self, rep: &EpochReport) {
@@ -142,6 +167,14 @@ impl EpochReport {
         for (b, r) in self.worker_busy_s.iter_mut().zip(&rep.worker_busy_s) {
             *b += r;
         }
+        if self.worker_stages.len() < rep.worker_stages.len() {
+            self.worker_stages
+                .resize_with(rep.worker_stages.len(), StageTimes::default);
+        }
+        for (s, r) in self.worker_stages.iter_mut().zip(&rep.worker_stages) {
+            s.merge(r);
+        }
+        self.wall.merge(&rep.wall);
         self.stages.merge(&rep.stages);
         self.comm.merge(&rep.comm);
         self.fetch.merge(rep.fetch);
@@ -181,9 +214,26 @@ impl EpochReport {
                 .worker_busy_s
                 .iter()
                 .enumerate()
-                .map(|(w, &b)| format!("w{w} {}", crate::util::fmt_secs(b)))
+                .map(|(w, &b)| {
+                    let detail = self
+                        .worker_stages
+                        .get(w)
+                        .map(|s| {
+                            format!(
+                                " (fwd {}, bwd {})",
+                                crate::util::fmt_secs(s.get(Stage::Forward)),
+                                crate::util::fmt_secs(s.get(Stage::Backward)),
+                            )
+                        })
+                        .unwrap_or_default();
+                    format!("w{w} {}{detail}", crate::util::fmt_secs(b))
+                })
                 .collect();
             println!("    workers: {}", rows.join(" | "));
+        }
+        let peak = self.wall.max_concurrent_forward();
+        if peak > 0 {
+            println!("    forward overlap: up to {peak} worker(s) concurrent");
         }
     }
 }

@@ -18,6 +18,81 @@
 //! The schedule is a deterministic function of the recorded durations —
 //! thread interleavings of the real runtime never affect it.
 
+/// Wall-clock forward-stage (marshal + execute) spans per worker, in
+/// seconds relative to the epoch's wall-clock origin (PR 3). Unlike
+/// the modeled spans below — which *price* a schedule — these record
+/// when each worker's forward stage actually ran on this machine, so
+/// they are the direct evidence that per-worker execution contexts
+/// overlap (and that the `train.shared_session` escape hatch
+/// serializes them).
+#[derive(Debug, Clone, Default)]
+pub struct WallClock {
+    /// `forward[w]` = `(start_s, end_s)` intervals of worker `w`'s
+    /// forward executions, one per batch, in batch order.
+    pub forward: Vec<Vec<(f64, f64)>>,
+}
+
+impl WallClock {
+    pub fn new(workers: usize) -> WallClock {
+        WallClock {
+            forward: vec![Vec::new(); workers],
+        }
+    }
+
+    /// Record one forward-execution interval for `worker`.
+    pub fn record_forward(&mut self, worker: usize, span: (f64, f64)) {
+        if self.forward.len() <= worker {
+            self.forward.resize(worker + 1, Vec::new());
+        }
+        self.forward[worker].push(span);
+    }
+
+    /// Peak number of workers whose forward executions were in flight
+    /// at the same wall-clock instant (half-open intervals: a span
+    /// ending exactly when another starts does not overlap). ≥ 2 means
+    /// per-worker contexts genuinely ran concurrently; 1 means every
+    /// execution serialized (the shared-session behavior); 0 means no
+    /// spans were recorded.
+    pub fn max_concurrent_forward(&self) -> usize {
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for spans in &self.forward {
+            for &(s, e) in spans {
+                events.push((s, 1));
+                events.push((e, -1));
+            }
+        }
+        // Sort by time; at ties, close intervals before opening new ones
+        // (half-open semantics).
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut cur = 0i32;
+        let mut peak = 0i32;
+        for (_, d) in events {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        peak.max(0) as usize
+    }
+
+    /// Fold another epoch's spans in (per worker, appended). The
+    /// appended spans are shifted past this clock's latest end so
+    /// intervals from different epochs — which share a per-epoch
+    /// timebase — can never spuriously count as concurrent.
+    pub fn merge(&mut self, other: &WallClock) {
+        let offset = self
+            .forward
+            .iter()
+            .flatten()
+            .map(|&(_, e)| e)
+            .fold(0.0f64, f64::max);
+        if self.forward.len() < other.forward.len() {
+            self.forward.resize(other.forward.len(), Vec::new());
+        }
+        for (mine, theirs) in self.forward.iter_mut().zip(&other.forward) {
+            mine.extend(theirs.iter().map(|&(s, e)| (s + offset, e + offset)));
+        }
+    }
+}
+
 /// Modeled per-worker durations for one batch.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct WorkerSpan {
@@ -302,5 +377,33 @@ mod tests {
         let busy = t.worker_busy_s();
         assert_eq!(busy.len(), 3);
         assert!(busy.iter().all(|&b| b > 0.0));
+    }
+
+    #[test]
+    fn wall_clock_counts_concurrent_forwards() {
+        let mut w = WallClock::new(3);
+        assert_eq!(w.max_concurrent_forward(), 0);
+        // Serialized: back-to-back half-open intervals never overlap.
+        w.record_forward(0, (0.0, 1.0));
+        w.record_forward(1, (1.0, 2.0));
+        w.record_forward(2, (2.0, 3.0));
+        assert_eq!(w.max_concurrent_forward(), 1);
+        // Overlap: worker 1's next span starts inside worker 0's.
+        w.record_forward(0, (10.0, 12.0));
+        w.record_forward(1, (11.0, 13.0));
+        assert_eq!(w.max_concurrent_forward(), 2);
+        w.record_forward(2, (11.5, 11.6));
+        assert_eq!(w.max_concurrent_forward(), 3);
+    }
+
+    #[test]
+    fn wall_clock_merge_never_crosses_epochs() {
+        let mut a = WallClock::new(2);
+        a.record_forward(0, (0.0, 1.0));
+        let mut b = WallClock::new(2);
+        b.record_forward(1, (0.2, 0.8)); // would overlap a's span naively
+        a.merge(&b);
+        assert_eq!(a.max_concurrent_forward(), 1, "epochs must not overlap");
+        assert_eq!(a.forward[1], vec![(1.2, 1.8)]);
     }
 }

@@ -7,6 +7,7 @@
 //! byte-meaningful).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -107,9 +108,15 @@ impl Manifest {
 }
 
 /// Compiled-executable registry over one artifact directory.
+///
+/// Since PR 3 each worker's [`crate::exec::ExecContext`] owns its *own*
+/// `Runtime` — its own PJRT client and its own lazily compiled
+/// executables — so artifact executions on different workers never
+/// share mutable state. The parsed [`Manifest`] is `Arc`-shared across
+/// all of a session's runtimes (it is immutable after load).
 pub struct Runtime {
     pub client: xla::PjRtClient,
-    pub manifest: Manifest,
+    pub manifest: Arc<Manifest>,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
     dir: String,
 }
@@ -118,8 +125,14 @@ impl Runtime {
     /// Create the CPU PJRT client and load the manifest; artifacts are
     /// compiled lazily on first use (and cached).
     pub fn load(dir: &str) -> Result<Runtime> {
+        let manifest = Arc::new(Manifest::load(dir)?);
+        Runtime::with_manifest(dir, manifest)
+    }
+
+    /// Create a runtime over an already-parsed manifest (one PJRT client
+    /// per call — the per-worker-context path).
+    pub fn with_manifest(dir: &str, manifest: Arc<Manifest>) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        let manifest = Manifest::load(dir)?;
         Ok(Runtime {
             client,
             manifest,
@@ -192,12 +205,55 @@ pub fn lit_scalar(l: &xla::Literal) -> Result<f32> {
 /// Name-keyed parameter store with deterministic init and per-tensor
 /// Adam state. Weight names are globally unique (the manifest guarantees
 /// it), so the RAF and vanilla engines construct identical parameters.
+///
+/// The store is **leader-owned**: workers never hold a reference to it.
+/// Each batch the leader publishes a [`ParamSnapshot`] — a versioned,
+/// read-only view of the current tensors — and workers marshal their
+/// weight literals from that snapshot, matching real distributed
+/// semantics (parameters move to workers; workers never reach into the
+/// trainer's mutable state). Tensors are `Arc`-backed copy-on-write:
+/// taking a snapshot is a reference bump per tensor, and a subsequent
+/// [`ParamStore::step`] clones only the tensors it actually updates.
 pub struct ParamStore {
-    pub params: HashMap<String, Vec<f32>>,
+    pub params: HashMap<String, Arc<Vec<f32>>>,
     pub shapes: HashMap<String, Vec<usize>>,
     adam: HashMap<String, Adam>,
     seed: u64,
     hp: AdamParams,
+    /// Bumped by every [`ParamStore::step`]; stamps snapshots.
+    version: u64,
+}
+
+/// A versioned read-only view of every parameter tensor, published by
+/// the leader once per batch and broadcast to the workers (the cluster
+/// runtime ships it through the leader→worker collective; the
+/// sequential runtime reads the store directly via
+/// [`crate::exec::ParamsView::Owner`]). Snapshots share tensor storage
+/// with the store at capture time — later optimizer steps copy-on-write
+/// and can never mutate a published snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct ParamSnapshot {
+    pub version: u64,
+    params: HashMap<String, Arc<Vec<f32>>>,
+}
+
+impl ParamSnapshot {
+    /// Read one tensor; errors on a weight the leader never initialized
+    /// (an artifact/manifest mismatch, not a race).
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        self.params
+            .get(name)
+            .map(|v| v.as_slice())
+            .with_context(|| format!("parameter '{name}' missing from snapshot"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
 }
 
 impl ParamStore {
@@ -208,6 +264,7 @@ impl ParamStore {
             adam: HashMap::new(),
             seed,
             hp,
+            version: 0,
         }
     }
 
@@ -236,16 +293,47 @@ impl ParamStore {
         let data: Vec<f32> = (0..n).map(|_| ((rng.f64() * 2.0 - 1.0) * a) as f32).collect();
         self.adam.insert(spec.name.clone(), Adam::new(n, self.hp));
         self.shapes.insert(spec.name.clone(), spec.shape.clone());
-        self.params.insert(spec.name.clone(), data);
+        self.params.insert(spec.name.clone(), Arc::new(data));
     }
 
-    pub fn get(&self, name: &str) -> &Vec<f32> {
+    /// Initialize every weight the named artifacts declare. Engines call
+    /// this once at build time so the marshal stage (and the snapshots
+    /// workers marshal from) never needs mutable access to the store —
+    /// the init set is exactly the weights the engine's artifacts would
+    /// have ensured lazily. Artifact names missing from the manifest are
+    /// skipped (their absence surfaces at plan-build time instead).
+    pub fn ensure_artifacts<'a>(
+        &mut self,
+        manifest: &Manifest,
+        artifacts: impl IntoIterator<Item = &'a str>,
+    ) {
+        for name in artifacts {
+            if let Some(spec) = manifest.artifacts.get(name) {
+                for inp in spec.inputs.iter().filter(|i| i.kind == "weight") {
+                    self.ensure(inp);
+                }
+            }
+        }
+    }
+
+    pub fn get(&self, name: &str) -> &[f32] {
         &self.params[name]
+    }
+
+    /// Capture a versioned read-only snapshot of every tensor (Arc
+    /// bumps, no copies). The leader publishes one per batch.
+    pub fn snapshot(&self) -> ParamSnapshot {
+        ParamSnapshot {
+            version: self.version,
+            params: self.params.clone(),
+        }
     }
 
     /// Apply one Adam step with the given gradient. Errors (instead of
     /// panicking) on an unknown parameter so a cluster worker/leader
     /// thread can surface the fault through its `Result` channel.
+    /// Copy-on-write: a tensor still referenced by a published snapshot
+    /// is cloned before the in-place update.
     pub fn step(&mut self, name: &str, grad: &[f32]) -> Result<()> {
         let p = self
             .params
@@ -254,7 +342,8 @@ impl ParamStore {
         self.adam
             .get_mut(name)
             .with_context(|| format!("missing Adam state for '{name}'"))?
-            .step(p, grad);
+            .step(Arc::make_mut(p), grad);
+        self.version += 1;
         Ok(())
     }
 
@@ -306,10 +395,53 @@ mod tests {
     fn step_updates_parameters() {
         let mut s = ParamStore::new(1, AdamParams::default());
         s.ensure(&wspec("w", vec![4]));
-        let before = s.get("w").clone();
+        let before = s.get("w").to_vec();
         s.step("w", &[1.0, 1.0, 1.0, 1.0]).unwrap();
-        assert_ne!(&before, s.get("w"));
+        assert_ne!(before.as_slice(), s.get("w"));
         assert_eq!(s.total_elems(), 4);
         assert!(s.step("missing", &[1.0]).is_err());
+    }
+
+    #[test]
+    fn snapshots_are_versioned_and_copy_on_write() {
+        let mut s = ParamStore::new(1, AdamParams::default());
+        s.ensure(&wspec("w", vec![4]));
+        let snap = s.snapshot();
+        let frozen = snap.get("w").unwrap().to_vec();
+        assert!(snap.get("missing").is_err());
+        // A later optimizer step must never mutate the published
+        // snapshot (workers may still be marshalling from it).
+        s.step("w", &[1.0, 1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(snap.get("w").unwrap(), frozen.as_slice());
+        assert_ne!(s.get("w"), frozen.as_slice());
+        let snap2 = s.snapshot();
+        assert!(snap2.version > snap.version, "steps must bump the version");
+        assert_eq!(snap2.len(), 1);
+        assert!(!snap2.is_empty());
+    }
+
+    #[test]
+    fn ensure_artifacts_initializes_declared_weights_only() {
+        let mut artifacts = HashMap::new();
+        artifacts.insert(
+            "a".to_string(),
+            ArtifactSpec {
+                inputs: vec![
+                    wspec("w_a", vec![2, 2]),
+                    InputSpec { kind: "block".into(), ..wspec("not_a_weight", vec![4]) },
+                ],
+                outputs: vec![],
+            },
+        );
+        artifacts.insert(
+            "b".to_string(),
+            ArtifactSpec { inputs: vec![wspec("w_b", vec![3])], outputs: vec![] },
+        );
+        let manifest = Manifest { config: String::new(), arch: String::new(), artifacts };
+        let mut s = ParamStore::new(3, AdamParams::default());
+        s.ensure_artifacts(&manifest, ["a", "nonexistent"]);
+        assert!(s.params.contains_key("w_a"));
+        assert!(!s.params.contains_key("w_b"), "artifact b was not requested");
+        assert!(!s.params.contains_key("not_a_weight"));
     }
 }

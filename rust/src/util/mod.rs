@@ -46,9 +46,57 @@ pub fn fmt_secs(s: f64) -> String {
     }
 }
 
+/// Sum two equal-length f32 vectors in place (the float-reduction
+/// primitive every engine uses; accumulation *order* is the determinism
+/// contract, so callers always fold in (worker, output) order).
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// Scale a vector in place.
+pub fn scale(a: &mut [f32], s: f32) {
+    for x in a.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// Artifact gate shared by every artifact-dependent test and bench:
+/// `true` when `artifacts/<cfg>/manifest.json` exists, else prints one
+/// actionable skip message naming the `make artifacts` path and returns
+/// `false`. (Cargo runs tests and benches with cwd = the package root,
+/// where `configs/` and `artifacts/` are linked.)
+pub fn artifacts_ready(cfg_name: &str) -> bool {
+    let path = format!("artifacts/{cfg_name}/manifest.json");
+    if std::path::Path::new(&path).exists() {
+        return true;
+    }
+    eprintln!(
+        "skipping: {path} missing — run `make artifacts` at the repo root \
+         (lowers configs/{cfg_name}.json via python/compile/aot.py; needs python + jax)"
+    );
+    false
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut a = vec![1.0, 2.0];
+        add_assign(&mut a, &[0.5, 0.5]);
+        assert_eq!(a, vec![1.5, 2.5]);
+        scale(&mut a, 2.0);
+        assert_eq!(a, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn artifact_gate_reports_missing_dirs() {
+        assert!(!artifacts_ready("no-such-config-name"));
+    }
 
     #[test]
     fn bytes_formatting() {

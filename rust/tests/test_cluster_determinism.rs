@@ -147,10 +147,6 @@ fn threaded_prefetching_workers_sample_identically_to_sequential() {
 
 // ---- artifact-gated full-training equivalence ----
 
-fn artifacts_ready(cfg: &str) -> bool {
-    std::path::Path::new(&format!("artifacts/{cfg}/manifest.json")).exists()
-}
-
 fn run_with_runtime(
     system: SystemKind,
     cfg_name: &str,
@@ -161,7 +157,7 @@ fn run_with_runtime(
     cfg.train.runtime = runtime;
     let dir = format!("artifacts/{cfg_name}");
     let mut sess = Session::new(&cfg, &dir).unwrap();
-    let mut engine = Engine::build(&sess, system).unwrap();
+    let mut engine = Engine::build(&mut sess, system).unwrap();
     (0..epochs)
         .map(|ep| {
             let r = engine.run_epoch(&mut sess, ep).unwrap();
@@ -172,8 +168,7 @@ fn run_with_runtime(
 
 #[test]
 fn cluster_runtime_reproduces_sequential_losses_exactly() {
-    if !artifacts_ready("mag-tiny") {
-        eprintln!("skipping: run `make artifacts` first");
+    if !heta::util::artifacts_ready("mag-tiny") {
         return;
     }
     for system in [SystemKind::Heta, SystemKind::DglMetis] {
@@ -195,8 +190,7 @@ fn cluster_runtime_reproduces_sequential_losses_exactly() {
 
 #[test]
 fn pipelined_critical_path_beats_sequential_runtime() {
-    if !artifacts_ready("mag-tiny") {
-        eprintln!("skipping: run `make artifacts` first");
+    if !heta::util::artifacts_ready("mag-tiny") {
         return;
     }
     let seq = run_with_runtime(SystemKind::Heta, "mag-tiny", RuntimeKind::Sequential, 1);

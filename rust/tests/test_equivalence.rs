@@ -8,15 +8,11 @@
 use heta::config::Config;
 use heta::coordinator::{Engine, Session, SystemKind};
 
-fn artifacts_ready(cfg: &str) -> bool {
-    std::path::Path::new(&format!("artifacts/{cfg}/manifest.json")).exists()
-}
-
 fn run(system: SystemKind, cfg_name: &str, epochs: usize) -> Vec<(f64, f64)> {
     let cfg = Config::load(&format!("configs/{cfg_name}.json")).unwrap();
     let dir = format!("artifacts/{cfg_name}");
     let mut sess = Session::new(&cfg, &dir).unwrap();
-    let mut engine = Engine::build(&sess, system).unwrap();
+    let mut engine = Engine::build(&mut sess, system).unwrap();
     (0..epochs)
         .map(|ep| {
             let r = engine.run_epoch(&mut sess, ep).unwrap();
@@ -27,8 +23,7 @@ fn run(system: SystemKind, cfg_name: &str, epochs: usize) -> Vec<(f64, f64)> {
 
 #[test]
 fn raf_equals_vanilla_over_training() {
-    if !artifacts_ready("mag-tiny") {
-        eprintln!("skipping: run `make artifacts` first");
+    if !heta::util::artifacts_ready("mag-tiny") {
         return;
     }
     let raf = run(SystemKind::Heta, "mag-tiny", 3);
@@ -44,8 +39,7 @@ fn raf_equals_vanilla_over_training() {
 
 #[test]
 fn raf_equals_vanilla_rgat() {
-    if !artifacts_ready("mag-tiny-rgat") {
-        eprintln!("skipping: run `make artifacts` first");
+    if !heta::util::artifacts_ready("mag-tiny-rgat") {
         return;
     }
     let raf = run(SystemKind::Heta, "mag-tiny-rgat", 2);
@@ -60,8 +54,7 @@ fn raf_equals_vanilla_rgat() {
 
 #[test]
 fn raf_equals_vanilla_hgt() {
-    if !artifacts_ready("mag-tiny-hgt") {
-        eprintln!("skipping: run `make artifacts` first");
+    if !heta::util::artifacts_ready("mag-tiny-hgt") {
         return;
     }
     let raf = run(SystemKind::Heta, "mag-tiny-hgt", 2);
@@ -76,8 +69,7 @@ fn raf_equals_vanilla_hgt() {
 
 #[test]
 fn training_reduces_loss() {
-    if !artifacts_ready("mag-tiny") {
-        eprintln!("skipping: run `make artifacts` first");
+    if !heta::util::artifacts_ready("mag-tiny") {
         return;
     }
     let curve = run(SystemKind::Heta, "mag-tiny", 6);
@@ -93,16 +85,15 @@ fn training_reduces_loss() {
 fn raf_communicates_less_than_vanilla() {
     // Props. 2–3 in effect: per-epoch network bytes under RAF must be
     // well below the vanilla engine's feature-fetch traffic.
-    if !artifacts_ready("mag-tiny") {
-        eprintln!("skipping: run `make artifacts` first");
+    if !heta::util::artifacts_ready("mag-tiny") {
         return;
     }
     let cfg = Config::load("configs/mag-tiny.json").unwrap();
     let mut s1 = Session::new(&cfg, "artifacts/mag-tiny").unwrap();
-    let mut e1 = Engine::build(&s1, SystemKind::Heta).unwrap();
+    let mut e1 = Engine::build(&mut s1, SystemKind::Heta).unwrap();
     let r1 = e1.run_epoch(&mut s1, 0).unwrap();
     let mut s2 = Session::new(&cfg, "artifacts/mag-tiny").unwrap();
-    let mut e2 = Engine::build(&s2, SystemKind::DglRandom).unwrap();
+    let mut e2 = Engine::build(&mut s2, SystemKind::DglRandom).unwrap();
     let r2 = e2.run_epoch(&mut s2, 0).unwrap();
     let raf_net = r1.comm.bytes[0];
     let van_net = r2.comm.bytes[0];

@@ -208,10 +208,6 @@ fn cache_ledgers_count_each_unique_id_once_per_batch() {
 
 // ---- artifact-gated full-training A/B ----
 
-fn artifacts_ready(cfg: &str) -> bool {
-    std::path::Path::new(&format!("artifacts/{cfg}/manifest.json")).exists()
-}
-
 fn run_epochs(
     system: SystemKind,
     cfg_name: &str,
@@ -224,7 +220,7 @@ fn run_epochs(
     cfg.train.dedup_fetch = dedup;
     let dir = format!("artifacts/{cfg_name}");
     let mut sess = Session::new(&cfg, &dir).unwrap();
-    let mut engine = Engine::build(&sess, system).unwrap();
+    let mut engine = Engine::build(&mut sess, system).unwrap();
     (0..epochs)
         .map(|ep| {
             let r = engine.run_epoch(&mut sess, ep).unwrap();
@@ -235,8 +231,7 @@ fn run_epochs(
 
 #[test]
 fn dedup_fetch_preserves_losses_and_reduces_rows_across_runtimes() {
-    if !artifacts_ready("mag-tiny") {
-        eprintln!("skipping: run `make artifacts` first");
+    if !heta::util::artifacts_ready("mag-tiny") {
         return;
     }
     for system in [SystemKind::Heta, SystemKind::DglOpt] {
