@@ -1,0 +1,128 @@
+//! The async 1F1B window A/B (the PR-4 tentpole bench): for both
+//! engines on the cluster runtime, run the same config at
+//! `train.staleness` 0, 1 and 2 and compare the **critical-path epoch
+//! time** (the overlap-aware modeled schedule: synchronous double-
+//! buffered pipeline at 0, bounded-staleness 1F1B beyond). Also
+//! reports the real wall epoch, the loss drift a window introduces vs
+//! the synchronous trajectory (bounded staleness legitimately changes
+//! the math — the drift is the price of the speedup and belongs in the
+//! record), and the wall-clock overlap witnesses. Asserts staleness 1
+//! strictly beats staleness 0 on critical path for both engines and
+//! emits `BENCH_async.json` (uploaded by CI next to `BENCH_exec.json`).
+
+use std::time::Instant;
+
+use heta::config::{Config, RuntimeKind};
+use heta::coordinator::{Engine, Session, SystemKind};
+use heta::metrics::EpochReport;
+use heta::util::bench::{report, table};
+use heta::util::fmt_secs;
+use heta::util::json::Json;
+
+const EPOCHS: usize = 3;
+
+/// Run `EPOCHS` cluster epochs at the given staleness; returns the
+/// per-epoch reports plus the real wall seconds of the whole run.
+fn run(cfg: &Config, system: SystemKind, staleness: usize) -> (Vec<EpochReport>, f64) {
+    let mut cfg = cfg.clone();
+    cfg.train.runtime = RuntimeKind::Cluster;
+    cfg.train.staleness = staleness;
+    let dir = format!("artifacts/{}", cfg.name);
+    let mut sess = Session::new(&cfg, &dir)
+        .unwrap_or_else(|e| panic!("session for {}: {e} (run `make artifacts`)", cfg.name));
+    let mut engine = Engine::build(&mut sess, system).unwrap();
+    let t0 = Instant::now();
+    let reps = (0..EPOCHS)
+        .map(|ep| engine.run_epoch(&mut sess, ep).unwrap())
+        .collect();
+    (reps, t0.elapsed().as_secs_f64())
+}
+
+fn critical_sum(reps: &[EpochReport]) -> f64 {
+    reps.iter().map(|r| r.critical_path_s).sum()
+}
+
+fn main() {
+    let cfg_name = "mag-bench";
+    if !heta::util::artifacts_ready(cfg_name) {
+        return;
+    }
+    let cfg = Config::load(&format!("configs/{cfg_name}.json"))
+        .unwrap_or_else(|e| panic!("loading config {cfg_name}: {e}"));
+
+    let mut rows = Vec::new();
+    let mut entries = Vec::new();
+    for (system, label) in [(SystemKind::Heta, "raf"), (SystemKind::DglMetis, "vanilla")] {
+        let runs: Vec<(usize, Vec<EpochReport>, f64)> = [0usize, 1, 2]
+            .into_iter()
+            .map(|k| {
+                let (reps, wall) = run(&cfg, system, k);
+                (k, reps, wall)
+            })
+            .collect();
+        let sync_critical = critical_sum(&runs[0].1);
+        let sync_loss = runs[0].1.last().map(|r| r.loss_mean).unwrap_or(f64::NAN);
+        for (k, reps, wall) in &runs {
+            let critical = critical_sum(reps);
+            let loss = reps.last().map(|r| r.loss_mean).unwrap_or(f64::NAN);
+            let bwd_fwd: usize = reps
+                .iter()
+                .map(|r| r.wall.backward_overlapping_later_forward())
+                .sum();
+            let cross: usize = reps.iter().map(|r| r.wall.cross_batch_forward_overlap()).sum();
+            rows.push(vec![
+                label.to_string(),
+                format!("{k}"),
+                fmt_secs(critical / EPOCHS as f64),
+                format!("{:.3}x", sync_critical / critical.max(1e-12)),
+                fmt_secs(*wall),
+                format!("{:+.2e}", loss - sync_loss),
+                format!("{bwd_fwd}/{cross}"),
+            ]);
+            entries.push(Json::from_pairs(vec![
+                ("engine", Json::str(label)),
+                ("config", Json::str(cfg_name)),
+                ("staleness", Json::num(*k as f64)),
+                ("epochs", Json::num(EPOCHS as f64)),
+                ("critical_path_s", Json::num(critical / EPOCHS as f64)),
+                ("speedup_vs_sync", Json::num(sync_critical / critical.max(1e-12))),
+                ("wall_s", Json::num(*wall)),
+                ("final_loss", Json::num(loss)),
+                ("loss_drift_vs_sync", Json::num(loss - sync_loss)),
+                ("bwd_fwd_overlaps", Json::num(bwd_fwd as f64)),
+                ("cross_batch_fwd_overlaps", Json::num(cross as f64)),
+            ]));
+        }
+        let k1_critical = critical_sum(&runs[1].1);
+        assert!(
+            k1_critical < sync_critical,
+            "{label}: staleness=1 critical path {k1_critical} not strictly below \
+             staleness=0 {sync_critical}"
+        );
+        report(
+            &format!("async/{label}/critical_speedup_k1"),
+            format!("{:.3}x", sync_critical / k1_critical.max(1e-12)),
+        );
+        report(
+            &format!("async/{label}/critical_speedup_k2"),
+            format!("{:.3}x", sync_critical / critical_sum(&runs[2].1).max(1e-12)),
+        );
+    }
+    table(
+        "Async 1F1B window: critical-path epoch time vs staleness, cluster runtime",
+        &[
+            "engine",
+            "staleness",
+            "critical/epoch",
+            "speedup",
+            "wall total",
+            "loss drift",
+            "bwd||fwd / x-batch",
+        ],
+        &rows,
+    );
+
+    let out = Json::from_pairs(vec![("async_pipeline", Json::Arr(entries))]).to_string();
+    std::fs::write("BENCH_async.json", &out).expect("write BENCH_async.json");
+    println!("wrote BENCH_async.json");
+}

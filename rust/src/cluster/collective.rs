@@ -8,20 +8,83 @@
 //! or broadcasts responses. A `((), ())` star doubles as the
 //! leader/worker [`Hub::barrier`].
 //!
+//! [`Hub::gather_round`] is the batch-tagged gather the bounded-
+//! staleness pipeline needs: with `train.staleness >= 1` a fast worker
+//! may ship batch `i+k`'s forward results while the leader is still
+//! collecting batch `i`'s, so contributions carry a **round tag** and
+//! the hub parks out-of-round messages in a reorder buffer instead of
+//! mistaking them for duplicates. Error paths keep the round (and the
+//! engines add the batch index), so a worker dying mid-window names the
+//! batch that was in flight instead of a bare channel hangup.
+//!
 //! Collectives move data only; the engines charge the modeled cost of
 //! each collective through [`crate::comm::SimNet`] with the same calls
 //! the sequential runtime makes (see the accounting contract in
 //! [`super::mailbox`]).
 
-use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::mailbox::Mailbox;
+
+/// Batch-cursor sentinel: "this worker died before touching any batch".
+pub const NO_BATCH: usize = usize::MAX;
+
+/// How [`Hub::gather_round`] should treat one received message.
+pub enum RoundTag {
+    /// A contribution to the given round (buffered if not the round
+    /// being gathered).
+    Round(u64),
+    /// A failure notice: abort the gather immediately, threading the
+    /// carried description (the engines put the batch index and root
+    /// cause here) into the returned error.
+    Abort(String),
+}
+
+impl RoundTag {
+    /// Abort tag for a worker death notice, naming the batch that was
+    /// in flight ([`NO_BATCH`] = died before its first batch). Shared
+    /// by both engines so the wording the regression tests pin lives
+    /// once.
+    pub fn abort_for(bi: usize, msg: &str) -> RoundTag {
+        RoundTag::Abort(if bi == NO_BATCH {
+            format!("before its first batch: {msg}")
+        } else {
+            format!("batch {bi} was in flight: {msg}")
+        })
+    }
+}
+
+/// Run a cluster worker's body with panic containment and death
+/// notification — the wrapper both engines previously copy-pasted.
+/// `cur` is the worker's batch cursor (stores survive unwinding, so a
+/// panic still names the batch in flight); on error or panic, `notify`
+/// ships a best-effort death notice `(batch, root cause)` so the
+/// leader's gather fails fast instead of blocking on a dead peer.
+pub fn run_contained(
+    worker: usize,
+    cur: &AtomicUsize,
+    body: impl FnOnce() -> Result<()>,
+    notify: impl FnOnce(usize, String),
+) -> Result<()> {
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
+    let r = caught.unwrap_or_else(|_| Err(anyhow!("worker {worker} panicked")));
+    if let Err(e) = &r {
+        notify(cur.load(Ordering::Relaxed), format!("{e:#}"));
+    }
+    r
+}
 
 /// Leader endpoint of a star: receives `U`p messages, sends `D`own.
 pub struct Hub<U, D> {
     up: Mailbox<U>,
     down: Mailbox<D>,
     workers: usize,
+    /// Reorder buffer of [`Hub::gather_round`]: contributions that
+    /// arrived for a round other than the one being gathered.
+    parked: BTreeMap<u64, Vec<Option<U>>>,
 }
 
 /// Worker endpoint of a star.
@@ -39,6 +102,7 @@ pub fn star<U: Send, D: Send>(workers: usize) -> (Hub<U, D>, Vec<Port<U, D>>) {
         up: up_hub,
         down: down_hub,
         workers,
+        parked: BTreeMap::new(),
     };
     let ports = up_spokes
         .into_iter()
@@ -78,6 +142,55 @@ impl<U: Send, D: Send> Hub<U, D> {
         let out: Vec<U> = slots.into_iter().flatten().collect();
         ensure!(out.len() == self.workers, "gather lost contributions");
         Ok(out)
+    }
+
+    /// Collect exactly one contribution per worker **for `round`**,
+    /// ordered by worker id. Messages tagged for other rounds are
+    /// parked and handed out when their round is gathered — the window
+    /// of a staleness pipeline delivers batch `i+k` forwards while
+    /// batch `i` is still being collected. A [`RoundTag::Abort`]
+    /// message (a worker's death notice) fails the gather immediately
+    /// with the worker's own description; a hangup error names the
+    /// round so the caller's batch context survives.
+    pub fn gather_round(&mut self, round: u64, tag: impl Fn(&U) -> RoundTag) -> Result<Vec<U>> {
+        loop {
+            if let Some(slots) = self.parked.get(&round) {
+                if slots.iter().all(|s| s.is_some()) {
+                    let slots = self.parked.remove(&round).expect("checked above");
+                    let out: Vec<U> = slots.into_iter().flatten().collect();
+                    ensure!(out.len() == self.workers, "round {round} gather lost contributions");
+                    return Ok(out);
+                }
+            }
+            let workers = self.workers;
+            let e = self
+                .up
+                .recv()
+                .with_context(|| format!("gathering round {round} (in-flight window)"))?;
+            ensure!(
+                e.from < workers,
+                "round {round}: gather contribution from unexpected rank {}",
+                e.from
+            );
+            match tag(&e.payload) {
+                RoundTag::Abort(what) => {
+                    let from = e.from;
+                    bail!("worker {from} failed while the leader gathered round {round}: {what}")
+                }
+                RoundTag::Round(r) => {
+                    let slots = self
+                        .parked
+                        .entry(r)
+                        .or_insert_with(|| (0..workers).map(|_| None).collect());
+                    ensure!(
+                        slots[e.from].is_none(),
+                        "duplicate round {r} contribution from worker {}",
+                        e.from
+                    );
+                    slots[e.from] = Some(e.payload);
+                }
+            }
+        }
     }
 
     /// Send `items[w]` to worker `w`.
@@ -203,6 +316,90 @@ mod tests {
         drop(hub);
         assert!(ports[0].recv().is_err());
         assert!(ports[0].send(1).is_err());
+    }
+
+    #[test]
+    fn gather_round_parks_runahead_contributions() {
+        // Worker 1 runs a whole round ahead (the staleness window):
+        // its round-1 message lands before worker 0's round-0 one, and
+        // must neither error as a duplicate nor leak into round 0.
+        let (mut hub, mut ports) = star::<(u64, u32), ()>(2);
+        let p1 = ports.pop().unwrap();
+        let p0 = ports.pop().unwrap();
+        p1.send((0, 10)).unwrap();
+        p1.send((1, 11)).unwrap();
+        p0.send((0, 0)).unwrap();
+        p0.send((1, 1)).unwrap();
+        let tag = |m: &(u64, u32)| RoundTag::Round(m.0);
+        let r0 = hub.gather_round(0, tag).unwrap();
+        assert_eq!(r0, vec![(0, 0), (0, 10)]);
+        let r1 = hub.gather_round(1, tag).unwrap();
+        assert_eq!(r1, vec![(1, 1), (1, 11)]);
+    }
+
+    #[test]
+    fn gather_round_abort_carries_batch_context() {
+        let (mut hub, mut ports) = star::<Result<(u64, u32), String>, ()>(2);
+        let p1 = ports.pop().unwrap();
+        let p0 = ports.pop().unwrap();
+        p0.send(Ok((0, 5))).unwrap();
+        // Worker 1 dies mid-window and says which batch it was in.
+        p1.send(Err("batch 7: worker 1 panicked".into())).unwrap();
+        let err = hub
+            .gather_round(0, |m| match m {
+                Ok((r, _)) => RoundTag::Round(*r),
+                Err(e) => RoundTag::Abort(e.clone()),
+            })
+            .unwrap_err();
+        let text = format!("{err:#}");
+        assert!(
+            text.contains("batch 7") && text.contains("worker 1"),
+            "abort must surface the in-flight batch and worker: {text}"
+        );
+    }
+
+    #[test]
+    fn run_contained_names_the_batch_on_panic() {
+        let cur = AtomicUsize::new(NO_BATCH);
+        let mut notice: Option<(usize, String)> = None;
+        let r = run_contained(
+            3,
+            &cur,
+            || {
+                cur.store(7, Ordering::Relaxed);
+                panic!("boom");
+            },
+            |bi, msg| notice = Some((bi, msg)),
+        );
+        assert!(r.is_err());
+        let (bi, msg) = notice.expect("death notice must fire");
+        assert_eq!(bi, 7, "the batch cursor must survive the unwind");
+        assert!(msg.contains("worker 3 panicked"), "unexpected notice: {msg}");
+        // And the shared abort wording names the batch (or its absence).
+        match RoundTag::abort_for(7, "x") {
+            RoundTag::Abort(s) => assert!(s.contains("batch 7")),
+            RoundTag::Round(_) => unreachable!(),
+        }
+        match RoundTag::abort_for(NO_BATCH, "x") {
+            RoundTag::Abort(s) => assert!(s.contains("before its first batch")),
+            RoundTag::Round(_) => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn gather_round_hangup_names_the_round() {
+        let (mut hub, mut ports) = star::<(u64, u32), ()>(2);
+        let p1 = ports.pop().unwrap();
+        let p0 = ports.pop().unwrap();
+        p0.send((4, 1)).unwrap();
+        drop(p1); // silent death: no notice at all
+        drop(p0);
+        let err = hub.gather_round(4, |m| RoundTag::Round(m.0)).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(
+            text.contains("round 4"),
+            "hangup error must name the round in flight: {text}"
+        );
     }
 
     #[test]

@@ -10,6 +10,16 @@
 //! surface as `anyhow::Result` — never panics — so one failed worker
 //! unwinds the whole epoch as an error instead of a poisoned mutex.
 //!
+//! Ordering contract: delivery is FIFO **per (sender, receiver) lane**
+//! — messages from one rank to another arrive in send order, while
+//! messages from different senders interleave arbitrarily. The
+//! bounded-staleness pipeline leans on this twice: workers process the
+//! leader's releases and gradient scatters exactly in the order the
+//! leader sent them (the deterministic 1F1B interleaving), and a
+//! worker's batch-tagged contributions reach the leader's round
+//! reorder buffer in batch order. `tests/test_async_pipeline.rs`
+//! property-checks the lane contract under random interleavings.
+//!
 //! Accounting contract: the mailbox moves data; it does not price it.
 //! The engines charge every transfer of the *modeled* system through
 //! [`crate::comm::SimNet`] at the collective boundaries with exactly
@@ -158,6 +168,33 @@ mod tests {
         // `a`'s own sender into the mesh keeps its queue alive, but the
         // dropped peer can no longer be sent to once its receiver died.
         assert!(a.send(1, 1).is_err());
+    }
+
+    #[test]
+    fn per_sender_lanes_preserve_send_order() {
+        // Two senders interleave at one receiver: arrival order between
+        // them is arbitrary, but each sender's own sequence must arrive
+        // intact — the lane contract the batch-tagged collectives need.
+        let mut boxes = Mailbox::<(usize, u32)>::mesh(3);
+        let c = boxes.pop().unwrap();
+        let b = boxes.pop().unwrap();
+        let a = boxes.pop().unwrap();
+        a.send(2, (0, 0)).unwrap();
+        b.send(2, (1, 0)).unwrap();
+        a.send(2, (0, 1)).unwrap();
+        b.send(2, (1, 1)).unwrap();
+        a.send(2, (0, 2)).unwrap();
+        let mut last_seq = [None::<u32>, None::<u32>];
+        for _ in 0..5 {
+            let e = c.recv().unwrap();
+            let (batch_lane, seq) = e.payload;
+            assert_eq!(batch_lane, e.from, "lane id mirrors the sender");
+            if let Some(prev) = last_seq[e.from] {
+                assert!(seq > prev, "lane {} reordered: {seq} after {prev}", e.from);
+            }
+            last_seq[e.from] = Some(seq);
+        }
+        assert_eq!(last_seq, [Some(2), Some(1)]);
     }
 
     #[test]

@@ -14,12 +14,17 @@
 //!   reduction byte-identical under arbitrary thread interleavings —
 //!   the cluster runtime reproduces the sequential runtime's sampled
 //!   trees, losses and parameter trajectories exactly (Prop. 1 still
-//!   holds; `tests/test_cluster_determinism.rs` checks it).
+//!   holds; `tests/test_cluster_determinism.rs` checks it). Gathers are
+//!   **round-tagged** (`Hub::gather_round`): under a staleness window
+//!   fast workers ship contributions for later batches while an earlier
+//!   round is still collecting, and the hub parks them instead of
+//!   mistaking them for duplicates; error paths keep the batch that was
+//!   in flight.
 //! * [`raf`] / [`vanilla`] — thin thread-per-partition schedulers over
 //!   the shared stage pipeline in [`crate::exec::BatchPlan`]. Each
 //!   worker thread exclusively owns its
 //!   [`ExecContext`](crate::exec::ExecContext) — its own PJRT client,
-//!   compiled executables, feature cache and marshalling arena — so
+//!   compiled executables and feature cache — so
 //!   forward/backward of different partitions execute **genuinely
 //!   concurrently**: there is no shared session and no lock around
 //!   artifact execution (PR 1's serialized shared session survives only
@@ -29,7 +34,14 @@
 //!   concurrently during marshal and written only by the leader's
 //!   update phase. The double-buffered pipeline still prefetches batch
 //!   `i+1`'s sampling while batch `i` sits in the leader phase (see
-//!   [`crate::metrics::timeline`]).
+//!   [`crate::metrics::timeline`]), and `train.staleness = k >= 1`
+//!   opens the async 1F1B window on top: the leader releases batch
+//!   `i+k` right after gathering batch `i`'s results, so later
+//!   forwards (against snapshots at most `k` updates behind) overlap
+//!   in-flight backwards and updates. The schedule stays deterministic
+//!   — releases, store-write barriers and version-pinned gradient
+//!   folds keep a fixed order — and `k = 0` remains byte-identical to
+//!   the synchronous protocol (`tests/test_async_pipeline.rs`).
 //!
 //! Every transfer of the *modeled* system is still charged through
 //! [`crate::comm::CostModel`] ledgers with the same calls the

@@ -7,50 +7,73 @@
 //! own PJRT clients; the leader gathers partials in worker order, runs
 //! the `leader` artifact on its own context, scatters `∂partials` (with
 //! the post-head-update parameter snapshot), gathers worker gradients
-//! in worker order and applies all updates. With `train.pipeline` on,
-//! each worker prefetches batch `i+1`'s sample right after shipping its
-//! batch-`i` partials, so prefetch work hides inside the leader phase —
-//! the double-buffered schedule priced by [`crate::metrics::timeline`].
+//! in worker order and applies all updates.
+//!
+//! Two overlap levers stack on this (PR 1 and PR 4):
+//!
+//! * `train.pipeline` — the synchronous double-buffer: each worker
+//!   prefetches batch `i+1`'s sample right after shipping its batch-`i`
+//!   partials, hiding prefetch work inside the leader phase.
+//! * `train.staleness = k >= 1` — the async 1F1B window: the leader
+//!   releases batch `i+k` right after gathering batch `i`'s partials,
+//!   so workers marshal+execute later forwards (against a snapshot
+//!   missing at most `k` updates) while batch `i`'s backward and update
+//!   are still in flight. Workers process the leader's messages in
+//!   send order — forward of `i+k`, then backward of `i` — keeping up
+//!   to `k + 1` batches open as [`InFlight`] state (each with its own
+//!   arena: the backward rebuild scatters from its *own* forward's
+//!   staged rows). All collectives are batch-tagged
+//!   ([`Hub::gather_round`]) because fast workers run ahead. The
+//!   schedule — releases, gradient folds, store phases — keeps a fixed
+//!   deterministic order, so a given staleness value reproduces its
+//!   trajectory exactly; `k = 0` is byte-identical to the synchronous
+//!   protocol.
 //!
 //! Parameters are leader-owned: workers marshal weights from the
 //! versioned read-only snapshot broadcast at each batch's release (the
 //! `Ready` message) and the backward pass from the refreshed snapshot
-//! riding the gradient scatter. The leader's cache traffic goes through
-//! fork-ledger views of the partition caches (shared residency, private
-//! hit/miss counters), folded back after the worker threads exit — the
-//! runtime is lock-free end to end.
-//!
-//! Every floating-point reduction folds in (worker, output) order —
-//! exactly the order the sequential engine uses — so losses and
-//! parameter trajectories are byte-identical to the sequential runtime
-//! under any thread interleaving.
+//! riding the gradient scatter; gradients travel back tagged with the
+//! snapshot version that produced them and the fold rejects mismatches.
+//! The leader's cache traffic goes through fork-ledger views of the
+//! partition caches (shared residency, private hit/miss counters),
+//! folded back after the worker threads exit — the runtime is lock-free
+//! end to end. Every floating-point reduction folds in (worker, output)
+//! order — exactly the order the sequential engine uses — so at
+//! staleness 0 losses and parameter trajectories are byte-identical to
+//! the sequential runtime under any thread interleaving.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::comm::SimNet;
 use crate::config::{partition_edge_filter, Config};
 use crate::coordinator::common::Session;
 use crate::exec::plan::raf_apply_updates;
-use crate::exec::{BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView};
+use crate::exec::{
+    BatchArena, BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, InFlight,
+    ParamsView,
+};
 use crate::hetgraph::NodeId;
 use crate::kvstore::FetchStats;
-use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
+use crate::metrics::timeline::{AsyncShape, EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::MetaPartition;
 use crate::runtime::ParamSnapshot;
 use crate::sampling::{sample_tree, Frontier, TreeSample};
 use crate::util::{add_assign, rng::Rng};
 
-use super::collective::{star, Hub, Port};
+use super::collective::{run_contained, star, Hub, Port, RoundTag, NO_BATCH};
 use super::mailbox::{slice_bytes, Wire};
 
-/// Worker → leader messages.
+/// Worker → leader messages, tagged with their batch so the leader's
+/// round gather can park run-ahead contributions from fast workers.
 enum Up {
     Fwd {
+        bi: usize,
         p1: Vec<f32>,
         p2: Vec<f32>,
         /// KV-store fetch accounting of the forward input build (unique
@@ -63,17 +86,40 @@ enum Up {
         wall_fwd: (f64, f64),
     },
     Bwd {
+        bi: usize,
         /// Unreduced gradient outputs — the leader folds them in
         /// (worker, output) order to match the sequential engine's
-        /// float-accumulation order exactly.
+        /// float-accumulation order exactly. Tagged with the snapshot
+        /// version that produced them.
         grads: crate::exec::WorkerGrads,
         bwd_s: f64,
         stages: StageTimes,
+        /// Wall-clock backward interval — with a staleness window open,
+        /// the backward-vs-later-forward overlap evidence.
+        wall_bwd: (f64, f64),
     },
-    /// Best-effort death notice: without it, a leader gathering from a
-    /// dead worker would block forever while live workers keep the
-    /// channel connected.
-    Failed(String),
+    /// Best-effort death notice naming the batch that was in flight:
+    /// without it, a leader gathering from a dead worker would block
+    /// forever while live workers keep the channel connected, and
+    /// without the batch tag the root cause would drown in a bare
+    /// channel hangup.
+    Failed { bi: usize, msg: String },
+}
+
+/// Gather rounds: two per batch, forwards then backwards.
+fn fwd_round(bi: usize) -> u64 {
+    2 * bi as u64
+}
+fn bwd_round(bi: usize) -> u64 {
+    2 * bi as u64 + 1
+}
+
+fn up_tag(u: &Up) -> RoundTag {
+    match u {
+        Up::Fwd { bi, .. } => RoundTag::Round(fwd_round(*bi)),
+        Up::Bwd { bi, .. } => RoundTag::Round(bwd_round(*bi)),
+        Up::Failed { bi, msg } => RoundTag::abort_for(*bi, msg),
+    }
 }
 
 impl Wire for Up {
@@ -87,26 +133,30 @@ impl Wire for Up {
             // not wire traffic. Replica sync is charged separately,
             // exactly as in the sequential engine.
             Up::Bwd { .. } => 0,
-            Up::Failed(_) => 0,
+            Up::Failed { .. } => 0,
         }
     }
 }
 
-/// Leader → worker messages. Both carry the current parameter snapshot:
-/// `Ready` releases the next batch with the post-update weights,
-/// `Grads` ships `∂partials` plus the post-head-update weights the
-/// backward rebuild marshals from. In the modeled system each partition
-/// owns its weights locally (model parallelism), so snapshot
-/// distribution is an in-process artifact of the single-machine
-/// harness, not wire traffic — only the 2·[B,H] gradients count.
+/// Leader → worker messages, batch-tagged. Both carry the current
+/// parameter snapshot: `Ready` releases batch `bi` with the newest
+/// broadcast weights (under a staleness window these may trail the
+/// store by up to `k` updates), `Grads` ships `∂partials` plus the
+/// post-head-update weights the backward rebuild marshals from. In the
+/// modeled system each partition owns its weights locally (model
+/// parallelism), so snapshot distribution is an in-process artifact of
+/// the single-machine harness, not wire traffic — only the 2·[B,H]
+/// gradients count.
 #[derive(Clone)]
 enum Down {
     Grads {
+        bi: usize,
         g1: Vec<f32>,
         g2: Vec<f32>,
         params: Arc<ParamSnapshot>,
     },
     Ready {
+        bi: usize,
         params: Arc<ParamSnapshot>,
     },
 }
@@ -137,6 +187,15 @@ pub fn run_epoch(
     let cfg = sess.cfg.clone();
     let parts = mp.num_parts;
     let pipeline = cfg.train.pipeline;
+    // The staleness window rides the pipeline: with pipelining disabled
+    // the runtime is the synchronous A/B baseline.
+    let staleness = if pipeline { cfg.train.staleness } else { 0 };
+    if staleness > 0 && !cfg.train.dedup_fetch {
+        bail!(
+            "train.staleness = {staleness} requires train.dedup_fetch (the backward \
+             rebuild reuses the forward's staged rows)"
+        );
+    }
     let g = Arc::clone(&sess.g);
     let tree = Arc::clone(&sess.tree);
 
@@ -183,7 +242,9 @@ pub fn run_epoch(
             let world = &world;
             let batches = &batches;
             handles.push(s.spawn(move || {
-                worker_loop(ctx, plan, world, mp, epoch, batches, &port, &bport, pipeline)
+                worker_loop(
+                    ctx, plan, world, mp, epoch, batches, &port, &bport, pipeline, staleness,
+                )
             }));
         }
         let led = leader_loop(
@@ -201,6 +262,7 @@ pub fn run_epoch(
             parts,
             leader_part,
             pipeline,
+            staleness,
         );
         let mut worker_err: Option<anyhow::Error> = None;
         for h in handles {
@@ -240,8 +302,10 @@ pub fn run_epoch(
     report
 }
 
-/// Runs the worker body; on error, ships a best-effort death notice so
-/// the leader's gather fails fast instead of blocking on a dead peer.
+/// Runs the worker body; on error (or panic), ships a best-effort death
+/// notice naming the batch that was in flight so the leader's gather
+/// fails fast — with the root cause — instead of blocking on a dead
+/// peer or reporting a bare hangup.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     ctx: &mut ExecContext,
@@ -253,23 +317,36 @@ fn worker_loop(
     port: &Port<Up, Down>,
     bport: &Port<(), ()>,
     pipeline: bool,
+    staleness: usize,
 ) -> Result<()> {
-    // Contain panics too: a panicked worker that never notified the
-    // leader would leave the gather blocked while live peers keep the
-    // channel connected.
     let p = ctx.worker;
-    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        worker_run(ctx, plan, world, mp, epoch, batches, port, bport, pipeline)
-    }));
-    let r = caught.unwrap_or_else(|_| Err(anyhow!("worker {p} panicked")));
-    if let Err(e) = &r {
-        let _ = port.send(Up::Failed(format!("{e:#}")));
-    }
-    r
+    // The batch cursor outlives a panic's unwinding, so the death
+    // notice still names the batch in flight.
+    let cur = AtomicUsize::new(NO_BATCH);
+    run_contained(
+        p,
+        &cur,
+        || {
+            if staleness == 0 {
+                worker_run_sync(ctx, plan, world, mp, epoch, batches, port, bport, pipeline, &cur)
+            } else {
+                worker_run_windowed(
+                    ctx, plan, world, mp, epoch, batches, port, bport, staleness, &cur,
+                )
+            }
+        },
+        |bi, msg| {
+            let _ = port.send(Up::Failed { bi, msg });
+        },
+    )
 }
 
+/// The synchronous (`staleness = 0`) worker: strict Ready → forward →
+/// Grads → backward alternation, with the double-buffered prefetch of
+/// batch `i+1`'s sample (and dedup frontier) hidden inside the leader
+/// phase when `pipeline` is on. Byte-for-byte the pre-window protocol.
 #[allow(clippy::too_many_arguments)]
-fn worker_run(
+fn worker_run_sync(
     ctx: &mut ExecContext,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
@@ -279,6 +356,7 @@ fn worker_run(
     port: &Port<Up, Down>,
     bport: &Port<(), ()>,
     pipeline: bool,
+    cur: &AtomicUsize,
 ) -> Result<()> {
     bport.barrier()?;
     let p = ctx.worker;
@@ -286,6 +364,9 @@ fn worker_run(
     let scale = cfg.cost.compute_scale;
     let ntypes = world.g.schema.node_types.len();
     let wp = &plan.workers[p];
+    // One arena serves every batch: forward stages it, the same batch's
+    // backward scatters from it before the next forward begins.
+    let mut arena = BatchArena::new();
     // Per-thread dedup-frontier scratch; `spare` lets two frontier
     // allocations ping-pong with the double-buffered prefetch (the
     // in-flight batch holds one while the prefetch fills the other).
@@ -293,11 +374,19 @@ fn worker_run(
     let mut prefetched: Option<(TreeSample, Option<Frontier>, f64)> = None;
 
     for (bi, chunk) in batches.iter().enumerate() {
+        cur.store(bi, Ordering::Relaxed);
         // Batch i's forward needs batch i-1's updated weights: the
         // Ready release carries the current parameter snapshot.
         let snapshot = match port.recv()? {
-            Down::Ready { params } => params,
-            Down::Grads { .. } => bail!("worker {p}: gradients arrived before Ready"),
+            Down::Ready { bi: rbi, params } => {
+                if rbi != bi {
+                    bail!("worker {p}: Ready for batch {rbi} arrived while expecting batch {bi}");
+                }
+                params
+            }
+            Down::Grads { bi: gbi, .. } => {
+                bail!("worker {p}: batch {gbi} gradients arrived before batch {bi}'s Ready")
+            }
         };
         let (sample, frontier, sample_s) = match prefetched.take() {
             Some(s) => s,
@@ -330,8 +419,10 @@ fn worker_run(
             frontier.as_ref(),
             chunk,
             sample_s,
+            &mut arena,
         )?;
         port.send(Up::Fwd {
+            bi,
             p1: fwd.p1,
             p2: fwd.p2,
             stats: fwd.stats,
@@ -364,8 +455,15 @@ fn worker_run(
 
         // ---- backward stage: ∂partials + the post-head-update snapshot ----
         let (g1, g2, snapshot) = match port.recv()? {
-            Down::Grads { g1, g2, params } => (g1, g2, params),
-            Down::Ready { .. } => bail!("worker {p}: Ready arrived before gradients"),
+            Down::Grads { bi: gbi, g1, g2, params } => {
+                if gbi != bi {
+                    bail!("worker {p}: gradients for batch {gbi} arrived while expecting {bi}");
+                }
+                (g1, g2, params)
+            }
+            Down::Ready { bi: rbi, .. } => {
+                bail!("worker {p}: batch {rbi} Ready arrived before batch {bi}'s gradients")
+            }
         };
         let bwd = wp.raf_backward(
             ctx,
@@ -376,11 +474,14 @@ fn worker_run(
             chunk,
             g1,
             g2,
+            &mut arena,
         )?;
         port.send(Up::Bwd {
+            bi,
             grads: bwd.grads,
             bwd_s: bwd.bwd_s,
             stages: bwd.stages,
+            wall_bwd: bwd.wall_bwd,
         })?;
         // Batch done; recycle the frontier allocation for a later
         // prefetch (the i+1 prefetch above already took the other one).
@@ -391,9 +492,135 @@ fn worker_run(
     Ok(())
 }
 
+/// The windowed (`staleness = k >= 1`) worker: a resumable per-batch
+/// state machine driven by the leader's message order. A `Ready`
+/// release opens a batch — sample, marshal and execute its forward
+/// against the shipped snapshot, then park it as [`InFlight`] — and a
+/// `Grads` scatter closes the oldest open batch with its backward. The
+/// leader interleaves releases ahead of scatters (forward of `i+k`
+/// before backward of `i`), which is exactly the 1F1B schedule; up to
+/// `k + 1` batches are open at once, each owning its arena so backward
+/// rebuilds scatter from their own forward's staged rows.
+#[allow(clippy::too_many_arguments)]
+fn worker_run_windowed(
+    ctx: &mut ExecContext,
+    plan: &BatchPlan,
+    world: &EpochWorld<'_>,
+    mp: &MetaPartition,
+    epoch: usize,
+    batches: &[Vec<NodeId>],
+    port: &Port<Up, Down>,
+    bport: &Port<(), ()>,
+    staleness: usize,
+    cur: &AtomicUsize,
+) -> Result<()> {
+    bport.barrier()?;
+    let p = ctx.worker;
+    let cfg: &Config = world.cfg;
+    let scale = cfg.cost.compute_scale;
+    let ntypes = world.g.schema.node_types.len();
+    let wp = &plan.workers[p];
+    let mut open: VecDeque<InFlight> = VecDeque::with_capacity(staleness + 1);
+    let mut arena_pool: Vec<BatchArena> = Vec::new();
+    let mut frontier_pool: Vec<Frontier> = Vec::new();
+    let mut next_ready = 0usize; // releases arrive in batch order
+    let mut completed = 0usize;
+
+    while completed < batches.len() {
+        match port.recv()? {
+            Down::Ready { bi, params } => {
+                if bi != next_ready {
+                    bail!("worker {p}: release for batch {bi} arrived, expected {next_ready}");
+                }
+                next_ready += 1;
+                cur.store(bi, Ordering::Relaxed);
+                let chunk = &batches[bi];
+                let t0 = Instant::now();
+                let filter = partition_edge_filter(world.tree, mp, p);
+                let sample = sample_tree(
+                    world.g,
+                    world.tree,
+                    &cfg.model.fanouts,
+                    chunk,
+                    0,
+                    cfg.train.batch_seed(epoch, bi),
+                    filter,
+                );
+                let frontier = cfg.train.dedup_fetch.then(|| {
+                    let mut spare = frontier_pool.pop();
+                    Frontier::take_rebuilt(&mut spare, world.tree, &sample, ntypes, wp.needs_root)
+                });
+                let sample_s = t0.elapsed().as_secs_f64() * scale;
+                let mut arena = arena_pool.pop().unwrap_or_default();
+                let fwd = wp.raf_forward(
+                    ctx,
+                    world,
+                    ParamsView::Snapshot(&params),
+                    &sample,
+                    frontier.as_ref(),
+                    chunk,
+                    sample_s,
+                    &mut arena,
+                )?;
+                port.send(Up::Fwd {
+                    bi,
+                    p1: fwd.p1,
+                    p2: fwd.p2,
+                    stats: fwd.stats,
+                    span: fwd.span,
+                    stages: fwd.stages,
+                    wall_fwd: fwd.wall_fwd,
+                })?;
+                open.push_back(InFlight {
+                    bi,
+                    sample,
+                    frontier,
+                    arena,
+                });
+            }
+            Down::Grads { bi, g1, g2, params } => {
+                let mut inflight = open.pop_front().ok_or_else(|| {
+                    anyhow!("worker {p}: gradients for batch {bi} with no batch in flight")
+                })?;
+                if inflight.bi != bi {
+                    bail!(
+                        "worker {p}: gradients for batch {bi} but batch {} is the oldest in flight",
+                        inflight.bi
+                    );
+                }
+                cur.store(bi, Ordering::Relaxed);
+                let bwd = wp.raf_backward(
+                    ctx,
+                    world,
+                    ParamsView::Snapshot(&params),
+                    &inflight.sample,
+                    inflight.frontier.as_ref(),
+                    &batches[bi],
+                    g1,
+                    g2,
+                    &mut inflight.arena,
+                )?;
+                port.send(Up::Bwd {
+                    bi,
+                    grads: bwd.grads,
+                    bwd_s: bwd.bwd_s,
+                    stages: bwd.stages,
+                    wall_bwd: bwd.wall_bwd,
+                })?;
+                arena_pool.push(inflight.arena);
+                if let Some(f) = inflight.frontier {
+                    frontier_pool.push(f);
+                }
+                completed += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
 #[allow(clippy::too_many_arguments)]
 fn leader_loop(
-    hub: Hub<Up, Down>,
+    mut hub: Hub<Up, Down>,
     bhub: Hub<(), ()>,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
@@ -407,35 +634,49 @@ fn leader_loop(
     parts: usize,
     leader_part: usize,
     pipeline: bool,
+    staleness: usize,
 ) -> Result<EpochReport> {
     bhub.barrier()?;
     let cfg = world.cfg;
     let b = cfg.train.batch_size;
     let h = cfg.model.hidden;
+    let n = batches.len();
     let mut net = SimNet::new(parts, cfg.cost.clone());
     let mut timeline = EpochTimeline::new(parts);
     let mut stages = StageTimes::default();
     let mut worker_stages = vec![StageTimes::default(); parts];
     let mut wall = WallClock::new(parts);
+    let mut leader_arena = BatchArena::new();
     let mut loss_sum = 0.0f64;
     let mut acc_sum = 0.0f64;
+    let mut batch_losses = Vec::with_capacity(n);
     let mut batches_done = 0usize;
     let mut fetch = FetchStats::default();
 
-    // Release batch 0 with the initial weights.
-    hub.broadcast(Down::Ready {
-        params: Arc::new(params.snapshot()),
-    })?;
+    // Prime the release window: the synchronous protocol opens batch 0
+    // only; a k-window opens k batches up front (batch j's snapshot then
+    // trails by j <= k updates — within the bound).
+    let mut released = 0usize;
+    for _ in 0..staleness.max(1).min(n) {
+        hub.broadcast(Down::Ready {
+            bi: released,
+            params: Arc::new(params.snapshot()),
+        })?;
+        released += 1;
+    }
 
     for (bi, chunk) in batches.iter().enumerate() {
         // ---- gather worker partials (worker-id order) ----
-        let ups = hub.gather()?;
+        let ups = hub
+            .gather_round(fwd_round(bi), up_tag)
+            .with_context(|| format!("batch {bi}: collecting forward partials"))?;
         let wire: Vec<u64> = ups.iter().map(|u| u.wire_bytes()).collect();
         let mut partial_sums = [vec![0f32; b * h], vec![0f32; b * h]];
         let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
         for (w, up) in ups.into_iter().enumerate() {
             match up {
                 Up::Fwd {
+                    bi: ubi,
                     p1,
                     p2,
                     stats,
@@ -443,6 +684,9 @@ fn leader_loop(
                     stages: wstages,
                     wall_fwd,
                 } => {
+                    if ubi != bi {
+                        bail!("protocol error: batch {ubi} partials in batch {bi}'s round");
+                    }
                     add_assign(&mut partial_sums[0], &p1);
                     add_assign(&mut partial_sums[1], &p2);
                     fetch.merge(stats);
@@ -451,9 +695,33 @@ fn leader_loop(
                     worker_stages[w].merge(&wstages);
                     wall.record_forward(w, wall_fwd);
                 }
-                Up::Bwd { .. } => bail!("protocol error: Bwd before Fwd from worker {w}"),
-                Up::Failed(msg) => bail!("worker {w} failed: {msg}"),
+                Up::Bwd { bi: ubi, .. } => {
+                    bail!("protocol error: batch {ubi} gradients in batch {bi}'s forward round")
+                }
+                Up::Failed { .. } => unreachable!("gather_round aborts on Failed"),
             }
+        }
+        // ---- async release: batch bi+k goes out the moment batch bi's
+        // partials landed, so its forward overlaps this batch's leader
+        // phase, backward and update (staleness <= k by construction:
+        // the snapshot carries every update through batch bi-1).
+        //
+        // No explicit store barrier is needed here (unlike the vanilla
+        // engine's `Marshaled` notice): this batch's update — the next
+        // store write — runs only after the backward gather below, a
+        // worker ships its backward only after processing every earlier
+        // Down message, and this release is sent *before* the gradient
+        // scatter. So by the time `Bwd(bi)` arrives from worker w, w has
+        // finished marshalling (store reads included) every batch
+        // released so far — the backward gather IS the barrier, and
+        // every marshal deterministically sees the updates through its
+        // own release point. ----
+        if staleness >= 1 && released < n {
+            hub.broadcast(Down::Ready {
+                bi: released,
+                params: Arc::new(params.snapshot()),
+            })?;
+            released += 1;
         }
         // The leader partition's partials are machine-local.
         let gather_bytes: Vec<u64> = wire
@@ -473,6 +741,7 @@ fn leader_loop(
             fork_leader.as_deref_mut(),
             &partial_sums,
             chunk,
+            &mut leader_arena,
         )?;
         fetch.merge(lo.stats);
         stages.add(Stage::Forward, lo.leader_s * 0.5);
@@ -480,36 +749,52 @@ fn leader_loop(
         stages.add(Stage::Update, lo.head_update_s);
         loss_sum += lo.loss;
         acc_sum += lo.acc;
+        batch_losses.push(lo.loss);
 
         // ---- scatter gradients back (2 tensors per worker, symmetric),
         // with the post-head-update snapshot the backward marshals from ----
         let t_scatter = net.gather(leader_part, &gather_bytes)?;
         stages.add(Stage::Backward, t_scatter);
+        let grads_snapshot = Arc::new(params.snapshot());
+        let grads_version = grads_snapshot.version;
         hub.broadcast(Down::Grads {
+            bi,
             g1: lo.g1,
             g2: lo.g2,
-            params: Arc::new(params.snapshot()),
+            params: grads_snapshot,
         })?;
 
-        // ---- gather worker gradients (worker-id order) ----
-        let ups = hub.gather()?;
-        let mut gacc = GradAccumulator::default();
+        // ---- gather worker gradients (worker-id order), holding every
+        // fold to the snapshot version this batch's scatter shipped ----
+        let ups = hub
+            .gather_round(bwd_round(bi), up_tag)
+            .with_context(|| format!("batch {bi}: collecting worker gradients"))?;
+        let mut gacc = GradAccumulator::for_version(grads_version);
         for (w, up) in ups.into_iter().enumerate() {
             match up {
                 Up::Bwd {
+                    bi: ubi,
                     grads,
                     bwd_s,
                     stages: wstages,
+                    wall_bwd,
                 } => {
-                    gacc.absorb(grads);
+                    if ubi != bi {
+                        bail!("protocol error: batch {ubi} gradients in batch {bi}'s round");
+                    }
+                    gacc.absorb(grads)
+                        .with_context(|| format!("batch {bi}, worker {w}"))?;
                     if let Some(span) = worker_spans.get_mut(w) {
                         span.bwd_s = bwd_s;
                     }
                     stages.merge(&wstages);
                     worker_stages[w].merge(&wstages);
+                    wall.record_backward(w, wall_bwd);
                 }
-                Up::Fwd { .. } => bail!("protocol error: Fwd before Bwd from worker {w}"),
-                Up::Failed(msg) => bail!("worker {w} failed: {msg}"),
+                Up::Fwd { bi: ubi, .. } => {
+                    bail!("protocol error: batch {ubi} partials in batch {bi}'s backward round")
+                }
+                Up::Failed { .. } => unreachable!("gather_round aborts on Failed"),
             }
         }
 
@@ -546,15 +831,20 @@ fn leader_loop(
             },
         );
         batches_done += 1;
-        if bi + 1 < batches.len() {
+        // ---- synchronous release: batch bi+1 waits for this update ----
+        if staleness == 0 && released < n {
             hub.broadcast(Down::Ready {
+                bi: released,
                 params: Arc::new(params.snapshot()),
             })?;
+            released += 1;
         }
     }
 
     let epoch_time_s = timeline.sequential_time();
-    let critical_path_s = if pipeline {
+    let critical_path_s = if staleness >= 1 {
+        timeline.async_pipelined_time(staleness, AsyncShape::Raf)
+    } else if pipeline {
         timeline.pipelined_time()
     } else {
         epoch_time_s
@@ -579,5 +869,6 @@ fn leader_loop(
             f64::NAN
         },
         batches: batches_done,
+        batch_losses,
     })
 }

@@ -9,42 +9,62 @@
 //! `train.pipeline` on, workers prefetch batch `i+1`'s sample while the
 //! leader runs batch `i`'s all-reduce + update phase.
 //!
+//! `train.staleness = k >= 1` opens the async window (PR 4): the
+//! leader releases batch `i+k` right after gathering batch `i`'s step
+//! results, so workers sample+marshal+execute later batches — against
+//! snapshots missing at most `k` updates — while the leader is still
+//! applying batch `i`'s updates. The fused step has no separate
+//! backward, so the determinism question is the **feature store**: a
+//! marshal overlapping an update would read learnable rows racily.
+//! The windowed worker therefore splits the stage at its resumable
+//! point — marshal, announce `Marshaled`, then execute — and the
+//! leader's update waits for the `Marshaled` notice of *every released
+//! batch* before writing the store. Each marshal then deterministically
+//! sees exactly the updates through batch `i - k - 1`, while artifact
+//! execution (the long half) still overlaps the update window. All
+//! contributions are batch-tagged; fast workers run whole rounds ahead
+//! and the leader's gather parks them ([`Hub::gather_round`]).
+//!
 //! The runtime is lock-free: workers charge nothing to shared ledgers —
 //! they ship their remote-byte counts up with the step results, and the
 //! leader (the only owner of the [`SimNet`]) charges them in worker-id
-//! order, exactly matching the sequential engine's totals.
-//!
-//! As with the RAF port, every reduction folds in (worker, output)
-//! order, so losses and parameter trajectories are byte-identical to
-//! the sequential vanilla engine.
+//! order, exactly matching the sequential engine's totals. As with the
+//! RAF port, every reduction folds in (worker, output) order — pinned
+//! per batch to the released snapshot's version — so at staleness 0
+//! losses and parameter trajectories are byte-identical to the
+//! sequential vanilla engine.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::comm::{Lane, SimNet};
 use crate::config::Config;
 use crate::coordinator::common::Session;
 use crate::exec::plan::vanilla_apply_updates;
-use crate::exec::{BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView};
+use crate::exec::{
+    BatchArena, BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView,
+};
 use crate::hetgraph::NodeId;
 use crate::kvstore::FetchStats;
-use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
+use crate::metrics::timeline::{AsyncShape, EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::partition::NodePartition;
 use crate::runtime::ParamSnapshot;
 use crate::sampling::{remote_counts, sample_tree, Frontier, TreeSample};
 use crate::util::rng::Rng;
 
-use super::collective::{star, Hub, Port};
+use super::collective::{run_contained, star, Hub, Port, RoundTag, NO_BATCH};
 use super::mailbox::Wire;
 
-/// Worker → leader message: one fused train step's results.
+/// One fused train step's results.
 struct StepMsg {
     loss: f64,
     acc: f64,
-    /// Unreduced gradient outputs (leader folds in worker order).
+    /// Unreduced gradient outputs (leader folds in worker order,
+    /// version-pinned to the batch's released snapshot).
     grads: crate::exec::WorkerGrads,
     /// KV-store fetch accounting of this worker's input build (unique
     /// rows per batch when dedup gather is on; `remote_bytes` is what
@@ -58,19 +78,47 @@ struct StepMsg {
     wall_fwd: (f64, f64),
 }
 
-impl Wire for StepMsg {
-    fn wire_bytes(&self) -> u64 {
-        // Dense gradients move via the ring all-reduce the leader
-        // charges to every worker ledger (the modeled system never
-        // ships raw per-worker grads to a coordinator).
-        0
+/// Worker → leader messages, batch-tagged for the round gather.
+enum Up {
+    /// Store barrier notice of the windowed schedule: this worker's
+    /// feature-store reads for batch `bi` are done (its marshal
+    /// finished; execution may still be running). The leader may not
+    /// write the store while any released batch is unmarshalled.
+    /// Never sent by the synchronous protocol.
+    Marshaled { bi: usize },
+    Step { bi: usize, msg: Box<StepMsg> },
+    /// Best-effort death notice naming the in-flight batch: without it
+    /// a leader gathering from a dead worker would block forever while
+    /// live workers keep the channel connected.
+    Failed { bi: usize, msg: String },
+}
+
+/// Gather rounds: up to two per batch — the marshal notice, then the
+/// step results.
+fn marshal_round(bi: usize) -> u64 {
+    2 * bi as u64
+}
+fn step_round(bi: usize) -> u64 {
+    2 * bi as u64 + 1
+}
+
+fn up_tag(u: &Up) -> RoundTag {
+    match u {
+        Up::Marshaled { bi } => RoundTag::Round(marshal_round(*bi)),
+        Up::Step { bi, .. } => RoundTag::Round(step_round(*bi)),
+        Up::Failed { bi, msg } => RoundTag::abort_for(*bi, msg),
     }
 }
 
-/// `Err` is a worker's best-effort death notice: without it a leader
-/// gathering from a dead worker would block forever while live workers
-/// keep the channel connected.
-type StepResult = std::result::Result<StepMsg, String>;
+impl Wire for Up {
+    fn wire_bytes(&self) -> u64 {
+        // Dense gradients move via the ring all-reduce the leader
+        // charges to every worker ledger (the modeled system never
+        // ships raw per-worker grads to a coordinator); the marshal
+        // notice and death notice are control metadata.
+        0
+    }
+}
 
 /// Batch release carrying the post-update parameter snapshot every
 /// replica applies identically (data parallelism); snapshot
@@ -78,6 +126,7 @@ type StepResult = std::result::Result<StepMsg, String>;
 /// harness — the all-reduce already priced the gradient exchange.
 #[derive(Clone)]
 struct ReadyMsg {
+    bi: usize,
     params: Arc<ParamSnapshot>,
 }
 
@@ -101,6 +150,9 @@ pub fn run_epoch(
     let b = cfg.train.batch_size;
     let vb = (b / parts).max(1);
     let pipeline = cfg.train.pipeline;
+    // The staleness window rides the pipeline: with pipelining disabled
+    // the runtime is the synchronous A/B baseline.
+    let staleness = if pipeline { cfg.train.staleness } else { 0 };
     let g = Arc::clone(&sess.g);
     let tree = Arc::clone(&sess.tree);
 
@@ -131,7 +183,7 @@ pub fn run_epoch(
     let params = &mut sess.params;
     let adam_t = &mut sess.adam_t;
 
-    let (hub, ports) = star::<StepResult, ReadyMsg>(parts);
+    let (hub, ports) = star::<Up, ReadyMsg>(parts);
     let (bhub, bports) = star::<(), ()>(parts);
 
     std::thread::scope(|s| {
@@ -141,12 +193,12 @@ pub fn run_epoch(
             let batches = &batches;
             handles.push(s.spawn(move || {
                 worker_loop(
-                    ctx, plan, world, part, vb, epoch, batches, &port, &bport, pipeline,
+                    ctx, plan, world, part, vb, epoch, batches, &port, &bport, pipeline, staleness,
                 )
             }));
         }
         let led = leader_loop(
-            hub, bhub, &world, params, adam_t, parts, vb, &batches, pipeline,
+            hub, bhub, &world, params, adam_t, parts, vb, &batches, pipeline, staleness,
         );
         let mut worker_err: Option<anyhow::Error> = None;
         for h in handles {
@@ -165,8 +217,8 @@ pub fn run_epoch(
             }
         }
         // The leader's error already embeds worker root causes (via
-        // the `Err` death notice), so it wins; worker errors cover the
-        // remainder.
+        // the `Failed` death notice), so it wins; worker errors cover
+        // the remainder.
         match (led, worker_err) {
             (Ok(rep), None) => Ok(rep),
             (Err(e), _) => Err(e),
@@ -175,8 +227,9 @@ pub fn run_epoch(
     })
 }
 
-/// Runs the worker body; on error, ships a best-effort death notice so
-/// the leader's gather fails fast instead of blocking on a dead peer.
+/// Runs the worker body; on error (or panic), ships a best-effort death
+/// notice naming the in-flight batch so the leader's gather fails fast
+/// with the root cause instead of blocking on a dead peer.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     ctx: &mut ExecContext,
@@ -186,26 +239,38 @@ fn worker_loop(
     vb: usize,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    port: &Port<StepResult, ReadyMsg>,
+    port: &Port<Up, ReadyMsg>,
     bport: &Port<(), ()>,
     pipeline: bool,
+    staleness: usize,
 ) -> Result<()> {
-    // Contain panics too: a panicked worker that never notified the
-    // leader would leave the gather blocked while live peers keep the
-    // channel connected.
     let w = ctx.worker;
-    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        worker_run(ctx, plan, world, part, vb, epoch, batches, port, bport, pipeline)
-    }));
-    let r = caught.unwrap_or_else(|_| Err(anyhow!("worker {w} panicked")));
-    if let Err(e) = &r {
-        let _ = port.send(Err(format!("{e:#}")));
-    }
-    r
+    // The batch cursor outlives a panic's unwinding, so the death
+    // notice still names the batch in flight.
+    let cur = AtomicUsize::new(NO_BATCH);
+    run_contained(
+        w,
+        &cur,
+        || {
+            if staleness == 0 {
+                worker_run_sync(
+                    ctx, plan, world, part, vb, epoch, batches, port, bport, pipeline, &cur,
+                )
+            } else {
+                worker_run_windowed(ctx, plan, world, part, vb, epoch, batches, port, bport, &cur)
+            }
+        },
+        |bi, msg| {
+            let _ = port.send(Up::Failed { bi, msg });
+        },
+    )
 }
 
+/// The synchronous (`staleness = 0`) worker: one fused step per
+/// release, with the double-buffered sample prefetch when `pipeline`
+/// is on. Byte-for-byte the pre-window protocol (no marshal notices).
 #[allow(clippy::too_many_arguments)]
-fn worker_run(
+fn worker_run_sync(
     ctx: &mut ExecContext,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
@@ -213,9 +278,10 @@ fn worker_run(
     vb: usize,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    port: &Port<StepResult, ReadyMsg>,
+    port: &Port<Up, ReadyMsg>,
     bport: &Port<(), ()>,
     pipeline: bool,
+    cur: &AtomicUsize,
 ) -> Result<()> {
     bport.barrier()?;
     let w = ctx.worker;
@@ -225,13 +291,21 @@ fn worker_run(
     let parts = part.num_parts;
     let ntypes = world.g.schema.node_types.len();
     let wp = &plan.workers[w];
+    // One arena serves every batch (the fused step has no backward to
+    // keep staging alive for).
+    let mut arena = BatchArena::new();
     // Per-thread dedup-frontier scratch; `spare` lets one frontier
     // allocation ping-pong with the double-buffered prefetch.
     let mut spare: Option<Frontier> = None;
     let mut prefetched: Option<(TreeSample, Option<Frontier>, f64)> = None;
 
     for (bi, chunk) in batches.iter().enumerate() {
-        let snapshot = port.recv()?.params;
+        cur.store(bi, Ordering::Relaxed);
+        let ready = port.recv()?;
+        if ready.bi != bi {
+            bail!("worker {w}: release for batch {} arrived while expecting {bi}", ready.bi);
+        }
+        let snapshot = ready.params;
         let micro = &chunk[w * vb..(w + 1) * vb];
         let batch_seed = cfg.train.batch_seed(epoch, bi);
 
@@ -276,17 +350,21 @@ fn worker_run(
             frontier.as_ref(),
             micro,
             sample_s,
+            &mut arena,
         )?;
-        port.send(Ok(StepMsg {
-            loss: step.loss,
-            acc: step.acc,
-            grads: step.grads,
-            stats: step.stats,
-            sample_remote_bytes: rstats.remote * 8,
-            span: step.span,
-            stages: step.stages,
-            wall_fwd: step.wall_fwd,
-        }))?;
+        port.send(Up::Step {
+            bi,
+            msg: Box::new(StepMsg {
+                loss: step.loss,
+                acc: step.acc,
+                grads: step.grads,
+                stats: step.stats,
+                sample_remote_bytes: rstats.remote * 8,
+                span: step.span,
+                stages: step.stages,
+                wall_fwd: step.wall_fwd,
+            }),
+        })?;
         // This batch's frontier is done; recycle its allocation for the
         // prefetch below (ping-pong, no steady-state allocation).
         if let Some(f) = frontier {
@@ -318,9 +396,107 @@ fn worker_run(
     Ok(())
 }
 
+/// The windowed (`staleness >= 1`) worker: per release, sample and
+/// marshal the batch, announce `Marshaled` (the leader's store
+/// barrier), then execute and ship the step results. Releases queue up
+/// in the mailbox while the worker grinds, so no separate prefetch is
+/// needed — the window itself provides the run-ahead.
+#[allow(clippy::too_many_arguments)]
+fn worker_run_windowed(
+    ctx: &mut ExecContext,
+    plan: &BatchPlan,
+    world: &EpochWorld<'_>,
+    part: &NodePartition,
+    vb: usize,
+    epoch: usize,
+    batches: &[Vec<NodeId>],
+    port: &Port<Up, ReadyMsg>,
+    bport: &Port<(), ()>,
+    cur: &AtomicUsize,
+) -> Result<()> {
+    bport.barrier()?;
+    let w = ctx.worker;
+    let cfg: &Config = world.cfg;
+    let scale = cfg.cost.compute_scale;
+    let layers = cfg.model.layers;
+    let parts = part.num_parts;
+    let ntypes = world.g.schema.node_types.len();
+    let wp = &plan.workers[w];
+    let mut arena = BatchArena::new();
+    let mut spare: Option<Frontier> = None;
+
+    for (bi, chunk) in batches.iter().enumerate() {
+        cur.store(bi, Ordering::Relaxed);
+        let ready = port.recv()?;
+        if ready.bi != bi {
+            bail!("worker {w}: release for batch {} arrived while expecting {bi}", ready.bi);
+        }
+        let snapshot = ready.params;
+        let micro = &chunk[w * vb..(w + 1) * vb];
+
+        let t0 = Instant::now();
+        let sample = sample_tree(
+            world.g,
+            world.tree,
+            &cfg.model.fanouts,
+            micro,
+            w * vb,
+            cfg.train.batch_seed(epoch, bi),
+            |_| true,
+        );
+        let frontier = cfg
+            .train
+            .dedup_fetch
+            .then(|| Frontier::take_rebuilt(&mut spare, world.tree, &sample, ntypes, wp.needs_root));
+        let mut sample_s = t0.elapsed().as_secs_f64() * scale;
+        let rstats = remote_counts(world.tree, &sample, part, w);
+        sample_s += cfg.cost.xfer_time_msgs(
+            Lane::Net,
+            rstats.remote * 8,
+            (layers * (parts - 1)).max(1) as u64,
+        );
+
+        // Marshal, announce the store barrier, then execute — one
+        // shared-session token brackets both halves, like the fused
+        // synchronous stage.
+        let step = {
+            let _token = world.serialize();
+            let m = wp.vanilla_marshal(
+                ctx,
+                world,
+                ParamsView::Snapshot(&snapshot),
+                part,
+                &sample,
+                frontier.as_ref(),
+                micro,
+                &mut arena,
+            )?;
+            port.send(Up::Marshaled { bi })?;
+            wp.vanilla_execute(ctx, world, m, part, &sample, micro, sample_s, snapshot.version)?
+        };
+        port.send(Up::Step {
+            bi,
+            msg: Box::new(StepMsg {
+                loss: step.loss,
+                acc: step.acc,
+                grads: step.grads,
+                stats: step.stats,
+                sample_remote_bytes: rstats.remote * 8,
+                span: step.span,
+                stages: step.stages,
+                wall_fwd: step.wall_fwd,
+            }),
+        })?;
+        if let Some(f) = frontier {
+            spare = Some(f);
+        }
+    }
+    Ok(())
+}
+
 #[allow(clippy::too_many_arguments)]
 fn leader_loop(
-    hub: Hub<StepResult, ReadyMsg>,
+    mut hub: Hub<Up, ReadyMsg>,
     bhub: Hub<(), ()>,
     world: &EpochWorld<'_>,
     params: &mut crate::runtime::ParamStore,
@@ -329,8 +505,10 @@ fn leader_loop(
     vb: usize,
     batches: &[Vec<NodeId>],
     pipeline: bool,
+    staleness: usize,
 ) -> Result<EpochReport> {
     bhub.barrier()?;
+    let n = batches.len();
     let mut net = SimNet::new(parts, world.cfg.cost.clone());
     let mut timeline = EpochTimeline::new(parts);
     let mut stages = StageTimes::default();
@@ -338,35 +516,91 @@ fn leader_loop(
     let mut wall = WallClock::new(parts);
     let mut loss_sum = 0.0f64;
     let mut acc_sum = 0.0f64;
+    let mut batch_losses = Vec::with_capacity(n);
     let mut batches_done = 0usize;
     let mut fetch = FetchStats::default();
 
-    // Release batch 0 with the initial weights.
-    hub.broadcast(ReadyMsg {
-        params: Arc::new(params.snapshot()),
-    })?;
+    // Prime the release window (k = 0 opens batch 0 only; a k-window
+    // opens k batches — batch j's snapshot trails by j <= k updates),
+    // recording each released snapshot's version: the fold of batch
+    // bi's gradients is pinned to ready_versions[bi].
+    let mut ready_versions: Vec<u64> = Vec::with_capacity(n);
+    let mut released = 0usize;
+    for _ in 0..staleness.max(1).min(n) {
+        let snap = Arc::new(params.snapshot());
+        ready_versions.push(snap.version);
+        hub.broadcast(ReadyMsg { bi: released, params: snap })?;
+        released += 1;
+    }
+    // Count of batches whose `Marshaled` barrier notice has been
+    // consumed (windowed schedule only).
+    let mut marshal_gathered = 0usize;
 
-    for bi in 0..batches.len() {
-        let msgs = hub.gather()?;
+    for bi in 0..n {
+        let msgs = hub
+            .gather_round(step_round(bi), up_tag)
+            .with_context(|| format!("batch {bi}: collecting step results"))?;
         let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
-        let mut gacc = GradAccumulator::default();
-        for (wid, m) in msgs.into_iter().enumerate() {
-            let m = match m {
-                Ok(m) => m,
-                Err(e) => bail!("worker {wid} failed: {e}"),
+        let mut gacc = GradAccumulator::for_version(ready_versions[bi]);
+        let mut batch_loss = 0.0f64;
+        for (wid, up) in msgs.into_iter().enumerate() {
+            let m = match up {
+                Up::Step { bi: ubi, msg } => {
+                    if ubi != bi {
+                        bail!("protocol error: batch {ubi} step results in batch {bi}'s round");
+                    }
+                    msg
+                }
+                Up::Marshaled { bi: ubi } => {
+                    bail!("protocol error: batch {ubi} marshal notice in batch {bi}'s step round")
+                }
+                Up::Failed { .. } => unreachable!("gather_round aborts on Failed"),
             };
+            let StepMsg {
+                loss,
+                acc,
+                grads,
+                stats,
+                sample_remote_bytes,
+                span,
+                stages: wstages,
+                wall_fwd,
+            } = *m;
             // Charge the worker's remote traffic to its ledger — same
             // calls, same totals as the sequential engine.
-            net.charge(wid, Lane::Net, m.sample_remote_bytes, 0.0)?;
-            net.charge(wid, Lane::Net, m.stats.remote_bytes, 0.0)?;
-            loss_sum += m.loss / parts as f64;
-            acc_sum += m.acc;
-            gacc.absorb(m.grads);
-            fetch.merge(m.stats);
-            worker_spans.push(m.span);
-            stages.merge(&m.stages);
-            worker_stages[wid].merge(&m.stages);
-            wall.record_forward(wid, m.wall_fwd);
+            net.charge(wid, Lane::Net, sample_remote_bytes, 0.0)?;
+            net.charge(wid, Lane::Net, stats.remote_bytes, 0.0)?;
+            batch_loss += loss / parts as f64;
+            acc_sum += acc;
+            gacc.absorb(grads)
+                .with_context(|| format!("batch {bi}, worker {wid}"))?;
+            fetch.merge(stats);
+            worker_spans.push(span);
+            stages.merge(&wstages);
+            worker_stages[wid].merge(&wstages);
+            wall.record_forward(wid, wall_fwd);
+        }
+        loss_sum += batch_loss;
+        batch_losses.push(batch_loss);
+
+        // -- async release: batch bi+k goes out before this batch's
+        // update, bounding its forward snapshot at k missing updates --
+        if staleness >= 1 && released < n {
+            let snap = Arc::new(params.snapshot());
+            ready_versions.push(snap.version);
+            hub.broadcast(ReadyMsg { bi: released, params: snap })?;
+            released += 1;
+        }
+        // -- store barrier: before the update may write learnable rows,
+        // every released batch must have finished marshalling (its
+        // feature reads then deterministically precede this write) --
+        if staleness >= 1 {
+            while marshal_gathered < released {
+                let mbi = marshal_gathered;
+                hub.gather_round(marshal_round(mbi), up_tag)
+                    .with_context(|| format!("batch {mbi}: store-barrier marshal notices"))?;
+                marshal_gathered += 1;
+            }
         }
 
         // -- all-reduce + model + learnable updates (shared stage) --
@@ -385,15 +619,19 @@ fn leader_loop(
             },
         );
         batches_done += 1;
-        if bi + 1 < batches.len() {
-            hub.broadcast(ReadyMsg {
-                params: Arc::new(params.snapshot()),
-            })?;
+        // -- synchronous release: batch bi+1 waits for this update --
+        if staleness == 0 && released < n {
+            let snap = Arc::new(params.snapshot());
+            ready_versions.push(snap.version);
+            hub.broadcast(ReadyMsg { bi: released, params: snap })?;
+            released += 1;
         }
     }
 
     let epoch_time_s = timeline.sequential_time();
-    let critical_path_s = if pipeline {
+    let critical_path_s = if staleness >= 1 {
+        timeline.async_pipelined_time(staleness, AsyncShape::Vanilla)
+    } else if pipeline {
         timeline.pipelined_time()
     } else {
         epoch_time_s
@@ -418,5 +656,6 @@ fn leader_loop(
             f64::NAN
         },
         batches: batches_done,
+        batch_losses,
     })
 }

@@ -116,6 +116,23 @@ pub struct TrainConfig {
     /// either way (reductions fold in worker-id order); only wall-clock
     /// overlap changes — the A/B lever of `benches/exec_overlap.rs`.
     pub shared_session: bool,
+    /// Bounded-staleness window of the async 1F1B pipeline (default 0).
+    /// `0` is the synchronous protocol: batch `i+1` is released only
+    /// after batch `i`'s update, and losses are byte-identical across
+    /// every runtime. `k >= 1` lets the cluster runtime keep up to `k`
+    /// extra batches in flight: batch `i+k` is released right after
+    /// batch `i`'s forward results land, so its marshal+forward runs
+    /// against a parameter snapshot missing at most `k` updates while
+    /// batch `i`'s backward/update are still in progress. The schedule
+    /// stays deterministic (releases and gradient folds keep a fixed
+    /// order), but the trajectory legitimately differs from staleness 0
+    /// — that is the semantics of bounded-staleness training. Requires
+    /// `dedup_fetch` (the backward rebuild reuses the forward's staged
+    /// rows; re-gathering per slot would read rows newer than the
+    /// forward used). The sequential runtime has no overlap to exploit
+    /// and always runs synchronously; with `pipeline = false` the
+    /// cluster runtime does too.
+    pub staleness: usize,
 }
 
 impl TrainConfig {
@@ -200,7 +217,16 @@ impl Config {
             pipeline: t.get("pipeline").as_bool().unwrap_or(true),
             dedup_fetch: t.get("dedup_fetch").as_bool().unwrap_or(true),
             shared_session: t.get("shared_session").as_bool().unwrap_or(false),
+            staleness: t.get("staleness").as_usize().unwrap_or(0),
         };
+        if train.staleness > 0 && !train.dedup_fetch {
+            bail!(
+                "train.staleness = {} requires train.dedup_fetch: the backward pass \
+                 rebuilds its inputs from the forward's staged rows, which is what keeps \
+                 it consistent while the window overlaps feature updates",
+                train.staleness
+            );
+        }
         let mut cost = CostModel::default();
         if let Some(c) = j.get("cost").as_obj() {
             if let Some(v) = c.get("net_gbps").and_then(|v| v.as_f64()) {
@@ -440,6 +466,31 @@ mod tests {
         }"#;
         let cfg = Config::from_json(&parse(text).unwrap()).unwrap();
         assert!(!cfg.train.dedup_fetch);
+    }
+
+    #[test]
+    fn parses_staleness_and_rejects_it_without_dedup() {
+        let cfg = Config::from_json(&parse(TINY).unwrap()).unwrap();
+        assert_eq!(cfg.train.staleness, 0, "synchronous by default");
+        let text = r#"{
+            "name": "x",
+            "dataset": {"preset": "mag", "scale": 1e-4},
+            "model": {"arch": "rgcn", "hidden": 8, "fanouts": [2]},
+            "train": {"batch_size": 8, "runtime": "cluster", "staleness": 2}
+        }"#;
+        let cfg = Config::from_json(&parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.train.staleness, 2);
+        let bad = r#"{
+            "name": "x",
+            "dataset": {"preset": "mag", "scale": 1e-4},
+            "model": {"arch": "rgcn", "hidden": 8, "fanouts": [2]},
+            "train": {"batch_size": 8, "staleness": 1, "dedup_fetch": false}
+        }"#;
+        let err = Config::from_json(&parse(bad).unwrap()).unwrap_err();
+        assert!(
+            err.to_string().contains("dedup_fetch"),
+            "staleness without dedup must explain itself: {err}"
+        );
     }
 
     #[test]

@@ -31,7 +31,9 @@ use crate::cache::{FeatureCache, Policy, TypeProfile};
 use crate::comm::SimNet;
 use crate::config::{partition_edge_filter, RuntimeKind};
 use crate::exec::plan::raf_apply_updates;
-use crate::exec::{BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView};
+use crate::exec::{
+    BatchArena, BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView,
+};
 use crate::kvstore::FetchStats;
 use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
@@ -59,6 +61,12 @@ pub struct RafEngine {
     /// Per-partition dedup frontiers, recycled across batches
     /// (sequential runtime; cluster workers ping-pong their own).
     frontiers: Vec<Frontier>,
+    /// Per-partition marshalling arenas (batch-scoped scratch since the
+    /// exec contexts stopped owning one; the sequential schedule holds
+    /// one batch open per partition). Cluster workers pool their own.
+    arenas: Vec<BatchArena>,
+    /// Scratch for the leader artifact's marshal.
+    leader_arena: BatchArena,
     /// `Some` iff `train.shared_session` — serializes marshal+execute.
     gate: Option<ExecGate>,
 }
@@ -155,6 +163,7 @@ impl RafEngine {
         sess.params
             .ensure_artifacts(&sess.manifest, art_names.iter().map(|s| s.as_str()));
         let frontiers = vec![Frontier::default(); mp.num_parts];
+        let arenas = (0..mp.num_parts).map(|_| BatchArena::new()).collect();
         let gate = sess.cfg.train.shared_session.then(ExecGate::new);
         Ok(RafEngine {
             mp,
@@ -164,6 +173,8 @@ impl RafEngine {
             replica_count,
             leader: 0,
             frontiers,
+            arenas,
+            leader_arena: BatchArena::new(),
             gate,
         })
     }
@@ -191,7 +202,10 @@ impl RafEngine {
     }
 
     /// The sequential (single-thread) driver, kept for A/B comparison:
-    /// plays every worker's stages in turn on one thread.
+    /// plays every worker's stages in turn on one thread. It is the
+    /// synchronous reference — `train.staleness` is a cluster-runtime
+    /// scheduling knob and has no effect here (one thread has no
+    /// leader phase to overlap).
     fn run_epoch_sequential(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
         let cfg = sess.cfg.clone();
         let b = cfg.train.batch_size;
@@ -207,6 +221,7 @@ impl RafEngine {
         let mut wall = WallClock::new(parts);
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
+        let mut batch_losses = Vec::new();
         let mut batches = 0usize;
         let mut fetch = FetchStats::default();
 
@@ -269,6 +284,7 @@ impl RafEngine {
                     frontier,
                     chunk,
                     sample_s,
+                    &mut self.arenas[p],
                 )?;
                 add_assign(&mut partial_sums[0], &fwd.p1);
                 add_assign(&mut partial_sums[1], &fwd.p2);
@@ -297,6 +313,7 @@ impl RafEngine {
                 fork_leader.as_mut(),
                 &partial_sums,
                 chunk,
+                &mut self.leader_arena,
             )?;
             fetch.merge(lo.stats);
             stages.add(Stage::Forward, lo.leader_s * 0.5);
@@ -304,6 +321,7 @@ impl RafEngine {
             stages.add(Stage::Update, lo.head_update_s);
             loss_sum += lo.loss;
             acc_sum += lo.acc;
+            batch_losses.push(lo.loss);
 
             // ---- scatter gradients back (2 tensors per worker) ----
             let t_scatter = net.gather(self.leader, &gather_bytes)?; // symmetric
@@ -324,11 +342,13 @@ impl RafEngine {
                     chunk,
                     lo.g1.clone(),
                     lo.g2.clone(),
+                    &mut self.arenas[p],
                 )?;
                 stages.merge(&bwd.stages);
                 worker_stages[p].merge(&bwd.stages);
                 worker_spans[p].bwd_s = bwd.bwd_s;
-                gacc.absorb(bwd.grads);
+                wall.record_backward(p, bwd.wall_bwd);
+                gacc.absorb(bwd.grads)?;
             }
 
             // ---- update stage (weights + learnable features) ----
@@ -396,6 +416,7 @@ impl RafEngine {
                 f64::NAN
             },
             batches,
+            batch_losses,
         })
     }
 

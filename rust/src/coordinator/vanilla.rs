@@ -25,7 +25,9 @@ use crate::cache::{FeatureCache, Policy, TypeProfile};
 use crate::comm::{Lane, SimNet};
 use crate::config::RuntimeKind;
 use crate::exec::plan::vanilla_apply_updates;
-use crate::exec::{BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView};
+use crate::exec::{
+    BatchArena, BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView,
+};
 use crate::kvstore::FetchStats;
 use crate::metrics::timeline::{EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
@@ -45,6 +47,9 @@ pub struct VanillaEngine {
     /// Per-worker dedup frontiers, recycled across batches (sequential
     /// runtime; cluster workers ping-pong their own).
     frontiers: Vec<Frontier>,
+    /// Per-worker marshalling arenas (batch-scoped scratch since the
+    /// exec contexts stopped owning one).
+    arenas: Vec<BatchArena>,
     /// `Some` iff `train.shared_session` — serializes marshal+execute.
     gate: Option<ExecGate>,
 }
@@ -121,12 +126,14 @@ impl VanillaEngine {
         let plan = BatchPlan::vanilla(&sess.manifest, part.num_parts)?;
         sess.params.ensure_artifacts(&sess.manifest, ["vanilla"]);
         let frontiers = vec![Frontier::default(); part.num_parts];
+        let arenas = (0..part.num_parts).map(|_| BatchArena::new()).collect();
         let gate = sess.cfg.train.shared_session.then(ExecGate::new);
         Ok(VanillaEngine {
             part,
             plan,
             contexts,
             frontiers,
+            arenas,
             gate,
         })
     }
@@ -165,6 +172,7 @@ impl VanillaEngine {
         let mut wall = WallClock::new(parts);
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
+        let mut batch_losses = Vec::new();
         let mut batches = 0usize;
         let mut fetch = FetchStats::default();
 
@@ -187,6 +195,7 @@ impl VanillaEngine {
             }
             let batch_seed = cfg.train.batch_seed(epoch, bi);
             let mut gacc = GradAccumulator::default();
+            let mut batch_loss = 0.0f64;
             let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
 
             for w in 0..parts {
@@ -228,17 +237,20 @@ impl VanillaEngine {
                     frontier,
                     micro,
                     sample_s,
+                    &mut self.arenas[w],
                 )?;
                 net.ledgers[w].charge(Lane::Net, step.stats.remote_bytes, 0.0);
-                loss_sum += step.loss / parts as f64;
+                batch_loss += step.loss / parts as f64;
                 acc_sum += step.acc;
                 fetch.merge(step.stats);
                 stages.merge(&step.stages);
                 worker_stages[w].merge(&step.stages);
                 wall.record_forward(w, step.wall_fwd);
                 worker_spans.push(step.span);
-                gacc.absorb(step.grads);
+                gacc.absorb(step.grads)?;
             }
+            loss_sum += batch_loss;
+            batch_losses.push(batch_loss);
 
             // -- all-reduce + model + learnable updates (shared stage) --
             let upd = vanilla_apply_updates(
@@ -283,6 +295,7 @@ impl VanillaEngine {
                 f64::NAN
             },
             batches,
+            batch_losses,
         })
     }
 

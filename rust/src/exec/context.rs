@@ -11,16 +11,21 @@ use crate::hetgraph::{HetGraph, MetaTree};
 use crate::kvstore::FeatureStore;
 use crate::runtime::{Manifest, ParamSnapshot, ParamStore, Runtime};
 
-use super::marshal::BatchArena;
-
 /// Everything one worker **owns** for artifact execution: its own PJRT
-/// client with its own compiled executables, its partition's feature
-/// cache, and its reusable marshalling scratch. Cluster worker threads
-/// hold an exclusive `&mut ExecContext` for the whole epoch; the
-/// sequential runtime iterates the same contexts one at a time. The
-/// type is `Send` by construction — moving a context to a worker thread
-/// needs no lock, which is the compile-level guarantee
-/// `tests/test_exec_contexts.rs` pins.
+/// client with its own compiled executables and its partition's feature
+/// cache. Cluster worker threads hold an exclusive `&mut ExecContext`
+/// for the whole epoch; the sequential runtime iterates the same
+/// contexts one at a time. The type is `Send` by construction — moving
+/// a context to a worker thread needs no lock, which is the
+/// compile-level guarantee `tests/test_exec_contexts.rs` pins.
+///
+/// Marshalling scratch is *not* part of the context since PR 4: a
+/// [`BatchArena`](super::BatchArena) is scoped to one batch's
+/// forward→backward lifetime, because the staleness window lets a
+/// worker open batch `i+1`'s forward before batch `i`'s backward ran —
+/// two batches' staged rows are then alive at once. Schedulers own the
+/// arenas (one per in-flight batch, recycled through a pool) and pass
+/// them into the stage functions.
 pub struct ExecContext {
     /// Worker / partition id this context belongs to.
     pub worker: usize,
@@ -32,8 +37,6 @@ pub struct ExecContext {
     pub rt: Runtime,
     /// The partition's feature cache (`None` for cache-less baselines).
     pub cache: Option<FeatureCache>,
-    /// Reusable per-batch marshalling scratch.
-    pub arena: BatchArena,
 }
 
 impl ExecContext {
@@ -53,7 +56,6 @@ impl ExecContext {
             gpu,
             rt,
             cache,
-            arena: BatchArena::new(),
         })
     }
 }
@@ -146,6 +148,18 @@ impl<'a> ParamsView<'a> {
             ParamsView::Snapshot(snap) => snap.get(name),
         }
     }
+
+    /// Version of the weights this view reads — the snapshot's stamp,
+    /// or the store's live version for the owner. Gradients produced
+    /// from a view are tagged with it so the accumulator can enforce
+    /// the one-snapshot-per-batch contract (see
+    /// [`crate::exec::plan::GradAccumulator`]).
+    pub fn version(&self) -> u64 {
+        match self {
+            ParamsView::Owner(store) => store.version(),
+            ParamsView::Snapshot(snap) => snap.version,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -158,7 +172,7 @@ mod tests {
         // thread requires no lock. Compile-time assertion.
         fn assert_send<T: Send>() {}
         assert_send::<ExecContext>();
-        assert_send::<BatchArena>();
+        assert_send::<super::super::marshal::BatchArena>();
     }
 
     #[test]
@@ -188,6 +202,7 @@ mod tests {
         let owner = ParamsView::Owner(&store);
         let view = ParamsView::Snapshot(&snap);
         assert_eq!(owner.get("w").unwrap(), view.get("w").unwrap());
+        assert_eq!(owner.version(), view.version(), "fresh snapshot shares the store version");
         assert!(owner.get("nope").is_err());
         assert!(view.get("nope").is_err());
     }

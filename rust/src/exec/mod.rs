@@ -36,6 +36,18 @@
 //!   one-execution-at-a-time behavior for A/B timing. Losses are
 //!   byte-identical across both settings and both runtimes regardless
 //!   (reductions fold in worker-id order).
+//!
+//! PR 4 made the stages **resumable** for the bounded-staleness
+//! pipeline (`train.staleness = k`): arenas are batch-scoped rather
+//! than context-owned (a worker inside the window keeps up to `k + 1`
+//! batches open as [`InFlight`] state, each owning the arena its
+//! backward rebuild scatters from), the vanilla fused step splits at
+//! its marshal/execute boundary (so the windowed worker can announce
+//! its feature-store reads are done — the leader's update barrier),
+//! and every [`WorkerGrads`] carries the `ParamSnapshot` version it was
+//! produced against, which [`GradAccumulator`] enforces per batch (the
+//! stale-gradient contract). At `k = 0` all of this is inert and the
+//! synchronous protocol is reproduced byte-for-byte.
 
 pub mod context;
 pub mod marshal;
@@ -43,4 +55,4 @@ pub mod plan;
 
 pub use context::{EpochWorld, ExecContext, ExecGate, ParamsView};
 pub use marshal::{build_inputs, BatchArena, ExtraInputs, GatherAccounting, MarshalEnv};
-pub use plan::{BatchPlan, GradAccumulator, WorkerGrads, WorkerPlan};
+pub use plan::{BatchPlan, GradAccumulator, InFlight, WorkerGrads, WorkerPlan};

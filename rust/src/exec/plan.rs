@@ -41,7 +41,9 @@ use crate::sampling::{Frontier, TreeSample, PAD};
 use crate::util::{add_assign, scale};
 
 use super::context::{EpochWorld, ExecContext, ParamsView};
-use super::marshal::{build_inputs, edge_child, ExtraInputs, MarshalEnv};
+use super::marshal::{
+    build_inputs, edge_child, BatchArena, ExtraInputs, GatherAccounting, MarshalEnv,
+};
 
 /// One worker role's resolved artifacts within a [`BatchPlan`].
 pub struct WorkerPlan {
@@ -143,6 +145,12 @@ pub struct WorkerGrads {
     /// type — filled only when the caller supplies a remote classifier
     /// (the vanilla update-cost model).
     pub learnable_rows: Vec<(usize, u64, u64)>,
+    /// Version of the [`ParamSnapshot`](crate::runtime::ParamSnapshot)
+    /// (or live store) these gradients were produced against. Under the
+    /// bounded-staleness pipeline every batch's gradients must carry
+    /// one version — the one the leader shipped with that batch — and
+    /// [`GradAccumulator::absorb`] enforces it.
+    pub param_version: u64,
 }
 
 /// Classify one artifact execution's outputs into [`WorkerGrads`] —
@@ -200,6 +208,14 @@ pub fn collect_worker_grads(
 /// Worker-order gradient accumulator: the reduction half of the
 /// exchange stage, shared by every driver. Absorbing in worker-id order
 /// is what keeps float accumulation byte-identical across runtimes.
+///
+/// Since PR 4 the accumulator also enforces the **snapshot-version
+/// contract** of the bounded-staleness pipeline: every gradient it
+/// absorbs must have been produced against the same parameter version —
+/// the one the leader shipped with the batch. A worker that marshalled
+/// its backward from a stale (or future) snapshot is a protocol bug the
+/// fold rejects instead of silently mixing gradients of different
+/// weight states.
 #[derive(Debug, Default)]
 pub struct GradAccumulator {
     pub wgrads: HashMap<String, Vec<f32>>,
@@ -209,10 +225,34 @@ pub struct GradAccumulator {
     /// type → (valid rows, remote rows), merged across workers
     /// (vanilla update-cost model).
     pub learnable_counts: HashMap<usize, (u64, u64)>,
+    /// The parameter version every absorbed gradient must carry.
+    /// `None` (the default) adopts the first gradient's version; the
+    /// cluster leaders pin it to the version they broadcast.
+    expect_version: Option<u64>,
 }
 
 impl GradAccumulator {
-    pub fn absorb(&mut self, wg: WorkerGrads) {
+    /// An accumulator that only accepts gradients produced against
+    /// parameter version `v` (the snapshot the leader shipped with this
+    /// batch's release or gradient scatter).
+    pub fn for_version(v: u64) -> GradAccumulator {
+        GradAccumulator {
+            expect_version: Some(v),
+            ..Default::default()
+        }
+    }
+
+    pub fn absorb(&mut self, wg: WorkerGrads) -> Result<()> {
+        match self.expect_version {
+            None => self.expect_version = Some(wg.param_version),
+            Some(v) if v != wg.param_version => bail!(
+                "stale gradient: produced against parameter version {} but this \
+                 batch's fold expects version {v} (worker marshalled its backward \
+                 from the wrong snapshot)",
+                wg.param_version
+            ),
+            Some(_) => {}
+        }
         for (name, gvec) in wg.wgrads {
             match self.wgrads.get_mut(&name) {
                 Some(acc) => add_assign(acc, &gvec),
@@ -241,6 +281,7 @@ impl GradAccumulator {
             c.0 += rows;
             c.1 += remote;
         }
+        Ok(())
     }
 }
 
@@ -276,6 +317,24 @@ pub struct RafBackward {
     pub grads: WorkerGrads,
     pub bwd_s: f64,
     pub stages: StageTimes,
+    /// Wall-clock marshal+backward-execution interval relative to the
+    /// epoch origin — with a staleness window open, the evidence this
+    /// backward genuinely overlapped a later batch's forward.
+    pub wall_bwd: (f64, f64),
+}
+
+/// One batch a worker holds **open** inside the staleness window: after
+/// its forward shipped, everything the later backward stage still needs
+/// — the sample, its dedup frontier, and the arena whose staging the
+/// backward rebuild scatters from. The windowed cluster schedulers keep
+/// up to `train.staleness + 1` of these per worker and recycle the
+/// arena/frontier allocations through pools when a batch closes; the
+/// synchronous path is the degenerate single-slot case.
+pub struct InFlight {
+    pub bi: usize,
+    pub sample: TreeSample,
+    pub frontier: Option<Frontier>,
+    pub arena: BatchArena,
 }
 
 /// Result of the RAF update stage.
@@ -283,6 +342,22 @@ pub struct RafUpdateOut {
     pub update_s: f64,
     pub lf_s: f64,
     pub sync_bytes: u64,
+}
+
+/// The marshalled-but-not-yet-executed half of one vanilla fused step
+/// (the resumable point of the stage's state machine): the input
+/// literals plus the accounting the execution half folds into its
+/// report. Producing this value means the worker's feature-store reads
+/// for the batch are **done** — exactly what the windowed leader must
+/// know before its update stage may write the store.
+pub struct VanillaMarshal {
+    lits: Vec<xla::Literal>,
+    acc: GatherAccounting,
+    target_learnable: bool,
+    copy_s: f64,
+    fetch_s: f64,
+    /// Wall start of the marshal (epoch-relative).
+    w0: f64,
 }
 
 /// Result of one vanilla fused-step stage.
@@ -306,10 +381,14 @@ pub struct VanillaUpdateOut {
 
 impl WorkerPlan {
     /// RAF stages 1–2 for one worker: marshal the sampled mono-relation
-    /// blocks (dedup-staged through the context's arena) and execute
-    /// the worker-forward artifact, producing the layer partials.
-    /// Meta-partitioning makes every fetch local, hence no remote
-    /// classifier.
+    /// blocks (dedup-staged through the caller's batch arena) and
+    /// execute the worker-forward artifact, producing the layer
+    /// partials. Meta-partitioning makes every fetch local, hence no
+    /// remote classifier. The arena is batch-scoped: the backward stage
+    /// of the *same* batch must be handed the same arena (its staged
+    /// rows are the backward rebuild's source), even when a staleness
+    /// window ran other batches' forwards in between.
+    #[allow(clippy::too_many_arguments)]
     pub fn raf_forward(
         &self,
         ctx: &mut ExecContext,
@@ -319,11 +398,12 @@ impl WorkerPlan {
         frontier: Option<&Frontier>,
         chunk: &[NodeId],
         sample_s: f64,
+        arena: &mut BatchArena,
     ) -> Result<RafForward> {
         let cfg = world.cfg;
         let scale = cfg.cost.compute_scale;
         let gpus = cfg.train.gpus_per_machine.max(1) as f64;
-        ctx.arena.begin_batch(world.g.schema.node_types.len());
+        arena.begin_batch(world.g.schema.node_types.len());
         let _token = world.serialize();
         // Wall span covers marshal + execute: exactly the region the
         // shared-session token serializes, so per-context overlap (and
@@ -350,7 +430,7 @@ impl WorkerPlan {
                 &|_, _| false,
                 ctx.cache.as_mut(),
                 ctx.gpu,
-                &mut ctx.arena,
+                arena,
             )?
         };
         let copy_s = t1.elapsed().as_secs_f64() * scale;
@@ -385,9 +465,12 @@ impl WorkerPlan {
     }
 
     /// RAF stage 4 for one worker: rebuild the batch's inputs from the
-    /// forward pass's staged rows (same batch, same frontier — features
-    /// cannot change until the update stage), execute the
-    /// worker-backward artifact and classify its gradient outputs.
+    /// forward pass's staged rows (same batch, same frontier, same
+    /// arena — the staging is what makes the rebuild independent of
+    /// feature-store updates a staleness window may have applied since),
+    /// execute the worker-backward artifact and classify its gradient
+    /// outputs, tagging them with the snapshot version they were
+    /// produced against.
     #[allow(clippy::too_many_arguments)]
     pub fn raf_backward(
         &self,
@@ -399,6 +482,7 @@ impl WorkerPlan {
         chunk: &[NodeId],
         g1: Vec<f32>,
         g2: Vec<f32>,
+        arena: &mut BatchArena,
     ) -> Result<RafBackward> {
         let cfg = world.cfg;
         let scale = cfg.cost.compute_scale;
@@ -412,6 +496,7 @@ impl WorkerPlan {
         extra.insert(("grad".into(), 1), g1);
         extra.insert(("grad".into(), 2), g2);
         let _token = world.serialize();
+        let w0 = world.now();
         let t5 = Instant::now();
         let (lits, _) = {
             let store = world.store();
@@ -432,12 +517,13 @@ impl WorkerPlan {
                 &|_, _| false,
                 None, // rows already resident from forward
                 ctx.gpu,
-                &mut ctx.arena,
+                arena,
             )?
         };
         let outs = ctx.rt.exec(art, &lits)?;
         let bwd_s = t5.elapsed().as_secs_f64() * scale / gpus;
-        let grads = collect_worker_grads(
+        let w1 = world.now();
+        let mut grads = collect_worker_grads(
             world.g,
             world.tree,
             spec,
@@ -446,21 +532,28 @@ impl WorkerPlan {
             TargetGrads::Accumulate,
             None,
         )?;
+        grads.param_version = params.version();
         let mut stages = StageTimes::default();
         stages.add(Stage::Backward, bwd_s);
         Ok(RafBackward {
             grads,
             bwd_s,
             stages,
+            wall_bwd: (w0, w1),
         })
     }
 
-    /// The vanilla fused stage (marshal + fwd+bwd step) for one worker.
-    /// `is_remote` classifies feature rows against the edge-cut
-    /// partition; the caller owns the sampling (and its remote-RPC
-    /// pricing) because only scheduling differs between runtimes.
+    /// The marshal half of the vanilla fused stage: build the input
+    /// literals (feature-store reads happen here and only here) without
+    /// executing. The windowed cluster worker announces the marshal's
+    /// completion to the leader between the two halves — the store
+    /// barrier that keeps learnable-row reads deterministic while
+    /// updates overlap execution. Callers holding the
+    /// `train.shared_session` gate must bracket *both* halves with one
+    /// token (as [`Self::vanilla_step`] does); the halves themselves do
+    /// not serialize.
     #[allow(clippy::too_many_arguments)]
-    pub fn vanilla_step(
+    pub fn vanilla_marshal(
         &self,
         ctx: &mut ExecContext,
         world: &EpochWorld<'_>,
@@ -469,16 +562,14 @@ impl WorkerPlan {
         sample: &TreeSample,
         frontier: Option<&Frontier>,
         micro: &[NodeId],
-        sample_s: f64,
-    ) -> Result<VanillaStep> {
+        arena: &mut BatchArena,
+    ) -> Result<VanillaMarshal> {
         let cfg = world.cfg;
         let scale = cfg.cost.compute_scale;
-        let gpus = cfg.train.gpus_per_machine.max(1) as f64;
         let parts = part.num_parts;
         let w = ctx.worker;
         let is_remote = |ty: usize, id: NodeId| part.owner_of(ty, id) != w;
-        ctx.arena.begin_batch(world.g.schema.node_types.len());
-        let _token = world.serialize();
+        arena.begin_batch(world.g.schema.node_types.len());
         // Wall span covers marshal + execute (see `raf_forward`).
         let w0 = world.now();
         let extra = ExtraInputs::new();
@@ -502,14 +593,45 @@ impl WorkerPlan {
                 &is_remote,
                 ctx.cache.as_mut(),
                 ctx.gpu,
-                &mut ctx.arena,
+                arena,
             )?;
             (lits, acc, store.is_learnable(world.g.schema.target))
         };
         let copy_s = t1.elapsed().as_secs_f64() * scale;
         let fetch_s = vanilla_fetch_time(&cfg.cost, &acc, ctx.cache.is_some(), parts);
+        Ok(VanillaMarshal {
+            lits,
+            acc,
+            target_learnable,
+            copy_s,
+            fetch_s,
+            w0,
+        })
+    }
+
+    /// The execution half of the vanilla fused stage: run the artifact
+    /// over the marshalled literals and classify the gradient outputs,
+    /// tagging them with the parameter version the marshal read
+    /// (`param_version` — the stale-gradient contract).
+    #[allow(clippy::too_many_arguments)]
+    pub fn vanilla_execute(
+        &self,
+        ctx: &mut ExecContext,
+        world: &EpochWorld<'_>,
+        m: VanillaMarshal,
+        part: &NodePartition,
+        sample: &TreeSample,
+        micro: &[NodeId],
+        sample_s: f64,
+        param_version: u64,
+    ) -> Result<VanillaStep> {
+        let cfg = world.cfg;
+        let scale = cfg.cost.compute_scale;
+        let gpus = cfg.train.gpus_per_machine.max(1) as f64;
+        let w = ctx.worker;
+        let is_remote = |ty: usize, id: NodeId| part.owner_of(ty, id) != w;
         let t2 = Instant::now();
-        let outs = ctx.rt.exec(&self.fwd_art, &lits)?;
+        let outs = ctx.rt.exec(&self.fwd_art, &m.lits)?;
         let step_s = t2.elapsed().as_secs_f64() * scale / gpus;
         let w1 = world.now();
         if outs.len() < 2 {
@@ -521,12 +643,12 @@ impl WorkerPlan {
         }
         let loss = lit_scalar(&outs[0])? as f64;
         let acc_v = lit_scalar(&outs[1])? as f64;
-        let target = if target_learnable {
+        let target = if m.target_learnable {
             TargetGrads::Rows(micro)
         } else {
             TargetGrads::Discard
         };
-        let grads = collect_worker_grads(
+        let mut grads = collect_worker_grads(
             world.g,
             world.tree,
             &self.spec_fwd,
@@ -535,10 +657,11 @@ impl WorkerPlan {
             target,
             Some(&is_remote),
         )?;
+        grads.param_version = param_version;
         let mut stages = StageTimes::default();
         stages.add(Stage::Sample, sample_s);
-        stages.add(Stage::Copy, copy_s);
-        stages.add(Stage::Fetch, fetch_s);
+        stages.add(Stage::Copy, m.copy_s);
+        stages.add(Stage::Fetch, m.fetch_s);
         stages.add(Stage::Forward, step_s * 0.45);
         stages.add(Stage::Backward, step_s * 0.55);
         let span = WorkerSpan {
@@ -547,8 +670,8 @@ impl WorkerPlan {
             // whole fetch stays slot-bound (conservative); sampling is
             // the prefetchable stage here.
             fetch_ro_s: 0.0,
-            fetch_lr_s: fetch_s,
-            copy_s,
+            fetch_lr_s: m.fetch_s,
+            copy_s: m.copy_s,
             fwd_s: step_s,
             bwd_s: 0.0,
         };
@@ -556,12 +679,37 @@ impl WorkerPlan {
             loss,
             acc: acc_v,
             grads,
-            stats: acc.stats,
-            fetch_s,
+            stats: m.acc.stats,
+            fetch_s: m.fetch_s,
             span,
             stages,
-            wall_fwd: (w0, w1),
+            wall_fwd: (m.w0, w1),
         })
+    }
+
+    /// The vanilla fused stage (marshal + fwd+bwd step) for one worker:
+    /// the two halves composed under one shared-session token — the
+    /// synchronous path. `is_remote` classifies feature rows against
+    /// the edge-cut partition; the caller owns the sampling (and its
+    /// remote-RPC pricing) because only scheduling differs between
+    /// runtimes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn vanilla_step(
+        &self,
+        ctx: &mut ExecContext,
+        world: &EpochWorld<'_>,
+        params: ParamsView<'_>,
+        part: &NodePartition,
+        sample: &TreeSample,
+        frontier: Option<&Frontier>,
+        micro: &[NodeId],
+        sample_s: f64,
+        arena: &mut BatchArena,
+    ) -> Result<VanillaStep> {
+        let _token = world.serialize();
+        let version = params.version();
+        let m = self.vanilla_marshal(ctx, world, params, part, sample, frontier, micro, arena)?;
+        self.vanilla_execute(ctx, world, m, part, sample, micro, sample_s, version)
     }
 }
 
@@ -580,6 +728,7 @@ impl BatchPlan {
         cache: Option<&mut FeatureCache>,
         partial_sums: &[Vec<f32>; 2],
         chunk: &[NodeId],
+        arena: &mut BatchArena,
     ) -> Result<RafLeaderOut> {
         let cfg = world.cfg;
         let spec = self
@@ -611,7 +760,7 @@ impl BatchPlan {
                 &|_, _| false,
                 cache,
                 0,
-                &mut ctx.arena,
+                arena,
             )?
         };
         let outs = ctx.rt.exec(&self.leader_art, &lits)?;
@@ -912,18 +1061,48 @@ mod tests {
             row_grads: vec![(0, vec![1, 2], vec![0.5, 0.5])],
             gx: vec![vec![1.0]],
             learnable_rows: vec![(0, 2, 1)],
-        });
+            param_version: 3,
+        })
+        .unwrap();
         acc.absorb(WorkerGrads {
             wgrads: vec![("w".into(), vec![10.0, 20.0])],
             row_grads: vec![(0, vec![3], vec![0.25])],
             gx: vec![vec![2.0]],
             learnable_rows: vec![(0, 1, 0)],
-        });
+            param_version: 3,
+        })
+        .unwrap();
         assert_eq!(acc.wgrads["w"], vec![11.0, 22.0]);
         assert_eq!(acc.row_grads[&0].0, vec![1, 2, 3]);
         assert_eq!(acc.row_grads[&0].1, vec![0.5, 0.5, 0.25]);
         assert_eq!(acc.gx, vec![3.0]);
         assert_eq!(acc.learnable_counts[&0], (3, 1));
+    }
+
+    #[test]
+    fn accumulator_rejects_version_mismatched_gradients() {
+        // Pinned expectation: the leader knows which snapshot version it
+        // shipped with the batch; a gradient tagged otherwise is a
+        // protocol bug, not data.
+        let mut acc = GradAccumulator::for_version(5);
+        let wg = |v: u64| WorkerGrads {
+            wgrads: vec![("w".into(), vec![1.0])],
+            param_version: v,
+            ..Default::default()
+        };
+        let err = acc.absorb(wg(4)).unwrap_err();
+        assert!(
+            err.to_string().contains("version 4") && err.to_string().contains("version 5"),
+            "error must name both versions: {err}"
+        );
+        acc.absorb(wg(5)).unwrap();
+        assert_eq!(acc.wgrads["w"], vec![1.0]);
+        // Unpinned accumulators adopt the first version they see and
+        // hold every later worker to it (the sequential drivers).
+        let mut acc = GradAccumulator::default();
+        acc.absorb(wg(7)).unwrap();
+        assert!(acc.absorb(wg(8)).is_err());
+        acc.absorb(wg(7)).unwrap();
     }
 
     #[test]

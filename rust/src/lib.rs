@@ -48,13 +48,19 @@
 //!
 //! Both runtimes are thin schedulers over the [`exec`] layer: each
 //! worker owns an [`exec::ExecContext`] (its own PJRT client, compiled
-//! executables, cache, and marshalling arena), parameters travel as
-//! versioned read-only snapshots published by the leader each batch,
-//! and the per-batch marshal → forward → exchange → backward → update
-//! stages are expressed once in [`exec::BatchPlan`]. Cluster workers
-//! therefore execute artifacts genuinely concurrently — no shared
-//! session, no lock around execution (`train.shared_session = true`
-//! restores the old serialized behavior for A/B timing).
+//! executables, and cache), parameters travel as versioned read-only
+//! snapshots published by the leader each batch, and the per-batch
+//! marshal → forward → exchange → backward → update stages are
+//! expressed once in [`exec::BatchPlan`] (arenas are batch-scoped and
+//! scheduler-owned). Cluster workers therefore execute artifacts
+//! genuinely concurrently — no shared session, no lock around
+//! execution (`train.shared_session = true` restores the old
+//! serialized behavior for A/B timing) — and `train.staleness = k`
+//! opens the async 1F1B window: up to `k` extra batches in flight
+//! against snapshots at most `k` updates behind, with batch-tagged
+//! collectives and version-pinned gradient folds keeping the schedule
+//! deterministic (`k = 0` stays byte-identical to the synchronous
+//! protocol).
 //!
 //! [`metrics::timeline`] records a per-worker event timeline either
 //! way (plus wall-clock forward spans showing real context overlap);

@@ -35,7 +35,7 @@ fn main() -> Result<()> {
                  partition  [--method meta|random|metis|bytype] [--parts p]\n\
                  train      --engine raf|vanilla [--epochs n] [--artifacts dir]\n\
                  \x20          [--runtime sequential|cluster] [--no-pipeline]\n\
-                 \x20          [--no-dedup-fetch] [--shared-session]\n\
+                 \x20          [--no-dedup-fetch] [--shared-session] [--staleness N]\n\
                  info"
             );
             Ok(())
@@ -132,6 +132,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         // Escape hatch: serialize artifact execution on one token,
         // reproducing the pre-exec-layer shared-session behavior.
         cfg.train.shared_session = true;
+    }
+    if let Some(s) = args.get("staleness") {
+        // Bounded-staleness window of the async 1F1B pipeline: 0 is the
+        // synchronous protocol, k keeps up to k extra batches in flight
+        // (cluster runtime only; see TrainConfig::staleness).
+        cfg.train.staleness = s
+            .parse()
+            .with_context(|| format!("--staleness expects a non-negative integer, got '{s}'"))?;
+        if cfg.train.staleness > 0 && !cfg.train.dedup_fetch {
+            bail!("--staleness requires the dedup gather (drop --no-dedup-fetch)");
+        }
     }
     let engine = args.get_or("engine", "raf");
     let epochs = args.get_usize("epochs", 1);

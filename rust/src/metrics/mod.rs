@@ -139,6 +139,12 @@ pub struct EpochReport {
     pub loss_mean: f64,
     pub accuracy: f64,
     pub batches: usize,
+    /// Per-batch training losses in batch order (the leader's loss for
+    /// RAF, the worker mean for vanilla). This is what the equivalence
+    /// harness diffs: when two configurations diverge, the *first
+    /// diverging batch index* localizes the fault far better than an
+    /// epoch-mean mismatch.
+    pub batch_losses: Vec<f64>,
 }
 
 impl EpochReport {
@@ -181,6 +187,7 @@ impl EpochReport {
         self.loss_mean = rep.loss_mean;
         self.accuracy = rep.accuracy;
         self.batches += rep.batches;
+        self.batch_losses.extend_from_slice(&rep.batch_losses);
     }
 
     pub fn print(&self, label: &str) {

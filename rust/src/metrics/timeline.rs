@@ -18,24 +18,37 @@
 //! The schedule is a deterministic function of the recorded durations —
 //! thread interleavings of the real runtime never affect it.
 
-/// Wall-clock forward-stage (marshal + execute) spans per worker, in
-/// seconds relative to the epoch's wall-clock origin (PR 3). Unlike
+/// Wall-clock stage spans per worker, in seconds relative to the
+/// epoch's wall-clock origin (PR 3; backward lanes since PR 4). Unlike
 /// the modeled spans below — which *price* a schedule — these record
-/// when each worker's forward stage actually ran on this machine, so
-/// they are the direct evidence that per-worker execution contexts
-/// overlap (and that the `train.shared_session` escape hatch
-/// serializes them).
+/// when each worker's marshal+execute stages actually ran on this
+/// machine, so they are the direct evidence that per-worker execution
+/// contexts overlap (and that the `train.shared_session` escape hatch
+/// serializes them). With a staleness window open
+/// (`train.staleness >= 1`), the backward lane is the evidence that
+/// batch `i`'s backward genuinely overlapped a later batch's forward.
 #[derive(Debug, Clone, Default)]
 pub struct WallClock {
     /// `forward[w]` = `(start_s, end_s)` intervals of worker `w`'s
     /// forward executions, one per batch, in batch order.
     pub forward: Vec<Vec<(f64, f64)>>,
+    /// `backward[w]` = intervals of worker `w`'s backward executions,
+    /// one per batch, in batch order. Empty for engines whose backward
+    /// is fused into the forward artifact (vanilla).
+    pub backward: Vec<Vec<(f64, f64)>>,
+}
+
+/// Half-open interval overlap: a span ending exactly when another
+/// starts does not overlap.
+fn spans_overlap(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 < b.1 && b.0 < a.1
 }
 
 impl WallClock {
     pub fn new(workers: usize) -> WallClock {
         WallClock {
             forward: vec![Vec::new(); workers],
+            backward: vec![Vec::new(); workers],
         }
     }
 
@@ -45,6 +58,14 @@ impl WallClock {
             self.forward.resize(worker + 1, Vec::new());
         }
         self.forward[worker].push(span);
+    }
+
+    /// Record one backward-execution interval for `worker`.
+    pub fn record_backward(&mut self, worker: usize, span: (f64, f64)) {
+        if self.backward.len() <= worker {
+            self.backward.resize(worker + 1, Vec::new());
+        }
+        self.backward[worker].push(span);
     }
 
     /// Peak number of workers whose forward executions were in flight
@@ -73,6 +94,43 @@ impl WallClock {
         peak.max(0) as usize
     }
 
+    /// The backward-vs-forward overlap sweep: number of (backward of
+    /// batch `i`, forward of batch `j > i`) span pairs that genuinely
+    /// overlapped in wall clock, across any pair of workers. Zero under
+    /// the synchronous protocol (`train.staleness = 0`: every backward
+    /// of batch `i` completes before any batch `i+1` forward is
+    /// released); ≥ 1 is the evidence the staleness window let a later
+    /// forward run under an in-flight backward.
+    pub fn backward_overlapping_later_forward(&self) -> usize {
+        let mut pairs = 0;
+        for bw in &self.backward {
+            for (i, &b) in bw.iter().enumerate() {
+                for fw in &self.forward {
+                    pairs += fw.iter().skip(i + 1).filter(|&&f| spans_overlap(b, f)).count();
+                }
+            }
+        }
+        pairs
+    }
+
+    /// Forward spans of *different batches* in flight together (any
+    /// pair of workers). Impossible at `train.staleness <= 1` — the
+    /// leader releases batch `i+1` only after every batch-`i` forward
+    /// landed — and the overlap evidence for deeper windows, where the
+    /// engine's fused forward is the only execution stage (vanilla).
+    pub fn cross_batch_forward_overlap(&self) -> usize {
+        let mut pairs = 0;
+        for f1 in &self.forward {
+            for (i, &a) in f1.iter().enumerate() {
+                for f2 in &self.forward {
+                    // j > i counts each unordered cross-batch pair once.
+                    pairs += f2.iter().skip(i + 1).filter(|&&b| spans_overlap(a, b)).count();
+                }
+            }
+        }
+        pairs
+    }
+
     /// Fold another epoch's spans in (per worker, appended). The
     /// appended spans are shifted past this clock's latest end so
     /// intervals from different epochs — which share a per-epoch
@@ -81,16 +139,35 @@ impl WallClock {
         let offset = self
             .forward
             .iter()
+            .chain(self.backward.iter())
             .flatten()
             .map(|&(_, e)| e)
             .fold(0.0f64, f64::max);
         if self.forward.len() < other.forward.len() {
             self.forward.resize(other.forward.len(), Vec::new());
         }
+        if self.backward.len() < other.backward.len() {
+            self.backward.resize(other.backward.len(), Vec::new());
+        }
         for (mine, theirs) in self.forward.iter_mut().zip(&other.forward) {
             mine.extend(theirs.iter().map(|&(s, e)| (s + offset, e + offset)));
         }
+        for (mine, theirs) in self.backward.iter_mut().zip(&other.backward) {
+            mine.extend(theirs.iter().map(|&(s, e)| (s + offset, e + offset)));
+        }
     }
+}
+
+/// Leader-phase structure of the bounded-staleness schedule
+/// ([`EpochTimeline::async_pipelined_time`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AsyncShape {
+    /// Gather partials → leader step → scatter gradients → worker
+    /// backwards → update; backwards gate on the scatter.
+    Raf,
+    /// Fused worker step → all-reduce → update; the update waits for
+    /// the marshal completion of every released batch (store barrier).
+    Vanilla,
 }
 
 /// Modeled per-worker durations for one batch.
@@ -247,6 +324,135 @@ impl EpochTimeline {
         ready
     }
 
+    /// The bounded-staleness (async 1F1B) schedule with `staleness = k
+    /// >= 1` in-flight batches (PR 4): the leader broadcasts batch
+    /// `i+k`'s release right after gathering batch `i`'s results, so
+    /// workers marshal+execute batch `i+k`'s forward — against a
+    /// snapshot missing at most `k` updates — while batch `i` is still
+    /// in its leader/backward/update phases. Workers process releases
+    /// and gradient scatters in the leader's deterministic send order
+    /// (forward of `i+k`, then backward of `i` — the 1F1B
+    /// interleaving), so the schedule is, like [`Self::pipelined_time`],
+    /// a pure function of the recorded durations.
+    ///
+    /// `shape` selects the leader-phase structure: [`AsyncShape::Raf`]
+    /// gates each backward on the leader's gather → step → scatter,
+    /// while [`AsyncShape::Vanilla`] has no separate backward and
+    /// instead delays each update behind the *marshal* completion of
+    /// every released batch — the store barrier that keeps feature-row
+    /// reads deterministic under the window.
+    pub fn async_pipelined_time(&self, staleness: usize, shape: AsyncShape) -> f64 {
+        let k = staleness.max(1);
+        let n = self.batches.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let nw = self.workers;
+        // Every worker sees the same arrival order of leader messages:
+        // the k primed releases, then per leader batch i the release of
+        // i+k followed (RAF) by batch i's gradient scatter.
+        #[derive(Clone, Copy)]
+        enum Task {
+            Fwd(usize),
+            Bwd(usize),
+        }
+        let raf = matches!(shape, AsyncShape::Raf);
+        let mut tasks: Vec<Task> = Vec::new();
+        let mut fwd_idx = vec![0usize; n];
+        let mut bwd_idx = vec![0usize; n];
+        for j in 0..k.min(n) {
+            fwd_idx[j] = tasks.len();
+            tasks.push(Task::Fwd(j));
+        }
+        for i in 0..n {
+            if i + k < n {
+                fwd_idx[i + k] = tasks.len();
+                tasks.push(Task::Fwd(i + k));
+            }
+            if raf {
+                bwd_idx[i] = tasks.len();
+                tasks.push(Task::Bwd(i));
+            }
+        }
+
+        let mut ready_t = vec![0.0f64; n]; // batches 0..k primed at 0
+        let mut grads_t = vec![0.0f64; n];
+        let mut wfree = vec![0.0f64; nw];
+        let mut mdone = vec![vec![0.0f64; nw]; n]; // marshal (sample+fetch+copy) done
+        let mut fdone = vec![vec![0.0f64; nw]; n];
+        let mut bdone = vec![vec![0.0f64; nw]; n];
+        let mut cursor = vec![0usize; nw];
+        // Advance every worker through its task list up to and
+        // including `target` (gates for that prefix are already known).
+        let advance = |target: usize,
+                       wfree: &mut [f64],
+                       cursor: &mut [usize],
+                       mdone: &mut [Vec<f64>],
+                       fdone: &mut [Vec<f64>],
+                       bdone: &mut [Vec<f64>],
+                       ready_t: &[f64],
+                       grads_t: &[f64]| {
+            for w in 0..nw {
+                while cursor[w] <= target {
+                    match tasks[cursor[w]] {
+                        Task::Fwd(j) => {
+                            let s = &self.batches[j].workers[w];
+                            let start = wfree[w].max(ready_t[j]);
+                            mdone[j][w] =
+                                start + s.sample_s + s.fetch_ro_s + s.fetch_lr_s + s.copy_s;
+                            fdone[j][w] = mdone[j][w] + s.fwd_s;
+                            wfree[w] = fdone[j][w];
+                        }
+                        Task::Bwd(i) => {
+                            let s = &self.batches[i].workers[w];
+                            bdone[i][w] = wfree[w].max(grads_t[i]) + s.bwd_s;
+                            wfree[w] = bdone[i][w];
+                        }
+                    }
+                    cursor[w] += 1;
+                }
+            }
+        };
+
+        let mut lfree = 0.0f64;
+        for i in 0..n {
+            let b = &self.batches[i];
+            advance(
+                fwd_idx[i], &mut wfree, &mut cursor, &mut mdone, &mut fdone, &mut bdone,
+                &ready_t, &grads_t,
+            );
+            let gstart = fdone[i].iter().copied().fold(lfree, f64::max);
+            lfree = gstart + b.leader.gather_s;
+            if i + k < n {
+                ready_t[i + k] = lfree;
+            }
+            if raf {
+                lfree += b.leader.leader_s + b.leader.scatter_s;
+                grads_t[i] = lfree;
+                advance(
+                    bwd_idx[i], &mut wfree, &mut cursor, &mut mdone, &mut fdone, &mut bdone,
+                    &ready_t, &grads_t,
+                );
+                let ustart = bdone[i].iter().copied().fold(lfree, f64::max);
+                lfree = ustart + b.leader.update_s + b.leader.sync_s;
+            } else {
+                // Store barrier: the update may not write feature rows
+                // until every released batch finished marshalling.
+                let last = (i + k).min(n - 1);
+                advance(
+                    fwd_idx[last], &mut wfree, &mut cursor, &mut mdone, &mut fdone,
+                    &mut bdone, &ready_t, &grads_t,
+                );
+                let mut ustart = lfree;
+                for md in mdone.iter().take(last + 1) {
+                    ustart = md.iter().copied().fold(ustart, f64::max);
+                }
+                lfree = ustart + b.leader.update_s + b.leader.sync_s;
+            }
+        }
+        lfree
+    }
+
     /// Seconds the pipeline hides relative to sequential execution.
     pub fn overlap_saving_s(&self) -> f64 {
         (self.sequential_time() - self.pipelined_time()).max(0.0)
@@ -377,6 +583,98 @@ mod tests {
         let busy = t.worker_busy_s();
         assert_eq!(busy.len(), 3);
         assert!(busy.iter().all(|&b| b > 0.0));
+    }
+
+    /// 1 worker, `n` identical batches: fwd 1s, bwd 1s, leader step 1s,
+    /// nothing else. Synchronous cost is 3s per batch; the k=1 window
+    /// hides the leader step of each non-final batch under the next
+    /// forward (and vice versa).
+    fn raf_unit_tl(n: usize) -> EpochTimeline {
+        let mut t = EpochTimeline::new(1);
+        for _ in 0..n {
+            t.push_batch(
+                vec![WorkerSpan { fwd_s: 1.0, bwd_s: 1.0, ..Default::default() }],
+                LeaderSpan { leader_s: 1.0, ..Default::default() },
+            );
+        }
+        t
+    }
+
+    #[test]
+    fn async_raf_hides_leader_phase_under_next_forward() {
+        let t = raf_unit_tl(3);
+        assert!((t.sequential_time() - 9.0).abs() < 1e-12);
+        assert!((t.pipelined_time() - 9.0).abs() < 1e-12, "no prefetchable work");
+        // Hand-simulated: fwd(i+1) released at gather(i), so each of the
+        // two overlapped boundaries saves exactly the 1s leader step.
+        let a1 = t.async_pipelined_time(1, AsyncShape::Raf);
+        assert!((a1 - 7.0).abs() < 1e-12, "async k=1 expected 7s, got {a1}");
+        assert!(a1 < t.pipelined_time());
+    }
+
+    #[test]
+    fn async_vanilla_hides_update_behind_next_step() {
+        // 1 worker, 3 batches: fused step 1s, all-reduce (gather) 1s,
+        // update 1s. The k=1 window overlaps each non-final update with
+        // the next step's execution (the marshal barrier costs nothing
+        // here: marshal time is zero).
+        let mut t = EpochTimeline::new(1);
+        for _ in 0..3 {
+            t.push_batch(
+                vec![WorkerSpan { fwd_s: 1.0, ..Default::default() }],
+                LeaderSpan { gather_s: 1.0, update_s: 1.0, ..Default::default() },
+            );
+        }
+        assert!((t.sequential_time() - 9.0).abs() < 1e-12);
+        let a1 = t.async_pipelined_time(1, AsyncShape::Vanilla);
+        assert!((a1 - 7.0).abs() < 1e-12, "async k=1 expected 7s, got {a1}");
+    }
+
+    #[test]
+    fn async_marshal_barrier_delays_update() {
+        // Same vanilla shape but each step spends 0.5s marshalling
+        // (copy): update(i) must wait for batch i+1's marshal to finish
+        // (the store barrier), so only part of the update window hides.
+        let mut t = EpochTimeline::new(1);
+        for _ in 0..2 {
+            t.push_batch(
+                vec![WorkerSpan { copy_s: 0.5, fwd_s: 1.0, ..Default::default() }],
+                LeaderSpan { gather_s: 1.0, update_s: 1.0, ..Default::default() },
+            );
+        }
+        // By hand: f0 [0, 1.5] (marshal done 0.5); gather(0) [1.5, 2.5];
+        // release(1) at 2.5; f1 marshal [2.5, 3.0], exec done 4.0;
+        // update(0) waits marshal(1) = 3.0 -> done 4.0; gather(1)
+        // [4.5? no: max(lfree 4.0, fdone1 4.0) = 4.0 -> 5.0]; update(1)
+        // -> 6.0.
+        let a1 = t.async_pipelined_time(1, AsyncShape::Vanilla);
+        assert!((a1 - 6.0).abs() < 1e-12, "expected 6s, got {a1}");
+        assert!(a1 < t.sequential_time());
+    }
+
+    #[test]
+    fn async_never_exceeds_sequential_on_random_timelines() {
+        for seed in 0..40 {
+            let t = tl(1 + (seed as usize % 6), 1 + (seed as usize % 3), 100 + seed);
+            let seq = t.sequential_time();
+            for k in 1..=3 {
+                for shape in [AsyncShape::Raf, AsyncShape::Vanilla] {
+                    let a = t.async_pipelined_time(k, shape);
+                    assert!(
+                        a <= seq + 1e-9,
+                        "async k={k} {shape:?} {a} > sequential {seq} (seed {seed})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn async_window_larger_than_epoch_is_safe() {
+        let t = raf_unit_tl(2);
+        let a = t.async_pipelined_time(10, AsyncShape::Raf);
+        assert!(a > 0.0 && a <= t.sequential_time() + 1e-12);
+        assert_eq!(EpochTimeline::new(2).async_pipelined_time(1, AsyncShape::Raf), 0.0);
     }
 
     #[test]

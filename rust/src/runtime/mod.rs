@@ -320,6 +320,18 @@ impl ParamStore {
         &self.params[name]
     }
 
+    /// Current store version — the value the next [`Self::snapshot`]
+    /// would be stamped with. Gradients are tagged with the version of
+    /// the snapshot their backward marshalled from, so the accumulator
+    /// can verify every per-worker gradient of a batch was produced
+    /// against the same weights (the stale-gradient contract of the
+    /// bounded-staleness pipeline: under `train.staleness = k`, a
+    /// batch's forward snapshot may trail the store by up to `k`
+    /// updates, but all of one batch's gradients must agree).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
     /// Capture a versioned read-only snapshot of every tensor (Arc
     /// bumps, no copies). The leader publishes one per batch.
     pub fn snapshot(&self) -> ParamSnapshot {

@@ -1,0 +1,120 @@
+//! Shared equivalence-test harness (PR 4).
+//!
+//! Three integration tests used to copy-paste the same artifact-gated
+//! scaffolding: load `configs/<name>.json`, tweak one training flag,
+//! run a few epochs on some engine, and assert the loss trajectory is
+//! **byte-identical** to a reference run. That scaffolding now lives
+//! here once: [`assert_losses_identical`] runs a whole config matrix
+//! (each [`Variant`] is one tweak of the base config) and, on
+//! divergence, reports the **first diverging batch index** — far more
+//! actionable than an epoch-mean mismatch, since the batch index
+//! localizes which release/update of the protocol first went wrong.
+//!
+//! The harness is deliberately strict: equality is bitwise (`==` on
+//! `f64`), never approximate. The whole point of the determinism
+//! contract (reductions fold in worker-id order; snapshots are
+//! versioned; store phases are disjoint) is that "equivalent" means
+//! *equal*.
+
+#![allow(dead_code)] // each test binary uses a subset of the harness
+
+use heta::config::Config;
+use heta::coordinator::{Engine, Session, SystemKind};
+use heta::metrics::EpochReport;
+
+/// One cell of an equivalence matrix: a label for failure messages and
+/// a tweak applied to the freshly loaded base config.
+pub struct Variant {
+    pub label: String,
+    pub tweak: Box<dyn Fn(&mut Config)>,
+}
+
+/// Shorthand constructor so matrices read as data.
+pub fn variant(label: &str, tweak: impl Fn(&mut Config) + 'static) -> Variant {
+    Variant {
+        label: label.to_string(),
+        tweak: Box::new(tweak),
+    }
+}
+
+/// Load `configs/<cfg_name>.json`, apply `tweak`, build the engine for
+/// `system` over `artifacts/<cfg_name>` and run `epochs` epochs.
+/// Panics (with the variant context) on any error — harness callers
+/// have already passed the artifact gate.
+pub fn run_reports(
+    cfg_name: &str,
+    system: SystemKind,
+    epochs: usize,
+    label: &str,
+    tweak: impl Fn(&mut Config),
+) -> Vec<EpochReport> {
+    let mut cfg = Config::load(&format!("configs/{cfg_name}.json"))
+        .unwrap_or_else(|e| panic!("[{label}] loading config {cfg_name}: {e}"));
+    tweak(&mut cfg);
+    let dir = format!("artifacts/{cfg_name}");
+    let mut sess = Session::new(&cfg, &dir)
+        .unwrap_or_else(|e| panic!("[{label}] session for {cfg_name}: {e}"));
+    let mut engine = Engine::build(&mut sess, system)
+        .unwrap_or_else(|e| panic!("[{label}] building {system:?}: {e}"));
+    (0..epochs)
+        .map(|ep| {
+            engine
+                .run_epoch(&mut sess, ep)
+                .unwrap_or_else(|e| panic!("[{label}] {system:?} epoch {ep}: {e:#}"))
+        })
+        .collect()
+}
+
+/// Run every variant of the matrix and assert all of them produce
+/// trajectories bitwise-identical to the first (the reference):
+/// per-batch losses, epoch loss means and accuracies. On divergence,
+/// panics naming the variant and the **first diverging batch** (epoch,
+/// batch index, both values). Returns every variant's reports, in
+/// matrix order, for follow-up assertions (timing, fetch stats, ...).
+pub fn assert_losses_identical(
+    cfg_name: &str,
+    system: SystemKind,
+    epochs: usize,
+    matrix: &[Variant],
+) -> Vec<Vec<EpochReport>> {
+    assert!(matrix.len() >= 2, "an equivalence matrix needs a reference and a candidate");
+    let all: Vec<Vec<EpochReport>> = matrix
+        .iter()
+        .map(|v| run_reports(cfg_name, system, epochs, &v.label, &v.tweak))
+        .collect();
+    let (reference, candidates) = all.split_first().expect("non-empty matrix");
+    let ref_label = &matrix[0].label;
+    for (v, reps) in matrix[1..].iter().zip(candidates) {
+        for (ep, (r, c)) in reference.iter().zip(reps).enumerate() {
+            assert_eq!(
+                r.batch_losses.len(),
+                c.batch_losses.len(),
+                "{system:?} [{}] epoch {ep}: ran {} batches but reference [{ref_label}] ran {}",
+                v.label,
+                c.batch_losses.len(),
+                r.batch_losses.len(),
+            );
+            if let Some(bi) = (0..r.batch_losses.len())
+                .find(|&i| r.batch_losses[i].to_bits() != c.batch_losses[i].to_bits())
+            {
+                panic!(
+                    "{system:?} [{}] diverged from [{ref_label}] first at epoch {ep} batch {bi}: \
+                     {} != {} (losses must be byte-identical)",
+                    v.label, c.batch_losses[bi], r.batch_losses[bi],
+                );
+            }
+            assert_eq!(
+                r.loss_mean, c.loss_mean,
+                "{system:?} [{}] epoch {ep}: loss mean diverged from [{ref_label}] \
+                 with equal per-batch losses (aggregation bug)",
+                v.label,
+            );
+            assert_eq!(
+                r.accuracy, c.accuracy,
+                "{system:?} [{}] epoch {ep}: accuracy diverged from [{ref_label}]",
+                v.label,
+            );
+        }
+    }
+    all
+}

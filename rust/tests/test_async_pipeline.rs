@@ -1,0 +1,304 @@
+//! The async 1F1B pipeline under bounded staleness (the PR-4 tentpole).
+//!
+//! Artifact-free half: the stale-gradient contract of
+//! [`GradAccumulator`] (a gradient tagged with the wrong snapshot
+//! version is rejected, never silently mixed), and two properties over
+//! the transport the window leans on — mailbox delivery never reorders
+//! a worker's batch-tagged lane under arbitrary interleavings, and the
+//! round-tagged collective reduction stays byte-identical to folding in
+//! worker-id order for random gradient sets shipped from racing
+//! threads.
+//!
+//! Artifact-gated half (skipped until `make artifacts`):
+//! `train.staleness = 0` must be **byte-identical** across the whole
+//! engine × runtime matrix (checked through the shared `tests/common`
+//! harness, which reports the first diverging batch); a staleness
+//! window must be deterministic run-to-run; and the extended
+//! [`WallClock`] sweeps must witness the new overlap — a backward
+//! running under a later batch's forward (RAF, `k = 1`) and fused
+//! steps of different batches in flight together (vanilla, `k = 2`).
+
+mod common;
+
+use std::time::Duration;
+
+use heta::cluster::collective::{star, RoundTag};
+use heta::cluster::mailbox::Mailbox;
+use heta::config::RuntimeKind;
+use heta::coordinator::SystemKind;
+use heta::exec::{GradAccumulator, WorkerGrads};
+use heta::util::proptest;
+
+use common::variant;
+
+// ---- artifact-free: the stale-gradient contract ----
+
+fn grads_with_version(v: u64) -> WorkerGrads {
+    WorkerGrads {
+        wgrads: vec![("w".into(), vec![1.0, -1.0])],
+        param_version: v,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn grad_accumulator_version_matches_stale_snapshots() {
+    // The leader pins each batch's fold to the snapshot version it
+    // shipped; a worker that marshalled its backward from any other
+    // snapshot (older *or* newer) is rejected with both versions named.
+    let mut acc = GradAccumulator::for_version(41);
+    let err = acc.absorb(grads_with_version(40)).unwrap_err().to_string();
+    assert!(
+        err.contains("version 40") && err.contains("version 41"),
+        "rejection must name the stale and expected versions: {err}"
+    );
+    assert!(acc.absorb(grads_with_version(42)).is_err(), "future versions are no better");
+    acc.absorb(grads_with_version(41)).unwrap();
+    assert_eq!(acc.wgrads["w"], vec![1.0, -1.0]);
+    // Rejected gradients must not have contaminated the fold.
+    acc.absorb(grads_with_version(41)).unwrap();
+    assert_eq!(acc.wgrads["w"], vec![2.0, -2.0]);
+}
+
+// ---- property: mailbox lanes never reorder ----
+
+#[test]
+fn prop_mailbox_lanes_never_reorder_under_interleaving() {
+    proptest::run("mailbox_lanes", |rng, _| {
+        let workers = 2 + rng.below(3);
+        let batches = 1 + rng.below(4);
+        // Each worker's send sequence: batch-tagged messages, several
+        // per batch, in (batch, seq) order — the shape the windowed
+        // runtime puts on the wire.
+        let lanes: Vec<Vec<(usize, usize)>> = (0..workers)
+            .map(|_| {
+                let mut msgs = Vec::new();
+                for bi in 0..batches {
+                    for seq in 0..1 + rng.below(3) {
+                        msgs.push((bi, seq));
+                    }
+                }
+                msgs
+            })
+            .collect();
+        // Drive the hub with one arbitrary FIFO-per-lane interleaving.
+        let sched = proptest::interleave(rng, lanes.clone());
+        let (hub, spokes) = Mailbox::<(usize, usize)>::star(workers);
+        for (lane, msg) in sched {
+            spokes[lane].send(workers, msg).map_err(|e| e.to_string())?;
+        }
+        let total: usize = lanes.iter().map(|l| l.len()).sum();
+        let mut cursor = vec![0usize; workers];
+        for _ in 0..total {
+            let e = hub.recv().map_err(|e| e.to_string())?;
+            let expect = lanes[e.from][cursor[e.from]];
+            heta::prop_assert!(
+                e.payload == expect,
+                "worker {} delivered {:?} but its lane's next message is {:?} \
+                 (the (worker, batch) lane reordered)",
+                e.from,
+                e.payload,
+                expect
+            );
+            cursor[e.from] += 1;
+        }
+        Ok(())
+    });
+}
+
+// ---- property: round-gathered reductions fold in worker-id order ----
+
+#[test]
+fn prop_round_gather_reduction_matches_worker_order_fold() {
+    let cfg = proptest::Config {
+        cases: 24,
+        ..Default::default()
+    };
+    proptest::run_with(cfg, "round_gather_reduction", |rng, _| {
+        let parts = 2 + rng.below(3);
+        let dim = 4 + rng.below(12);
+        let data: Vec<Vec<f32>> = (0..parts)
+            .map(|_| (0..dim).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect())
+            .collect();
+        let delays: Vec<u64> = (0..parts).map(|_| rng.below(300) as u64).collect();
+
+        // Reference: fold in worker-id order on one thread.
+        let mut reference = GradAccumulator::for_version(1);
+        for d in &data {
+            let wg = WorkerGrads {
+                wgrads: vec![("w".into(), d.clone())],
+                row_grads: vec![(0, vec![1, 2], d[..2].to_vec())],
+                param_version: 1,
+                ..Default::default()
+            };
+            reference.absorb(wg).map_err(|e| e.to_string())?;
+        }
+
+        // Racing threads ship the same gradients in arbitrary arrival
+        // order; the round gather must still hand them back in
+        // worker-id order, making the fold bit-identical.
+        let (mut hub, ports) = star::<WorkerGrads, ()>(parts);
+        let folded: Result<GradAccumulator, String> = std::thread::scope(|s| {
+            for ((port, d), delay) in ports.into_iter().zip(data.clone()).zip(delays) {
+                s.spawn(move || {
+                    std::thread::sleep(Duration::from_micros(delay));
+                    let wg = WorkerGrads {
+                        wgrads: vec![("w".into(), d.clone())],
+                        row_grads: vec![(0, vec![1, 2], d[..2].to_vec())],
+                        param_version: 1,
+                        ..Default::default()
+                    };
+                    port.send(wg).unwrap();
+                });
+            }
+            let ups = hub
+                .gather_round(0, |_| RoundTag::Round(0))
+                .map_err(|e| e.to_string())?;
+            let mut acc = GradAccumulator::for_version(1);
+            for wg in ups {
+                acc.absorb(wg).map_err(|e| e.to_string())?;
+            }
+            Ok(acc)
+        });
+        let folded = folded?;
+        heta::prop_assert!(
+            folded.wgrads["w"] == reference.wgrads["w"],
+            "dense fold diverged from worker-id-order reference"
+        );
+        heta::prop_assert!(
+            folded.row_grads[&0] == reference.row_grads[&0],
+            "row-grad concatenation diverged from worker-id-order reference"
+        );
+        Ok(())
+    });
+}
+
+// ---- artifact-gated: the staleness matrix ----
+
+#[test]
+fn staleness_zero_is_byte_identical_across_the_matrix() {
+    if !heta::util::artifacts_ready("mag-tiny") {
+        return;
+    }
+    // The window machinery (batch tags, round gathers, version pinning)
+    // may not change a single bit of the synchronous protocol, on
+    // either engine, with or without the pipeline.
+    for system in [SystemKind::Heta, SystemKind::DglMetis] {
+        common::assert_losses_identical(
+            "mag-tiny",
+            system,
+            3,
+            &[
+                variant("sequential", |c| c.train.runtime = RuntimeKind::Sequential),
+                variant("cluster", |c| c.train.runtime = RuntimeKind::Cluster),
+                variant("cluster+no-pipeline", |c| {
+                    c.train.runtime = RuntimeKind::Cluster;
+                    c.train.pipeline = false;
+                }),
+                variant("cluster+staleness0", |c| {
+                    c.train.runtime = RuntimeKind::Cluster;
+                    c.train.staleness = 0;
+                }),
+            ],
+        );
+    }
+}
+
+#[test]
+fn staleness_window_is_deterministic_run_to_run() {
+    if !heta::util::artifacts_ready("mag-tiny") {
+        return;
+    }
+    // Bounded staleness legitimately changes the trajectory vs k = 0 —
+    // but for a fixed k the schedule (releases, store barriers,
+    // version-pinned folds) is deterministic, so two runs must agree
+    // bit for bit.
+    for (system, k) in [(SystemKind::Heta, 1), (SystemKind::DglMetis, 1), (SystemKind::Heta, 2)] {
+        common::assert_losses_identical(
+            "mag-tiny",
+            system,
+            2,
+            &[
+                variant("staleness-run-a", move |c| {
+                    c.train.runtime = RuntimeKind::Cluster;
+                    c.train.staleness = k;
+                }),
+                variant("staleness-run-b", move |c| {
+                    c.train.runtime = RuntimeKind::Cluster;
+                    c.train.staleness = k;
+                }),
+            ],
+        );
+    }
+}
+
+#[test]
+fn staleness_window_overlaps_backward_with_later_forward() {
+    if !heta::util::artifacts_ready("mag-tiny") {
+        return;
+    }
+    let epochs = 3;
+    let k1 = common::run_reports("mag-tiny", SystemKind::Heta, epochs, "staleness1", |c| {
+        c.train.runtime = RuntimeKind::Cluster;
+        c.train.staleness = 1;
+    });
+    // The extended wall sweep: across the epochs, at least one batch's
+    // backward must have genuinely run while a later batch's forward
+    // was in flight — the overlap the 1F1B window exists for.
+    let overlaps: usize = k1
+        .iter()
+        .map(|r| r.wall.backward_overlapping_later_forward())
+        .sum();
+    assert!(
+        overlaps >= 1,
+        "staleness=1 never overlapped a backward with a later forward in {epochs} epochs"
+    );
+    // Modeled schedule, same-run comparison (noise-free: both times
+    // price the same recorded event set).
+    for (ep, r) in k1.iter().enumerate() {
+        assert!(
+            r.critical_path_s < r.epoch_time_s,
+            "epoch {ep}: async critical path {} did not beat the summed schedule {}",
+            r.critical_path_s,
+            r.epoch_time_s
+        );
+    }
+    // And across runs: the window must beat the synchronous pipeline's
+    // critical path (summed over epochs to damp timing noise).
+    let k0 = common::run_reports("mag-tiny", SystemKind::Heta, epochs, "staleness0", |c| {
+        c.train.runtime = RuntimeKind::Cluster;
+    });
+    let sum1: f64 = k1.iter().map(|r| r.critical_path_s).sum();
+    let sum0: f64 = k0.iter().map(|r| r.critical_path_s).sum();
+    assert!(
+        sum1 < sum0,
+        "staleness=1 critical path {sum1} not below synchronous pipeline {sum0}"
+    );
+}
+
+#[test]
+fn vanilla_staleness_window_overlaps_steps_across_batches() {
+    if !heta::util::artifacts_ready("mag-tiny") {
+        return;
+    }
+    let epochs = 3;
+    let k2 = common::run_reports("mag-tiny", SystemKind::DglMetis, epochs, "staleness2", |c| {
+        c.train.runtime = RuntimeKind::Cluster;
+        c.train.staleness = 2;
+    });
+    // The fused vanilla step has no separate backward; the window's
+    // overlap evidence is fused steps of *different batches* in flight
+    // together — impossible at k <= 1, where a release waits for every
+    // step of the previous round.
+    let overlaps: usize = k2.iter().map(|r| r.wall.cross_batch_forward_overlap()).sum();
+    assert!(
+        overlaps >= 1,
+        "staleness=2 never ran two batches' steps concurrently in {epochs} epochs"
+    );
+    for (ep, r) in k2.iter().enumerate() {
+        assert!(
+            r.critical_path_s <= r.epoch_time_s,
+            "epoch {ep}: async critical path exceeds the summed schedule"
+        );
+    }
+}

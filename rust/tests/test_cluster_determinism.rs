@@ -7,20 +7,25 @@
 //! the double-buffered prefetch order — and asserts byte-identical
 //! `TreeSample` ids against the sequential path across 3 epochs.
 //!
-//! The second half (artifact-gated, like `test_equivalence`) runs full
-//! training on both runtimes and asserts *identical* loss trajectories
-//! — not merely close: the cluster collectives reduce in worker-id
-//! order, so float accumulation order matches the sequential engine
-//! exactly.
+//! The second half (artifact-gated) runs full training on both runtimes
+//! through the shared `tests/common` equivalence harness and asserts
+//! *identical* loss trajectories — not merely close: the cluster
+//! collectives reduce in worker-id order, so float accumulation order
+//! matches the sequential engine exactly. Divergence is reported at the
+//! first differing batch index.
+
+mod common;
 
 use heta::cluster::collective::star;
 use heta::config::{partition_edge_filter, Config, RuntimeKind};
-use heta::coordinator::{Engine, Session, SystemKind};
+use heta::coordinator::SystemKind;
 use heta::hetgraph::NodeId;
 use heta::partition::meta::meta_partition;
 use heta::sampling::{sample_tree, TreeSample};
 use heta::util::json::parse;
 use heta::util::rng::Rng;
+
+use common::variant;
 
 const CFG: &str = r#"{
     "name": "determinism",
@@ -145,26 +150,7 @@ fn threaded_prefetching_workers_sample_identically_to_sequential() {
     }
 }
 
-// ---- artifact-gated full-training equivalence ----
-
-fn run_with_runtime(
-    system: SystemKind,
-    cfg_name: &str,
-    runtime: RuntimeKind,
-    epochs: usize,
-) -> Vec<(f64, f64, f64, f64)> {
-    let mut cfg = Config::load(&format!("configs/{cfg_name}.json")).unwrap();
-    cfg.train.runtime = runtime;
-    let dir = format!("artifacts/{cfg_name}");
-    let mut sess = Session::new(&cfg, &dir).unwrap();
-    let mut engine = Engine::build(&mut sess, system).unwrap();
-    (0..epochs)
-        .map(|ep| {
-            let r = engine.run_epoch(&mut sess, ep).unwrap();
-            (r.loss_mean, r.accuracy, r.epoch_time_s, r.critical_path_s)
-        })
-        .collect()
-}
+// ---- artifact-gated full-training equivalence (shared harness) ----
 
 #[test]
 fn cluster_runtime_reproduces_sequential_losses_exactly() {
@@ -172,17 +158,21 @@ fn cluster_runtime_reproduces_sequential_losses_exactly() {
         return;
     }
     for system in [SystemKind::Heta, SystemKind::DglMetis] {
-        let seq = run_with_runtime(system, "mag-tiny", RuntimeKind::Sequential, 3);
-        let clu = run_with_runtime(system, "mag-tiny", RuntimeKind::Cluster, 3);
-        for (ep, ((ls, acc_s, _, _), (lc, acc_c, et, cp))) in seq.iter().zip(&clu).enumerate() {
-            assert_eq!(
-                ls, lc,
-                "{system:?} epoch {ep}: cluster loss {lc} != sequential {ls}"
-            );
-            assert_eq!(acc_s, acc_c, "{system:?} epoch {ep}: accuracy diverged");
+        let reports = common::assert_losses_identical(
+            "mag-tiny",
+            system,
+            3,
+            &[
+                variant("sequential", |c| c.train.runtime = RuntimeKind::Sequential),
+                variant("cluster", |c| c.train.runtime = RuntimeKind::Cluster),
+            ],
+        );
+        for (ep, r) in reports[1].iter().enumerate() {
             assert!(
-                cp <= et,
-                "{system:?} epoch {ep}: critical path {cp} exceeds summed time {et}"
+                r.critical_path_s <= r.epoch_time_s,
+                "{system:?} epoch {ep}: critical path {} exceeds summed time {}",
+                r.critical_path_s,
+                r.epoch_time_s
             );
         }
     }
@@ -193,19 +183,32 @@ fn pipelined_critical_path_beats_sequential_runtime() {
     if !heta::util::artifacts_ready("mag-tiny") {
         return;
     }
-    let seq = run_with_runtime(SystemKind::Heta, "mag-tiny", RuntimeKind::Sequential, 1);
-    let clu = run_with_runtime(SystemKind::Heta, "mag-tiny", RuntimeKind::Cluster, 1);
-    let (_, _, seq_time, seq_cp) = seq[0];
-    let (_, _, clu_time, clu_cp) = clu[0];
-    assert_eq!(seq_time, seq_cp, "sequential runtime has no overlap");
+    let reports = common::assert_losses_identical(
+        "mag-tiny",
+        SystemKind::Heta,
+        1,
+        &[
+            variant("sequential", |c| c.train.runtime = RuntimeKind::Sequential),
+            variant("cluster", |c| c.train.runtime = RuntimeKind::Cluster),
+        ],
+    );
+    let (seq, clu) = (&reports[0][0], &reports[1][0]);
+    assert_eq!(
+        seq.epoch_time_s, seq.critical_path_s,
+        "sequential runtime has no overlap"
+    );
     // Within one cluster run the summed and pipelined times price the
     // same event set, so the overlap saving is measurement-noise-free.
     assert!(
-        clu_cp < clu_time,
-        "pipeline hid no work: critical path {clu_cp} vs summed {clu_time}"
+        clu.critical_path_s < clu.epoch_time_s,
+        "pipeline hid no work: critical path {} vs summed {}",
+        clu.critical_path_s,
+        clu.epoch_time_s
     );
     assert!(
-        clu_cp < seq_cp,
-        "pipelined critical path {clu_cp} not below sequential {seq_cp}"
+        clu.critical_path_s < seq.critical_path_s,
+        "pipelined critical path {} not below sequential {}",
+        clu.critical_path_s,
+        seq.critical_path_s
     );
 }

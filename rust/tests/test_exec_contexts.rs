@@ -15,10 +15,11 @@
 //! genuinely overlap, while the shared-session escape hatch serializes
 //! them.
 
-use heta::config::{Config, RuntimeKind};
-use heta::coordinator::{Engine, Session, SystemKind};
+mod common;
+
+use heta::config::RuntimeKind;
+use heta::coordinator::SystemKind;
 use heta::exec::ExecContext;
-use heta::metrics::EpochReport;
 
 #[test]
 fn exec_context_moves_to_worker_threads_without_locks() {
@@ -90,24 +91,6 @@ fn param_snapshots_are_immutable_under_later_steps() {
 
 // ---- artifact-gated: loss identity + wall-clock overlap ----
 
-fn run_cluster(
-    system: SystemKind,
-    cfg_name: &str,
-    runtime: RuntimeKind,
-    shared_session: bool,
-    epochs: usize,
-) -> Vec<EpochReport> {
-    let mut cfg = Config::load(&format!("configs/{cfg_name}.json")).unwrap();
-    cfg.train.runtime = runtime;
-    cfg.train.shared_session = shared_session;
-    let dir = format!("artifacts/{cfg_name}");
-    let mut sess = Session::new(&cfg, &dir).unwrap();
-    let mut engine = Engine::build(&mut sess, system).unwrap();
-    (0..epochs)
-        .map(|ep| engine.run_epoch(&mut sess, ep).unwrap())
-        .collect()
-}
-
 #[test]
 fn losses_identical_across_runtimes_and_session_modes() {
     if !heta::util::artifacts_ready("mag-tiny") {
@@ -117,24 +100,23 @@ fn losses_identical_across_runtimes_and_session_modes() {
         // 2×2: {sequential, cluster} × {shared, per-worker}. Sequential
         // ignores the flag (one thread is always serialized), but runs
         // both settings anyway — the flag may never leak into the math.
-        let base = run_cluster(system, "mag-tiny", RuntimeKind::Sequential, false, 3);
-        for (runtime, shared) in [
-            (RuntimeKind::Sequential, true),
-            (RuntimeKind::Cluster, false),
-            (RuntimeKind::Cluster, true),
-        ] {
-            let reps = run_cluster(system, "mag-tiny", runtime, shared, 3);
-            for (ep, (b, r)) in base.iter().zip(&reps).enumerate() {
-                assert_eq!(
-                    b.loss_mean, r.loss_mean,
-                    "{system:?} epoch {ep} {runtime:?}/shared={shared}: loss diverged"
-                );
-                assert_eq!(
-                    b.accuracy, r.accuracy,
-                    "{system:?} epoch {ep} {runtime:?}/shared={shared}: accuracy diverged"
-                );
-            }
-        }
+        common::assert_losses_identical(
+            "mag-tiny",
+            system,
+            3,
+            &[
+                common::variant("sequential", |c| c.train.runtime = RuntimeKind::Sequential),
+                common::variant("sequential+shared", |c| {
+                    c.train.runtime = RuntimeKind::Sequential;
+                    c.train.shared_session = true;
+                }),
+                common::variant("cluster", |c| c.train.runtime = RuntimeKind::Cluster),
+                common::variant("cluster+shared", |c| {
+                    c.train.runtime = RuntimeKind::Cluster;
+                    c.train.shared_session = true;
+                }),
+            ],
+        );
     }
 }
 
@@ -145,7 +127,9 @@ fn per_worker_contexts_overlap_forward_stages_in_wall_clock() {
     }
     // Per-worker contexts: across a whole epoch of batches, at least two
     // workers' forward executions must have run concurrently.
-    let free = run_cluster(SystemKind::Heta, "mag-tiny", RuntimeKind::Cluster, false, 1);
+    let free = common::run_reports("mag-tiny", SystemKind::Heta, 1, "per-worker", |c| {
+        c.train.runtime = RuntimeKind::Cluster;
+    });
     let peak = free[0].wall.max_concurrent_forward();
     assert!(
         peak >= 2,
@@ -153,7 +137,10 @@ fn per_worker_contexts_overlap_forward_stages_in_wall_clock() {
     );
     // The escape hatch serializes marshal+execute on one token, so no
     // two forward executions can ever be in flight together.
-    let gated = run_cluster(SystemKind::Heta, "mag-tiny", RuntimeKind::Cluster, true, 1);
+    let gated = common::run_reports("mag-tiny", SystemKind::Heta, 1, "shared-session", |c| {
+        c.train.runtime = RuntimeKind::Cluster;
+        c.train.shared_session = true;
+    });
     let gated_peak = gated[0].wall.max_concurrent_forward();
     assert_eq!(
         gated_peak, 1,

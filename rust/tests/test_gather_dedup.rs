@@ -9,13 +9,17 @@
 //! exactly once per unique id per batch.
 //!
 //! The artifact-gated half runs full training with `dedup_fetch` on and
-//! off, on both runtimes, asserting identical loss trajectories and
-//! strictly fewer fetched rows — skipped until `make artifacts` exists.
+//! off, on both runtimes, asserting identical loss trajectories (via
+//! the shared `tests/common` equivalence harness, which reports the
+//! first diverging batch) and strictly fewer fetched rows — skipped
+//! until `make artifacts` exists.
+
+mod common;
 
 use heta::cache::{FeatureCache, Policy, TypeProfile};
 use heta::comm::CostModel;
-use heta::config::{Config, RuntimeKind};
-use heta::coordinator::{Engine, Session, SystemKind};
+use heta::config::RuntimeKind;
+use heta::coordinator::SystemKind;
 use heta::datagen::{generate, GenParams, Preset};
 use heta::hetgraph::{MetaTree, NodeId};
 use heta::kvstore::{scatter_rows, FeatureStore};
@@ -206,28 +210,7 @@ fn cache_ledgers_count_each_unique_id_once_per_batch() {
     }
 }
 
-// ---- artifact-gated full-training A/B ----
-
-fn run_epochs(
-    system: SystemKind,
-    cfg_name: &str,
-    runtime: RuntimeKind,
-    dedup: bool,
-    epochs: usize,
-) -> Vec<(f64, u64, u64)> {
-    let mut cfg = Config::load(&format!("configs/{cfg_name}.json")).unwrap();
-    cfg.train.runtime = runtime;
-    cfg.train.dedup_fetch = dedup;
-    let dir = format!("artifacts/{cfg_name}");
-    let mut sess = Session::new(&cfg, &dir).unwrap();
-    let mut engine = Engine::build(&mut sess, system).unwrap();
-    (0..epochs)
-        .map(|ep| {
-            let r = engine.run_epoch(&mut sess, ep).unwrap();
-            (r.loss_mean, r.fetch.rows, r.fetch.bytes)
-        })
-        .collect()
-}
+// ---- artifact-gated full-training A/B (shared harness) ----
 
 #[test]
 fn dedup_fetch_preserves_losses_and_reduces_rows_across_runtimes() {
@@ -236,18 +219,26 @@ fn dedup_fetch_preserves_losses_and_reduces_rows_across_runtimes() {
     }
     for system in [SystemKind::Heta, SystemKind::DglOpt] {
         for runtime in [RuntimeKind::Sequential, RuntimeKind::Cluster] {
-            let on = run_epochs(system, "mag-tiny", runtime, true, 2);
-            let off = run_epochs(system, "mag-tiny", runtime, false, 2);
-            for (ep, (&(l_on, r_on, b_on), &(l_off, r_off, b_off))) in
-                on.iter().zip(&off).enumerate()
-            {
-                assert_eq!(
-                    l_on, l_off,
-                    "{system:?}/{runtime:?} epoch {ep}: dedup changed the loss"
-                );
+            let reports = common::assert_losses_identical(
+                "mag-tiny",
+                system,
+                2,
+                &[
+                    common::variant("dedup-on", move |c| c.train.runtime = runtime),
+                    common::variant("dedup-off", move |c| {
+                        c.train.runtime = runtime;
+                        c.train.dedup_fetch = false;
+                    }),
+                ],
+            );
+            for (ep, (on, off)) in reports[0].iter().zip(&reports[1]).enumerate() {
                 assert!(
-                    r_on < r_off && b_on < b_off,
-                    "{system:?}/{runtime:?} epoch {ep}: rows {r_on} !< {r_off} or bytes {b_on} !< {b_off}"
+                    on.fetch.rows < off.fetch.rows && on.fetch.bytes < off.fetch.bytes,
+                    "{system:?}/{runtime:?} epoch {ep}: rows {} !< {} or bytes {} !< {}",
+                    on.fetch.rows,
+                    off.fetch.rows,
+                    on.fetch.bytes,
+                    off.fetch.bytes
                 );
             }
         }
