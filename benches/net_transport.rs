@@ -1,0 +1,147 @@
+//! Channel vs loopback-TCP transport A/B (the PR-5 bench): run the
+//! same cluster config on the in-process channel transport and on the
+//! socket star (one thread **and one Session per rank**, real frames
+//! through the codec), for both engines. Reports real wall-clock epoch
+//! time, the real bytes the wire moved, the modeled bytes of the same
+//! messages (the `Wire::wire_bytes` cost-model view — the gap is codec
+//! + harness overhead made visible), and asserts the equivalence bar:
+//! byte-identical per-batch losses across transports, with modeled
+//! never exceeding real. Emits `BENCH_net.json` (uploaded by CI next
+//! to the other bench artifacts).
+
+use std::time::Instant;
+
+use heta::config::{Config, RuntimeKind};
+use heta::coordinator::{run_loopback_tcp, Engine, Session, SystemKind};
+use heta::metrics::EpochReport;
+use heta::util::bench::{report, table};
+use heta::util::fmt_bytes;
+use heta::util::fmt_secs;
+use heta::util::json::Json;
+
+const EPOCHS: usize = 2;
+
+/// In-process channel run. The timer covers session + engine build AND
+/// the epochs — the same span the TCP side measures, so the A/B
+/// compares like with like (the TCP column legitimately pays one
+/// session build per rank: that is the real cost of process-per-rank
+/// deployment, and it is reported as such rather than folded into a
+/// misleading "transport" overhead).
+fn run_channel(cfg: &Config, system: SystemKind) -> (Vec<EpochReport>, f64) {
+    let mut cfg = cfg.clone();
+    cfg.train.runtime = RuntimeKind::Cluster;
+    let dir = format!("artifacts/{}", cfg.name);
+    let t0 = Instant::now();
+    let mut sess = Session::new(&cfg, &dir)
+        .unwrap_or_else(|e| panic!("session for {}: {e} (run `make artifacts`)", cfg.name));
+    let mut engine = Engine::build(&mut sess, system).unwrap();
+    let reps = (0..EPOCHS)
+        .map(|ep| engine.run_epoch(&mut sess, ep).unwrap())
+        .collect();
+    (reps, t0.elapsed().as_secs_f64())
+}
+
+/// Loopback-TCP run (one session per rank, real sockets). Same
+/// measurement span as [`run_channel`]: builds + epochs.
+fn run_tcp(cfg: &Config, system: SystemKind) -> (Vec<EpochReport>, f64) {
+    let mut cfg = cfg.clone();
+    cfg.train.runtime = RuntimeKind::Cluster;
+    let dir = format!("artifacts/{}", cfg.name);
+    let t0 = Instant::now();
+    let reps = run_loopback_tcp(&cfg, &dir, system, EPOCHS)
+        .unwrap_or_else(|e| panic!("loopback tcp for {}: {e:#}", cfg.name));
+    (reps, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let cfg_name = "mag-tiny";
+    if !heta::util::artifacts_ready(cfg_name) {
+        return;
+    }
+    let cfg = Config::load(&format!("configs/{cfg_name}.json"))
+        .unwrap_or_else(|e| panic!("loading config {cfg_name}: {e}"));
+
+    let mut rows = Vec::new();
+    let mut entries = Vec::new();
+    for (system, label) in [(SystemKind::Heta, "raf"), (SystemKind::DglMetis, "vanilla")] {
+        let (chan, chan_wall) = run_channel(&cfg, system);
+        let (tcp, tcp_wall) = run_tcp(&cfg, system);
+
+        // The equivalence bar, asserted where the numbers are made.
+        for (ep, (c, t)) in chan.iter().zip(&tcp).enumerate() {
+            assert_eq!(
+                c.batch_losses.len(),
+                t.batch_losses.len(),
+                "{label} epoch {ep}: batch counts diverged across transports"
+            );
+            for (bi, (lc, lt)) in c.batch_losses.iter().zip(&t.batch_losses).enumerate() {
+                assert_eq!(
+                    lc.to_bits(),
+                    lt.to_bits(),
+                    "{label} epoch {ep} batch {bi}: losses diverged across transports"
+                );
+            }
+        }
+        let wire = tcp.iter().fold(heta::net::WireTraffic::default(), |mut acc, r| {
+            acc.merge(&r.wire);
+            acc
+        });
+        assert!(wire.real_total() > 0, "{label}: the tcp run must move real bytes");
+        assert!(
+            wire.modeled_total() <= wire.real_total(),
+            "{label}: modeled bytes exceed the wire's real bytes"
+        );
+
+        for (transport, wall, w) in [
+            ("channel", chan_wall, None),
+            ("tcp", tcp_wall, Some(&wire)),
+        ] {
+            rows.push(vec![
+                label.to_string(),
+                transport.to_string(),
+                // Wall includes session/engine builds (per rank on tcp).
+                fmt_secs(wall / EPOCHS as f64),
+                w.map_or("0 B".into(), |w| fmt_bytes(w.real_total())),
+                w.map_or("0 B".into(), |w| fmt_bytes(w.modeled_total())),
+                w.map_or("0".into(), |w| w.frames().to_string()),
+            ]);
+            entries.push(Json::from_pairs(vec![
+                ("engine", Json::str(label)),
+                ("config", Json::str(cfg_name)),
+                ("transport", Json::str(transport)),
+                ("epochs", Json::num(EPOCHS as f64)),
+                ("wall_per_epoch_s", Json::num(wall / EPOCHS as f64)),
+                (
+                    "real_bytes",
+                    Json::num(w.map_or(0, |w| w.real_total()) as f64),
+                ),
+                (
+                    "modeled_bytes",
+                    Json::num(w.map_or(0, |w| w.modeled_total()) as f64),
+                ),
+                ("frames", Json::num(w.map_or(0, |w| w.frames()) as f64)),
+            ]));
+        }
+        report(
+            &format!("net/{label}/tcp_wall_overhead"),
+            format!("{:.2}x", tcp_wall / chan_wall.max(1e-9)),
+        );
+        report(
+            &format!("net/{label}/codec_overhead"),
+            format!(
+                "{:.2}x real/modeled",
+                wire.real_total() as f64 / (wire.modeled_total().max(1)) as f64
+            ),
+        );
+    }
+    table(
+        "Wire transport: channel vs loopback TCP (losses byte-identical; \
+         wall spans build+epochs — tcp builds one session per rank)",
+        &["engine", "transport", "wall/epoch", "real bytes", "modeled bytes", "frames"],
+        &rows,
+    );
+
+    let out = Json::from_pairs(vec![("net_transport", Json::Arr(entries))]).to_string();
+    std::fs::write("BENCH_net.json", &out).expect("write BENCH_net.json");
+    println!("wrote BENCH_net.json");
+}

@@ -21,13 +21,22 @@
 //! each collective through [`crate::comm::SimNet`] with the same calls
 //! the sequential runtime makes (see the accounting contract in
 //! [`super::mailbox`]).
+//!
+//! Since PR 5 the hub and port are generic over the
+//! [`Transport`](super::mailbox::Transport) endpoints:
+//! [`star`] wires the in-process channel star, while
+//! [`Hub::from_endpoints`]/[`Port::from_endpoints`] wrap the TCP lanes
+//! of a multi-process star ([`crate::net::tcp`]) around the identical
+//! protocol code — same rounds, same worker-id-ordered reassembly,
+//! same error wording.
 
 use std::collections::BTreeMap;
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use super::mailbox::Mailbox;
+use super::mailbox::{Mailbox, Transport};
 
 /// Batch-cursor sentinel: "this worker died before touching any batch".
 pub const NO_BATCH: usize = usize::MAX;
@@ -78,45 +87,56 @@ pub fn run_contained(
 }
 
 /// Leader endpoint of a star: receives `U`p messages, sends `D`own.
-pub struct Hub<U, D> {
-    up: Mailbox<U>,
-    down: Mailbox<D>,
+///
+/// Generic over the [`Transport`] endpoints (defaulting to in-process
+/// mailboxes); [`Hub::from_endpoints`] wraps the TCP lanes of a
+/// multi-process star around the same protocol code.
+pub struct Hub<U, D, EU = Mailbox<U>, ED = Mailbox<D>> {
+    up: EU,
+    down: ED,
     workers: usize,
     /// Reorder buffer of [`Hub::gather_round`]: contributions that
     /// arrived for a round other than the one being gathered.
     parked: BTreeMap<u64, Vec<Option<U>>>,
+    _down: PhantomData<fn() -> D>,
 }
 
 /// Worker endpoint of a star.
-pub struct Port<U, D> {
-    up: Mailbox<U>,
-    down: Mailbox<D>,
+pub struct Port<U, D, EU = Mailbox<U>, ED = Mailbox<D>> {
+    up: EU,
+    down: ED,
     leader: usize,
+    _types: PhantomData<fn() -> (U, D)>,
 }
 
-/// Build a star of `workers` worker ranks plus one leader rank.
+/// Build an in-process star of `workers` worker ranks plus one leader
+/// rank over channel mailboxes.
 pub fn star<U: Send, D: Send>(workers: usize) -> (Hub<U, D>, Vec<Port<U, D>>) {
     let (up_hub, up_spokes) = Mailbox::<U>::star(workers);
     let (down_hub, down_spokes) = Mailbox::<D>::star(workers);
-    let hub = Hub {
-        up: up_hub,
-        down: down_hub,
-        workers,
-        parked: BTreeMap::new(),
-    };
+    let hub = Hub::from_endpoints(up_hub, down_hub, workers);
     let ports = up_spokes
         .into_iter()
         .zip(down_spokes)
-        .map(|(u, d)| Port {
-            up: u,
-            down: d,
-            leader: workers,
-        })
+        .map(|(u, d)| Port::from_endpoints(u, d, workers))
         .collect();
     (hub, ports)
 }
 
-impl<U: Send, D: Send> Hub<U, D> {
+impl<U, D, EU: Transport<U>, ED: Transport<D>> Hub<U, D, EU, ED> {
+    /// Wrap the leader side of a star around arbitrary transport
+    /// endpoints (`up` receives worker contributions, `down` addresses
+    /// workers `0..workers` directly).
+    pub fn from_endpoints(up: EU, down: ED, workers: usize) -> Hub<U, D, EU, ED> {
+        Hub {
+            up,
+            down,
+            workers,
+            parked: BTreeMap::new(),
+            _down: PhantomData,
+        }
+    }
+
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -154,13 +174,18 @@ impl<U: Send, D: Send> Hub<U, D> {
     /// round so the caller's batch context survives.
     pub fn gather_round(&mut self, round: u64, tag: impl Fn(&U) -> RoundTag) -> Result<Vec<U>> {
         loop {
-            if let Some(slots) = self.parked.get(&round) {
-                if slots.iter().all(|s| s.is_some()) {
-                    let slots = self.parked.remove(&round).expect("checked above");
-                    let out: Vec<U> = slots.into_iter().flatten().collect();
-                    ensure!(out.len() == self.workers, "round {round} gather lost contributions");
-                    return Ok(out);
-                }
+            let complete = self
+                .parked
+                .get(&round)
+                .is_some_and(|slots| slots.iter().all(|s| s.is_some()));
+            if complete {
+                let slots = self
+                    .parked
+                    .remove(&round)
+                    .ok_or_else(|| anyhow!("round {round} vanished from the reorder buffer"))?;
+                let out: Vec<U> = slots.into_iter().flatten().collect();
+                ensure!(out.len() == self.workers, "round {round} gather lost contributions");
+                return Ok(out);
             }
             let workers = self.workers;
             let e = self
@@ -219,9 +244,21 @@ impl<U: Send, D: Send> Hub<U, D> {
     }
 }
 
-impl<U: Send, D: Send> Port<U, D> {
+impl<U, D, EU: Transport<U>, ED: Transport<D>> Port<U, D, EU, ED> {
+    /// Wrap the worker side of a star around arbitrary transport
+    /// endpoints (`leader` is the hub's logical rank, conventionally
+    /// the worker count).
+    pub fn from_endpoints(up: EU, down: ED, leader: usize) -> Port<U, D, EU, ED> {
+        Port {
+            up,
+            down,
+            leader,
+            _types: PhantomData,
+        }
+    }
+
     pub fn id(&self) -> usize {
-        self.up.rank
+        self.up.rank()
     }
 
     /// Ship this worker's contribution to the leader.
@@ -239,7 +276,7 @@ impl<U: Send, D: Send> Port<U, D> {
     }
 }
 
-impl Hub<(), ()> {
+impl<EU: Transport<()>, ED: Transport<()>> Hub<(), (), EU, ED> {
     /// Leader half of the epoch barrier: wait for every worker, then
     /// release them all.
     pub fn barrier(&self) -> Result<()> {
@@ -248,7 +285,7 @@ impl Hub<(), ()> {
     }
 }
 
-impl Port<(), ()> {
+impl<EU: Transport<()>, ED: Transport<()>> Port<(), (), EU, ED> {
     /// Worker half of the epoch barrier.
     pub fn barrier(&self) -> Result<()> {
         self.send(())?;

@@ -6,9 +6,33 @@
 //! rank so collectives can reassemble results in deterministic worker
 //! order regardless of thread interleaving.
 //!
-//! Transport errors (a peer thread exited and dropped its endpoint)
-//! surface as `anyhow::Result` — never panics — so one failed worker
-//! unwinds the whole epoch as an error instead of a poisoned mutex.
+//! ## The transport contract
+//!
+//! Since PR 5 the mailbox is one implementation of the [`Transport`]
+//! trait, and everything above it — the collectives in
+//! [`super::collective`] and both cluster engines — is generic over
+//! the endpoint. The second implementation is the socket star of
+//! [`crate::net::tcp`], which runs the same protocols with one OS
+//! process per rank. An implementation owes exactly four guarantees:
+//!
+//! 1. **Addressing** — `send(to, m)` delivers `m` to logical rank `to`
+//!    only, and `recv()` yields envelopes stamped with the true sender
+//!    rank (collectives index their slots by it).
+//! 2. **Per-lane FIFO** — messages from one rank to another arrive in
+//!    send order (see below); messages from different senders may
+//!    interleave arbitrarily.
+//! 3. **Hangup-as-error** — a dead peer (dropped endpoint, closed
+//!    socket, process exit) surfaces as `anyhow::Error` from `send`/
+//!    `recv`, **never** a panic or a silent hang where detectable; the
+//!    engines' death notices cover the silent cases.
+//! 4. **Payload fidelity** — what arrives is bit-identical to what was
+//!    sent (the TCP codec moves floats as raw IEEE-754 bits for this
+//!    reason). Determinism of the whole runtime rests on it.
+//!
+//! Transport errors surface as `anyhow::Result` — never panics — so
+//! one failed worker unwinds the whole epoch as an error instead of a
+//! poisoned mutex. The codec's fallible decode flows through the same
+//! `Result` paths.
 //!
 //! Ordering contract: delivery is FIFO **per (sender, receiver) lane**
 //! — messages from one rank to another arrive in send order, while
@@ -39,9 +63,59 @@ pub trait Wire {
     fn wire_bytes(&self) -> u64;
 }
 
+/// Barrier tokens and other pure-control messages are modeled-free.
+impl Wire for () {
+    fn wire_bytes(&self) -> u64 {
+        0
+    }
+}
+
 /// Bytes of a dense slice payload.
 pub fn slice_bytes<T>(v: &[T]) -> u64 {
     std::mem::size_of_val(v) as u64
+}
+
+/// One rank's typed endpoint of a cluster transport — the abstraction
+/// the collectives and both cluster engines are written against. See
+/// the module docs for the four guarantees an implementation owes
+/// (addressing, per-lane FIFO, hangup-as-error, payload fidelity).
+///
+/// Implemented by the in-process [`Mailbox`] and by the socket-backed
+/// [`TcpChannel`](crate::net::TcpChannel); the blanket `&E` impl lets
+/// long-lived endpoints (TCP lanes persist across epochs) be borrowed
+/// into per-epoch [`Hub`](super::collective::Hub)/
+/// [`Port`](super::collective::Port) wrappers.
+pub trait Transport<T> {
+    /// This endpoint's logical rank.
+    fn rank(&self) -> usize;
+    /// Send `payload` to logical rank `to`.
+    fn send(&self, to: usize, payload: T) -> Result<()>;
+    /// Receive the next message addressed to this rank, blocking.
+    fn recv(&self) -> Result<Envelope<T>>;
+}
+
+impl<T, E: Transport<T>> Transport<T> for &E {
+    fn rank(&self) -> usize {
+        (**self).rank()
+    }
+    fn send(&self, to: usize, payload: T) -> Result<()> {
+        (**self).send(to, payload)
+    }
+    fn recv(&self) -> Result<Envelope<T>> {
+        (**self).recv()
+    }
+}
+
+impl<T: Send> Transport<T> for Mailbox<T> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+    fn send(&self, to: usize, payload: T) -> Result<()> {
+        Mailbox::send(self, to, payload)
+    }
+    fn recv(&self) -> Result<Envelope<T>> {
+        Mailbox::recv(self)
+    }
 }
 
 /// A message in flight, tagged with its sender rank.

@@ -50,8 +50,65 @@
 //! `train.runtime` config flag (`"sequential"` | `"cluster"`); the
 //! `train.pipeline` flag isolates the double-buffering for A/B runs and
 //! `train.shared_session` reproduces the old serialized execution.
+//!
+//! Since PR 5 the whole stack above is generic over the
+//! [`Transport`](mailbox::Transport) contract: the collectives and
+//! both engine loops run unchanged over in-process channels
+//! (`train.transport = "channel"`, threads as above) or over the TCP
+//! star of [`crate::net`] (`"tcp"` — one OS process per rank, every
+//! message through the versioned wire codec, the leader's
+//! learnable-feature updates replicated to worker-process stores by
+//! delta broadcast). Losses are byte-identical across both transports
+//! at any fixed staleness; `heta launch -n K` spawns a local
+//! multi-process cluster.
 
 pub mod collective;
 pub mod mailbox;
 pub mod raf;
 pub mod vanilla;
+
+use anyhow::{ensure, Result};
+
+use crate::net::codec::WireCodec;
+use crate::net::tcp::{
+    TcpChannel, TcpNode, LANE_BARRIER_DOWN, LANE_BARRIER_UP, LANE_DATA_DOWN, LANE_DATA_UP,
+};
+use crate::net::{Role, WireTraffic};
+use mailbox::Wire;
+
+/// One process's four typed socket lanes, generic over an engine's
+/// protocol types (`U`p worker→leader, `D`own leader→worker). Opened
+/// once per training run from the session's [`TcpNode`] and reused
+/// across epochs (each lane's receive queue exists exactly once). Both
+/// engines wrap this in their own `TcpLanes` newtype, instantiated
+/// with their private message enums.
+pub(crate) struct Lanes<U, D> {
+    pub(crate) up: TcpChannel<U>,
+    pub(crate) down: TcpChannel<D>,
+    pub(crate) bar_up: TcpChannel<()>,
+    pub(crate) bar_down: TcpChannel<()>,
+    pub(crate) role: Role,
+}
+
+impl<U: WireCodec + Wire, D: WireCodec + Wire> Lanes<U, D> {
+    pub(crate) fn open(node: &TcpNode, parts: usize) -> Result<Lanes<U, D>> {
+        ensure!(
+            node.workers() == parts,
+            "the TCP star has {} worker ranks but this config trains {parts} partitions \
+             (check --peers / train.num_partitions)",
+            node.workers()
+        );
+        Ok(Lanes {
+            up: node.open_lane(LANE_DATA_UP)?,
+            down: node.open_lane(LANE_DATA_DOWN)?,
+            bar_up: node.open_lane(LANE_BARRIER_UP)?,
+            bar_down: node.open_lane(LANE_BARRIER_DOWN)?,
+            role: node.role(),
+        })
+    }
+
+    /// Node-level counters: every lane of this process.
+    pub(crate) fn traffic(&self) -> WireTraffic {
+        self.up.traffic()
+    }
+}

@@ -41,6 +41,22 @@
 //! order — exactly the order the sequential engine uses — so at
 //! staleness 0 losses and parameter trajectories are byte-identical to
 //! the sequential runtime under any thread interleaving.
+//!
+//! Since PR 5 both loops are generic over the
+//! [`Transport`](super::mailbox::Transport) endpoints. [`run_epoch`]
+//! wires them over in-process channels (thread per partition, as
+//! before); [`run_epoch_tcp`] runs the *same* loops over the socket
+//! star of [`crate::net::tcp`] — one OS process per rank, each having
+//! derived the identical batch schedule from the seeds, with every
+//! protocol message crossing the wire through the
+//! [`WireCodec`](crate::net::codec::WireCodec) impls below. The one
+//! cross-process addition is the `Down::Store` delta: the leader's
+//! learnable-feature updates are read back and broadcast so every
+//! worker process's KV store replays them, and per-lane FIFO delivers
+//! each delta before any batch released after it — marshals therefore
+//! read exactly the store state the shared-store runtime would, and
+//! losses stay byte-identical across `channel | tcp` at any fixed
+//! staleness.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -57,20 +73,24 @@ use crate::exec::{
     BatchArena, BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, InFlight,
     ParamsView,
 };
-use crate::hetgraph::NodeId;
-use crate::kvstore::FetchStats;
+use crate::hetgraph::{HetGraph, NodeId};
+use crate::kvstore::{FetchStats, StoreDelta};
 use crate::metrics::timeline::{AsyncShape, EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
+use crate::net::codec::{ByteReader, ByteWriter, WireCodec};
+use crate::net::tcp::TcpNode;
+use crate::net::Role;
 use crate::partition::MetaPartition;
 use crate::runtime::ParamSnapshot;
 use crate::sampling::{sample_tree, Frontier, TreeSample};
 use crate::util::{add_assign, rng::Rng};
 
 use super::collective::{run_contained, star, Hub, Port, RoundTag, NO_BATCH};
-use super::mailbox::{slice_bytes, Wire};
+use super::mailbox::{slice_bytes, Transport, Wire};
 
 /// Worker → leader messages, tagged with their batch so the leader's
 /// round gather can park run-ahead contributions from fast workers.
+#[derive(Debug, PartialEq)]
 enum Up {
     Fwd {
         bi: usize,
@@ -138,16 +158,17 @@ impl Wire for Up {
     }
 }
 
-/// Leader → worker messages, batch-tagged. Both carry the current
-/// parameter snapshot: `Ready` releases batch `bi` with the newest
-/// broadcast weights (under a staleness window these may trail the
-/// store by up to `k` updates), `Grads` ships `∂partials` plus the
-/// post-head-update weights the backward rebuild marshals from. In the
-/// modeled system each partition owns its weights locally (model
-/// parallelism), so snapshot distribution is an in-process artifact of
-/// the single-machine harness, not wire traffic — only the 2·[B,H]
-/// gradients count.
-#[derive(Clone)]
+/// Leader → worker messages, batch-tagged. `Ready` releases batch `bi`
+/// with the newest broadcast weights (under a staleness window these
+/// may trail the store by up to `k` updates), `Grads` ships `∂partials`
+/// plus the post-head-update weights the backward rebuild marshals
+/// from, and `Store` replays the leader's learnable-feature writes into
+/// a worker *process's* KV store (TCP only; the in-process runtime
+/// shares one store and never sends it). In the modeled system each
+/// partition owns its weights and learnable rows locally (model
+/// parallelism), so snapshot and delta distribution are artifacts of
+/// the harness, not wire traffic — only the 2·[B,H] gradients count.
+#[derive(Clone, Debug, PartialEq)]
 enum Down {
     Grads {
         bi: usize,
@@ -159,6 +180,8 @@ enum Down {
         bi: usize,
         params: Arc<ParamSnapshot>,
     },
+    /// Post-update learnable rows of batch `bi` (see [`StoreDelta`]).
+    Store { bi: usize, delta: StoreDelta },
 }
 
 impl Wire for Down {
@@ -167,8 +190,132 @@ impl Wire for Down {
             // The 2·[B,H] backward partial-gradients per worker.
             Down::Grads { g1, g2, .. } => slice_bytes(g1) + slice_bytes(g2),
             Down::Ready { .. } => 0,
+            Down::Store { .. } => 0,
         }
     }
+}
+
+// ---- wire codec (PR 5): every protocol message next to its type ----
+
+impl WireCodec for Up {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Up::Fwd { bi, p1, p2, stats, span, stages, wall_fwd } => {
+                w.u8(0);
+                w.usize(*bi);
+                w.f32s(p1);
+                w.f32s(p2);
+                stats.encode(w);
+                span.encode(w);
+                stages.encode(w);
+                wall_fwd.encode(w);
+            }
+            Up::Bwd { bi, grads, bwd_s, stages, wall_bwd } => {
+                w.u8(1);
+                w.usize(*bi);
+                grads.encode(w);
+                w.f64(*bwd_s);
+                stages.encode(w);
+                wall_bwd.encode(w);
+            }
+            Up::Failed { bi, msg } => {
+                w.u8(2);
+                w.usize(*bi);
+                w.str(msg);
+            }
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<Up> {
+        match r.u8()? {
+            0 => {
+                let bi = r.usize()?;
+                let p1 = r.f32s()?;
+                let p2 = r.f32s()?;
+                let stats = FetchStats::decode(r)?;
+                let span = WorkerSpan::decode(r)?;
+                let stages = StageTimes::decode(r)?;
+                let wall_fwd = <(f64, f64)>::decode(r)?;
+                Ok(Up::Fwd { bi, p1, p2, stats, span, stages, wall_fwd })
+            }
+            1 => {
+                let bi = r.usize()?;
+                let grads = crate::exec::WorkerGrads::decode(r)?;
+                let bwd_s = r.f64()?;
+                let stages = StageTimes::decode(r)?;
+                let wall_bwd = <(f64, f64)>::decode(r)?;
+                Ok(Up::Bwd { bi, grads, bwd_s, stages, wall_bwd })
+            }
+            2 => {
+                let bi = r.usize()?;
+                let msg = r.str()?;
+                Ok(Up::Failed { bi, msg })
+            }
+            t => bail!("unknown RAF worker-message tag {t}"),
+        }
+    }
+}
+
+impl WireCodec for Down {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Down::Ready { bi, params } => {
+                w.u8(0);
+                w.usize(*bi);
+                params.encode(w);
+            }
+            Down::Grads { bi, g1, g2, params } => {
+                w.u8(1);
+                w.usize(*bi);
+                w.f32s(g1);
+                w.f32s(g2);
+                params.encode(w);
+            }
+            Down::Store { bi, delta } => {
+                w.u8(2);
+                w.usize(*bi);
+                delta.encode(w);
+            }
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<Down> {
+        match r.u8()? {
+            0 => {
+                let bi = r.usize()?;
+                let params = Arc::new(ParamSnapshot::decode(r)?);
+                Ok(Down::Ready { bi, params })
+            }
+            1 => {
+                let bi = r.usize()?;
+                let g1 = r.f32s()?;
+                let g2 = r.f32s()?;
+                let params = Arc::new(ParamSnapshot::decode(r)?);
+                Ok(Down::Grads { bi, g1, g2, params })
+            }
+            2 => {
+                let bi = r.usize()?;
+                let delta = StoreDelta::decode(r)?;
+                Ok(Down::Store { bi, delta })
+            }
+            t => bail!("unknown RAF leader-message tag {t}"),
+        }
+    }
+}
+
+/// The epoch's batch schedule. Derived from config seeds only, so every
+/// process of a multi-process cluster computes the identical schedule
+/// without exchanging a byte.
+fn batch_schedule(g: &HetGraph, cfg: &Config, epoch: usize) -> Vec<Vec<NodeId>> {
+    let mut train = g.train_nodes();
+    let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
+    shuffle_rng.shuffle(&mut train);
+    let b = cfg.train.batch_size;
+    train
+        .chunks(b)
+        .filter(|c| c.len() == b) // drop the ragged tail (static shapes)
+        .map(|c| c.to_vec())
+        .collect()
 }
 
 /// Run one RAF epoch on the cluster runtime.
@@ -199,15 +346,7 @@ pub fn run_epoch(
     let g = Arc::clone(&sess.g);
     let tree = Arc::clone(&sess.tree);
 
-    let mut train = sess.g.train_nodes();
-    let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
-    shuffle_rng.shuffle(&mut train);
-    let b = cfg.train.batch_size;
-    let batches: Vec<Vec<NodeId>> = train
-        .chunks(b)
-        .filter(|c| c.len() == b) // drop the ragged tail (static shapes)
-        .map(|c| c.to_vec())
-        .collect();
+    let batches = batch_schedule(&g, &cfg, epoch);
     if batches.is_empty() {
         // Nothing to release: spawning workers would race the initial
         // Ready broadcast against their immediate teardown.
@@ -263,6 +402,7 @@ pub fn run_epoch(
             leader_part,
             pipeline,
             staleness,
+            false, // one shared store: nothing to replicate
         );
         let mut worker_err: Option<anyhow::Error> = None;
         for h in handles {
@@ -302,23 +442,48 @@ pub fn run_epoch(
     report
 }
 
+/// Receive the next protocol message, transparently replaying store
+/// deltas into this process's KV store (the TCP replication of the
+/// leader's learnable-feature writes; never sent in-process). Per-lane
+/// FIFO guarantees a delta lands before any batch the leader released
+/// after the update that produced it.
+fn recv_data<EU: Transport<Up>, ED: Transport<Down>>(
+    port: &Port<Up, Down, EU, ED>,
+    world: &EpochWorld<'_>,
+) -> Result<Down> {
+    loop {
+        match port.recv()? {
+            Down::Store { bi, delta } => delta
+                .apply(&mut world.store_mut())
+                .with_context(|| format!("replaying batch {bi}'s learnable-feature delta"))?,
+            m => return Ok(m),
+        }
+    }
+}
+
 /// Runs the worker body; on error (or panic), ships a best-effort death
 /// notice naming the batch that was in flight so the leader's gather
 /// fails fast — with the root cause — instead of blocking on a dead
 /// peer or reporting a bare hangup.
 #[allow(clippy::too_many_arguments)]
-fn worker_loop(
+fn worker_loop<EU, ED, BU, BD>(
     ctx: &mut ExecContext,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
     mp: &MetaPartition,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    port: &Port<Up, Down>,
-    bport: &Port<(), ()>,
+    port: &Port<Up, Down, EU, ED>,
+    bport: &Port<(), (), BU, BD>,
     pipeline: bool,
     staleness: usize,
-) -> Result<()> {
+) -> Result<()>
+where
+    EU: Transport<Up>,
+    ED: Transport<Down>,
+    BU: Transport<()>,
+    BD: Transport<()>,
+{
     let p = ctx.worker;
     // The batch cursor outlives a panic's unwinding, so the death
     // notice still names the batch in flight.
@@ -346,18 +511,24 @@ fn worker_loop(
 /// batch `i+1`'s sample (and dedup frontier) hidden inside the leader
 /// phase when `pipeline` is on. Byte-for-byte the pre-window protocol.
 #[allow(clippy::too_many_arguments)]
-fn worker_run_sync(
+fn worker_run_sync<EU, ED, BU, BD>(
     ctx: &mut ExecContext,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
     mp: &MetaPartition,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    port: &Port<Up, Down>,
-    bport: &Port<(), ()>,
+    port: &Port<Up, Down, EU, ED>,
+    bport: &Port<(), (), BU, BD>,
     pipeline: bool,
     cur: &AtomicUsize,
-) -> Result<()> {
+) -> Result<()>
+where
+    EU: Transport<Up>,
+    ED: Transport<Down>,
+    BU: Transport<()>,
+    BD: Transport<()>,
+{
     bport.barrier()?;
     let p = ctx.worker;
     let cfg: &Config = world.cfg;
@@ -377,7 +548,7 @@ fn worker_run_sync(
         cur.store(bi, Ordering::Relaxed);
         // Batch i's forward needs batch i-1's updated weights: the
         // Ready release carries the current parameter snapshot.
-        let snapshot = match port.recv()? {
+        let snapshot = match recv_data(port, world)? {
             Down::Ready { bi: rbi, params } => {
                 if rbi != bi {
                     bail!("worker {p}: Ready for batch {rbi} arrived while expecting batch {bi}");
@@ -386,6 +557,9 @@ fn worker_run_sync(
             }
             Down::Grads { bi: gbi, .. } => {
                 bail!("worker {p}: batch {gbi} gradients arrived before batch {bi}'s Ready")
+            }
+            Down::Store { bi: sbi, .. } => {
+                bail!("worker {p}: batch {sbi} store delta escaped recv_data (protocol bug)")
             }
         };
         let (sample, frontier, sample_s) = match prefetched.take() {
@@ -454,7 +628,7 @@ fn worker_run_sync(
         }
 
         // ---- backward stage: ∂partials + the post-head-update snapshot ----
-        let (g1, g2, snapshot) = match port.recv()? {
+        let (g1, g2, snapshot) = match recv_data(port, world)? {
             Down::Grads { bi: gbi, g1, g2, params } => {
                 if gbi != bi {
                     bail!("worker {p}: gradients for batch {gbi} arrived while expecting {bi}");
@@ -463,6 +637,9 @@ fn worker_run_sync(
             }
             Down::Ready { bi: rbi, .. } => {
                 bail!("worker {p}: batch {rbi} Ready arrived before batch {bi}'s gradients")
+            }
+            Down::Store { bi: sbi, .. } => {
+                bail!("worker {p}: batch {sbi} store delta escaped recv_data (protocol bug)")
             }
         };
         let bwd = wp.raf_backward(
@@ -502,18 +679,24 @@ fn worker_run_sync(
 /// `k + 1` batches are open at once, each owning its arena so backward
 /// rebuilds scatter from their own forward's staged rows.
 #[allow(clippy::too_many_arguments)]
-fn worker_run_windowed(
+fn worker_run_windowed<EU, ED, BU, BD>(
     ctx: &mut ExecContext,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
     mp: &MetaPartition,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    port: &Port<Up, Down>,
-    bport: &Port<(), ()>,
+    port: &Port<Up, Down, EU, ED>,
+    bport: &Port<(), (), BU, BD>,
     staleness: usize,
     cur: &AtomicUsize,
-) -> Result<()> {
+) -> Result<()>
+where
+    EU: Transport<Up>,
+    ED: Transport<Down>,
+    BU: Transport<()>,
+    BD: Transport<()>,
+{
     bport.barrier()?;
     let p = ctx.worker;
     let cfg: &Config = world.cfg;
@@ -527,7 +710,10 @@ fn worker_run_windowed(
     let mut completed = 0usize;
 
     while completed < batches.len() {
-        match port.recv()? {
+        match recv_data(port, world)? {
+            Down::Store { bi, .. } => {
+                bail!("worker {p}: batch {bi} store delta escaped recv_data (protocol bug)")
+            }
             Down::Ready { bi, params } => {
                 if bi != next_ready {
                     bail!("worker {p}: release for batch {bi} arrived, expected {next_ready}");
@@ -619,9 +805,9 @@ fn worker_run_windowed(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn leader_loop(
-    mut hub: Hub<Up, Down>,
-    bhub: Hub<(), ()>,
+fn leader_loop<EU, ED, BU, BD>(
+    mut hub: Hub<Up, Down, EU, ED>,
+    bhub: Hub<(), (), BU, BD>,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
     leader_ctx: &mut ExecContext,
@@ -635,7 +821,14 @@ fn leader_loop(
     leader_part: usize,
     pipeline: bool,
     staleness: usize,
-) -> Result<EpochReport> {
+    replicate: bool,
+) -> Result<EpochReport>
+where
+    EU: Transport<Up>,
+    ED: Transport<Down>,
+    BU: Transport<()>,
+    BD: Transport<()>,
+{
     bhub.barrier()?;
     let cfg = world.cfg;
     let b = cfg.train.batch_size;
@@ -698,7 +891,10 @@ fn leader_loop(
                 Up::Bwd { bi: ubi, .. } => {
                     bail!("protocol error: batch {ubi} gradients in batch {bi}'s forward round")
                 }
-                Up::Failed { .. } => unreachable!("gather_round aborts on Failed"),
+                Up::Failed { bi: fbi, msg } => bail!(
+                    "batch {fbi} death notice escaped gather_round's abort path \
+                     (protocol bug): {msg}"
+                ),
             }
         }
         // ---- async release: batch bi+k goes out the moment batch bi's
@@ -794,7 +990,10 @@ fn leader_loop(
                 Up::Fwd { bi: ubi, .. } => {
                     bail!("protocol error: batch {ubi} partials in batch {bi}'s backward round")
                 }
-                Up::Failed { .. } => unreachable!("gather_round aborts on Failed"),
+                Up::Failed { bi: fbi, msg } => bail!(
+                    "batch {fbi} death notice escaped gather_round's abort path \
+                     (protocol bug): {msg}"
+                ),
             }
         }
 
@@ -819,6 +1018,23 @@ fn leader_loop(
         } else {
             0.0
         };
+        // ---- TCP only: replicate this update's learnable-row writes
+        // into every worker process's store. Sent *before* any later
+        // release, so per-lane FIFO lands the delta ahead of every
+        // marshal that must observe it — exactly the shared-store
+        // visibility order. ----
+        if replicate {
+            let mut touched = gacc.touched_rows();
+            touched.push((world.g.schema.target, chunk.clone()));
+            let delta = {
+                let store = world.store();
+                StoreDelta::capture(&store, touched.iter().map(|(ty, ids)| (*ty, ids.as_slice())))
+                    .with_context(|| format!("batch {bi}: capturing the learnable-row delta"))?
+            };
+            if !delta.is_empty() {
+                hub.broadcast(Down::Store { bi, delta })?;
+            }
+        }
 
         timeline.push_batch(
             worker_spans,
@@ -858,6 +1074,7 @@ fn leader_loop(
         stages,
         comm: net.total(),
         fetch,
+        wire: Default::default(), // the in-process transports move no frames
         loss_mean: if batches_done > 0 {
             loss_sum / batches_done as f64
         } else {
@@ -871,4 +1088,214 @@ fn leader_loop(
         batches: batches_done,
         batch_losses,
     })
+}
+
+/// One process's typed socket lanes for this engine's protocol — the
+/// shared [`Lanes`](super::Lanes) bundle instantiated with the
+/// engine's private message enums. Opened once per training run and
+/// reused across epochs.
+pub struct TcpLanes(super::Lanes<Up, Down>);
+
+impl TcpLanes {
+    pub fn open(node: &TcpNode, parts: usize) -> Result<TcpLanes> {
+        Ok(TcpLanes(super::Lanes::open(node, parts)?))
+    }
+}
+
+/// Run one RAF epoch of a **multi-process** cluster: this process plays
+/// exactly the rank its [`TcpLanes`] were opened for — the leader loop
+/// or one partition's worker loop — over the socket star. Every process
+/// derives the identical batch schedule from the config seeds; worker
+/// ranks return an empty report (plus their wire traffic), the leader's
+/// report carries the losses and is byte-identical to the in-process
+/// channel transport at any fixed staleness.
+#[allow(clippy::too_many_arguments)]
+pub fn run_epoch_tcp(
+    plan: &BatchPlan,
+    contexts: &mut [ExecContext],
+    leader_ctx: &mut ExecContext,
+    mp: &MetaPartition,
+    replica_count: &HashMap<String, usize>,
+    leader_part: usize,
+    gate: Option<&ExecGate>,
+    sess: &mut Session,
+    epoch: usize,
+    lanes: &TcpLanes,
+) -> Result<EpochReport> {
+    let cfg = sess.cfg.clone();
+    let parts = mp.num_parts;
+    let pipeline = cfg.train.pipeline;
+    let staleness = if pipeline { cfg.train.staleness } else { 0 };
+    if staleness > 0 && !cfg.train.dedup_fetch {
+        bail!(
+            "train.staleness = {staleness} requires train.dedup_fetch (the backward \
+             rebuild reuses the forward's staged rows)"
+        );
+    }
+    let g = Arc::clone(&sess.g);
+    let tree = Arc::clone(&sess.tree);
+    let batches = batch_schedule(&g, &cfg, epoch);
+    if batches.is_empty() {
+        // Every rank computes the same empty schedule and skips the
+        // epoch without touching the wire.
+        return Ok(EpochReport::empty(parts));
+    }
+    let world = EpochWorld {
+        cfg: &cfg,
+        g: &g,
+        tree: &tree,
+        store: &sess.store,
+        gate,
+        epoch_t0: Instant::now(),
+    };
+    let wire0 = lanes.0.traffic();
+
+    match lanes.0.role {
+        Role::Leader => {
+            let mut fork_leader = contexts[leader_part]
+                .cache
+                .as_ref()
+                .map(|c| c.fork_ledger());
+            let mut fork_p0 = contexts[0].cache.as_ref().map(|c| c.fork_ledger());
+            let hub = Hub::from_endpoints(&lanes.0.up, &lanes.0.down, parts);
+            let bhub = Hub::from_endpoints(&lanes.0.bar_up, &lanes.0.bar_down, parts);
+            let led = leader_loop(
+                hub,
+                bhub,
+                plan,
+                &world,
+                leader_ctx,
+                &mut sess.params,
+                &mut sess.adam_t,
+                fork_leader.as_mut(),
+                fork_p0.as_mut(),
+                replica_count,
+                &batches,
+                parts,
+                leader_part,
+                pipeline,
+                staleness,
+                true, // every worker process owns a store replica
+            );
+            if let Some(f) = fork_leader {
+                if let Some(c) = contexts[leader_part].cache.as_mut() {
+                    c.absorb_ledger(&f);
+                }
+            }
+            if let Some(f) = fork_p0 {
+                if let Some(c) = contexts[0].cache.as_mut() {
+                    c.absorb_ledger(&f);
+                }
+            }
+            let mut rep = led?;
+            rep.wire = lanes.0.traffic().since(&wire0);
+            Ok(rep)
+        }
+        Role::Worker(w) => {
+            let ctx = contexts
+                .get_mut(w)
+                .ok_or_else(|| anyhow!("worker rank {w} outside the {parts}-partition plan"))?;
+            let port = Port::from_endpoints(&lanes.0.up, &lanes.0.down, parts);
+            let bport = Port::from_endpoints(&lanes.0.bar_up, &lanes.0.bar_down, parts);
+            worker_loop(
+                ctx, plan, &world, mp, epoch, &batches, &port, &bport, pipeline, staleness,
+            )?;
+            let mut rep = EpochReport::empty(parts);
+            rep.wire = lanes.0.traffic().since(&wire0);
+            Ok(rep)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::codec::{decode_message, encode_message};
+
+    fn snapshot_fixture() -> Arc<ParamSnapshot> {
+        Arc::new(ParamSnapshot::from_tensors(
+            9,
+            vec![("w_head".into(), vec![0.5, -0.5]), ("w_rel".into(), vec![1.0])],
+        ))
+    }
+
+    #[test]
+    fn raf_up_messages_round_trip() {
+        let msgs = [
+            Up::Fwd {
+                bi: 3,
+                p1: vec![1.0, 2.0],
+                p2: vec![-1.0],
+                stats: FetchStats { rows: 5, bytes: 80, remote_rows: 0, remote_bytes: 0 },
+                span: WorkerSpan { sample_s: 0.1, fwd_s: 0.2, ..Default::default() },
+                stages: StageTimes { secs: [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0] },
+                wall_fwd: (0.25, 0.5),
+            },
+            Up::Bwd {
+                bi: usize::MAX, // NO_BATCH-shaped indices must survive
+                grads: crate::exec::WorkerGrads {
+                    wgrads: vec![("w".into(), vec![0.125])],
+                    row_grads: vec![(1, vec![3, 4], vec![0.5; 4])],
+                    gx: vec![vec![2.0]],
+                    learnable_rows: vec![(1, 2, 0)],
+                    param_version: 7,
+                },
+                bwd_s: 0.75,
+                stages: StageTimes::default(),
+                wall_bwd: (1.0, 2.0),
+            },
+            Up::Failed { bi: 11, msg: "worker 2 panicked".into() },
+        ];
+        for m in msgs {
+            let bytes = encode_message(&m);
+            let back: Up = decode_message(&bytes).unwrap();
+            assert_eq!(back, m);
+            // Modeled bytes never exceed the encoded frame.
+            assert!(m.wire_bytes() <= bytes.len() as u64, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn raf_down_messages_round_trip() {
+        let msgs = [
+            Down::Ready { bi: 0, params: snapshot_fixture() },
+            Down::Grads {
+                bi: 4,
+                g1: vec![0.5; 6],
+                g2: vec![-0.5; 6],
+                params: snapshot_fixture(),
+            },
+            Down::Store {
+                bi: 2,
+                delta: StoreDelta { rows: vec![(1, vec![7, 9], vec![0.1, 0.2])] },
+            },
+        ];
+        for m in msgs {
+            let bytes = encode_message(&m);
+            let back: Down = decode_message(&bytes).unwrap();
+            assert_eq!(back, m);
+            assert!(m.wire_bytes() <= bytes.len() as u64);
+        }
+    }
+
+    #[test]
+    fn corrupt_tags_and_truncations_are_rejected() {
+        let mut bytes = encode_message(&Up::Failed { bi: 1, msg: "x".into() });
+        bytes[0] = 0xFF;
+        let err = decode_message::<Up>(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("tag 255"), "{err}");
+
+        let down = Down::Ready { bi: 1, params: snapshot_fixture() };
+        let bytes = encode_message(&down);
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_message::<Down>(&bytes[..cut]).is_err(),
+                "truncation at {cut} must error, not panic"
+            );
+        }
+        let mut long = bytes.clone();
+        long.push(7);
+        assert!(decode_message::<Down>(&long).is_err(), "trailing bytes rejected");
+        assert!(decode_message::<Down>(&[9]).is_err(), "unknown Down tag rejected");
+    }
 }

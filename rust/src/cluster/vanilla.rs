@@ -33,6 +33,21 @@
 //! per batch to the released snapshot's version — so at staleness 0
 //! losses and parameter trajectories are byte-identical to the
 //! sequential vanilla engine.
+//!
+//! Since PR 5 both loops are generic over the
+//! [`Transport`](super::mailbox::Transport) endpoints: [`run_epoch`]
+//! wires in-process channels, [`run_epoch_tcp`] the socket star of
+//! [`crate::net::tcp`] with one OS process per rank (identical seeded
+//! batch schedule everywhere; protocol messages cross the wire through
+//! the [`WireCodec`](crate::net::codec::WireCodec) impls below). The
+//! leader's learnable-feature writes are replicated into worker
+//! processes' stores via the `Down::Store` delta — sent after each
+//! update, so per-lane FIFO lands it before any batch released later,
+//! reproducing the shared-store visibility order (and the `Marshaled`
+//! store barrier keeps working unchanged: a worker sends the notice
+//! after its marshal, the leader writes only after gathering every
+//! released batch's notice). Losses are byte-identical across
+//! `channel | tcp` at any fixed staleness.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -46,26 +61,31 @@ use crate::coordinator::common::Session;
 use crate::exec::plan::vanilla_apply_updates;
 use crate::exec::{
     BatchArena, BatchPlan, EpochWorld, ExecContext, ExecGate, GradAccumulator, ParamsView,
+    WorkerGrads,
 };
-use crate::hetgraph::NodeId;
-use crate::kvstore::FetchStats;
+use crate::hetgraph::{HetGraph, NodeId};
+use crate::kvstore::{FetchStats, StoreDelta};
 use crate::metrics::timeline::{AsyncShape, EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
+use crate::net::codec::{ByteReader, ByteWriter, WireCodec};
+use crate::net::tcp::TcpNode;
+use crate::net::Role;
 use crate::partition::NodePartition;
 use crate::runtime::ParamSnapshot;
 use crate::sampling::{remote_counts, sample_tree, Frontier, TreeSample};
 use crate::util::rng::Rng;
 
 use super::collective::{run_contained, star, Hub, Port, RoundTag, NO_BATCH};
-use super::mailbox::Wire;
+use super::mailbox::{Transport, Wire};
 
 /// One fused train step's results.
+#[derive(Debug, PartialEq)]
 struct StepMsg {
     loss: f64,
     acc: f64,
     /// Unreduced gradient outputs (leader folds in worker order,
     /// version-pinned to the batch's released snapshot).
-    grads: crate::exec::WorkerGrads,
+    grads: WorkerGrads,
     /// KV-store fetch accounting of this worker's input build (unique
     /// rows per batch when dedup gather is on; `remote_bytes` is what
     /// the leader charges to this worker's network ledger).
@@ -79,6 +99,7 @@ struct StepMsg {
 }
 
 /// Worker → leader messages, batch-tagged for the round gather.
+#[derive(Debug, PartialEq)]
 enum Up {
     /// Store barrier notice of the windowed schedule: this worker's
     /// feature-store reads for batch `bi` are done (its marshal
@@ -120,20 +141,144 @@ impl Wire for Up {
     }
 }
 
-/// Batch release carrying the post-update parameter snapshot every
-/// replica applies identically (data parallelism); snapshot
-/// distribution is an in-process artifact of the single-machine
-/// harness — the all-reduce already priced the gradient exchange.
-#[derive(Clone)]
-struct ReadyMsg {
-    bi: usize,
-    params: Arc<ParamSnapshot>,
+/// Leader → worker messages. `Ready` releases a batch with the
+/// post-update parameter snapshot every replica applies identically
+/// (data parallelism); `Store` replays the leader's learnable-feature
+/// writes into a worker *process's* KV store (TCP only — one shared
+/// in-process store never sends it). Both are modeled-free wire-wise:
+/// snapshot/row distribution is an artifact of the harness (the
+/// all-reduce already priced the gradient exchange, and learnable rows
+/// live with their owners in the modeled system).
+#[derive(Clone, Debug, PartialEq)]
+enum Down {
+    Ready { bi: usize, params: Arc<ParamSnapshot> },
+    /// Post-update learnable rows of batch `bi` (see [`StoreDelta`]).
+    Store { bi: usize, delta: StoreDelta },
 }
 
-impl Wire for ReadyMsg {
+impl Wire for Down {
     fn wire_bytes(&self) -> u64 {
         0
     }
+}
+
+// ---- wire codec (PR 5): every protocol message next to its type ----
+
+impl WireCodec for StepMsg {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.f64(self.loss);
+        w.f64(self.acc);
+        self.grads.encode(w);
+        self.stats.encode(w);
+        w.u64(self.sample_remote_bytes);
+        self.span.encode(w);
+        self.stages.encode(w);
+        self.wall_fwd.encode(w);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<StepMsg> {
+        Ok(StepMsg {
+            loss: r.f64()?,
+            acc: r.f64()?,
+            grads: WorkerGrads::decode(r)?,
+            stats: FetchStats::decode(r)?,
+            sample_remote_bytes: r.u64()?,
+            span: WorkerSpan::decode(r)?,
+            stages: StageTimes::decode(r)?,
+            wall_fwd: <(f64, f64)>::decode(r)?,
+        })
+    }
+}
+
+impl WireCodec for Up {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Up::Marshaled { bi } => {
+                w.u8(0);
+                w.usize(*bi);
+            }
+            Up::Step { bi, msg } => {
+                w.u8(1);
+                w.usize(*bi);
+                msg.encode(w);
+            }
+            Up::Failed { bi, msg } => {
+                w.u8(2);
+                w.usize(*bi);
+                w.str(msg);
+            }
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<Up> {
+        match r.u8()? {
+            0 => Ok(Up::Marshaled { bi: r.usize()? }),
+            1 => {
+                let bi = r.usize()?;
+                let msg = Box::new(StepMsg::decode(r)?);
+                Ok(Up::Step { bi, msg })
+            }
+            2 => {
+                let bi = r.usize()?;
+                let msg = r.str()?;
+                Ok(Up::Failed { bi, msg })
+            }
+            t => bail!("unknown vanilla worker-message tag {t}"),
+        }
+    }
+}
+
+impl WireCodec for Down {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Down::Ready { bi, params } => {
+                w.u8(0);
+                w.usize(*bi);
+                params.encode(w);
+            }
+            Down::Store { bi, delta } => {
+                w.u8(1);
+                w.usize(*bi);
+                delta.encode(w);
+            }
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<Down> {
+        match r.u8()? {
+            0 => {
+                let bi = r.usize()?;
+                let params = Arc::new(ParamSnapshot::decode(r)?);
+                Ok(Down::Ready { bi, params })
+            }
+            1 => {
+                let bi = r.usize()?;
+                let delta = StoreDelta::decode(r)?;
+                Ok(Down::Store { bi, delta })
+            }
+            t => bail!("unknown vanilla leader-message tag {t}"),
+        }
+    }
+}
+
+/// The epoch's batch schedule (batches short of every worker's full
+/// microbatch are dropped — static shapes). Derived from config seeds
+/// only, so every process of a multi-process cluster computes the
+/// identical schedule without exchanging a byte.
+fn batch_schedule(g: &HetGraph, cfg: &Config, parts: usize, epoch: usize) -> Vec<Vec<NodeId>> {
+    let b = cfg.train.batch_size;
+    let vb = (b / parts).max(1);
+    let mut train = g.train_nodes();
+    let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
+    shuffle_rng.shuffle(&mut train);
+    let mut batches: Vec<Vec<NodeId>> = Vec::new();
+    for c in train.chunks(b) {
+        if c.len() < vb * parts {
+            break;
+        }
+        batches.push(c.to_vec());
+    }
+    batches
 }
 
 /// Run one vanilla epoch on the cluster runtime.
@@ -156,16 +301,7 @@ pub fn run_epoch(
     let g = Arc::clone(&sess.g);
     let tree = Arc::clone(&sess.tree);
 
-    let mut train = sess.g.train_nodes();
-    let mut shuffle_rng = Rng::new(cfg.train.shuffle_seed(epoch));
-    shuffle_rng.shuffle(&mut train);
-    let mut batches: Vec<Vec<NodeId>> = Vec::new();
-    for c in train.chunks(b) {
-        if c.len() < vb * parts {
-            break;
-        }
-        batches.push(c.to_vec());
-    }
+    let batches = batch_schedule(&g, &cfg, parts, epoch);
     if batches.is_empty() {
         // Nothing to release: spawning workers would race the initial
         // Ready broadcast against their immediate teardown.
@@ -183,7 +319,7 @@ pub fn run_epoch(
     let params = &mut sess.params;
     let adam_t = &mut sess.adam_t;
 
-    let (hub, ports) = star::<Up, ReadyMsg>(parts);
+    let (hub, ports) = star::<Up, Down>(parts);
     let (bhub, bports) = star::<(), ()>(parts);
 
     std::thread::scope(|s| {
@@ -199,6 +335,7 @@ pub fn run_epoch(
         }
         let led = leader_loop(
             hub, bhub, &world, params, adam_t, parts, vb, &batches, pipeline, staleness,
+            false, // one shared store: nothing to replicate
         );
         let mut worker_err: Option<anyhow::Error> = None;
         for h in handles {
@@ -231,7 +368,7 @@ pub fn run_epoch(
 /// notice naming the in-flight batch so the leader's gather fails fast
 /// with the root cause instead of blocking on a dead peer.
 #[allow(clippy::too_many_arguments)]
-fn worker_loop(
+fn worker_loop<EU, ED, BU, BD>(
     ctx: &mut ExecContext,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
@@ -239,11 +376,17 @@ fn worker_loop(
     vb: usize,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    port: &Port<Up, ReadyMsg>,
-    bport: &Port<(), ()>,
+    port: &Port<Up, Down, EU, ED>,
+    bport: &Port<(), (), BU, BD>,
     pipeline: bool,
     staleness: usize,
-) -> Result<()> {
+) -> Result<()>
+where
+    EU: Transport<Up>,
+    ED: Transport<Down>,
+    BU: Transport<()>,
+    BD: Transport<()>,
+{
     let w = ctx.worker;
     // The batch cursor outlives a panic's unwinding, so the death
     // notice still names the batch in flight.
@@ -266,11 +409,30 @@ fn worker_loop(
     )
 }
 
+/// Receive the next batch release, transparently replaying store
+/// deltas into this process's KV store (the TCP replication of the
+/// leader's learnable-feature writes; never sent in-process). Per-lane
+/// FIFO guarantees a delta lands before any batch the leader released
+/// after the update that produced it.
+fn recv_ready<EU: Transport<Up>, ED: Transport<Down>>(
+    port: &Port<Up, Down, EU, ED>,
+    world: &EpochWorld<'_>,
+) -> Result<(usize, Arc<ParamSnapshot>)> {
+    loop {
+        match port.recv()? {
+            Down::Store { bi, delta } => delta
+                .apply(&mut world.store_mut())
+                .with_context(|| format!("replaying batch {bi}'s learnable-feature delta"))?,
+            Down::Ready { bi, params } => return Ok((bi, params)),
+        }
+    }
+}
+
 /// The synchronous (`staleness = 0`) worker: one fused step per
 /// release, with the double-buffered sample prefetch when `pipeline`
 /// is on. Byte-for-byte the pre-window protocol (no marshal notices).
 #[allow(clippy::too_many_arguments)]
-fn worker_run_sync(
+fn worker_run_sync<EU, ED, BU, BD>(
     ctx: &mut ExecContext,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
@@ -278,11 +440,17 @@ fn worker_run_sync(
     vb: usize,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    port: &Port<Up, ReadyMsg>,
-    bport: &Port<(), ()>,
+    port: &Port<Up, Down, EU, ED>,
+    bport: &Port<(), (), BU, BD>,
     pipeline: bool,
     cur: &AtomicUsize,
-) -> Result<()> {
+) -> Result<()>
+where
+    EU: Transport<Up>,
+    ED: Transport<Down>,
+    BU: Transport<()>,
+    BD: Transport<()>,
+{
     bport.barrier()?;
     let w = ctx.worker;
     let cfg: &Config = world.cfg;
@@ -301,11 +469,10 @@ fn worker_run_sync(
 
     for (bi, chunk) in batches.iter().enumerate() {
         cur.store(bi, Ordering::Relaxed);
-        let ready = port.recv()?;
-        if ready.bi != bi {
-            bail!("worker {w}: release for batch {} arrived while expecting {bi}", ready.bi);
+        let (rbi, snapshot) = recv_ready(port, world)?;
+        if rbi != bi {
+            bail!("worker {w}: release for batch {rbi} arrived while expecting {bi}");
         }
-        let snapshot = ready.params;
         let micro = &chunk[w * vb..(w + 1) * vb];
         let batch_seed = cfg.train.batch_seed(epoch, bi);
 
@@ -402,7 +569,7 @@ fn worker_run_sync(
 /// in the mailbox while the worker grinds, so no separate prefetch is
 /// needed — the window itself provides the run-ahead.
 #[allow(clippy::too_many_arguments)]
-fn worker_run_windowed(
+fn worker_run_windowed<EU, ED, BU, BD>(
     ctx: &mut ExecContext,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
@@ -410,10 +577,16 @@ fn worker_run_windowed(
     vb: usize,
     epoch: usize,
     batches: &[Vec<NodeId>],
-    port: &Port<Up, ReadyMsg>,
-    bport: &Port<(), ()>,
+    port: &Port<Up, Down, EU, ED>,
+    bport: &Port<(), (), BU, BD>,
     cur: &AtomicUsize,
-) -> Result<()> {
+) -> Result<()>
+where
+    EU: Transport<Up>,
+    ED: Transport<Down>,
+    BU: Transport<()>,
+    BD: Transport<()>,
+{
     bport.barrier()?;
     let w = ctx.worker;
     let cfg: &Config = world.cfg;
@@ -427,11 +600,10 @@ fn worker_run_windowed(
 
     for (bi, chunk) in batches.iter().enumerate() {
         cur.store(bi, Ordering::Relaxed);
-        let ready = port.recv()?;
-        if ready.bi != bi {
-            bail!("worker {w}: release for batch {} arrived while expecting {bi}", ready.bi);
+        let (rbi, snapshot) = recv_ready(port, world)?;
+        if rbi != bi {
+            bail!("worker {w}: release for batch {rbi} arrived while expecting {bi}");
         }
-        let snapshot = ready.params;
         let micro = &chunk[w * vb..(w + 1) * vb];
 
         let t0 = Instant::now();
@@ -495,9 +667,9 @@ fn worker_run_windowed(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn leader_loop(
-    mut hub: Hub<Up, ReadyMsg>,
-    bhub: Hub<(), ()>,
+fn leader_loop<EU, ED, BU, BD>(
+    mut hub: Hub<Up, Down, EU, ED>,
+    bhub: Hub<(), (), BU, BD>,
     world: &EpochWorld<'_>,
     params: &mut crate::runtime::ParamStore,
     adam_t: &mut i32,
@@ -506,7 +678,14 @@ fn leader_loop(
     batches: &[Vec<NodeId>],
     pipeline: bool,
     staleness: usize,
-) -> Result<EpochReport> {
+    replicate: bool,
+) -> Result<EpochReport>
+where
+    EU: Transport<Up>,
+    ED: Transport<Down>,
+    BU: Transport<()>,
+    BD: Transport<()>,
+{
     bhub.barrier()?;
     let n = batches.len();
     let mut net = SimNet::new(parts, world.cfg.cost.clone());
@@ -529,7 +708,7 @@ fn leader_loop(
     for _ in 0..staleness.max(1).min(n) {
         let snap = Arc::new(params.snapshot());
         ready_versions.push(snap.version);
-        hub.broadcast(ReadyMsg { bi: released, params: snap })?;
+        hub.broadcast(Down::Ready { bi: released, params: snap })?;
         released += 1;
     }
     // Count of batches whose `Marshaled` barrier notice has been
@@ -554,7 +733,10 @@ fn leader_loop(
                 Up::Marshaled { bi: ubi } => {
                     bail!("protocol error: batch {ubi} marshal notice in batch {bi}'s step round")
                 }
-                Up::Failed { .. } => unreachable!("gather_round aborts on Failed"),
+                Up::Failed { bi: fbi, msg } => bail!(
+                    "batch {fbi} death notice escaped gather_round's abort path \
+                     (protocol bug): {msg}"
+                ),
             };
             let StepMsg {
                 loss,
@@ -588,7 +770,7 @@ fn leader_loop(
         if staleness >= 1 && released < n {
             let snap = Arc::new(params.snapshot());
             ready_versions.push(snap.version);
-            hub.broadcast(ReadyMsg { bi: released, params: snap })?;
+            hub.broadcast(Down::Ready { bi: released, params: snap })?;
             released += 1;
         }
         // -- store barrier: before the update may write learnable rows,
@@ -604,9 +786,24 @@ fn leader_loop(
         }
 
         // -- all-reduce + model + learnable updates (shared stage) --
+        let touched = if replicate { gacc.touched_rows() } else { Vec::new() };
         let upd = vanilla_apply_updates(world, params, adam_t, gacc, &mut net, parts)?;
         stages.add(Stage::GradSync, upd.allreduce_s);
         stages.add(Stage::Update, upd.update_s + upd.lf_s);
+        // -- TCP only: replicate this update's learnable-row writes
+        // into every worker process's store, before any later release
+        // (per-lane FIFO then reproduces the shared-store visibility
+        // order the `Marshaled` barrier pinned) --
+        if replicate {
+            let delta = {
+                let store = world.store();
+                StoreDelta::capture(&store, touched.iter().map(|(ty, ids)| (*ty, ids.as_slice())))
+                    .with_context(|| format!("batch {bi}: capturing the learnable-row delta"))?
+            };
+            if !delta.is_empty() {
+                hub.broadcast(Down::Store { bi, delta })?;
+            }
+        }
 
         timeline.push_batch(
             worker_spans,
@@ -623,7 +820,7 @@ fn leader_loop(
         if staleness == 0 && released < n {
             let snap = Arc::new(params.snapshot());
             ready_versions.push(snap.version);
-            hub.broadcast(ReadyMsg { bi: released, params: snap })?;
+            hub.broadcast(Down::Ready { bi: released, params: snap })?;
             released += 1;
         }
     }
@@ -645,6 +842,7 @@ fn leader_loop(
         stages,
         comm: net.total(),
         fetch,
+        wire: Default::default(), // the in-process transports move no frames
         loss_mean: if batches_done > 0 {
             loss_sum / batches_done as f64
         } else {
@@ -658,4 +856,165 @@ fn leader_loop(
         batches: batches_done,
         batch_losses,
     })
+}
+
+/// One process's typed socket lanes for this engine's protocol — the
+/// shared [`Lanes`](super::Lanes) bundle instantiated with the
+/// engine's private message enums. Opened once per training run and
+/// reused across epochs.
+pub struct TcpLanes(super::Lanes<Up, Down>);
+
+impl TcpLanes {
+    pub fn open(node: &TcpNode, parts: usize) -> Result<TcpLanes> {
+        Ok(TcpLanes(super::Lanes::open(node, parts)?))
+    }
+}
+
+/// Run one vanilla epoch of a **multi-process** cluster: this process
+/// plays exactly the rank its [`TcpLanes`] were opened for over the
+/// socket star. Worker ranks return an empty report (plus their wire
+/// traffic); the leader's report carries the losses and is
+/// byte-identical to the in-process channel transport at any fixed
+/// staleness.
+#[allow(clippy::too_many_arguments)]
+pub fn run_epoch_tcp(
+    plan: &BatchPlan,
+    contexts: &mut [ExecContext],
+    part: &NodePartition,
+    gate: Option<&ExecGate>,
+    sess: &mut Session,
+    epoch: usize,
+    lanes: &TcpLanes,
+) -> Result<EpochReport> {
+    let cfg = sess.cfg.clone();
+    let parts = part.num_parts;
+    let vb = (cfg.train.batch_size / parts).max(1);
+    let pipeline = cfg.train.pipeline;
+    let staleness = if pipeline { cfg.train.staleness } else { 0 };
+    let g = Arc::clone(&sess.g);
+    let tree = Arc::clone(&sess.tree);
+    let batches = batch_schedule(&g, &cfg, parts, epoch);
+    if batches.is_empty() {
+        // Every rank computes the same empty schedule and skips the
+        // epoch without touching the wire.
+        return Ok(EpochReport::empty(parts));
+    }
+    let world = EpochWorld {
+        cfg: &cfg,
+        g: &g,
+        tree: &tree,
+        store: &sess.store,
+        gate,
+        epoch_t0: Instant::now(),
+    };
+    let wire0 = lanes.0.traffic();
+
+    match lanes.0.role {
+        Role::Leader => {
+            let hub = Hub::from_endpoints(&lanes.0.up, &lanes.0.down, parts);
+            let bhub = Hub::from_endpoints(&lanes.0.bar_up, &lanes.0.bar_down, parts);
+            let mut rep = leader_loop(
+                hub,
+                bhub,
+                &world,
+                &mut sess.params,
+                &mut sess.adam_t,
+                parts,
+                vb,
+                &batches,
+                pipeline,
+                staleness,
+                true, // every worker process owns a store replica
+            )?;
+            rep.wire = lanes.0.traffic().since(&wire0);
+            Ok(rep)
+        }
+        Role::Worker(w) => {
+            let ctx = contexts
+                .get_mut(w)
+                .ok_or_else(|| anyhow!("worker rank {w} outside the {parts}-partition plan"))?;
+            let port = Port::from_endpoints(&lanes.0.up, &lanes.0.down, parts);
+            let bport = Port::from_endpoints(&lanes.0.bar_up, &lanes.0.bar_down, parts);
+            worker_loop(
+                ctx, plan, &world, part, vb, epoch, &batches, &port, &bport, pipeline, staleness,
+            )?;
+            let mut rep = EpochReport::empty(parts);
+            rep.wire = lanes.0.traffic().since(&wire0);
+            Ok(rep)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::codec::{decode_message, encode_message};
+
+    fn step_fixture() -> Box<StepMsg> {
+        Box::new(StepMsg {
+            loss: 0.693,
+            acc: 12.0,
+            grads: WorkerGrads {
+                wgrads: vec![("w".into(), vec![0.5, 0.25])],
+                row_grads: vec![(2, vec![1, 1, 8], vec![0.1; 6])],
+                gx: vec![],
+                learnable_rows: vec![(2, 3, 1)],
+                param_version: 5,
+            },
+            stats: FetchStats { rows: 9, bytes: 144, remote_rows: 2, remote_bytes: 32 },
+            sample_remote_bytes: 88,
+            span: WorkerSpan { sample_s: 0.5, fetch_lr_s: 0.25, ..Default::default() },
+            stages: StageTimes { secs: [0.1; 7] },
+            wall_fwd: (3.0, 4.5),
+        })
+    }
+
+    #[test]
+    fn vanilla_up_messages_round_trip() {
+        let msgs = [
+            Up::Marshaled { bi: 6 },
+            Up::Step { bi: 2, msg: step_fixture() },
+            Up::Failed { bi: usize::MAX, msg: "before its first batch".into() },
+        ];
+        for m in msgs {
+            let bytes = encode_message(&m);
+            let back: Up = decode_message(&bytes).unwrap();
+            assert_eq!(back, m);
+            assert_eq!(m.wire_bytes(), 0, "vanilla up-traffic is modeled by the all-reduce");
+        }
+    }
+
+    #[test]
+    fn vanilla_down_messages_round_trip() {
+        let params = Arc::new(ParamSnapshot::from_tensors(
+            3,
+            vec![("dense".into(), vec![0.0, 1.0, -1.0])],
+        ));
+        let msgs = [
+            Down::Ready { bi: 1, params },
+            Down::Store {
+                bi: 0,
+                delta: StoreDelta { rows: vec![(0, vec![2], vec![9.0, 9.5])] },
+            },
+        ];
+        for m in msgs {
+            let bytes = encode_message(&m);
+            let back: Down = decode_message(&bytes).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn vanilla_corrupt_frames_are_rejected() {
+        let mut bytes = encode_message(&Up::Marshaled { bi: 3 });
+        bytes[0] = 0x7E;
+        assert!(decode_message::<Up>(&bytes).is_err(), "unknown tag rejected");
+        let bytes = encode_message(&Up::Step { bi: 2, msg: step_fixture() });
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_message::<Up>(&bytes[..cut]).is_err(),
+                "truncation at {cut} must error, not panic"
+            );
+        }
+    }
 }

@@ -85,6 +85,36 @@ impl RuntimeKind {
     }
 }
 
+/// Which transport the cluster runtime rides on (`train.transport`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process channels: every rank is a thread of one process (the
+    /// default).
+    Channel,
+    /// The socket star of `crate::net::tcp`: one OS process per rank.
+    /// Per-process identity (`--rank`, `--peers`) comes from the CLI —
+    /// the config only selects the transport, since every process
+    /// shares one config file.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "channel" | "channels" | "thread" => Some(TransportKind::Channel),
+            "tcp" | "socket" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub batch_size: usize,
@@ -133,6 +163,12 @@ pub struct TrainConfig {
     /// and always runs synchronously; with `pipeline = false` the
     /// cluster runtime does too.
     pub staleness: usize,
+    /// Transport of the cluster runtime (`"channel"` default,
+    /// `"tcp"` for one-process-per-rank socket training — requires
+    /// `runtime = "cluster"`; per-process identity comes from the
+    /// CLI's `--rank`/`--peers`). Losses are byte-identical across
+    /// both transports at any fixed staleness.
+    pub transport: TransportKind,
 }
 
 impl TrainConfig {
@@ -218,7 +254,16 @@ impl Config {
             dedup_fetch: t.get("dedup_fetch").as_bool().unwrap_or(true),
             shared_session: t.get("shared_session").as_bool().unwrap_or(false),
             staleness: t.get("staleness").as_usize().unwrap_or(0),
+            transport: {
+                let name = t.get("transport").as_str().unwrap_or("channel").to_string();
+                TransportKind::parse(&name)
+                    .with_context(|| format!("unknown transport {name} (channel|tcp)"))?
+            },
         };
+        if train.transport == TransportKind::Tcp {
+            // Same guard (and wording) every tcp entry point shares.
+            crate::net::require_cluster_runtime(train.runtime)?;
+        }
         if train.staleness > 0 && !train.dedup_fetch {
             bail!(
                 "train.staleness = {} requires train.dedup_fetch: the backward pass \
@@ -491,6 +536,33 @@ mod tests {
             err.to_string().contains("dedup_fetch"),
             "staleness without dedup must explain itself: {err}"
         );
+    }
+
+    #[test]
+    fn parses_transport_and_rejects_tcp_without_cluster() {
+        let cfg = Config::from_json(&parse(TINY).unwrap()).unwrap();
+        assert_eq!(cfg.train.transport, TransportKind::Channel, "channel by default");
+        let text = r#"{
+            "name": "x",
+            "dataset": {"preset": "mag", "scale": 1e-4},
+            "model": {"arch": "rgcn", "hidden": 8, "fanouts": [2]},
+            "train": {"batch_size": 8, "runtime": "cluster", "transport": "tcp"}
+        }"#;
+        let cfg = Config::from_json(&parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.train.transport, TransportKind::Tcp);
+        let bad = r#"{
+            "name": "x",
+            "dataset": {"preset": "mag", "scale": 1e-4},
+            "model": {"arch": "rgcn", "hidden": 8, "fanouts": [2]},
+            "train": {"batch_size": 8, "transport": "tcp"}
+        }"#;
+        let err = Config::from_json(&parse(bad).unwrap()).unwrap_err();
+        assert!(
+            err.to_string().contains("cluster"),
+            "tcp without the cluster runtime must explain itself: {err}"
+        );
+        assert!(TransportKind::parse("carrier-pigeon").is_none());
+        assert_eq!(TransportKind::Tcp.name(), "tcp");
     }
 
     #[test]

@@ -51,6 +51,11 @@ pub struct Session {
     pub artifacts_dir: String,
     /// Shared sparse-Adam timestep for learnable tables.
     pub adam_t: i32,
+    /// Which transport the cluster runtime rides on:
+    /// [`Backend::Channel`](crate::net::Backend) (default — every rank
+    /// a thread of this process) or `Backend::Tcp` (this process plays
+    /// one rank of a multi-process socket star; see [`crate::net`]).
+    pub net: crate::net::Backend,
 }
 
 impl Session {
@@ -72,6 +77,7 @@ impl Session {
             manifest,
             artifacts_dir: artifacts_dir.to_string(),
             adam_t: 0,
+            net: crate::net::Backend::Channel,
         })
     }
 

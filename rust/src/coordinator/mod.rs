@@ -121,6 +121,21 @@ pub fn run_training(
     engine_name: &str,
     epochs: usize,
 ) -> Result<EpochReport> {
+    run_training_with(cfg, artifacts_dir, engine_name, epochs, crate::net::Backend::Channel)
+}
+
+/// [`run_training`] over an explicit transport backend. With
+/// `Backend::Tcp` this process plays exactly one rank of a
+/// multi-process cluster: the leader prints and returns the real
+/// trajectory, worker ranks print their wire traffic and return empty
+/// reports (the losses live with the leader).
+pub fn run_training_with(
+    cfg: &Config,
+    artifacts_dir: &str,
+    engine_name: &str,
+    epochs: usize,
+    net: crate::net::Backend,
+) -> Result<EpochReport> {
     let system = match SystemKind::parse(engine_name) {
         Some(s) => s,
         None => bail!(
@@ -128,21 +143,112 @@ pub fn run_training(
         ),
     };
     let mut sess = Session::new(cfg, artifacts_dir)?;
+    sess.net = net;
+    let worker_rank = sess.net.is_tcp_worker();
     let mut engine = Engine::build(&mut sess, system)?;
     let mut total = EpochReport::default();
     for ep in 0..epochs {
         let rep = engine.run_epoch(&mut sess, ep)?;
-        println!(
-            "epoch {ep}: loss {:.4} acc {:.3} time {} (critical path {}, {} runtime)",
-            rep.loss_mean,
-            rep.accuracy,
-            crate::util::fmt_secs(rep.epoch_time_s),
-            crate::util::fmt_secs(rep.critical_path_s),
-            cfg.train.runtime.name(),
-        );
+        if worker_rank {
+            println!(
+                "epoch {ep}: worker rank done (wire: {} sent, {} received)",
+                crate::util::fmt_bytes(rep.wire.real_sent),
+                crate::util::fmt_bytes(rep.wire.real_recv),
+            );
+        } else {
+            println!(
+                "epoch {ep}: loss {:.4} acc {:.3} time {} (critical path {}, {} runtime)",
+                rep.loss_mean,
+                rep.accuracy,
+                crate::util::fmt_secs(rep.epoch_time_s),
+                crate::util::fmt_secs(rep.critical_path_s),
+                cfg.train.runtime.name(),
+            );
+        }
         total.absorb(&rep);
     }
     Ok(total)
+}
+
+/// Run `epochs` cluster epochs over a **loopback TCP star**: one OS
+/// thread per rank, each with its *own* [`Session`] — its own feature
+/// store, parameter store and execution contexts — connected through
+/// real sockets on `127.0.0.1` (an ephemeral port, so parallel tests
+/// never collide). Process semantics without subprocess management:
+/// every cluster message crosses the wire through the codec, and the
+/// leader's learnable-feature updates reach the other stores only via
+/// the replication deltas. Returns the leader's per-epoch reports.
+///
+/// This is the equivalence half of `tests/test_net_transport.rs` and
+/// the TCP side of `benches/net_transport.rs`; `heta launch` runs the
+/// same protocol with real processes.
+pub fn run_loopback_tcp(
+    cfg: &Config,
+    artifacts_dir: &str,
+    system: SystemKind,
+    epochs: usize,
+) -> Result<Vec<EpochReport>> {
+    // The socket star only exists under the cluster runtime; force it
+    // rather than let a sequential config run every rank independently
+    // under a "tcp" label.
+    let mut cfg = cfg.clone();
+    cfg.train.runtime = crate::config::RuntimeKind::Cluster;
+    let cfg = &cfg;
+    let parts = cfg.train.num_partitions;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| anyhow::anyhow!("binding a loopback listener: {e}"))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| anyhow::anyhow!("reading the loopback address: {e}"))?
+        .to_string();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..parts)
+            .map(|w| {
+                let addr = addr.clone();
+                s.spawn(move || -> Result<()> {
+                    let node =
+                        crate::net::tcp::dial(&addr, w, parts, crate::net::tcp::DIAL_TIMEOUT)?;
+                    let mut sess = Session::new(cfg, artifacts_dir)?;
+                    sess.net = crate::net::Backend::Tcp(node);
+                    let mut engine = Engine::build(&mut sess, system)?;
+                    for ep in 0..epochs {
+                        engine.run_epoch(&mut sess, ep)?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        let run_leader = || -> Result<Vec<EpochReport>> {
+            let node = crate::net::tcp::accept_workers(listener, parts)?;
+            let mut sess = Session::new(cfg, artifacts_dir)?;
+            sess.net = crate::net::Backend::Tcp(node);
+            let mut engine = Engine::build(&mut sess, system)?;
+            (0..epochs).map(|ep| engine.run_epoch(&mut sess, ep)).collect()
+        };
+        let led = run_leader();
+        let mut worker_err: Option<anyhow::Error> = None;
+        for (w, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if worker_err.is_none() {
+                        worker_err = Some(e.context(format!("loopback worker rank {w}")));
+                    }
+                }
+                Err(_) => {
+                    if worker_err.is_none() {
+                        worker_err =
+                            Some(anyhow::anyhow!("loopback worker rank {w} panicked"));
+                    }
+                }
+            }
+        }
+        match (led, worker_err) {
+            (Ok(reps), None) => Ok(reps),
+            (Err(e), _) => Err(e),
+            (Ok(_), Some(we)) => Err(we),
+        }
+    })
 }
 
 /// Bench/report helper: load `configs/<name>.json`, build the engine for

@@ -69,6 +69,9 @@ pub struct RafEngine {
     leader_arena: BatchArena,
     /// `Some` iff `train.shared_session` — serializes marshal+execute.
     gate: Option<ExecGate>,
+    /// The typed socket lanes of a TCP session, opened on the first
+    /// epoch and reused (each lane's receive queue exists once).
+    tcp: Option<crate::cluster::raf::TcpLanes>,
 }
 
 impl RafEngine {
@@ -176,6 +179,7 @@ impl RafEngine {
             arenas,
             leader_arena: BatchArena::new(),
             gate,
+            tcp: None,
         })
     }
 
@@ -185,6 +189,28 @@ impl RafEngine {
     /// same [`BatchPlan`] stages and produce byte-identical samples,
     /// losses and parameter trajectories.
     pub fn run_epoch(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
+        // Open the socket lanes (once) before dispatching, so the
+        // borrow of `sess.net` ends before `sess` moves on mutably.
+        if let crate::net::Backend::Tcp(node) = &sess.net {
+            crate::net::require_cluster_runtime(sess.cfg.train.runtime)?;
+            if self.tcp.is_none() {
+                self.tcp = Some(crate::cluster::raf::TcpLanes::open(node, self.mp.num_parts)?);
+            }
+        }
+        if let Some(lanes) = &self.tcp {
+            return crate::cluster::raf::run_epoch_tcp(
+                &self.plan,
+                &mut self.contexts,
+                &mut self.leader_ctx,
+                &self.mp,
+                &self.replica_count,
+                self.leader,
+                self.gate.as_ref(),
+                sess,
+                epoch,
+                lanes,
+            );
+        }
         match sess.cfg.train.runtime {
             RuntimeKind::Cluster => crate::cluster::raf::run_epoch(
                 &self.plan,
@@ -409,6 +435,7 @@ impl RafEngine {
             stages,
             comm: net.total(),
             fetch,
+            wire: Default::default(), // the in-process transports move no frames
             loss_mean: if batches > 0 { loss_sum / batches as f64 } else { f64::NAN },
             accuracy: if batches > 0 {
                 acc_sum / (batches * b) as f64

@@ -52,6 +52,9 @@ pub struct VanillaEngine {
     arenas: Vec<BatchArena>,
     /// `Some` iff `train.shared_session` — serializes marshal+execute.
     gate: Option<ExecGate>,
+    /// The typed socket lanes of a TCP session, opened on the first
+    /// epoch and reused (each lane's receive queue exists once).
+    tcp: Option<crate::cluster::vanilla::TcpLanes>,
 }
 
 impl VanillaEngine {
@@ -135,6 +138,7 @@ impl VanillaEngine {
             frontiers,
             arenas,
             gate,
+            tcp: None,
         })
     }
 
@@ -142,6 +146,26 @@ impl VanillaEngine {
     /// `train.runtime`; both runtimes drive the same [`BatchPlan`]
     /// stages and produce byte-identical losses.
     pub fn run_epoch(&mut self, sess: &mut Session, epoch: usize) -> Result<EpochReport> {
+        // Open the socket lanes (once) before dispatching, so the
+        // borrow of `sess.net` ends before `sess` moves on mutably.
+        if let crate::net::Backend::Tcp(node) = &sess.net {
+            crate::net::require_cluster_runtime(sess.cfg.train.runtime)?;
+            if self.tcp.is_none() {
+                self.tcp =
+                    Some(crate::cluster::vanilla::TcpLanes::open(node, self.part.num_parts)?);
+            }
+        }
+        if let Some(lanes) = &self.tcp {
+            return crate::cluster::vanilla::run_epoch_tcp(
+                &self.plan,
+                &mut self.contexts,
+                &self.part,
+                self.gate.as_ref(),
+                sess,
+                epoch,
+                lanes,
+            );
+        }
         match sess.cfg.train.runtime {
             RuntimeKind::Cluster => crate::cluster::vanilla::run_epoch(
                 &self.plan,
@@ -288,6 +312,7 @@ impl VanillaEngine {
             stages,
             comm: net.total(),
             fetch,
+            wire: Default::default(), // the in-process transports move no frames
             loss_mean: if batches > 0 { loss_sum / batches as f64 } else { f64::NAN },
             accuracy: if batches > 0 {
                 acc_sum / (batches * vb * parts) as f64

@@ -131,7 +131,7 @@ pub enum TargetGrads<'a> {
 /// One worker's unreduced gradient outputs. Shipped (or handed) to the
 /// accumulator **unmerged** so the fold happens in (worker, output)
 /// order regardless of runtime.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct WorkerGrads {
     /// One entry per `wgrad` output.
     pub wgrads: Vec<(String, Vec<f32>)>,
@@ -240,6 +240,17 @@ impl GradAccumulator {
             expect_version: Some(v),
             ..Default::default()
         }
+    }
+
+    /// The `(type, ids)` groups whose learnable rows this batch's
+    /// update stage will write — what a TCP leader captures into the
+    /// [`StoreDelta`](crate::kvstore::StoreDelta) it broadcasts (the
+    /// RAF leader adds the target chunk separately).
+    pub fn touched_rows(&self) -> Vec<(usize, Vec<crate::hetgraph::NodeId>)> {
+        self.row_grads
+            .iter()
+            .map(|(ty, (ids, _))| (*ty, ids.clone()))
+            .collect()
     }
 
     pub fn absorb(&mut self, wg: WorkerGrads) -> Result<()> {

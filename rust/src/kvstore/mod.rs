@@ -11,7 +11,7 @@
 //! executables, returning per-call fetch statistics (local vs remote
 //! rows) that the engines charge to the communication cost model.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::datagen::feature_value;
 use crate::hetgraph::{HetGraph, NodeId};
@@ -41,7 +41,7 @@ pub struct FeatureStore {
 }
 
 /// Statistics of one gather call.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FetchStats {
     pub rows: u64,
     pub bytes: u64,
@@ -218,6 +218,110 @@ impl FeatureStore {
             _ => 0,
         }
     }
+
+    /// Overwrite one learnable row's weights (the [`StoreDelta`]
+    /// replication path — Adam moments stay local to the updating
+    /// process, since marshals only ever read weights). Errors on a
+    /// read-only type or an out-of-range id.
+    pub fn write_row(&mut self, ty: usize, id: NodeId, vals: &[f32]) -> Result<()> {
+        ensure!(ty < self.tables.len(), "write_row: type {ty} out of range");
+        ensure!(
+            (id as usize) < self.counts[ty],
+            "write_row: id {id} out of range for type {ty} ({} rows)",
+            self.counts[ty]
+        );
+        let d = self.dims[ty];
+        ensure!(
+            vals.len() == d,
+            "write_row: {} values != dim {d} for type {ty}",
+            vals.len()
+        );
+        match &mut self.tables[ty] {
+            Table::Learnable { weight, .. } => {
+                let base = id as usize * d;
+                weight[base..base + d].copy_from_slice(vals);
+                Ok(())
+            }
+            Table::Lazy { .. } => {
+                bail!("write_row: type {ty} is read-only (lazy features are never updated)")
+            }
+        }
+    }
+}
+
+/// The learnable rows one update stage changed, with their
+/// **post-update** weight values: what the TCP leader broadcasts so
+/// every worker process's KV store replays its writes exactly. One
+/// shared store makes this a no-op (the in-process runtimes never
+/// construct one); across processes the per-lane FIFO of the transport
+/// delivers each delta before any batch released after the update it
+/// came from, which is what keeps marshals byte-identical to the
+/// shared-store schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StoreDelta {
+    /// `(type, sorted distinct ids, row-major weights)` per learnable
+    /// type touched, sorted by type — canonical for the wire codec.
+    pub rows: Vec<(usize, Vec<NodeId>, Vec<f32>)>,
+}
+
+impl StoreDelta {
+    /// Read back the post-update weights of every touched `(type, ids)`
+    /// group. Non-learnable types and [`PAD`] slots are skipped,
+    /// duplicate ids collapse, and groups of one type merge — the
+    /// result is canonical regardless of how the update stage
+    /// enumerated its writes.
+    pub fn capture<'a>(
+        store: &FeatureStore,
+        touched: impl IntoIterator<Item = (usize, &'a [NodeId])>,
+    ) -> Result<StoreDelta> {
+        let mut by_ty: std::collections::BTreeMap<usize, Vec<NodeId>> =
+            std::collections::BTreeMap::new();
+        for (ty, ids) in touched {
+            if !store.is_learnable(ty) {
+                continue;
+            }
+            by_ty
+                .entry(ty)
+                .or_default()
+                .extend(ids.iter().copied().filter(|&id| id != PAD));
+        }
+        let mut rows = Vec::with_capacity(by_ty.len());
+        for (ty, mut ids) in by_ty {
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.is_empty() {
+                continue;
+            }
+            let d = store.dim(ty);
+            let mut vals = vec![0.0f32; ids.len() * d];
+            for (i, &id) in ids.iter().enumerate() {
+                store.read_row(ty, id, &mut vals[i * d..(i + 1) * d])?;
+            }
+            rows.push((ty, ids, vals));
+        }
+        Ok(StoreDelta { rows })
+    }
+
+    /// Replay the delta into this process's store.
+    pub fn apply(&self, store: &mut FeatureStore) -> Result<()> {
+        for (ty, ids, vals) in &self.rows {
+            let d = store.dim(*ty);
+            ensure!(
+                vals.len() == ids.len() * d,
+                "store delta for type {ty}: {} values != {} rows x dim {d}",
+                vals.len(),
+                ids.len()
+            );
+            for (i, &id) in ids.iter().enumerate() {
+                store.write_row(*ty, id, &vals[i * d..(i + 1) * d])?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
 }
 
 /// Scatter staged unique rows into a padded block buffer:
@@ -277,6 +381,57 @@ mod tests {
             s.learnable_bytes(1),
             (g.schema.node_types[1].count * d * 4 * 3) as u64
         );
+    }
+
+    #[test]
+    fn write_row_updates_learnable_weights_only() {
+        let (_, mut s) = store();
+        let d = s.dim(1);
+        let newvals = vec![0.5f32; d];
+        s.write_row(1, 3, &newvals).unwrap();
+        let mut back = vec![0.0; d];
+        s.read_row(1, 3, &mut back).unwrap();
+        assert_eq!(back, newvals);
+        assert!(s.write_row(0, 0, &vec![0.0; s.dim(0)]).is_err(), "lazy is read-only");
+        assert!(s.write_row(1, u32::MAX - 1, &newvals).is_err());
+        assert!(s.write_row(1, 0, &[0.0]).is_err(), "dim mismatch");
+    }
+
+    #[test]
+    fn store_delta_replays_updates_into_a_second_store() {
+        let (g, mut a) = store();
+        let mut b = FeatureStore::new(&g, 11); // same seed: identical init
+        let d = a.dim(1);
+        // "Update" rows 2 and 5 in store a only.
+        a.write_row(1, 2, &vec![1.25; d]).unwrap();
+        a.write_row(1, 5, &vec![-0.75; d]).unwrap();
+        // Capture with duplicates, PAD noise, a read-only type and
+        // split groups: the delta must canonicalize all of it.
+        let ids1: Vec<NodeId> = vec![5, 2, 2, PAD];
+        let ids2: Vec<NodeId> = vec![5];
+        let ids_ro: Vec<NodeId> = vec![0];
+        let delta = StoreDelta::capture(
+            &a,
+            [(1usize, ids1.as_slice()), (1, ids2.as_slice()), (0, ids_ro.as_slice())],
+        )
+        .unwrap();
+        assert_eq!(delta.rows.len(), 1, "one learnable type touched");
+        assert_eq!(delta.rows[0].1, vec![2, 5], "sorted distinct ids");
+        assert!(!delta.is_empty());
+        delta.apply(&mut b).unwrap();
+        let (mut ra, mut rb) = (vec![0.0; d], vec![0.0; d]);
+        for id in [2u32, 5] {
+            a.read_row(1, id, &mut ra).unwrap();
+            b.read_row(1, id, &mut rb).unwrap();
+            assert_eq!(ra, rb, "row {id} must replicate exactly");
+        }
+        // Untouched rows still agree (same seeded init).
+        a.read_row(1, 7, &mut ra).unwrap();
+        b.read_row(1, 7, &mut rb).unwrap();
+        assert_eq!(ra, rb);
+        // A mis-sized delta is rejected.
+        let bad = StoreDelta { rows: vec![(1, vec![2], vec![0.0; d + 1])] };
+        assert!(bad.apply(&mut b).is_err());
     }
 
     #[test]

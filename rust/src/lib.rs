@@ -62,10 +62,23 @@
 //! deterministic (`k = 0` stays byte-identical to the synchronous
 //! protocol).
 //!
+//! Both cluster engines are generic over the transport
+//! ([`cluster::mailbox::Transport`]): in-process channels (the
+//! default), or the socket star of [`net`] — **one OS process per
+//! rank**, every cluster message crossing real TCP through the
+//! versioned binary codec ([`net::codec`]), learnable-feature updates
+//! replicated into worker-process stores by delta broadcast. Losses
+//! are byte-identical across `transport = channel | tcp` at any fixed
+//! staleness. `heta train --transport tcp --rank R --peers host:port`
+//! runs one rank; `heta launch -n K` spawns and reaps a local
+//! K-worker cluster.
+//!
 //! [`metrics::timeline`] records a per-worker event timeline either
 //! way (plus wall-clock forward spans showing real context overlap);
 //! [`metrics::EpochReport`] reports both the classic summed epoch
-//! time and the overlap-aware critical-path time derived from it.
+//! time and the overlap-aware critical-path time derived from it —
+//! and, under the TCP transport, the real bytes on the wire next to
+//! the cost model's view of the same messages.
 
 pub mod util;
 pub mod hetgraph;
@@ -80,5 +93,6 @@ pub mod metrics;
 pub mod config;
 pub mod runtime;
 pub mod exec;
+pub mod net;
 pub mod cluster;
 pub mod coordinator;

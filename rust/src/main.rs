@@ -4,14 +4,21 @@
 //!   plan       --config <file> --out <plan.json>   emit the AOT artifact plan
 //!   partition  --config <file> [--method m]        run + report a partitioning
 //!   train      --config <file> --engine raf|vanilla [--epochs n]
+//!   launch     --config <file> [-n K]              spawn a local K-worker TCP cluster
 //!   info       --config <file>                     dataset/schema summary
 //!
 //! `plan` is the build-time half of the Rust↔Python contract: it computes
 //! the metatree, meta-partitioning and padded block shapes that
 //! `python/compile/aot.py` lowers into HLO artifacts.
+//!
+//! `train --transport tcp --rank R --peers host:port` runs **one rank**
+//! of a multi-process cluster (rank 0 is the leader and listens on the
+//! first peers entry; ranks 1..=K are the partition workers and dial
+//! in). `launch` is the local convenience wrapper: it spawns rank 0
+//! plus K workers of the same binary on a loopback port and reaps them.
 
-use anyhow::{bail, Context, Result};
-use heta::config::{build_plan, Config};
+use anyhow::{bail, ensure, Context, Result};
+use heta::config::{build_plan, Config, RuntimeKind, TransportKind};
 use heta::partition::{edgecut, meta::meta_partition, metis_like, quality};
 use heta::util::cli::Args;
 
@@ -26,16 +33,20 @@ fn main() -> Result<()> {
         "plan" => cmd_plan(&args),
         "partition" => cmd_partition(&args),
         "train" => cmd_train(&args),
+        "launch" => cmd_launch(&args),
         "info" => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: heta <plan|partition|train|info> --config configs/<name>.json [options]\n\
+                "usage: heta <plan|partition|train|launch|info> --config <cfg.json> [options]\n\
                  \n\
                  plan       --out <plan.json>      emit AOT artifact plan\n\
                  partition  [--method meta|random|metis|bytype] [--parts p]\n\
                  train      --engine raf|vanilla [--epochs n] [--artifacts dir]\n\
                  \x20          [--runtime sequential|cluster] [--no-pipeline]\n\
                  \x20          [--no-dedup-fetch] [--shared-session] [--staleness N]\n\
+                 \x20          [--transport channel|tcp --rank R --peers host:port[,...]]\n\
+                 launch     [-n K] [--port P] + train options: spawn leader + K\n\
+                 \x20          worker processes over loopback TCP and reap them\n\
                  info"
             );
             Ok(())
@@ -144,16 +155,158 @@ fn cmd_train(args: &Args) -> Result<()> {
             bail!("--staleness requires the dedup gather (drop --no-dedup-fetch)");
         }
     }
+    if let Some(t) = args.get("transport") {
+        cfg.train.transport = TransportKind::parse(t)
+            .with_context(|| format!("unknown transport '{t}' (channel|tcp)"))?;
+    }
+    let backend = match cfg.train.transport {
+        TransportKind::Channel => heta::net::Backend::Channel,
+        TransportKind::Tcp => {
+            // One process per rank: this invocation plays exactly one.
+            if cfg.train.runtime != RuntimeKind::Cluster {
+                if args.get("runtime").is_some() {
+                    bail!("--transport tcp needs --runtime cluster");
+                }
+                cfg.train.runtime = RuntimeKind::Cluster;
+            }
+            let parts = cfg.train.num_partitions;
+            let rank: usize = args
+                .get("rank")
+                .context("--transport tcp needs --rank R (0 = leader, 1..=K = workers)")?
+                .parse()
+                .context("--rank expects a non-negative integer")?;
+            ensure!(
+                rank <= parts,
+                "--rank {rank} outside this {parts}-partition cluster (0 = leader, 1..={parts})"
+            );
+            let peers = args
+                .get("peers")
+                .context("--transport tcp needs --peers host:port[,...] (first entry = leader)")?;
+            let leader_addr = peers
+                .split(',')
+                .next()
+                .map(str::trim)
+                .filter(|a| !a.is_empty())
+                .context("--peers must name the leader's host:port first")?;
+            let node = if rank == 0 {
+                println!("rank 0 (leader): listening on {leader_addr} for {parts} workers");
+                heta::net::tcp::listen(leader_addr, parts)?
+            } else {
+                heta::net::tcp::dial(leader_addr, rank - 1, parts, heta::net::tcp::DIAL_TIMEOUT)?
+            };
+            heta::net::Backend::Tcp(node)
+        }
+    };
     let engine = args.get_or("engine", "raf");
     let epochs = args.get_usize("epochs", 1);
     let artifacts = args.get_or("artifacts", &format!("artifacts/{}", cfg.name));
-    let report = heta::coordinator::run_training(&cfg, &artifacts, &engine, epochs)?;
-    report.print(&format!(
-        "{}/{}/{}",
-        cfg.name,
-        engine,
-        cfg.train.runtime.name()
-    ));
+    let worker_rank = backend.is_tcp_worker();
+    let report =
+        heta::coordinator::run_training_with(&cfg, &artifacts, &engine, epochs, backend)?;
+    if worker_rank {
+        // Worker ranks own no trajectory (their reports carry wire
+        // traffic only); the leader prints the real summary.
+        println!(
+            "[{}/{}] worker rank done: {} epochs, wire {} sent / {} received",
+            cfg.name,
+            engine,
+            epochs,
+            heta::util::fmt_bytes(report.wire.real_sent),
+            heta::util::fmt_bytes(report.wire.real_recv),
+        );
+    } else {
+        report.print(&format!(
+            "{}/{}/{}/{}",
+            cfg.name,
+            engine,
+            cfg.train.runtime.name(),
+            cfg.train.transport.name(),
+        ));
+    }
+    Ok(())
+}
+
+/// Spawn a local TCP cluster of this very binary — one leader plus `K`
+/// worker processes on a loopback port — forward the training flags to
+/// every rank, and reap them. The multi-machine path is the same
+/// `train --transport tcp` invocation with real hostnames.
+fn cmd_launch(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let parts = cfg.train.num_partitions;
+    // `-n K`: single-dash flags land in positionals; accept `--n K` too.
+    let n = args
+        .get("n")
+        .map(|v| v.parse::<usize>().context("-n expects a worker count"))
+        .transpose()?
+        .or_else(|| {
+            let pos = &args.positional;
+            pos.iter()
+                .position(|a| a == "-n")
+                .and_then(|i| pos.get(i + 1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(parts);
+    ensure!(
+        n == parts,
+        "launch -n {n} but the config trains {parts} partitions — set \
+         train.num_partitions = {n} (every rank derives its role from the config)"
+    );
+    let port = match args.get_usize("port", 0) {
+        0 => 20000 + (std::process::id() as usize % 20000), // avoid collisions between runs
+        p => p,
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let exe = std::env::current_exe().context("resolving the heta binary path")?;
+
+    let mut forwarded: Vec<String> = vec![
+        "train".into(),
+        "--transport".into(),
+        "tcp".into(),
+        "--runtime".into(),
+        "cluster".into(),
+        "--peers".into(),
+        addr.clone(),
+    ];
+    for key in ["config", "engine", "epochs", "artifacts", "staleness"] {
+        if let Some(v) = args.get(key) {
+            forwarded.push(format!("--{key}"));
+            forwarded.push(v.to_string());
+        }
+    }
+    for flag in ["no-pipeline", "no-dedup-fetch", "shared-session"] {
+        if args.has_flag(flag) {
+            forwarded.push(format!("--{flag}"));
+        }
+    }
+
+    println!("launch: {} ranks (leader + {n} workers) on {addr}", n + 1);
+    let mut children = Vec::with_capacity(n + 1);
+    for rank in 0..=n {
+        let child = std::process::Command::new(&exe)
+            .args(&forwarded)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .spawn()
+            .with_context(|| format!("spawning rank {rank}"))?;
+        println!("launch: rank {rank} -> pid {}", child.id());
+        children.push((rank, child));
+    }
+    // Reap every rank. A crashed worker unblocks the others through the
+    // transport's hangup-as-error semantics, so plain waits suffice.
+    let mut failed: Vec<usize> = Vec::new();
+    for (rank, mut child) in children {
+        let status = child
+            .wait()
+            .with_context(|| format!("waiting on rank {rank}"))?;
+        if !status.success() {
+            eprintln!("launch: rank {rank} exited with {status}");
+            failed.push(rank);
+        }
+    }
+    if !failed.is_empty() {
+        bail!("launch: rank(s) {failed:?} failed — see their output above");
+    }
+    println!("launch: all {} ranks exited cleanly", n + 1);
     Ok(())
 }
 

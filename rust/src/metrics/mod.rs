@@ -58,7 +58,7 @@ impl Stage {
 }
 
 /// Per-stage accumulated time (seconds, simulated clock).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct StageTimes {
     pub secs: [f64; 7],
 }
@@ -136,6 +136,12 @@ pub struct EpochReport {
     /// `train.dedup_fetch` on these count **unique** rows per batch —
     /// the A/B lever the dedup-gather bench asserts on.
     pub fetch: crate::kvstore::FetchStats,
+    /// Bytes the harness transport actually moved this epoch (the
+    /// leader node's frames: real codec bytes next to the modeled
+    /// [`Wire::wire_bytes`](crate::cluster::mailbox::Wire) of the same
+    /// messages). All-zero for in-process transports, which move no
+    /// bytes; the modeled system's volumes stay in `comm` either way.
+    pub wire: crate::net::WireTraffic,
     pub loss_mean: f64,
     pub accuracy: f64,
     pub batches: usize,
@@ -184,6 +190,7 @@ impl EpochReport {
         self.stages.merge(&rep.stages);
         self.comm.merge(&rep.comm);
         self.fetch.merge(rep.fetch);
+        self.wire.merge(&rep.wire);
         self.loss_mean = rep.loss_mean;
         self.accuracy = rep.accuracy;
         self.batches += rep.batches;
@@ -216,6 +223,16 @@ impl EpochReport {
             crate::util::fmt_bytes(self.comm.bytes[2]),
             crate::util::fmt_bytes(self.comm.bytes[3]),
         );
+        if self.wire.frames() > 0 {
+            println!(
+                "    wire: real {} out / {} in ({} frames) | modeled {} out / {} in",
+                crate::util::fmt_bytes(self.wire.real_sent),
+                crate::util::fmt_bytes(self.wire.real_recv),
+                self.wire.frames(),
+                crate::util::fmt_bytes(self.wire.modeled_sent),
+                crate::util::fmt_bytes(self.wire.modeled_recv),
+            );
+        }
         if !self.worker_busy_s.is_empty() {
             let rows: Vec<String> = self
                 .worker_busy_s

@@ -171,7 +171,7 @@ pub enum AsyncShape {
 }
 
 /// Modeled per-worker durations for one batch.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct WorkerSpan {
     /// Neighbor sampling (prefetchable).
     pub sample_s: f64,

@@ -1,0 +1,618 @@
+//! Versioned, length-prefixed binary codec for every cluster message.
+//!
+//! The offline-build constraint rules out serde, so the wire format is
+//! hand-rolled and deliberately boring: little-endian fixed-width
+//! integers, floats as raw IEEE-754 bits (NaN payloads round-trip, so
+//! decoded trajectories stay **byte-identical** to in-process runs),
+//! length-prefixed sequences and UTF-8 strings. Every cluster message
+//! type implements [`WireCodec`] next to its definition — the shared
+//! payload structs ([`FetchStats`], [`StageTimes`], [`WorkerSpan`],
+//! [`WorkerGrads`], [`ParamSnapshot`], [`StoreDelta`]) here, the
+//! engine-private protocol enums in `cluster/{raf,vanilla}.rs`.
+//!
+//! Robustness contract: decoding never panics and never trusts a
+//! length. Every read is bounds-checked against the remaining frame,
+//! every declared element count is validated against the bytes that
+//! could actually hold it (a corrupt length cannot trigger a huge
+//! allocation), unknown enum tags are errors, and [`decode_message`]
+//! rejects trailing garbage. A truncated or bit-flipped frame therefore
+//! surfaces as `anyhow::Error` through the same `Result` paths a
+//! mailbox hangup uses — the engines add the batch in flight.
+//!
+//! [`CODEC_VERSION`] is exchanged in the TCP handshake
+//! (`super::tcp`); bump it whenever any message layout changes.
+//!
+//! [`FetchStats`]: crate::kvstore::FetchStats
+//! [`StageTimes`]: crate::metrics::StageTimes
+//! [`WorkerSpan`]: crate::metrics::timeline::WorkerSpan
+//! [`WorkerGrads`]: crate::exec::WorkerGrads
+//! [`ParamSnapshot`]: crate::runtime::ParamSnapshot
+//! [`StoreDelta`]: crate::kvstore::StoreDelta
+
+use anyhow::{bail, ensure, Result};
+
+use crate::exec::WorkerGrads;
+use crate::hetgraph::NodeId;
+use crate::kvstore::{FetchStats, StoreDelta};
+use crate::metrics::timeline::WorkerSpan;
+use crate::metrics::StageTimes;
+use crate::runtime::ParamSnapshot;
+
+/// Version of the message layouts below, exchanged in the transport
+/// handshake. Peers with different versions refuse to connect instead
+/// of mis-decoding each other.
+pub const CODEC_VERSION: u16 = 1;
+
+/// A message that can be encoded onto / decoded from a wire frame.
+pub trait WireCodec: Sized {
+    fn encode(&self, w: &mut ByteWriter);
+    /// Decode one value. Must be total: every failure is an error, and
+    /// no input may panic or over-allocate.
+    fn decode(r: &mut ByteReader<'_>) -> Result<Self>;
+}
+
+/// Encode a message into a standalone byte buffer.
+pub fn encode_message<T: WireCodec>(msg: &T) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    msg.encode(&mut w);
+    w.into_bytes()
+}
+
+/// Decode a message from a complete frame, rejecting trailing bytes (a
+/// frame that decodes but is longer than its message is corrupt).
+pub fn decode_message<T: WireCodec>(bytes: &[u8]) -> Result<T> {
+    let mut r = ByteReader::new(bytes);
+    let v = T::decode(&mut r)?;
+    r.finish()?;
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Byte-level writer/reader
+
+/// Append-only little-endian byte sink.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` travels as `u64` so 32- and 64-bit peers agree.
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Raw IEEE-754 bits: NaNs and signed zeros round-trip exactly.
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    pub fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+}
+
+/// Bounds-checked little-endian byte source over one frame.
+pub struct ByteReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(data: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { data, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    /// Take `n` raw bytes; errors (never panics) past the frame end.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "truncated frame: wanted {n} bytes, {} left of {}",
+            self.remaining(),
+            self.data.len()
+        );
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Validate a declared element count against the bytes that could
+    /// hold it — a corrupt length must not drive an allocation.
+    fn seq_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n.checked_mul(elem_bytes)
+                .is_some_and(|total| total <= self.remaining()),
+            "corrupt frame: sequence of {n} x {elem_bytes}B exceeds the {} bytes left",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        ensure!(
+            v <= usize::MAX as u64,
+            "corrupt frame: {v} exceeds this platform's usize"
+        );
+        Ok(v as usize)
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.seq_len(1)?;
+        let bytes = self.take(n)?;
+        match std::str::from_utf8(bytes) {
+            Ok(s) => Ok(s.to_string()),
+            Err(e) => bail!("corrupt frame: invalid UTF-8 string ({e})"),
+        }
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.seq_len(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.seq_len(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    /// Assert the frame was consumed exactly.
+    pub fn finish(&self) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "corrupt frame: {} trailing bytes after the message",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared payload types (the engine protocol enums compose these; their
+// own impls live next to their definitions in cluster/{raf,vanilla}.rs)
+
+impl WireCodec for () {
+    fn encode(&self, _w: &mut ByteWriter) {}
+    fn decode(_r: &mut ByteReader<'_>) -> Result<()> {
+        Ok(())
+    }
+}
+
+impl WireCodec for FetchStats {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u64(self.rows);
+        w.u64(self.bytes);
+        w.u64(self.remote_rows);
+        w.u64(self.remote_bytes);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<FetchStats> {
+        Ok(FetchStats {
+            rows: r.u64()?,
+            bytes: r.u64()?,
+            remote_rows: r.u64()?,
+            remote_bytes: r.u64()?,
+        })
+    }
+}
+
+impl WireCodec for StageTimes {
+    fn encode(&self, w: &mut ByteWriter) {
+        for &s in &self.secs {
+            w.f64(s);
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<StageTimes> {
+        let mut secs = [0.0f64; 7];
+        for s in &mut secs {
+            *s = r.f64()?;
+        }
+        Ok(StageTimes { secs })
+    }
+}
+
+impl WireCodec for WorkerSpan {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.f64(self.sample_s);
+        w.f64(self.fetch_ro_s);
+        w.f64(self.fetch_lr_s);
+        w.f64(self.copy_s);
+        w.f64(self.fwd_s);
+        w.f64(self.bwd_s);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<WorkerSpan> {
+        Ok(WorkerSpan {
+            sample_s: r.f64()?,
+            fetch_ro_s: r.f64()?,
+            fetch_lr_s: r.f64()?,
+            copy_s: r.f64()?,
+            fwd_s: r.f64()?,
+            bwd_s: r.f64()?,
+        })
+    }
+}
+
+/// Epoch-relative wall-clock interval (forward/backward span).
+impl WireCodec for (f64, f64) {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.f64(self.0);
+        w.f64(self.1);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<(f64, f64)> {
+        Ok((r.f64()?, r.f64()?))
+    }
+}
+
+impl WireCodec for WorkerGrads {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u32(self.wgrads.len() as u32);
+        for (name, g) in &self.wgrads {
+            w.str(name);
+            w.f32s(g);
+        }
+        w.u32(self.row_grads.len() as u32);
+        for (ty, ids, g) in &self.row_grads {
+            w.usize(*ty);
+            w.u32s(ids);
+            w.f32s(g);
+        }
+        w.u32(self.gx.len() as u32);
+        for g in &self.gx {
+            w.f32s(g);
+        }
+        w.u32(self.learnable_rows.len() as u32);
+        for &(ty, rows, remote) in &self.learnable_rows {
+            w.usize(ty);
+            w.u64(rows);
+            w.u64(remote);
+        }
+        w.u64(self.param_version);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<WorkerGrads> {
+        let n = r.seq_len(8)?; // each wgrad is at least a name len + vec len
+        let mut wgrads = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str()?;
+            let g = r.f32s()?;
+            wgrads.push((name, g));
+        }
+        let n = r.seq_len(16)?;
+        let mut row_grads: Vec<(usize, Vec<NodeId>, Vec<f32>)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let ty = r.usize()?;
+            let ids = r.u32s()?;
+            let g = r.f32s()?;
+            row_grads.push((ty, ids, g));
+        }
+        let n = r.seq_len(4)?;
+        let mut gx = Vec::with_capacity(n);
+        for _ in 0..n {
+            gx.push(r.f32s()?);
+        }
+        let n = r.seq_len(24)?;
+        let mut learnable_rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let ty = r.usize()?;
+            let rows = r.u64()?;
+            let remote = r.u64()?;
+            learnable_rows.push((ty, rows, remote));
+        }
+        let param_version = r.u64()?;
+        Ok(WorkerGrads {
+            wgrads,
+            row_grads,
+            gx,
+            learnable_rows,
+            param_version,
+        })
+    }
+}
+
+/// Snapshots encode their tensors sorted by name, so the byte stream is
+/// canonical regardless of the leader's `HashMap` iteration order.
+impl WireCodec for ParamSnapshot {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u64(self.version);
+        let tensors = self.tensors_sorted();
+        w.u32(tensors.len() as u32);
+        for (name, data) in tensors {
+            w.str(name);
+            w.f32s(data);
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<ParamSnapshot> {
+        let version = r.u64()?;
+        let n = r.seq_len(8)?;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str()?;
+            let data = r.f32s()?;
+            tensors.push((name, data));
+        }
+        Ok(ParamSnapshot::from_tensors(version, tensors))
+    }
+}
+
+impl WireCodec for StoreDelta {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u32(self.rows.len() as u32);
+        for (ty, ids, vals) in &self.rows {
+            w.usize(*ty);
+            w.u32s(ids);
+            w.f32s(vals);
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<StoreDelta> {
+        let n = r.seq_len(16)?;
+        let mut rows: Vec<(usize, Vec<NodeId>, Vec<f32>)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let ty = r.usize()?;
+            let ids = r.u32s()?;
+            let vals = r.f32s()?;
+            rows.push((ty, ids, vals));
+        }
+        Ok(StoreDelta { rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grads_fixture() -> WorkerGrads {
+        WorkerGrads {
+            wgrads: vec![
+                ("W1_writes".into(), vec![1.0, -2.5, f32::MIN_POSITIVE]),
+                ("b".into(), vec![]),
+            ],
+            row_grads: vec![(3, vec![7, 9, 9, crate::sampling::PAD], vec![0.25; 8])],
+            gx: vec![vec![1.5, -1.5], vec![]],
+            learnable_rows: vec![(0, 12, 3), (2, 4, 0)],
+            param_version: 41,
+        }
+    }
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut w = ByteWriter::new();
+        w.u8(0xAB);
+        w.u16(0xBEEF);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.usize(123_456);
+        w.f32(-0.0);
+        w.f64(f64::NAN);
+        w.str("héta");
+        w.f32s(&[1.0, 2.0]);
+        w.u32s(&[9, 8, 7]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 0xAB);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.usize().unwrap(), 123_456);
+        let z = r.f32().unwrap();
+        assert!(z == 0.0 && z.is_sign_negative(), "-0.0 must survive");
+        assert!(r.f64().unwrap().is_nan(), "NaN bits must survive");
+        assert_eq!(r.str().unwrap(), "héta");
+        assert_eq!(r.f32s().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(r.u32s().unwrap(), vec![9, 8, 7]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn worker_grads_round_trip() {
+        let wg = grads_fixture();
+        let bytes = encode_message(&wg);
+        let back: WorkerGrads = decode_message(&bytes).unwrap();
+        assert_eq!(back, wg);
+    }
+
+    #[test]
+    fn shared_structs_round_trip() {
+        let fs = FetchStats {
+            rows: 10,
+            bytes: 640,
+            remote_rows: 3,
+            remote_bytes: 192,
+        };
+        assert_eq!(decode_message::<FetchStats>(&encode_message(&fs)).unwrap(), fs);
+
+        let st = StageTimes {
+            secs: [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7],
+        };
+        assert_eq!(decode_message::<StageTimes>(&encode_message(&st)).unwrap(), st);
+
+        let span = WorkerSpan {
+            sample_s: 1.0,
+            fetch_ro_s: 2.0,
+            fetch_lr_s: 3.0,
+            copy_s: 4.0,
+            fwd_s: 5.0,
+            bwd_s: 6.0,
+        };
+        assert_eq!(decode_message::<WorkerSpan>(&encode_message(&span)).unwrap(), span);
+
+        let wall = (0.25f64, 0.75f64);
+        assert_eq!(decode_message::<(f64, f64)>(&encode_message(&wall)).unwrap(), wall);
+
+        let delta = StoreDelta {
+            rows: vec![(1, vec![4, 5], vec![0.5, 0.5, 1.5, 1.5])],
+        };
+        assert_eq!(decode_message::<StoreDelta>(&encode_message(&delta)).unwrap(), delta);
+
+        assert_eq!(encode_message(&()).len(), 0);
+        decode_message::<()>(&[]).unwrap();
+    }
+
+    #[test]
+    fn every_truncation_is_an_error_never_a_panic() {
+        let bytes = encode_message(&grads_fixture());
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_message::<WorkerGrads>(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} must be rejected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut bytes = encode_message(&grads_fixture());
+        bytes.push(0);
+        let err = decode_message::<WorkerGrads>(&bytes).unwrap_err();
+        assert!(
+            format!("{err}").contains("trailing"),
+            "trailing bytes must be named: {err}"
+        );
+    }
+
+    #[test]
+    fn corrupt_lengths_cannot_drive_allocations() {
+        // A frame claiming 2^32-1 f32s with 4 bytes of payload must be
+        // rejected by the length/remaining check, not by OOM.
+        let mut w = ByteWriter::new();
+        w.u32(u32::MAX);
+        w.u32(7);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.f32s().is_err());
+        // Same for strings.
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.str().is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_is_rejected() {
+        let mut w = ByteWriter::new();
+        w.u32(2);
+        w.u8(0xFF);
+        w.u8(0xFE);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let err = r.str().unwrap_err();
+        assert!(format!("{err}").contains("UTF-8"), "{err}");
+    }
+
+    #[test]
+    fn param_snapshot_bytes_are_canonical_and_round_trip() {
+        use crate::optim::AdamParams;
+        use crate::runtime::{InputSpec, ParamStore};
+        let mut store = ParamStore::new(7, AdamParams::default());
+        for name in ["zw", "aw", "mw"] {
+            store.ensure(&InputSpec {
+                kind: "weight".into(),
+                shape: vec![2, 2],
+                name: name.into(),
+                edge: -1,
+                layer: 0,
+                dtype: "f32".into(),
+                init: "glorot".into(),
+            });
+        }
+        let snap = store.snapshot();
+        let a = encode_message(&snap);
+        let b = encode_message(&snap);
+        assert_eq!(a, b, "snapshot encoding must be canonical");
+        let back: ParamSnapshot = decode_message(&a).unwrap();
+        assert_eq!(back, snap);
+        // Sorted by name regardless of HashMap order: "aw" first.
+        let mut r = ByteReader::new(&a);
+        r.u64().unwrap(); // version
+        r.u32().unwrap(); // count
+        assert_eq!(r.str().unwrap(), "aw");
+    }
+}

@@ -1,0 +1,161 @@
+//! Wire transport (PR 5): multi-process cluster training over sockets
+//! behind the mailbox trait.
+//!
+//! The cluster runtime's collectives are generic over the
+//! [`Transport`](crate::cluster::mailbox::Transport) contract. Two
+//! implementations exist:
+//!
+//! * in-process channels ([`crate::cluster::mailbox::Mailbox`]) — every
+//!   rank is a thread of one process (the PR-1 runtime, still the
+//!   default);
+//! * the TCP star of [`tcp`] — **one OS process per rank**. The leader
+//!   listens, workers dial in, and every cluster message crosses a real
+//!   socket through the versioned binary codec of [`codec`].
+//!
+//! Which one a training run uses is the session's [`Backend`]
+//! (`heta train --transport tcp --rank R --peers host:port`, or
+//! `heta launch -n K` to spawn a local K-worker cluster). Every process
+//! builds the same deterministic state from the config (graph, feature
+//! store, parameter init, batch schedule — all seeded), so the only
+//! cross-process traffic is the protocol itself: parameter snapshots
+//! and batch releases down, partial aggregations and gradients up, and
+//! the [`StoreDelta`](crate::kvstore::StoreDelta) broadcast that
+//! replicates the leader's learnable-feature updates into every worker
+//! process's KV store (in-process runs share one store and skip it).
+//! Losses are **byte-identical** across `channel | tcp` at any fixed
+//! staleness — the loopback half of `tests/test_net_transport.rs` pins
+//! it through the shared equivalence harness.
+//!
+//! [`WireTraffic`] reports what actually moved: real frame bytes next
+//! to the modeled bytes of the same messages
+//! ([`Wire::wire_bytes`](crate::cluster::mailbox::Wire::wire_bytes)),
+//! so drift between the cost model and the harness wire is visible in
+//! every `EpochReport`.
+
+pub mod codec;
+pub mod tcp;
+
+pub use codec::{decode_message, encode_message, WireCodec, CODEC_VERSION};
+pub use tcp::{Role, TcpChannel, TcpNode};
+
+/// Which transport a session's cluster runtime rides on.
+pub enum Backend {
+    /// In-process channels: every rank is a thread of this process.
+    Channel,
+    /// The socket star: this process plays exactly one rank of a
+    /// multi-process cluster.
+    Tcp(TcpNode),
+}
+
+impl Backend {
+    /// `true` when this process is a TCP worker rank (its epoch reports
+    /// carry no losses — the leader owns the trajectory).
+    pub fn is_tcp_worker(&self) -> bool {
+        matches!(self, Backend::Tcp(n) if n.role() != Role::Leader)
+    }
+}
+
+/// The one guard every TCP entry point shares (config parse, the CLI
+/// and both engines call it, so the wording can never drift): the
+/// socket transport has no meaning under the sequential driver, which
+/// plays every rank itself and has no peers to talk to.
+pub fn require_cluster_runtime(runtime: crate::config::RuntimeKind) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        runtime == crate::config::RuntimeKind::Cluster,
+        "the tcp transport requires train.runtime = \"cluster\": the sequential \
+         driver plays every rank itself and has no peers to talk to"
+    );
+    Ok(())
+}
+
+/// Bytes and frames a transport node actually moved, next to the
+/// modeled bytes of the same messages.
+///
+/// * `real_*` — frame bytes on the wire, headers included (what the
+///   codec produced; zero for in-process channels, which move no
+///   bytes).
+/// * `modeled_*` — the [`Wire::wire_bytes`] total of the same payloads:
+///   the tensor bytes the *modeled* distributed system would ship
+///   (snapshot distribution and control metadata are modeled-free, so
+///   modeled never exceeds real for the same traffic — the loopback
+///   test asserts it).
+///
+/// [`Wire::wire_bytes`]: crate::cluster::mailbox::Wire::wire_bytes
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireTraffic {
+    pub real_sent: u64,
+    pub real_recv: u64,
+    pub frames_sent: u64,
+    pub frames_recv: u64,
+    pub modeled_sent: u64,
+    pub modeled_recv: u64,
+}
+
+impl WireTraffic {
+    /// Traffic since an earlier snapshot of the same node (counters are
+    /// cumulative across epochs).
+    pub fn since(&self, earlier: &WireTraffic) -> WireTraffic {
+        WireTraffic {
+            real_sent: self.real_sent - earlier.real_sent,
+            real_recv: self.real_recv - earlier.real_recv,
+            frames_sent: self.frames_sent - earlier.frames_sent,
+            frames_recv: self.frames_recv - earlier.frames_recv,
+            modeled_sent: self.modeled_sent - earlier.modeled_sent,
+            modeled_recv: self.modeled_recv - earlier.modeled_recv,
+        }
+    }
+
+    pub fn merge(&mut self, o: &WireTraffic) {
+        self.real_sent += o.real_sent;
+        self.real_recv += o.real_recv;
+        self.frames_sent += o.frames_sent;
+        self.frames_recv += o.frames_recv;
+        self.modeled_sent += o.modeled_sent;
+        self.modeled_recv += o.modeled_recv;
+    }
+
+    pub fn real_total(&self) -> u64 {
+        self.real_sent + self.real_recv
+    }
+
+    pub fn modeled_total(&self) -> u64 {
+        self.modeled_sent + self.modeled_recv
+    }
+
+    pub fn frames(&self) -> u64 {
+        self.frames_sent + self.frames_recv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_since_and_merge() {
+        let a = WireTraffic {
+            real_sent: 100,
+            real_recv: 50,
+            frames_sent: 4,
+            frames_recv: 2,
+            modeled_sent: 60,
+            modeled_recv: 30,
+        };
+        let mut b = a;
+        b.real_sent = 150;
+        b.frames_sent = 6;
+        b.modeled_sent = 90;
+        let d = b.since(&a);
+        assert_eq!(d.real_sent, 50);
+        assert_eq!(d.frames_sent, 2);
+        assert_eq!(d.modeled_sent, 30);
+        assert_eq!(d.real_recv, 0);
+        let mut m = a;
+        m.merge(&d);
+        assert_eq!(m, b);
+        assert_eq!(b.real_total(), 200);
+        assert_eq!(b.modeled_total(), 120);
+        assert_eq!(b.frames(), 8);
+        assert!(!Backend::Channel.is_tcp_worker());
+    }
+}

@@ -1,0 +1,780 @@
+//! TCP star mesh: the socket-backed transport behind the mailbox trait.
+//!
+//! One OS process per rank. The physical topology mirrors the logical
+//! hub-and-spoke the collectives use: the leader (logical rank
+//! `workers`) listens, every worker dials in, and each (worker, leader)
+//! pair shares **one** full-duplex connection. All typed lanes of the
+//! protocol (data up/down, barrier up/down) are multiplexed over that
+//! connection with a one-byte lane id, so per-(sender, receiver) FIFO —
+//! the ordering contract of [`crate::cluster::mailbox`] — is inherited
+//! directly from TCP's in-order delivery: everything a process sends to
+//! a peer travels one ordered stream.
+//!
+//! Frames are length-prefixed: `u32 len | u8 lane | payload`, with the
+//! payload encoded by the message's [`WireCodec`] impl. The connection
+//! handshake exchanges a magic, the [`CODEC_VERSION`] and the peer's
+//! logical rank; a version mismatch refuses the connection instead of
+//! mis-decoding frames.
+//!
+//! Failure semantics match the in-process mailbox: a peer hanging up
+//! (process death, socket reset) or a frame that fails to decode
+//! surfaces as `anyhow::Error` from [`TcpChannel::send`]/[`recv`] —
+//! never a panic — and the engines' gather context names the batch in
+//! flight. A reader thread per connection demultiplexes incoming
+//! frames to per-lane queues and, on error, posts the reason to every
+//! lane so a blocked receiver wakes with the root cause.
+//!
+//! Accounting: the node counts **real** bytes moved (frame bytes
+//! actually written/read, headers included) next to the **modeled**
+//! bytes of the same messages ([`Wire::wire_bytes`] — what the modeled
+//! distributed system would ship). The gap between the two is the
+//! codec + harness overhead `EpochReport.wire` makes visible; modeled
+//! never exceeds real for the same traffic.
+//!
+//! [`recv`]: TcpChannel::recv
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::marker::PhantomData;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::cluster::mailbox::{Envelope, Transport, Wire};
+
+use super::codec::{decode_message, encode_message, WireCodec, CODEC_VERSION};
+use super::WireTraffic;
+
+/// Typed lanes multiplexed over each connection. Both engines use the
+/// same four slots (one engine runs per process).
+pub const LANE_DATA_UP: u8 = 0;
+pub const LANE_DATA_DOWN: u8 = 1;
+pub const LANE_BARRIER_UP: u8 = 2;
+pub const LANE_BARRIER_DOWN: u8 = 3;
+const NUM_LANES: usize = 4;
+
+/// Refuse frames beyond this size: a corrupt length prefix must not
+/// drive a multi-GiB allocation. Generous next to any real message
+/// (snapshots of the bench configs are a few MiB).
+const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+const MAGIC: [u8; 4] = *b"HETA";
+
+/// How long a worker keeps re-dialing a leader that has not bound its
+/// listen address yet (`heta launch` starts all ranks at once).
+pub const DIAL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Shared byte/frame counters of one node (all lanes, all peers).
+#[derive(Default)]
+struct Counters {
+    real_sent: AtomicU64,
+    real_recv: AtomicU64,
+    frames_sent: AtomicU64,
+    frames_recv: AtomicU64,
+    modeled_sent: AtomicU64,
+    modeled_recv: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> WireTraffic {
+        WireTraffic {
+            real_sent: self.real_sent.load(Ordering::Relaxed),
+            real_recv: self.real_recv.load(Ordering::Relaxed),
+            frames_sent: self.frames_sent.load(Ordering::Relaxed),
+            frames_recv: self.frames_recv.load(Ordering::Relaxed),
+            modeled_sent: self.modeled_sent.load(Ordering::Relaxed),
+            modeled_recv: self.modeled_recv.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One raw frame routed to a lane queue; `Err` is a connection-level
+/// failure (EOF, reset, corrupt header) the reader thread broadcast.
+struct LaneFrame {
+    from: usize,
+    frame: std::result::Result<Vec<u8>, String>,
+}
+
+struct PeerConn {
+    writer: Mutex<BufWriter<TcpStream>>,
+}
+
+struct NodeShared {
+    /// This process's logical rank (workers `0..W`, leader `W`).
+    rank: usize,
+    workers: usize,
+    /// Writer per logical peer rank (`None` where the star has no link,
+    /// e.g. worker↔worker).
+    peers: Vec<Option<PeerConn>>,
+    /// Per-lane frame queues, taken once by [`TcpNode::open_lane`].
+    lane_rx: Mutex<Vec<Option<Receiver<LaneFrame>>>>,
+    counters: Arc<Counters>,
+    /// Raw handles for teardown: shutting the sockets down unblocks the
+    /// reader threads (which hold fd clones that would otherwise keep
+    /// the connections alive forever).
+    raw: Vec<TcpStream>,
+}
+
+impl Drop for NodeShared {
+    fn drop(&mut self) {
+        for s in &self.raw {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// One process's endpoint of the TCP star.
+pub struct TcpNode {
+    shared: Arc<NodeShared>,
+}
+
+/// Which protocol role this process's rank plays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Leader,
+    Worker(usize),
+}
+
+impl TcpNode {
+    /// Logical rank of this process.
+    pub fn rank(&self) -> usize {
+        self.shared.rank
+    }
+
+    /// Number of worker ranks in the star (the leader is rank
+    /// `workers`).
+    pub fn workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    pub fn role(&self) -> Role {
+        if self.shared.rank == self.shared.workers {
+            Role::Leader
+        } else {
+            Role::Worker(self.shared.rank)
+        }
+    }
+
+    /// Cumulative traffic of this node since connection (all lanes).
+    pub fn traffic(&self) -> WireTraffic {
+        self.shared.counters.snapshot()
+    }
+
+    /// Take the typed endpoint of one lane. Each lane's receive queue
+    /// exists once; opening the same lane twice is an error (the
+    /// engines open their lanes once per training run and reuse them
+    /// across epochs).
+    pub fn open_lane<T: WireCodec + Wire>(&self, lane: u8) -> Result<TcpChannel<T>> {
+        let mut lanes = lock(&self.shared.lane_rx);
+        let slot = lanes
+            .get_mut(lane as usize)
+            .ok_or_else(|| anyhow!("lane {lane} outside the {NUM_LANES}-lane table"))?;
+        let rx = slot
+            .take()
+            .ok_or_else(|| anyhow!("lane {lane} already opened by this process"))?;
+        Ok(TcpChannel {
+            shared: Arc::clone(&self.shared),
+            lane,
+            rx,
+            _payload: PhantomData,
+        })
+    }
+}
+
+/// Mutex helper: these locks guard plain data, so a poisoned lock (a
+/// panicking peer thread) is re-entered rather than propagated.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The typed endpoint of one lane on one node: the socket-backed
+/// implementation of the mailbox [`Transport`] contract.
+pub struct TcpChannel<T> {
+    shared: Arc<NodeShared>,
+    lane: u8,
+    rx: Receiver<LaneFrame>,
+    _payload: PhantomData<fn() -> T>,
+}
+
+impl<T> TcpChannel<T> {
+    /// Node-level traffic counters (shared by every lane of this
+    /// process — sum across lanes would double count).
+    pub fn traffic(&self) -> WireTraffic {
+        self.shared.counters.snapshot()
+    }
+}
+
+impl<T: WireCodec + Wire> Transport<T> for TcpChannel<T> {
+    fn rank(&self) -> usize {
+        self.shared.rank
+    }
+
+    fn send(&self, to: usize, payload: T) -> Result<()> {
+        let conn = self
+            .shared
+            .peers
+            .get(to)
+            .ok_or_else(|| {
+                anyhow!("rank {to} outside this {}-worker star", self.shared.workers)
+            })?
+            .as_ref()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no socket from rank {} to rank {to} (the star links workers \
+                     to the leader only)",
+                    self.shared.rank
+                )
+            })?;
+        let body = encode_message(&payload);
+        // Check before the u32 cast: a >= 4 GiB body must not wrap into
+        // a small length that desyncs the stream.
+        ensure!(
+            body.len() + 1 <= MAX_FRAME_BYTES as usize,
+            "frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte limit",
+            body.len() + 1
+        );
+        let len = (body.len() + 1) as u32;
+        {
+            let mut w = lock(&conn.writer);
+            (|| -> std::io::Result<()> {
+                w.write_all(&len.to_le_bytes())?;
+                w.write_all(&[self.lane])?;
+                w.write_all(&body)?;
+                w.flush()
+            })()
+            .map_err(|e| {
+                anyhow!(
+                    "rank {to} hung up (socket write failed: {e}; peer process exited early?)"
+                )
+            })?;
+        }
+        let c = &self.shared.counters;
+        c.real_sent.fetch_add(4 + len as u64, Ordering::Relaxed);
+        c.frames_sent.fetch_add(1, Ordering::Relaxed);
+        c.modeled_sent.fetch_add(payload.wire_bytes(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn recv(&self) -> Result<Envelope<T>> {
+        let f = self.rx.recv().map_err(|_| {
+            anyhow!(
+                "all peers of rank {} hung up (every connection closed mid-run)",
+                self.shared.rank
+            )
+        })?;
+        let bytes = match f.frame {
+            Ok(b) => b,
+            Err(reason) => bail!(
+                "rank {} hung up while rank {} waited on lane {}: {reason}",
+                f.from,
+                self.shared.rank,
+                self.lane
+            ),
+        };
+        let payload: T = decode_message(&bytes).with_context(|| {
+            format!(
+                "decoding a lane-{} frame of {} bytes from rank {}",
+                self.lane,
+                bytes.len(),
+                f.from
+            )
+        })?;
+        self.shared
+            .counters
+            .modeled_recv
+            .fetch_add(payload.wire_bytes(), Ordering::Relaxed);
+        Ok(Envelope {
+            from: f.from,
+            payload,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection setup
+
+fn handshake_bytes(rank: u16) -> [u8; 8] {
+    let v = CODEC_VERSION.to_le_bytes();
+    let r = rank.to_le_bytes();
+    [MAGIC[0], MAGIC[1], MAGIC[2], MAGIC[3], v[0], v[1], r[0], r[1]]
+}
+
+fn read_handshake(stream: &mut TcpStream, who: &str) -> Result<u16> {
+    let mut buf = [0u8; 8];
+    stream
+        .read_exact(&mut buf)
+        .with_context(|| format!("reading the handshake from {who}"))?;
+    ensure!(
+        buf[..4] == MAGIC,
+        "{who} is not a heta transport peer (bad magic {:02x?})",
+        &buf[..4]
+    );
+    let ver = u16::from_le_bytes([buf[4], buf[5]]);
+    ensure!(
+        ver == CODEC_VERSION,
+        "{who} speaks codec version {ver}, this build speaks {CODEC_VERSION} \
+         (mixed builds cannot exchange frames)"
+    );
+    Ok(u16::from_le_bytes([buf[6], buf[7]]))
+}
+
+fn configure(stream: &TcpStream) -> Result<()> {
+    // The protocol is latency-bound (2·[B,H] tensors per hop); never
+    // let Nagle batch a release against a gather.
+    stream.set_nodelay(true).context("set_nodelay")?;
+    Ok(())
+}
+
+/// Finish building a node over its established connections:
+/// `conns[i] = (peer logical rank, stream)`.
+fn build_node(rank: usize, workers: usize, conns: Vec<(usize, TcpStream)>) -> Result<TcpNode> {
+    let counters = Arc::new(Counters::default());
+    let (lane_tx, lane_rx): (Vec<Sender<LaneFrame>>, Vec<Option<Receiver<LaneFrame>>>) = (0
+        ..NUM_LANES)
+        .map(|_| {
+            let (tx, rx) = channel();
+            (tx, Some(rx))
+        })
+        .unzip();
+    let mut peers: Vec<Option<PeerConn>> = (0..workers + 1).map(|_| None).collect();
+    let mut raw = Vec::with_capacity(conns.len());
+    for (peer, stream) in conns {
+        ensure!(peers[peer].is_none(), "duplicate connection from rank {peer}");
+        let read_half = stream.try_clone().context("cloning the socket read half")?;
+        raw.push(stream.try_clone().context("cloning the shutdown handle")?);
+        let senders: Vec<Sender<LaneFrame>> = lane_tx.clone();
+        let c = Arc::clone(&counters);
+        std::thread::Builder::new()
+            .name(format!("net-rx-{rank}-from-{peer}"))
+            .spawn(move || reader_loop(read_half, peer, senders, c))
+            .context("spawning the connection reader thread")?;
+        peers[peer] = Some(PeerConn {
+            writer: Mutex::new(BufWriter::new(stream)),
+        });
+    }
+    Ok(TcpNode {
+        shared: Arc::new(NodeShared {
+            rank,
+            workers,
+            peers,
+            lane_rx: Mutex::new(lane_rx),
+            counters,
+            raw,
+        }),
+    })
+}
+
+/// Demultiplex one connection: read frames, route them to their lane
+/// queues, and on any failure broadcast the reason to every lane so a
+/// blocked receiver wakes with the root cause instead of hanging.
+fn reader_loop(
+    stream: TcpStream,
+    from: usize,
+    senders: Vec<Sender<LaneFrame>>,
+    counters: Arc<Counters>,
+) {
+    let mut r = BufReader::new(stream);
+    let reason = loop {
+        let mut hdr = [0u8; 4];
+        if let Err(e) = r.read_exact(&mut hdr) {
+            break if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                format!("rank {from} closed its connection")
+            } else {
+                format!("reading from rank {from} failed: {e}")
+            };
+        }
+        let len = u32::from_le_bytes(hdr);
+        if len == 0 || len > MAX_FRAME_BYTES {
+            break format!("corrupt frame header from rank {from} (length {len})");
+        }
+        let mut lane = [0u8; 1];
+        if let Err(e) = r.read_exact(&mut lane) {
+            break format!("reading a frame lane from rank {from} failed: {e}");
+        }
+        let mut body = vec![0u8; len as usize - 1];
+        if let Err(e) = r.read_exact(&mut body) {
+            break format!("reading a {len}-byte frame from rank {from} failed: {e}");
+        }
+        counters.real_recv.fetch_add(4 + len as u64, Ordering::Relaxed);
+        counters.frames_recv.fetch_add(1, Ordering::Relaxed);
+        let Some(tx) = senders.get(lane[0] as usize) else {
+            break format!("frame from rank {from} names unknown lane {}", lane[0]);
+        };
+        // A dropped lane receiver just means nobody is listening there
+        // anymore (epoch teardown); not an error.
+        let _ = tx.send(LaneFrame {
+            from,
+            frame: Ok(body),
+        });
+    };
+    for tx in &senders {
+        let _ = tx.send(LaneFrame {
+            from,
+            frame: Err(reason.clone()),
+        });
+    }
+}
+
+/// Leader side: bind `addr` and accept every worker's dial-in.
+pub fn listen(addr: &str, workers: usize) -> Result<TcpNode> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("leader binding the listen address {addr}"))?;
+    accept_workers(listener, workers)
+}
+
+/// How long a dialer gets to complete its handshake before the leader
+/// drops the connection and keeps accepting (a stray port probe that
+/// connects and sends nothing must not deadlock cluster startup).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Overall deadline for the full worker set to dial in. A worker that
+/// died before dialing (crash, bad spawn, duplicate --rank) must not
+/// hang the leader — and everything reaping it — forever; generous
+/// enough for ranks started by hand across terminals.
+pub const ACCEPT_TIMEOUT: Duration = Duration::from_secs(180);
+
+/// Leader side over an already-bound listener (lets callers bind port 0
+/// and learn the ephemeral address before workers dial).
+///
+/// Robustness: a dial-in that fails its handshake — bad magic (port
+/// scanner, health-check probe), codec-version mismatch, out-of-range
+/// or duplicate rank, or silence past [`HANDSHAKE_TIMEOUT`] — is
+/// logged, dropped, and the leader keeps accepting. The rejected
+/// dialer sees EOF and errors on its side; only the listener socket
+/// itself failing aborts the cluster.
+pub fn accept_workers(listener: TcpListener, workers: usize) -> Result<TcpNode> {
+    ensure!(workers >= 1, "a star needs at least one worker rank");
+    // Poll the listener against an overall deadline: `TcpListener` has
+    // no accept timeout, and blocking forever on a worker that died
+    // before dialing would hang the whole launch.
+    listener
+        .set_nonblocking(true)
+        .context("arming the accept deadline")?;
+    let deadline = Instant::now() + ACCEPT_TIMEOUT;
+    let mut conns: Vec<Option<(usize, TcpStream)>> = (0..workers).map(|_| None).collect();
+    let mut connected = 0usize;
+    while connected < workers {
+        let (mut stream, peer_addr) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "only {connected} of {workers} workers dialed in within \
+                         {ACCEPT_TIMEOUT:?} — a worker rank died before dialing, or its \
+                         --peers/--rank point elsewhere"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+            Err(e) => return Err(e).context("accepting a worker dial-in"),
+        };
+        // Accepted sockets may inherit the listener's non-blocking mode
+        // on some platforms; the handshake and reader threads need
+        // blocking reads.
+        stream
+            .set_nonblocking(false)
+            .context("restoring blocking mode on an accepted socket")?;
+        let taken: Vec<bool> = conns.iter().map(|c| c.is_some()).collect();
+        match admit_worker(&mut stream, &peer_addr.to_string(), workers, &taken) {
+            Ok(w) => {
+                conns[w] = Some((w, stream));
+                connected += 1;
+            }
+            Err(e) => {
+                eprintln!(
+                    "leader: rejected dial-in from {peer_addr} ({e:#}); still waiting for \
+                     {} of {workers} workers",
+                    workers - connected
+                );
+            }
+        }
+    }
+    build_node(
+        workers,
+        workers,
+        conns.into_iter().flatten().collect(),
+    )
+}
+
+/// One dial-in's handshake on the leader side; `taken[w]` marks ranks
+/// already admitted. Any failure rejects this connection only.
+fn admit_worker(
+    stream: &mut TcpStream,
+    peer_addr: &str,
+    workers: usize,
+    taken: &[bool],
+) -> Result<usize> {
+    configure(stream)?;
+    stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .context("arming the handshake timeout")?;
+    let w = read_handshake(stream, &format!("dialer {peer_addr}"))? as usize;
+    ensure!(
+        w < workers,
+        "dialer {peer_addr} claims worker rank {w}, but this star has {workers} workers"
+    );
+    ensure!(
+        !taken[w],
+        "two dialers claim worker rank {w} (duplicate --rank?)"
+    );
+    stream
+        .write_all(&handshake_bytes(workers as u16))
+        .and_then(|_| stream.flush())
+        .with_context(|| format!("answering worker {w}'s handshake"))?;
+    // Back to blocking reads: the reader thread owns this fd for the
+    // whole run and must never see a spurious timeout.
+    stream
+        .set_read_timeout(None)
+        .context("disarming the handshake timeout")?;
+    Ok(w)
+}
+
+/// Worker side: dial the leader (re-trying until `timeout`, since the
+/// launcher starts every rank at once), handshake, and build the node.
+pub fn dial(
+    leader_addr: &str,
+    worker: usize,
+    workers: usize,
+    timeout: Duration,
+) -> Result<TcpNode> {
+    ensure!(
+        worker < workers,
+        "worker rank {worker} outside the {workers}-worker star"
+    );
+    let deadline = Instant::now() + timeout;
+    let mut stream = loop {
+        match TcpStream::connect(leader_addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "worker {worker} could not reach the leader at {leader_addr} \
+                         within {timeout:?}: {e}"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    configure(&stream)?;
+    stream
+        .write_all(&handshake_bytes(worker as u16))
+        .and_then(|_| stream.flush())
+        .with_context(|| format!("worker {worker} sending its handshake"))?;
+    let leader_rank = read_handshake(&mut stream, &format!("leader {leader_addr}"))? as usize;
+    ensure!(
+        leader_rank == workers,
+        "leader at {leader_addr} runs a {leader_rank}-worker star, this rank expects \
+         {workers} (mismatched --peers / num_partitions?)"
+    );
+    build_node(worker, workers, vec![(workers, stream)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal test payload: the modeled system would ship the f32s.
+    #[derive(Debug, PartialEq)]
+    struct Msg {
+        batch: u64,
+        data: Vec<f32>,
+    }
+
+    impl Wire for Msg {
+        fn wire_bytes(&self) -> u64 {
+            (self.data.len() * 4) as u64
+        }
+    }
+
+    impl WireCodec for Msg {
+        fn encode(&self, w: &mut super::super::codec::ByteWriter) {
+            w.u64(self.batch);
+            w.f32s(&self.data);
+        }
+        fn decode(r: &mut super::super::codec::ByteReader<'_>) -> Result<Msg> {
+            Ok(Msg {
+                batch: r.u64()?,
+                data: r.f32s()?,
+            })
+        }
+    }
+
+    fn loopback_star(workers: usize) -> (TcpNode, Vec<TcpNode>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let dialers: Vec<_> = (0..workers)
+            .map(|w| {
+                let addr = addr.clone();
+                std::thread::spawn(move || dial(&addr, w, workers, DIAL_TIMEOUT).unwrap())
+            })
+            .collect();
+        let leader = accept_workers(listener, workers).unwrap();
+        let nodes = dialers.into_iter().map(|h| h.join().unwrap()).collect();
+        (leader, nodes)
+    }
+
+    #[test]
+    fn frames_route_by_lane_and_preserve_sender_fifo() {
+        let (leader, workers) = loopback_star(2);
+        let hub_up: TcpChannel<Msg> = leader.open_lane(LANE_DATA_UP).unwrap();
+        let hub_bar: TcpChannel<()> = leader.open_lane(LANE_BARRIER_UP).unwrap();
+        assert!(
+            leader.open_lane::<Msg>(LANE_DATA_UP).is_err(),
+            "a lane's receive queue exists once"
+        );
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|node| {
+                std::thread::spawn(move || {
+                    let up: TcpChannel<Msg> = node.open_lane(LANE_DATA_UP).unwrap();
+                    let bar: TcpChannel<()> = node.open_lane(LANE_BARRIER_UP).unwrap();
+                    let me = node.rank() as u64;
+                    for bi in 0..3u64 {
+                        up.send(2, Msg { batch: bi, data: vec![me as f32; 4] }).unwrap();
+                    }
+                    bar.send(2, ()).unwrap();
+                })
+            })
+            .collect();
+        // 6 data frames, FIFO per sender; 2 barrier frames on their own
+        // lane regardless of interleaving on the shared connections.
+        let mut next = [0u64; 2];
+        for _ in 0..6 {
+            let e = hub_up.recv().unwrap();
+            assert_eq!(e.payload.batch, next[e.from], "lane reordered");
+            assert_eq!(e.payload.data, vec![e.from as f32; 4]);
+            next[e.from] += 1;
+        }
+        for _ in 0..2 {
+            hub_bar.recv().unwrap();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let t = hub_up.traffic();
+        assert_eq!(t.frames_recv, 8);
+        assert_eq!(t.modeled_recv, 6 * 16, "barrier frames are modeled-free");
+        assert!(
+            t.real_recv > t.modeled_recv,
+            "real bytes carry headers + metadata: {t:?}"
+        );
+    }
+
+    #[test]
+    fn peer_death_surfaces_as_an_error_naming_the_peer() {
+        let (leader, mut workers) = loopback_star(1);
+        let hub_up: TcpChannel<Msg> = leader.open_lane(LANE_DATA_UP).unwrap();
+        let w = workers.pop().unwrap();
+        let wc: TcpChannel<Msg> = w.open_lane(LANE_DATA_UP).unwrap();
+        wc.send(1, Msg { batch: 9, data: vec![] }).unwrap();
+        drop(wc);
+        drop(w); // shutdown: the reader sees EOF after the queued frame
+        assert_eq!(hub_up.recv().unwrap().payload.batch, 9);
+        let err = hub_up.recv().unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("rank 0"), "hangup must name the peer: {text}");
+        // And sends to the dead peer fail too (possibly after a frame
+        // sits in OS buffers — retry until the pipe breaks).
+        let down: TcpChannel<Msg> = leader.open_lane(LANE_DATA_DOWN).unwrap();
+        let mut saw_err = false;
+        for _ in 0..200 {
+            if down.send(0, Msg { batch: 0, data: vec![0.0; 256] }).is_err() {
+                saw_err = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(saw_err, "writing to a dead peer must eventually error");
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_not_trusted() {
+        let (leader, mut workers) = loopback_star(1);
+        let hub_up: TcpChannel<Msg> = leader.open_lane(LANE_DATA_UP).unwrap();
+        let w = workers.pop().unwrap();
+        // Encode a valid frame, then truncate the payload: the decode
+        // at the receiver must fail with context, not panic.
+        let bar: TcpChannel<()> = w.open_lane(LANE_BARRIER_UP).unwrap();
+        bar.send(1, ()).unwrap(); // prove the link first
+        let hub_bar: TcpChannel<()> = leader.open_lane(LANE_BARRIER_UP).unwrap();
+        hub_bar.recv().unwrap();
+        // Hand-write a frame whose body is one byte short of its Msg.
+        {
+            let shared = &w.shared;
+            let conn = shared.peers[1].as_ref().unwrap();
+            let mut wr = lock(&conn.writer);
+            let body = [LANE_DATA_UP, 1, 0, 0, 0, 0, 0, 0]; // u64 missing a byte
+            wr.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+            wr.write_all(&body).unwrap();
+            wr.flush().unwrap();
+        }
+        let err = hub_up.recv().unwrap_err();
+        let text = format!("{err:#}");
+        assert!(
+            text.contains("decoding") && text.contains("truncated"),
+            "corrupt frame must explain itself: {text}"
+        );
+    }
+
+    #[test]
+    fn stray_dialins_are_rejected_without_killing_the_cluster() {
+        // A stray dial-in (bad magic: a port probe) must be dropped —
+        // not deadlock the leader, not abort the run — and the star
+        // must still form once the real worker arrives.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stray = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                // Best-effort: the leader may already have finished
+                // accepting by the time the probe lands.
+                if let Ok(mut s) = TcpStream::connect(addr) {
+                    let _ = s.write_all(b"NOPE\x01\x00\x00\x00");
+                    let _ = s.flush();
+                }
+            })
+        };
+        let real = {
+            let addr = addr.clone();
+            std::thread::spawn(move || dial(&addr, 0, 1, DIAL_TIMEOUT).unwrap())
+        };
+        let leader = accept_workers(listener, 1).expect("a stray probe must not kill accept");
+        assert_eq!(leader.workers(), 1);
+        stray.join().unwrap();
+        let worker = real.join().unwrap();
+        assert_eq!(worker.role(), Role::Worker(0));
+    }
+
+    #[test]
+    fn handshake_rejects_wrong_worker_count() {
+        // A worker expecting a different star size refuses the leader.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || accept_workers(listener, 2));
+        let err = dial(&addr, 0, 3, DIAL_TIMEOUT).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("star"),
+            "mismatched star sizes must explain themselves: {err:#}"
+        );
+        drop(t); // leader side still waits for a second worker; abandon it
+    }
+
+    #[test]
+    fn rank_mapping_and_roles() {
+        let (leader, workers) = loopback_star(2);
+        assert_eq!(leader.role(), Role::Leader);
+        assert_eq!(leader.rank(), 2);
+        assert_eq!(leader.workers(), 2);
+        assert_eq!(workers[0].role(), Role::Worker(0));
+        assert_eq!(workers[1].role(), Role::Worker(1));
+        // Workers have no link to each other.
+        let c: TcpChannel<Msg> = workers[0].open_lane(LANE_DATA_UP).unwrap();
+        let err = c.send(1, Msg { batch: 0, data: vec![] }).unwrap_err();
+        assert!(format!("{err}").contains("no socket"), "{err}");
+    }
+}

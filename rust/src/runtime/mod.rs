@@ -231,13 +231,38 @@ pub struct ParamStore {
 /// [`crate::exec::ParamsView::Owner`]). Snapshots share tensor storage
 /// with the store at capture time — later optimizer steps copy-on-write
 /// and can never mutate a published snapshot.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ParamSnapshot {
     pub version: u64,
     params: HashMap<String, Arc<Vec<f32>>>,
 }
 
 impl ParamSnapshot {
+    /// Rebuild a snapshot from decoded tensors (the TCP transport ships
+    /// snapshots with every batch release; see `net::codec`).
+    pub fn from_tensors(version: u64, tensors: Vec<(String, Vec<f32>)>) -> ParamSnapshot {
+        ParamSnapshot {
+            version,
+            params: tensors
+                .into_iter()
+                .map(|(name, data)| (name, Arc::new(data)))
+                .collect(),
+        }
+    }
+
+    /// Every tensor, sorted by name — the canonical order the wire
+    /// codec encodes (HashMap iteration order must never leak into
+    /// bytes two processes compare).
+    pub fn tensors_sorted(&self) -> Vec<(&str, &[f32])> {
+        let mut v: Vec<(&str, &[f32])> = self
+            .params
+            .iter()
+            .map(|(n, d)| (n.as_str(), d.as_slice()))
+            .collect();
+        v.sort_unstable_by(|a, b| a.0.cmp(b.0));
+        v
+    }
+
     /// Read one tensor; errors on a weight the leader never initialized
     /// (an artifact/manifest mismatch, not a race).
     pub fn get(&self, name: &str) -> Result<&[f32]> {

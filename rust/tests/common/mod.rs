@@ -19,14 +19,31 @@
 #![allow(dead_code)] // each test binary uses a subset of the harness
 
 use heta::config::Config;
-use heta::coordinator::{Engine, Session, SystemKind};
+use heta::coordinator::{run_loopback_tcp, Engine, Session, SystemKind};
 use heta::metrics::EpochReport;
 
-/// One cell of an equivalence matrix: a label for failure messages and
-/// a tweak applied to the freshly loaded base config.
+/// How a variant's epochs execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Runner {
+    /// In this process: one `Session`, threads (or the sequential
+    /// driver) over in-process channels.
+    #[default]
+    InProcess,
+    /// A loopback-TCP star (`heta::coordinator::run_loopback_tcp`):
+    /// one thread **and one Session** per rank — separate feature and
+    /// parameter stores, every message through the socket codec. The
+    /// process-per-rank semantics of `heta launch`, minus the
+    /// subprocess management.
+    LoopbackTcp,
+}
+
+/// One cell of an equivalence matrix: a label for failure messages, a
+/// tweak applied to the freshly loaded base config, and the runner the
+/// variant executes on.
 pub struct Variant {
     pub label: String,
     pub tweak: Box<dyn Fn(&mut Config)>,
+    pub runner: Runner,
 }
 
 /// Shorthand constructor so matrices read as data.
@@ -34,13 +51,61 @@ pub fn variant(label: &str, tweak: impl Fn(&mut Config) + 'static) -> Variant {
     Variant {
         label: label.to_string(),
         tweak: Box::new(tweak),
+        runner: Runner::InProcess,
+    }
+}
+
+/// A variant that runs over the loopback-TCP star (cluster runtime
+/// implied; the tweak still applies staleness etc.).
+pub fn variant_tcp(label: &str, tweak: impl Fn(&mut Config) + 'static) -> Variant {
+    Variant {
+        label: label.to_string(),
+        tweak: Box::new(tweak),
+        runner: Runner::LoopbackTcp,
     }
 }
 
 /// Load `configs/<cfg_name>.json`, apply `tweak`, build the engine for
-/// `system` over `artifacts/<cfg_name>` and run `epochs` epochs.
-/// Panics (with the variant context) on any error — harness callers
-/// have already passed the artifact gate.
+/// `system` over `artifacts/<cfg_name>` and run `epochs` epochs on the
+/// given runner. Panics (with the variant context) on any error —
+/// harness callers have already passed the artifact gate.
+pub fn run_reports_on(
+    cfg_name: &str,
+    system: SystemKind,
+    epochs: usize,
+    label: &str,
+    tweak: impl Fn(&mut Config),
+    runner: Runner,
+) -> Vec<EpochReport> {
+    let mut cfg = Config::load(&format!("configs/{cfg_name}.json"))
+        .unwrap_or_else(|e| panic!("[{label}] loading config {cfg_name}: {e}"));
+    tweak(&mut cfg);
+    let dir = format!("artifacts/{cfg_name}");
+    match runner {
+        Runner::InProcess => {
+            let mut sess = Session::new(&cfg, &dir)
+                .unwrap_or_else(|e| panic!("[{label}] session for {cfg_name}: {e}"));
+            let mut engine = Engine::build(&mut sess, system)
+                .unwrap_or_else(|e| panic!("[{label}] building {system:?}: {e}"));
+            (0..epochs)
+                .map(|ep| {
+                    engine
+                        .run_epoch(&mut sess, ep)
+                        .unwrap_or_else(|e| panic!("[{label}] {system:?} epoch {ep}: {e:#}"))
+                })
+                .collect()
+        }
+        Runner::LoopbackTcp => {
+            cfg.train.runtime = heta::config::RuntimeKind::Cluster;
+            cfg.train.transport = heta::config::TransportKind::Tcp;
+            run_loopback_tcp(&cfg, &dir, system, epochs)
+                .unwrap_or_else(|e| panic!("[{label}] {system:?} loopback tcp: {e:#}"))
+        }
+    }
+}
+
+/// [`run_reports_on`] with the in-process runner (the pre-PR-5 shape,
+/// kept for the callers that never cross a transport).
 pub fn run_reports(
     cfg_name: &str,
     system: SystemKind,
@@ -48,21 +113,7 @@ pub fn run_reports(
     label: &str,
     tweak: impl Fn(&mut Config),
 ) -> Vec<EpochReport> {
-    let mut cfg = Config::load(&format!("configs/{cfg_name}.json"))
-        .unwrap_or_else(|e| panic!("[{label}] loading config {cfg_name}: {e}"));
-    tweak(&mut cfg);
-    let dir = format!("artifacts/{cfg_name}");
-    let mut sess = Session::new(&cfg, &dir)
-        .unwrap_or_else(|e| panic!("[{label}] session for {cfg_name}: {e}"));
-    let mut engine = Engine::build(&mut sess, system)
-        .unwrap_or_else(|e| panic!("[{label}] building {system:?}: {e}"));
-    (0..epochs)
-        .map(|ep| {
-            engine
-                .run_epoch(&mut sess, ep)
-                .unwrap_or_else(|e| panic!("[{label}] {system:?} epoch {ep}: {e:#}"))
-        })
-        .collect()
+    run_reports_on(cfg_name, system, epochs, label, tweak, Runner::InProcess)
 }
 
 /// Run every variant of the matrix and assert all of them produce
@@ -80,7 +131,7 @@ pub fn assert_losses_identical(
     assert!(matrix.len() >= 2, "an equivalence matrix needs a reference and a candidate");
     let all: Vec<Vec<EpochReport>> = matrix
         .iter()
-        .map(|v| run_reports(cfg_name, system, epochs, &v.label, &v.tweak))
+        .map(|v| run_reports_on(cfg_name, system, epochs, &v.label, &v.tweak, v.runner))
         .collect();
     let (reference, candidates) = all.split_first().expect("non-empty matrix");
     let ref_label = &matrix[0].label;

@@ -1,0 +1,397 @@
+//! The wire transport (the PR-5 tentpole).
+//!
+//! Artifact-free half: codec round-trip property tests over random
+//! payloads (every shared cluster-message component, plus truncated
+//! and bit-flipped frame rejection — decode must be total), and the
+//! generic collectives running over **real loopback sockets**: a
+//! worker-id-ordered gather, a barrier, modeled-vs-real byte
+//! accounting, and hangups surfacing as errors naming the peer.
+//!
+//! Artifact-gated half (skipped until `make artifacts`): the
+//! equivalence bar of every prior PR, now across transports —
+//! `transport = channel | tcp` must produce **byte-identical**
+//! per-batch losses for both engines at staleness 0 and at a fixed
+//! staleness window `k = 1`, checked through the shared `tests/common`
+//! matrix (the tcp variants run one Session per rank over loopback
+//! sockets — separate feature/parameter stores, learnable updates
+//! replicated by store deltas). Plus the wire-accounting satellite:
+//! real frame bytes move, and modeled bytes never exceed them.
+
+mod common;
+
+use heta::cluster::collective::{Hub, Port};
+use heta::cluster::mailbox::{Transport, Wire};
+use heta::config::RuntimeKind;
+use heta::coordinator::SystemKind;
+use heta::exec::WorkerGrads;
+use heta::kvstore::StoreDelta;
+use heta::net::codec::{decode_message, encode_message, ByteReader, ByteWriter, WireCodec};
+use heta::net::tcp;
+use heta::runtime::ParamSnapshot;
+use heta::util::proptest;
+use heta::util::rng::Rng;
+
+use common::{variant, variant_tcp};
+
+// ---- artifact-free: codec properties ----
+
+fn random_f32s(rng: &mut Rng, max: usize) -> Vec<f32> {
+    (0..rng.below(max)).map(|_| rng.f32() * 8.0 - 4.0).collect()
+}
+
+fn random_name(rng: &mut Rng) -> String {
+    let n = 1 + rng.below(12);
+    (0..n)
+        .map(|_| char::from(b'a' + rng.below(26) as u8))
+        .collect()
+}
+
+fn random_grads(rng: &mut Rng) -> WorkerGrads {
+    WorkerGrads {
+        wgrads: (0..rng.below(4))
+            .map(|_| (random_name(rng), random_f32s(rng, 32)))
+            .collect(),
+        row_grads: (0..rng.below(3))
+            .map(|_| {
+                let ids: Vec<u32> = (0..rng.below(16)).map(|_| rng.below(1000) as u32).collect();
+                let g = random_f32s(rng, 64);
+                (rng.below(5), ids, g)
+            })
+            .collect(),
+        gx: (0..rng.below(3)).map(|_| random_f32s(rng, 16)).collect(),
+        learnable_rows: (0..rng.below(3))
+            .map(|_| (rng.below(5), rng.below(100) as u64, rng.below(100) as u64))
+            .collect(),
+        param_version: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_worker_grads_round_trip_bitwise() {
+    proptest::run("codec_worker_grads", |rng, _| {
+        let wg = random_grads(rng);
+        let bytes = encode_message(&wg);
+        let back: WorkerGrads =
+            decode_message(&bytes).map_err(|e| format!("decode failed: {e:#}"))?;
+        heta::prop_assert!(back == wg, "round trip changed the payload: {wg:?} -> {back:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_param_snapshots_round_trip_bitwise() {
+    proptest::run("codec_param_snapshot", |rng, _| {
+        let tensors: Vec<(String, Vec<f32>)> = (0..rng.below(5))
+            .map(|_| (random_name(rng), random_f32s(rng, 64)))
+            .collect();
+        let snap = ParamSnapshot::from_tensors(rng.next_u64(), tensors);
+        let bytes = encode_message(&snap);
+        let back: ParamSnapshot =
+            decode_message(&bytes).map_err(|e| format!("decode failed: {e:#}"))?;
+        heta::prop_assert!(back == snap, "snapshot changed in flight");
+        heta::prop_assert!(
+            back.version == snap.version,
+            "version must survive: {} != {}",
+            back.version,
+            snap.version
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_store_deltas_round_trip_bitwise() {
+    proptest::run("codec_store_delta", |rng, _| {
+        let rows = (0..rng.below(4))
+            .map(|_| {
+                let n = rng.below(8);
+                let dim = 1 + rng.below(6);
+                let ids: Vec<u32> = (0..n).map(|i| (i * 3) as u32).collect();
+                let vals = (0..n * dim).map(|_| rng.f32()).collect();
+                (rng.below(4), ids, vals)
+            })
+            .collect();
+        let delta = StoreDelta { rows };
+        let back: StoreDelta = decode_message(&encode_message(&delta))
+            .map_err(|e| format!("decode failed: {e:#}"))?;
+        heta::prop_assert!(back == delta, "delta changed in flight");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncated_and_corrupt_frames_never_panic() {
+    proptest::run("codec_corruption", |rng, _| {
+        let wg = random_grads(rng);
+        let bytes = encode_message(&wg);
+        // Any truncation is an error (and must not panic or allocate
+        // absurdly — the reader validates lengths against remainders).
+        let cut = rng.below(bytes.len().max(1));
+        heta::prop_assert!(
+            decode_message::<WorkerGrads>(&bytes[..cut]).is_err(),
+            "truncation at {cut}/{} must be rejected",
+            bytes.len()
+        );
+        // A random bit flip either still decodes (flipped a float bit)
+        // or errors — both fine; a panic or wrong-success is not. The
+        // call itself is the assertion (panics fail the property).
+        if !bytes.is_empty() {
+            let mut corrupt = bytes.clone();
+            let at = rng.below(corrupt.len());
+            corrupt[at] ^= 1 << rng.below(8);
+            let _ = decode_message::<WorkerGrads>(&corrupt);
+        }
+        Ok(())
+    });
+}
+
+// ---- artifact-free: the generic collectives over real sockets ----
+
+/// A tiny gather payload: one f32 vector per worker.
+#[derive(Debug, Clone, PartialEq)]
+struct Contribution {
+    round: u64,
+    data: Vec<f32>,
+}
+
+impl Wire for Contribution {
+    fn wire_bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+}
+
+impl WireCodec for Contribution {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u64(self.round);
+        w.f32s(&self.data);
+    }
+    fn decode(r: &mut ByteReader<'_>) -> anyhow::Result<Self> {
+        Ok(Contribution {
+            round: r.u64()?,
+            data: r.f32s()?,
+        })
+    }
+}
+
+/// Build a loopback star of `workers` TCP nodes plus the leader.
+fn loopback_nodes(workers: usize) -> (tcp::TcpNode, Vec<tcp::TcpNode>) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let dialers: Vec<_> = (0..workers)
+        .map(|w| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                tcp::dial(&addr, w, workers, tcp::DIAL_TIMEOUT).expect("dial")
+            })
+        })
+        .collect();
+    let leader = tcp::accept_workers(listener, workers).expect("accept");
+    (leader, dialers.into_iter().map(|h| h.join().expect("join")).collect())
+}
+
+#[test]
+fn collectives_over_sockets_gather_in_worker_order() {
+    let workers = 3;
+    let (leader, nodes) = loopback_nodes(workers);
+    let handles: Vec<_> = nodes
+        .into_iter()
+        .map(|node| {
+            std::thread::spawn(move || {
+                let up = node
+                    .open_lane::<Contribution>(tcp::LANE_DATA_UP)
+                    .expect("worker up lane");
+                let down = node.open_lane::<()>(tcp::LANE_DATA_DOWN).expect("worker down lane");
+                let port = Port::<Contribution, (), _, _>::from_endpoints(&up, &down, workers);
+                // Stagger sends so arrival order != worker order.
+                std::thread::sleep(std::time::Duration::from_millis(
+                    (10 * (workers - node.rank())) as u64,
+                ));
+                port.send(Contribution {
+                    round: 0,
+                    data: vec![node.rank() as f32; 2],
+                })
+                .expect("send contribution");
+                port.recv().expect("barrier release");
+            })
+        })
+        .collect();
+    let up = leader
+        .open_lane::<Contribution>(tcp::LANE_DATA_UP)
+        .expect("leader up lane");
+    let down = leader.open_lane::<()>(tcp::LANE_DATA_DOWN).expect("leader down lane");
+    let hub = Hub::<Contribution, (), _, _>::from_endpoints(&up, &down, workers);
+    let got = hub.gather().expect("gather");
+    let ranks: Vec<f32> = got.iter().map(|c| c.data[0]).collect();
+    assert_eq!(ranks, vec![0.0, 1.0, 2.0], "worker-id order, not arrival order");
+    hub.broadcast(()).expect("release");
+    for h in handles {
+        h.join().expect("worker thread");
+    }
+    // The wire-accounting satellite, at transport level: bytes really
+    // moved, and the modeled tensor bytes never exceed the real frame
+    // bytes that carried them.
+    let t = leader.traffic();
+    assert!(t.real_recv > 0 && t.frames_recv == 3, "real frames must be counted: {t:?}");
+    assert_eq!(t.modeled_recv, 3 * 8, "two f32 per worker are the modeled payload");
+    assert!(t.modeled_recv <= t.real_recv, "modeled must never exceed real: {t:?}");
+    assert!(t.modeled_sent <= t.real_sent, "{t:?}");
+}
+
+#[test]
+fn socket_hangup_surfaces_as_an_error_naming_the_peer() {
+    let (leader, mut nodes) = loopback_nodes(1);
+    let up = leader
+        .open_lane::<Contribution>(tcp::LANE_DATA_UP)
+        .expect("leader up lane");
+    drop(nodes.pop()); // the worker process "dies" before contributing
+    let err = up.recv().expect_err("a dead peer must not hang the gather");
+    let text = format!("{err:#}");
+    assert!(
+        text.contains("rank 0"),
+        "the error must name the dead peer: {text}"
+    );
+}
+
+// ---- artifact-gated: cross-transport byte-identity ----
+
+const CFG: &str = "mag-tiny";
+const EPOCHS: usize = 2;
+
+#[test]
+fn losses_byte_identical_channel_vs_tcp_raf() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    let reports = common::assert_losses_identical(
+        CFG,
+        SystemKind::Heta,
+        EPOCHS,
+        &[
+            variant("cluster/channel/k0", |c| {
+                c.train.runtime = RuntimeKind::Cluster;
+            }),
+            variant_tcp("cluster/tcp-loopback/k0", |_| {}),
+        ],
+    );
+    // The satellite's accounting bar: the tcp run moved real bytes and
+    // its modeled bytes (tensor payloads only) never exceed them.
+    for rep in &reports[1] {
+        assert!(rep.wire.frames() > 0, "the tcp leader must have counted frames");
+        assert!(rep.wire.real_total() > 0);
+        assert!(
+            rep.wire.modeled_total() <= rep.wire.real_total(),
+            "modeled {} > real {} — the cost model claims more than the wire carried",
+            rep.wire.modeled_total(),
+            rep.wire.real_total()
+        );
+    }
+    // And the channel run moved none (it has no wire).
+    for rep in &reports[0] {
+        assert_eq!(rep.wire.frames(), 0, "in-process transport moves no frames");
+    }
+}
+
+#[test]
+fn losses_byte_identical_channel_vs_tcp_raf_staleness_1() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::Heta,
+        EPOCHS,
+        &[
+            variant("cluster/channel/k1", |c| {
+                c.train.runtime = RuntimeKind::Cluster;
+                c.train.staleness = 1;
+            }),
+            variant_tcp("cluster/tcp-loopback/k1", |c| {
+                c.train.staleness = 1;
+            }),
+        ],
+    );
+}
+
+#[test]
+fn losses_byte_identical_channel_vs_tcp_vanilla() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::DglMetis,
+        EPOCHS,
+        &[
+            variant("cluster/channel/k0", |c| {
+                c.train.runtime = RuntimeKind::Cluster;
+            }),
+            variant_tcp("cluster/tcp-loopback/k0", |_| {}),
+        ],
+    );
+}
+
+#[test]
+fn losses_byte_identical_channel_vs_tcp_vanilla_staleness_1() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::DglMetis,
+        EPOCHS,
+        &[
+            variant("cluster/channel/k1", |c| {
+                c.train.runtime = RuntimeKind::Cluster;
+                c.train.staleness = 1;
+            }),
+            variant_tcp("cluster/tcp-loopback/k1", |c| {
+                c.train.staleness = 1;
+            }),
+        ],
+    );
+}
+
+/// GraphLearn caches + learnable tables exercise the store-delta
+/// replication hardest (per-type partitioning keeps learnable rows on
+/// every worker's fetch path).
+#[test]
+fn losses_byte_identical_channel_vs_tcp_graphlearn() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::GraphLearn,
+        EPOCHS,
+        &[
+            variant("cluster/channel/k0", |c| {
+                c.train.runtime = RuntimeKind::Cluster;
+            }),
+            variant_tcp("cluster/tcp-loopback/k0", |_| {}),
+        ],
+    );
+}
+
+/// The windowed schedule under replication: a Ready-before-Store
+/// ordering bug would surface exactly here, where releases run ahead
+/// of the updates whose deltas the marshals must (not yet) see.
+#[test]
+fn losses_byte_identical_channel_vs_tcp_graphlearn_staleness_1() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::GraphLearn,
+        EPOCHS,
+        &[
+            variant("cluster/channel/k1", |c| {
+                c.train.runtime = RuntimeKind::Cluster;
+                c.train.staleness = 1;
+            }),
+            variant_tcp("cluster/tcp-loopback/k1", |c| {
+                c.train.staleness = 1;
+            }),
+        ],
+    );
+}
