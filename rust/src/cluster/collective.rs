@@ -29,6 +29,12 @@
 //! of a multi-process star ([`crate::net::tcp`]) around the identical
 //! protocol code — same rounds, same worker-id-ordered reassembly,
 //! same error wording.
+//!
+//! Every blocking receive here opens a [`crate::obs`] stall span
+//! around the `recv` call itself: wire-wait for the data collectives,
+//! barrier-wait for the `((), ())` barriers — so time a rank spends
+//! blocked on a peer is attributed, not lost. Inert (no clock read)
+//! unless the thread registered with the flight recorder.
 
 use std::collections::BTreeMap;
 use std::marker::PhantomData;
@@ -144,9 +150,21 @@ impl<U, D, EU: Transport<U>, ED: Transport<D>> Hub<U, D, EU, ED> {
     /// Collect exactly one contribution per worker, ordered by worker
     /// id. Errors on a hung-up, out-of-range or duplicate sender.
     pub fn gather(&self) -> Result<Vec<U>> {
+        self.gather_kind(crate::obs::KIND_WIRE_WAIT, 0, "gather.recv")
+    }
+
+    /// [`gather`](Hub::gather) with an explicit stall attribution: the
+    /// barrier gathers the same way but its blocked time is
+    /// barrier-wait, not wire-wait, and must not double as both.
+    fn gather_kind(&self, kind: u8, lane: u8, name: &'static str) -> Result<Vec<U>> {
         let mut slots: Vec<Option<U>> = (0..self.workers).map(|_| None).collect();
         for _ in 0..self.workers {
-            let e = self.up.recv()?;
+            // Span strictly around the blocking receive — reassembly
+            // below is the leader's own (compute) time.
+            let e = {
+                let _s = crate::obs::span(kind, lane, name);
+                self.up.recv()
+            }?;
             ensure!(
                 e.from < self.workers,
                 "gather contribution from unexpected rank {}",
@@ -188,10 +206,11 @@ impl<U, D, EU: Transport<U>, ED: Transport<D>> Hub<U, D, EU, ED> {
                 return Ok(out);
             }
             let workers = self.workers;
-            let e = self
-                .up
-                .recv()
-                .with_context(|| format!("gathering round {round} (in-flight window)"))?;
+            let e = {
+                let _s = crate::obs::span(crate::obs::KIND_WIRE_WAIT, 0, "gather_round.recv");
+                self.up.recv()
+            }
+            .with_context(|| format!("gathering round {round} (in-flight window)"))?;
             ensure!(
                 e.from < workers,
                 "round {round}: gather contribution from unexpected rank {}",
@@ -268,7 +287,16 @@ impl<U, D, EU: Transport<U>, ED: Transport<D>> Port<U, D, EU, ED> {
 
     /// Wait for the leader's scatter/broadcast item.
     pub fn recv(&self) -> Result<D> {
-        let e = self.down.recv()?;
+        self.recv_kind(crate::obs::KIND_WIRE_WAIT, 1, "port.recv")
+    }
+
+    /// [`recv`](Port::recv) with an explicit stall attribution (the
+    /// worker barrier blocks here too, as barrier-wait).
+    fn recv_kind(&self, kind: u8, lane: u8, name: &'static str) -> Result<D> {
+        let e = {
+            let _s = crate::obs::span(kind, lane, name);
+            self.down.recv()
+        }?;
         if e.from != self.leader {
             bail!("worker {} received non-leader message from {}", self.id(), e.from);
         }
@@ -280,7 +308,7 @@ impl<EU: Transport<()>, ED: Transport<()>> Hub<(), (), EU, ED> {
     /// Leader half of the epoch barrier: wait for every worker, then
     /// release them all.
     pub fn barrier(&self) -> Result<()> {
-        self.gather()?;
+        self.gather_kind(crate::obs::KIND_BARRIER_WAIT, 2, "barrier.gather")?;
         self.broadcast(())
     }
 }
@@ -289,7 +317,7 @@ impl<EU: Transport<()>, ED: Transport<()>> Port<(), (), EU, ED> {
     /// Worker half of the epoch barrier.
     pub fn barrier(&self) -> Result<()> {
         self.send(())?;
-        self.recv()
+        self.recv_kind(crate::obs::KIND_BARRIER_WAIT, 3, "barrier.recv")
     }
 }
 

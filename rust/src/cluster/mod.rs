@@ -61,6 +61,14 @@
 //! delta broadcast). Losses are byte-identical across both transports
 //! at any fixed staleness; `heta launch -n K` spawns a local
 //! multi-process cluster.
+//!
+//! PR 6 threads the [`crate::obs`] flight recorder through the whole
+//! runtime: collective receives open wire-wait/barrier-wait stall
+//! spans, both engines register their worker/leader threads when
+//! `train.trace` is set, and at epoch end every worker ships a
+//! clock-aligned `TraceBlob` (tracks + metrics) to the leader on the
+//! stats path — unconditionally, so the message schedule (and the
+//! losses) are byte-identical with tracing on or off.
 
 pub mod collective;
 pub mod mailbox;

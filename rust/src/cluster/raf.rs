@@ -124,6 +124,10 @@ enum Up {
     /// without the batch tag the root cause would drown in a bare
     /// channel hangup.
     Failed { bi: usize, msg: String },
+    /// Epoch-end flight-recorder payload (PR 6): this rank's trace
+    /// tracks and metrics. Always sent — empty when tracing is off —
+    /// so the message schedule never depends on the trace flag.
+    Obs { blob: crate::obs::TraceBlob },
 }
 
 /// Gather rounds: two per batch, forwards then backwards.
@@ -133,12 +137,16 @@ fn fwd_round(bi: usize) -> u64 {
 fn bwd_round(bi: usize) -> u64 {
     2 * bi as u64 + 1
 }
+/// The epoch-end trace-blob gather rides its own round tag,
+/// collision-free with any batch's `2·bi` / `2·bi + 1`.
+const OBS_ROUND: u64 = u64::MAX;
 
 fn up_tag(u: &Up) -> RoundTag {
     match u {
         Up::Fwd { bi, .. } => RoundTag::Round(fwd_round(*bi)),
         Up::Bwd { bi, .. } => RoundTag::Round(bwd_round(*bi)),
         Up::Failed { bi, msg } => RoundTag::abort_for(*bi, msg),
+        Up::Obs { .. } => RoundTag::Round(OBS_ROUND),
     }
 }
 
@@ -154,6 +162,9 @@ impl Wire for Up {
             // exactly as in the sequential engine.
             Up::Bwd { .. } => 0,
             Up::Failed { .. } => 0,
+            // Observability is harness traffic, not the modeled
+            // system's (the real socket counters still see its frames).
+            Up::Obs { .. } => 0,
         }
     }
 }
@@ -223,6 +234,10 @@ impl WireCodec for Up {
                 w.usize(*bi);
                 w.str(msg);
             }
+            Up::Obs { blob } => {
+                w.u8(3);
+                blob.encode(w);
+            }
         }
     }
 
@@ -251,6 +266,7 @@ impl WireCodec for Up {
                 let msg = r.str()?;
                 Ok(Up::Failed { bi, msg })
             }
+            3 => Ok(Up::Obs { blob: crate::obs::TraceBlob::decode(r)? }),
             t => bail!("unknown RAF worker-message tag {t}"),
         }
     }
@@ -531,6 +547,10 @@ where
 {
     bport.barrier()?;
     let p = ctx.worker;
+    if world.cfg.train.trace {
+        crate::obs::thread_register(p as u32, "worker");
+    }
+    let cache_base = crate::obs::cache_obs_base(ctx.cache.as_ref());
     let cfg: &Config = world.cfg;
     let scale = cfg.cost.compute_scale;
     let ntypes = world.g.schema.node_types.len();
@@ -546,6 +566,7 @@ where
 
     for (bi, chunk) in batches.iter().enumerate() {
         cur.store(bi, Ordering::Relaxed);
+        crate::obs::set_batch(bi as u64);
         // Batch i's forward needs batch i-1's updated weights: the
         // Ready release carries the current parameter snapshot.
         let snapshot = match recv_data(port, world)? {
@@ -666,6 +687,11 @@ where
             spare = Some(f);
         }
     }
+    // ---- flight-recorder exchange: publish this rank's cache deltas,
+    // then ship the (possibly empty) trace blob leader-ward. Always
+    // sent, so the protocol shape is identical tracing on or off. ----
+    crate::obs::record_cache_obs(world.g, ctx.cache.as_ref(), cache_base.as_deref());
+    port.send(Up::Obs { blob: crate::obs::TraceBlob::collect(p as u32) })?;
     Ok(())
 }
 
@@ -699,6 +725,10 @@ where
 {
     bport.barrier()?;
     let p = ctx.worker;
+    if world.cfg.train.trace {
+        crate::obs::thread_register(p as u32, "worker");
+    }
+    let cache_base = crate::obs::cache_obs_base(ctx.cache.as_ref());
     let cfg: &Config = world.cfg;
     let scale = cfg.cost.compute_scale;
     let ntypes = world.g.schema.node_types.len();
@@ -720,6 +750,7 @@ where
                 }
                 next_ready += 1;
                 cur.store(bi, Ordering::Relaxed);
+                crate::obs::set_batch(bi as u64);
                 let chunk = &batches[bi];
                 let t0 = Instant::now();
                 let filter = partition_edge_filter(world.tree, mp, p);
@@ -775,6 +806,7 @@ where
                     );
                 }
                 cur.store(bi, Ordering::Relaxed);
+                crate::obs::set_batch(bi as u64);
                 let bwd = wp.raf_backward(
                     ctx,
                     world,
@@ -801,6 +833,9 @@ where
             }
         }
     }
+    // ---- flight-recorder exchange (see `worker_run_sync`) ----
+    crate::obs::record_cache_obs(world.g, ctx.cache.as_ref(), cache_base.as_deref());
+    port.send(Up::Obs { blob: crate::obs::TraceBlob::collect(p as u32) })?;
     Ok(())
 }
 
@@ -831,6 +866,10 @@ where
 {
     bhub.barrier()?;
     let cfg = world.cfg;
+    if cfg.train.trace {
+        // The leader's rank id is `parts` — one past the worker ranks.
+        crate::obs::thread_register(parts as u32, "leader");
+    }
     let b = cfg.train.batch_size;
     let h = cfg.model.hidden;
     let n = batches.len();
@@ -850,15 +889,19 @@ where
     // only; a k-window opens k batches up front (batch j's snapshot then
     // trails by j <= k updates — within the bound).
     let mut released = 0usize;
+    // Snapshot version each batch's release carried — the grad-version
+    // lag observed at fold time is `grads_version - ready_versions[bi]`
+    // (how far the forward's weights trailed the backward's).
+    let mut ready_versions: Vec<u64> = Vec::with_capacity(n);
     for _ in 0..staleness.max(1).min(n) {
-        hub.broadcast(Down::Ready {
-            bi: released,
-            params: Arc::new(params.snapshot()),
-        })?;
+        let snap = Arc::new(params.snapshot());
+        ready_versions.push(snap.version);
+        hub.broadcast(Down::Ready { bi: released, params: snap })?;
         released += 1;
     }
 
     for (bi, chunk) in batches.iter().enumerate() {
+        crate::obs::set_batch(bi as u64);
         // ---- gather worker partials (worker-id order) ----
         let ups = hub
             .gather_round(fwd_round(bi), up_tag)
@@ -895,6 +938,9 @@ where
                     "batch {fbi} death notice escaped gather_round's abort path \
                      (protocol bug): {msg}"
                 ),
+                Up::Obs { .. } => {
+                    bail!("protocol error: trace blob in batch {bi}'s forward round")
+                }
             }
         }
         // ---- async release: batch bi+k goes out the moment batch bi's
@@ -913,12 +959,12 @@ where
         // every marshal deterministically sees the updates through its
         // own release point. ----
         if staleness >= 1 && released < n {
-            hub.broadcast(Down::Ready {
-                bi: released,
-                params: Arc::new(params.snapshot()),
-            })?;
+            let snap = Arc::new(params.snapshot());
+            ready_versions.push(snap.version);
+            hub.broadcast(Down::Ready { bi: released, params: snap })?;
             released += 1;
         }
+        crate::obs::gauge_max("staleness.open", (released - bi) as f64);
         // The leader partition's partials are machine-local.
         let gather_bytes: Vec<u64> = wire
             .iter()
@@ -953,6 +999,10 @@ where
         stages.add(Stage::Backward, t_scatter);
         let grads_snapshot = Arc::new(params.snapshot());
         let grads_version = grads_snapshot.version;
+        crate::obs::hist_observe(
+            "grad.version_lag",
+            grads_version.saturating_sub(ready_versions[bi]) as f64,
+        );
         hub.broadcast(Down::Grads {
             bi,
             g1: lo.g1,
@@ -994,6 +1044,9 @@ where
                     "batch {fbi} death notice escaped gather_round's abort path \
                      (protocol bug): {msg}"
                 ),
+                Up::Obs { .. } => {
+                    bail!("protocol error: trace blob in batch {bi}'s backward round")
+                }
             }
         }
 
@@ -1049,13 +1102,28 @@ where
         batches_done += 1;
         // ---- synchronous release: batch bi+1 waits for this update ----
         if staleness == 0 && released < n {
-            hub.broadcast(Down::Ready {
-                bi: released,
-                params: Arc::new(params.snapshot()),
-            })?;
+            let snap = Arc::new(params.snapshot());
+            ready_versions.push(snap.version);
+            hub.broadcast(Down::Ready { bi: released, params: snap })?;
             released += 1;
         }
     }
+
+    // ---- flight-recorder exchange: every worker's last Up message is
+    // its trace blob (empty when tracing is off — the gather happens
+    // either way, keeping the protocol shape independent of the
+    // flag). Merge them with the leader's own collection. ----
+    let mut obs = crate::obs::ObsReport::default();
+    for up in hub
+        .gather_round(OBS_ROUND, up_tag)
+        .context("collecting worker trace blobs")?
+    {
+        match up {
+            Up::Obs { blob } => blob.merge_into(&mut obs),
+            other => bail!("protocol error: {other:?} in the trace-blob round"),
+        }
+    }
+    crate::obs::TraceBlob::collect(parts as u32).merge_into(&mut obs);
 
     let epoch_time_s = timeline.sequential_time();
     let critical_path_s = if staleness >= 1 {
@@ -1087,6 +1155,7 @@ where
         },
         batches: batches_done,
         batch_losses,
+        obs,
     })
 }
 
@@ -1245,6 +1314,29 @@ mod tests {
                 wall_bwd: (1.0, 2.0),
             },
             Up::Failed { bi: 11, msg: "worker 2 panicked".into() },
+            Up::Obs {
+                blob: crate::obs::TraceBlob {
+                    rank: 1,
+                    tracks: vec![crate::obs::TraceTrack {
+                        rank: 1,
+                        thread: "worker".into(),
+                        dropped: 0,
+                        names: vec!["fwd".into()],
+                        events: vec![crate::obs::ObsEvent {
+                            batch: 3,
+                            kind: crate::obs::KIND_COMPUTE,
+                            lane: crate::obs::LANE_NONE,
+                            name_idx: 0,
+                            t0_us: 10,
+                            t1_us: 25,
+                        }],
+                    }],
+                    metrics: crate::obs::MetricsSnapshot {
+                        counters: vec![("cache.paper.hits".into(), 5)],
+                        ..Default::default()
+                    },
+                },
+            },
         ];
         for m in msgs {
             let bytes = encode_message(&m);

@@ -112,6 +112,10 @@ enum Up {
     /// a leader gathering from a dead worker would block forever while
     /// live workers keep the channel connected.
     Failed { bi: usize, msg: String },
+    /// Epoch-end flight-recorder payload (PR 6): this rank's trace
+    /// tracks and metrics. Always sent — empty when tracing is off —
+    /// so the message schedule never depends on the trace flag.
+    Obs { blob: crate::obs::TraceBlob },
 }
 
 /// Gather rounds: up to two per batch — the marshal notice, then the
@@ -122,12 +126,16 @@ fn marshal_round(bi: usize) -> u64 {
 fn step_round(bi: usize) -> u64 {
     2 * bi as u64 + 1
 }
+/// The epoch-end trace-blob gather rides its own round tag,
+/// collision-free with any batch's `2·bi` / `2·bi + 1`.
+const OBS_ROUND: u64 = u64::MAX;
 
 fn up_tag(u: &Up) -> RoundTag {
     match u {
         Up::Marshaled { bi } => RoundTag::Round(marshal_round(*bi)),
         Up::Step { bi, .. } => RoundTag::Round(step_round(*bi)),
         Up::Failed { bi, msg } => RoundTag::abort_for(*bi, msg),
+        Up::Obs { .. } => RoundTag::Round(OBS_ROUND),
     }
 }
 
@@ -207,6 +215,10 @@ impl WireCodec for Up {
                 w.usize(*bi);
                 w.str(msg);
             }
+            Up::Obs { blob } => {
+                w.u8(3);
+                blob.encode(w);
+            }
         }
     }
 
@@ -223,6 +235,7 @@ impl WireCodec for Up {
                 let msg = r.str()?;
                 Ok(Up::Failed { bi, msg })
             }
+            3 => Ok(Up::Obs { blob: crate::obs::TraceBlob::decode(r)? }),
             t => bail!("unknown vanilla worker-message tag {t}"),
         }
     }
@@ -453,6 +466,10 @@ where
 {
     bport.barrier()?;
     let w = ctx.worker;
+    if world.cfg.train.trace {
+        crate::obs::thread_register(w as u32, "worker");
+    }
+    let cache_base = crate::obs::cache_obs_base(ctx.cache.as_ref());
     let cfg: &Config = world.cfg;
     let scale = cfg.cost.compute_scale;
     let layers = cfg.model.layers;
@@ -469,6 +486,7 @@ where
 
     for (bi, chunk) in batches.iter().enumerate() {
         cur.store(bi, Ordering::Relaxed);
+        crate::obs::set_batch(bi as u64);
         let (rbi, snapshot) = recv_ready(port, world)?;
         if rbi != bi {
             bail!("worker {w}: release for batch {rbi} arrived while expecting {bi}");
@@ -560,6 +578,11 @@ where
             prefetched = Some((s, fr, t.elapsed().as_secs_f64() * scale));
         }
     }
+    // ---- flight-recorder exchange: publish this rank's cache deltas,
+    // then ship the (possibly empty) trace blob leader-ward. Always
+    // sent, so the protocol shape is identical tracing on or off. ----
+    crate::obs::record_cache_obs(world.g, ctx.cache.as_ref(), cache_base.as_deref());
+    port.send(Up::Obs { blob: crate::obs::TraceBlob::collect(w as u32) })?;
     Ok(())
 }
 
@@ -589,6 +612,10 @@ where
 {
     bport.barrier()?;
     let w = ctx.worker;
+    if world.cfg.train.trace {
+        crate::obs::thread_register(w as u32, "worker");
+    }
+    let cache_base = crate::obs::cache_obs_base(ctx.cache.as_ref());
     let cfg: &Config = world.cfg;
     let scale = cfg.cost.compute_scale;
     let layers = cfg.model.layers;
@@ -600,6 +627,7 @@ where
 
     for (bi, chunk) in batches.iter().enumerate() {
         cur.store(bi, Ordering::Relaxed);
+        crate::obs::set_batch(bi as u64);
         let (rbi, snapshot) = recv_ready(port, world)?;
         if rbi != bi {
             bail!("worker {w}: release for batch {rbi} arrived while expecting {bi}");
@@ -663,6 +691,9 @@ where
             spare = Some(f);
         }
     }
+    // ---- flight-recorder exchange (see `worker_run_sync`) ----
+    crate::obs::record_cache_obs(world.g, ctx.cache.as_ref(), cache_base.as_deref());
+    port.send(Up::Obs { blob: crate::obs::TraceBlob::collect(w as u32) })?;
     Ok(())
 }
 
@@ -687,6 +718,10 @@ where
     BD: Transport<()>,
 {
     bhub.barrier()?;
+    if world.cfg.train.trace {
+        // The leader's rank id is `parts` — one past the worker ranks.
+        crate::obs::thread_register(parts as u32, "leader");
+    }
     let n = batches.len();
     let mut net = SimNet::new(parts, world.cfg.cost.clone());
     let mut timeline = EpochTimeline::new(parts);
@@ -716,9 +751,15 @@ where
     let mut marshal_gathered = 0usize;
 
     for bi in 0..n {
+        crate::obs::set_batch(bi as u64);
         let msgs = hub
             .gather_round(step_round(bi), up_tag)
             .with_context(|| format!("batch {bi}: collecting step results"))?;
+        crate::obs::gauge_max("staleness.open", (released - bi) as f64);
+        crate::obs::hist_observe(
+            "grad.version_lag",
+            params.version().saturating_sub(ready_versions[bi]) as f64,
+        );
         let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
         let mut gacc = GradAccumulator::for_version(ready_versions[bi]);
         let mut batch_loss = 0.0f64;
@@ -737,6 +778,9 @@ where
                     "batch {fbi} death notice escaped gather_round's abort path \
                      (protocol bug): {msg}"
                 ),
+                Up::Obs { .. } => {
+                    bail!("protocol error: trace blob in batch {bi}'s step round")
+                }
             };
             let StepMsg {
                 loss,
@@ -825,6 +869,22 @@ where
         }
     }
 
+    // ---- flight-recorder exchange: every worker's last Up message is
+    // its trace blob (empty when tracing is off — the gather happens
+    // either way, keeping the protocol shape independent of the
+    // flag). Merge them with the leader's own collection. ----
+    let mut obs = crate::obs::ObsReport::default();
+    for up in hub
+        .gather_round(OBS_ROUND, up_tag)
+        .context("collecting worker trace blobs")?
+    {
+        match up {
+            Up::Obs { blob } => blob.merge_into(&mut obs),
+            other => bail!("protocol error: {other:?} in the trace-blob round"),
+        }
+    }
+    crate::obs::TraceBlob::collect(parts as u32).merge_into(&mut obs);
+
     let epoch_time_s = timeline.sequential_time();
     let critical_path_s = if staleness >= 1 {
         timeline.async_pipelined_time(staleness, AsyncShape::Vanilla)
@@ -855,6 +915,7 @@ where
         },
         batches: batches_done,
         batch_losses,
+        obs,
     })
 }
 
@@ -975,6 +1036,16 @@ mod tests {
             Up::Marshaled { bi: 6 },
             Up::Step { bi: 2, msg: step_fixture() },
             Up::Failed { bi: usize::MAX, msg: "before its first batch".into() },
+            Up::Obs {
+                blob: crate::obs::TraceBlob {
+                    rank: 0,
+                    tracks: Vec::new(),
+                    metrics: crate::obs::MetricsSnapshot {
+                        gauges: vec![("staleness.open".into(), 2.0)],
+                        ..Default::default()
+                    },
+                },
+            },
         ];
         for m in msgs {
             let bytes = encode_message(&m);

@@ -169,6 +169,13 @@ pub struct TrainConfig {
     /// CLI's `--rank`/`--peers`). Losses are byte-identical across
     /// both transports at any fixed staleness.
     pub transport: TransportKind,
+    /// Arm the flight recorder ([`crate::obs`], default false): span
+    /// recording in the stage bodies / collectives / TCP readers, the
+    /// metrics registry, and epoch-end cross-rank collection into
+    /// `EpochReport.obs` (exported by the CLI's `--trace out.json`).
+    /// Zero-cost when off; losses are byte-identical either way —
+    /// observability is passive.
+    pub trace: bool,
 }
 
 impl TrainConfig {
@@ -259,6 +266,7 @@ impl Config {
                 TransportKind::parse(&name)
                     .with_context(|| format!("unknown transport {name} (channel|tcp)"))?
             },
+            trace: t.get("trace").as_bool().unwrap_or(false),
         };
         if train.transport == TransportKind::Tcp {
             // Same guard (and wording) every tcp entry point shares.

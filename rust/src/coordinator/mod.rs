@@ -150,13 +150,15 @@ pub fn run_training_with(
     for ep in 0..epochs {
         let rep = engine.run_epoch(&mut sess, ep)?;
         if worker_rank {
-            println!(
+            crate::log!(
+                Info,
                 "epoch {ep}: worker rank done (wire: {} sent, {} received)",
                 crate::util::fmt_bytes(rep.wire.real_sent),
                 crate::util::fmt_bytes(rep.wire.real_recv),
             );
         } else {
-            println!(
+            crate::log!(
+                Info,
                 "epoch {ep}: loss {:.4} acc {:.3} time {} (critical path {}, {} runtime)",
                 rep.loss_mean,
                 rep.accuracy,

@@ -251,6 +251,19 @@ impl RafEngine {
         let mut batches = 0usize;
         let mut fetch = FetchStats::default();
 
+        // Flight recorder (PR 6): the sequential driver plays every
+        // rank on one thread, so it registers once and re-tags the
+        // current rank around each worker/leader phase. The leader's
+        // rank id is `parts`, one past the workers.
+        if cfg.train.trace {
+            crate::obs::thread_register(parts as u32, "driver");
+        }
+        let cache_bases: Vec<_> = self
+            .contexts
+            .iter()
+            .map(|c| crate::obs::cache_obs_base(c.cache.as_ref()))
+            .collect();
+
         // The leader role prices its cache traffic through fork-ledger
         // views (shared residency ⇒ identical modeled times), folded
         // back into the owning contexts at epoch end — the same scheme
@@ -279,12 +292,14 @@ impl RafEngine {
                 break; // drop the ragged tail (static shapes)
             }
             let batch_seed = cfg.train.batch_seed(epoch, bi);
+            crate::obs::set_batch(bi as u64);
 
             // ---- worker forward stages (played in partition order) ----
             let mut partial_sums = [vec![0f32; b * h], vec![0f32; b * h]];
             let mut samples = Vec::with_capacity(parts);
             let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
             for p in 0..parts {
+                crate::obs::set_rank(p as u32);
                 let t0 = Instant::now();
                 let filter = partition_edge_filter(&tree, &self.mp, p);
                 let sample =
@@ -322,6 +337,7 @@ impl RafEngine {
                 samples.push(sample);
             }
 
+            crate::obs::set_rank(parts as u32);
             // ---- gather partials at the leader (2 tensors per worker) ----
             let per_worker = (2 * b * h * 4) as u64;
             let gather_bytes: Vec<u64> = (0..parts)
@@ -356,6 +372,7 @@ impl RafEngine {
             // ---- worker backward stages ----
             let mut gacc = GradAccumulator::default();
             for p in 0..parts {
+                crate::obs::set_rank(p as u32);
                 // Reuses the forward pass's staged rows: same batch, same
                 // frontier, features unmodified until the update phase.
                 let frontier = cfg.train.dedup_fetch.then(|| &self.frontiers[p]);
@@ -378,6 +395,7 @@ impl RafEngine {
             }
 
             // ---- update stage (weights + learnable features) ----
+            crate::obs::set_rank(parts as u32);
             let mut gx_root = lo.gx_root;
             let upd = raf_apply_updates(
                 &world,
@@ -423,6 +441,16 @@ impl RafEngine {
             }
         }
 
+        // ---- flight recorder: publish per-context cache deltas (the
+        // leader's fork-ledger traffic was just absorbed, so it is
+        // counted) and collect this thread's tracks + the metrics
+        // snapshot into the report ----
+        for (ctx, base) in self.contexts.iter().zip(&cache_bases) {
+            crate::obs::record_cache_obs(&g, ctx.cache.as_ref(), base.as_deref());
+        }
+        let mut obs = crate::obs::ObsReport::default();
+        crate::obs::TraceBlob::collect(parts as u32).merge_into(&mut obs);
+
         // No overlap in the sequential runtime: the critical path is the
         // summed schedule itself.
         let epoch_time_s = timeline.sequential_time();
@@ -444,6 +472,7 @@ impl RafEngine {
             },
             batches,
             batch_losses,
+            obs,
         })
     }
 

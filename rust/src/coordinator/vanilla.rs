@@ -200,6 +200,19 @@ impl VanillaEngine {
         let mut batches = 0usize;
         let mut fetch = FetchStats::default();
 
+        // Flight recorder (PR 6): the sequential driver plays every
+        // rank on one thread — register once, re-tag the current rank
+        // around each worker phase (`parts` is the shared update
+        // phase's rank, matching the cluster leader's id).
+        if cfg.train.trace {
+            crate::obs::thread_register(parts as u32, "driver");
+        }
+        let cache_bases: Vec<_> = self
+            .contexts
+            .iter()
+            .map(|c| crate::obs::cache_obs_base(c.cache.as_ref()))
+            .collect();
+
         let world = EpochWorld {
             cfg: &cfg,
             g: &g,
@@ -218,11 +231,13 @@ impl VanillaEngine {
                 break;
             }
             let batch_seed = cfg.train.batch_seed(epoch, bi);
+            crate::obs::set_batch(bi as u64);
             let mut gacc = GradAccumulator::default();
             let mut batch_loss = 0.0f64;
             let mut worker_spans: Vec<WorkerSpan> = Vec::with_capacity(parts);
 
             for w in 0..parts {
+                crate::obs::set_rank(w as u32);
                 let micro = &chunk[w * vb..(w + 1) * vb];
 
                 // -- sampling over the whole graph: remote hops are RPCs --
@@ -277,6 +292,7 @@ impl VanillaEngine {
             batch_losses.push(batch_loss);
 
             // -- all-reduce + model + learnable updates (shared stage) --
+            crate::obs::set_rank(parts as u32);
             let upd = vanilla_apply_updates(
                 &world,
                 &mut sess.params,
@@ -301,6 +317,14 @@ impl VanillaEngine {
             batches += 1;
         }
 
+        // ---- flight recorder: publish per-context cache deltas and
+        // collect this thread's tracks + metrics into the report ----
+        for (ctx, base) in self.contexts.iter().zip(&cache_bases) {
+            crate::obs::record_cache_obs(&g, ctx.cache.as_ref(), base.as_deref());
+        }
+        let mut obs = crate::obs::ObsReport::default();
+        crate::obs::TraceBlob::collect(parts as u32).merge_into(&mut obs);
+
         // No overlap in the sequential runtime.
         let epoch_time_s = timeline.sequential_time();
         Ok(EpochReport {
@@ -321,6 +345,7 @@ impl VanillaEngine {
             },
             batches,
             batch_losses,
+            obs,
         })
     }
 

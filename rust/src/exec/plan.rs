@@ -423,6 +423,7 @@ impl WorkerPlan {
         let extra = ExtraInputs::new();
         let t1 = Instant::now();
         let (lits, acc) = {
+            let _s = crate::obs::span(crate::obs::KIND_MARSHAL, crate::obs::LANE_NONE, "fwd-marshal");
             let store = world.store();
             let env = MarshalEnv {
                 cost: &cfg.cost,
@@ -446,7 +447,10 @@ impl WorkerPlan {
         };
         let copy_s = t1.elapsed().as_secs_f64() * scale;
         let t2 = Instant::now();
-        let outs = ctx.rt.exec(&self.fwd_art, &lits)?;
+        let outs = {
+            let _s = crate::obs::span(crate::obs::KIND_COMPUTE, crate::obs::LANE_NONE, "fwd");
+            ctx.rt.exec(&self.fwd_art, &lits)?
+        };
         let fwd_s = t2.elapsed().as_secs_f64() * scale / gpus;
         let w1 = world.now();
         let art = &self.fwd_art;
@@ -510,6 +514,7 @@ impl WorkerPlan {
         let w0 = world.now();
         let t5 = Instant::now();
         let (lits, _) = {
+            let _s = crate::obs::span(crate::obs::KIND_MARSHAL, crate::obs::LANE_NONE, "bwd-marshal");
             let store = world.store();
             let env = MarshalEnv {
                 cost: &cfg.cost,
@@ -531,7 +536,10 @@ impl WorkerPlan {
                 arena,
             )?
         };
-        let outs = ctx.rt.exec(art, &lits)?;
+        let outs = {
+            let _s = crate::obs::span(crate::obs::KIND_COMPUTE, crate::obs::LANE_NONE, "bwd");
+            ctx.rt.exec(art, &lits)?
+        };
         let bwd_s = t5.elapsed().as_secs_f64() * scale / gpus;
         let w1 = world.now();
         let mut grads = collect_worker_grads(
@@ -586,6 +594,7 @@ impl WorkerPlan {
         let extra = ExtraInputs::new();
         let t1 = Instant::now();
         let (lits, acc, target_learnable) = {
+            let _s = crate::obs::span(crate::obs::KIND_MARSHAL, crate::obs::LANE_NONE, "marshal");
             let store = world.store();
             let env = MarshalEnv {
                 cost: &cfg.cost,
@@ -642,7 +651,10 @@ impl WorkerPlan {
         let w = ctx.worker;
         let is_remote = |ty: usize, id: NodeId| part.owner_of(ty, id) != w;
         let t2 = Instant::now();
-        let outs = ctx.rt.exec(&self.fwd_art, &m.lits)?;
+        let outs = {
+            let _s = crate::obs::span(crate::obs::KIND_COMPUTE, crate::obs::LANE_NONE, "step");
+            ctx.rt.exec(&self.fwd_art, &m.lits)?
+        };
         let step_s = t2.elapsed().as_secs_f64() * scale / gpus;
         let w1 = world.now();
         if outs.len() < 2 {
@@ -753,6 +765,7 @@ impl BatchPlan {
         let _token = world.serialize();
         let t3 = Instant::now();
         let (lits, leader_acc) = {
+            let _s = crate::obs::span(crate::obs::KIND_MARSHAL, crate::obs::LANE_NONE, "leader-marshal");
             let store = world.store();
             let env = MarshalEnv {
                 cost: &cfg.cost,
@@ -774,7 +787,10 @@ impl BatchPlan {
                 arena,
             )?
         };
-        let outs = ctx.rt.exec(&self.leader_art, &lits)?;
+        let outs = {
+            let _s = crate::obs::span(crate::obs::KIND_COMPUTE, crate::obs::LANE_NONE, "leader");
+            ctx.rt.exec(&self.leader_art, &lits)?
+        };
         let leader_s = t3.elapsed().as_secs_f64() * cfg.cost.compute_scale;
         if outs.len() < 5 {
             bail!("leader artifact returned {} outputs, expected >= 5", outs.len());
@@ -786,10 +802,13 @@ impl BatchPlan {
         let gx_root = lit_to_vec(&outs[4])?;
         // Leader's own (head) weight updates.
         let t4 = Instant::now();
-        for (o, out) in spec.outputs.iter().zip(&outs) {
-            if o.kind == "wgrad" {
-                let grad = lit_to_vec(out)?;
-                params.step(&o.name, &grad)?;
+        {
+            let _s = crate::obs::span(crate::obs::KIND_COMPUTE, crate::obs::LANE_NONE, "head-update");
+            for (o, out) in spec.outputs.iter().zip(&outs) {
+                if o.kind == "wgrad" {
+                    let grad = lit_to_vec(out)?;
+                    params.step(&o.name, &grad)?;
+                }
             }
         }
         let head_update_s = t4.elapsed().as_secs_f64();
@@ -827,18 +846,22 @@ pub fn raf_apply_updates(
     let cfg = world.cfg;
     let t6 = Instant::now();
     let mut sync_bytes = 0u64;
-    for (name, grad) in &acc.wgrads {
-        // Replicated relations: replicas push grads to the owner.
-        let replicas = replica_count.get(name).copied().unwrap_or(1);
-        if replicas > 1 {
-            sync_bytes += (grad.len() * 4 * (replicas - 1)) as u64;
+    {
+        let _s = crate::obs::span(crate::obs::KIND_COMPUTE, crate::obs::LANE_NONE, "update");
+        for (name, grad) in &acc.wgrads {
+            // Replicated relations: replicas push grads to the owner.
+            let replicas = replica_count.get(name).copied().unwrap_or(1);
+            if replicas > 1 {
+                sync_bytes += (grad.len() * 4 * (replicas - 1)) as u64;
+            }
+            params.step(name, grad)?;
         }
-        params.step(name, grad)?;
     }
     let update_s = t6.elapsed().as_secs_f64();
 
     // Learnable-feature updates (sparse Adam, local rows).
     let t7 = Instant::now();
+    let _lf_span = crate::obs::span(crate::obs::KIND_COMPUTE, crate::obs::LANE_NONE, "lf-update");
     let mut cache_write_s = 0.0;
     if !acc.gx.is_empty() {
         add_assign(gx_root, &acc.gx);
@@ -891,14 +914,18 @@ pub fn vanilla_apply_updates(
     // Model update: every replica applies the mean grad.
     let t3 = Instant::now();
     let inv = 1.0 / parts as f32;
-    for (name, mut grad) in acc.wgrads.drain() {
-        scale(&mut grad, inv);
-        params.step(&name, &grad)?;
+    {
+        let _s = crate::obs::span(crate::obs::KIND_COMPUTE, crate::obs::LANE_NONE, "update");
+        for (name, mut grad) in acc.wgrads.drain() {
+            scale(&mut grad, inv);
+            params.step(&name, &grad)?;
+        }
     }
     let update_s = t3.elapsed().as_secs_f64();
 
     // Learnable-feature updates: remote rows pay the network.
     let t4 = Instant::now();
+    let _lf_span = crate::obs::span(crate::obs::KIND_COMPUTE, crate::obs::LANE_NONE, "lf-update");
     let lr = world.cfg.train.lr as f32;
     let mut store = world.store_mut();
     for (ty, (ids, grads)) in &acc.row_grads {

@@ -79,6 +79,17 @@
 //! time and the overlap-aware critical-path time derived from it —
 //! and, under the TCP transport, the real bytes on the wire next to
 //! the cost model's view of the same messages.
+//!
+//! [`obs`] is the flight recorder over all of it: `--trace out.json`
+//! arms per-rank span recording (compute / marshal / wire-wait /
+//! barrier-wait attribution down to the batch and lane) in the stage
+//! bodies, collectives, and TCP reader threads; workers ship their
+//! clock-aligned buffers to the leader at epoch end and the merged
+//! trace exports as Chrome trace-event JSON, with a metrics snapshot
+//! (wire bytes per lane, per-node-type cache hit/miss, staleness
+//! occupancy, grad-version lag) in [`metrics::EpochReport::obs`].
+//! Tracing is zero-cost when off and passive when on — losses are
+//! byte-identical either way.
 
 pub mod util;
 pub mod hetgraph;
@@ -94,5 +105,6 @@ pub mod config;
 pub mod runtime;
 pub mod exec;
 pub mod net;
+pub mod obs;
 pub mod cluster;
 pub mod coordinator;

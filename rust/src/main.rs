@@ -45,6 +45,7 @@ fn main() -> Result<()> {
                  \x20          [--runtime sequential|cluster] [--no-pipeline]\n\
                  \x20          [--no-dedup-fetch] [--shared-session] [--staleness N]\n\
                  \x20          [--transport channel|tcp --rank R --peers host:port[,...]]\n\
+                 \x20          [--trace [out.json]] [--log-level error|warn|info|debug]\n\
                  launch     [-n K] [--port P] + train options: spawn leader + K\n\
                  \x20          worker processes over loopback TCP and reap them\n\
                  info"
@@ -159,6 +160,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.train.transport = TransportKind::parse(t)
             .with_context(|| format!("unknown transport '{t}' (channel|tcp)"))?;
     }
+    let level = args.get_or("log-level", "info");
+    heta::obs::set_log_level(
+        heta::obs::LogLevel::parse(&level)
+            .with_context(|| format!("unknown log level '{level}' (error|warn|info|debug)"))?,
+    );
+    // `--trace out.json` names the Chrome-trace file; a bare `--trace`
+    // picks a default. Either form flips `train.trace` on for this rank
+    // (workers record and ship their buffers; only the leader exports).
+    let trace_path = args
+        .get("trace")
+        .map(str::to_string)
+        .or_else(|| args.has_flag("trace").then(|| format!("TRACE_{}.json", cfg.name)));
+    if trace_path.is_some() {
+        cfg.train.trace = true;
+    }
     let backend = match cfg.train.transport {
         TransportKind::Channel => heta::net::Backend::Channel,
         TransportKind::Tcp => {
@@ -188,8 +204,9 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .map(str::trim)
                 .filter(|a| !a.is_empty())
                 .context("--peers must name the leader's host:port first")?;
+            heta::obs::set_log_rank(rank as i64);
             let node = if rank == 0 {
-                println!("rank 0 (leader): listening on {leader_addr} for {parts} workers");
+                heta::log!(Info, "leader: listening on {leader_addr} for {parts} workers");
                 heta::net::tcp::listen(leader_addr, parts)?
             } else {
                 heta::net::tcp::dial(leader_addr, rank - 1, parts, heta::net::tcp::DIAL_TIMEOUT)?
@@ -206,7 +223,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     if worker_rank {
         // Worker ranks own no trajectory (their reports carry wire
         // traffic only); the leader prints the real summary.
-        println!(
+        heta::log!(
+            Info,
             "[{}/{}] worker rank done: {} epochs, wire {} sent / {} received",
             cfg.name,
             engine,
@@ -222,6 +240,10 @@ fn cmd_train(args: &Args) -> Result<()> {
             cfg.train.runtime.name(),
             cfg.train.transport.name(),
         ));
+        if let Some(path) = &trace_path {
+            heta::obs::export_chrome(&report.obs, path)?;
+            heta::log!(Info, "trace written to {path} (open in Perfetto or chrome://tracing)");
+        }
     }
     Ok(())
 }
@@ -267,19 +289,25 @@ fn cmd_launch(args: &Args) -> Result<()> {
         "--peers".into(),
         addr.clone(),
     ];
-    for key in ["config", "engine", "epochs", "artifacts", "staleness"] {
+    for key in ["config", "engine", "epochs", "artifacts", "staleness", "trace", "log-level"] {
         if let Some(v) = args.get(key) {
             forwarded.push(format!("--{key}"));
             forwarded.push(v.to_string());
         }
     }
-    for flag in ["no-pipeline", "no-dedup-fetch", "shared-session"] {
+    for flag in ["no-pipeline", "no-dedup-fetch", "shared-session", "trace"] {
         if args.has_flag(flag) {
             forwarded.push(format!("--{flag}"));
         }
     }
+    if let Some(lvl) = args.get("log-level") {
+        heta::obs::set_log_level(
+            heta::obs::LogLevel::parse(lvl)
+                .with_context(|| format!("unknown log level '{lvl}' (error|warn|info|debug)"))?,
+        );
+    }
 
-    println!("launch: {} ranks (leader + {n} workers) on {addr}", n + 1);
+    heta::log!(Info, "launch: {} ranks (leader + {n} workers) on {addr}", n + 1);
     let mut children = Vec::with_capacity(n + 1);
     for rank in 0..=n {
         let child = std::process::Command::new(&exe)
@@ -288,7 +316,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
             .arg(rank.to_string())
             .spawn()
             .with_context(|| format!("spawning rank {rank}"))?;
-        println!("launch: rank {rank} -> pid {}", child.id());
+        heta::log!(Info, "launch: rank {rank} -> pid {}", child.id());
         children.push((rank, child));
     }
     // Reap every rank. A crashed worker unblocks the others through the
@@ -299,14 +327,14 @@ fn cmd_launch(args: &Args) -> Result<()> {
             .wait()
             .with_context(|| format!("waiting on rank {rank}"))?;
         if !status.success() {
-            eprintln!("launch: rank {rank} exited with {status}");
+            heta::log!(Error, "launch: rank {rank} exited with {status}");
             failed.push(rank);
         }
     }
     if !failed.is_empty() {
         bail!("launch: rank(s) {failed:?} failed — see their output above");
     }
-    println!("launch: all {} ranks exited cleanly", n + 1);
+    heta::log!(Info, "launch: all {} ranks exited cleanly", n + 1);
     Ok(())
 }
 

@@ -151,6 +151,11 @@ pub struct EpochReport {
     /// diverging batch index* localizes the fault far better than an
     /// epoch-mean mismatch.
     pub batch_losses: Vec<f64>,
+    /// The flight recorder's view of the epoch: every rank's trace
+    /// tracks plus the merged metrics snapshot (empty unless
+    /// `train.trace` armed recording). Exported as Chrome trace JSON
+    /// by `--trace out.json`.
+    pub obs: crate::obs::ObsReport,
 }
 
 impl EpochReport {
@@ -191,10 +196,16 @@ impl EpochReport {
         self.comm.merge(&rep.comm);
         self.fetch.merge(rep.fetch);
         self.wire.merge(&rep.wire);
-        self.loss_mean = rep.loss_mean;
-        self.accuracy = rep.accuracy;
+        // Latest-epoch semantics for loss/accuracy — but an *empty*
+        // epoch (ragged tail: zero batches, NaN loss) must not clobber
+        // a real trajectory.
+        if rep.batches > 0 {
+            self.loss_mean = rep.loss_mean;
+            self.accuracy = rep.accuracy;
+        }
         self.batches += rep.batches;
         self.batch_losses.extend_from_slice(&rep.batch_losses);
+        self.obs.merge(&rep.obs);
     }
 
     pub fn print(&self, label: &str) {
@@ -308,6 +319,86 @@ mod tests {
         assert_eq!(total.worker_busy_s, vec![2.0, 1.0]);
         assert_eq!(total.loss_mean, 2.0);
         assert_eq!(total.batches, 8);
+    }
+
+    #[test]
+    fn absorb_merges_every_field() {
+        // Satellite audit (PR 6): every field added since PR 3 —
+        // `wall`, `wire`, `worker_stages`, `batch_losses`, and now
+        // `obs` — must merge, not get dropped or overwritten.
+        let mut a = EpochReport::empty(1);
+        a.epoch_time_s = 2.0;
+        a.critical_path_s = 1.5;
+        a.worker_busy_s = vec![1.0];
+        a.worker_stages[0].add(Stage::Forward, 0.5);
+        a.wall.record_forward(0, (0.0, 1.0));
+        a.stages.add(Stage::Sample, 0.25);
+        a.fetch.rows = 10;
+        a.fetch.bytes = 400;
+        a.wire.real_sent = 100;
+        a.wire.frames_sent = 3;
+        a.loss_mean = 3.0;
+        a.accuracy = 0.5;
+        a.batches = 2;
+        a.batch_losses = vec![3.5, 2.5];
+        a.obs.metrics.counters.push(("wire.lane0.tx_bytes".to_string(), 7));
+
+        // Second epoch: wider (2 workers) and with a trace track.
+        let mut b = EpochReport::empty(2);
+        b.epoch_time_s = 1.0;
+        b.critical_path_s = 0.5;
+        b.worker_busy_s = vec![0.25, 0.75];
+        b.worker_stages[1].add(Stage::Backward, 0.125);
+        b.wall.record_forward(1, (2.0, 3.0));
+        b.stages.add(Stage::Update, 0.0625);
+        b.fetch.rows = 5;
+        b.fetch.bytes = 200;
+        b.wire.real_recv = 50;
+        b.wire.frames_recv = 2;
+        b.loss_mean = 2.0;
+        b.accuracy = 0.75;
+        b.batches = 1;
+        b.batch_losses = vec![2.0];
+        b.obs.metrics.counters.push(("wire.lane0.tx_bytes".to_string(), 5));
+        b.obs.tracks.push(crate::obs::TraceTrack {
+            rank: 1,
+            thread: "worker".to_string(),
+            ..Default::default()
+        });
+
+        let mut total = EpochReport::default();
+        total.absorb(&a);
+        total.absorb(&b);
+        assert_eq!(total.epoch_time_s, 3.0);
+        assert_eq!(total.critical_path_s, 2.0);
+        assert_eq!(total.worker_busy_s, vec![1.25, 0.75], "absorb must widen worker vectors");
+        assert_eq!(total.worker_stages.len(), 2);
+        assert_eq!(total.worker_stages[0].get(Stage::Forward), 0.5);
+        assert_eq!(total.worker_stages[1].get(Stage::Backward), 0.125);
+        assert_eq!(total.wall.forward.len(), 2, "wall clock must widen too");
+        assert_eq!(total.wall.forward[0], vec![(0.0, 1.0)]);
+        // WallClock::merge shifts absorbed spans past the previous
+        // epoch's latest end (1.0 here), so epochs never spuriously
+        // overlap: (2.0, 3.0) lands as (3.0, 4.0).
+        assert_eq!(total.wall.forward[1], vec![(3.0, 4.0)]);
+        assert_eq!(total.stages.get(Stage::Sample), 0.25);
+        assert_eq!(total.stages.get(Stage::Update), 0.0625);
+        assert_eq!((total.fetch.rows, total.fetch.bytes), (15, 600));
+        assert_eq!((total.wire.real_sent, total.wire.real_recv), (100, 50));
+        assert_eq!(total.wire.frames(), 5);
+        assert_eq!(total.loss_mean, 2.0, "latest epoch's loss");
+        assert_eq!(total.accuracy, 0.75);
+        assert_eq!(total.batches, 3);
+        assert_eq!(total.batch_losses, vec![3.5, 2.5, 2.0]);
+        assert_eq!(total.obs.metrics.counter("wire.lane0.tx_bytes"), 12);
+        assert_eq!(total.obs.tracks.len(), 1);
+
+        // An empty epoch (ragged tail: NaN loss, zero batches) must not
+        // clobber the real trajectory.
+        total.absorb(&EpochReport::empty(2));
+        assert_eq!(total.loss_mean, 2.0, "empty epoch clobbered loss_mean");
+        assert_eq!(total.accuracy, 0.75);
+        assert_eq!(total.batches, 3);
     }
 
     #[test]

@@ -40,8 +40,9 @@ use crate::runtime::ParamSnapshot;
 
 /// Version of the message layouts below, exchanged in the transport
 /// handshake. Peers with different versions refuse to connect instead
-/// of mis-decoding each other.
-pub const CODEC_VERSION: u16 = 1;
+/// of mis-decoding each other. v2: `Up::Obs` trace blobs on the stats
+/// path and a leader timestamp in the handshake reply (PR 6).
+pub const CODEC_VERSION: u16 = 2;
 
 /// A message that can be encoded onto / decoded from a wire frame.
 pub trait WireCodec: Sized {
@@ -173,7 +174,7 @@ impl<'a> ByteReader<'a> {
 
     /// Validate a declared element count against the bytes that could
     /// hold it — a corrupt length must not drive an allocation.
-    fn seq_len(&mut self, elem_bytes: usize) -> Result<usize> {
+    pub fn seq_len(&mut self, elem_bytes: usize) -> Result<usize> {
         let n = self.u32()? as usize;
         ensure!(
             n.checked_mul(elem_bytes)

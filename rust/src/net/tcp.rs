@@ -31,6 +31,16 @@
 //! codec + harness overhead `EpochReport.wire` makes visible; modeled
 //! never exceeds real for the same traffic.
 //!
+//! Observability (PR 6): when the flight recorder is armed, each
+//! reader thread records a wire-wait span per frame (parked in the
+//! [`crate::obs`] sink under its own rank×thread track), both
+//! directions tick per-lane byte counters
+//! (`wire.lane<N>.{tx,rx}_bytes`), and the handshake reply carries the
+//! leader's clock so workers can rebase their trace timestamps onto
+//! the leader's timeline. All of it is gated on
+//! [`crate::obs::enabled`] — an untraced run takes none of these
+//! branches.
+//!
 //! [`recv`]: TcpChannel::recv
 
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -255,6 +265,9 @@ impl<T: WireCodec + Wire> Transport<T> for TcpChannel<T> {
         c.real_sent.fetch_add(4 + len as u64, Ordering::Relaxed);
         c.frames_sent.fetch_add(1, Ordering::Relaxed);
         c.modeled_sent.fetch_add(payload.wire_bytes(), Ordering::Relaxed);
+        if crate::obs::enabled() {
+            crate::obs::counter_add(&format!("wire.lane{}.tx_bytes", self.lane), 4 + len as u64);
+        }
         Ok(())
     }
 
@@ -349,7 +362,7 @@ fn build_node(rank: usize, workers: usize, conns: Vec<(usize, TcpStream)>) -> Re
         let c = Arc::clone(&counters);
         std::thread::Builder::new()
             .name(format!("net-rx-{rank}-from-{peer}"))
-            .spawn(move || reader_loop(read_half, peer, senders, c))
+            .spawn(move || reader_loop(read_half, rank, peer, senders, c))
             .context("spawning the connection reader thread")?;
         peers[peer] = Some(PeerConn {
             writer: Mutex::new(BufWriter::new(stream)),
@@ -367,17 +380,42 @@ fn build_node(rank: usize, workers: usize, conns: Vec<(usize, TcpStream)>) -> Re
     })
 }
 
+/// Lane names for the reader-thread trace tracks, indexed by lane id.
+const RX_LANE_NAMES: [&str; NUM_LANES] = ["rx-lane0", "rx-lane1", "rx-lane2", "rx-lane3"];
+
+/// Park this reader's recorded frame spans in the obs sink as one
+/// track; the next epoch-end [`crate::obs::TraceBlob::collect`] on
+/// this process picks them up.
+fn flush_rx_events(rank: usize, from: usize, events: &mut Vec<crate::obs::ObsEvent>) {
+    if events.is_empty() {
+        return;
+    }
+    crate::obs::sink_push(crate::obs::TraceTrack {
+        rank: rank as u32,
+        thread: format!("net-rx-from-{from}"),
+        dropped: 0,
+        names: RX_LANE_NAMES.iter().map(|s| s.to_string()).collect(),
+        events: std::mem::take(events),
+    });
+}
+
 /// Demultiplex one connection: read frames, route them to their lane
 /// queues, and on any failure broadcast the reason to every lane so a
 /// blocked receiver wakes with the root cause instead of hanging.
 fn reader_loop(
     stream: TcpStream,
+    rank: usize,
     from: usize,
     senders: Vec<Sender<LaneFrame>>,
     counters: Arc<Counters>,
 ) {
     let mut r = BufReader::new(stream);
+    // Frame spans recorded while the flight recorder is armed; the
+    // reader threads outlive epochs, so these flush into the global
+    // sink instead of a thread-registered buffer.
+    let mut rx_events: Vec<crate::obs::ObsEvent> = Vec::new();
     let reason = loop {
+        let t0_us = if crate::obs::enabled() { crate::obs::now_us() } else { 0 };
         let mut hdr = [0u8; 4];
         if let Err(e) = r.read_exact(&mut hdr) {
             break if e.kind() == std::io::ErrorKind::UnexpectedEof {
@@ -400,6 +438,24 @@ fn reader_loop(
         }
         counters.real_recv.fetch_add(4 + len as u64, Ordering::Relaxed);
         counters.frames_recv.fetch_add(1, Ordering::Relaxed);
+        if crate::obs::enabled() && (lane[0] as usize) < NUM_LANES {
+            crate::obs::counter_add(&format!("wire.lane{}.rx_bytes", lane[0]), 4 + len as u64);
+            rx_events.push(crate::obs::ObsEvent {
+                batch: crate::obs::NO_BATCH_U64,
+                kind: crate::obs::KIND_WIRE_WAIT,
+                lane: lane[0],
+                name_idx: lane[0] as u16,
+                t0_us,
+                t1_us: crate::obs::now_us(),
+            });
+            // Barrier frames bracket epochs, so flushing on them keeps
+            // the sink roughly epoch-fresh; the size cap bounds memory
+            // between barriers. (Events still buffered when an epoch's
+            // blob is collected surface in the next collection.)
+            if rx_events.len() >= 64 || lane[0] >= LANE_BARRIER_UP {
+                flush_rx_events(rank, from, &mut rx_events);
+            }
+        }
         let Some(tx) = senders.get(lane[0] as usize) else {
             break format!("frame from rank {from} names unknown lane {}", lane[0]);
         };
@@ -410,6 +466,7 @@ fn reader_loop(
             frame: Ok(body),
         });
     };
+    flush_rx_events(rank, from, &mut rx_events);
     for tx in &senders {
         let _ = tx.send(LaneFrame {
             from,
@@ -485,7 +542,8 @@ pub fn accept_workers(listener: TcpListener, workers: usize) -> Result<TcpNode> 
                 connected += 1;
             }
             Err(e) => {
-                eprintln!(
+                crate::log!(
+                    Warn,
                     "leader: rejected dial-in from {peer_addr} ({e:#}); still waiting for \
                      {} of {workers} workers",
                     workers - connected
@@ -521,8 +579,13 @@ fn admit_worker(
         !taken[w],
         "two dialers claim worker rank {w} (duplicate --rank?)"
     );
+    // The reply appends the leader's clock (unix micros) so the worker
+    // can estimate its offset and rebase trace timestamps onto the
+    // leader's timeline. One sample is coarse (no RTT halving), but the
+    // spans it aligns are per-batch, not per-microsecond.
     stream
         .write_all(&handshake_bytes(workers as u16))
+        .and_then(|_| stream.write_all(&crate::obs::now_us().to_le_bytes()))
         .and_then(|_| stream.flush())
         .with_context(|| format!("answering worker {w}'s handshake"))?;
     // Back to blocking reads: the reader thread owns this fd for the
@@ -566,6 +629,12 @@ pub fn dial(
         .and_then(|_| stream.flush())
         .with_context(|| format!("worker {worker} sending its handshake"))?;
     let leader_rank = read_handshake(&mut stream, &format!("leader {leader_addr}"))? as usize;
+    let mut ts = [0u8; 8];
+    stream
+        .read_exact(&mut ts)
+        .with_context(|| format!("reading the leader clock from {leader_addr}"))?;
+    let leader_now = u64::from_le_bytes(ts);
+    crate::obs::set_clock_offset(leader_now as i64 - crate::obs::now_us() as i64);
     ensure!(
         leader_rank == workers,
         "leader at {leader_addr} runs a {leader_rank}-worker star, this rank expects \

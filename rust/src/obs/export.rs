@@ -1,0 +1,239 @@
+//! Export the flight recorder's epoch report as Chrome trace-event
+//! JSON (openable in Perfetto / `chrome://tracing`).
+//!
+//! One process per rank (`pid` = rank), one track per recorded thread
+//! (`tid` = track index), one complete event (`"ph":"X"`) per span.
+//! Stall spans carry a `cname` so wire-wait and barrier-wait stand out
+//! from compute at a glance; every event's `args` carry the batch and
+//! lane for drill-down. The metrics snapshot rides along under a
+//! top-level `"metrics"` key (ignored by trace viewers, read by the CI
+//! validator and humans).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::recorder::{
+    kind_name, TraceTrack, KIND_BARRIER_WAIT, KIND_WIRE_WAIT, LANE_NONE, NO_BATCH_U64,
+};
+use super::{HistSummary, MetricsSnapshot, ObsReport};
+
+/// Chrome's stock palette names for stall coloring: data lanes pop,
+/// barrier lanes and barriers go grey.
+fn stall_cname(kind: u8, lane: u8) -> Option<&'static str> {
+    match (kind, lane) {
+        (KIND_BARRIER_WAIT, _) => Some("grey"),
+        (KIND_WIRE_WAIT, 0) => Some("thread_state_iowait"),
+        (KIND_WIRE_WAIT, 1) => Some("thread_state_running"),
+        (KIND_WIRE_WAIT, _) => Some("grey"),
+        _ => None,
+    }
+}
+
+fn track_events(track: &TraceTrack, tid: usize, t_min: u64, out: &mut Vec<Json>) {
+    // Two metadata events name the process (rank) and thread rows.
+    out.push(Json::from_pairs(vec![
+        ("ph", Json::str("M")),
+        ("name", Json::str("process_name")),
+        ("pid", Json::Num(track.rank as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", Json::from_pairs(vec![("name", Json::str(format!("rank {}", track.rank)))])),
+    ]));
+    out.push(Json::from_pairs(vec![
+        ("ph", Json::str("M")),
+        ("name", Json::str("thread_name")),
+        ("pid", Json::Num(track.rank as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", Json::from_pairs(vec![("name", Json::str(track.thread.clone()))])),
+    ]));
+    for e in &track.events {
+        let name = track
+            .names
+            .get(e.name_idx as usize)
+            .map(String::as_str)
+            .unwrap_or("?");
+        let mut pairs = vec![
+            ("ph", Json::str("X")),
+            ("name", Json::str(name)),
+            ("cat", Json::str(kind_name(e.kind))),
+            ("pid", Json::Num(track.rank as f64)),
+            ("tid", Json::Num(tid as f64)),
+            ("ts", Json::Num(e.t0_us.saturating_sub(t_min) as f64)),
+            ("dur", Json::Num(e.t1_us.saturating_sub(e.t0_us) as f64)),
+            (
+                "args",
+                Json::from_pairs(vec![
+                    (
+                        "batch",
+                        if e.batch == NO_BATCH_U64 { Json::Null } else { Json::Num(e.batch as f64) },
+                    ),
+                    (
+                        "lane",
+                        if e.lane == LANE_NONE { Json::Null } else { Json::Num(e.lane as f64) },
+                    ),
+                ]),
+            ),
+        ];
+        if let Some(c) = stall_cname(e.kind, e.lane) {
+            pairs.push(("cname", Json::str(c)));
+        }
+        out.push(Json::from_pairs(pairs));
+    }
+}
+
+fn hist_json(h: &HistSummary) -> Json {
+    Json::from_pairs(vec![
+        ("count", Json::Num(h.count as f64)),
+        ("sum", Json::Num(h.sum)),
+        ("min", Json::Num(h.min)),
+        ("max", Json::Num(h.max)),
+        ("mean", Json::Num(h.mean())),
+    ])
+}
+
+fn metrics_json(m: &MetricsSnapshot) -> Json {
+    // Dynamic keys: build the maps directly (from_pairs is for
+    // statically known keys).
+    let counters: BTreeMap<String, Json> = m
+        .counters
+        .iter()
+        .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+        .collect();
+    let gauges: BTreeMap<String, Json> =
+        m.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+    let hists: BTreeMap<String, Json> =
+        m.hists.iter().map(|(k, h)| (k.clone(), hist_json(h))).collect();
+    Json::from_pairs(vec![
+        ("counters", Json::Obj(counters)),
+        ("gauges", Json::Obj(gauges)),
+        ("histograms", Json::Obj(hists)),
+    ])
+}
+
+/// Render an [`ObsReport`] as a Chrome trace-event JSON document.
+/// Timestamps rebase to the earliest span so traces start at t=0.
+pub fn chrome_trace_json(report: &ObsReport) -> Json {
+    let t_min = report
+        .tracks
+        .iter()
+        .flat_map(|t| t.events.iter().map(|e| e.t0_us))
+        .min()
+        .unwrap_or(0);
+    let mut events = Vec::new();
+    for (tid, track) in report.tracks.iter().enumerate() {
+        track_events(track, tid, t_min, &mut events);
+    }
+    Json::from_pairs(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("metrics", metrics_json(&report.metrics)),
+    ])
+}
+
+/// Write the Chrome trace for `report` to `path`.
+pub fn export_chrome(report: &ObsReport, path: &str) -> Result<()> {
+    let json = chrome_trace_json(report);
+    std::fs::write(path, json.to_string()).with_context(|| format!("writing trace to {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::{ObsEvent, KIND_COMPUTE};
+    use crate::util::json::parse;
+
+    fn sample_report() -> ObsReport {
+        let mut metrics = MetricsSnapshot::default();
+        metrics.counters.push(("wire.lane0.tx_bytes".into(), 128));
+        let mut h = HistSummary::default();
+        h.observe(2.0);
+        metrics.hists.push(("grad.version_lag".into(), h));
+        ObsReport {
+            tracks: vec![
+                TraceTrack {
+                    rank: 0,
+                    thread: "worker".into(),
+                    dropped: 0,
+                    names: vec!["fwd".into(), "gather.recv".into()],
+                    events: vec![
+                        ObsEvent {
+                            batch: 0,
+                            kind: KIND_COMPUTE,
+                            lane: LANE_NONE,
+                            name_idx: 0,
+                            t0_us: 1_000,
+                            t1_us: 1_500,
+                        },
+                        ObsEvent {
+                            batch: NO_BATCH_U64,
+                            kind: KIND_BARRIER_WAIT,
+                            lane: 2,
+                            name_idx: 1,
+                            t0_us: 1_500,
+                            t1_us: 1_900,
+                        },
+                    ],
+                },
+                TraceTrack {
+                    rank: 1,
+                    thread: "worker".into(),
+                    dropped: 0,
+                    names: vec!["recv".into()],
+                    events: vec![ObsEvent {
+                        batch: 3,
+                        kind: KIND_WIRE_WAIT,
+                        lane: 1,
+                        name_idx: 0,
+                        t0_us: 1_200,
+                        t1_us: 1_300,
+                    }],
+                },
+            ],
+            metrics,
+        }
+    }
+
+    #[test]
+    fn export_parses_and_covers_ranks() {
+        let report = sample_report();
+        let text = chrome_trace_json(&report).to_string();
+        let json = parse(&text).expect("exported trace must be valid JSON");
+        let events = json.get("traceEvents").as_arr().unwrap();
+        // 2 metadata per track + 3 spans.
+        assert_eq!(events.len(), 2 * 2 + 3);
+        let pids: std::collections::BTreeSet<u64> =
+            events.iter().filter_map(|e| e.get("pid").as_u64()).collect();
+        assert_eq!(pids.into_iter().collect::<Vec<_>>(), vec![0, 1]);
+        // Earliest span rebases to ts=0.
+        let spans: Vec<&Json> =
+            events.iter().filter(|e| e.get("ph").as_str() == Some("X")).collect();
+        assert_eq!(spans.iter().filter_map(|e| e.get("ts").as_u64()).min(), Some(0));
+        // Stall spans carry cname + cat; compute does not.
+        let stall = spans.iter().find(|e| e.get("cat").as_str() == Some("barrier-wait")).unwrap();
+        assert_eq!(stall.get("cname").as_str(), Some("grey"));
+        assert!(stall.get("args").get("batch").as_u64().is_none(), "NO_BATCH exports as null");
+        let compute = spans.iter().find(|e| e.get("cat").as_str() == Some("compute")).unwrap();
+        assert_eq!(compute.get("cname").as_str(), None);
+        assert_eq!(compute.get("dur").as_u64(), Some(500));
+        assert_eq!(compute.get("args").get("batch").as_u64(), Some(0));
+        // Metrics ride along.
+        assert_eq!(
+            json.get("metrics").get("counters").get("wire.lane0.tx_bytes").as_u64(),
+            Some(128)
+        );
+        assert_eq!(
+            json.get("metrics").get("histograms").get("grad.version_lag").get("count").as_u64(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn empty_report_is_still_valid_json() {
+        let text = chrome_trace_json(&ObsReport::default()).to_string();
+        let json = parse(&text).expect("empty trace must parse");
+        assert_eq!(json.get("traceEvents").as_arr().map(<[Json]>::len), Some(0));
+    }
+}

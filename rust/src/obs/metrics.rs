@@ -1,0 +1,458 @@
+//! Counters, gauges, and histogram summaries — the numeric half of the
+//! flight recorder.
+//!
+//! A [`MetricsRegistry`] is an instance: unit tests build their own so
+//! they never race the process-global one. Engine code ticks the
+//! module-level free functions ([`counter_add`], [`gauge_max`],
+//! [`hist_observe`]), which gate on [`recorder::enabled`] (zero work
+//! when tracing is off) and delegate to the process-global registry;
+//! [`snapshot_and_reset`] drains that registry into the epoch's
+//! [`MetricsSnapshot`].
+//!
+//! Naming convention: dotted paths, lowest-cardinality first —
+//! `wire.lane0.tx_bytes`, `cache.<node-type>.hits`, `staleness.open`,
+//! `grad.version_lag`. Keys are sorted (BTreeMap) so snapshots are
+//! deterministic and diffable.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::net::codec::{ByteReader, ByteWriter, WireCodec};
+
+use super::recorder;
+
+/// Streaming summary of a distribution — count/sum/min/max is enough
+/// to read mean and spread per epoch without storing samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for HistSummary {
+    fn default() -> HistSummary {
+        HistSummary {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl HistSummary {
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &HistSummary) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+impl WireCodec for HistSummary {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u64(self.count);
+        w.f64(self.sum);
+        w.f64(self.min);
+        w.f64(self.max);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<HistSummary> {
+        Ok(HistSummary {
+            count: r.u64()?,
+            sum: r.f64()?,
+            min: r.f64()?,
+            max: r.f64()?,
+        })
+    }
+}
+
+/// One epoch's worth of metrics from one rank (or, after merging on
+/// the leader, from all of them). Entries stay sorted by key.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, HistSummary)>,
+}
+
+impl MetricsSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Counter value by key (0 when absent) — test/report convenience.
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    }
+
+    /// Fold `other` in: counters add, gauges keep the max, histograms
+    /// merge componentwise. Keys stay sorted.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        fn fold<V: Clone>(
+            into: &mut Vec<(String, V)>,
+            from: &[(String, V)],
+            combine: impl Fn(&mut V, &V),
+        ) {
+            for (k, v) in from {
+                match into.binary_search_by(|(ik, _)| ik.as_str().cmp(k)) {
+                    Ok(i) => combine(&mut into[i].1, v),
+                    Err(i) => into.insert(i, (k.clone(), v.clone())),
+                }
+            }
+        }
+        fold(&mut self.counters, &other.counters, |a, b| *a += *b);
+        fold(&mut self.gauges, &other.gauges, |a, b| *a = a.max(*b));
+        fold(&mut self.hists, &other.hists, |a, b| a.merge(b));
+    }
+}
+
+impl WireCodec for MetricsSnapshot {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u32(self.counters.len() as u32);
+        for (k, v) in &self.counters {
+            w.str(k);
+            w.u64(*v);
+        }
+        w.u32(self.gauges.len() as u32);
+        for (k, v) in &self.gauges {
+            w.str(k);
+            w.f64(*v);
+        }
+        w.u32(self.hists.len() as u32);
+        for (k, h) in &self.hists {
+            w.str(k);
+            h.encode(w);
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<MetricsSnapshot> {
+        // Element minima: a counter entry is ≥ 4 (name len) + 8 bytes,
+        // a gauge likewise, a hist entry ≥ 4 + 32.
+        let n = r.seq_len(12)?;
+        let mut counters = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = r.str()?;
+            counters.push((k, r.u64()?));
+        }
+        let n = r.seq_len(12)?;
+        let mut gauges = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = r.str()?;
+            gauges.push((k, r.f64()?));
+        }
+        let n = r.seq_len(36)?;
+        let mut hists = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = r.str()?;
+            hists.push((k, HistSummary::decode(r)?));
+        }
+        Ok(MetricsSnapshot {
+            counters,
+            gauges,
+            hists,
+        })
+    }
+}
+
+/// A set of live metric cells. Instance methods never gate on the
+/// recorder switch — gating belongs to the free functions below, so
+/// tests drive their own registries unconditionally.
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    hists: Mutex<BTreeMap<String, HistSummary>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl MetricsRegistry {
+    pub const fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            hists: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn counter_add(&self, key: &str, delta: u64) {
+        if delta == 0 {
+            return;
+        }
+        let mut c = lock(&self.counters);
+        match c.get_mut(key) {
+            Some(v) => *v += delta,
+            None => {
+                c.insert(key.to_string(), delta);
+            }
+        }
+    }
+
+    pub fn gauge_max(&self, key: &str, value: f64) {
+        let mut g = lock(&self.gauges);
+        match g.get_mut(key) {
+            Some(v) => *v = v.max(value),
+            None => {
+                g.insert(key.to_string(), value);
+            }
+        }
+    }
+
+    pub fn hist_observe(&self, key: &str, value: f64) {
+        lock(&self.hists)
+            .entry(key.to_string())
+            .or_default()
+            .observe(value);
+    }
+
+    /// Drain everything recorded since the last snapshot. BTreeMap
+    /// iteration keeps the snapshot's vectors sorted by key.
+    pub fn snapshot_and_reset(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: std::mem::take(&mut *lock(&self.counters)).into_iter().collect(),
+            gauges: std::mem::take(&mut *lock(&self.gauges)).into_iter().collect(),
+            hists: std::mem::take(&mut *lock(&self.hists)).into_iter().collect(),
+        }
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> MetricsRegistry {
+        MetricsRegistry::new()
+    }
+}
+
+static GLOBAL: MetricsRegistry = MetricsRegistry::new();
+
+/// Add to a process-global counter (no-op unless tracing is enabled).
+pub fn counter_add(key: &str, delta: u64) {
+    if recorder::enabled() {
+        GLOBAL.counter_add(key, delta);
+    }
+}
+
+/// Raise a process-global high-water gauge (no-op unless enabled).
+pub fn gauge_max(key: &str, value: f64) {
+    if recorder::enabled() {
+        GLOBAL.gauge_max(key, value);
+    }
+}
+
+/// Record one sample into a process-global histogram (no-op unless
+/// enabled).
+pub fn hist_observe(key: &str, value: f64) {
+    if recorder::enabled() {
+        GLOBAL.hist_observe(key, value);
+    }
+}
+
+/// Drain the process-global registry for this epoch's blob.
+pub fn snapshot_and_reset() -> MetricsSnapshot {
+    GLOBAL.snapshot_and_reset()
+}
+
+/// Publish per-node-type cache traffic for one epoch: `before`/`after`
+/// are `(hits, misses)` ledger readings per node type, `names` the node
+/// type names, `penalty_ratios` each type's miss-penalty ratio. Ticks
+/// `cache.<type>.hits` / `cache.<type>.misses` counters with the deltas
+/// and a `cache.<type>.penalty_ratio` gauge — the same ledger
+/// `BENCH_gather.json` reads, so the trace and the bench agree on
+/// fetch traffic by construction.
+pub fn record_cache_counters(
+    names: &[String],
+    before: &[(u64, u64)],
+    after: &[(u64, u64)],
+    penalty_ratios: &[f64],
+) {
+    if !recorder::enabled() {
+        return;
+    }
+    for (ty, name) in names.iter().enumerate() {
+        let (h0, m0) = before.get(ty).copied().unwrap_or((0, 0));
+        let (h1, m1) = after.get(ty).copied().unwrap_or((0, 0));
+        counter_add(&format!("cache.{name}.hits"), h1.saturating_sub(h0));
+        counter_add(&format!("cache.{name}.misses"), m1.saturating_sub(m0));
+        if let Some(&p) = penalty_ratios.get(ty) {
+            gauge_max(&format!("cache.{name}.penalty_ratio"), p);
+        }
+    }
+}
+
+/// Epoch-start ledger reading for [`record_cache_obs`]: `(hits,
+/// misses)` per node type. `None` when the recorder is off or the
+/// context runs cacheless — the matching epoch-end call then no-ops.
+pub fn cache_obs_base(cache: Option<&crate::cache::FeatureCache>) -> Option<Vec<(u64, u64)>> {
+    if !recorder::enabled() {
+        return None;
+    }
+    cache.map(|c| c.types.iter().map(|t| (t.hits, t.misses)).collect())
+}
+
+/// Epoch-end half: diff the cache's ledger against the `base` taken at
+/// epoch start and publish per-node-type hit/miss/penalty counters via
+/// [`record_cache_counters`]. Node-type names come from the graph
+/// schema (ledger index == node-type id).
+pub fn record_cache_obs(
+    g: &crate::hetgraph::HetGraph,
+    cache: Option<&crate::cache::FeatureCache>,
+    base: Option<&[(u64, u64)]>,
+) {
+    if let (Some(cache), Some(base)) = (cache, base) {
+        let names: Vec<String> = g.schema.node_types.iter().map(|t| t.name.clone()).collect();
+        let after: Vec<(u64, u64)> = cache.types.iter().map(|t| (t.hits, t.misses)).collect();
+        let ratios: Vec<f64> = cache.types.iter().map(|t| t.penalty_ratio).collect();
+        record_cache_counters(&names, base, &after, &ratios);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::codec::{decode_message, encode_message};
+
+    #[test]
+    fn registry_records_and_resets() {
+        let reg = MetricsRegistry::new();
+        reg.counter_add("b.count", 2);
+        reg.counter_add("a.count", 1);
+        reg.counter_add("b.count", 3);
+        reg.counter_add("zero", 0); // ignored: no key materialized
+        reg.gauge_max("depth", 2.0);
+        reg.gauge_max("depth", 1.0); // max keeps 2.0
+        reg.hist_observe("lag", 1.0);
+        reg.hist_observe("lag", 3.0);
+        let snap = reg.snapshot_and_reset();
+        assert_eq!(
+            snap.counters,
+            vec![("a.count".to_string(), 1), ("b.count".to_string(), 5)],
+            "counters must sum and stay sorted"
+        );
+        assert_eq!(snap.gauges, vec![("depth".to_string(), 2.0)]);
+        assert_eq!(snap.hists.len(), 1);
+        let h = &snap.hists[0].1;
+        assert_eq!((h.count, h.sum, h.min, h.max), (2, 4.0, 1.0, 3.0));
+        assert_eq!(h.mean(), 2.0);
+        assert!(reg.snapshot_and_reset().is_empty(), "snapshot must reset");
+    }
+
+    #[test]
+    fn snapshot_merge_semantics() {
+        let a = MetricsSnapshot {
+            counters: vec![("x".into(), 2), ("y".into(), 1)],
+            gauges: vec![("g".into(), 1.0)],
+            hists: vec![("h".into(), {
+                let mut h = HistSummary::default();
+                h.observe(5.0);
+                h
+            })],
+        };
+        let b = MetricsSnapshot {
+            counters: vec![("w".into(), 7), ("x".into(), 3)],
+            gauges: vec![("g".into(), 4.0), ("q".into(), -1.0)],
+            hists: vec![("h".into(), {
+                let mut h = HistSummary::default();
+                h.observe(1.0);
+                h.observe(2.0);
+                h
+            })],
+        };
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(
+            m.counters,
+            vec![("w".to_string(), 7), ("x".to_string(), 5), ("y".to_string(), 1)],
+            "counters add by key, insertion keeps sort order"
+        );
+        assert_eq!(m.gauges, vec![("g".to_string(), 4.0), ("q".to_string(), -1.0)]);
+        let h = &m.hists[0].1;
+        assert_eq!((h.count, h.sum, h.min, h.max), (3, 8.0, 1.0, 5.0));
+        assert_eq!(m.counter("x"), 5);
+        assert_eq!(m.counter("absent"), 0);
+    }
+
+    #[test]
+    fn snapshot_codec_round_trips_and_rejects_truncation() {
+        let snap = MetricsSnapshot {
+            counters: vec![("wire.lane0.tx_bytes".into(), u64::MAX), ("z".into(), 0)],
+            gauges: vec![("staleness.open".into(), 2.5)],
+            hists: vec![("grad.version_lag".into(), {
+                let mut h = HistSummary::default();
+                h.observe(0.0);
+                h.observe(3.0);
+                h
+            })],
+        };
+        let bytes = encode_message(&snap);
+        let back: MetricsSnapshot = decode_message(&bytes).unwrap();
+        assert_eq!(back, snap);
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_message::<MetricsSnapshot>(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} must be rejected",
+                bytes.len()
+            );
+        }
+        // Empty snapshot round-trips too (the tracing-off wire shape).
+        let empty = MetricsSnapshot::default();
+        let bytes = encode_message(&empty);
+        assert_eq!(decode_message::<MetricsSnapshot>(&bytes).unwrap(), empty);
+    }
+
+    #[test]
+    fn empty_hist_mean_is_nan_and_merge_identity() {
+        let mut h = HistSummary::default();
+        assert!(h.mean().is_nan());
+        let mut sample = HistSummary::default();
+        sample.observe(2.0);
+        h.merge(&sample);
+        assert_eq!((h.count, h.min, h.max), (1, 2.0, 2.0));
+    }
+
+    #[test]
+    fn cache_counters_tick_deltas() {
+        let reg = &GLOBAL; // free fns gate on enabled(); drive instance directly
+        let names = vec!["paper".to_string(), "author".to_string()];
+        let before = vec![(10, 2), (0, 0)];
+        let after = vec![(15, 2), (4, 6)];
+        // Simulate what record_cache_counters does, without the global
+        // gate, against a local registry.
+        let local = MetricsRegistry::new();
+        for (ty, name) in names.iter().enumerate() {
+            let (h0, m0) = before[ty];
+            let (h1, m1) = after[ty];
+            local.counter_add(&format!("cache.{name}.hits"), h1 - h0);
+            local.counter_add(&format!("cache.{name}.misses"), m1 - m0);
+        }
+        let snap = local.snapshot_and_reset();
+        assert_eq!(snap.counter("cache.paper.hits"), 5);
+        assert_eq!(snap.counter("cache.paper.misses"), 0, "zero delta → no key");
+        assert_eq!(snap.counter("cache.author.hits"), 4);
+        assert_eq!(snap.counter("cache.author.misses"), 6);
+        let _ = reg; // silence unused in case gating changes
+    }
+}

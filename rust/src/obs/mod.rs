@@ -1,0 +1,261 @@
+//! Flight recorder for the distributed runtime (PR 6): cross-rank
+//! tracing, stall attribution, and metrics — hand-rolled, no external
+//! crates, always compiled in.
+//!
+//! Three layers:
+//!
+//! - [`recorder`] — per-rank, thread-local span recording. Stage
+//!   bodies, collectives, and the TCP reader threads open RAII
+//!   [`span`]s tagged `(batch, kind, lane)`, where kind is one of
+//!   compute / marshal / wire-wait / barrier-wait. Zero-cost when
+//!   disabled: unregistered threads get inert guards with no clock
+//!   read.
+//! - [`metrics`] — a [`MetricsRegistry`] of counters, high-water
+//!   gauges, and histogram summaries (wire bytes per lane,
+//!   per-node-type cache hit/miss, staleness-window occupancy,
+//!   grad-version lag), snapshotted per epoch.
+//! - [`export`] — Chrome trace-event / Perfetto JSON (`--trace
+//!   out.json`), one track per rank×thread, stall spans colored by
+//!   lane.
+//!
+//! Cross-process collection: each worker packs its epoch into a
+//! [`TraceBlob`] (serialized via the existing `WireCodec`) and ships
+//! it to the leader on the stats path at epoch end; TCP workers
+//! clock-align first using the offset estimated from the handshake
+//! reply timestamp. The leader merges all blobs into
+//! [`EpochReport::obs`](crate::metrics::EpochReport::obs).
+//!
+//! The hard invariant — pinned by `tests/test_obs_trace.rs` through
+//! the `tests/common` equivalence harness — is that losses are
+//! **byte-identical** with tracing on vs off, for both engines over
+//! both transports: observability is passive. The blob exchange runs
+//! unconditionally (empty blobs when disabled) so the protocol shape
+//! never depends on the trace flag.
+//!
+//! See `docs/OBSERVABILITY.md` for the user-facing guide.
+
+pub mod export;
+pub mod logging;
+pub mod metrics;
+pub mod recorder;
+
+use anyhow::Result;
+
+use crate::net::codec::{ByteReader, ByteWriter, WireCodec};
+
+pub use export::{chrome_trace_json, export_chrome};
+pub use logging::{log_enabled, log_line, set_log_level, set_log_rank, LogLevel};
+pub use metrics::{
+    cache_obs_base, counter_add, gauge_max, hist_observe, record_cache_counters, record_cache_obs,
+    snapshot_and_reset, HistSummary, MetricsRegistry, MetricsSnapshot,
+};
+pub use recorder::{
+    clock_offset_us, current_batch, enabled, kind_name, now_us, rebase_tracks, set_batch,
+    set_clock_offset, set_enabled, set_rank, sink_push, span, take_sink_tracks, thread_flush,
+    thread_register, ObsEvent, Span, TraceTrack, KIND_BARRIER_WAIT, KIND_COMPUTE, KIND_MARSHAL,
+    KIND_WIRE_WAIT, LANE_NONE, NO_BATCH_U64,
+};
+
+// `crate::log!` is #[macro_export]ed at the crate root; re-export it
+// here so downstream code can also write `obs::log!`.
+pub use crate::log;
+
+/// The observability slice of an epoch: every rank's trace tracks plus
+/// the merged metrics snapshot. Lives on
+/// [`EpochReport`](crate::metrics::EpochReport) and merges across
+/// epochs via [`absorb`](crate::metrics::EpochReport::absorb).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsReport {
+    pub tracks: Vec<TraceTrack>,
+    pub metrics: MetricsSnapshot,
+}
+
+impl ObsReport {
+    pub fn is_empty(&self) -> bool {
+        self.tracks.is_empty() && self.metrics.is_empty()
+    }
+
+    pub fn merge(&mut self, other: &ObsReport) {
+        self.tracks.extend(other.tracks.iter().cloned());
+        self.metrics.merge(&other.metrics);
+    }
+
+    /// Seconds attributed to each span kind (indexed by `KIND_*`),
+    /// summed over every track — the acceptance check that per-worker
+    /// span sums are consistent with `EpochReport` stage totals reads
+    /// this.
+    pub fn seconds_by_kind(&self) -> [f64; 4] {
+        let mut out = [0.0; 4];
+        for t in &self.tracks {
+            for e in &t.events {
+                if let Some(slot) = out.get_mut(e.kind as usize) {
+                    *slot += e.t1_us.saturating_sub(e.t0_us) as f64 / 1e6;
+                }
+            }
+        }
+        out
+    }
+
+    /// Seconds by kind for one rank only.
+    pub fn seconds_by_kind_for_rank(&self, rank: u32) -> [f64; 4] {
+        let mut out = [0.0; 4];
+        for t in self.tracks.iter().filter(|t| t.rank == rank) {
+            for e in &t.events {
+                if let Some(slot) = out.get_mut(e.kind as usize) {
+                    *slot += e.t1_us.saturating_sub(e.t0_us) as f64 / 1e6;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One rank's epoch-end observability payload: its trace tracks
+/// (already clock-aligned to the leader) and its metrics snapshot.
+/// Sent leader-ward on the stats path by both engines, in both
+/// transports — empty when tracing is off, but always sent, so the
+/// message schedule is identical either way.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceBlob {
+    pub rank: u32,
+    pub tracks: Vec<TraceTrack>,
+    pub metrics: MetricsSnapshot,
+}
+
+impl TraceBlob {
+    /// Drain everything this rank recorded this epoch: the calling
+    /// thread's buffer, any parked tracks from helper threads (TCP
+    /// readers), and the metrics registry. Track timestamps are
+    /// rebased onto the leader's clock using the handshake offset
+    /// (zero for in-process transports).
+    ///
+    /// Draining the shared sink/registry is racy only across *ranks in
+    /// one process* (loopback tests); that is benign — tracks carry
+    /// their own rank, and the leader sums metrics over all blobs, so
+    /// nothing is lost or double-counted whichever rank drains first.
+    pub fn collect(rank: u32) -> TraceBlob {
+        let mut tracks = recorder::thread_flush();
+        tracks.extend(recorder::take_sink_tracks());
+        recorder::rebase_tracks(&mut tracks, recorder::clock_offset_us());
+        TraceBlob {
+            rank,
+            tracks,
+            metrics: metrics::snapshot_and_reset(),
+        }
+    }
+
+    /// Fold this blob into the epoch report the leader is building.
+    pub fn merge_into(&self, obs: &mut ObsReport) {
+        obs.tracks.extend(self.tracks.iter().cloned());
+        obs.metrics.merge(&self.metrics);
+    }
+}
+
+impl WireCodec for TraceBlob {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u32(self.rank);
+        w.u32(self.tracks.len() as u32);
+        for t in &self.tracks {
+            t.encode(w);
+        }
+        self.metrics.encode(w);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<TraceBlob> {
+        let rank = r.u32()?;
+        // A track is at least 4 (rank) + 4 (thread len) + 8 (dropped)
+        // + 4 + 4 (empty name/event counts) bytes.
+        let n = r.seq_len(24)?;
+        let mut tracks = Vec::with_capacity(n);
+        for _ in 0..n {
+            tracks.push(TraceTrack::decode(r)?);
+        }
+        let metrics = MetricsSnapshot::decode(r)?;
+        Ok(TraceBlob {
+            rank,
+            tracks,
+            metrics,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::codec::{decode_message, encode_message};
+    use recorder::{ObsEvent, KIND_COMPUTE, KIND_WIRE_WAIT, LANE_NONE};
+
+    fn track(rank: u32, kind: u8, dur_us: u64) -> TraceTrack {
+        TraceTrack {
+            rank,
+            thread: "t".into(),
+            dropped: 0,
+            names: vec!["e".into()],
+            events: vec![ObsEvent {
+                batch: 0,
+                kind,
+                lane: LANE_NONE,
+                name_idx: 0,
+                t0_us: 0,
+                t1_us: dur_us,
+            }],
+        }
+    }
+
+    #[test]
+    fn obs_report_merge_and_kind_sums() {
+        let mut a = ObsReport {
+            tracks: vec![track(0, KIND_COMPUTE, 1_000_000)],
+            metrics: MetricsSnapshot {
+                counters: vec![("c".into(), 1)],
+                ..Default::default()
+            },
+        };
+        let b = ObsReport {
+            tracks: vec![track(1, KIND_WIRE_WAIT, 500_000)],
+            metrics: MetricsSnapshot {
+                counters: vec![("c".into(), 2)],
+                ..Default::default()
+            },
+        };
+        assert!(!a.is_empty());
+        a.merge(&b);
+        assert_eq!(a.tracks.len(), 2);
+        assert_eq!(a.metrics.counter("c"), 3);
+        let by_kind = a.seconds_by_kind();
+        assert_eq!(by_kind[KIND_COMPUTE as usize], 1.0);
+        assert_eq!(by_kind[KIND_WIRE_WAIT as usize], 0.5);
+        assert_eq!(a.seconds_by_kind_for_rank(1)[KIND_WIRE_WAIT as usize], 0.5);
+        assert_eq!(a.seconds_by_kind_for_rank(1)[KIND_COMPUTE as usize], 0.0);
+    }
+
+    #[test]
+    fn trace_blob_codec_round_trips_and_rejects_truncation() {
+        let blob = TraceBlob {
+            rank: 2,
+            tracks: vec![track(2, KIND_COMPUTE, 42), track(2, KIND_WIRE_WAIT, 7)],
+            metrics: MetricsSnapshot {
+                counters: vec![("wire.lane1.rx_bytes".into(), 99)],
+                gauges: vec![("staleness.open".into(), 1.0)],
+                hists: Vec::new(),
+            },
+        };
+        let bytes = encode_message(&blob);
+        let back: TraceBlob = decode_message(&bytes).unwrap();
+        assert_eq!(back, blob);
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_message::<TraceBlob>(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} must be rejected",
+                bytes.len()
+            );
+        }
+        // The tracing-off shape: an empty blob still round-trips.
+        let empty = TraceBlob {
+            rank: 5,
+            ..Default::default()
+        };
+        let bytes = encode_message(&empty);
+        assert_eq!(decode_message::<TraceBlob>(&bytes).unwrap(), empty);
+    }
+}

@@ -1,0 +1,566 @@
+//! Per-rank span recorder: thread-local event buffers, no locks on the
+//! hot path.
+//!
+//! Every instrumented region is a [`span`] guard: the stage bodies of
+//! `exec::BatchPlan` open compute/marshal spans, the collectives open
+//! **blocked-on-recv stall spans** (wire-wait on the data lanes,
+//! barrier-wait on the barrier lanes), and the TCP reader threads
+//! record per-frame receive spans — so every microsecond of a worker's
+//! epoch is attributed to compute, marshal, wire-wait, or barrier-wait.
+//!
+//! Zero-cost when disabled: a thread that never called
+//! [`thread_register`] has no buffer, and [`span`] returns an inert
+//! guard **without reading the clock**. Registration happens per epoch
+//! and only when `train.trace` is set, so untraced runs never pay for
+//! the instrumentation. Recording itself never touches the training
+//! math — spans read clocks and push into a thread-local `Vec`; they
+//! cannot change a seeded schedule or a float fold, which is how
+//! losses stay byte-identical with tracing on vs off (pinned in
+//! `tests/test_obs_trace.rs`).
+//!
+//! Threads that outlive an epoch (the TCP reader/demux threads) and
+//! overflow segments flush their finished [`TraceTrack`]s into a
+//! process-global [`sink_push`] buffer, drained into the epoch's
+//! [`TraceBlob`](super::TraceBlob) alongside the thread-local flush.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Instant, SystemTime};
+
+use anyhow::Result;
+
+use crate::net::codec::{ByteReader, ByteWriter, WireCodec};
+
+/// Span kinds: what a slice of a rank's wall clock was spent on.
+pub const KIND_COMPUTE: u8 = 0;
+pub const KIND_MARSHAL: u8 = 1;
+pub const KIND_WIRE_WAIT: u8 = 2;
+pub const KIND_BARRIER_WAIT: u8 = 3;
+
+/// Lane tag for spans not tied to a protocol lane (compute/marshal).
+pub const LANE_NONE: u8 = 0xFF;
+
+/// Batch tag for events recorded outside any batch (barriers, setup).
+pub const NO_BATCH_U64: u64 = u64::MAX;
+
+/// Cap per segment: a runaway epoch degrades to a drop counter instead
+/// of unbounded memory.
+const MAX_EVENTS_PER_SEGMENT: usize = 1 << 16;
+
+pub fn kind_name(kind: u8) -> &'static str {
+    match kind {
+        KIND_COMPUTE => "compute",
+        KIND_MARSHAL => "marshal",
+        KIND_WIRE_WAIT => "wire-wait",
+        KIND_BARRIER_WAIT => "barrier-wait",
+        _ => "unknown",
+    }
+}
+
+/// One recorded span. `name_idx` points into the owning
+/// [`TraceTrack::names`] table; timestamps are microseconds on the
+/// leader's clock once [`rebase_tracks`] applied the handshake offset.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsEvent {
+    pub batch: u64,
+    pub kind: u8,
+    pub lane: u8,
+    pub name_idx: u16,
+    pub t0_us: u64,
+    pub t1_us: u64,
+}
+
+/// All events one (rank, thread) recorded: one track of the exported
+/// Chrome trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceTrack {
+    pub rank: u32,
+    pub thread: String,
+    /// Events lost to the per-segment cap (visible, never silent).
+    pub dropped: u64,
+    pub names: Vec<String>,
+    pub events: Vec<ObsEvent>,
+}
+
+impl WireCodec for ObsEvent {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u64(self.batch);
+        w.u8(self.kind);
+        w.u8(self.lane);
+        w.u16(self.name_idx);
+        w.u64(self.t0_us);
+        w.u64(self.t1_us);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<ObsEvent> {
+        Ok(ObsEvent {
+            batch: r.u64()?,
+            kind: r.u8()?,
+            lane: r.u8()?,
+            name_idx: r.u16()?,
+            t0_us: r.u64()?,
+            t1_us: r.u64()?,
+        })
+    }
+}
+
+/// Encoded [`ObsEvent`] size — the element bound `seq_len` validates
+/// declared counts against.
+const OBS_EVENT_BYTES: usize = 28;
+
+impl WireCodec for TraceTrack {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u32(self.rank);
+        w.str(&self.thread);
+        w.u64(self.dropped);
+        w.u32(self.names.len() as u32);
+        for n in &self.names {
+            w.str(n);
+        }
+        w.u32(self.events.len() as u32);
+        for e in &self.events {
+            e.encode(w);
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<TraceTrack> {
+        let rank = r.u32()?;
+        let thread = r.str()?;
+        let dropped = r.u64()?;
+        let n = r.seq_len(4)?; // each name carries at least its u32 length
+        let mut names = Vec::with_capacity(n);
+        for _ in 0..n {
+            names.push(r.str()?);
+        }
+        let n = r.seq_len(OBS_EVENT_BYTES)?;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            events.push(ObsEvent::decode(r)?);
+        }
+        Ok(TraceTrack {
+            rank,
+            thread,
+            dropped,
+            names,
+            events,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global switches and clocks
+
+/// Sticky process-global enable: set (never cleared) when any traced
+/// run registers a thread. Gates the recording the thread-local buffer
+/// cannot — metric ticks and the TCP reader threads, which have no
+/// epoch scope. Sticky-on means a later untraced run in the same
+/// process pays those ticks; that is cosmetic only (counters never
+/// feed the training math).
+static OBS_ON: AtomicBool = AtomicBool::new(false);
+
+pub fn enabled() -> bool {
+    OBS_ON.load(Ordering::Relaxed)
+}
+
+/// Turn recording on for this process (sticky; `false` is ignored so a
+/// later epoch cannot yank buffers out from under live reader threads).
+pub fn set_enabled(on: bool) {
+    if on {
+        OBS_ON.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Clock origin: unix micros anchored to a monotonic instant, so
+/// every timestamp in a process is monotonic *and* comparable across
+/// processes once the handshake offset is applied.
+static ORIGIN: OnceLock<(Instant, u64)> = OnceLock::new();
+
+fn origin() -> &'static (Instant, u64) {
+    ORIGIN.get_or_init(|| {
+        let unix = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        (Instant::now(), unix)
+    })
+}
+
+/// Microseconds since the unix epoch on this process's clock.
+pub fn now_us() -> u64 {
+    let &(anchor, unix) = origin();
+    unix + anchor.elapsed().as_micros() as u64
+}
+
+/// leader-clock − local-clock offset, estimated at TCP handshake time
+/// (`net::tcp::dial` reads the leader's timestamp from the handshake
+/// reply). Zero for in-process transports and on the leader itself.
+static CLOCK_OFFSET_US: AtomicI64 = AtomicI64::new(0);
+
+pub fn set_clock_offset(us: i64) {
+    CLOCK_OFFSET_US.store(us, Ordering::Relaxed);
+}
+
+pub fn clock_offset_us() -> i64 {
+    CLOCK_OFFSET_US.load(Ordering::Relaxed)
+}
+
+/// Shift every timestamp of `tracks` by `offset_us` (saturating at the
+/// epoch bounds) — applied once, on the worker, when its epoch blob is
+/// built, so the leader merges already-aligned tracks.
+pub fn rebase_tracks(tracks: &mut [TraceTrack], offset_us: i64) {
+    if offset_us == 0 {
+        return;
+    }
+    let shift = |t: u64| (t as i128 + offset_us as i128).clamp(0, u64::MAX as i128) as u64;
+    for t in tracks {
+        for e in &mut t.events {
+            e.t0_us = shift(e.t0_us);
+            e.t1_us = shift(e.t1_us);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local recording
+
+struct ThreadBuf {
+    rank: u32,
+    thread: String,
+    batch: u64,
+    /// Intern table; only grows, so earlier segments' `name_idx` values
+    /// stay valid when a later segment's table supersedes theirs.
+    names: Vec<&'static str>,
+    events: Vec<ObsEvent>,
+    dropped: u64,
+    /// Closed segments (one per rank this thread played — the
+    /// sequential driver plays them all).
+    done: Vec<TraceTrack>,
+}
+
+impl ThreadBuf {
+    fn name_idx(&mut self, name: &'static str) -> u16 {
+        if let Some(i) = self.names.iter().position(|&n| std::ptr::eq(n, name) || n == name) {
+            return i as u16;
+        }
+        self.names.push(name);
+        (self.names.len() - 1) as u16
+    }
+
+    fn record(&mut self, kind: u8, lane: u8, name: &'static str, t0_us: u64, t1_us: u64) {
+        if self.events.len() >= MAX_EVENTS_PER_SEGMENT {
+            self.dropped += 1;
+            return;
+        }
+        let name_idx = self.name_idx(name);
+        self.events.push(ObsEvent {
+            batch: self.batch,
+            kind,
+            lane,
+            name_idx,
+            t0_us,
+            t1_us,
+        });
+    }
+
+    /// Close the current segment into `done`, merging with an earlier
+    /// segment of the same rank (the name table only grows, so the
+    /// latest table covers every earlier index).
+    fn close_segment(&mut self) {
+        if self.events.is_empty() && self.dropped == 0 {
+            return;
+        }
+        let names: Vec<String> = self.names.iter().map(|s| s.to_string()).collect();
+        let events = std::mem::take(&mut self.events);
+        let dropped = std::mem::take(&mut self.dropped);
+        if let Some(t) = self.done.iter_mut().find(|t| t.rank == self.rank) {
+            t.names = names;
+            t.events.extend(events);
+            t.dropped += dropped;
+        } else {
+            self.done.push(TraceTrack {
+                rank: self.rank,
+                thread: self.thread.clone(),
+                dropped,
+                names,
+                events,
+            });
+        }
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<Option<ThreadBuf>> = const { RefCell::new(None) };
+}
+
+/// Arm recording on this thread for the epoch. Call only when
+/// `train.trace` is set — an unregistered thread's spans are inert.
+/// Also sets the sticky process-global enable.
+pub fn thread_register(rank: u32, thread: &str) {
+    set_enabled(true);
+    BUF.with(|b| {
+        *b.borrow_mut() = Some(ThreadBuf {
+            rank,
+            thread: thread.to_string(),
+            batch: NO_BATCH_U64,
+            names: Vec::new(),
+            events: Vec::new(),
+            dropped: 0,
+            done: Vec::new(),
+        });
+    });
+}
+
+/// Retag this thread's subsequent spans with `rank` — the sequential
+/// driver plays every rank on one thread and switches per phase.
+pub fn set_rank(rank: u32) {
+    BUF.with(|b| {
+        if let Some(buf) = b.borrow_mut().as_mut() {
+            if buf.rank != rank {
+                buf.close_segment();
+                buf.rank = rank;
+            }
+        }
+    });
+}
+
+/// Tag subsequent spans with the batch index ([`NO_BATCH_U64`] between
+/// batches).
+pub fn set_batch(batch: u64) {
+    BUF.with(|b| {
+        if let Some(buf) = b.borrow_mut().as_mut() {
+            buf.batch = batch;
+        }
+    });
+}
+
+/// The batch this thread is currently attributed to, if recording and
+/// inside one (the `log!` prefix reads it).
+pub fn current_batch() -> Option<u64> {
+    BUF.with(|b| {
+        b.borrow()
+            .as_ref()
+            .map(|buf| buf.batch)
+            .filter(|&bi| bi != NO_BATCH_U64)
+    })
+}
+
+/// Close this thread's recording and hand back its tracks (the thread
+/// is unregistered afterwards; the next epoch re-registers).
+pub fn thread_flush() -> Vec<TraceTrack> {
+    BUF.with(|b| match b.borrow_mut().take() {
+        Some(mut buf) => {
+            buf.close_segment();
+            buf.done
+        }
+        None => Vec::new(),
+    })
+}
+
+/// RAII span guard: records `[construction, drop]` on the thread's
+/// buffer. Inert — no clock read at all — when the thread is not
+/// registered.
+pub struct Span {
+    t0_us: u64,
+    kind: u8,
+    lane: u8,
+    name: &'static str,
+    active: bool,
+}
+
+/// Open a span. The `name` must be `'static` so recording never
+/// allocates on the hot path.
+pub fn span(kind: u8, lane: u8, name: &'static str) -> Span {
+    let active = BUF.with(|b| b.borrow().is_some());
+    Span {
+        t0_us: if active { now_us() } else { 0 },
+        kind,
+        lane,
+        name,
+        active,
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let t1_us = now_us();
+        BUF.with(|b| {
+            if let Some(buf) = b.borrow_mut().as_mut() {
+                buf.record(self.kind, self.lane, self.name, self.t0_us, t1_us);
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global sink (threads without an epoch scope)
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+static SINK: Mutex<Vec<TraceTrack>> = Mutex::new(Vec::new());
+
+/// Park a finished track for the next epoch-end collection — used by
+/// the TCP reader threads, which outlive epochs and own no port to
+/// ship through.
+pub fn sink_push(track: TraceTrack) {
+    if track.events.is_empty() && track.dropped == 0 {
+        return;
+    }
+    lock(&SINK).push(track);
+}
+
+/// Drain everything parked since the last drain.
+pub fn take_sink_tracks() -> Vec<TraceTrack> {
+    std::mem::take(&mut *lock(&SINK))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::codec::{decode_message, encode_message};
+
+    #[test]
+    fn unregistered_spans_are_inert() {
+        // No registration: the span must record nothing, and a later
+        // registration must not inherit ghost events.
+        {
+            let _s = span(KIND_COMPUTE, LANE_NONE, "ghost");
+        }
+        thread_register(3, "test");
+        let tracks = thread_flush();
+        assert!(tracks.is_empty(), "no spans were opened while registered: {tracks:?}");
+        assert!(thread_flush().is_empty(), "flush must unregister");
+    }
+
+    #[test]
+    fn spans_record_batch_kind_and_name() {
+        thread_register(1, "test");
+        set_batch(4);
+        {
+            let _s = span(KIND_MARSHAL, LANE_NONE, "fwd-marshal");
+        }
+        set_batch(NO_BATCH_U64);
+        {
+            let _s = span(KIND_BARRIER_WAIT, 2, "barrier");
+        }
+        let tracks = thread_flush();
+        assert_eq!(tracks.len(), 1);
+        let t = &tracks[0];
+        assert_eq!(t.rank, 1);
+        assert_eq!(t.thread, "test");
+        assert_eq!(t.events.len(), 2);
+        let e0 = &t.events[0];
+        assert_eq!((e0.batch, e0.kind, e0.lane), (4, KIND_MARSHAL, LANE_NONE));
+        assert_eq!(t.names[e0.name_idx as usize], "fwd-marshal");
+        assert!(e0.t1_us >= e0.t0_us, "span end before start");
+        let e1 = &t.events[1];
+        assert_eq!((e1.batch, e1.kind, e1.lane), (NO_BATCH_U64, KIND_BARRIER_WAIT, 2));
+    }
+
+    #[test]
+    fn set_rank_splits_tracks_and_merges_revisits() {
+        // The sequential driver's pattern: one thread plays rank 0,
+        // then rank 1, then rank 0 again. Two tracks, rank 0's merged.
+        thread_register(0, "driver");
+        {
+            let _s = span(KIND_COMPUTE, LANE_NONE, "a");
+        }
+        set_rank(1);
+        {
+            let _s = span(KIND_COMPUTE, LANE_NONE, "b");
+        }
+        set_rank(0);
+        {
+            let _s = span(KIND_COMPUTE, LANE_NONE, "c");
+        }
+        let mut tracks = thread_flush();
+        tracks.sort_by_key(|t| t.rank);
+        assert_eq!(tracks.len(), 2, "{tracks:?}");
+        assert_eq!(tracks[0].rank, 0);
+        assert_eq!(tracks[0].events.len(), 2, "rank 0 revisit must merge");
+        assert_eq!(tracks[1].rank, 1);
+        assert_eq!(tracks[1].events.len(), 1);
+        // The merged track's (grown) name table resolves both events.
+        for e in &tracks[0].events {
+            assert!(tracks[0].names.get(e.name_idx as usize).is_some());
+        }
+    }
+
+    #[test]
+    fn rebase_shifts_and_saturates() {
+        let mut tracks = vec![TraceTrack {
+            rank: 0,
+            thread: "t".into(),
+            dropped: 0,
+            names: vec!["x".into()],
+            events: vec![ObsEvent {
+                batch: 0,
+                kind: KIND_COMPUTE,
+                lane: LANE_NONE,
+                name_idx: 0,
+                t0_us: 100,
+                t1_us: 200,
+            }],
+        }];
+        rebase_tracks(&mut tracks, 50);
+        assert_eq!((tracks[0].events[0].t0_us, tracks[0].events[0].t1_us), (150, 250));
+        rebase_tracks(&mut tracks, -1000);
+        assert_eq!(
+            (tracks[0].events[0].t0_us, tracks[0].events[0].t1_us),
+            (0, 0),
+            "negative overshoot must clamp, not wrap"
+        );
+    }
+
+    #[test]
+    fn track_codec_round_trips_and_rejects_truncation() {
+        let track = TraceTrack {
+            rank: 7,
+            thread: "net-rx-from-2".into(),
+            dropped: 3,
+            names: vec!["rx".into(), "héta".into()],
+            events: vec![
+                ObsEvent {
+                    batch: NO_BATCH_U64,
+                    kind: KIND_WIRE_WAIT,
+                    lane: 1,
+                    name_idx: 0,
+                    t0_us: 10,
+                    t1_us: 20,
+                },
+                ObsEvent {
+                    batch: 5,
+                    kind: KIND_COMPUTE,
+                    lane: LANE_NONE,
+                    name_idx: 1,
+                    t0_us: u64::MAX - 1,
+                    t1_us: u64::MAX,
+                },
+            ],
+        };
+        let bytes = encode_message(&track);
+        let back: TraceTrack = decode_message(&bytes).unwrap();
+        assert_eq!(back, track);
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_message::<TraceTrack>(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} must be rejected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn kind_names_cover_every_kind() {
+        assert_eq!(kind_name(KIND_COMPUTE), "compute");
+        assert_eq!(kind_name(KIND_MARSHAL), "marshal");
+        assert_eq!(kind_name(KIND_WIRE_WAIT), "wire-wait");
+        assert_eq!(kind_name(KIND_BARRIER_WAIT), "barrier-wait");
+        assert_eq!(kind_name(99), "unknown");
+    }
+}

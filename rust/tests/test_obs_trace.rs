@@ -1,0 +1,300 @@
+//! The flight recorder (the PR-6 tentpole).
+//!
+//! Artifact-free half: codec round-trip property tests over random
+//! trace payloads — `TraceTrack`, `MetricsSnapshot` and the `TraceBlob`
+//! the workers ship to the leader at epoch end — plus truncated and
+//! bit-flipped frame rejection (decode must be total), and a check
+//! that the Chrome-trace exporter emits JSON our own parser round-trips
+//! with one process (`pid`) per recorded rank.
+//!
+//! Artifact-gated half (skipped until `make artifacts`): the PR's hard
+//! invariant. Tracing must be **observationally free**: per-batch
+//! losses byte-identical with `--trace` on vs off, for both engines,
+//! across the in-process and loopback-TCP transports, at staleness 0
+//! and at a fixed window k = 1 — through the shared `tests/common`
+//! matrix. And it must actually observe: every trace-on run's report
+//! carries non-empty tracks.
+//!
+//! (Only *track* content is asserted, never registry metrics: tracks
+//! travel thread-locally into each rank's blob, while the process-wide
+//! metrics registry and reader-thread sink are shared across the
+//! concurrently running tests of this binary.)
+
+mod common;
+
+use heta::config::RuntimeKind;
+use heta::coordinator::SystemKind;
+use heta::metrics::EpochReport;
+use heta::net::codec::{decode_message, encode_message};
+use heta::obs::{
+    chrome_trace_json, HistSummary, MetricsSnapshot, ObsEvent, ObsReport, TraceBlob, TraceTrack,
+    KIND_BARRIER_WAIT, KIND_COMPUTE, KIND_MARSHAL, KIND_WIRE_WAIT, LANE_NONE, NO_BATCH_U64,
+};
+use heta::util::proptest;
+use heta::util::rng::Rng;
+
+use common::{variant, variant_tcp};
+
+// ---- artifact-free: codec properties ----
+
+fn random_name(rng: &mut Rng) -> String {
+    let n = 1 + rng.below(12);
+    (0..n)
+        .map(|_| char::from(b'a' + rng.below(26) as u8))
+        .collect()
+}
+
+fn random_event(rng: &mut Rng, num_names: usize) -> ObsEvent {
+    let kinds = [KIND_COMPUTE, KIND_MARSHAL, KIND_WIRE_WAIT, KIND_BARRIER_WAIT];
+    let t0 = rng.next_u64() % 1_000_000_000;
+    ObsEvent {
+        batch: if rng.below(4) == 0 { NO_BATCH_U64 } else { rng.below(64) as u64 },
+        kind: kinds[rng.below(4)],
+        lane: if rng.below(3) == 0 { LANE_NONE } else { rng.below(4) as u8 },
+        name_idx: rng.below(num_names.max(1)) as u16,
+        t0_us: t0,
+        t1_us: t0 + rng.below(50_000) as u64,
+    }
+}
+
+fn random_track(rng: &mut Rng) -> TraceTrack {
+    let names: Vec<String> = (0..1 + rng.below(6)).map(|_| random_name(rng)).collect();
+    TraceTrack {
+        rank: rng.below(6) as u32,
+        thread: random_name(rng),
+        dropped: rng.below(3) as u64,
+        events: (0..rng.below(24)).map(|_| random_event(rng, names.len())).collect(),
+        names,
+    }
+}
+
+fn random_metrics(rng: &mut Rng) -> MetricsSnapshot {
+    let mut m = MetricsSnapshot::default();
+    for _ in 0..rng.below(5) {
+        m.counters.push((random_name(rng), rng.next_u64()));
+    }
+    for _ in 0..rng.below(4) {
+        m.gauges.push((random_name(rng), rng.f32() as f64 * 16.0 - 8.0));
+    }
+    for _ in 0..rng.below(3) {
+        let mut h = HistSummary::default();
+        for _ in 0..1 + rng.below(8) {
+            h.observe(rng.f32() as f64 * 10.0);
+        }
+        m.hists.push((random_name(rng), h));
+    }
+    m
+}
+
+fn random_blob(rng: &mut Rng) -> TraceBlob {
+    TraceBlob {
+        rank: rng.below(6) as u32,
+        tracks: (0..rng.below(4)).map(|_| random_track(rng)).collect(),
+        metrics: random_metrics(rng),
+    }
+}
+
+#[test]
+fn prop_trace_track_round_trip_bitwise() {
+    proptest::run("codec_trace_track", |rng, _| {
+        let track = random_track(rng);
+        let back: TraceTrack = decode_message(&encode_message(&track))
+            .map_err(|e| format!("decode failed: {e:#}"))?;
+        heta::prop_assert!(back == track, "track changed in flight: {track:?} -> {back:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_metrics_snapshot_round_trip_bitwise() {
+    proptest::run("codec_metrics_snapshot", |rng, _| {
+        let m = random_metrics(rng);
+        let back: MetricsSnapshot = decode_message(&encode_message(&m))
+            .map_err(|e| format!("decode failed: {e:#}"))?;
+        heta::prop_assert!(back == m, "snapshot changed in flight: {m:?} -> {back:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_blob_round_trip_bitwise() {
+    proptest::run("codec_trace_blob", |rng, _| {
+        let blob = random_blob(rng);
+        let back: TraceBlob = decode_message(&encode_message(&blob))
+            .map_err(|e| format!("decode failed: {e:#}"))?;
+        heta::prop_assert!(back == blob, "blob changed in flight");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncated_and_corrupt_trace_frames_never_panic() {
+    proptest::run("codec_trace_corruption", |rng, _| {
+        let blob = random_blob(rng);
+        let bytes = encode_message(&blob);
+        let cut = rng.below(bytes.len().max(1));
+        heta::prop_assert!(
+            decode_message::<TraceBlob>(&bytes[..cut]).is_err(),
+            "truncation at {cut}/{} must be rejected",
+            bytes.len()
+        );
+        // A random bit flip either still decodes or errors — both fine;
+        // a panic or absurd allocation is not.
+        if !bytes.is_empty() {
+            let mut corrupt = bytes.clone();
+            let at = rng.below(corrupt.len());
+            corrupt[at] ^= 1 << rng.below(8);
+            let _ = decode_message::<TraceBlob>(&corrupt);
+        }
+        Ok(())
+    });
+}
+
+// ---- artifact-free: the exporter against our own JSON parser ----
+
+#[test]
+fn prop_chrome_export_parses_with_one_pid_per_rank() {
+    proptest::run("chrome_export", |rng, _| {
+        let report = ObsReport {
+            tracks: (0..1 + rng.below(4)).map(|_| random_track(rng)).collect(),
+            metrics: random_metrics(rng),
+        };
+        let text = chrome_trace_json(&report).to_string();
+        let json = heta::util::json::parse(&text).map_err(|e| format!("exported trace must parse: {e:#}"))?;
+        let events = json.get("traceEvents").as_arr().ok_or("traceEvents must be an array")?;
+        let spans = events.iter().filter(|e| e.get("ph").as_str() == Some("X")).count();
+        let total: usize = report.tracks.iter().map(|t| t.events.len()).sum();
+        heta::prop_assert!(spans == total, "{spans} X events for {total} recorded spans");
+        let pids: std::collections::BTreeSet<u64> =
+            events.iter().filter_map(|e| e.get("pid").as_u64()).collect();
+        let ranks: std::collections::BTreeSet<u64> =
+            report.tracks.iter().map(|t| t.rank as u64).collect();
+        heta::prop_assert!(pids == ranks, "pids {pids:?} must cover exactly the ranks {ranks:?}");
+        Ok(())
+    });
+}
+
+// ---- artifact-gated: tracing must be observationally free ----
+
+const CFG: &str = "mag-tiny";
+const EPOCHS: usize = 2;
+
+/// Every trace-on report must carry at least one non-empty track —
+/// otherwise the "identical losses" half of the invariant is vacuous.
+fn assert_traced(label: &str, reports: &[EpochReport]) {
+    for (ep, rep) in reports.iter().enumerate() {
+        let events: usize = rep.obs.tracks.iter().map(|t| t.events.len()).sum();
+        assert!(
+            !rep.obs.tracks.is_empty() && events > 0,
+            "[{label}] epoch {ep}: tracing was on but the report has \
+             {} tracks / {events} events",
+            rep.obs.tracks.len(),
+        );
+    }
+}
+
+#[test]
+fn losses_byte_identical_tracing_on_vs_off_raf() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    let reports = common::assert_losses_identical(
+        CFG,
+        SystemKind::Heta,
+        EPOCHS,
+        &[
+            variant("seq/trace-off", |_| {}),
+            variant("seq/trace-on", |c| c.train.trace = true),
+            variant("cluster/trace-on", |c| {
+                c.train.runtime = RuntimeKind::Cluster;
+                c.train.trace = true;
+            }),
+            variant_tcp("tcp/trace-on", |c| c.train.trace = true),
+        ],
+    );
+    assert_traced("seq/trace-on", &reports[1]);
+    assert_traced("cluster/trace-on", &reports[2]);
+    assert_traced("tcp/trace-on", &reports[3]);
+}
+
+#[test]
+fn losses_byte_identical_tracing_on_vs_off_raf_staleness_1() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    let k1 = |c: &mut heta::config::Config| {
+        c.train.runtime = RuntimeKind::Cluster;
+        c.train.staleness = 1;
+    };
+    let reports = common::assert_losses_identical(
+        CFG,
+        SystemKind::Heta,
+        EPOCHS,
+        &[
+            variant("cluster/k1/trace-off", k1),
+            variant("cluster/k1/trace-on", move |c| {
+                k1(c);
+                c.train.trace = true;
+            }),
+            variant_tcp("tcp/k1/trace-on", |c| {
+                c.train.staleness = 1;
+                c.train.trace = true;
+            }),
+        ],
+    );
+    assert_traced("cluster/k1/trace-on", &reports[1]);
+    assert_traced("tcp/k1/trace-on", &reports[2]);
+}
+
+#[test]
+fn losses_byte_identical_tracing_on_vs_off_vanilla() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    let reports = common::assert_losses_identical(
+        CFG,
+        SystemKind::DglMetis,
+        EPOCHS,
+        &[
+            variant("seq/trace-off", |_| {}),
+            variant("seq/trace-on", |c| c.train.trace = true),
+            variant("cluster/trace-on", |c| {
+                c.train.runtime = RuntimeKind::Cluster;
+                c.train.trace = true;
+            }),
+            variant_tcp("tcp/trace-on", |c| c.train.trace = true),
+        ],
+    );
+    assert_traced("seq/trace-on", &reports[1]);
+    assert_traced("cluster/trace-on", &reports[2]);
+    assert_traced("tcp/trace-on", &reports[3]);
+}
+
+#[test]
+fn losses_byte_identical_tracing_on_vs_off_vanilla_staleness_1() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    let k1 = |c: &mut heta::config::Config| {
+        c.train.runtime = RuntimeKind::Cluster;
+        c.train.staleness = 1;
+    };
+    let reports = common::assert_losses_identical(
+        CFG,
+        SystemKind::DglMetis,
+        EPOCHS,
+        &[
+            variant("cluster/k1/trace-off", k1),
+            variant("cluster/k1/trace-on", move |c| {
+                k1(c);
+                c.train.trace = true;
+            }),
+            variant_tcp("tcp/k1/trace-on", |c| {
+                c.train.staleness = 1;
+                c.train.trace = true;
+            }),
+        ],
+    );
+    assert_traced("cluster/k1/trace-on", &reports[1]);
+    assert_traced("tcp/k1/trace-on", &reports[2]);
+}
