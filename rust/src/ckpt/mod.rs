@@ -1,0 +1,423 @@
+//! Epoch-boundary checkpoints: the durable half of fault tolerance.
+//!
+//! A checkpoint snapshots **every** piece of resumable training state —
+//! the leader's [`ParamStore`] (weights *and* dense-Adam moments), the
+//! learnable feature tables (weights *and* sparse-Adam moments), the
+//! shared sparse-Adam timestep, the next epoch index, and a hash of the
+//! trajectory-relevant config — so a killed run restored from it
+//! reproduces the fault-free loss trajectory **bit-for-bit**. Everything
+//! else (graph, metatree, lazy features, batch order, per-batch RNG) is
+//! seed-derived from the config and re-built identically on restore,
+//! which is why nothing more needs to be on disk.
+//!
+//! Format: a 6-byte header — [`CKPT_MAGIC`] + little-endian
+//! [`CODEC_VERSION`] — followed by one [`WireCodec`] frame. The codec's
+//! robustness contract applies end to end: a truncated, bit-flipped, or
+//! wrong-version file decodes to an `anyhow` error naming the file,
+//! never a panic. Writes are atomic (temp file + rename) so a crash
+//! mid-checkpoint leaves the previous checkpoint intact; one
+//! `heta.ckpt` per `--checkpoint-dir` always holds the newest epoch
+//! boundary.
+//!
+//! Restore is epoch-granular by design: every rank re-derives its
+//! seeded state for the checkpointed epoch and replays it from batch 0.
+//! See `docs/FAULT_TOLERANCE.md` for the recovery protocol built on
+//! top of this module.
+//!
+//! [`ParamStore`]: crate::runtime::ParamStore
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{Config, FaultSpec, TransportKind};
+use crate::coordinator::Session;
+use crate::kvstore::LearnableState;
+use crate::net::codec::{
+    decode_message, encode_message, ByteReader, ByteWriter, WireCodec, CODEC_VERSION,
+};
+use crate::runtime::{ParamEntry, ParamStoreState};
+
+/// Checkpoint file magic ("Heta ChecKPoint").
+pub const CKPT_MAGIC: [u8; 4] = *b"HCKP";
+
+/// Full resumable state at one epoch boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// The next epoch to run: a checkpoint written after epoch `e`
+    /// completes carries `epoch = e + 1`.
+    pub epoch: usize,
+    /// Shared sparse-Adam timestep for the learnable feature tables.
+    pub adam_t: i32,
+    /// FNV-1a hash of the trajectory-relevant config ([`config_hash`]);
+    /// restoring under a config with a different hash is an error, not
+    /// a silently diverging run.
+    pub config_hash: u64,
+    /// The leader's full parameter store (weights + Adam moments).
+    pub params: ParamStoreState,
+    /// Every learnable feature table (weights + sparse-Adam moments).
+    pub learnable: Vec<LearnableState>,
+}
+
+impl WireCodec for ParamEntry {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.str(&self.name);
+        w.u32(self.shape.len() as u32);
+        for &d in &self.shape {
+            w.usize(d);
+        }
+        w.f32s(&self.weight);
+        w.f32s(&self.m);
+        w.f32s(&self.v);
+        w.u32(self.t as u32);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<ParamEntry> {
+        let name = r.str()?;
+        let n = r.seq_len(8)?;
+        let mut shape = Vec::with_capacity(n);
+        for _ in 0..n {
+            shape.push(r.usize()?);
+        }
+        Ok(ParamEntry {
+            name,
+            shape,
+            weight: r.f32s()?,
+            m: r.f32s()?,
+            v: r.f32s()?,
+            t: r.u32()? as i32,
+        })
+    }
+}
+
+impl WireCodec for ParamStoreState {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u64(self.version);
+        w.u32(self.entries.len() as u32);
+        for e in &self.entries {
+            e.encode(w);
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<ParamStoreState> {
+        let version = r.u64()?;
+        // Each entry holds at least a name length + shape length +
+        // three vector lengths + the timestep.
+        let n = r.seq_len(24)?;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            entries.push(ParamEntry::decode(r)?);
+        }
+        Ok(ParamStoreState { version, entries })
+    }
+}
+
+impl WireCodec for LearnableState {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.usize(self.ty);
+        w.f32s(&self.weight);
+        w.f32s(&self.m);
+        w.f32s(&self.v);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<LearnableState> {
+        Ok(LearnableState {
+            ty: r.usize()?,
+            weight: r.f32s()?,
+            m: r.f32s()?,
+            v: r.f32s()?,
+        })
+    }
+}
+
+impl WireCodec for Checkpoint {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.usize(self.epoch);
+        w.u32(self.adam_t as u32);
+        w.u64(self.config_hash);
+        self.params.encode(w);
+        w.u32(self.learnable.len() as u32);
+        for l in &self.learnable {
+            l.encode(w);
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<Checkpoint> {
+        let epoch = r.usize()?;
+        let adam_t = r.u32()? as i32;
+        let config_hash = r.u64()?;
+        let params = ParamStoreState::decode(r)?;
+        let n = r.seq_len(20)?;
+        let mut learnable = Vec::with_capacity(n);
+        for _ in 0..n {
+            learnable.push(LearnableState::decode(r)?);
+        }
+        Ok(Checkpoint {
+            epoch,
+            adam_t,
+            config_hash,
+            params,
+            learnable,
+        })
+    }
+}
+
+/// Hash of the trajectory-relevant config: FNV-1a over the config's
+/// debug form with every knob that is documented byte-identical-either-
+/// way (tracing, fault injection, heartbeat timing, transport)
+/// normalized away. Two configs with the same hash produce the same
+/// loss trajectory, so restoring across them is sound; anything else
+/// (seed, lr, staleness, topology, ...) changes the hash and makes
+/// restore an error.
+pub fn config_hash(cfg: &Config) -> u64 {
+    let mut norm = cfg.clone();
+    norm.train.trace = false;
+    norm.train.fail = None;
+    norm.train.hb_interval_ms = 500;
+    norm.train.hb_timeout_ms = 5000;
+    norm.train.transport = TransportKind::Channel;
+    let text = format!("{norm:?}");
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The one checkpoint file under a checkpoint dir.
+pub fn path(dir: &str) -> String {
+    format!("{dir}/heta.ckpt")
+}
+
+/// Capture the full resumable state of a session, stamping `next_epoch`
+/// as the epoch a restored run starts from.
+pub fn capture(sess: &Session, next_epoch: usize) -> Checkpoint {
+    let store = sess.store.read().unwrap_or_else(|e| e.into_inner());
+    Checkpoint {
+        epoch: next_epoch,
+        adam_t: sess.adam_t,
+        config_hash: config_hash(&sess.cfg),
+        params: sess.params.export_state(),
+        learnable: store.export_learnable(),
+    }
+}
+
+/// Restore a session to a checkpoint's epoch boundary. The session must
+/// have been built from a config whose [`config_hash`] matches — the
+/// graph, features and parameters are seed-derived from it, and only
+/// then does overwriting the learned state reproduce the trajectory.
+pub fn restore(sess: &mut Session, ck: &Checkpoint) -> Result<()> {
+    let want = config_hash(&sess.cfg);
+    ensure!(
+        ck.config_hash == want,
+        "checkpoint was written under a different config \
+         (hash {:#018x}, this session {want:#018x}) — resuming would \
+         silently diverge",
+        ck.config_hash
+    );
+    sess.params
+        .restore_state(ck.params.clone())
+        .context("restoring the parameter store from the checkpoint")?;
+    {
+        let mut store = sess.store.write().unwrap_or_else(|e| e.into_inner());
+        store
+            .restore_learnable(&ck.learnable)
+            .context("restoring the learnable feature tables from the checkpoint")?;
+    }
+    sess.adam_t = ck.adam_t;
+    Ok(())
+}
+
+/// Write a checkpoint atomically under `dir`: the bytes land in a temp
+/// file first and replace `heta.ckpt` by rename, so a crash mid-write
+/// leaves the previous checkpoint intact.
+pub fn save(dir: &str, ck: &Checkpoint) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating checkpoint dir {dir}"))?;
+    let mut bytes = Vec::with_capacity(6);
+    bytes.extend_from_slice(&CKPT_MAGIC);
+    bytes.extend_from_slice(&CODEC_VERSION.to_le_bytes());
+    bytes.extend_from_slice(&encode_message(ck));
+    let final_path = path(dir);
+    let tmp_path = format!("{final_path}.tmp");
+    std::fs::write(&tmp_path, &bytes)
+        .with_context(|| format!("writing checkpoint temp file {tmp_path}"))?;
+    std::fs::rename(&tmp_path, &final_path)
+        .with_context(|| format!("renaming {tmp_path} over {final_path}"))?;
+    Ok(())
+}
+
+/// Load the checkpoint under `dir`, if any. A missing file is
+/// `Ok(None)` — `--resume` on a fresh checkpoint dir starts from
+/// scratch, which makes the flag idempotent for respawned ranks. A
+/// file that exists but fails the header or total-decode checks is an
+/// error naming the file: a corrupt checkpoint must never silently
+/// restart training from epoch 0.
+pub fn load(dir: &str) -> Result<Option<Checkpoint>> {
+    let p = path(dir);
+    let bytes = match std::fs::read(&p) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("reading checkpoint {p}")),
+    };
+    if bytes.len() < 6 {
+        bail!("checkpoint {p} is truncated: {} bytes, header needs 6", bytes.len());
+    }
+    if bytes[..4] != CKPT_MAGIC {
+        bail!(
+            "checkpoint {p} has wrong magic {:02x?} (want {:02x?}) — not a heta checkpoint",
+            &bytes[..4],
+            CKPT_MAGIC
+        );
+    }
+    let ver = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if ver != CODEC_VERSION {
+        bail!(
+            "checkpoint {p} is codec version {ver}, this build speaks {CODEC_VERSION} — \
+             re-train or use a matching build"
+        );
+    }
+    let ck = decode_message::<Checkpoint>(&bytes[6..])
+        .with_context(|| format!("decoding checkpoint {p}"))?;
+    Ok(Some(ck))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> Checkpoint {
+        Checkpoint {
+            epoch: 3,
+            adam_t: 17,
+            config_hash: 0xDEAD_BEEF_F00D_CAFE,
+            params: ParamStoreState {
+                version: 41,
+                entries: vec![
+                    ParamEntry {
+                        name: "W_rel0".into(),
+                        shape: vec![2, 3],
+                        weight: vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0, -0.0, 3.5],
+                        m: vec![0.1; 6],
+                        v: vec![0.2; 6],
+                        t: 17,
+                    },
+                    ParamEntry {
+                        name: "b".into(),
+                        shape: vec![3],
+                        weight: vec![0.0, 1.0, 2.0],
+                        m: vec![0.0; 3],
+                        v: vec![0.0; 3],
+                        t: 17,
+                    },
+                ],
+            },
+            learnable: vec![LearnableState {
+                ty: 1,
+                weight: vec![0.5, 1.5, 2.5, 3.5],
+                m: vec![0.01; 4],
+                v: vec![0.02; 4],
+            }],
+        }
+    }
+
+    #[test]
+    fn checkpoint_round_trips_bit_identically() {
+        let ck = fixture();
+        let bytes = encode_message(&ck);
+        let back: Checkpoint = decode_message(&bytes).unwrap();
+        assert_eq!(back, ck);
+        // Canonical: re-encoding the decoded value gives the same bytes.
+        assert_eq!(encode_message(&back), bytes);
+    }
+
+    #[test]
+    fn every_truncation_is_an_error_never_a_panic() {
+        let bytes = encode_message(&fixture());
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_message::<Checkpoint>(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} must be rejected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips_and_names_corrupt_files() {
+        let dir = format!(
+            "{}/heta-ckpt-test-{}",
+            std::env::temp_dir().display(),
+            std::process::id()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+        let ck = fixture();
+        save(&dir, &ck).unwrap();
+        assert!(
+            !std::path::Path::new(&format!("{}.tmp", path(&dir))).exists(),
+            "the temp file must be renamed away"
+        );
+        let back = load(&dir).unwrap().expect("checkpoint exists");
+        assert_eq!(back, ck);
+
+        // A missing checkpoint is a fresh start, not an error.
+        let empty = format!("{dir}/empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(load(&empty).unwrap().is_none());
+
+        // Wrong magic.
+        let p = path(&dir);
+        let good = std::fs::read(&p).unwrap();
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&p, &bad).unwrap();
+        let err = load(&dir).unwrap_err();
+        assert!(format!("{err}").contains(&p), "error must name the file: {err}");
+        assert!(format!("{err}").contains("magic"), "{err}");
+
+        // Wrong version.
+        let mut bad = good.clone();
+        bad[4] ^= 0xFF;
+        std::fs::write(&p, &bad).unwrap();
+        let err = load(&dir).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+
+        // Truncations anywhere must be errors naming the file.
+        for cut in [0, 3, 5, 6, good.len() / 2, good.len() - 1] {
+            std::fs::write(&p, &good[..cut]).unwrap();
+            let err = load(&dir).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(&p),
+                "truncation at {cut} must name the file: {err:#}"
+            );
+        }
+
+        // Trailing garbage is corrupt, not ignored.
+        let mut bad = good.clone();
+        bad.push(0);
+        std::fs::write(&p, &bad).unwrap();
+        assert!(load(&dir).is_err());
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_hash_ignores_observability_but_not_trajectory_knobs() {
+        let cfg = crate::config::Config::from_json(
+            &crate::util::json::parse(crate::config::TINY).unwrap(),
+        )
+        .unwrap();
+        let base = config_hash(&cfg);
+
+        let mut same = cfg.clone();
+        same.train.trace = true;
+        same.train.hb_timeout_ms = 123;
+        same.train.fail = Some(FaultSpec::parse("1:2:exit").unwrap());
+        assert_eq!(config_hash(&same), base, "passive knobs must not change the hash");
+
+        let mut diff = cfg.clone();
+        diff.train.seed ^= 1;
+        assert_ne!(config_hash(&diff), base, "the seed is trajectory-relevant");
+        let mut diff = cfg.clone();
+        diff.train.staleness = 1;
+        assert_ne!(config_hash(&diff), base, "staleness is trajectory-relevant");
+    }
+}

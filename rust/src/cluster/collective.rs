@@ -302,6 +302,68 @@ impl<U, D, EU: Transport<U>, ED: Transport<D>> Port<U, D, EU, ED> {
         }
         Ok(e.payload)
     }
+
+    /// Deterministic fault injection (`--fail rank:batch:kind[:epoch]`):
+    /// both engines call this at the head of every batch, and when this
+    /// worker/epoch/batch triple matches the spec, the named fault
+    /// fires. `Exit` bails immediately; `DropConn` sabotages the
+    /// transport then bails; `Stall` goes silent (heartbeats paused)
+    /// and sleeps past the leader's timeout so *detection*, not a clean
+    /// error, ends the epoch; `CorruptFrame` arms the transport to
+    /// mangle the next outbound frame and keeps running — the receiver
+    /// errors, not this worker. The spec's rank field is the launch
+    /// rank (leader 0, workers 1..=K), so worker `w` matches
+    /// `rank == w + 1`. Each (epoch, batch) passes a run exactly once,
+    /// so a fault fires at most once per training attempt — and
+    /// recovery relaunches without the spec entirely.
+    pub fn maybe_fault(
+        &self,
+        train: &crate::config::TrainConfig,
+        epoch: usize,
+        bi: usize,
+    ) -> Result<()> {
+        let Some(f) = train.fail else {
+            return Ok(());
+        };
+        if f.rank != self.id() + 1 || f.epoch != epoch || f.batch != bi {
+            return Ok(());
+        }
+        let w = self.id();
+        crate::log!(
+            Warn,
+            "fault injection: worker {w} firing `{}` at epoch {epoch}, batch {bi}",
+            f.kind.name()
+        );
+        match f.kind {
+            crate::config::FaultKind::CorruptFrame => {
+                self.up.sabotage(f.kind);
+                Ok(())
+            }
+            crate::config::FaultKind::Exit => {
+                bail!("fault injection: worker {w} exited at epoch {epoch}, batch {bi}")
+            }
+            crate::config::FaultKind::DropConn => {
+                self.up.sabotage(f.kind);
+                bail!(
+                    "fault injection: worker {w} dropped its connections at epoch {epoch}, \
+                     batch {bi}"
+                )
+            }
+            crate::config::FaultKind::Stall => {
+                // Go silent first, then wedge well past the leader's
+                // deadline: the epoch must end because the *leader*
+                // declared this rank dead, not because it erred out.
+                self.up.sabotage(f.kind);
+                let wedge_ms = train.hb_timeout_ms * 2 + 4 * train.hb_interval_ms;
+                std::thread::sleep(std::time::Duration::from_millis(wedge_ms));
+                bail!(
+                    "fault injection: worker {w} stalled past the {}ms heartbeat timeout \
+                     at epoch {epoch}, batch {bi}",
+                    train.hb_timeout_ms
+                )
+            }
+        }
+    }
 }
 
 impl<EU: Transport<()>, ED: Transport<()>> Hub<(), (), EU, ED> {

@@ -92,6 +92,13 @@ pub trait Transport<T> {
     fn send(&self, to: usize, payload: T) -> Result<()>;
     /// Receive the next message addressed to this rank, blocking.
     fn recv(&self) -> Result<Envelope<T>>;
+    /// Deterministic fault injection (`--fail`): make this endpoint
+    /// misbehave in the way `kind` names. Default no-op — the
+    /// in-process channels have no sockets to drop or heartbeats to
+    /// pause, and an `Exit` fault needs no transport help anywhere.
+    /// Only the TCP star overrides this; see
+    /// [`TcpChannel`](crate::net::TcpChannel).
+    fn sabotage(&self, _kind: crate::config::FaultKind) {}
 }
 
 impl<T, E: Transport<T>> Transport<T> for &E {
@@ -103,6 +110,9 @@ impl<T, E: Transport<T>> Transport<T> for &E {
     }
     fn recv(&self) -> Result<Envelope<T>> {
         (**self).recv()
+    }
+    fn sabotage(&self, kind: crate::config::FaultKind) {
+        (**self).sabotage(kind)
     }
 }
 

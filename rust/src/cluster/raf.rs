@@ -567,6 +567,7 @@ where
     for (bi, chunk) in batches.iter().enumerate() {
         cur.store(bi, Ordering::Relaxed);
         crate::obs::set_batch(bi as u64);
+        port.maybe_fault(&cfg.train, epoch, bi)?;
         // Batch i's forward needs batch i-1's updated weights: the
         // Ready release carries the current parameter snapshot.
         let snapshot = match recv_data(port, world)? {
@@ -751,6 +752,7 @@ where
                 next_ready += 1;
                 cur.store(bi, Ordering::Relaxed);
                 crate::obs::set_batch(bi as u64);
+                port.maybe_fault(&cfg.train, epoch, bi)?;
                 let chunk = &batches[bi];
                 let t0 = Instant::now();
                 let filter = partition_edge_filter(world.tree, mp, p);

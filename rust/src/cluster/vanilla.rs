@@ -487,6 +487,7 @@ where
     for (bi, chunk) in batches.iter().enumerate() {
         cur.store(bi, Ordering::Relaxed);
         crate::obs::set_batch(bi as u64);
+        port.maybe_fault(&cfg.train, epoch, bi)?;
         let (rbi, snapshot) = recv_ready(port, world)?;
         if rbi != bi {
             bail!("worker {w}: release for batch {rbi} arrived while expecting {bi}");
@@ -628,6 +629,7 @@ where
     for (bi, chunk) in batches.iter().enumerate() {
         cur.store(bi, Ordering::Relaxed);
         crate::obs::set_batch(bi as u64);
+        port.maybe_fault(&cfg.train, epoch, bi)?;
         let (rbi, snapshot) = recv_ready(port, world)?;
         if rbi != bi {
             bail!("worker {w}: release for batch {rbi} arrived while expecting {bi}");

@@ -115,6 +115,97 @@ impl TransportKind {
     }
 }
 
+/// What a deterministically injected fault does when it fires
+/// (`--fail rank:batch:kind[:epoch]`, see [`FaultSpec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The faulted rank's epoch errors out immediately (process exit
+    /// under `heta launch`; an epoch error under the loopback harness).
+    Exit,
+    /// The faulted rank pauses its heartbeats and wedges past the
+    /// leader's timeout, so recovery goes through failure *detection*
+    /// rather than a clean error.
+    Stall,
+    /// The faulted rank shuts down its sockets mid-epoch: both sides
+    /// see reader hangups instead of a protocol-level failure.
+    DropConn,
+    /// The faulted rank bit-flips the body of its next outbound TCP
+    /// frame; the receiver's total decode must reject it. The faulted
+    /// rank itself keeps running — this exercises the codec path.
+    CorruptFrame,
+}
+
+impl FaultKind {
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "exit" => Some(FaultKind::Exit),
+            "stall" => Some(FaultKind::Stall),
+            "drop-conn" => Some(FaultKind::DropConn),
+            "corrupt-frame" => Some(FaultKind::CorruptFrame),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Exit => "exit",
+            FaultKind::Stall => "stall",
+            FaultKind::DropConn => "drop-conn",
+            FaultKind::CorruptFrame => "corrupt-frame",
+        }
+    }
+}
+
+/// One deterministically injected fault: launch rank `rank` (1..=K —
+/// workers only; 0 is the leader and not a valid target) misbehaves the
+/// first time it reaches batch `batch` of epoch `epoch`. Parsed from
+/// `--fail rank:batch:kind[:epoch]`; the epoch field defaults to 0.
+/// Faults fire at most once per process, so a respawned rank (which is
+/// launched without `--fail`) runs clean.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub rank: usize,
+    pub batch: usize,
+    pub epoch: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultSpec {
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 && parts.len() != 4 {
+            bail!("--fail wants rank:batch:kind[:epoch], got {s:?}");
+        }
+        let rank: usize = parts[0]
+            .parse()
+            .with_context(|| format!("--fail rank {:?} is not a number", parts[0]))?;
+        if rank == 0 {
+            bail!("--fail rank must be a worker rank (1..=K); rank 0 is the leader");
+        }
+        let batch: usize = parts[1]
+            .parse()
+            .with_context(|| format!("--fail batch {:?} is not a number", parts[1]))?;
+        let kind = FaultKind::parse(parts[2]).with_context(|| {
+            format!(
+                "--fail kind {:?} is not one of exit|stall|drop-conn|corrupt-frame",
+                parts[2]
+            )
+        })?;
+        let epoch: usize = match parts.get(3) {
+            Some(e) => e
+                .parse()
+                .with_context(|| format!("--fail epoch {e:?} is not a number"))?,
+            None => 0,
+        };
+        Ok(FaultSpec {
+            rank,
+            batch,
+            epoch,
+            kind,
+        })
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub batch_size: usize,
@@ -176,6 +267,18 @@ pub struct TrainConfig {
     /// Zero-cost when off; losses are byte-identical either way —
     /// observability is passive.
     pub trace: bool,
+    /// Deterministic fault injection (CLI `--fail rank:batch:kind[:epoch]`,
+    /// default none): the named worker rank misbehaves the first time it
+    /// reaches that batch of that epoch. Test/CI plumbing — never set in
+    /// config files, and ignored outside the cluster runtime.
+    pub fail: Option<FaultSpec>,
+    /// TCP heartbeat send period in milliseconds (workers → leader on
+    /// the reserved heartbeat lane; default 500).
+    pub hb_interval_ms: u64,
+    /// Leader-side heartbeat timeout in milliseconds (default 5000):
+    /// a worker silent this long is declared dead and its connection is
+    /// shut down, failing the epoch instead of hanging it.
+    pub hb_timeout_ms: u64,
 }
 
 impl TrainConfig {
@@ -267,6 +370,9 @@ impl Config {
                     .with_context(|| format!("unknown transport {name} (channel|tcp)"))?
             },
             trace: t.get("trace").as_bool().unwrap_or(false),
+            fail: None,
+            hb_interval_ms: t.get("hb_interval_ms").as_u64().unwrap_or(500),
+            hb_timeout_ms: t.get("hb_timeout_ms").as_u64().unwrap_or(5000),
         };
         if train.transport == TransportKind::Tcp {
             // Same guard (and wording) every tcp entry point shares.
@@ -585,6 +691,50 @@ mod tests {
         assert_eq!(cfg.train.runtime, RuntimeKind::Cluster);
         assert!(!cfg.train.pipeline);
         assert!(RuntimeKind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn parses_fault_specs() {
+        let f = FaultSpec::parse("1:2:exit").unwrap();
+        assert_eq!(
+            f,
+            FaultSpec {
+                rank: 1,
+                batch: 2,
+                epoch: 0,
+                kind: FaultKind::Exit
+            }
+        );
+        let f = FaultSpec::parse("2:0:drop-conn:1").unwrap();
+        assert_eq!(f.rank, 2);
+        assert_eq!(f.epoch, 1);
+        assert_eq!(f.kind, FaultKind::DropConn);
+        assert_eq!(FaultSpec::parse("1:3:stall").unwrap().kind, FaultKind::Stall);
+        assert_eq!(
+            FaultSpec::parse("1:3:corrupt-frame").unwrap().kind,
+            FaultKind::CorruptFrame
+        );
+        for bad in ["", "1:2", "1:2:explode", "x:2:exit", "1:y:exit", "1:2:exit:z", "0:2:exit"] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+        assert_eq!(FaultKind::Exit.name(), "exit");
+    }
+
+    #[test]
+    fn parses_heartbeat_knobs() {
+        let cfg = Config::from_json(&parse(TINY).unwrap()).unwrap();
+        assert_eq!(cfg.train.hb_interval_ms, 500);
+        assert_eq!(cfg.train.hb_timeout_ms, 5000);
+        assert!(cfg.train.fail.is_none(), "faults are CLI-only");
+        let text = r#"{
+            "name": "x",
+            "dataset": {"preset": "mag", "scale": 1e-4},
+            "model": {"arch": "rgcn", "hidden": 8, "fanouts": [2]},
+            "train": {"batch_size": 8, "hb_interval_ms": 100, "hb_timeout_ms": 400}
+        }"#;
+        let cfg = Config::from_json(&parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.train.hb_interval_ms, 100);
+        assert_eq!(cfg.train.hb_timeout_ms, 400);
     }
 
     #[test]

@@ -113,6 +113,49 @@ impl Engine {
     }
 }
 
+/// Checkpoint/restore options threaded from the CLI
+/// (`--checkpoint-dir`, `--resume`) into the training loop.
+#[derive(Debug, Clone)]
+pub struct CkptOpts {
+    /// Directory the epoch-boundary checkpoint lives in.
+    pub dir: String,
+    /// Restore from an existing checkpoint before training. A missing
+    /// checkpoint file is not an error — the run starts fresh, so a
+    /// blanket `--resume` relaunch works on attempt one too.
+    pub resume: bool,
+}
+
+/// Restore `sess` from `opts.dir` when `--resume` asked for it.
+/// Returns the epoch training should start from (0 when no checkpoint
+/// applies). Every rank of a cluster restores — the leader for the
+/// real trajectory, workers so their learnable-feature replicas start
+/// consistent with the leader's store.
+fn resume_session(sess: &mut Session, ckpt: Option<&CkptOpts>) -> Result<usize> {
+    let Some(opts) = ckpt.filter(|o| o.resume) else {
+        return Ok(0);
+    };
+    match crate::ckpt::load(&opts.dir)? {
+        Some(ck) => {
+            crate::ckpt::restore(sess, &ck)?;
+            crate::log!(
+                Info,
+                "resumed from {} — continuing at epoch {}",
+                crate::ckpt::path(&opts.dir),
+                ck.epoch
+            );
+            Ok(ck.epoch)
+        }
+        None => {
+            crate::log!(
+                Info,
+                "--resume: no checkpoint at {} — starting fresh",
+                crate::ckpt::path(&opts.dir)
+            );
+            Ok(0)
+        }
+    }
+}
+
 /// CLI entry point: train `epochs` epochs with the named engine and
 /// return the merged report (stage times summed, loss from last epoch).
 pub fn run_training(
@@ -136,6 +179,23 @@ pub fn run_training_with(
     epochs: usize,
     net: crate::net::Backend,
 ) -> Result<EpochReport> {
+    run_training_ckpt(cfg, artifacts_dir, engine_name, epochs, net, None)
+}
+
+/// [`run_training_with`] plus checkpointing: with `ckpt` set, the run
+/// restores from the checkpoint first (under `--resume`) and the
+/// leader rewrites it at every epoch boundary, so a killed cluster
+/// relaunched with `--resume` replays the remaining epochs
+/// bit-for-bit. TCP worker ranks restore but never write — their
+/// stores are replicas of the leader's.
+pub fn run_training_ckpt(
+    cfg: &Config,
+    artifacts_dir: &str,
+    engine_name: &str,
+    epochs: usize,
+    net: crate::net::Backend,
+    ckpt: Option<&CkptOpts>,
+) -> Result<EpochReport> {
     let system = match SystemKind::parse(engine_name) {
         Some(s) => s,
         None => bail!(
@@ -145,9 +205,10 @@ pub fn run_training_with(
     let mut sess = Session::new(cfg, artifacts_dir)?;
     sess.net = net;
     let worker_rank = sess.net.is_tcp_worker();
+    let start_epoch = resume_session(&mut sess, ckpt)?;
     let mut engine = Engine::build(&mut sess, system)?;
     let mut total = EpochReport::default();
-    for ep in 0..epochs {
+    for ep in start_epoch..epochs.max(start_epoch) {
         let rep = engine.run_epoch(&mut sess, ep)?;
         if worker_rank {
             crate::log!(
@@ -168,6 +229,14 @@ pub fn run_training_with(
             );
         }
         total.absorb(&rep);
+        if let Some(opts) = ckpt {
+            if !worker_rank {
+                // The boundary snapshot records `ep + 1`: the next
+                // epoch a resumed run should execute.
+                let ck = crate::ckpt::capture(&sess, ep + 1);
+                crate::ckpt::save(&opts.dir, &ck)?;
+            }
+        }
     }
     Ok(total)
 }
@@ -251,6 +320,132 @@ pub fn run_loopback_tcp(
             (Ok(_), Some(we)) => Err(we),
         }
     })
+}
+
+/// One checkpointing attempt of a loopback TCP cluster: every rank
+/// restores from `ckpt_dir` (fresh start when no checkpoint exists
+/// yet), the leader rewrites the checkpoint at each epoch boundary,
+/// and heartbeat timing comes from the config's `hb_*` knobs. Returns
+/// the reports of every epoch the leader *completed* this attempt plus
+/// the error that stopped it, if any — the partial-progress shape the
+/// recovery loop in [`run_loopback_tcp_recovering`] needs.
+pub fn run_loopback_tcp_ckpt(
+    cfg: &Config,
+    artifacts_dir: &str,
+    system: SystemKind,
+    epochs: usize,
+    ckpt_dir: &str,
+) -> (Vec<EpochReport>, Option<anyhow::Error>) {
+    let mut cfg = cfg.clone();
+    cfg.train.runtime = crate::config::RuntimeKind::Cluster;
+    let cfg = &cfg;
+    let parts = cfg.train.num_partitions;
+    let hb = crate::net::tcp::HbCfg::from_train(&cfg.train);
+    let opts = CkptOpts { dir: ckpt_dir.to_string(), resume: true };
+    let listener = match std::net::TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => l,
+        Err(e) => return (Vec::new(), Some(anyhow::anyhow!("binding a loopback listener: {e}"))),
+    };
+    let addr = match listener.local_addr() {
+        Ok(a) => a.to_string(),
+        Err(e) => {
+            return (Vec::new(), Some(anyhow::anyhow!("reading the loopback address: {e}")))
+        }
+    };
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..parts)
+            .map(|w| {
+                let addr = addr.clone();
+                let opts = opts.clone();
+                s.spawn(move || -> Result<()> {
+                    let node = crate::net::tcp::dial_with(
+                        &addr,
+                        w,
+                        parts,
+                        crate::net::tcp::DIAL_TIMEOUT,
+                        hb,
+                    )?;
+                    let mut sess = Session::new(cfg, artifacts_dir)?;
+                    sess.net = crate::net::Backend::Tcp(node);
+                    let start = resume_session(&mut sess, Some(&opts))?;
+                    let mut engine = Engine::build(&mut sess, system)?;
+                    for ep in start..epochs.max(start) {
+                        engine.run_epoch(&mut sess, ep)?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        let mut reports: Vec<EpochReport> = Vec::new();
+        let led: Result<()> = (|| {
+            let node = crate::net::tcp::accept_workers_with(listener, parts, hb)?;
+            let mut sess = Session::new(cfg, artifacts_dir)?;
+            sess.net = crate::net::Backend::Tcp(node);
+            let start = resume_session(&mut sess, Some(&opts))?;
+            let mut engine = Engine::build(&mut sess, system)?;
+            for ep in start..epochs.max(start) {
+                let rep = engine.run_epoch(&mut sess, ep)?;
+                reports.push(rep);
+                let ck = crate::ckpt::capture(&sess, ep + 1);
+                crate::ckpt::save(&opts.dir, &ck)?;
+            }
+            Ok(())
+        })();
+        let mut worker_err: Option<anyhow::Error> = None;
+        for (w, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if worker_err.is_none() {
+                        worker_err = Some(e.context(format!("loopback worker rank {w}")));
+                    }
+                }
+                Err(_) => {
+                    if worker_err.is_none() {
+                        worker_err = Some(anyhow::anyhow!("loopback worker rank {w} panicked"));
+                    }
+                }
+            }
+        }
+        (reports, led.err().or(worker_err))
+    })
+}
+
+/// Kill-and-recover driver over [`run_loopback_tcp_ckpt`]: run the
+/// cluster, and on failure clear the injected fault spec (it fired;
+/// the respawned cluster must run clean, exactly like `heta launch`
+/// dropping `--fail` on respawn) and relaunch resuming from the last
+/// epoch-boundary checkpoint, up to `max_attempts` total attempts.
+/// The concatenation of the completed-epoch reports across attempts is
+/// the full trajectory — byte-identical to a fault-free run, which is
+/// precisely what `tests/test_fault_tolerance.rs` pins.
+pub fn run_loopback_tcp_recovering(
+    cfg: &Config,
+    artifacts_dir: &str,
+    system: SystemKind,
+    epochs: usize,
+    ckpt_dir: &str,
+    max_attempts: usize,
+) -> Result<Vec<EpochReport>> {
+    let attempts = max_attempts.max(1);
+    let mut cfg = cfg.clone();
+    let mut reports: Vec<EpochReport> = Vec::new();
+    for attempt in 1..=attempts {
+        let (mut got, err) =
+            run_loopback_tcp_ckpt(&cfg, artifacts_dir, system, epochs, ckpt_dir);
+        reports.append(&mut got);
+        let Some(e) = err else { return Ok(reports) };
+        if attempt == attempts {
+            return Err(e.context(format!("cluster still failing after {attempts} attempts")));
+        }
+        crate::log!(
+            Warn,
+            "cluster attempt {attempt} failed ({e:#}); recovering from {}",
+            crate::ckpt::path(ckpt_dir)
+        );
+        cfg.train.fail = None;
+    }
+    bail!("recovery loop needs at least one attempt")
 }
 
 /// Bench/report helper: load `configs/<name>.json`, build the engine for

@@ -247,6 +247,84 @@ impl FeatureStore {
             }
         }
     }
+
+    /// Export every learnable table's full resumable state — weights
+    /// **and** Adam moments, `(type, weight, m, v)` sorted by type.
+    /// Checkpoints carry the moments because a resumed sparse-Adam step
+    /// must reproduce the fault-free trajectory bit-for-bit; the
+    /// [`StoreDelta`] replication path deliberately does not (worker
+    /// marshals only ever read weights).
+    pub fn export_learnable(&self) -> Vec<LearnableState> {
+        self.tables
+            .iter()
+            .enumerate()
+            .filter_map(|(ty, t)| match t {
+                Table::Learnable { weight, adam_m, adam_v } => Some(LearnableState {
+                    ty,
+                    weight: weight.clone(),
+                    m: adam_m.clone(),
+                    v: adam_v.clone(),
+                }),
+                Table::Lazy { .. } => None,
+            })
+            .collect()
+    }
+
+    /// Replace the learnable tables with a previously exported state
+    /// (checkpoint restore). Every learnable type of this store must be
+    /// present with exactly its `count x dim` elements; lazy types are
+    /// seed-derived and never checkpointed. Errors name the offending
+    /// type — a mismatch means the checkpoint came from a different
+    /// graph/config than this session's.
+    pub fn restore_learnable(&mut self, state: &[LearnableState]) -> Result<()> {
+        for st in state {
+            let ty = st.ty;
+            ensure!(
+                ty < self.tables.len(),
+                "checkpointed learnable type {ty} out of range ({} types)",
+                self.tables.len()
+            );
+            let n = self.counts[ty] * self.dims[ty];
+            ensure!(
+                st.weight.len() == n && st.m.len() == n && st.v.len() == n,
+                "checkpointed learnable type {ty}: {} weights / {} m / {} v, \
+                 but this graph holds {n} elements ({} rows x dim {})",
+                st.weight.len(),
+                st.m.len(),
+                st.v.len(),
+                self.counts[ty],
+                self.dims[ty]
+            );
+            match &mut self.tables[ty] {
+                Table::Learnable { weight, adam_m, adam_v } => {
+                    weight.copy_from_slice(&st.weight);
+                    adam_m.copy_from_slice(&st.m);
+                    adam_v.copy_from_slice(&st.v);
+                }
+                Table::Lazy { .. } => {
+                    bail!("checkpointed learnable type {ty} is lazy (read-only) in this config")
+                }
+            }
+        }
+        let restored: std::collections::BTreeSet<usize> = state.iter().map(|s| s.ty).collect();
+        for ty in 0..self.tables.len() {
+            ensure!(
+                !self.is_learnable(ty) || restored.contains(&ty),
+                "learnable type {ty} missing from the checkpoint"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One learnable table's full resumable state (weights + Adam moments),
+/// exported at epoch boundaries into checkpoints (see [`crate::ckpt`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LearnableState {
+    pub ty: usize,
+    pub weight: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
 }
 
 /// The learnable rows one update stage changed, with their

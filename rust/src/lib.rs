@@ -103,6 +103,7 @@ pub mod optim;
 pub mod metrics;
 pub mod config;
 pub mod runtime;
+pub mod ckpt;
 pub mod exec;
 pub mod net;
 pub mod obs;

@@ -45,9 +45,15 @@ fn main() -> Result<()> {
                  \x20          [--runtime sequential|cluster] [--no-pipeline]\n\
                  \x20          [--no-dedup-fetch] [--shared-session] [--staleness N]\n\
                  \x20          [--transport channel|tcp --rank R --peers host:port[,...]]\n\
+                 \x20          [--checkpoint-dir dir] [--resume]\n\
+                 \x20          [--hb-interval-ms N] [--hb-timeout-ms N]\n\
+                 \x20          [--fail rank:batch:kind[:epoch]]  (kind: exit|stall|\n\
+                 \x20          drop-conn|corrupt-frame; rank 1..=K)\n\
                  \x20          [--trace [out.json]] [--log-level error|warn|info|debug]\n\
-                 launch     [-n K] [--port P] + train options: spawn leader + K\n\
-                 \x20          worker processes over loopback TCP and reap them\n\
+                 launch     [-n K] [--port P] [--max-restarts R] + train options:\n\
+                 \x20          spawn leader + K worker processes over loopback TCP,\n\
+                 \x20          reap them, and (with --checkpoint-dir) respawn the\n\
+                 \x20          cluster with --resume after a rank dies\n\
                  info"
             );
             Ok(())
@@ -160,6 +166,28 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.train.transport = TransportKind::parse(t)
             .with_context(|| format!("unknown transport '{t}' (channel|tcp)"))?;
     }
+    if let Some(s) = args.get("fail") {
+        // Deterministic fault injection: every rank receives the same
+        // spec and only the rank it names fires (see FaultSpec).
+        cfg.train.fail = Some(heta::config::FaultSpec::parse(s)?);
+    }
+    if let Some(v) = args.get("hb-interval-ms") {
+        cfg.train.hb_interval_ms = v
+            .parse()
+            .with_context(|| format!("--hb-interval-ms expects milliseconds, got '{v}'"))?;
+    }
+    if let Some(v) = args.get("hb-timeout-ms") {
+        cfg.train.hb_timeout_ms = v
+            .parse()
+            .with_context(|| format!("--hb-timeout-ms expects milliseconds, got '{v}'"))?;
+    }
+    let ckpt = args.get("checkpoint-dir").map(|d| heta::coordinator::CkptOpts {
+        dir: d.to_string(),
+        resume: args.has_flag("resume"),
+    });
+    if args.has_flag("resume") && ckpt.is_none() {
+        bail!("--resume needs --checkpoint-dir <dir> to resume from");
+    }
     let level = args.get_or("log-level", "info");
     heta::obs::set_log_level(
         heta::obs::LogLevel::parse(&level)
@@ -205,11 +233,18 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .filter(|a| !a.is_empty())
                 .context("--peers must name the leader's host:port first")?;
             heta::obs::set_log_rank(rank as i64);
+            let hb = heta::net::tcp::HbCfg::from_train(&cfg.train);
             let node = if rank == 0 {
                 heta::log!(Info, "leader: listening on {leader_addr} for {parts} workers");
-                heta::net::tcp::listen(leader_addr, parts)?
+                heta::net::tcp::listen_with(leader_addr, parts, hb)?
             } else {
-                heta::net::tcp::dial(leader_addr, rank - 1, parts, heta::net::tcp::DIAL_TIMEOUT)?
+                heta::net::tcp::dial_with(
+                    leader_addr,
+                    rank - 1,
+                    parts,
+                    heta::net::tcp::DIAL_TIMEOUT,
+                    hb,
+                )?
             };
             heta::net::Backend::Tcp(node)
         }
@@ -218,8 +253,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     let epochs = args.get_usize("epochs", 1);
     let artifacts = args.get_or("artifacts", &format!("artifacts/{}", cfg.name));
     let worker_rank = backend.is_tcp_worker();
-    let report =
-        heta::coordinator::run_training_with(&cfg, &artifacts, &engine, epochs, backend)?;
+    let report = heta::coordinator::run_training_ckpt(
+        &cfg,
+        &artifacts,
+        &engine,
+        epochs,
+        backend,
+        ckpt.as_ref(),
+    )?;
     if worker_rank {
         // Worker ranks own no trajectory (their reports carry wire
         // traffic only); the leader prints the real summary.
@@ -248,10 +289,80 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// How long surviving ranks get to unwind on their own after the first
+/// rank of an attempt fails, before the launcher kills them. Normally
+/// hangup-as-error and the heartbeat timeout tear the cluster down in
+/// well under this; the kill is the backstop that keeps `heta launch`
+/// from ever hanging on a wedged rank.
+const REAP_GRACE: std::time::Duration = std::time::Duration::from_secs(15);
+
+/// Poll every child until all have exited; returns the ranks that
+/// exited nonzero (sorted). On the first failure the survivors get
+/// [`REAP_GRACE`] to unwind through the transport's hangup-as-error
+/// semantics, then whatever is left is killed and counted failed.
+fn reap_cluster(children: &mut [(usize, std::process::Child)]) -> Result<Vec<usize>> {
+    let mut failed: Vec<usize> = Vec::new();
+    let mut done = vec![false; children.len()];
+    let mut live = children.len();
+    let mut first_failure: Option<std::time::Instant> = None;
+    while live > 0 {
+        for (i, (rank, child)) in children.iter_mut().enumerate() {
+            if done[i] {
+                continue;
+            }
+            let polled = child
+                .try_wait()
+                .with_context(|| format!("waiting on rank {rank}"))?;
+            if let Some(status) = polled {
+                done[i] = true;
+                live -= 1;
+                if !status.success() {
+                    heta::log!(Error, "launch: rank {rank} exited with {status}");
+                    failed.push(*rank);
+                    first_failure.get_or_insert_with(std::time::Instant::now);
+                }
+            }
+        }
+        if live == 0 {
+            break;
+        }
+        if let Some(t0) = first_failure {
+            if t0.elapsed() > REAP_GRACE {
+                for (i, (rank, child)) in children.iter_mut().enumerate() {
+                    if done[i] {
+                        continue;
+                    }
+                    heta::log!(
+                        Error,
+                        "launch: rank {rank} still running {}s after the first failure — killing it",
+                        REAP_GRACE.as_secs()
+                    );
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    done[i] = true;
+                    live -= 1;
+                    failed.push(*rank);
+                }
+                break;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    failed.sort_unstable();
+    Ok(failed)
+}
+
 /// Spawn a local TCP cluster of this very binary — one leader plus `K`
 /// worker processes on a loopback port — forward the training flags to
 /// every rank, and reap them. The multi-machine path is the same
 /// `train --transport tcp` invocation with real hostnames.
+///
+/// With `--checkpoint-dir`, the launcher is also the recovery
+/// supervisor: when any rank dies, the remaining ranks are reaped
+/// (killed past a grace window), and the whole cluster is respawned
+/// with `--resume` — and without `--fail`, so an injected fault fires
+/// exactly once — resuming from the last epoch-boundary checkpoint.
+/// `--max-restarts R` caps the respawns (default 2).
 fn cmd_launch(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let parts = cfg.train.num_partitions;
@@ -273,11 +384,10 @@ fn cmd_launch(args: &Args) -> Result<()> {
         "launch -n {n} but the config trains {parts} partitions — set \
          train.num_partitions = {n} (every rank derives its role from the config)"
     );
-    let port = match args.get_usize("port", 0) {
+    let base_port = match args.get_usize("port", 0) {
         0 => 20000 + (std::process::id() as usize % 20000), // avoid collisions between runs
         p => p,
     };
-    let addr = format!("127.0.0.1:{port}");
     let exe = std::env::current_exe().context("resolving the heta binary path")?;
 
     let mut forwarded: Vec<String> = vec![
@@ -286,10 +396,19 @@ fn cmd_launch(args: &Args) -> Result<()> {
         "tcp".into(),
         "--runtime".into(),
         "cluster".into(),
-        "--peers".into(),
-        addr.clone(),
     ];
-    for key in ["config", "engine", "epochs", "artifacts", "staleness", "trace", "log-level"] {
+    for key in [
+        "config",
+        "engine",
+        "epochs",
+        "artifacts",
+        "staleness",
+        "trace",
+        "log-level",
+        "checkpoint-dir",
+        "hb-interval-ms",
+        "hb-timeout-ms",
+    ] {
         if let Some(v) = args.get(key) {
             forwarded.push(format!("--{key}"));
             forwarded.push(v.to_string());
@@ -306,36 +425,72 @@ fn cmd_launch(args: &Args) -> Result<()> {
                 .with_context(|| format!("unknown log level '{lvl}' (error|warn|info|debug)"))?,
         );
     }
+    let fail_spec = args.get("fail").map(str::to_string);
+    if let Some(s) = &fail_spec {
+        // Validate here so a typo fails the launcher, not K+1 children.
+        heta::config::FaultSpec::parse(s)?;
+    }
+    let recovery = args.get("checkpoint-dir").is_some();
+    ensure!(
+        fail_spec.is_none() || recovery,
+        "--fail without --checkpoint-dir would kill the cluster with no way back — \
+         add --checkpoint-dir <dir> so the launcher can recover it"
+    );
+    let max_attempts = if recovery { args.get_usize("max-restarts", 2) + 1 } else { 1 };
 
-    heta::log!(Info, "launch: {} ranks (leader + {n} workers) on {addr}", n + 1);
-    let mut children = Vec::with_capacity(n + 1);
-    for rank in 0..=n {
-        let child = std::process::Command::new(&exe)
-            .args(&forwarded)
-            .arg("--rank")
-            .arg(rank.to_string())
-            .spawn()
-            .with_context(|| format!("spawning rank {rank}"))?;
-        heta::log!(Info, "launch: rank {rank} -> pid {}", child.id());
-        children.push((rank, child));
-    }
-    // Reap every rank. A crashed worker unblocks the others through the
-    // transport's hangup-as-error semantics, so plain waits suffice.
-    let mut failed: Vec<usize> = Vec::new();
-    for (rank, mut child) in children {
-        let status = child
-            .wait()
-            .with_context(|| format!("waiting on rank {rank}"))?;
-        if !status.success() {
-            heta::log!(Error, "launch: rank {rank} exited with {status}");
-            failed.push(rank);
+    for attempt in 1..=max_attempts {
+        // A fresh port per attempt: the previous leader's accepted
+        // connections linger in TIME_WAIT on the old port, and the
+        // respawned leader must bind immediately.
+        let addr = format!("127.0.0.1:{}", base_port + attempt - 1);
+        let mut argv = forwarded.clone();
+        argv.push("--peers".into());
+        argv.push(addr.clone());
+        if attempt == 1 {
+            if args.has_flag("resume") {
+                argv.push("--resume".into());
+            }
+            if let Some(s) = &fail_spec {
+                argv.push("--fail".into());
+                argv.push(s.clone());
+            }
+        } else {
+            // Respawn resumes from the checkpoint and drops the fault
+            // spec — an injected fault fires exactly once per launch.
+            argv.push("--resume".into());
         }
+        heta::log!(
+            Info,
+            "launch: attempt {attempt}/{max_attempts}: {} ranks (leader + {n} workers) on {addr}",
+            n + 1
+        );
+        let mut children = Vec::with_capacity(n + 1);
+        for rank in 0..=n {
+            let child = std::process::Command::new(&exe)
+                .args(&argv)
+                .arg("--rank")
+                .arg(rank.to_string())
+                .spawn()
+                .with_context(|| format!("spawning rank {rank}"))?;
+            heta::log!(Info, "launch: rank {rank} -> pid {}", child.id());
+            children.push((rank, child));
+        }
+        let failed = reap_cluster(&mut children)?;
+        if failed.is_empty() {
+            heta::log!(Info, "launch: all {} ranks exited cleanly", n + 1);
+            return Ok(());
+        }
+        if attempt == max_attempts {
+            bail!("launch: rank(s) {failed:?} failed — see their output above");
+        }
+        let backoff = 250u64 << (attempt - 1);
+        heta::log!(
+            Warn,
+            "launch: rank(s) {failed:?} failed; respawning with --resume in {backoff} ms"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(backoff));
     }
-    if !failed.is_empty() {
-        bail!("launch: rank(s) {failed:?} failed — see their output above");
-    }
-    heta::log!(Info, "launch: all {} ranks exited cleanly", n + 1);
-    Ok(())
+    bail!("launch: no attempts were made (max-restarts underflow)")
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

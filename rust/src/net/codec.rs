@@ -41,8 +41,11 @@ use crate::runtime::ParamSnapshot;
 /// Version of the message layouts below, exchanged in the transport
 /// handshake. Peers with different versions refuse to connect instead
 /// of mis-decoding each other. v2: `Up::Obs` trace blobs on the stats
-/// path and a leader timestamp in the handshake reply (PR 6).
-pub const CODEC_VERSION: u16 = 2;
+/// path and a leader timestamp in the handshake reply (PR 6). v3: the
+/// reserved heartbeat lane (`tcp::LANE_HB`) and the checkpoint file
+/// format of [`crate::ckpt`], which stamps this version into its
+/// header (PR 7).
+pub const CODEC_VERSION: u16 = 3;
 
 /// A message that can be encoded onto / decoded from a wire frame.
 pub trait WireCodec: Sized {

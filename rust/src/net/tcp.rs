@@ -46,7 +46,7 @@
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::marker::PhantomData;
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -54,17 +54,25 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::cluster::mailbox::{Envelope, Transport, Wire};
+use crate::config::FaultKind;
 
 use super::codec::{decode_message, encode_message, WireCodec, CODEC_VERSION};
 use super::WireTraffic;
 
 /// Typed lanes multiplexed over each connection. Both engines use the
-/// same four slots (one engine runs per process).
+/// same four data/barrier slots (one engine runs per process); the
+/// fifth lane is reserved for liveness.
 pub const LANE_DATA_UP: u8 = 0;
 pub const LANE_DATA_DOWN: u8 = 1;
 pub const LANE_BARRIER_UP: u8 = 2;
 pub const LANE_BARRIER_DOWN: u8 = 3;
-const NUM_LANES: usize = 4;
+/// Reserved heartbeat lane (PR 7): workers write an empty frame here
+/// every [`HbCfg::interval_ms`]; the leader's reader swallows it after
+/// stamping the connection's last-heard clock. Heartbeat frames never
+/// reach a lane queue and never touch the traffic counters — liveness
+/// is not traffic.
+pub const LANE_HB: u8 = 4;
+const NUM_LANES: usize = 5;
 
 /// Refuse frames beyond this size: a corrupt length prefix must not
 /// drive a multi-GiB allocation. Generous next to any real message
@@ -76,6 +84,39 @@ const MAGIC: [u8; 4] = *b"HETA";
 /// How long a worker keeps re-dialing a leader that has not bound its
 /// listen address yet (`heta launch` starts all ranks at once).
 pub const DIAL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Heartbeat timing of one star (`train.hb_interval_ms` /
+/// `train.hb_timeout_ms`). Workers send an empty [`LANE_HB`] frame
+/// every `interval_ms`; the leader declares a worker dead after
+/// `timeout_ms` of total silence (any frame counts — a worker busy
+/// shipping data needs no separate proof of life) and shuts the
+/// connection down, turning a silent wedge into an ordinary hangup
+/// error on every blocked lane. Either knob at 0 disables its side —
+/// useful for tests that want a star without background timers.
+#[derive(Debug, Clone, Copy)]
+pub struct HbCfg {
+    pub interval_ms: u64,
+    pub timeout_ms: u64,
+}
+
+impl Default for HbCfg {
+    fn default() -> HbCfg {
+        HbCfg {
+            interval_ms: 500,
+            timeout_ms: 5000,
+        }
+    }
+}
+
+impl HbCfg {
+    /// Heartbeat knobs of a config.
+    pub fn from_train(t: &crate::config::TrainConfig) -> HbCfg {
+        HbCfg {
+            interval_ms: t.hb_interval_ms,
+            timeout_ms: t.hb_timeout_ms,
+        }
+    }
+}
 
 /// Shared byte/frame counters of one node (all lanes, all peers).
 #[derive(Default)]
@@ -117,11 +158,23 @@ struct NodeShared {
     rank: usize,
     workers: usize,
     /// Writer per logical peer rank (`None` where the star has no link,
-    /// e.g. worker↔worker).
-    peers: Vec<Option<PeerConn>>,
+    /// e.g. worker↔worker). `Arc` so the heartbeat-sender thread can
+    /// hold the leader connection without keeping the whole node (and
+    /// its teardown `Drop`) alive.
+    peers: Vec<Option<Arc<PeerConn>>>,
     /// Per-lane frame queues, taken once by [`TcpNode::open_lane`].
     lane_rx: Mutex<Vec<Option<Receiver<LaneFrame>>>>,
     counters: Arc<Counters>,
+    /// Node teardown flag: the heartbeat sender and monitor threads
+    /// exit their sleep loops once this is set.
+    closed: Arc<AtomicBool>,
+    /// Fault injection ([`FaultKind::Stall`]): a stalled worker stops
+    /// proving liveness, so the leader's timeout — not a clean error —
+    /// detects it.
+    hb_paused: Arc<AtomicBool>,
+    /// Fault injection ([`FaultKind::CorruptFrame`]): the next outbound
+    /// frame's body gets a bit flipped before it hits the wire.
+    corrupt_next: AtomicBool,
     /// Raw handles for teardown: shutting the sockets down unblocks the
     /// reader threads (which hold fd clones that would otherwise keep
     /// the connections alive forever).
@@ -130,6 +183,7 @@ struct NodeShared {
 
 impl Drop for NodeShared {
     fn drop(&mut self) {
+        self.closed.store(true, Ordering::SeqCst);
         for s in &self.raw {
             let _ = s.shutdown(Shutdown::Both);
         }
@@ -192,6 +246,30 @@ impl TcpNode {
             _payload: PhantomData,
         })
     }
+
+    /// Tear the node's connections down now (fault injection / early
+    /// shutdown): every blocked peer sees an ordinary hangup error.
+    pub fn shutdown(&self) {
+        self.shared.closed.store(true, Ordering::SeqCst);
+        for s in &self.shared.raw {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Stop proving liveness (fault injection: [`FaultKind::Stall`]).
+    /// The node keeps its sockets; only the heartbeat sender goes
+    /// silent, so detection must come from the leader's timeout.
+    pub fn pause_heartbeats(&self) {
+        self.shared.hb_paused.store(true, Ordering::SeqCst);
+    }
+
+    /// Bit-flip the body of this node's next outbound frame (fault
+    /// injection: [`FaultKind::CorruptFrame`]). The framing stays
+    /// intact — the receiver's total decode, not the stream sync, must
+    /// catch it.
+    pub fn inject_corrupt_frame(&self) {
+        self.shared.corrupt_next.store(true, Ordering::SeqCst);
+    }
 }
 
 /// Mutex helper: these locks guard plain data, so a poisoned lock (a
@@ -238,7 +316,18 @@ impl<T: WireCodec + Wire> Transport<T> for TcpChannel<T> {
                     self.shared.rank
                 )
             })?;
-        let body = encode_message(&payload);
+        let mut body = encode_message(&payload);
+        if self.shared.corrupt_next.swap(false, Ordering::SeqCst) {
+            // Fault injection: flip the tag/top bit so the receiver's
+            // decode deterministically rejects the frame (an unknown
+            // enum tag), or append trailing garbage when the body is
+            // empty. The frame header stays valid — the stream must not
+            // desync, the *message* must fail its total decode.
+            match body.first_mut() {
+                Some(b) => *b ^= 0x80,
+                None => body.push(0xFF),
+            }
+        }
         // Check before the u32 cast: a >= 4 GiB body must not wrap into
         // a small length that desyncs the stream.
         ensure!(
@@ -304,6 +393,30 @@ impl<T: WireCodec + Wire> Transport<T> for TcpChannel<T> {
             payload,
         })
     }
+
+    /// Deterministic fault injection on the real transport: the
+    /// in-process channel transport has nothing to sabotage (its trait
+    /// default is a no-op), but over TCP the kinds map to real
+    /// machinery — see [`FaultKind`].
+    fn sabotage(&self, kind: FaultKind) {
+        match kind {
+            // A process exit needs no socket help: the faulted rank
+            // bails out of its epoch and its teardown closes the star.
+            FaultKind::Exit => {}
+            FaultKind::Stall => {
+                self.shared.hb_paused.store(true, Ordering::SeqCst);
+            }
+            FaultKind::DropConn => {
+                self.shared.closed.store(true, Ordering::SeqCst);
+                for s in &self.shared.raw {
+                    let _ = s.shutdown(Shutdown::Both);
+                }
+            }
+            FaultKind::CorruptFrame => {
+                self.shared.corrupt_next.store(true, Ordering::SeqCst);
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -342,9 +455,19 @@ fn configure(stream: &TcpStream) -> Result<()> {
 }
 
 /// Finish building a node over its established connections:
-/// `conns[i] = (peer logical rank, stream)`.
-fn build_node(rank: usize, workers: usize, conns: Vec<(usize, TcpStream)>) -> Result<TcpNode> {
+/// `conns[i] = (peer logical rank, stream)`. Besides the per-connection
+/// reader threads this spawns the liveness machinery of `hb`: workers
+/// get a heartbeat-sender thread toward the leader, the leader gets one
+/// monitor thread watching every connection's last-heard clock.
+fn build_node(
+    rank: usize,
+    workers: usize,
+    conns: Vec<(usize, TcpStream)>,
+    hb: HbCfg,
+) -> Result<TcpNode> {
     let counters = Arc::new(Counters::default());
+    let closed = Arc::new(AtomicBool::new(false));
+    let hb_paused = Arc::new(AtomicBool::new(false));
     let (lane_tx, lane_rx): (Vec<Sender<LaneFrame>>, Vec<Option<Receiver<LaneFrame>>>) = (0
         ..NUM_LANES)
         .map(|_| {
@@ -352,21 +475,98 @@ fn build_node(rank: usize, workers: usize, conns: Vec<(usize, TcpStream)>) -> Re
             (tx, Some(rx))
         })
         .unzip();
-    let mut peers: Vec<Option<PeerConn>> = (0..workers + 1).map(|_| None).collect();
+    let is_leader = rank == workers;
+    let mut peers: Vec<Option<Arc<PeerConn>>> = (0..workers + 1).map(|_| None).collect();
     let mut raw = Vec::with_capacity(conns.len());
+    // (peer rank, shutdown handle, last-heard clock, timed-out flag) per
+    // connection the leader's monitor thread watches.
+    let mut watch: Vec<(usize, TcpStream, Arc<AtomicU64>, Arc<AtomicBool>)> = Vec::new();
     for (peer, stream) in conns {
         ensure!(peers[peer].is_none(), "duplicate connection from rank {peer}");
         let read_half = stream.try_clone().context("cloning the socket read half")?;
         raw.push(stream.try_clone().context("cloning the shutdown handle")?);
+        let last_heard = Arc::new(AtomicU64::new(crate::obs::now_us()));
+        let timed_out = Arc::new(AtomicBool::new(false));
+        if is_leader && hb.timeout_ms > 0 {
+            watch.push((
+                peer,
+                stream.try_clone().context("cloning the monitor handle")?,
+                Arc::clone(&last_heard),
+                Arc::clone(&timed_out),
+            ));
+        }
         let senders: Vec<Sender<LaneFrame>> = lane_tx.clone();
         let c = Arc::clone(&counters);
         std::thread::Builder::new()
             .name(format!("net-rx-{rank}-from-{peer}"))
-            .spawn(move || reader_loop(read_half, rank, peer, senders, c))
+            .spawn(move || reader_loop(read_half, rank, peer, senders, c, last_heard, timed_out))
             .context("spawning the connection reader thread")?;
-        peers[peer] = Some(PeerConn {
+        peers[peer] = Some(Arc::new(PeerConn {
             writer: Mutex::new(BufWriter::new(stream)),
-        });
+        }));
+    }
+    if is_leader && hb.timeout_ms > 0 {
+        let closed = Arc::clone(&closed);
+        let timeout_us = hb.timeout_ms.saturating_mul(1000);
+        let check_ms = hb.interval_ms.clamp(10, 500);
+        std::thread::Builder::new()
+            .name(format!("net-hb-monitor-{rank}"))
+            .spawn(move || {
+                while !closed.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(check_ms));
+                    for (peer, stream, last_heard, timed_out) in &watch {
+                        let silent = crate::obs::now_us()
+                            .saturating_sub(last_heard.load(Ordering::SeqCst));
+                        if silent > timeout_us && !timed_out.swap(true, Ordering::SeqCst) {
+                            crate::log!(
+                                Warn,
+                                "leader: declaring rank {peer} dead — silent for \
+                                 {silent}us (heartbeat timeout {}ms); shutting its \
+                                 connection down",
+                                timeout_us / 1000
+                            );
+                            let _ = stream.shutdown(Shutdown::Both);
+                        }
+                    }
+                }
+            })
+            .context("spawning the heartbeat monitor thread")?;
+    }
+    if !is_leader && hb.interval_ms > 0 {
+        // The sender holds only the leader connection + flags, so the
+        // node's teardown `Drop` (which sets `closed`) still runs when
+        // the last `TcpNode`/`TcpChannel` handle goes away.
+        let conn = Arc::clone(peers[workers].as_ref().ok_or_else(|| {
+            anyhow!("worker {rank} built without a leader connection")
+        })?);
+        let closed = Arc::clone(&closed);
+        let paused = Arc::clone(&hb_paused);
+        std::thread::Builder::new()
+            .name(format!("net-hb-sender-{rank}"))
+            .spawn(move || {
+                loop {
+                    std::thread::sleep(Duration::from_millis(hb.interval_ms));
+                    if closed.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if paused.load(Ordering::SeqCst) {
+                        continue;
+                    }
+                    // Raw empty frame on the reserved lane, skipping the
+                    // traffic counters on both ends: liveness is not
+                    // traffic, and exact frame counts stay meaningful.
+                    let mut w = lock(&conn.writer);
+                    let res = (|| -> std::io::Result<()> {
+                        w.write_all(&1u32.to_le_bytes())?;
+                        w.write_all(&[LANE_HB])?;
+                        w.flush()
+                    })();
+                    if res.is_err() {
+                        break; // connection gone; the reader reports it
+                    }
+                }
+            })
+            .context("spawning the heartbeat sender thread")?;
     }
     Ok(TcpNode {
         shared: Arc::new(NodeShared {
@@ -375,13 +575,17 @@ fn build_node(rank: usize, workers: usize, conns: Vec<(usize, TcpStream)>) -> Re
             peers,
             lane_rx: Mutex::new(lane_rx),
             counters,
+            closed,
+            hb_paused,
+            corrupt_next: AtomicBool::new(false),
             raw,
         }),
     })
 }
 
 /// Lane names for the reader-thread trace tracks, indexed by lane id.
-const RX_LANE_NAMES: [&str; NUM_LANES] = ["rx-lane0", "rx-lane1", "rx-lane2", "rx-lane3"];
+const RX_LANE_NAMES: [&str; NUM_LANES] =
+    ["rx-lane0", "rx-lane1", "rx-lane2", "rx-lane3", "rx-lane4"];
 
 /// Park this reader's recorded frame spans in the obs sink as one
 /// track; the next epoch-end [`crate::obs::TraceBlob::collect`] on
@@ -408,6 +612,8 @@ fn reader_loop(
     from: usize,
     senders: Vec<Sender<LaneFrame>>,
     counters: Arc<Counters>,
+    last_heard: Arc<AtomicU64>,
+    timed_out: Arc<AtomicBool>,
 ) {
     let mut r = BufReader::new(stream);
     // Frame spans recorded while the flight recorder is armed; the
@@ -435,6 +641,14 @@ fn reader_loop(
         let mut body = vec![0u8; len as usize - 1];
         if let Err(e) = r.read_exact(&mut body) {
             break format!("reading a {len}-byte frame from rank {from} failed: {e}");
+        }
+        // Every complete frame proves the peer alive — data counts as
+        // much as a dedicated heartbeat.
+        last_heard.store(crate::obs::now_us(), Ordering::SeqCst);
+        if lane[0] == LANE_HB {
+            // Liveness-only frame: swallowed here, no counters, no
+            // lane queue, no trace span.
+            continue;
         }
         counters.real_recv.fetch_add(4 + len as u64, Ordering::Relaxed);
         counters.frames_recv.fetch_add(1, Ordering::Relaxed);
@@ -467,6 +681,13 @@ fn reader_loop(
         });
     };
     flush_rx_events(rank, from, &mut rx_events);
+    // When the monitor killed this connection, the read error above is
+    // just the symptom; name the real cause on every lane.
+    let reason = if timed_out.load(Ordering::SeqCst) {
+        format!("rank {from} missed its heartbeat deadline and was declared dead ({reason})")
+    } else {
+        reason
+    };
     for tx in &senders {
         let _ = tx.send(LaneFrame {
             from,
@@ -477,9 +698,14 @@ fn reader_loop(
 
 /// Leader side: bind `addr` and accept every worker's dial-in.
 pub fn listen(addr: &str, workers: usize) -> Result<TcpNode> {
+    listen_with(addr, workers, HbCfg::default())
+}
+
+/// [`listen`] with explicit heartbeat timing.
+pub fn listen_with(addr: &str, workers: usize, hb: HbCfg) -> Result<TcpNode> {
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("leader binding the listen address {addr}"))?;
-    accept_workers(listener, workers)
+    accept_workers_with(listener, workers, hb)
 }
 
 /// How long a dialer gets to complete its handshake before the leader
@@ -503,6 +729,11 @@ pub const ACCEPT_TIMEOUT: Duration = Duration::from_secs(180);
 /// dialer sees EOF and errors on its side; only the listener socket
 /// itself failing aborts the cluster.
 pub fn accept_workers(listener: TcpListener, workers: usize) -> Result<TcpNode> {
+    accept_workers_with(listener, workers, HbCfg::default())
+}
+
+/// [`accept_workers`] with explicit heartbeat timing.
+pub fn accept_workers_with(listener: TcpListener, workers: usize, hb: HbCfg) -> Result<TcpNode> {
     ensure!(workers >= 1, "a star needs at least one worker rank");
     // Poll the listener against an overall deadline: `TcpListener` has
     // no accept timeout, and blocking forever on a worker that died
@@ -555,6 +786,7 @@ pub fn accept_workers(listener: TcpListener, workers: usize) -> Result<TcpNode> 
         workers,
         workers,
         conns.into_iter().flatten().collect(),
+        hb,
     )
 }
 
@@ -596,19 +828,38 @@ fn admit_worker(
     Ok(w)
 }
 
-/// Worker side: dial the leader (re-trying until `timeout`, since the
-/// launcher starts every rank at once), handshake, and build the node.
+/// Worker side: dial the leader, handshake, and build the node.
+///
+/// The connect re-tries with exponential backoff until `timeout`
+/// (bounded, never forever): `heta launch` starts every rank at once,
+/// so workers routinely dial before the leader listens — and a
+/// *respawned* rank dials while the old cluster is still tearing down.
+/// The handshake reply reads run under [`HANDSHAKE_TIMEOUT`] so a
+/// leader that accepts but never answers (wedged mid-teardown) errors
+/// out instead of hanging the worker forever.
 pub fn dial(
     leader_addr: &str,
     worker: usize,
     workers: usize,
     timeout: Duration,
 ) -> Result<TcpNode> {
+    dial_with(leader_addr, worker, workers, timeout, HbCfg::default())
+}
+
+/// [`dial`] with explicit heartbeat timing.
+pub fn dial_with(
+    leader_addr: &str,
+    worker: usize,
+    workers: usize,
+    timeout: Duration,
+    hb: HbCfg,
+) -> Result<TcpNode> {
     ensure!(
         worker < workers,
         "worker rank {worker} outside the {workers}-worker star"
     );
     let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(25);
     let mut stream = loop {
         match TcpStream::connect(leader_addr) {
             Ok(s) => break s,
@@ -619,7 +870,8 @@ pub fn dial(
                          within {timeout:?}: {e}"
                     );
                 }
-                std::thread::sleep(Duration::from_millis(50));
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(500));
             }
         }
     };
@@ -628,11 +880,18 @@ pub fn dial(
         .write_all(&handshake_bytes(worker as u16))
         .and_then(|_| stream.flush())
         .with_context(|| format!("worker {worker} sending its handshake"))?;
+    stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .context("arming the handshake-reply timeout")?;
     let leader_rank = read_handshake(&mut stream, &format!("leader {leader_addr}"))? as usize;
     let mut ts = [0u8; 8];
     stream
         .read_exact(&mut ts)
         .with_context(|| format!("reading the leader clock from {leader_addr}"))?;
+    // Back to blocking reads for the reader thread.
+    stream
+        .set_read_timeout(None)
+        .context("disarming the handshake-reply timeout")?;
     let leader_now = u64::from_le_bytes(ts);
     crate::obs::set_clock_offset(leader_now as i64 - crate::obs::now_us() as i64);
     ensure!(
@@ -640,7 +899,7 @@ pub fn dial(
         "leader at {leader_addr} runs a {leader_rank}-worker star, this rank expects \
          {workers} (mismatched --peers / num_partitions?)"
     );
-    build_node(worker, workers, vec![(workers, stream)])
+    build_node(worker, workers, vec![(workers, stream)], hb)
 }
 
 #[cfg(test)]
@@ -831,6 +1090,99 @@ mod tests {
             "mismatched star sizes must explain themselves: {err:#}"
         );
         drop(t); // leader side still waits for a second worker; abandon it
+    }
+
+    fn loopback_star_hb(workers: usize, hb: HbCfg) -> (TcpNode, Vec<TcpNode>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let dialers: Vec<_> = (0..workers)
+            .map(|w| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    dial_with(&addr, w, workers, DIAL_TIMEOUT, hb).unwrap()
+                })
+            })
+            .collect();
+        let leader = accept_workers_with(listener, workers, hb).unwrap();
+        let nodes = dialers.into_iter().map(|h| h.join().unwrap()).collect();
+        (leader, nodes)
+    }
+
+    #[test]
+    fn heartbeats_do_not_pollute_traffic_counters() {
+        let hb = HbCfg {
+            interval_ms: 10,
+            timeout_ms: 5000,
+        };
+        let (leader, mut workers) = loopback_star_hb(1, hb);
+        let hub_up: TcpChannel<Msg> = leader.open_lane(LANE_DATA_UP).unwrap();
+        let w = workers.pop().unwrap();
+        // Let a pile of heartbeats cross the wire: none of them may
+        // show up in the counters, which tests (and EpochReport.wire)
+        // treat as exact message counts.
+        std::thread::sleep(Duration::from_millis(150));
+        let t = leader.traffic();
+        assert_eq!(t.frames_recv, 0, "heartbeats must not count as frames: {t:?}");
+        assert_eq!(t.real_recv, 0, "heartbeats must not count as bytes: {t:?}");
+        let wc: TcpChannel<Msg> = w.open_lane(LANE_DATA_UP).unwrap();
+        wc.send(1, Msg { batch: 1, data: vec![2.0] }).unwrap();
+        assert_eq!(hub_up.recv().unwrap().payload.batch, 1);
+        assert_eq!(leader.traffic().frames_recv, 1);
+    }
+
+    #[test]
+    fn a_stalled_worker_is_declared_dead_by_heartbeat_timeout() {
+        let hb = HbCfg {
+            interval_ms: 25,
+            timeout_ms: 200,
+        };
+        let (leader, workers) = loopback_star_hb(1, hb);
+        let hub_up: TcpChannel<Msg> = leader.open_lane(LANE_DATA_UP).unwrap();
+        // The worker wedges: its process is alive (sockets open!) but it
+        // stops proving liveness. Only the timeout can catch this.
+        workers[0].pause_heartbeats();
+        let err = hub_up.recv().unwrap_err();
+        let text = format!("{err:#}");
+        assert!(
+            text.contains("heartbeat"),
+            "a timeout kill must name its cause: {text}"
+        );
+        assert!(text.contains("rank 0"), "and the dead peer: {text}");
+    }
+
+    #[test]
+    fn injected_frame_corruption_is_caught_by_total_decode() {
+        let (leader, mut workers) = loopback_star(1);
+        let hub_bar: TcpChannel<()> = leader.open_lane(LANE_BARRIER_UP).unwrap();
+        let w = workers.pop().unwrap();
+        let bar: TcpChannel<()> = w.open_lane(LANE_BARRIER_UP).unwrap();
+        bar.send(1, ()).unwrap();
+        hub_bar.recv().unwrap(); // clean frame first: the link works
+        bar.sabotage(FaultKind::CorruptFrame);
+        bar.send(1, ()).unwrap(); // the sender does not notice
+        let err = hub_bar.recv().unwrap_err();
+        let text = format!("{err:#}");
+        assert!(
+            text.contains("decoding"),
+            "a corrupted body must fail decode, not desync: {text}"
+        );
+        // The corruption was one-shot: the next frame is clean.
+        bar.send(1, ()).unwrap();
+        hub_bar.recv().unwrap();
+    }
+
+    #[test]
+    fn drop_conn_sabotage_hangs_up_every_lane() {
+        let (leader, mut workers) = loopback_star(1);
+        let hub_up: TcpChannel<Msg> = leader.open_lane(LANE_DATA_UP).unwrap();
+        let w = workers.pop().unwrap();
+        let wc: TcpChannel<Msg> = w.open_lane(LANE_DATA_UP).unwrap();
+        wc.sabotage(FaultKind::DropConn);
+        let err = hub_up.recv().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("rank 0"),
+            "the hangup must name the peer: {err:#}"
+        );
     }
 
     #[test]

@@ -19,7 +19,9 @@
 #![allow(dead_code)] // each test binary uses a subset of the harness
 
 use heta::config::Config;
-use heta::coordinator::{run_loopback_tcp, Engine, Session, SystemKind};
+use heta::coordinator::{
+    run_loopback_tcp, run_loopback_tcp_recovering, Engine, Session, SystemKind,
+};
 use heta::metrics::EpochReport;
 
 /// How a variant's epochs execute.
@@ -35,6 +37,14 @@ pub enum Runner {
     /// process-per-rank semantics of `heta launch`, minus the
     /// subprocess management.
     LoopbackTcp,
+    /// [`LoopbackTcp`](Runner::LoopbackTcp) under the kill-and-recover
+    /// supervisor (`heta::coordinator::run_loopback_tcp_recovering`):
+    /// epoch-boundary checkpoints to a per-variant temp dir, and when
+    /// the config's injected fault (`train.fail`) kills the cluster,
+    /// it is relaunched with the fault cleared, resuming from the
+    /// checkpoint. The concatenated reports must still be the full
+    /// `epochs`-long trajectory — that is the recovery contract.
+    ChaosTcp,
 }
 
 /// One cell of an equivalence matrix: a label for failure messages, a
@@ -62,6 +72,16 @@ pub fn variant_tcp(label: &str, tweak: impl Fn(&mut Config) + 'static) -> Varian
         label: label.to_string(),
         tweak: Box::new(tweak),
         runner: Runner::LoopbackTcp,
+    }
+}
+
+/// A variant that runs the loopback-TCP star under checkpointed
+/// kill-and-recover supervision; the tweak usually sets `train.fail`.
+pub fn variant_chaos(label: &str, tweak: impl Fn(&mut Config) + 'static) -> Variant {
+    Variant {
+        label: label.to_string(),
+        tweak: Box::new(tweak),
+        runner: Runner::ChaosTcp,
     }
 }
 
@@ -100,6 +120,31 @@ pub fn run_reports_on(
             cfg.train.transport = heta::config::TransportKind::Tcp;
             run_loopback_tcp(&cfg, &dir, system, epochs)
                 .unwrap_or_else(|e| panic!("[{label}] {system:?} loopback tcp: {e:#}"))
+        }
+        Runner::ChaosTcp => {
+            cfg.train.runtime = heta::config::RuntimeKind::Cluster;
+            cfg.train.transport = heta::config::TransportKind::Tcp;
+            // A private checkpoint dir per variant, wiped up front: a
+            // stale checkpoint from an earlier run would make the
+            // cluster skip epochs instead of training them.
+            let slug: String = label
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+                .collect();
+            let ckpt_dir = std::env::temp_dir()
+                .join(format!("heta-chaos-{slug}-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&ckpt_dir);
+            let ckpt_dir = ckpt_dir.to_string_lossy().into_owned();
+            let reports = run_loopback_tcp_recovering(&cfg, &dir, system, epochs, &ckpt_dir, 3)
+                .unwrap_or_else(|e| panic!("[{label}] {system:?} chaos tcp: {e:#}"));
+            assert_eq!(
+                reports.len(),
+                epochs,
+                "[{label}] {system:?} chaos tcp: recovery produced {} epoch reports, \
+                 expected {epochs} (an epoch was lost or duplicated across the restart)",
+                reports.len(),
+            );
+            reports
         }
     }
 }

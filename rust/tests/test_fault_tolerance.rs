@@ -1,0 +1,368 @@
+//! Fault tolerance (the PR-7 tentpole).
+//!
+//! Artifact-free half: checkpoint codec round-trip property tests over
+//! random parameter/learnable states (encode → decode must be
+//! bit-identical and canonical), file-level corruption properties
+//! (every truncation and every header flip is an `anyhow` error naming
+//! the file — never a panic), and the `--fail rank:batch:kind[:epoch]`
+//! spec grammar.
+//!
+//! Artifact-gated half (skipped until `make artifacts`): the recovery
+//! determinism bar. A loopback-TCP cluster whose worker is killed by an
+//! injected fault mid-epoch, then relaunched under the recovery
+//! supervisor resuming from the epoch-boundary checkpoint, must produce
+//! **byte-identical** per-batch losses to the fault-free run — for both
+//! engines, at staleness 0 and k = 1, and for every fault kind (clean
+//! exit, dropped sockets, a corrupted frame, a heartbeat-detected
+//! stall). Checked through the shared `tests/common` matrix.
+
+mod common;
+
+use heta::ckpt::{self, Checkpoint};
+use heta::config::{Config, FaultKind, FaultSpec};
+use heta::coordinator::{run_loopback_tcp, run_loopback_tcp_ckpt, SystemKind};
+use heta::kvstore::LearnableState;
+use heta::net::codec::{decode_message, encode_message};
+use heta::prop_assert;
+use heta::runtime::{ParamEntry, ParamStoreState};
+use heta::util::proptest;
+use heta::util::rng::Rng;
+
+use common::{variant_chaos, variant_tcp};
+
+// ---- artifact-free: the fault-spec grammar ----
+
+#[test]
+fn fault_specs_parse_and_reject() {
+    let f = FaultSpec::parse("1:2:exit").unwrap();
+    assert_eq!((f.rank, f.batch, f.epoch, f.kind), (1, 2, 0, FaultKind::Exit));
+    let f = FaultSpec::parse("2:0:drop-conn:1").unwrap();
+    assert_eq!((f.rank, f.batch, f.epoch, f.kind), (2, 0, 1, FaultKind::DropConn));
+    assert_eq!(FaultSpec::parse("1:3:stall").unwrap().kind, FaultKind::Stall);
+    assert_eq!(
+        FaultSpec::parse("1:3:corrupt-frame").unwrap().kind,
+        FaultKind::CorruptFrame
+    );
+    for bad in ["", "1:2", "1:2:explode", "x:2:exit", "1:y:exit", "1:2:exit:z", "0:2:exit"] {
+        assert!(FaultSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+    }
+}
+
+// ---- artifact-free: checkpoint codec properties ----
+
+fn random_f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.f32() * 8.0 - 4.0).collect()
+}
+
+fn random_name(rng: &mut Rng) -> String {
+    let n = 1 + rng.below(12);
+    (0..n)
+        .map(|_| char::from(b'a' + rng.below(26) as u8))
+        .collect()
+}
+
+fn random_checkpoint(rng: &mut Rng) -> Checkpoint {
+    let entries = (0..rng.below(4))
+        .map(|_| {
+            let n = rng.below(32);
+            ParamEntry {
+                name: random_name(rng),
+                shape: vec![n],
+                weight: random_f32s(rng, n),
+                m: random_f32s(rng, n),
+                v: random_f32s(rng, n),
+                t: rng.below(1000) as i32,
+            }
+        })
+        .collect();
+    let learnable = (0..rng.below(3))
+        .map(|_| {
+            let n = rng.below(24);
+            LearnableState {
+                ty: rng.below(5),
+                weight: random_f32s(rng, n),
+                m: random_f32s(rng, n),
+                v: random_f32s(rng, n),
+            }
+        })
+        .collect();
+    Checkpoint {
+        epoch: rng.below(100),
+        adam_t: rng.below(10_000) as i32,
+        config_hash: rng.next_u64(),
+        params: ParamStoreState {
+            version: rng.next_u64(),
+            entries,
+        },
+        learnable,
+    }
+}
+
+#[test]
+fn checkpoint_codec_round_trips_random_states() {
+    proptest::run("checkpoint round-trip", |rng, _case| {
+        let ck = random_checkpoint(rng);
+        let bytes = encode_message(&ck);
+        let back: Checkpoint = match decode_message(&bytes) {
+            Ok(b) => b,
+            Err(e) => return Err(format!("decode failed: {e:#}")),
+        };
+        prop_assert!(back == ck, "decoded checkpoint differs from the original");
+        prop_assert!(
+            encode_message(&back) == bytes,
+            "re-encoding the decoded checkpoint is not canonical"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn checkpoint_file_corruption_is_always_an_error_never_a_panic() {
+    let dir = format!(
+        "{}/heta-ft-corrupt-{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    proptest::run("checkpoint corruption totality", |rng, _case| {
+        let ck = random_checkpoint(rng);
+        if let Err(e) = ckpt::save(&dir, &ck) {
+            return Err(format!("save failed: {e:#}"));
+        }
+        let p = ckpt::path(&dir);
+        let good = std::fs::read(&p).map_err(|e| format!("reading {p}: {e}"))?;
+
+        // Any truncation is an error naming the file.
+        let cut = rng.below(good.len());
+        std::fs::write(&p, &good[..cut]).map_err(|e| e.to_string())?;
+        match ckpt::load(&dir) {
+            Ok(_) => return Err(format!("truncation at {cut}/{} was accepted", good.len())),
+            Err(e) => prop_assert!(
+                format!("{e:#}").contains(&p),
+                "truncation error must name the file: {e:#}"
+            ),
+        }
+
+        // Any header flip (magic or version) is an error.
+        let mut bad = good.clone();
+        let hi = rng.below(6);
+        bad[hi] ^= 1 << rng.below(8);
+        if bad != good {
+            std::fs::write(&p, &bad).map_err(|e| e.to_string())?;
+            prop_assert!(
+                ckpt::load(&dir).is_err(),
+                "header flip at byte {hi} was accepted"
+            );
+        }
+
+        // A flip anywhere must never panic: either rejected, or decoded
+        // into some (different) checkpoint when the flip landed inside
+        // payload float data.
+        let mut bad = good.clone();
+        let bi = rng.below(bad.len());
+        bad[bi] ^= 1 << rng.below(8);
+        std::fs::write(&p, &bad).map_err(|e| e.to_string())?;
+        let _ = ckpt::load(&dir);
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- artifact-gated: kill-and-recover byte-identity ----
+
+const CFG: &str = "mag-tiny";
+const EPOCHS: usize = 2;
+
+/// The fault fires in epoch 1, so attempt one completes epoch 0 and
+/// writes its boundary checkpoint; recovery must genuinely restore and
+/// re-run epoch 1 rather than start over.
+const KILL: &str = "1:2:exit:1";
+
+#[test]
+fn kill_and_recover_byte_identical_raf() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::Heta,
+        EPOCHS,
+        &[
+            variant_tcp("tcp/fault-free/k0", |_| {}),
+            variant_chaos("tcp/kill-rank1/k0", |c| {
+                c.train.fail = Some(FaultSpec::parse(KILL).unwrap());
+            }),
+        ],
+    );
+}
+
+#[test]
+fn kill_and_recover_byte_identical_raf_staleness_1() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::Heta,
+        EPOCHS,
+        &[
+            variant_tcp("tcp/fault-free/k1", |c| {
+                c.train.staleness = 1;
+            }),
+            variant_chaos("tcp/kill-rank1/k1", |c| {
+                c.train.staleness = 1;
+                c.train.fail = Some(FaultSpec::parse(KILL).unwrap());
+            }),
+        ],
+    );
+}
+
+#[test]
+fn kill_and_recover_byte_identical_vanilla() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::DglMetis,
+        EPOCHS,
+        &[
+            variant_tcp("tcp/fault-free/k0", |_| {}),
+            variant_chaos("tcp/kill-rank1/k0", |c| {
+                c.train.fail = Some(FaultSpec::parse(KILL).unwrap());
+            }),
+        ],
+    );
+}
+
+#[test]
+fn kill_and_recover_byte_identical_vanilla_staleness_1() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::DglMetis,
+        EPOCHS,
+        &[
+            variant_tcp("tcp/fault-free/k1", |c| {
+                c.train.staleness = 1;
+            }),
+            variant_chaos("tcp/kill-rank1/k1", |c| {
+                c.train.staleness = 1;
+                c.train.fail = Some(FaultSpec::parse(KILL).unwrap());
+            }),
+        ],
+    );
+}
+
+/// Recovery through failure paths that are *not* a clean error return:
+/// the worker hangs up every socket mid-epoch.
+#[test]
+fn drop_conn_recovers_byte_identical() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::DglMetis,
+        EPOCHS,
+        &[
+            variant_tcp("tcp/fault-free/k0", |_| {}),
+            variant_chaos("tcp/drop-conn-rank1/k0", |c| {
+                c.train.fail = Some(FaultSpec::parse("1:1:drop-conn:1").unwrap());
+            }),
+        ],
+    );
+}
+
+/// The worker's next outbound frame is bit-flipped: the leader's total
+/// decode must reject it, fail the epoch, and recovery must replay it.
+#[test]
+fn corrupt_frame_recovers_byte_identical() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::Heta,
+        EPOCHS,
+        &[
+            variant_tcp("tcp/fault-free/k0", |_| {}),
+            variant_chaos("tcp/corrupt-frame-rank1/k0", |c| {
+                c.train.fail = Some(FaultSpec::parse("1:1:corrupt-frame:1").unwrap());
+            }),
+        ],
+    );
+}
+
+/// A wedged-but-alive worker: it pauses heartbeats and sleeps past the
+/// leader's deadline, so the epoch ends because the *leader* declared
+/// the rank dead — recovery goes through failure detection.
+#[test]
+fn heartbeat_detected_stall_recovers_byte_identical() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::Heta,
+        EPOCHS,
+        &[
+            variant_tcp("tcp/fault-free/k0", |_| {}),
+            variant_chaos("tcp/stall-rank1/k0", |c| {
+                c.train.fail = Some(FaultSpec::parse("1:1:stall:1").unwrap());
+                // Tight heartbeat timing keeps the detect-and-recover
+                // cycle fast; heartbeat knobs never affect the losses.
+                c.train.hb_interval_ms = 100;
+                c.train.hb_timeout_ms = 400;
+            }),
+        ],
+    );
+}
+
+/// The recovery *shape*, pinned directly against the one-attempt API:
+/// attempt one completes exactly epoch 0 and dies; attempt two (fault
+/// cleared, resuming from the checkpoint) runs exactly epoch 1; the
+/// concatenation is byte-identical to the fault-free trajectory.
+#[test]
+fn recovery_restores_the_killed_epoch_not_the_whole_run() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    let cfg = Config::load(&format!("configs/{CFG}.json")).unwrap();
+    let dir = format!("artifacts/{CFG}");
+    let ckpt_dir = format!(
+        "{}/heta-ft-shape-{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+    let reference = run_loopback_tcp(&cfg, &dir, SystemKind::Heta, EPOCHS).unwrap();
+
+    let mut faulty = cfg.clone();
+    faulty.train.fail = Some(FaultSpec::parse(KILL).unwrap());
+    let (first, err) = run_loopback_tcp_ckpt(&faulty, &dir, SystemKind::Heta, EPOCHS, &ckpt_dir);
+    assert!(err.is_some(), "the injected exit must fail the first attempt");
+    assert_eq!(first.len(), 1, "attempt one must complete exactly epoch 0");
+
+    faulty.train.fail = None;
+    let (second, err) =
+        run_loopback_tcp_ckpt(&faulty, &dir, SystemKind::Heta, EPOCHS, &ckpt_dir);
+    assert!(err.is_none(), "the clean relaunch must finish: {err:?}");
+    assert_eq!(second.len(), 1, "attempt two must resume at epoch 1, not epoch 0");
+
+    let recovered: Vec<_> = first.iter().chain(second.iter()).collect();
+    for (ep, (r, c)) in reference.iter().zip(recovered).enumerate() {
+        assert_eq!(r.batch_losses.len(), c.batch_losses.len(), "epoch {ep} batch count");
+        for (bi, (a, b)) in r.batch_losses.iter().zip(&c.batch_losses).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "epoch {ep} batch {bi}: recovered loss {b} != fault-free {a}"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
