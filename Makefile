@@ -14,7 +14,7 @@
 # directories, because cargo runs tests/benches with cwd = rust/.
 
 # Test-tier configs first (fast to lower), then the bench tier.
-CONFIGS := mag-tiny mag-tiny-rgat mag-tiny-hgt \
+CONFIGS := mag-tiny mag-tiny-rgat mag-tiny-hgt mag-tiny-p3 mag-tiny-p4 \
            mag-bench mag-bench-h64 mag-bench-h128 mag-bench-rgat mag-bench-hgt \
            mag240m-bench mag240m-bench-hgt donor-bench donor-bench-rgat \
            freebase-bench igb-bench igb-bench-rgat
@@ -25,8 +25,8 @@ MANIFESTS := $(foreach c,$(CONFIGS),artifacts/$(c)/manifest.json)
 
 artifacts: $(MANIFESTS)
 
-# Just the three tiny configs the test suite gates on.
-artifacts-test: $(foreach c,mag-tiny mag-tiny-rgat mag-tiny-hgt,artifacts/$(c)/manifest.json)
+# Just the tiny configs the test suite (and the CI net-smoke) gates on.
+artifacts-test: $(foreach c,mag-tiny mag-tiny-rgat mag-tiny-hgt mag-tiny-p3,artifacts/$(c)/manifest.json)
 
 artifacts/%/manifest.json: configs/%.json python/compile/aot.py python/compile/model.py
 	cargo run --release --bin heta -- plan --config configs/$*.json --out artifacts/$*/plan.json

@@ -9,9 +9,18 @@
 //! never exceeding real. Emits `BENCH_net.json` (uploaded by CI next
 //! to the other bench artifacts).
 
+//! Since PR 8 it also runs the wire-efficiency A/B: leader bytes per
+//! batch across `wire_snapshots = full | diff` and `wire_exchange =
+//! star | mesh`, at K=2 (`mag-tiny`) and K=4 (`mag-tiny-p4`, skipped
+//! without its artifacts). Losses stay byte-identical across every
+//! mode; the diff column must beat the full column on leader sent
+//! bytes, and the mesh column must beat the star column on leader
+//! received bytes. The numbers land in `BENCH_net.json` under
+//! `wire_efficiency`.
+
 use std::time::Instant;
 
-use heta::config::{Config, RuntimeKind};
+use heta::config::{Config, RuntimeKind, WireExchange, WireSnapshots};
 use heta::coordinator::{run_loopback_tcp, Engine, Session, SystemKind};
 use heta::metrics::EpochReport;
 use heta::util::bench::{report, table};
@@ -141,7 +150,123 @@ fn main() {
         &rows,
     );
 
-    let out = Json::from_pairs(vec![("net_transport", Json::Arr(entries))]).to_string();
+    // ---- PR 8: leader bytes per batch across the wire knobs ----
+    let mut wire_rows = Vec::new();
+    let mut wire_entries = Vec::new();
+    for wire_cfg in ["mag-tiny", "mag-tiny-p4"] {
+        if !heta::util::artifacts_ready(wire_cfg) {
+            println!("wire-efficiency: skipping {wire_cfg} (run `make artifacts`)");
+            continue;
+        }
+        let base = Config::load(&format!("configs/{wire_cfg}.json"))
+            .unwrap_or_else(|e| panic!("loading config {wire_cfg}: {e}"));
+        let k = base.train.num_partitions;
+        for (system, label) in [(SystemKind::Heta, "raf"), (SystemKind::DglMetis, "vanilla")] {
+            // The mesh only reroutes the RAF partial aggregation;
+            // vanilla has no partial exchange, so its matrix is 1-D.
+            let modes: &[(WireSnapshots, WireExchange)] = if system == SystemKind::Heta {
+                &[
+                    (WireSnapshots::Full, WireExchange::Star),
+                    (WireSnapshots::Diff, WireExchange::Star),
+                    (WireSnapshots::Diff, WireExchange::Mesh),
+                ]
+            } else {
+                &[
+                    (WireSnapshots::Full, WireExchange::Star),
+                    (WireSnapshots::Diff, WireExchange::Star),
+                ]
+            };
+            let mut per_mode = Vec::new();
+            for &(snaps, exch) in modes {
+                let mut cfg = base.clone();
+                cfg.train.wire_snapshots = snaps;
+                cfg.train.wire_exchange = exch;
+                let (reps, _) = run_tcp(&cfg, system);
+                let batches: usize = reps.iter().map(|r| r.batches).sum();
+                assert!(batches > 0, "{label}/{wire_cfg}: the A/B needs batches to price");
+                let wire = reps.iter().fold(heta::net::WireTraffic::default(), |mut a, r| {
+                    a.merge(&r.wire);
+                    a
+                });
+                let losses: Vec<u64> = reps
+                    .iter()
+                    .flat_map(|r| r.batch_losses.iter().map(|l| l.to_bits()))
+                    .collect();
+                let mode = format!("{}/{}", snaps.name(), exch.name());
+                wire_rows.push(vec![
+                    label.to_string(),
+                    format!("K={k}"),
+                    mode.clone(),
+                    fmt_bytes(wire.real_sent / batches as u64),
+                    fmt_bytes(wire.real_recv / batches as u64),
+                    fmt_bytes(wire.mesh_sent + wire.mesh_recv),
+                ]);
+                wire_entries.push(Json::from_pairs(vec![
+                    ("engine", Json::str(label)),
+                    ("config", Json::str(wire_cfg)),
+                    ("workers", Json::num(k as f64)),
+                    ("wire_snapshots", Json::str(snaps.name())),
+                    ("wire_exchange", Json::str(exch.name())),
+                    ("batches", Json::num(batches as f64)),
+                    (
+                        "leader_sent_bytes_per_batch",
+                        Json::num((wire.real_sent / batches as u64) as f64),
+                    ),
+                    (
+                        "leader_recv_bytes_per_batch",
+                        Json::num((wire.real_recv / batches as u64) as f64),
+                    ),
+                ]));
+                per_mode.push((mode, wire, losses));
+            }
+            // Equivalence across every mode, against the first.
+            let (ref_mode, _, ref_losses) = &per_mode[0];
+            for (mode, _, losses) in &per_mode[1..] {
+                assert_eq!(
+                    losses, ref_losses,
+                    "{label}/{wire_cfg}: losses diverged between {ref_mode} and {mode}"
+                );
+            }
+            // The byte wins the tentpole promises.
+            let sent = |i: usize| per_mode[i].1.real_sent;
+            assert!(
+                sent(1) < sent(0),
+                "{label}/{wire_cfg}: diff snapshots must shrink leader sent bytes \
+                 ({} >= {})",
+                sent(1),
+                sent(0)
+            );
+            if per_mode.len() > 2 {
+                let recv = |i: usize| per_mode[i].1.real_recv;
+                assert!(
+                    recv(2) < recv(1),
+                    "{label}/{wire_cfg}: the mesh must shrink leader received bytes \
+                     ({} >= {})",
+                    recv(2),
+                    recv(1)
+                );
+            }
+            report(
+                &format!("net/{label}/k{k}/diff_sent_ratio"),
+                format!("{:.2}x", sent(1) as f64 / sent(0).max(1) as f64),
+            );
+        }
+    }
+    if !wire_rows.is_empty() {
+        table(
+            "Wire efficiency: leader bytes per batch across wire knobs \
+             (losses byte-identical in every mode; leader counters only — \
+             mesh relay bytes live on the workers)",
+            &["engine", "cluster", "mode", "sent/batch", "recv/batch", "leader mesh bytes"],
+            &wire_rows,
+        );
+    }
+
+    let out = Json::from_pairs(vec![
+        ("net_transport", Json::Arr(entries)),
+        ("wire_efficiency", Json::Arr(wire_entries)),
+    ])
+    .to_string();
     std::fs::write("BENCH_net.json", &out).expect("write BENCH_net.json");
     println!("wrote BENCH_net.json");
 }

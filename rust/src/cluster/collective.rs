@@ -251,15 +251,15 @@ impl<U, D, EU: Transport<U>, ED: Transport<D>> Hub<U, D, EU, ED> {
         Ok(())
     }
 
-    /// Send a copy of `item` to every worker.
+    /// Send a copy of `item` to every worker. Routed through
+    /// [`Transport::broadcast_encoded`], so the TCP star serializes the
+    /// frame once and writes the same bytes to every connection; the
+    /// in-process channels keep the clone-per-worker fallback.
     pub fn broadcast(&self, item: D) -> Result<()>
     where
         D: Clone,
     {
-        for w in 0..self.workers {
-            self.down.send(w, item.clone())?;
-        }
-        Ok(())
+        self.down.broadcast_encoded(self.workers, &item)
     }
 }
 

@@ -92,6 +92,23 @@ pub trait Transport<T> {
     fn send(&self, to: usize, payload: T) -> Result<()>;
     /// Receive the next message addressed to this rank, blocking.
     fn recv(&self) -> Result<Envelope<T>>;
+    /// Send one copy of `payload` to every rank `0..workers`. The
+    /// default is the per-peer fallback (a clone per worker — what the
+    /// in-process channels want, since they move values instead of
+    /// encoding them); transports with a real wire override it to
+    /// serialize the frame **once** and write the same bytes to every
+    /// connection, turning the leader's per-batch broadcast from K
+    /// encodes into one (see
+    /// [`TcpChannel`](crate::net::TcpChannel)).
+    fn broadcast_encoded(&self, workers: usize, payload: &T) -> Result<()>
+    where
+        T: Clone,
+    {
+        for w in 0..workers {
+            self.send(w, payload.clone())?;
+        }
+        Ok(())
+    }
     /// Deterministic fault injection (`--fail`): make this endpoint
     /// misbehave in the way `kind` names. Default no-op — the
     /// in-process channels have no sockets to drop or heartbeats to
@@ -110,6 +127,15 @@ impl<T, E: Transport<T>> Transport<T> for &E {
     }
     fn recv(&self) -> Result<Envelope<T>> {
         (**self).recv()
+    }
+    // Must forward (not inherit the default): the engines' hubs hold
+    // `&TcpChannel`, and the default impl here would silently undo the
+    // encode-once override underneath them.
+    fn broadcast_encoded(&self, workers: usize, payload: &T) -> Result<()>
+    where
+        T: Clone,
+    {
+        (**self).broadcast_encoded(workers, payload)
     }
     fn sabotage(&self, kind: crate::config::FaultKind) {
         (**self).sabotage(kind)

@@ -63,7 +63,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::comm::SimNet;
 use crate::config::{partition_edge_filter, Config};
@@ -78,15 +78,17 @@ use crate::kvstore::{FetchStats, StoreDelta};
 use crate::metrics::timeline::{AsyncShape, EpochTimeline, LeaderSpan, WallClock, WorkerSpan};
 use crate::metrics::{EpochReport, Stage, StageTimes};
 use crate::net::codec::{ByteReader, ByteWriter, WireCodec};
-use crate::net::tcp::TcpNode;
+use crate::net::tcp::{TcpChannel, TcpNode, LANE_MESH_DATA};
 use crate::net::Role;
 use crate::partition::MetaPartition;
-use crate::runtime::ParamSnapshot;
+use crate::runtime::{
+    need_full_msg, DiffChain, ParamDiff, ParamSnapshot, ParamStore, SnapOrDiff, SnapshotChain,
+};
 use crate::sampling::{sample_tree, Frontier, TreeSample};
 use crate::util::{add_assign, rng::Rng};
 
 use super::collective::{run_contained, star, Hub, Port, RoundTag, NO_BATCH};
-use super::mailbox::{slice_bytes, Transport, Wire};
+use super::mailbox::{slice_bytes, Mailbox, Transport, Wire};
 
 /// Worker → leader messages, tagged with their batch so the leader's
 /// round gather can park run-ahead contributions from fast workers.
@@ -128,6 +130,13 @@ enum Up {
     /// tracks and metrics. Always sent — empty when tracing is off —
     /// so the message schedule never depends on the trace flag.
     Obs { blob: crate::obs::TraceBlob },
+    /// Explicit resync NACK (PR 8, `wire_snapshots = diff`): this
+    /// worker's snapshot chain cannot apply the diff it just received
+    /// (`have` = the version it holds, [`u64::MAX`] = none yet;
+    /// `want` = the diff's base version). Aborts the leader's gather
+    /// with an error naming the rank and both versions; the restarted
+    /// epoch's first frame is a full snapshot — that is the resync.
+    NeedFull { bi: usize, have: u64, want: u64 },
 }
 
 /// Gather rounds: two per batch, forwards then backwards.
@@ -147,6 +156,9 @@ fn up_tag(u: &Up) -> RoundTag {
         Up::Bwd { bi, .. } => RoundTag::Round(bwd_round(*bi)),
         Up::Failed { bi, msg } => RoundTag::abort_for(*bi, msg),
         Up::Obs { .. } => RoundTag::Round(OBS_ROUND),
+        Up::NeedFull { bi, have, want } => {
+            RoundTag::abort_for(*bi, &need_full_msg(*have, *want))
+        }
     }
 }
 
@@ -165,6 +177,7 @@ impl Wire for Up {
             // Observability is harness traffic, not the modeled
             // system's (the real socket counters still see its frames).
             Up::Obs { .. } => 0,
+            Up::NeedFull { .. } => 0,
         }
     }
 }
@@ -193,6 +206,21 @@ enum Down {
     },
     /// Post-update learnable rows of batch `bi` (see [`StoreDelta`]).
     Store { bi: usize, delta: StoreDelta },
+    /// `Ready` with a version-chained [`ParamDiff`] instead of the full
+    /// snapshot (PR 8, `wire_snapshots = diff`): only the tensors that
+    /// advanced since the previous frame on this lane. Workers resolve
+    /// it against their [`SnapshotChain`] into the bit-identical full
+    /// snapshot before the engine loop ever sees it.
+    ReadyDiff { bi: usize, diff: ParamDiff },
+    /// `Grads` with a version-chained [`ParamDiff`] (same chain as
+    /// `ReadyDiff` — Ready and Grads frames alternate on one FIFO
+    /// lane, so a single chain covers both).
+    GradsDiff {
+        bi: usize,
+        g1: Vec<f32>,
+        g2: Vec<f32>,
+        diff: ParamDiff,
+    },
 }
 
 impl Wire for Down {
@@ -200,7 +228,9 @@ impl Wire for Down {
         match self {
             // The 2·[B,H] backward partial-gradients per worker.
             Down::Grads { g1, g2, .. } => slice_bytes(g1) + slice_bytes(g2),
+            Down::GradsDiff { g1, g2, .. } => slice_bytes(g1) + slice_bytes(g2),
             Down::Ready { .. } => 0,
+            Down::ReadyDiff { .. } => 0,
             Down::Store { .. } => 0,
         }
     }
@@ -238,6 +268,12 @@ impl WireCodec for Up {
                 w.u8(3);
                 blob.encode(w);
             }
+            Up::NeedFull { bi, have, want } => {
+                w.u8(4);
+                w.usize(*bi);
+                w.u64(*have);
+                w.u64(*want);
+            }
         }
     }
 
@@ -267,6 +303,12 @@ impl WireCodec for Up {
                 Ok(Up::Failed { bi, msg })
             }
             3 => Ok(Up::Obs { blob: crate::obs::TraceBlob::decode(r)? }),
+            4 => {
+                let bi = r.usize()?;
+                let have = r.u64()?;
+                let want = r.u64()?;
+                Ok(Up::NeedFull { bi, have, want })
+            }
             t => bail!("unknown RAF worker-message tag {t}"),
         }
     }
@@ -292,6 +334,18 @@ impl WireCodec for Down {
                 w.usize(*bi);
                 delta.encode(w);
             }
+            Down::ReadyDiff { bi, diff } => {
+                w.u8(3);
+                w.usize(*bi);
+                diff.encode(w);
+            }
+            Down::GradsDiff { bi, g1, g2, diff } => {
+                w.u8(4);
+                w.usize(*bi);
+                w.f32s(g1);
+                w.f32s(g2);
+                diff.encode(w);
+            }
         }
     }
 
@@ -314,8 +368,56 @@ impl WireCodec for Down {
                 let delta = StoreDelta::decode(r)?;
                 Ok(Down::Store { bi, delta })
             }
+            3 => {
+                let bi = r.usize()?;
+                let diff = ParamDiff::decode(r)?;
+                Ok(Down::ReadyDiff { bi, diff })
+            }
+            4 => {
+                let bi = r.usize()?;
+                let g1 = r.f32s()?;
+                let g2 = r.f32s()?;
+                let diff = ParamDiff::decode(r)?;
+                Ok(Down::GradsDiff { bi, g1, g2, diff })
+            }
             t => bail!("unknown RAF leader-message tag {t}"),
         }
+    }
+}
+
+/// The worker↔worker relay of the peer-to-peer aggregation chain
+/// (PR 8, `wire_exchange = mesh`): the running partial sums after
+/// worker `p`'s add, shipped to worker `p + 1`. The receiver's
+/// transport tags the sender rank, so the payload carries only the
+/// batch and the accumulators.
+#[derive(Clone, Debug, PartialEq)]
+struct MeshFwd {
+    bi: usize,
+    acc1: Vec<f32>,
+    acc2: Vec<f32>,
+}
+
+impl Wire for MeshFwd {
+    fn wire_bytes(&self) -> u64 {
+        // In the modeled system the relay IS the partial-aggregation
+        // traffic (the same 2·[B,H] the star ships leader-ward — the
+        // mesh moves it between neighbors instead).
+        slice_bytes(&self.acc1) + slice_bytes(&self.acc2)
+    }
+}
+
+impl WireCodec for MeshFwd {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.usize(self.bi);
+        w.f32s(&self.acc1);
+        w.f32s(&self.acc2);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<MeshFwd> {
+        let bi = r.usize()?;
+        let acc1 = r.f32s()?;
+        let acc2 = r.f32s()?;
+        Ok(MeshFwd { bi, acc1, acc2 })
     }
 }
 
@@ -390,15 +492,35 @@ pub fn run_epoch(
 
     let (hub, ports) = star::<Up, Down>(parts);
     let (bhub, bports) = star::<(), ()>(parts);
+    // The worker↔worker relay lane (PR 8, `wire_exchange = mesh`): a
+    // full in-process mesh so the partial-aggregation chain flows
+    // peer-to-peer, exactly like the TCP mesh lane does cross-process.
+    let meshes: Vec<Option<Mailbox<MeshFwd>>> = if cfg.train.wire_exchange.is_mesh() {
+        Mailbox::mesh(parts).into_iter().map(Some).collect()
+    } else {
+        (0..parts).map(|_| None).collect()
+    };
 
     let report = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(parts);
-        for ((ctx, port), bport) in contexts.iter_mut().zip(ports).zip(bports) {
+        for (((ctx, port), bport), mesh) in
+            contexts.iter_mut().zip(ports).zip(bports).zip(meshes)
+        {
             let world = &world;
             let batches = &batches;
             handles.push(s.spawn(move || {
                 worker_loop(
-                    ctx, plan, world, mp, epoch, batches, &port, &bport, pipeline, staleness,
+                    ctx,
+                    plan,
+                    world,
+                    mp,
+                    epoch,
+                    batches,
+                    &port,
+                    &bport,
+                    mesh.as_ref(),
+                    pipeline,
+                    staleness,
                 )
             }));
         }
@@ -460,20 +582,136 @@ pub fn run_epoch(
 
 /// Receive the next protocol message, transparently replaying store
 /// deltas into this process's KV store (the TCP replication of the
-/// leader's learnable-feature writes; never sent in-process). Per-lane
-/// FIFO guarantees a delta lands before any batch the leader released
-/// after the update that produced it.
+/// leader's learnable-feature writes; never sent in-process) and
+/// resolving diff frames (PR 8, `wire_snapshots = diff`) against this
+/// worker's snapshot chain — the engine loops only ever see full
+/// `Ready`/`Grads` frames, bit-identical to what full-snapshot mode
+/// ships. Per-lane FIFO guarantees a delta lands before any batch the
+/// leader released after the update that produced it, and keeps the
+/// diff chain in send order.
 fn recv_data<EU: Transport<Up>, ED: Transport<Down>>(
     port: &Port<Up, Down, EU, ED>,
     world: &EpochWorld<'_>,
+    chain: &mut SnapshotChain,
 ) -> Result<Down> {
     loop {
         match port.recv()? {
             Down::Store { bi, delta } => delta
                 .apply(&mut world.store_mut())
                 .with_context(|| format!("replaying batch {bi}'s learnable-feature delta"))?,
-            m => return Ok(m),
+            Down::Ready { bi, params } => {
+                // Full frames re-base the chain even when diffs are off:
+                // Ready and Grads alternate on one FIFO lane, so a
+                // single chain covers both frame kinds.
+                chain.note_full(&params);
+                return Ok(Down::Ready { bi, params });
+            }
+            Down::Grads { bi, g1, g2, params } => {
+                chain.note_full(&params);
+                return Ok(Down::Grads { bi, g1, g2, params });
+            }
+            Down::ReadyDiff { bi, diff } => {
+                let params = resolve_diff(port, chain, bi, &diff)?;
+                return Ok(Down::Ready { bi, params });
+            }
+            Down::GradsDiff { bi, g1, g2, diff } => {
+                let params = resolve_diff(port, chain, bi, &diff)?;
+                return Ok(Down::Grads { bi, g1, g2, params });
+            }
         }
+    }
+}
+
+/// Resolve one diff frame into the full snapshot the engine loops
+/// expect. A chain break (gap, or diff-before-full) ships the explicit
+/// [`Up::NeedFull`] NACK — best-effort, the leader's gather may
+/// already be unwinding — and surfaces as an error naming the rank and
+/// both versions; it never panics. The restarted epoch's first frame
+/// is always full, which is the resync.
+fn resolve_diff<EU: Transport<Up>, ED: Transport<Down>>(
+    port: &Port<Up, Down, EU, ED>,
+    chain: &mut SnapshotChain,
+    bi: usize,
+    diff: &ParamDiff,
+) -> Result<Arc<ParamSnapshot>> {
+    let p = port.id();
+    match chain.apply(p, diff) {
+        Ok(snap) => Ok(snap),
+        Err(e) => {
+            let have = chain.version().unwrap_or(u64::MAX);
+            let want = diff.from_version;
+            let _ = port.send(Up::NeedFull { bi, have, want });
+            Err(e.context(format!(
+                "worker {p}, batch {bi}: {}",
+                need_full_msg(have, want)
+            )))
+        }
+    }
+}
+
+/// Run one batch's peer-to-peer aggregation relay (PR 8,
+/// `wire_exchange = mesh`). Worker 0 starts the fold from zeroed sums
+/// — reproducing the leader's star fold, which adds worker partials
+/// into zeros in worker-id order — and each worker `p` adds its own
+/// partials into the sums relayed from `p - 1`. The last worker
+/// returns the folded sums, which ride its `Up::Fwd` leader-ward and
+/// are taken **verbatim** there (re-adding them into zeros could flip
+/// a `-0.0`); every other worker relays to `p + 1` and returns empty
+/// tensors, so its `Up::Fwd` models zero wire bytes — the leader-lane
+/// saving the mesh buys. The fold order is worker-id order either
+/// way, so losses stay byte-identical to the star.
+fn mesh_exchange<EM: Transport<MeshFwd>>(
+    mesh: &EM,
+    p: usize,
+    parts: usize,
+    bi: usize,
+    own1: Vec<f32>,
+    own2: Vec<f32>,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let (mut acc1, mut acc2) = if p == 0 {
+        (vec![0f32; own1.len()], vec![0f32; own2.len()])
+    } else {
+        let env = mesh.recv().with_context(|| {
+            format!(
+                "worker {p}, batch {bi}: receiving the mesh relay from worker {}",
+                p - 1
+            )
+        })?;
+        if env.from != p - 1 {
+            bail!(
+                "worker {p}, batch {bi}: mesh relay arrived from worker {} (expected {})",
+                env.from,
+                p - 1
+            );
+        }
+        let MeshFwd { bi: mbi, acc1, acc2 } = env.payload;
+        if mbi != bi {
+            bail!("worker {p}: mesh relay for batch {mbi} arrived while folding batch {bi}");
+        }
+        if acc1.len() != own1.len() || acc2.len() != own2.len() {
+            bail!(
+                "worker {p}, batch {bi}: mesh relay shape mismatch ({} and {} elems \
+                 vs this worker's {} and {})",
+                acc1.len(),
+                acc2.len(),
+                own1.len(),
+                own2.len()
+            );
+        }
+        (acc1, acc2)
+    };
+    add_assign(&mut acc1, &own1);
+    add_assign(&mut acc2, &own2);
+    if p + 1 < parts {
+        mesh.send(p + 1, MeshFwd { bi, acc1, acc2 }).with_context(|| {
+            format!(
+                "worker {p}, batch {bi}: relaying the mesh fold to worker {}",
+                p + 1
+            )
+        })?;
+        Ok((Vec::new(), Vec::new()))
+    } else {
+        Ok((acc1, acc2))
     }
 }
 
@@ -482,7 +720,7 @@ fn recv_data<EU: Transport<Up>, ED: Transport<Down>>(
 /// fails fast — with the root cause — instead of blocking on a dead
 /// peer or reporting a bare hangup.
 #[allow(clippy::too_many_arguments)]
-fn worker_loop<EU, ED, BU, BD>(
+fn worker_loop<EU, ED, BU, BD, EM>(
     ctx: &mut ExecContext,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
@@ -491,6 +729,7 @@ fn worker_loop<EU, ED, BU, BD>(
     batches: &[Vec<NodeId>],
     port: &Port<Up, Down, EU, ED>,
     bport: &Port<(), (), BU, BD>,
+    mesh: Option<&EM>,
     pipeline: bool,
     staleness: usize,
 ) -> Result<()>
@@ -499,6 +738,7 @@ where
     ED: Transport<Down>,
     BU: Transport<()>,
     BD: Transport<()>,
+    EM: Transport<MeshFwd>,
 {
     let p = ctx.worker;
     // The batch cursor outlives a panic's unwinding, so the death
@@ -509,10 +749,12 @@ where
         &cur,
         || {
             if staleness == 0 {
-                worker_run_sync(ctx, plan, world, mp, epoch, batches, port, bport, pipeline, &cur)
+                worker_run_sync(
+                    ctx, plan, world, mp, epoch, batches, port, bport, mesh, pipeline, &cur,
+                )
             } else {
                 worker_run_windowed(
-                    ctx, plan, world, mp, epoch, batches, port, bport, staleness, &cur,
+                    ctx, plan, world, mp, epoch, batches, port, bport, mesh, staleness, &cur,
                 )
             }
         },
@@ -527,7 +769,7 @@ where
 /// batch `i+1`'s sample (and dedup frontier) hidden inside the leader
 /// phase when `pipeline` is on. Byte-for-byte the pre-window protocol.
 #[allow(clippy::too_many_arguments)]
-fn worker_run_sync<EU, ED, BU, BD>(
+fn worker_run_sync<EU, ED, BU, BD, EM>(
     ctx: &mut ExecContext,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
@@ -536,6 +778,7 @@ fn worker_run_sync<EU, ED, BU, BD>(
     batches: &[Vec<NodeId>],
     port: &Port<Up, Down, EU, ED>,
     bport: &Port<(), (), BU, BD>,
+    mesh: Option<&EM>,
     pipeline: bool,
     cur: &AtomicUsize,
 ) -> Result<()>
@@ -544,8 +787,12 @@ where
     ED: Transport<Down>,
     BU: Transport<()>,
     BD: Transport<()>,
+    EM: Transport<MeshFwd>,
 {
     bport.barrier()?;
+    // One snapshot chain per epoch, matching the leader's per-epoch
+    // diff chain (the epoch's first frame is always full).
+    let mut chain = SnapshotChain::new();
     let p = ctx.worker;
     if world.cfg.train.trace {
         crate::obs::thread_register(p as u32, "worker");
@@ -570,7 +817,7 @@ where
         port.maybe_fault(&cfg.train, epoch, bi)?;
         // Batch i's forward needs batch i-1's updated weights: the
         // Ready release carries the current parameter snapshot.
-        let snapshot = match recv_data(port, world)? {
+        let snapshot = match recv_data(port, world, &mut chain)? {
             Down::Ready { bi: rbi, params } => {
                 if rbi != bi {
                     bail!("worker {p}: Ready for batch {rbi} arrived while expecting batch {bi}");
@@ -582,6 +829,9 @@ where
             }
             Down::Store { bi: sbi, .. } => {
                 bail!("worker {p}: batch {sbi} store delta escaped recv_data (protocol bug)")
+            }
+            Down::ReadyDiff { bi: dbi, .. } | Down::GradsDiff { bi: dbi, .. } => {
+                bail!("worker {p}: batch {dbi} diff frame escaped recv_data (protocol bug)")
             }
         };
         let (sample, frontier, sample_s) = match prefetched.take() {
@@ -617,10 +867,16 @@ where
             sample_s,
             &mut arena,
         )?;
+        // Mesh mode folds the partials peer-to-peer before the leader
+        // lane sees them (non-terminal workers ship empty tensors).
+        let (p1, p2) = match mesh {
+            Some(m) => mesh_exchange(m, p, mp.num_parts, bi, fwd.p1, fwd.p2)?,
+            None => (fwd.p1, fwd.p2),
+        };
         port.send(Up::Fwd {
             bi,
-            p1: fwd.p1,
-            p2: fwd.p2,
+            p1,
+            p2,
             stats: fwd.stats,
             span: fwd.span,
             stages: fwd.stages,
@@ -650,7 +906,7 @@ where
         }
 
         // ---- backward stage: ∂partials + the post-head-update snapshot ----
-        let (g1, g2, snapshot) = match recv_data(port, world)? {
+        let (g1, g2, snapshot) = match recv_data(port, world, &mut chain)? {
             Down::Grads { bi: gbi, g1, g2, params } => {
                 if gbi != bi {
                     bail!("worker {p}: gradients for batch {gbi} arrived while expecting {bi}");
@@ -662,6 +918,9 @@ where
             }
             Down::Store { bi: sbi, .. } => {
                 bail!("worker {p}: batch {sbi} store delta escaped recv_data (protocol bug)")
+            }
+            Down::ReadyDiff { bi: dbi, .. } | Down::GradsDiff { bi: dbi, .. } => {
+                bail!("worker {p}: batch {dbi} diff frame escaped recv_data (protocol bug)")
             }
         };
         let bwd = wp.raf_backward(
@@ -706,7 +965,7 @@ where
 /// `k + 1` batches are open at once, each owning its arena so backward
 /// rebuilds scatter from their own forward's staged rows.
 #[allow(clippy::too_many_arguments)]
-fn worker_run_windowed<EU, ED, BU, BD>(
+fn worker_run_windowed<EU, ED, BU, BD, EM>(
     ctx: &mut ExecContext,
     plan: &BatchPlan,
     world: &EpochWorld<'_>,
@@ -715,6 +974,7 @@ fn worker_run_windowed<EU, ED, BU, BD>(
     batches: &[Vec<NodeId>],
     port: &Port<Up, Down, EU, ED>,
     bport: &Port<(), (), BU, BD>,
+    mesh: Option<&EM>,
     staleness: usize,
     cur: &AtomicUsize,
 ) -> Result<()>
@@ -723,8 +983,10 @@ where
     ED: Transport<Down>,
     BU: Transport<()>,
     BD: Transport<()>,
+    EM: Transport<MeshFwd>,
 {
     bport.barrier()?;
+    let mut chain = SnapshotChain::new();
     let p = ctx.worker;
     if world.cfg.train.trace {
         crate::obs::thread_register(p as u32, "worker");
@@ -741,9 +1003,12 @@ where
     let mut completed = 0usize;
 
     while completed < batches.len() {
-        match recv_data(port, world)? {
+        match recv_data(port, world, &mut chain)? {
             Down::Store { bi, .. } => {
                 bail!("worker {p}: batch {bi} store delta escaped recv_data (protocol bug)")
+            }
+            Down::ReadyDiff { bi, .. } | Down::GradsDiff { bi, .. } => {
+                bail!("worker {p}: batch {bi} diff frame escaped recv_data (protocol bug)")
             }
             Down::Ready { bi, params } => {
                 if bi != next_ready {
@@ -781,10 +1046,20 @@ where
                     sample_s,
                     &mut arena,
                 )?;
+                // Same relay as the sync loop. Deadlock-free under the
+                // 1F1B window: every worker processes the leader's one
+                // FIFO lane in the same order, so the whole mesh chain
+                // for batch `bi` completes before any worker moves on
+                // to a backward — and mesh edges only run p-1 → p, so
+                // there is no cycle to wait on.
+                let (p1, p2) = match mesh {
+                    Some(m) => mesh_exchange(m, p, mp.num_parts, bi, fwd.p1, fwd.p2)?,
+                    None => (fwd.p1, fwd.p2),
+                };
                 port.send(Up::Fwd {
                     bi,
-                    p1: fwd.p1,
-                    p2: fwd.p2,
+                    p1,
+                    p2,
                     stats: fwd.stats,
                     span: fwd.span,
                     stages: fwd.stages,
@@ -841,6 +1116,22 @@ where
     Ok(())
 }
 
+/// Build batch `bi`'s release from the leader's diff chain: the full
+/// snapshot when the chain is disabled or starting, else the
+/// version-chained delta of exactly the tensors that advanced since
+/// the previous frame. Returns the store version the release carries —
+/// identical in both modes, so `ready_versions` (and the grad-lag
+/// gauge) never depend on the wire format.
+fn ready_release(chain: &mut DiffChain, params: &ParamStore, bi: usize) -> (u64, Down) {
+    match chain.next(params) {
+        SnapOrDiff::Full(snap) => {
+            let v = snap.version;
+            (v, Down::Ready { bi, params: snap })
+        }
+        SnapOrDiff::Diff(diff) => (diff.to_version, Down::ReadyDiff { bi, diff }),
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn leader_loop<EU, ED, BU, BD>(
     mut hub: Hub<Up, Down, EU, ED>,
@@ -872,6 +1163,13 @@ where
         // The leader's rank id is `parts` — one past the worker ranks.
         crate::obs::thread_register(parts as u32, "leader");
     }
+    // PR 8 wire knobs. The diff chain is per-epoch — its first frame is
+    // always a full snapshot, which also covers the post-recovery
+    // restart (recovery re-enters this loop) — and mesh mode moves the
+    // partial-aggregation fold onto the worker↔worker relay, leaving
+    // only the last worker's folded sums on the leader lane.
+    let mesh = cfg.train.wire_exchange.is_mesh();
+    let mut chain = DiffChain::new(cfg.train.wire_snapshots.is_diff());
     let b = cfg.train.batch_size;
     let h = cfg.model.hidden;
     let n = batches.len();
@@ -896,9 +1194,11 @@ where
     // (how far the forward's weights trailed the backward's).
     let mut ready_versions: Vec<u64> = Vec::with_capacity(n);
     for _ in 0..staleness.max(1).min(n) {
-        let snap = Arc::new(params.snapshot());
-        ready_versions.push(snap.version);
-        hub.broadcast(Down::Ready { bi: released, params: snap })?;
+        // Consecutive primes see an unchanged store, so in diff mode
+        // every prime after the first is an empty (from == to) diff.
+        let (ver, msg) = ready_release(&mut chain, params, released);
+        ready_versions.push(ver);
+        hub.broadcast(msg)?;
         released += 1;
     }
 
@@ -925,8 +1225,36 @@ where
                     if ubi != bi {
                         bail!("protocol error: batch {ubi} partials in batch {bi}'s round");
                     }
-                    add_assign(&mut partial_sums[0], &p1);
-                    add_assign(&mut partial_sums[1], &p2);
+                    if mesh {
+                        // The relay already folded in worker-id order;
+                        // only the chain's last worker carries the sums.
+                        // Take them **verbatim** — re-adding them into
+                        // the zeroed accumulators could flip a `-0.0`
+                        // and break bit-identity with the star fold.
+                        if w + 1 == parts {
+                            ensure!(
+                                p1.len() == b * h && p2.len() == b * h,
+                                "batch {bi}: worker {w} closed the mesh fold with {} and {} \
+                                 elems (expected {} each)",
+                                p1.len(),
+                                p2.len(),
+                                b * h
+                            );
+                            partial_sums[0] = p1;
+                            partial_sums[1] = p2;
+                        } else {
+                            ensure!(
+                                p1.is_empty() && p2.is_empty(),
+                                "batch {bi}: worker {w} shipped {} and {} partial elems on \
+                                 the leader lane in mesh mode (the relay owns them)",
+                                p1.len(),
+                                p2.len()
+                            );
+                        }
+                    } else {
+                        add_assign(&mut partial_sums[0], &p1);
+                        add_assign(&mut partial_sums[1], &p2);
+                    }
                     fetch.merge(stats);
                     worker_spans.push(span);
                     stages.merge(&wstages);
@@ -943,6 +1271,11 @@ where
                 Up::Obs { .. } => {
                     bail!("protocol error: trace blob in batch {bi}'s forward round")
                 }
+                Up::NeedFull { bi: nbi, have, want } => bail!(
+                    "batch {nbi}: worker {w}'s resync NACK escaped gather_round's abort \
+                     path (protocol bug): worker {w} {}",
+                    need_full_msg(have, want)
+                ),
             }
         }
         // ---- async release: batch bi+k goes out the moment batch bi's
@@ -961,9 +1294,9 @@ where
         // every marshal deterministically sees the updates through its
         // own release point. ----
         if staleness >= 1 && released < n {
-            let snap = Arc::new(params.snapshot());
-            ready_versions.push(snap.version);
-            hub.broadcast(Down::Ready { bi: released, params: snap })?;
+            let (ver, msg) = ready_release(&mut chain, params, released);
+            ready_versions.push(ver);
+            hub.broadcast(msg)?;
             released += 1;
         }
         crate::obs::gauge_max("staleness.open", (released - bi) as f64);
@@ -999,18 +1332,23 @@ where
         // with the post-head-update snapshot the backward marshals from ----
         let t_scatter = net.gather(leader_part, &gather_bytes)?;
         stages.add(Stage::Backward, t_scatter);
-        let grads_snapshot = Arc::new(params.snapshot());
-        let grads_version = grads_snapshot.version;
+        // The gradient scatter rides the same diff chain as the
+        // releases (one FIFO lane, alternating frame kinds).
+        let (grads_version, gmsg) = match chain.next(params) {
+            SnapOrDiff::Full(snap) => {
+                let v = snap.version;
+                (v, Down::Grads { bi, g1: lo.g1, g2: lo.g2, params: snap })
+            }
+            SnapOrDiff::Diff(diff) => (
+                diff.to_version,
+                Down::GradsDiff { bi, g1: lo.g1, g2: lo.g2, diff },
+            ),
+        };
         crate::obs::hist_observe(
             "grad.version_lag",
             grads_version.saturating_sub(ready_versions[bi]) as f64,
         );
-        hub.broadcast(Down::Grads {
-            bi,
-            g1: lo.g1,
-            g2: lo.g2,
-            params: grads_snapshot,
-        })?;
+        hub.broadcast(gmsg)?;
 
         // ---- gather worker gradients (worker-id order), holding every
         // fold to the snapshot version this batch's scatter shipped ----
@@ -1049,6 +1387,11 @@ where
                 Up::Obs { .. } => {
                     bail!("protocol error: trace blob in batch {bi}'s backward round")
                 }
+                Up::NeedFull { bi: nbi, have, want } => bail!(
+                    "batch {nbi}: worker {w}'s resync NACK escaped gather_round's abort \
+                     path (protocol bug): worker {w} {}",
+                    need_full_msg(have, want)
+                ),
             }
         }
 
@@ -1104,9 +1447,9 @@ where
         batches_done += 1;
         // ---- synchronous release: batch bi+1 waits for this update ----
         if staleness == 0 && released < n {
-            let snap = Arc::new(params.snapshot());
-            ready_versions.push(snap.version);
-            hub.broadcast(Down::Ready { bi: released, params: snap })?;
+            let (ver, msg) = ready_release(&mut chain, params, released);
+            ready_versions.push(ver);
+            hub.broadcast(msg)?;
             released += 1;
         }
     }
@@ -1163,13 +1506,27 @@ where
 
 /// One process's typed socket lanes for this engine's protocol — the
 /// shared [`Lanes`](super::Lanes) bundle instantiated with the
-/// engine's private message enums. Opened once per training run and
-/// reused across epochs.
-pub struct TcpLanes(super::Lanes<Up, Down>);
+/// engine's private message enums, plus (PR 8) the optional
+/// worker↔worker relay lane. Opened once per training run and reused
+/// across epochs.
+pub struct TcpLanes {
+    lanes: super::Lanes<Up, Down>,
+    /// The mesh relay lane (`wire_exchange = mesh`): present only on
+    /// worker ranks of a mesh-dialed node — the leader carries no
+    /// relay traffic, and star-dialed nodes have no worker↔worker
+    /// connections to open it over.
+    mesh: Option<TcpChannel<MeshFwd>>,
+}
 
 impl TcpLanes {
-    pub fn open(node: &TcpNode, parts: usize) -> Result<TcpLanes> {
-        Ok(TcpLanes(super::Lanes::open(node, parts)?))
+    pub fn open(node: &TcpNode, parts: usize, mesh: bool) -> Result<TcpLanes> {
+        let lanes = super::Lanes::open(node, parts)?;
+        let mesh = if mesh && lanes.role != Role::Leader {
+            Some(node.open_lane(LANE_MESH_DATA)?)
+        } else {
+            None
+        };
+        Ok(TcpLanes { lanes, mesh })
     }
 }
 
@@ -1219,17 +1576,17 @@ pub fn run_epoch_tcp(
         gate,
         epoch_t0: Instant::now(),
     };
-    let wire0 = lanes.0.traffic();
+    let wire0 = lanes.lanes.traffic();
 
-    match lanes.0.role {
+    match lanes.lanes.role {
         Role::Leader => {
             let mut fork_leader = contexts[leader_part]
                 .cache
                 .as_ref()
                 .map(|c| c.fork_ledger());
             let mut fork_p0 = contexts[0].cache.as_ref().map(|c| c.fork_ledger());
-            let hub = Hub::from_endpoints(&lanes.0.up, &lanes.0.down, parts);
-            let bhub = Hub::from_endpoints(&lanes.0.bar_up, &lanes.0.bar_down, parts);
+            let hub = Hub::from_endpoints(&lanes.lanes.up, &lanes.lanes.down, parts);
+            let bhub = Hub::from_endpoints(&lanes.lanes.bar_up, &lanes.lanes.bar_down, parts);
             let led = leader_loop(
                 hub,
                 bhub,
@@ -1259,20 +1616,30 @@ pub fn run_epoch_tcp(
                 }
             }
             let mut rep = led?;
-            rep.wire = lanes.0.traffic().since(&wire0);
+            rep.wire = lanes.lanes.traffic().since(&wire0);
             Ok(rep)
         }
         Role::Worker(w) => {
             let ctx = contexts
                 .get_mut(w)
                 .ok_or_else(|| anyhow!("worker rank {w} outside the {parts}-partition plan"))?;
-            let port = Port::from_endpoints(&lanes.0.up, &lanes.0.down, parts);
-            let bport = Port::from_endpoints(&lanes.0.bar_up, &lanes.0.bar_down, parts);
+            let port = Port::from_endpoints(&lanes.lanes.up, &lanes.lanes.down, parts);
+            let bport = Port::from_endpoints(&lanes.lanes.bar_up, &lanes.lanes.bar_down, parts);
             worker_loop(
-                ctx, plan, &world, mp, epoch, &batches, &port, &bport, pipeline, staleness,
+                ctx,
+                plan,
+                &world,
+                mp,
+                epoch,
+                &batches,
+                &port,
+                &bport,
+                lanes.mesh.as_ref(),
+                pipeline,
+                staleness,
             )?;
             let mut rep = EpochReport::empty(parts);
-            rep.wire = lanes.0.traffic().since(&wire0);
+            rep.wire = lanes.lanes.traffic().since(&wire0);
             Ok(rep)
         }
     }
@@ -1316,6 +1683,9 @@ mod tests {
                 wall_bwd: (1.0, 2.0),
             },
             Up::Failed { bi: 11, msg: "worker 2 panicked".into() },
+            // `have = u64::MAX` is the no-snapshot-yet sentinel.
+            Up::NeedFull { bi: 5, have: u64::MAX, want: 12 },
+            Up::NeedFull { bi: 6, have: 9, want: 12 },
             Up::Obs {
                 blob: crate::obs::TraceBlob {
                     rank: 1,
@@ -1363,6 +1733,20 @@ mod tests {
                 bi: 2,
                 delta: StoreDelta { rows: vec![(1, vec![7, 9], vec![0.1, 0.2])] },
             },
+            Down::ReadyDiff {
+                bi: 7,
+                diff: ParamDiff::from_tensors(
+                    9,
+                    11,
+                    vec![("w_head".into(), vec![0.25, -0.0])],
+                ),
+            },
+            Down::GradsDiff {
+                bi: 8,
+                g1: vec![1.5; 4],
+                g2: vec![-1.5; 4],
+                diff: ParamDiff::from_tensors(11, 11, vec![]),
+            },
         ];
         for m in msgs {
             let bytes = encode_message(&m);
@@ -1370,6 +1754,55 @@ mod tests {
             assert_eq!(back, m);
             assert!(m.wire_bytes() <= bytes.len() as u64);
         }
+    }
+
+    #[test]
+    fn mesh_relay_round_trips_and_prices_both_tensors() {
+        let m = MeshFwd { bi: 3, acc1: vec![1.0, -0.0], acc2: vec![0.5; 3] };
+        let bytes = encode_message(&m);
+        let back: MeshFwd = decode_message(&bytes).unwrap();
+        // -0.0 must survive bit-for-bit (the verbatim-take invariant).
+        assert_eq!(back.acc1[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(back, m);
+        assert_eq!(m.wire_bytes(), 4 * (2 + 3));
+        assert!(m.wire_bytes() <= bytes.len() as u64);
+    }
+
+    #[test]
+    fn mesh_exchange_folds_in_worker_id_order() {
+        // 3 workers over an in-process mesh: the chain must reproduce
+        // the star fold (zeros + p0 + p1 + p2) exactly, with only the
+        // last worker returning tensors.
+        let meshes = Mailbox::<MeshFwd>::mesh(3);
+        let owns = [vec![1.0f32, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        let outs = std::thread::scope(|s| {
+            let handles: Vec<_> = meshes
+                .iter()
+                .enumerate()
+                .map(|(p, m)| {
+                    let own = owns[p].clone();
+                    s.spawn(move || mesh_exchange(m, p, 3, 4, own.clone(), own))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap().unwrap())
+                .collect::<Vec<_>>()
+        });
+        assert!(outs[0].0.is_empty() && outs[0].1.is_empty());
+        assert!(outs[1].0.is_empty() && outs[1].1.is_empty());
+        assert_eq!(outs[2].0, vec![111.0, 222.0]);
+        assert_eq!(outs[2].1, vec![111.0, 222.0]);
+    }
+
+    #[test]
+    fn mesh_exchange_rejects_batch_mismatch() {
+        let meshes = Mailbox::<MeshFwd>::mesh(2);
+        meshes[0]
+            .send(1, MeshFwd { bi: 9, acc1: vec![0.0], acc2: vec![0.0] })
+            .unwrap();
+        let err = mesh_exchange(&meshes[1], 1, 2, 4, vec![1.0], vec![1.0]).unwrap_err();
+        assert!(format!("{err}").contains("batch 9"), "{err}");
     }
 
     #[test]

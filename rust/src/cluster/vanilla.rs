@@ -71,7 +71,9 @@ use crate::net::codec::{ByteReader, ByteWriter, WireCodec};
 use crate::net::tcp::TcpNode;
 use crate::net::Role;
 use crate::partition::NodePartition;
-use crate::runtime::ParamSnapshot;
+use crate::runtime::{
+    need_full_msg, DiffChain, ParamDiff, ParamSnapshot, ParamStore, SnapOrDiff, SnapshotChain,
+};
 use crate::sampling::{remote_counts, sample_tree, Frontier, TreeSample};
 use crate::util::rng::Rng;
 
@@ -116,6 +118,13 @@ enum Up {
     /// tracks and metrics. Always sent — empty when tracing is off —
     /// so the message schedule never depends on the trace flag.
     Obs { blob: crate::obs::TraceBlob },
+    /// Explicit resync NACK (PR 8, `wire_snapshots = diff`): this
+    /// worker's snapshot chain cannot apply the diff it just received
+    /// (`have` = the version it holds, [`u64::MAX`] = none yet;
+    /// `want` = the diff's base version). Aborts the leader's gather
+    /// with an error naming the rank and both versions; the restarted
+    /// epoch's first frame is a full snapshot — that is the resync.
+    NeedFull { bi: usize, have: u64, want: u64 },
 }
 
 /// Gather rounds: up to two per batch — the marshal notice, then the
@@ -136,6 +145,9 @@ fn up_tag(u: &Up) -> RoundTag {
         Up::Step { bi, .. } => RoundTag::Round(step_round(*bi)),
         Up::Failed { bi, msg } => RoundTag::abort_for(*bi, msg),
         Up::Obs { .. } => RoundTag::Round(OBS_ROUND),
+        Up::NeedFull { bi, have, want } => {
+            RoundTag::abort_for(*bi, &need_full_msg(*have, *want))
+        }
     }
 }
 
@@ -162,6 +174,15 @@ enum Down {
     Ready { bi: usize, params: Arc<ParamSnapshot> },
     /// Post-update learnable rows of batch `bi` (see [`StoreDelta`]).
     Store { bi: usize, delta: StoreDelta },
+    /// `Ready` with a version-chained [`ParamDiff`] instead of the
+    /// full snapshot (PR 8, `wire_snapshots = diff`): only the tensors
+    /// that advanced since the previous release. Workers resolve it
+    /// against their [`SnapshotChain`] into the bit-identical full
+    /// snapshot before the engine loop ever sees it. (The vanilla
+    /// engine has no mesh lane: its partial aggregation is the
+    /// all-reduce the cost model already prices, so `wire_exchange =
+    /// mesh` is a documented no-op here.)
+    ReadyDiff { bi: usize, diff: ParamDiff },
 }
 
 impl Wire for Down {
@@ -219,6 +240,12 @@ impl WireCodec for Up {
                 w.u8(3);
                 blob.encode(w);
             }
+            Up::NeedFull { bi, have, want } => {
+                w.u8(4);
+                w.usize(*bi);
+                w.u64(*have);
+                w.u64(*want);
+            }
         }
     }
 
@@ -236,6 +263,12 @@ impl WireCodec for Up {
                 Ok(Up::Failed { bi, msg })
             }
             3 => Ok(Up::Obs { blob: crate::obs::TraceBlob::decode(r)? }),
+            4 => {
+                let bi = r.usize()?;
+                let have = r.u64()?;
+                let want = r.u64()?;
+                Ok(Up::NeedFull { bi, have, want })
+            }
             t => bail!("unknown vanilla worker-message tag {t}"),
         }
     }
@@ -254,6 +287,11 @@ impl WireCodec for Down {
                 w.usize(*bi);
                 delta.encode(w);
             }
+            Down::ReadyDiff { bi, diff } => {
+                w.u8(2);
+                w.usize(*bi);
+                diff.encode(w);
+            }
         }
     }
 
@@ -268,6 +306,11 @@ impl WireCodec for Down {
                 let bi = r.usize()?;
                 let delta = StoreDelta::decode(r)?;
                 Ok(Down::Store { bi, delta })
+            }
+            2 => {
+                let bi = r.usize()?;
+                let diff = ParamDiff::decode(r)?;
+                Ok(Down::ReadyDiff { bi, diff })
             }
             t => bail!("unknown vanilla leader-message tag {t}"),
         }
@@ -430,13 +473,39 @@ where
 fn recv_ready<EU: Transport<Up>, ED: Transport<Down>>(
     port: &Port<Up, Down, EU, ED>,
     world: &EpochWorld<'_>,
+    chain: &mut SnapshotChain,
 ) -> Result<(usize, Arc<ParamSnapshot>)> {
     loop {
         match port.recv()? {
             Down::Store { bi, delta } => delta
                 .apply(&mut world.store_mut())
                 .with_context(|| format!("replaying batch {bi}'s learnable-feature delta"))?,
-            Down::Ready { bi, params } => return Ok((bi, params)),
+            Down::Ready { bi, params } => {
+                // Full frames re-base the chain even when diffs are
+                // off, so a mid-stream mode change can never desync.
+                chain.note_full(&params);
+                return Ok((bi, params));
+            }
+            Down::ReadyDiff { bi, diff } => {
+                // A chain break ships the explicit NeedFull NACK
+                // (best-effort — the leader's gather may already be
+                // unwinding) and surfaces as an error naming the rank
+                // and both versions; it never panics. The restarted
+                // epoch's first frame is always full: that's the resync.
+                let p = port.id();
+                match chain.apply(p, &diff) {
+                    Ok(params) => return Ok((bi, params)),
+                    Err(e) => {
+                        let have = chain.version().unwrap_or(u64::MAX);
+                        let want = diff.from_version;
+                        let _ = port.send(Up::NeedFull { bi, have, want });
+                        return Err(e.context(format!(
+                            "worker {p}, batch {bi}: {}",
+                            need_full_msg(have, want)
+                        )));
+                    }
+                }
+            }
         }
     }
 }
@@ -469,6 +538,9 @@ where
     if world.cfg.train.trace {
         crate::obs::thread_register(w as u32, "worker");
     }
+    // One snapshot chain per epoch, matching the leader's per-epoch
+    // diff chain (the epoch's first frame is always full).
+    let mut chain = SnapshotChain::new();
     let cache_base = crate::obs::cache_obs_base(ctx.cache.as_ref());
     let cfg: &Config = world.cfg;
     let scale = cfg.cost.compute_scale;
@@ -488,7 +560,7 @@ where
         cur.store(bi, Ordering::Relaxed);
         crate::obs::set_batch(bi as u64);
         port.maybe_fault(&cfg.train, epoch, bi)?;
-        let (rbi, snapshot) = recv_ready(port, world)?;
+        let (rbi, snapshot) = recv_ready(port, world, &mut chain)?;
         if rbi != bi {
             bail!("worker {w}: release for batch {rbi} arrived while expecting {bi}");
         }
@@ -616,6 +688,7 @@ where
     if world.cfg.train.trace {
         crate::obs::thread_register(w as u32, "worker");
     }
+    let mut chain = SnapshotChain::new();
     let cache_base = crate::obs::cache_obs_base(ctx.cache.as_ref());
     let cfg: &Config = world.cfg;
     let scale = cfg.cost.compute_scale;
@@ -630,7 +703,7 @@ where
         cur.store(bi, Ordering::Relaxed);
         crate::obs::set_batch(bi as u64);
         port.maybe_fault(&cfg.train, epoch, bi)?;
-        let (rbi, snapshot) = recv_ready(port, world)?;
+        let (rbi, snapshot) = recv_ready(port, world, &mut chain)?;
         if rbi != bi {
             bail!("worker {w}: release for batch {rbi} arrived while expecting {bi}");
         }
@@ -699,6 +772,21 @@ where
     Ok(())
 }
 
+/// Build batch `bi`'s release from the leader's diff chain: the full
+/// snapshot when the chain is disabled or starting, else the
+/// version-chained delta. Returns the store version the release
+/// carries — identical in both modes, so `ready_versions` (which pins
+/// every gradient fold) never depends on the wire format.
+fn ready_release(chain: &mut DiffChain, params: &ParamStore, bi: usize) -> (u64, Down) {
+    match chain.next(params) {
+        SnapOrDiff::Full(snap) => {
+            let v = snap.version;
+            (v, Down::Ready { bi, params: snap })
+        }
+        SnapOrDiff::Diff(diff) => (diff.to_version, Down::ReadyDiff { bi, diff }),
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn leader_loop<EU, ED, BU, BD>(
     mut hub: Hub<Up, Down, EU, ED>,
@@ -740,12 +828,18 @@ where
     // opens k batches — batch j's snapshot trails by j <= k updates),
     // recording each released snapshot's version: the fold of batch
     // bi's gradients is pinned to ready_versions[bi].
+    // One diff chain per epoch (PR 8, `wire_snapshots = diff`): its
+    // first frame is always a full snapshot, which also covers the
+    // post-recovery restart — recovery re-enters this loop.
+    let mut chain = DiffChain::new(world.cfg.train.wire_snapshots.is_diff());
     let mut ready_versions: Vec<u64> = Vec::with_capacity(n);
     let mut released = 0usize;
     for _ in 0..staleness.max(1).min(n) {
-        let snap = Arc::new(params.snapshot());
-        ready_versions.push(snap.version);
-        hub.broadcast(Down::Ready { bi: released, params: snap })?;
+        // Consecutive primes see an unchanged store, so in diff mode
+        // every prime after the first is an empty (from == to) diff.
+        let (ver, msg) = ready_release(&mut chain, params, released);
+        ready_versions.push(ver);
+        hub.broadcast(msg)?;
         released += 1;
     }
     // Count of batches whose `Marshaled` barrier notice has been
@@ -783,6 +877,11 @@ where
                 Up::Obs { .. } => {
                     bail!("protocol error: trace blob in batch {bi}'s step round")
                 }
+                Up::NeedFull { bi: nbi, have, want } => bail!(
+                    "batch {nbi}: worker {wid}'s resync NACK escaped gather_round's \
+                     abort path (protocol bug): worker {wid} {}",
+                    need_full_msg(have, want)
+                ),
             };
             let StepMsg {
                 loss,
@@ -814,9 +913,9 @@ where
         // -- async release: batch bi+k goes out before this batch's
         // update, bounding its forward snapshot at k missing updates --
         if staleness >= 1 && released < n {
-            let snap = Arc::new(params.snapshot());
-            ready_versions.push(snap.version);
-            hub.broadcast(Down::Ready { bi: released, params: snap })?;
+            let (ver, msg) = ready_release(&mut chain, params, released);
+            ready_versions.push(ver);
+            hub.broadcast(msg)?;
             released += 1;
         }
         // -- store barrier: before the update may write learnable rows,
@@ -864,9 +963,9 @@ where
         batches_done += 1;
         // -- synchronous release: batch bi+1 waits for this update --
         if staleness == 0 && released < n {
-            let snap = Arc::new(params.snapshot());
-            ready_versions.push(snap.version);
-            hub.broadcast(Down::Ready { bi: released, params: snap })?;
+            let (ver, msg) = ready_release(&mut chain, params, released);
+            ready_versions.push(ver);
+            hub.broadcast(msg)?;
             released += 1;
         }
     }
@@ -1038,6 +1137,9 @@ mod tests {
             Up::Marshaled { bi: 6 },
             Up::Step { bi: 2, msg: step_fixture() },
             Up::Failed { bi: usize::MAX, msg: "before its first batch".into() },
+            // `have = u64::MAX` is the no-snapshot-yet sentinel.
+            Up::NeedFull { bi: 4, have: u64::MAX, want: 8 },
+            Up::NeedFull { bi: 5, have: 6, want: 8 },
             Up::Obs {
                 blob: crate::obs::TraceBlob {
                     rank: 0,
@@ -1068,6 +1170,10 @@ mod tests {
             Down::Store {
                 bi: 0,
                 delta: StoreDelta { rows: vec![(0, vec![2], vec![9.0, 9.5])] },
+            },
+            Down::ReadyDiff {
+                bi: 2,
+                diff: ParamDiff::from_tensors(3, 5, vec![("dense".into(), vec![0.5, -0.0])]),
             },
         ];
         for m in msgs {

@@ -115,6 +115,84 @@ impl TransportKind {
     }
 }
 
+/// How the leader ships parameters down the Ready/Grads lane
+/// (`train.wire_snapshots`, PR 8). Either way workers reconstruct the
+/// **bit-identical** snapshot, so losses never depend on this knob —
+/// only the bytes on the wire do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireSnapshots {
+    /// Every release carries the complete parameter snapshot — the
+    /// pre-PR-8 behaviour, kept for A/B byte accounting.
+    Full,
+    /// Version-chained deltas (the default): after an epoch's first
+    /// full snapshot, each release carries only the tensors that
+    /// advanced since the previous one
+    /// ([`crate::runtime::ParamDiff`]). A chain break is an error that
+    /// aborts the epoch; the restarted epoch's first frame is full
+    /// again — that *is* the resync.
+    Diff,
+}
+
+impl WireSnapshots {
+    pub fn parse(s: &str) -> Option<WireSnapshots> {
+        match s {
+            "full" | "snapshot" => Some(WireSnapshots::Full),
+            "diff" | "delta" => Some(WireSnapshots::Diff),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireSnapshots::Full => "full",
+            WireSnapshots::Diff => "diff",
+        }
+    }
+
+    pub fn is_diff(&self) -> bool {
+        matches!(self, WireSnapshots::Diff)
+    }
+}
+
+/// How the RAF partial aggregation travels (`train.wire_exchange`,
+/// PR 8). Fold order is identical either way (worker-id order starting
+/// from zeros), so losses are byte-identical; only which link carries
+/// the 2·[B,H] tensors changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireExchange {
+    /// Every worker ships its partials up the leader star (the
+    /// default, and the pre-PR-8 behaviour).
+    Star,
+    /// Workers fold partials peer-to-peer along the rank chain
+    /// (worker 0 → 1 → … → K−1) on the mesh lane; only the last worker
+    /// ships the folded sums to the leader. Under TCP this needs the
+    /// mesh-built star (`dial_mesh_with`/`listen_mesh_with`); the
+    /// in-process runtime uses a channel mesh. The vanilla engine has
+    /// no partial exchange and ignores the knob.
+    Mesh,
+}
+
+impl WireExchange {
+    pub fn parse(s: &str) -> Option<WireExchange> {
+        match s {
+            "star" | "leader" => Some(WireExchange::Star),
+            "mesh" | "p2p" | "peer" => Some(WireExchange::Mesh),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireExchange::Star => "star",
+            WireExchange::Mesh => "mesh",
+        }
+    }
+
+    pub fn is_mesh(&self) -> bool {
+        matches!(self, WireExchange::Mesh)
+    }
+}
+
 /// What a deterministically injected fault does when it fires
 /// (`--fail rank:batch:kind[:epoch]`, see [`FaultSpec`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -279,6 +357,15 @@ pub struct TrainConfig {
     /// a worker silent this long is declared dead and its connection is
     /// shut down, failing the epoch instead of hanging it.
     pub hb_timeout_ms: u64,
+    /// Parameter distribution on the down lane (`"diff"` default —
+    /// version-chained deltas; `"full"` ships the whole snapshot every
+    /// release). See [`WireSnapshots`]; losses are byte-identical
+    /// either way.
+    pub wire_snapshots: WireSnapshots,
+    /// RAF partial-aggregation topology (`"star"` default; `"mesh"`
+    /// folds peer-to-peer along the rank chain). See [`WireExchange`];
+    /// losses are byte-identical either way.
+    pub wire_exchange: WireExchange,
 }
 
 impl TrainConfig {
@@ -373,6 +460,16 @@ impl Config {
             fail: None,
             hb_interval_ms: t.get("hb_interval_ms").as_u64().unwrap_or(500),
             hb_timeout_ms: t.get("hb_timeout_ms").as_u64().unwrap_or(5000),
+            wire_snapshots: {
+                let name = t.get("wire_snapshots").as_str().unwrap_or("diff").to_string();
+                WireSnapshots::parse(&name)
+                    .with_context(|| format!("unknown wire_snapshots {name} (full|diff)"))?
+            },
+            wire_exchange: {
+                let name = t.get("wire_exchange").as_str().unwrap_or("star").to_string();
+                WireExchange::parse(&name)
+                    .with_context(|| format!("unknown wire_exchange {name} (star|mesh)"))?
+            },
         };
         if train.transport == TransportKind::Tcp {
             // Same guard (and wording) every tcp entry point shares.
@@ -718,6 +815,37 @@ mod tests {
             assert!(FaultSpec::parse(bad).is_err(), "{bad:?} must be rejected");
         }
         assert_eq!(FaultKind::Exit.name(), "exit");
+    }
+
+    #[test]
+    fn parses_wire_knobs() {
+        let cfg = Config::from_json(&parse(TINY).unwrap()).unwrap();
+        assert_eq!(cfg.train.wire_snapshots, WireSnapshots::Diff, "diff by default");
+        assert_eq!(cfg.train.wire_exchange, WireExchange::Star, "star by default");
+        let text = r#"{
+            "name": "x",
+            "dataset": {"preset": "mag", "scale": 1e-4},
+            "model": {"arch": "rgcn", "hidden": 8, "fanouts": [2]},
+            "train": {"batch_size": 8, "runtime": "cluster",
+                      "wire_snapshots": "full", "wire_exchange": "mesh"}
+        }"#;
+        let cfg = Config::from_json(&parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.train.wire_snapshots, WireSnapshots::Full);
+        assert!(!cfg.train.wire_snapshots.is_diff());
+        assert_eq!(cfg.train.wire_exchange, WireExchange::Mesh);
+        assert!(cfg.train.wire_exchange.is_mesh());
+        let bad = r#"{
+            "name": "x",
+            "dataset": {"preset": "mag", "scale": 1e-4},
+            "model": {"arch": "rgcn", "hidden": 8, "fanouts": [2]},
+            "train": {"batch_size": 8, "wire_snapshots": "sparse"}
+        }"#;
+        let err = Config::from_json(&parse(bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("wire_snapshots"), "{err}");
+        assert!(WireSnapshots::parse("carrier-pigeon").is_none());
+        assert!(WireExchange::parse("ring").is_none());
+        assert_eq!(WireSnapshots::Diff.name(), "diff");
+        assert_eq!(WireExchange::Mesh.name(), "mesh");
     }
 
     #[test]

@@ -266,6 +266,10 @@ pub fn run_loopback_tcp(
     cfg.train.runtime = crate::config::RuntimeKind::Cluster;
     let cfg = &cfg;
     let parts = cfg.train.num_partitions;
+    // Mesh configs need the brokered worker↔worker handshake on both
+    // sides of the star — a plain dial against a mesh leader (or vice
+    // versa) would hang waiting for the table.
+    let mesh = cfg.train.wire_exchange.is_mesh();
     let listener = std::net::TcpListener::bind("127.0.0.1:0")
         .map_err(|e| anyhow::anyhow!("binding a loopback listener: {e}"))?;
     let addr = listener
@@ -277,8 +281,17 @@ pub fn run_loopback_tcp(
             .map(|w| {
                 let addr = addr.clone();
                 s.spawn(move || -> Result<()> {
-                    let node =
-                        crate::net::tcp::dial(&addr, w, parts, crate::net::tcp::DIAL_TIMEOUT)?;
+                    let node = if mesh {
+                        crate::net::tcp::dial_mesh_with(
+                            &addr,
+                            w,
+                            parts,
+                            crate::net::tcp::DIAL_TIMEOUT,
+                            crate::net::tcp::HbCfg::default(),
+                        )?
+                    } else {
+                        crate::net::tcp::dial(&addr, w, parts, crate::net::tcp::DIAL_TIMEOUT)?
+                    };
                     let mut sess = Session::new(cfg, artifacts_dir)?;
                     sess.net = crate::net::Backend::Tcp(node);
                     let mut engine = Engine::build(&mut sess, system)?;
@@ -290,7 +303,15 @@ pub fn run_loopback_tcp(
             })
             .collect();
         let run_leader = || -> Result<Vec<EpochReport>> {
-            let node = crate::net::tcp::accept_workers(listener, parts)?;
+            let node = if mesh {
+                crate::net::tcp::accept_workers_mesh_with(
+                    listener,
+                    parts,
+                    crate::net::tcp::HbCfg::default(),
+                )?
+            } else {
+                crate::net::tcp::accept_workers(listener, parts)?
+            };
             let mut sess = Session::new(cfg, artifacts_dir)?;
             sess.net = crate::net::Backend::Tcp(node);
             let mut engine = Engine::build(&mut sess, system)?;
@@ -341,6 +362,7 @@ pub fn run_loopback_tcp_ckpt(
     let cfg = &cfg;
     let parts = cfg.train.num_partitions;
     let hb = crate::net::tcp::HbCfg::from_train(&cfg.train);
+    let mesh = cfg.train.wire_exchange.is_mesh();
     let opts = CkptOpts { dir: ckpt_dir.to_string(), resume: true };
     let listener = match std::net::TcpListener::bind("127.0.0.1:0") {
         Ok(l) => l,
@@ -358,13 +380,12 @@ pub fn run_loopback_tcp_ckpt(
                 let addr = addr.clone();
                 let opts = opts.clone();
                 s.spawn(move || -> Result<()> {
-                    let node = crate::net::tcp::dial_with(
-                        &addr,
-                        w,
-                        parts,
-                        crate::net::tcp::DIAL_TIMEOUT,
-                        hb,
-                    )?;
+                    let dial = if mesh {
+                        crate::net::tcp::dial_mesh_with
+                    } else {
+                        crate::net::tcp::dial_with
+                    };
+                    let node = dial(&addr, w, parts, crate::net::tcp::DIAL_TIMEOUT, hb)?;
                     let mut sess = Session::new(cfg, artifacts_dir)?;
                     sess.net = crate::net::Backend::Tcp(node);
                     let start = resume_session(&mut sess, Some(&opts))?;
@@ -378,7 +399,12 @@ pub fn run_loopback_tcp_ckpt(
             .collect();
         let mut reports: Vec<EpochReport> = Vec::new();
         let led: Result<()> = (|| {
-            let node = crate::net::tcp::accept_workers_with(listener, parts, hb)?;
+            let accept = if mesh {
+                crate::net::tcp::accept_workers_mesh_with
+            } else {
+                crate::net::tcp::accept_workers_with
+            };
+            let node = accept(listener, parts, hb)?;
             let mut sess = Session::new(cfg, artifacts_dir)?;
             sess.net = crate::net::Backend::Tcp(node);
             let start = resume_session(&mut sess, Some(&opts))?;

@@ -89,6 +89,19 @@ impl RafEngine {
             cfg.train.seed ^ 0x807,
         );
         let gpus = cfg.train.gpus_per_machine.max(1);
+        // Role-gated construction (PR 8): a TCP process plays exactly
+        // one rank, so only that rank's context gets an eager PJRT
+        // client; every other context is deferred — it keeps its cache
+        // (the leader's fork-ledger accounting reads them) but never
+        // spins up a client or loads executables it will never run. A
+        // K-worker cluster now builds K+1 clients total instead of
+        // (K+1)². In-process runs (channel transport, sequential
+        // driver) still build everything eagerly — one process plays
+        // every rank.
+        let role = match &sess.net {
+            crate::net::Backend::Tcp(node) => Some(node.role()),
+            crate::net::Backend::Channel => None,
+        };
         let mut contexts = Vec::with_capacity(mp.num_parts);
         for part in 0..mp.num_parts {
             let present = mp.types_in_part(&sess.g, part);
@@ -125,21 +138,46 @@ impl RafEngine {
                 cfg.train.cache_bytes_per_gpu * cfg.train.gpus_per_machine as u64,
                 cfg.train.gpus_per_machine,
             );
-            contexts.push(ExecContext::new(
-                part,
-                part % gpus,
+            let eager = match role {
+                None => true,
+                Some(crate::net::Role::Worker(w)) => w == part,
+                Some(crate::net::Role::Leader) => false,
+            };
+            contexts.push(if eager {
+                ExecContext::new(
+                    part,
+                    part % gpus,
+                    &sess.artifacts_dir,
+                    Arc::clone(&sess.manifest),
+                    Some(cache),
+                )?
+            } else {
+                ExecContext::deferred(
+                    part,
+                    part % gpus,
+                    &sess.artifacts_dir,
+                    Arc::clone(&sess.manifest),
+                    Some(cache),
+                )
+            });
+        }
+        let leader_ctx = if matches!(role, None | Some(crate::net::Role::Leader)) {
+            ExecContext::new(
+                mp.num_parts,
+                0,
                 &sess.artifacts_dir,
                 Arc::clone(&sess.manifest),
-                Some(cache),
-            )?);
-        }
-        let leader_ctx = ExecContext::new(
-            mp.num_parts,
-            0,
-            &sess.artifacts_dir,
-            Arc::clone(&sess.manifest),
-            None,
-        )?;
+                None,
+            )?
+        } else {
+            ExecContext::deferred(
+                mp.num_parts,
+                0,
+                &sess.artifacts_dir,
+                Arc::clone(&sess.manifest),
+                None,
+            )
+        };
         // Replica counts from the manifest: a weight appearing in several
         // worker artifacts is replicated across those partitions.
         let mut replica_count: HashMap<String, usize> = HashMap::new();
@@ -194,7 +232,11 @@ impl RafEngine {
         if let crate::net::Backend::Tcp(node) = &sess.net {
             crate::net::require_cluster_runtime(sess.cfg.train.runtime)?;
             if self.tcp.is_none() {
-                self.tcp = Some(crate::cluster::raf::TcpLanes::open(node, self.mp.num_parts)?);
+                self.tcp = Some(crate::cluster::raf::TcpLanes::open(
+                    node,
+                    self.mp.num_parts,
+                    sess.cfg.train.wire_exchange.is_mesh(),
+                )?);
             }
         }
         if let Some(lanes) = &self.tcp {

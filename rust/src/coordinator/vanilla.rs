@@ -116,15 +116,40 @@ impl VanillaEngine {
                 })
                 .collect()
         };
+        // Role-gated construction (PR 8): a TCP process plays one rank,
+        // so only that worker's context gets an eager PJRT client; the
+        // rest are deferred (they keep their caches for `hit_rates`,
+        // but never load executables). The vanilla leader runs no
+        // artifacts at all — every context stays deferred there.
+        // In-process runs build everything eagerly as before.
+        let role = match &sess.net {
+            crate::net::Backend::Tcp(node) => Some(node.role()),
+            crate::net::Backend::Channel => None,
+        };
         let mut contexts = Vec::with_capacity(part.num_parts);
         for w in 0..part.num_parts {
-            contexts.push(ExecContext::new(
-                w,
-                0,
-                &sess.artifacts_dir,
-                Arc::clone(&sess.manifest),
-                caches[w].take(),
-            )?);
+            let eager = match role {
+                None => true,
+                Some(crate::net::Role::Worker(r)) => r == w,
+                Some(crate::net::Role::Leader) => false,
+            };
+            contexts.push(if eager {
+                ExecContext::new(
+                    w,
+                    0,
+                    &sess.artifacts_dir,
+                    Arc::clone(&sess.manifest),
+                    caches[w].take(),
+                )?
+            } else {
+                ExecContext::deferred(
+                    w,
+                    0,
+                    &sess.artifacts_dir,
+                    Arc::clone(&sess.manifest),
+                    caches[w].take(),
+                )
+            });
         }
         let plan = BatchPlan::vanilla(&sess.manifest, part.num_parts)?;
         sess.params.ensure_artifacts(&sess.manifest, ["vanilla"]);

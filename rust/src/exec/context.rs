@@ -58,6 +58,28 @@ impl ExecContext {
             cache,
         })
     }
+
+    /// Build a context whose PJRT client is deferred until an artifact
+    /// is actually compiled. The role-gated TCP path uses this for
+    /// every rank the current process does **not** run: the context
+    /// still carries the partition's cache (the leader's fork ledgers
+    /// read foreign caches) but never instantiates a client, so a
+    /// K-worker cluster holds K+1 PJRT clients total instead of
+    /// (K+1)².
+    pub fn deferred(
+        worker: usize,
+        gpu: usize,
+        artifacts_dir: &str,
+        manifest: Arc<Manifest>,
+        cache: Option<FeatureCache>,
+    ) -> ExecContext {
+        ExecContext {
+            worker,
+            gpu,
+            rt: Runtime::deferred(artifacts_dir, manifest),
+            cache,
+        }
+    }
 }
 
 /// The `train.shared_session = true` escape hatch: a serialization

@@ -45,6 +45,7 @@ fn main() -> Result<()> {
                  \x20          [--runtime sequential|cluster] [--no-pipeline]\n\
                  \x20          [--no-dedup-fetch] [--shared-session] [--staleness N]\n\
                  \x20          [--transport channel|tcp --rank R --peers host:port[,...]]\n\
+                 \x20          [--wire-snapshots full|diff] [--wire-exchange star|mesh]\n\
                  \x20          [--checkpoint-dir dir] [--resume]\n\
                  \x20          [--hb-interval-ms N] [--hb-timeout-ms N]\n\
                  \x20          [--fail rank:batch:kind[:epoch]]  (kind: exit|stall|\n\
@@ -54,6 +55,10 @@ fn main() -> Result<()> {
                  \x20          spawn leader + K worker processes over loopback TCP,\n\
                  \x20          reap them, and (with --checkpoint-dir) respawn the\n\
                  \x20          cluster with --resume after a rank dies\n\
+                 \x20          [--hosts h0,h1,...] place rank i on hosts[i mod len]\n\
+                 \x20          (leader on hosts[0]; non-local hosts spawn via ssh)\n\
+                 \x20          [--spawn-shell cmd] shell that execs each spawn line\n\
+                 \x20          (default '/bin/sh -c'; try 'echo' for a dry run)\n\
                  info"
             );
             Ok(())
@@ -166,6 +171,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.train.transport = TransportKind::parse(t)
             .with_context(|| format!("unknown transport '{t}' (channel|tcp)"))?;
     }
+    if let Some(s) = args.get("wire-snapshots") {
+        cfg.train.wire_snapshots = heta::config::WireSnapshots::parse(s)
+            .with_context(|| format!("unknown wire-snapshots '{s}' (full|diff)"))?;
+    }
+    if let Some(s) = args.get("wire-exchange") {
+        cfg.train.wire_exchange = heta::config::WireExchange::parse(s)
+            .with_context(|| format!("unknown wire-exchange '{s}' (star|mesh)"))?;
+    }
     if let Some(s) = args.get("fail") {
         // Deterministic fault injection: every rank receives the same
         // spec and only the rank it names fires (see FaultSpec).
@@ -234,17 +247,28 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .context("--peers must name the leader's host:port first")?;
             heta::obs::set_log_rank(rank as i64);
             let hb = heta::net::tcp::HbCfg::from_train(&cfg.train);
+            // A mesh config changes the star handshake on *both* sides
+            // (the leader brokers the worker↔worker table), so every
+            // rank must pick the matching entry point from its config.
+            let mesh = cfg.train.wire_exchange.is_mesh();
             let node = if rank == 0 {
-                heta::log!(Info, "leader: listening on {leader_addr} for {parts} workers");
-                heta::net::tcp::listen_with(leader_addr, parts, hb)?
+                heta::log!(
+                    Info,
+                    "leader: listening on {leader_addr} for {parts} workers ({} exchange)",
+                    cfg.train.wire_exchange.name()
+                );
+                if mesh {
+                    heta::net::tcp::listen_mesh_with(leader_addr, parts, hb)?
+                } else {
+                    heta::net::tcp::listen_with(leader_addr, parts, hb)?
+                }
             } else {
-                heta::net::tcp::dial_with(
-                    leader_addr,
-                    rank - 1,
-                    parts,
-                    heta::net::tcp::DIAL_TIMEOUT,
-                    hb,
-                )?
+                let dial = if mesh {
+                    heta::net::tcp::dial_mesh_with
+                } else {
+                    heta::net::tcp::dial_with
+                };
+                dial(leader_addr, rank - 1, parts, heta::net::tcp::DIAL_TIMEOUT, hb)?
             };
             heta::net::Backend::Tcp(node)
         }
@@ -266,12 +290,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         // traffic only); the leader prints the real summary.
         heta::log!(
             Info,
-            "[{}/{}] worker rank done: {} epochs, wire {} sent / {} received",
+            "[{}/{}] worker rank done: {} epochs, wire {} sent / {} received \
+             (mesh lane {} sent / {} received)",
             cfg.name,
             engine,
             epochs,
             heta::util::fmt_bytes(report.wire.real_sent),
             heta::util::fmt_bytes(report.wire.real_recv),
+            heta::util::fmt_bytes(report.wire.mesh_sent),
+            heta::util::fmt_bytes(report.wire.mesh_recv),
         );
     } else {
         report.print(&format!(
@@ -352,6 +379,28 @@ fn reap_cluster(children: &mut [(usize, std::process::Child)]) -> Result<Vec<usi
     Ok(failed)
 }
 
+/// Hosts that mean "this machine" for `--hosts` placement: they spawn
+/// through the local spawn shell instead of an `ssh` prefix.
+fn is_local_host(host: &str) -> bool {
+    matches!(host, "local" | "localhost" | "127.0.0.1" | "::1")
+}
+
+/// Single-quote `arg` for a POSIX shell (and for the remote side of an
+/// `ssh host '<line>'` hop), escaping embedded single quotes. Plain
+/// words — the common case: paths, numbers, flag names — pass through
+/// unquoted so the printed spawn line stays readable.
+fn shell_quote(arg: &str) -> String {
+    let plain = !arg.is_empty()
+        && arg
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || "_-./:=,+@%".contains(c));
+    if plain {
+        arg.to_string()
+    } else {
+        format!("'{}'", arg.replace('\'', r"'\''"))
+    }
+}
+
 /// Spawn a local TCP cluster of this very binary — one leader plus `K`
 /// worker processes on a loopback port — forward the training flags to
 /// every rank, and reap them. The multi-machine path is the same
@@ -408,6 +457,8 @@ fn cmd_launch(args: &Args) -> Result<()> {
         "checkpoint-dir",
         "hb-interval-ms",
         "hb-timeout-ms",
+        "wire-snapshots",
+        "wire-exchange",
     ] {
         if let Some(v) = args.get(key) {
             forwarded.push(format!("--{key}"));
@@ -430,6 +481,23 @@ fn cmd_launch(args: &Args) -> Result<()> {
         // Validate here so a typo fails the launcher, not K+1 children.
         heta::config::FaultSpec::parse(s)?;
     }
+    // `--hosts h0,h1,...`: place rank i on hosts[i % len] (the leader,
+    // rank 0, always lands on hosts[0], which every rank dials). Local
+    // entries spawn through `--spawn-shell`; anything else gets an
+    // `ssh <host>` prefix. This is the multi-machine stub: the spawn
+    // line is printed before it runs, and `--spawn-shell echo` turns
+    // the whole launch into a dry run you can paste onto real machines.
+    let hosts: Option<Vec<String>> = args.get("hosts").map(|h| {
+        h.split(',').map(str::trim).filter(|s| !s.is_empty()).map(str::to_string).collect()
+    });
+    if let Some(hs) = &hosts {
+        ensure!(!hs.is_empty(), "--hosts needs at least one host");
+    }
+    let spawn_shell = args.get_or("spawn-shell", "/bin/sh -c");
+    ensure!(
+        !spawn_shell.trim().is_empty(),
+        "--spawn-shell must name a program (default '/bin/sh -c')"
+    );
     let recovery = args.get("checkpoint-dir").is_some();
     ensure!(
         fail_spec.is_none() || recovery,
@@ -442,7 +510,8 @@ fn cmd_launch(args: &Args) -> Result<()> {
         // A fresh port per attempt: the previous leader's accepted
         // connections linger in TIME_WAIT on the old port, and the
         // respawned leader must bind immediately.
-        let addr = format!("127.0.0.1:{}", base_port + attempt - 1);
+        let leader_host = hosts.as_ref().map(|h| h[0].as_str()).unwrap_or("127.0.0.1");
+        let addr = format!("{leader_host}:{}", base_port + attempt - 1);
         let mut argv = forwarded.clone();
         argv.push("--peers".into());
         argv.push(addr.clone());
@@ -466,12 +535,34 @@ fn cmd_launch(args: &Args) -> Result<()> {
         );
         let mut children = Vec::with_capacity(n + 1);
         for rank in 0..=n {
-            let child = std::process::Command::new(&exe)
-                .args(&argv)
-                .arg("--rank")
-                .arg(rank.to_string())
-                .spawn()
-                .with_context(|| format!("spawning rank {rank}"))?;
+            let child = if let Some(hs) = &hosts {
+                let host = hs[rank % hs.len()].as_str();
+                let mut line = shell_quote(&exe.to_string_lossy());
+                for a in argv.iter().chain([&"--rank".to_string(), &rank.to_string()]) {
+                    line.push(' ');
+                    line.push_str(&shell_quote(a));
+                }
+                let cmd = if is_local_host(host) {
+                    line
+                } else {
+                    format!("ssh {host} {}", shell_quote(&line))
+                };
+                let mut words = spawn_shell.split_whitespace();
+                let prog = words.next().context("--spawn-shell must name a program")?;
+                heta::log!(Info, "launch: rank {rank} on {host}: {spawn_shell} {cmd}");
+                std::process::Command::new(prog)
+                    .args(words)
+                    .arg(&cmd)
+                    .spawn()
+                    .with_context(|| format!("spawning rank {rank} on {host} via {spawn_shell}"))?
+            } else {
+                std::process::Command::new(&exe)
+                    .args(&argv)
+                    .arg("--rank")
+                    .arg(rank.to_string())
+                    .spawn()
+                    .with_context(|| format!("spawning rank {rank}"))?
+            };
             heta::log!(Info, "launch: rank {rank} -> pid {}", child.id());
             children.push((rank, child));
         }

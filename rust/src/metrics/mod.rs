@@ -243,6 +243,17 @@ impl EpochReport {
                 crate::util::fmt_bytes(self.wire.modeled_sent),
                 crate::util::fmt_bytes(self.wire.modeled_recv),
             );
+            // Per-lane split (PR 8): mesh bytes are a subset of the
+            // real totals, so the leader-star share is the difference.
+            if self.wire.mesh_sent > 0 || self.wire.mesh_recv > 0 {
+                println!(
+                    "    wire lanes: star {} out / {} in | mesh {} out / {} in",
+                    crate::util::fmt_bytes(self.wire.real_sent - self.wire.mesh_sent),
+                    crate::util::fmt_bytes(self.wire.real_recv - self.wire.mesh_recv),
+                    crate::util::fmt_bytes(self.wire.mesh_sent),
+                    crate::util::fmt_bytes(self.wire.mesh_recv),
+                );
+            }
         }
         if !self.worker_busy_s.is_empty() {
             let rows: Vec<String> = self
@@ -337,6 +348,7 @@ mod tests {
         a.fetch.bytes = 400;
         a.wire.real_sent = 100;
         a.wire.frames_sent = 3;
+        a.wire.mesh_sent = 40;
         a.loss_mean = 3.0;
         a.accuracy = 0.5;
         a.batches = 2;
@@ -355,6 +367,7 @@ mod tests {
         b.fetch.bytes = 200;
         b.wire.real_recv = 50;
         b.wire.frames_recv = 2;
+        b.wire.mesh_recv = 15;
         b.loss_mean = 2.0;
         b.accuracy = 0.75;
         b.batches = 1;
@@ -386,6 +399,7 @@ mod tests {
         assert_eq!((total.fetch.rows, total.fetch.bytes), (15, 600));
         assert_eq!((total.wire.real_sent, total.wire.real_recv), (100, 50));
         assert_eq!(total.wire.frames(), 5);
+        assert_eq!((total.wire.mesh_sent, total.wire.mesh_recv), (40, 15), "mesh split (PR 8)");
         assert_eq!(total.loss_mean, 2.0, "latest epoch's loss");
         assert_eq!(total.accuracy, 0.75);
         assert_eq!(total.batches, 3);

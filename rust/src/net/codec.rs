@@ -36,7 +36,7 @@ use crate::hetgraph::NodeId;
 use crate::kvstore::{FetchStats, StoreDelta};
 use crate::metrics::timeline::WorkerSpan;
 use crate::metrics::StageTimes;
-use crate::runtime::ParamSnapshot;
+use crate::runtime::{ParamDiff, ParamSnapshot};
 
 /// Version of the message layouts below, exchanged in the transport
 /// handshake. Peers with different versions refuse to connect instead
@@ -44,8 +44,11 @@ use crate::runtime::ParamSnapshot;
 /// path and a leader timestamp in the handshake reply (PR 6). v3: the
 /// reserved heartbeat lane (`tcp::LANE_HB`) and the checkpoint file
 /// format of [`crate::ckpt`], which stamps this version into its
-/// header (PR 7).
-pub const CODEC_VERSION: u16 = 3;
+/// header (PR 7). v4: the wire-efficiency tier (PR 8) — version-chained
+/// [`ParamDiff`] frames and the `NeedFull` NACK on both engines' lanes,
+/// plus the worker↔worker mesh lane (`tcp::LANE_MESH_DATA`) and its
+/// `MeshFwd` partial-aggregation frames.
+pub const CODEC_VERSION: u16 = 4;
 
 /// A message that can be encoded onto / decoded from a wire frame.
 pub trait WireCodec: Sized {
@@ -427,6 +430,42 @@ impl WireCodec for ParamSnapshot {
     }
 }
 
+/// Diffs ship like snapshots — canonical name-sorted tensors — plus
+/// the version pair that chains them: `from_version` must match the
+/// receiver's last reconstructed snapshot, `to_version` stamps the
+/// result. Decoding re-sorts via [`ParamDiff::from_tensors`], so a
+/// non-canonical frame cannot poison downstream re-encodes.
+impl WireCodec for ParamDiff {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u64(self.from_version);
+        w.u64(self.to_version);
+        let tensors = self.tensors_sorted();
+        w.u32(tensors.len() as u32);
+        for (name, data) in tensors {
+            w.str(name);
+            w.f32s(data);
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<ParamDiff> {
+        let from_version = r.u64()?;
+        let to_version = r.u64()?;
+        ensure!(
+            to_version >= from_version,
+            "corrupt param diff frame: covers v{from_version}..v{to_version} \
+             (the chain never runs backwards)"
+        );
+        let n = r.seq_len(8)?;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str()?;
+            let data = r.f32s()?;
+            tensors.push((name, data));
+        }
+        Ok(ParamDiff::from_tensors(from_version, to_version, tensors))
+    }
+}
+
 impl WireCodec for StoreDelta {
     fn encode(&self, w: &mut ByteWriter) {
         w.u32(self.rows.len() as u32);
@@ -589,6 +628,40 @@ mod tests {
         let mut r = ByteReader::new(&bytes);
         let err = r.str().unwrap_err();
         assert!(format!("{err}").contains("UTF-8"), "{err}");
+    }
+
+    #[test]
+    fn param_diff_round_trips_and_rejects_backwards_chains() {
+        let diff = ParamDiff::from_tensors(
+            7,
+            9,
+            vec![
+                ("zw".into(), vec![1.0, -0.0, f32::NAN]),
+                ("aw".into(), vec![0.5]),
+            ],
+        );
+        let a = encode_message(&diff);
+        let b = encode_message(&diff);
+        assert_eq!(a, b, "diff encoding must be canonical");
+        let back: ParamDiff = decode_message(&a).unwrap();
+        // NaN bits break PartialEq; compare the re-encodings instead.
+        assert_eq!(encode_message(&back), a, "diff must round-trip bit-exactly");
+        assert_eq!(back.from_version, 7);
+        assert_eq!(back.to_version, 9);
+        assert_eq!(back.tensors_sorted()[0].0, "aw", "decode keeps canonical order");
+
+        // A chain that runs backwards is corrupt on its face.
+        let mut w = ByteWriter::new();
+        w.u64(9);
+        w.u64(7);
+        w.u32(0);
+        let err = decode_message::<ParamDiff>(&w.into_bytes()).unwrap_err();
+        assert!(format!("{err}").contains("backwards"), "{err}");
+
+        // Truncations never panic.
+        for cut in 0..a.len() {
+            assert!(decode_message::<ParamDiff>(&a[..cut]).is_err());
+        }
     }
 
     #[test]

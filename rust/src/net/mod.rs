@@ -89,6 +89,11 @@ pub struct WireTraffic {
     pub frames_recv: u64,
     pub modeled_sent: u64,
     pub modeled_recv: u64,
+    /// Subset of `real_sent` that left on the worker↔worker mesh lane
+    /// (PR 8) — zero on a plain star or a leader node.
+    pub mesh_sent: u64,
+    /// Subset of `real_recv` that arrived on the mesh lane.
+    pub mesh_recv: u64,
 }
 
 impl WireTraffic {
@@ -102,6 +107,8 @@ impl WireTraffic {
             frames_recv: self.frames_recv - earlier.frames_recv,
             modeled_sent: self.modeled_sent - earlier.modeled_sent,
             modeled_recv: self.modeled_recv - earlier.modeled_recv,
+            mesh_sent: self.mesh_sent - earlier.mesh_sent,
+            mesh_recv: self.mesh_recv - earlier.mesh_recv,
         }
     }
 
@@ -112,6 +119,8 @@ impl WireTraffic {
         self.frames_recv += o.frames_recv;
         self.modeled_sent += o.modeled_sent;
         self.modeled_recv += o.modeled_recv;
+        self.mesh_sent += o.mesh_sent;
+        self.mesh_recv += o.mesh_recv;
     }
 
     pub fn real_total(&self) -> u64 {
@@ -140,16 +149,21 @@ mod tests {
             frames_recv: 2,
             modeled_sent: 60,
             modeled_recv: 30,
+            mesh_sent: 10,
+            mesh_recv: 5,
         };
         let mut b = a;
         b.real_sent = 150;
         b.frames_sent = 6;
         b.modeled_sent = 90;
+        b.mesh_sent = 25;
         let d = b.since(&a);
         assert_eq!(d.real_sent, 50);
         assert_eq!(d.frames_sent, 2);
         assert_eq!(d.modeled_sent, 30);
         assert_eq!(d.real_recv, 0);
+        assert_eq!(d.mesh_sent, 15);
+        assert_eq!(d.mesh_recv, 0);
         let mut m = a;
         m.merge(&d);
         assert_eq!(m, b);

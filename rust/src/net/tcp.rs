@@ -72,7 +72,16 @@ pub const LANE_BARRIER_DOWN: u8 = 3;
 /// reach a lane queue and never touch the traffic counters — liveness
 /// is not traffic.
 pub const LANE_HB: u8 = 4;
-const NUM_LANES: usize = 5;
+/// Worker↔worker mesh lane (PR 8): RAF partial-aggregation frames flow
+/// rank-to-rank here when `train.wire_exchange = mesh`, instead of
+/// relaying through the leader star. Only nodes built by the
+/// mesh-enabled dial/accept paths ([`dial_mesh_with`] /
+/// [`accept_workers_mesh_with`]) have the sockets behind it; bytes on
+/// this lane are counted separately ([`WireTraffic::mesh_sent`] /
+/// `mesh_recv`) so `EpochReport.wire` can split leader vs mesh
+/// traffic.
+pub const LANE_MESH_DATA: u8 = 5;
+const NUM_LANES: usize = 6;
 
 /// Refuse frames beyond this size: a corrupt length prefix must not
 /// drive a multi-GiB allocation. Generous next to any real message
@@ -127,6 +136,11 @@ struct Counters {
     frames_recv: AtomicU64,
     modeled_sent: AtomicU64,
     modeled_recv: AtomicU64,
+    /// Subset of `real_sent`/`real_recv` that moved on the
+    /// worker↔worker mesh lane ([`LANE_MESH_DATA`]) — the split
+    /// `EpochReport.wire` reports as leader vs mesh bytes.
+    mesh_sent: AtomicU64,
+    mesh_recv: AtomicU64,
 }
 
 impl Counters {
@@ -138,6 +152,8 @@ impl Counters {
             frames_recv: self.frames_recv.load(Ordering::Relaxed),
             modeled_sent: self.modeled_sent.load(Ordering::Relaxed),
             modeled_recv: self.modeled_recv.load(Ordering::Relaxed),
+            mesh_sent: self.mesh_sent.load(Ordering::Relaxed),
+            mesh_recv: self.mesh_recv.load(Ordering::Relaxed),
         }
     }
 }
@@ -293,16 +309,11 @@ impl<T> TcpChannel<T> {
     pub fn traffic(&self) -> WireTraffic {
         self.shared.counters.snapshot()
     }
-}
 
-impl<T: WireCodec + Wire> Transport<T> for TcpChannel<T> {
-    fn rank(&self) -> usize {
-        self.shared.rank
-    }
-
-    fn send(&self, to: usize, payload: T) -> Result<()> {
-        let conn = self
-            .shared
+    /// The connection toward logical rank `to`, with the errors both
+    /// send paths share.
+    fn conn(&self, to: usize) -> Result<&Arc<PeerConn>> {
+        self.shared
             .peers
             .get(to)
             .ok_or_else(|| {
@@ -312,22 +323,19 @@ impl<T: WireCodec + Wire> Transport<T> for TcpChannel<T> {
             .ok_or_else(|| {
                 anyhow!(
                     "no socket from rank {} to rank {to} (the star links workers \
-                     to the leader only)",
+                     to the leader only; worker↔worker sockets exist only on a \
+                     mesh-built node)",
                     self.shared.rank
                 )
-            })?;
-        let mut body = encode_message(&payload);
-        if self.shared.corrupt_next.swap(false, Ordering::SeqCst) {
-            // Fault injection: flip the tag/top bit so the receiver's
-            // decode deterministically rejects the frame (an unknown
-            // enum tag), or append trailing garbage when the body is
-            // empty. The frame header stays valid — the stream must not
-            // desync, the *message* must fail its total decode.
-            match body.first_mut() {
-                Some(b) => *b ^= 0x80,
-                None => body.push(0xFF),
-            }
-        }
+            })
+    }
+
+    /// Write one already-encoded frame to `conn` and account for it.
+    /// Shared by [`Transport::send`] (one encode, one write) and the
+    /// encode-once [`Transport::broadcast_encoded`] (one encode, K
+    /// writes): counters tick **per write**, so frame counts stay
+    /// exact either way.
+    fn write_frame(&self, to: usize, conn: &PeerConn, body: &[u8]) -> Result<()> {
         // Check before the u32 cast: a >= 4 GiB body must not wrap into
         // a small length that desyncs the stream.
         ensure!(
@@ -341,7 +349,7 @@ impl<T: WireCodec + Wire> Transport<T> for TcpChannel<T> {
             (|| -> std::io::Result<()> {
                 w.write_all(&len.to_le_bytes())?;
                 w.write_all(&[self.lane])?;
-                w.write_all(&body)?;
+                w.write_all(body)?;
                 w.flush()
             })()
             .map_err(|e| {
@@ -353,9 +361,73 @@ impl<T: WireCodec + Wire> Transport<T> for TcpChannel<T> {
         let c = &self.shared.counters;
         c.real_sent.fetch_add(4 + len as u64, Ordering::Relaxed);
         c.frames_sent.fetch_add(1, Ordering::Relaxed);
-        c.modeled_sent.fetch_add(payload.wire_bytes(), Ordering::Relaxed);
+        if self.lane == LANE_MESH_DATA {
+            c.mesh_sent.fetch_add(4 + len as u64, Ordering::Relaxed);
+        }
         if crate::obs::enabled() {
             crate::obs::counter_add(&format!("wire.lane{}.tx_bytes", self.lane), 4 + len as u64);
+        }
+        Ok(())
+    }
+}
+
+/// Fault injection ([`FaultKind::CorruptFrame`]): flip the tag/top bit
+/// so the receiver's decode deterministically rejects the frame (an
+/// unknown enum tag), or append trailing garbage when the body is
+/// empty. The frame header stays valid — the stream must not desync,
+/// the *message* must fail its total decode.
+fn mangle_body(body: &mut Vec<u8>) {
+    match body.first_mut() {
+        Some(b) => *b ^= 0x80,
+        None => body.push(0xFF),
+    }
+}
+
+impl<T: WireCodec + Wire> Transport<T> for TcpChannel<T> {
+    fn rank(&self) -> usize {
+        self.shared.rank
+    }
+
+    fn send(&self, to: usize, payload: T) -> Result<()> {
+        let conn = self.conn(to)?;
+        let mut body = encode_message(&payload);
+        if self.shared.corrupt_next.swap(false, Ordering::SeqCst) {
+            mangle_body(&mut body);
+        }
+        self.write_frame(to, conn, &body)?;
+        self.shared
+            .counters
+            .modeled_sent
+            .fetch_add(payload.wire_bytes(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Encode-once broadcast: serialize the frame exactly once and
+    /// write the same bytes to every worker connection — the leader's
+    /// per-batch snapshot release costs one encode instead of K. The
+    /// one-shot [`FaultKind::CorruptFrame`] armament corrupts exactly
+    /// one copy (worker 0's), matching the single-frame semantics of
+    /// the per-peer path.
+    fn broadcast_encoded(&self, workers: usize, payload: &T) -> Result<()>
+    where
+        T: Clone,
+    {
+        let body = encode_message(payload);
+        let wire = payload.wire_bytes();
+        let corrupt_first = self.shared.corrupt_next.swap(false, Ordering::SeqCst);
+        for w in 0..workers {
+            let conn = self.conn(w)?;
+            if w == 0 && corrupt_first {
+                let mut mangled = body.clone();
+                mangle_body(&mut mangled);
+                self.write_frame(w, conn, &mangled)?;
+            } else {
+                self.write_frame(w, conn, &body)?;
+            }
+            self.shared
+                .counters
+                .modeled_sent
+                .fetch_add(wire, Ordering::Relaxed);
         }
         Ok(())
     }
@@ -585,7 +657,7 @@ fn build_node(
 
 /// Lane names for the reader-thread trace tracks, indexed by lane id.
 const RX_LANE_NAMES: [&str; NUM_LANES] =
-    ["rx-lane0", "rx-lane1", "rx-lane2", "rx-lane3", "rx-lane4"];
+    ["rx-lane0", "rx-lane1", "rx-lane2", "rx-lane3", "rx-lane4", "rx-lane5"];
 
 /// Park this reader's recorded frame spans in the obs sink as one
 /// track; the next epoch-end [`crate::obs::TraceBlob::collect`] on
@@ -652,6 +724,9 @@ fn reader_loop(
         }
         counters.real_recv.fetch_add(4 + len as u64, Ordering::Relaxed);
         counters.frames_recv.fetch_add(1, Ordering::Relaxed);
+        if lane[0] == LANE_MESH_DATA {
+            counters.mesh_recv.fetch_add(4 + len as u64, Ordering::Relaxed);
+        }
         if crate::obs::enabled() && (lane[0] as usize) < NUM_LANES {
             crate::obs::counter_add(&format!("wire.lane{}.rx_bytes", lane[0]), 4 + len as u64);
             rx_events.push(crate::obs::ObsEvent {
@@ -734,6 +809,36 @@ pub fn accept_workers(listener: TcpListener, workers: usize) -> Result<TcpNode> 
 
 /// [`accept_workers`] with explicit heartbeat timing.
 pub fn accept_workers_with(listener: TcpListener, workers: usize, hb: HbCfg) -> Result<TcpNode> {
+    accept_workers_impl(listener, workers, hb, false)
+}
+
+/// Leader side of a **mesh-enabled** star: accept every worker as
+/// usual, then broker the worker↔worker mesh — gather each worker's
+/// mesh listen address over its star connection and broadcast the full
+/// table back, so workers can dial each other by rank order. The
+/// leader itself holds no mesh sockets; its star topology (and byte
+/// accounting) is unchanged.
+pub fn accept_workers_mesh_with(
+    listener: TcpListener,
+    workers: usize,
+    hb: HbCfg,
+) -> Result<TcpNode> {
+    accept_workers_impl(listener, workers, hb, true)
+}
+
+/// [`listen_with`] for a mesh-enabled star.
+pub fn listen_mesh_with(addr: &str, workers: usize, hb: HbCfg) -> Result<TcpNode> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("leader binding the listen address {addr}"))?;
+    accept_workers_mesh_with(listener, workers, hb)
+}
+
+fn accept_workers_impl(
+    listener: TcpListener,
+    workers: usize,
+    hb: HbCfg,
+    mesh: bool,
+) -> Result<TcpNode> {
     ensure!(workers >= 1, "a star needs at least one worker rank");
     // Poll the listener against an overall deadline: `TcpListener` has
     // no accept timeout, and blocking forever on a worker that died
@@ -782,12 +887,235 @@ pub fn accept_workers_with(listener: TcpListener, workers: usize, hb: HbCfg) -> 
             }
         }
     }
-    build_node(
-        workers,
-        workers,
-        conns.into_iter().flatten().collect(),
-        hb,
-    )
+    let mut conns: Vec<(usize, TcpStream)> = conns.into_iter().flatten().collect();
+    if mesh {
+        broker_mesh_table(&mut conns, workers)?;
+    }
+    build_node(workers, workers, conns, hb)
+}
+
+/// Hard cap on one announced mesh address ("host:port"); a corrupt
+/// length prefix must not drive an allocation.
+const MESH_ADDR_CAP: usize = 256;
+
+/// Write one `u32 len | bytes` blob (the raw-stream framing the mesh
+/// brokerage uses before any lane machinery exists).
+fn write_blob(stream: &mut TcpStream, bytes: &[u8]) -> std::io::Result<()> {
+    stream.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    stream.write_all(bytes)?;
+    stream.flush()
+}
+
+/// Read one `u32 len | bytes` blob, capped.
+fn read_blob(stream: &mut TcpStream, cap: usize, what: &str) -> Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    stream
+        .read_exact(&mut hdr)
+        .with_context(|| format!("reading the length of {what}"))?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    ensure!(len <= cap, "{what}: a {len}-byte blob exceeds the {cap}-byte cap");
+    let mut buf = vec![0u8; len];
+    stream
+        .read_exact(&mut buf)
+        .with_context(|| format!("reading {what} ({len} bytes)"))?;
+    Ok(buf)
+}
+
+/// Leader half of the mesh brokerage: read every worker's announced
+/// mesh listen address (in rank order — each worker sends it right
+/// after its handshake, so the streams already buffer them), then
+/// broadcast the complete rank→address table to every worker.
+fn broker_mesh_table(conns: &mut [(usize, TcpStream)], workers: usize) -> Result<()> {
+    let mut addrs: Vec<String> = vec![String::new(); workers];
+    for (w, stream) in conns.iter_mut() {
+        stream
+            .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+            .context("arming the mesh-address timeout")?;
+        let blob = read_blob(
+            stream,
+            MESH_ADDR_CAP,
+            &format!("worker {w}'s mesh listen address"),
+        )?;
+        let addr = std::str::from_utf8(&blob)
+            .map_err(|e| anyhow!("worker {w}'s mesh address is not UTF-8 ({e})"))?;
+        stream
+            .set_read_timeout(None)
+            .context("disarming the mesh-address timeout")?;
+        addrs[*w] = addr.to_string();
+    }
+    let mut table = super::codec::ByteWriter::new();
+    table.u32(workers as u32);
+    for a in &addrs {
+        table.str(a);
+    }
+    let table = table.into_bytes();
+    for (w, stream) in conns.iter_mut() {
+        write_blob(stream, &table)
+            .with_context(|| format!("sending the mesh table to worker {w}"))?;
+    }
+    Ok(())
+}
+
+/// Decode the rank→address table the leader brokered.
+fn parse_mesh_table(bytes: &[u8], workers: usize) -> Result<Vec<String>> {
+    let mut r = super::codec::ByteReader::new(bytes);
+    let n = r.u32()? as usize;
+    ensure!(
+        n == workers,
+        "mesh table lists {n} workers, this star has {workers}"
+    );
+    let addrs: Vec<String> = (0..n).map(|_| r.str()).collect::<Result<_>>()?;
+    r.finish().context("decoding the mesh address table")?;
+    Ok(addrs)
+}
+
+/// Worker half of the mesh brokerage plus the dial-by-rank-order mesh
+/// itself: bind an ephemeral listener, announce it to the leader, read
+/// the brokered table, then **dial every lower rank and accept every
+/// higher rank** — a total order on connection initiative, so the mesh
+/// forms without symmetry-breaking races. Returns the established
+/// worker↔worker connections (peer rank, stream).
+fn mesh_join(
+    leader_stream: &mut TcpStream,
+    worker: usize,
+    workers: usize,
+) -> Result<Vec<(usize, TcpStream)>> {
+    let ip = leader_stream
+        .local_addr()
+        .context("mesh: reading the local address of the leader link")?
+        .ip();
+    let listener = TcpListener::bind((ip, 0))
+        .with_context(|| format!("worker {worker} binding its mesh listener on {ip}"))?;
+    let my_addr = listener
+        .local_addr()
+        .context("mesh listener address")?
+        .to_string();
+    ensure!(
+        my_addr.len() <= MESH_ADDR_CAP,
+        "mesh listen address '{my_addr}' exceeds the {MESH_ADDR_CAP}-byte cap"
+    );
+    write_blob(leader_stream, my_addr.as_bytes())
+        .with_context(|| format!("worker {worker} announcing its mesh address"))?;
+    // The table only comes back once ALL workers dialed the leader, so
+    // this wait gets the accept deadline, not the handshake one.
+    leader_stream
+        .set_read_timeout(Some(ACCEPT_TIMEOUT))
+        .context("arming the mesh-table timeout")?;
+    let table = read_blob(
+        leader_stream,
+        4 + workers * (MESH_ADDR_CAP + 4),
+        "the mesh address table",
+    )?;
+    leader_stream
+        .set_read_timeout(None)
+        .context("disarming the mesh-table timeout")?;
+    let addrs = parse_mesh_table(&table, workers)?;
+    let mut conns: Vec<(usize, TcpStream)> = Vec::with_capacity(workers.saturating_sub(1));
+    // Dial phase: every lower rank. Their listeners were bound before
+    // the table was brokered, so the backlog holds us even if the peer
+    // is still in its own dial phase.
+    for (p, addr) in addrs.iter().enumerate().take(worker) {
+        let deadline = Instant::now() + DIAL_TIMEOUT;
+        let mut backoff = Duration::from_millis(25);
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "worker {worker} could not reach mesh peer {p} at {addr} \
+                             within {DIAL_TIMEOUT:?}: {e}"
+                        );
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(500));
+                }
+            }
+        };
+        configure(&stream)?;
+        stream
+            .write_all(&handshake_bytes(worker as u16))
+            .and_then(|_| stream.flush())
+            .with_context(|| format!("worker {worker} greeting mesh peer {p}"))?;
+        stream
+            .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+            .context("arming the mesh-handshake timeout")?;
+        let got = read_handshake(&mut stream, &format!("mesh peer {p} at {addr}"))? as usize;
+        ensure!(
+            got == p,
+            "mesh peer at {addr} answered as rank {got}, the table lists rank {p}"
+        );
+        stream
+            .set_read_timeout(None)
+            .context("disarming the mesh-handshake timeout")?;
+        conns.push((p, stream));
+    }
+    // Accept phase: every higher rank dials us. Same robustness rules
+    // as the leader's accept loop — a bad dial-in is rejected and
+    // logged, not fatal.
+    listener
+        .set_nonblocking(true)
+        .context("arming the mesh accept deadline")?;
+    let deadline = Instant::now() + ACCEPT_TIMEOUT;
+    let mut taken: Vec<bool> = vec![false; workers];
+    let mut pending = workers - worker - 1;
+    while pending > 0 {
+        let (mut stream, peer_addr) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "worker {worker}: only {} of {} higher-ranked mesh peers dialed \
+                         in within {ACCEPT_TIMEOUT:?}",
+                        workers - worker - 1 - pending,
+                        workers - worker - 1
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(25));
+                continue;
+            }
+            Err(e) => return Err(e).context("accepting a mesh dial-in"),
+        };
+        stream
+            .set_nonblocking(false)
+            .context("restoring blocking mode on an accepted mesh socket")?;
+        let admitted = (|| -> Result<usize> {
+            configure(&stream)?;
+            stream
+                .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+                .context("arming the mesh-handshake timeout")?;
+            let q = read_handshake(&mut stream, &format!("mesh dialer {peer_addr}"))? as usize;
+            ensure!(
+                q > worker && q < workers,
+                "mesh dialer {peer_addr} claims rank {q}; rank {worker} only accepts \
+                 higher worker ranks (dial-by-rank-order)"
+            );
+            ensure!(!taken[q], "two mesh dialers claim rank {q}");
+            stream
+                .write_all(&handshake_bytes(worker as u16))
+                .and_then(|_| stream.flush())
+                .with_context(|| format!("answering mesh peer {q}"))?;
+            stream
+                .set_read_timeout(None)
+                .context("disarming the mesh-handshake timeout")?;
+            Ok(q)
+        })();
+        match admitted {
+            Ok(q) => {
+                taken[q] = true;
+                conns.push((q, stream));
+                pending -= 1;
+            }
+            Err(e) => {
+                crate::log!(
+                    Warn,
+                    "worker {worker}: rejected mesh dial-in from {peer_addr} ({e:#}); \
+                     still waiting for {pending} peers"
+                );
+            }
+        }
+    }
+    Ok(conns)
 }
 
 /// One dial-in's handshake on the leader side; `taken[w]` marks ranks
@@ -854,6 +1182,33 @@ pub fn dial_with(
     timeout: Duration,
     hb: HbCfg,
 ) -> Result<TcpNode> {
+    dial_impl(leader_addr, worker, workers, timeout, hb, false)
+}
+
+/// Worker side of a **mesh-enabled** star: dial the leader as usual,
+/// then join the worker↔worker mesh the leader brokers (announce a
+/// mesh listen address, read the table, dial every lower rank, accept
+/// every higher one). Must be paired with
+/// [`accept_workers_mesh_with`] on the leader — a plain leader never
+/// brokers the table and this dial would time out waiting for it.
+pub fn dial_mesh_with(
+    leader_addr: &str,
+    worker: usize,
+    workers: usize,
+    timeout: Duration,
+    hb: HbCfg,
+) -> Result<TcpNode> {
+    dial_impl(leader_addr, worker, workers, timeout, hb, true)
+}
+
+fn dial_impl(
+    leader_addr: &str,
+    worker: usize,
+    workers: usize,
+    timeout: Duration,
+    hb: HbCfg,
+    mesh: bool,
+) -> Result<TcpNode> {
     ensure!(
         worker < workers,
         "worker rank {worker} outside the {workers}-worker star"
@@ -899,7 +1254,13 @@ pub fn dial_with(
         "leader at {leader_addr} runs a {leader_rank}-worker star, this rank expects \
          {workers} (mismatched --peers / num_partitions?)"
     );
-    build_node(worker, workers, vec![(workers, stream)], hb)
+    let mut conns = if mesh {
+        mesh_join(&mut stream, worker, workers)?
+    } else {
+        Vec::new()
+    };
+    conns.push((workers, stream));
+    build_node(worker, workers, conns, hb)
 }
 
 #[cfg(test)]
@@ -1183,6 +1544,131 @@ mod tests {
             format!("{err:#}").contains("rank 0"),
             "the hangup must name the peer: {err:#}"
         );
+    }
+
+    fn loopback_mesh(workers: usize) -> (TcpNode, Vec<TcpNode>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let hb = HbCfg {
+            interval_ms: 0,
+            timeout_ms: 0,
+        };
+        let dialers: Vec<_> = (0..workers)
+            .map(|w| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    dial_mesh_with(&addr, w, workers, DIAL_TIMEOUT, hb).unwrap()
+                })
+            })
+            .collect();
+        let leader = accept_workers_mesh_with(listener, workers, hb).unwrap();
+        let nodes = dialers.into_iter().map(|h| h.join().unwrap()).collect();
+        (leader, nodes)
+    }
+
+    #[test]
+    fn mesh_workers_exchange_frames_rank_to_rank() {
+        // Three workers so the mesh has both a dial edge (1→0, 2→0,
+        // 2→1) and an accept edge per interior rank. Every worker ships
+        // one frame to every other worker over the mesh lane and reads
+        // the ones addressed to it.
+        let (leader, workers) = loopback_mesh(3);
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|node| {
+                std::thread::spawn(move || {
+                    let mesh: TcpChannel<Msg> = node.open_lane(LANE_MESH_DATA).unwrap();
+                    let me = node.rank();
+                    for p in (0..3).filter(|&p| p != me) {
+                        mesh.send(p, Msg { batch: me as u64, data: vec![me as f32] })
+                            .unwrap();
+                    }
+                    let mut seen = [false; 3];
+                    for _ in 0..2 {
+                        let e = mesh.recv().unwrap();
+                        assert_eq!(e.payload.batch, e.from as u64);
+                        assert_eq!(e.payload.data, vec![e.from as f32]);
+                        assert!(!seen[e.from], "duplicate mesh frame from {}", e.from);
+                        seen[e.from] = true;
+                    }
+                    let t = mesh.traffic();
+                    assert_eq!(t.mesh_sent, t.real_sent, "workers only sent on the mesh");
+                    assert_eq!(t.mesh_recv, t.real_recv);
+                    assert!(t.mesh_sent > 0 && t.mesh_recv > 0);
+                    node
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // The leader never holds mesh sockets; its counters stay clean.
+        let t = leader.traffic();
+        assert_eq!(t.mesh_sent, 0);
+        assert_eq!(t.mesh_recv, 0);
+    }
+
+    #[test]
+    fn mesh_join_requires_a_mesh_leader() {
+        // A mesh dial against a plain (non-brokering) leader must fail
+        // with a real error, not wedge: the leader never sends the
+        // table, and its next frame on the raw stream would desync. The
+        // cheap observable half is table decode rejection.
+        let err = parse_mesh_table(&[9, 0, 0, 0], 2).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("mesh table"),
+            "a wrong-size table must explain itself: {err:#}"
+        );
+        let err = parse_mesh_table(&[2, 0, 0], 2).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn broadcast_encoded_delivers_identical_frames_to_every_worker() {
+        let (leader, workers) = loopback_star(2);
+        let down: TcpChannel<Msg> = leader.open_lane(LANE_DATA_DOWN).unwrap();
+        let payload = Msg {
+            batch: 7,
+            data: vec![1.5, -0.0, f32::MIN_POSITIVE],
+        };
+        down.broadcast_encoded(2, &payload).unwrap();
+        let t = down.traffic();
+        assert_eq!(t.frames_sent, 2, "one frame per worker, encoded once");
+        assert_eq!(t.modeled_sent, 2 * payload.wire_bytes());
+        assert_eq!(t.real_sent % 2, 0, "both copies are byte-identical");
+        for node in &workers {
+            let lane: TcpChannel<Msg> = node.open_lane(LANE_DATA_DOWN).unwrap();
+            let e = lane.recv().unwrap();
+            assert_eq!(e.from, 2);
+            assert_eq!(e.payload, payload);
+            assert_eq!(
+                e.payload.data[1].to_bits(),
+                (-0.0f32).to_bits(),
+                "broadcast must preserve float bits exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_encoded_one_shot_corruption_hits_exactly_one_copy() {
+        let (leader, workers) = loopback_star(2);
+        let down: TcpChannel<Msg> = leader.open_lane(LANE_DATA_DOWN).unwrap();
+        let lanes: Vec<TcpChannel<Msg>> = workers
+            .iter()
+            .map(|n| n.open_lane(LANE_DATA_DOWN).unwrap())
+            .collect();
+        let payload = Msg { batch: 3, data: vec![2.0; 8] };
+        leader.inject_corrupt_frame();
+        down.broadcast_encoded(2, &payload).unwrap();
+        let err = lanes[0].recv().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("decoding"),
+            "worker 0's copy was mangled: {err:#}"
+        );
+        assert_eq!(lanes[1].recv().unwrap().payload, payload, "worker 1's copy is clean");
+        // The armament was one-shot: the next broadcast is clean.
+        down.broadcast_encoded(2, &payload).unwrap();
+        assert_eq!(lanes[1].recv().unwrap().payload, payload);
     }
 
     #[test]

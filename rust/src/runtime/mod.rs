@@ -115,7 +115,11 @@ impl Manifest {
 /// share mutable state. The parsed [`Manifest`] is `Arc`-shared across
 /// all of a session's runtimes (it is immutable after load).
 pub struct Runtime {
-    pub client: xla::PjRtClient,
+    /// Created eagerly by [`Runtime::with_manifest`], or on first
+    /// compile by [`Runtime::deferred`] — the role-gated TCP path
+    /// builds one *deferred* runtime per foreign rank so a K-worker
+    /// cluster holds K+1 PJRT clients total instead of (K+1)².
+    client: Option<xla::PjRtClient>,
     pub manifest: Arc<Manifest>,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
     dir: String,
@@ -130,27 +134,55 @@ impl Runtime {
     }
 
     /// Create a runtime over an already-parsed manifest (one PJRT client
-    /// per call — the per-worker-context path).
+    /// per call — the per-worker-context path). The client is created
+    /// eagerly so a broken PJRT install fails at build time, not in the
+    /// middle of epoch 0.
     pub fn with_manifest(dir: &str, manifest: Arc<Manifest>) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
         Ok(Runtime {
-            client,
+            client: Some(client),
             manifest,
             exes: HashMap::new(),
             dir: dir.to_string(),
         })
     }
 
+    /// Create a runtime whose PJRT client is only instantiated if an
+    /// artifact is ever compiled. A TCP process runs exactly one rank's
+    /// hot loop, so the other ranks' contexts stay deferred and never
+    /// pay for a client.
+    pub fn deferred(dir: &str, manifest: Arc<Manifest>) -> Runtime {
+        Runtime {
+            client: None,
+            manifest,
+            exes: HashMap::new(),
+            dir: dir.to_string(),
+        }
+    }
+
+    /// Whether the PJRT client has been instantiated (tests pin the
+    /// role-gating contract with this).
+    pub fn client_ready(&self) -> bool {
+        self.client.is_some()
+    }
+
     fn compile(&mut self, name: &str) -> Result<()> {
         if self.exes.contains_key(name) {
             return Ok(());
         }
+        if self.client.is_none() {
+            self.client =
+                Some(xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client (deferred): {e:?}"))?);
+        }
+        let client = self
+            .client
+            .as_ref()
+            .ok_or_else(|| anyhow!("PJRT client missing right after creation"))?;
         let path = format!("{}/{}.hlo.txt", self.dir, name);
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow!("loading {path}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
+        let exe = client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
         self.exes.insert(name.to_string(), exe);
@@ -225,6 +257,10 @@ pub struct ParamStore {
     hp: AdamParams,
     /// Bumped by every [`ParamStore::step`]; stamps snapshots.
     version: u64,
+    /// Per-tensor: the store version at which this tensor last changed
+    /// (init, step, or restore). [`ParamStore::diff_since`] ships only
+    /// tensors whose entry advanced past the chain base.
+    tensor_versions: HashMap<String, u64>,
 }
 
 /// A versioned read-only view of every parameter tensor, published by
@@ -282,6 +318,204 @@ impl ParamSnapshot {
     pub fn is_empty(&self) -> bool {
         self.params.is_empty()
     }
+
+    /// Overlay a version-chained [`ParamDiff`] on this snapshot,
+    /// producing the snapshot the diff advances to. The chain contract
+    /// is strict: the diff's `from_version` must equal this snapshot's
+    /// version (per-lane FIFO delivery means a gap is a protocol break,
+    /// not a reordering), every diffed tensor must already exist here
+    /// with the same length, and the chain can never run backwards.
+    /// All violations are `anyhow` errors naming the versions — never a
+    /// panic — so a worker can NACK and surface them.
+    pub fn apply_diff(&self, diff: &ParamDiff) -> Result<ParamSnapshot> {
+        anyhow::ensure!(
+            diff.to_version >= diff.from_version,
+            "corrupt param diff: covers v{}..v{} (the chain never runs backwards)",
+            diff.from_version,
+            diff.to_version
+        );
+        anyhow::ensure!(
+            diff.from_version == self.version,
+            "diff chain break: base snapshot is v{}, the diff covers v{}..v{} — \
+             a full resync is required",
+            self.version,
+            diff.from_version,
+            diff.to_version
+        );
+        let mut params = self.params.clone();
+        for (name, data) in &diff.tensors {
+            let slot = params.get_mut(name).with_context(|| {
+                format!(
+                    "corrupt param diff (v{}..v{}): tensor '{name}' is not in the \
+                     base snapshot",
+                    diff.from_version, diff.to_version
+                )
+            })?;
+            anyhow::ensure!(
+                slot.len() == data.len(),
+                "corrupt param diff (v{}..v{}): tensor '{name}' ships {} elements \
+                 but the base holds {}",
+                diff.from_version,
+                diff.to_version,
+                data.len(),
+                slot.len()
+            );
+            *slot = data.clone();
+        }
+        Ok(ParamSnapshot { version: diff.to_version, params })
+    }
+}
+
+/// A version-chained parameter delta: only the tensors whose
+/// per-tensor version advanced past `from_version`, stamped with the
+/// store version the overlay reconstructs (`to_version`). Broadcast on
+/// the Ready lane in place of a full [`ParamSnapshot`] when
+/// `train.wire_snapshots = diff`; a worker chains
+/// [`ParamSnapshot::apply_diff`] over the frames it receives in FIFO
+/// order. Tensors are `Arc`-backed (the in-process transport moves the
+/// diff without copying) and kept name-sorted so the wire encoding is
+/// canonical.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParamDiff {
+    pub from_version: u64,
+    pub to_version: u64,
+    tensors: Vec<(String, Arc<Vec<f32>>)>,
+}
+
+impl ParamDiff {
+    /// Rebuild a diff from decoded tensors (the TCP codec path).
+    /// Re-sorts by name so a hand-built or adversarial frame cannot
+    /// smuggle a non-canonical order past the chain.
+    pub fn from_tensors(
+        from_version: u64,
+        to_version: u64,
+        tensors: Vec<(String, Vec<f32>)>,
+    ) -> ParamDiff {
+        let mut tensors: Vec<(String, Arc<Vec<f32>>)> = tensors
+            .into_iter()
+            .map(|(name, data)| (name, Arc::new(data)))
+            .collect();
+        tensors.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        ParamDiff { from_version, to_version, tensors }
+    }
+
+    /// Every diffed tensor in canonical (name-sorted) order.
+    pub fn tensors_sorted(&self) -> Vec<(&str, &[f32])> {
+        self.tensors
+            .iter()
+            .map(|(n, d)| (n.as_str(), d.as_slice()))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Payload volume in tensor elements (bench accounting).
+    pub fn total_elems(&self) -> usize {
+        self.tensors.iter().map(|(_, d)| d.len()).sum()
+    }
+}
+
+/// What the leader broadcasts for one snapshot release: the first
+/// frame of every chain (epoch start — which also covers the
+/// post-recovery restart, since recovery re-enters the epoch) is a
+/// full snapshot; later frames are diffs when the chain is enabled.
+pub enum SnapOrDiff {
+    Full(Arc<ParamSnapshot>),
+    Diff(ParamDiff),
+}
+
+/// Leader-side diff-chain state, one per epoch per down lane. Tracks
+/// the last store version broadcast so the next frame carries exactly
+/// the tensors that advanced since.
+pub struct DiffChain {
+    last_sent: Option<u64>,
+    enabled: bool,
+}
+
+impl DiffChain {
+    pub fn new(enabled: bool) -> DiffChain {
+        DiffChain { last_sent: None, enabled }
+    }
+
+    /// Produce the next frame of the chain for the store's current
+    /// tensors and advance the chain cursor.
+    pub fn next(&mut self, store: &ParamStore) -> SnapOrDiff {
+        let base = self.last_sent;
+        self.last_sent = Some(store.version());
+        match base {
+            Some(base) if self.enabled => SnapOrDiff::Diff(store.diff_since(base)),
+            _ => SnapOrDiff::Full(Arc::new(store.snapshot())),
+        }
+    }
+}
+
+/// The wording a chain break surfaces with, shared by the worker-side
+/// NACK bail and the leader-side gather abort so both ends of the wire
+/// name the same versions (`have = u64::MAX` is the no-snapshot-yet
+/// sentinel).
+pub fn need_full_msg(have: u64, want: u64) -> String {
+    let held = if have == u64::MAX {
+        "holds no snapshot yet".to_string()
+    } else {
+        format!("holds v{have}")
+    };
+    format!(
+        "needs a full parameter resync: it {held} but the diff chain expects \
+         v{want} (restart the epoch; its first frame is always full)"
+    )
+}
+
+/// Worker-side diff-chain state: the last reconstructed snapshot.
+/// [`SnapshotChain::apply`] extends the chain by one diff; a gap or a
+/// diff-before-full is the `NeedFull` condition and surfaces as an
+/// error naming the rank and versions (the worker NACKs, the leader
+/// aborts the round, and the recovery restart resyncs with a full
+/// snapshot).
+#[derive(Default)]
+pub struct SnapshotChain {
+    last: Option<Arc<ParamSnapshot>>,
+}
+
+impl SnapshotChain {
+    pub fn new() -> SnapshotChain {
+        SnapshotChain::default()
+    }
+
+    /// The version of the last snapshot on the chain, if any.
+    pub fn version(&self) -> Option<u64> {
+        self.last.as_ref().map(|s| s.version)
+    }
+
+    /// A full snapshot arrived: it becomes the new chain base.
+    pub fn note_full(&mut self, snap: &Arc<ParamSnapshot>) {
+        self.last = Some(snap.clone());
+    }
+
+    /// Extend the chain by one diff, returning the reconstructed
+    /// snapshot.
+    pub fn apply(&mut self, rank: usize, diff: &ParamDiff) -> Result<Arc<ParamSnapshot>> {
+        let base = self.last.as_ref().with_context(|| {
+            format!(
+                "worker rank {rank}: a v{}..v{} param diff arrived before any full \
+                 snapshot — a full resync is required",
+                diff.from_version, diff.to_version
+            )
+        })?;
+        let snap = Arc::new(base.apply_diff(diff).with_context(|| {
+            format!(
+                "worker rank {rank}: applying the v{}..v{} param diff",
+                diff.from_version, diff.to_version
+            )
+        })?);
+        self.last = Some(snap.clone());
+        Ok(snap)
+    }
 }
 
 impl ParamStore {
@@ -293,6 +527,7 @@ impl ParamStore {
             seed,
             hp,
             version: 0,
+            tensor_versions: HashMap::new(),
         }
     }
 
@@ -321,6 +556,7 @@ impl ParamStore {
         let data: Vec<f32> = (0..n).map(|_| ((rng.f64() * 2.0 - 1.0) * a) as f32).collect();
         self.adam.insert(spec.name.clone(), Adam::new(n, self.hp));
         self.shapes.insert(spec.name.clone(), spec.shape.clone());
+        self.tensor_versions.insert(spec.name.clone(), self.version);
         self.params.insert(spec.name.clone(), Arc::new(data));
     }
 
@@ -384,7 +620,29 @@ impl ParamStore {
             .with_context(|| format!("missing Adam state for '{name}'"))?
             .step(Arc::make_mut(p), grad);
         self.version += 1;
+        self.tensor_versions.insert(name.to_string(), self.version);
         Ok(())
+    }
+
+    /// Capture a version-chained delta: every tensor whose per-tensor
+    /// version advanced past `base`, stamped `base..current`. A tensor
+    /// with no version record is shipped (safe over-inclusion — the
+    /// overlay is idempotent for unchanged data).
+    pub fn diff_since(&self, base: u64) -> ParamDiff {
+        let mut tensors: Vec<(String, Arc<Vec<f32>>)> = self
+            .params
+            .iter()
+            .filter(|(name, _)| {
+                self.tensor_versions
+                    .get(name.as_str())
+                    .copied()
+                    .unwrap_or(u64::MAX)
+                    > base
+            })
+            .map(|(n, d)| (n.clone(), d.clone()))
+            .collect();
+        tensors.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        ParamDiff { from_version: base, to_version: self.version, tensors }
     }
 
     /// Total parameter elements (gradient-allreduce volume accounting).
@@ -444,6 +702,7 @@ impl ParamStore {
         self.params.clear();
         self.shapes.clear();
         self.adam.clear();
+        self.tensor_versions.clear();
         for e in st.entries {
             let mut adam = Adam::new(e.weight.len(), self.hp);
             adam.m = e.m;
@@ -451,6 +710,7 @@ impl ParamStore {
             adam.t = e.t;
             self.adam.insert(e.name.clone(), adam);
             self.shapes.insert(e.name.clone(), e.shape);
+            self.tensor_versions.insert(e.name.clone(), st.version);
             self.params.insert(e.name, Arc::new(e.weight));
         }
         self.version = st.version;
@@ -569,6 +829,92 @@ mod tests {
         let mut bad = st;
         bad.entries[0].m.pop();
         assert!(r.restore_state(bad).is_err());
+    }
+
+    #[test]
+    fn diff_since_ships_only_advanced_tensors() {
+        let mut s = ParamStore::new(5, AdamParams::default());
+        s.ensure(&wspec("a", vec![4]));
+        s.ensure(&wspec("b", vec![4]));
+        let base = s.version();
+        assert!(s.diff_since(base).is_empty(), "no steps yet: empty diff");
+        s.step("a", &[1.0; 4]).unwrap();
+        let diff = s.diff_since(base);
+        assert_eq!(diff.len(), 1, "only 'a' advanced");
+        assert_eq!(diff.tensors_sorted()[0].0, "a");
+        assert_eq!(diff.from_version, base);
+        assert_eq!(diff.to_version, s.version());
+        assert_eq!(diff.total_elems(), 4);
+        // diff_since(0) after init ships everything (init tags tensors).
+        assert_eq!(s.diff_since(0).len(), 1, "init happened at v0, only the step advanced past it");
+    }
+
+    #[test]
+    fn apply_diff_reconstructs_bit_exactly_and_rejects_gaps() {
+        let mut s = ParamStore::new(5, AdamParams::default());
+        s.ensure(&wspec("a", vec![4]));
+        s.ensure(&wspec("b", vec![2]));
+        let snap0 = Arc::new(s.snapshot());
+        s.step("a", &[0.5, -0.5, 0.25, -0.25]).unwrap();
+        let diff = s.diff_since(snap0.version);
+        let snap1 = snap0.apply_diff(&diff).unwrap();
+        assert_eq!(snap1, s.snapshot(), "overlay must reconstruct bit-exactly");
+
+        // A second step: the old diff no longer chains onto snap1.
+        s.step("b", &[1.0, 1.0]).unwrap();
+        let err = snap1.apply_diff(&diff).unwrap_err().to_string();
+        assert!(err.contains("chain break"), "got: {err}");
+        assert!(err.contains(&format!("v{}", snap1.version)), "names versions: {err}");
+
+        // Unknown tensors and wrong lengths are corrupt, not panics.
+        let bogus = ParamDiff::from_tensors(snap1.version, snap1.version + 1, vec![
+            ("nope".to_string(), vec![1.0]),
+        ]);
+        assert!(snap1.apply_diff(&bogus).unwrap_err().to_string().contains("corrupt"));
+        let resized = ParamDiff::from_tensors(snap1.version, snap1.version + 1, vec![
+            ("a".to_string(), vec![1.0]),
+        ]);
+        assert!(snap1.apply_diff(&resized).unwrap_err().to_string().contains("corrupt"));
+        // Backwards chains are rejected before any overlay work.
+        let backwards = ParamDiff::from_tensors(5, 4, vec![]);
+        assert!(snap1.apply_diff(&backwards).is_err());
+    }
+
+    #[test]
+    fn diff_chain_full_then_diffs_and_worker_chain_tracks() {
+        let mut s = ParamStore::new(9, AdamParams::default());
+        s.ensure(&wspec("w", vec![4]));
+        let mut leader = DiffChain::new(true);
+        let mut worker = SnapshotChain::new();
+        assert!(worker.version().is_none());
+
+        // First frame of the epoch is always full.
+        match leader.next(&s) {
+            SnapOrDiff::Full(snap) => worker.note_full(&snap),
+            SnapOrDiff::Diff(_) => panic!("chain must open with a full snapshot"),
+        }
+        for i in 0..4 {
+            s.step("w", &[i as f32 + 1.0; 4]).unwrap();
+            match leader.next(&s) {
+                SnapOrDiff::Diff(diff) => {
+                    let snap = worker.apply(0, &diff).unwrap();
+                    assert_eq!(*snap, s.snapshot(), "step {i}: reconstruction diverged");
+                }
+                SnapOrDiff::Full(_) => panic!("later frames must be diffs"),
+            }
+        }
+        assert_eq!(worker.version(), Some(s.version()));
+
+        // A diff arriving before any full snapshot names the rank.
+        let mut cold = SnapshotChain::new();
+        let err = cold.apply(3, &s.diff_since(0)).unwrap_err().to_string();
+        assert!(err.contains("rank 3") && err.contains("full"), "got: {err}");
+
+        // Disabled chains ship full snapshots forever.
+        let mut full_only = DiffChain::new(false);
+        for _ in 0..2 {
+            assert!(matches!(full_only.next(&s), SnapOrDiff::Full(_)));
+        }
     }
 
     #[test]

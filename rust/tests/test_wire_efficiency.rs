@@ -1,0 +1,420 @@
+//! The wire-efficiency tier (the PR-8 tentpole).
+//!
+//! Artifact-free half: property tests of the delta-snapshot chain —
+//! a leader-side [`DiffChain`] and a worker-side [`SnapshotChain`]
+//! driven by random optimizer steps must reconstruct the exact
+//! snapshot trajectory the full-snapshot protocol would have shipped;
+//! chain gaps are `anyhow` errors naming the versions (never panics);
+//! diff frames price and carry only the tensors that advanced; and
+//! [`ParamDiff`] survives the socket codec bitwise.
+//!
+//! Artifact-gated half (skipped until `make artifacts`): the
+//! equivalence bar across the PR-8 wire knobs — `wire_snapshots ∈
+//! {full, diff}` × `wire_exchange ∈ {star, mesh}` must produce
+//! **byte-identical** per-batch losses across `transport = channel |
+//! tcp`, both engines, staleness 0 and 1. Plus the byte-win
+//! assertions: the diff run's leader ships fewer real bytes than the
+//! full run, and the mesh run's leader receives fewer than the star
+//! run (the partial aggregation moved to the worker↔worker lane).
+//! Finally the ChaosTcp variant: a rank killed mid-epoch under diff
+//! mode recovers through the full-resync path (the restarted epoch's
+//! first frame is full) with the trajectory still byte-identical.
+
+mod common;
+
+use std::sync::Arc;
+
+use heta::config::{FaultSpec, WireExchange, WireSnapshots};
+use heta::coordinator::SystemKind;
+use heta::net::codec::{decode_message, encode_message};
+use heta::optim::AdamParams;
+use heta::runtime::{DiffChain, InputSpec, ParamDiff, ParamStore, SnapOrDiff, SnapshotChain};
+use heta::util::proptest;
+use heta::util::rng::Rng;
+
+use common::{variant, variant_chaos, variant_tcp};
+
+// ---- artifact-free: the diff chain ----
+
+/// A toy parameter store with `n` small dense tensors.
+fn toy_store(seed: u64, n: usize) -> ParamStore {
+    let mut store = ParamStore::new(seed, AdamParams::default());
+    for i in 0..n {
+        store.ensure(&InputSpec {
+            kind: "weight".to_string(),
+            shape: vec![2, 3],
+            name: format!("w{i}"),
+            edge: -1,
+            layer: 0,
+            dtype: "f32".to_string(),
+            init: "glorot".to_string(),
+        });
+    }
+    store
+}
+
+/// Random Adam steps on a random subset of tensors; each step bumps
+/// the store version, so diffs ship a genuine subset per batch.
+fn random_steps(rng: &mut Rng, store: &mut ParamStore, n: usize) {
+    for _ in 0..rng.below(3) {
+        let name = format!("w{}", rng.below(n));
+        let grad: Vec<f32> = (0..6).map(|_| rng.f32() - 0.5).collect();
+        store.step(&name, &grad).expect("step on a known tensor");
+    }
+}
+
+/// Bitwise equality of two snapshots' tensors (and versions).
+fn snaps_equal(a: &heta::runtime::ParamSnapshot, b: &heta::runtime::ParamSnapshot) -> bool {
+    a.version == b.version
+        && a.tensors_sorted()
+            .iter()
+            .zip(b.tensors_sorted())
+            .all(|((an, ad), (bn, bd))| *an == bn && ad.len() == bd.len() && {
+                ad.iter().zip(bd).all(|(x, y)| x.to_bits() == y.to_bits())
+            })
+        && a.len() == b.len()
+}
+
+#[test]
+fn prop_diff_chain_reconstructs_the_snapshot_trajectory() {
+    proptest::run("wire_diff_chain", |rng, _| {
+        let n = 1 + rng.below(4);
+        let mut store = toy_store(rng.next_u64(), n);
+        let mut leader = DiffChain::new(true);
+        let mut worker = SnapshotChain::new();
+        for release in 0..4 + rng.below(8) {
+            random_steps(rng, &mut store, n);
+            let want = store.snapshot();
+            let got = match leader.next(&store) {
+                SnapOrDiff::Full(snap) => {
+                    heta::prop_assert!(
+                        release == 0,
+                        "an unbroken diff chain must go full only on its first frame \
+                         (went full again at release {release})"
+                    );
+                    worker.note_full(&snap);
+                    snap
+                }
+                SnapOrDiff::Diff(diff) => {
+                    heta::prop_assert!(
+                        diff.to_version == store.version(),
+                        "diff must advance to the store version: {} != {}",
+                        diff.to_version,
+                        store.version()
+                    );
+                    worker
+                        .apply(0, &diff)
+                        .map_err(|e| format!("release {release}: chain apply failed: {e:#}"))?
+                }
+            };
+            heta::prop_assert!(
+                snaps_equal(&got, &want),
+                "release {release}: the worker's overlaid snapshot diverged from the \
+                 store (v{} vs v{})",
+                got.version,
+                want.version
+            );
+            heta::prop_assert!(
+                worker.version() == Some(store.version()),
+                "worker chain cursor must track the store version"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_diff_chain_gap_is_an_error_never_a_panic() {
+    proptest::run("wire_diff_gap", |rng, _| {
+        let n = 1 + rng.below(3);
+        let mut store = toy_store(rng.next_u64(), n);
+        let mut leader = DiffChain::new(true);
+        let mut worker = SnapshotChain::new();
+        // Prime the chain with the first (full) frame.
+        match leader.next(&store) {
+            SnapOrDiff::Full(snap) => worker.note_full(&snap),
+            SnapOrDiff::Diff(_) => return Err("first frame must be full".to_string()),
+        }
+        // A diff whose base the worker never saw: guaranteed gap, since
+        // the lost frame's steps advanced the leader cursor.
+        store.step("w0", &[0.1; 6]).expect("step");
+        let lost = leader.next(&store); // dropped on the floor
+        drop(lost);
+        store.step("w0", &[0.2; 6]).expect("step");
+        if let SnapOrDiff::Diff(diff) = leader.next(&store) {
+            let err = worker
+                .apply(3, &diff)
+                .expect_err("a version gap must be an error, not a silent overlay");
+            let text = format!("{err:#}");
+            heta::prop_assert!(
+                text.contains(&format!("v{}", diff.from_version)),
+                "the gap error must name the missing base version: {text}"
+            );
+        } else {
+            return Err("a primed chain must emit diffs".to_string());
+        }
+        // A diff landing on a worker that holds no snapshot at all is
+        // the NeedFull case — also an error, also named.
+        let mut fresh = SnapshotChain::new();
+        let diff = store.diff_since(store.version()); // empty but versioned
+        if diff.from_version > 0 {
+            let err = fresh
+                .apply(1, &diff)
+                .expect_err("a chain with no base must demand a full snapshot");
+            heta::prop_assert!(
+                !format!("{err:#}").is_empty(),
+                "the no-base error must describe itself"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_param_diffs_round_trip_bitwise() {
+    proptest::run("wire_diff_codec", |rng, _| {
+        let tensors: Vec<(String, Vec<f32>)> = (0..rng.below(5))
+            .map(|i| {
+                let data: Vec<f32> = (0..rng.below(32)).map(|_| rng.f32() * 4.0 - 2.0).collect();
+                (format!("t{i}"), data)
+            })
+            .collect();
+        let from = rng.next_u64() >> 1;
+        let diff = ParamDiff::from_tensors(from, from + rng.below(9) as u64, tensors);
+        let back: ParamDiff =
+            decode_message(&encode_message(&diff)).map_err(|e| format!("decode: {e:#}"))?;
+        heta::prop_assert!(back == diff, "diff changed in flight: {diff:?} -> {back:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn diff_frames_ship_only_advanced_tensors() {
+    let mut store = toy_store(7, 3);
+    let base = store.version();
+    store.step("w1", &[0.5; 6]).expect("step");
+    let diff = store.diff_since(base);
+    assert_eq!(diff.len(), 1, "only the stepped tensor advanced");
+    assert_eq!(diff.tensors_sorted()[0].0, "w1");
+    assert_eq!((diff.from_version, diff.to_version), (base, store.version()));
+    // The byte win, at frame level: the encoded diff is strictly
+    // smaller than the encoded full snapshot it replaces.
+    let full = store.snapshot();
+    let diff_bytes = encode_message(&diff).len();
+    let full_bytes = encode_message(&full).len();
+    assert!(
+        diff_bytes < full_bytes,
+        "a 1-of-3-tensor diff must beat the full snapshot: {diff_bytes} >= {full_bytes}"
+    );
+    // An idle release diffs to an empty frame — the O(1) floor.
+    let idle = store.diff_since(store.version());
+    assert!(idle.is_empty(), "no steps, no tensors");
+    assert_eq!(idle.total_elems(), 0);
+}
+
+#[test]
+fn disabled_diff_chain_always_goes_full() {
+    let mut store = toy_store(11, 2);
+    let mut chain = DiffChain::new(false);
+    for _ in 0..3 {
+        store.step("w0", &[0.25; 6]).expect("step");
+        match chain.next(&store) {
+            SnapOrDiff::Full(snap) => assert_eq!(snap.version, store.version()),
+            SnapOrDiff::Diff(d) => panic!(
+                "wire_snapshots = full must never emit a diff (got v{}..v{})",
+                d.from_version, d.to_version
+            ),
+        }
+    }
+}
+
+#[test]
+fn chain_reset_after_recovery_restart_is_the_resync() {
+    // The recovery contract: an epoch restart builds fresh chains on
+    // both sides, so the first post-restart frame is full no matter
+    // where the old chain's cursor was — the NeedFull NACK and the
+    // restart path converge on the same resync.
+    let mut store = toy_store(13, 2);
+    let mut leader = DiffChain::new(true);
+    let _ = leader.next(&store);
+    store.step("w0", &[0.5; 6]).expect("step");
+    let _ = leader.next(&store); // cursor now past v0
+    // "Restart": new chains, same (restored) store.
+    let mut leader = DiffChain::new(true);
+    let mut worker = SnapshotChain::new();
+    match leader.next(&store) {
+        SnapOrDiff::Full(snap) => {
+            assert_eq!(snap.version, store.version());
+            worker.note_full(&snap);
+            assert_eq!(worker.version(), Some(store.version()));
+        }
+        SnapOrDiff::Diff(_) => panic!("a fresh chain's first frame must be full"),
+    }
+    let arc_check: Arc<heta::runtime::ParamSnapshot> = Arc::new(store.snapshot());
+    assert_eq!(arc_check.version, store.version());
+}
+
+// ---- artifact-gated: the wire-knob equivalence matrix ----
+
+const CFG: &str = "mag-tiny";
+const EPOCHS: usize = 2;
+
+fn wire(c: &mut heta::config::Config, snaps: WireSnapshots, exch: WireExchange) {
+    c.train.runtime = heta::config::RuntimeKind::Cluster;
+    c.train.wire_snapshots = snaps;
+    c.train.wire_exchange = exch;
+}
+
+#[test]
+fn losses_byte_identical_across_wire_knobs_raf() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    let reports = common::assert_losses_identical(
+        CFG,
+        SystemKind::Heta,
+        EPOCHS,
+        &[
+            variant("channel/diff/star/k0", |c| wire(c, WireSnapshots::Diff, WireExchange::Star)),
+            variant("channel/full/star/k0", |c| wire(c, WireSnapshots::Full, WireExchange::Star)),
+            variant("channel/diff/mesh/k0", |c| wire(c, WireSnapshots::Diff, WireExchange::Mesh)),
+            variant_tcp("tcp/full/star/k0", |c| wire(c, WireSnapshots::Full, WireExchange::Star)),
+            variant_tcp("tcp/diff/star/k0", |c| wire(c, WireSnapshots::Diff, WireExchange::Star)),
+            variant_tcp("tcp/diff/mesh/k0", |c| wire(c, WireSnapshots::Diff, WireExchange::Mesh)),
+            variant_tcp("tcp/full/mesh/k0", |c| wire(c, WireSnapshots::Full, WireExchange::Mesh)),
+        ],
+    );
+    // The byte-win bars, on the leader's counted traffic (reports 3..
+    // are the tcp runs, matrix order above).
+    let sent = |i: usize| reports[i].iter().map(|r| r.wire.real_sent).sum::<u64>();
+    let recv = |i: usize| reports[i].iter().map(|r| r.wire.real_recv).sum::<u64>();
+    assert!(
+        sent(4) < sent(3),
+        "diff snapshots must shrink the leader's broadcast bytes: diff {} >= full {}",
+        sent(4),
+        sent(3)
+    );
+    assert!(
+        recv(5) < recv(4),
+        "the mesh must shrink the leader's gather bytes: mesh {} >= star {}",
+        recv(5),
+        recv(4)
+    );
+    // The leader never holds mesh sockets — its own mesh counters stay
+    // zero even in mesh runs; the split lives in the workers' reports.
+    for rep in reports[5].iter().chain(&reports[6]) {
+        assert_eq!(rep.wire.mesh_sent, 0, "the leader must not send on the mesh lane");
+    }
+}
+
+#[test]
+fn losses_byte_identical_across_wire_knobs_raf_staleness_1() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::Heta,
+        EPOCHS,
+        &[
+            variant("channel/diff/star/k1", |c| {
+                wire(c, WireSnapshots::Diff, WireExchange::Star);
+                c.train.staleness = 1;
+            }),
+            variant_tcp("tcp/full/star/k1", |c| {
+                wire(c, WireSnapshots::Full, WireExchange::Star);
+                c.train.staleness = 1;
+            }),
+            variant_tcp("tcp/diff/star/k1", |c| {
+                wire(c, WireSnapshots::Diff, WireExchange::Star);
+                c.train.staleness = 1;
+            }),
+            variant_tcp("tcp/diff/mesh/k1", |c| {
+                wire(c, WireSnapshots::Diff, WireExchange::Mesh);
+                c.train.staleness = 1;
+            }),
+        ],
+    );
+}
+
+/// The vanilla engine has no partial-aggregation exchange, so the mesh
+/// knob is a documented no-op there — but a mesh-dialed cluster still
+/// runs the brokered handshake, which must not disturb the protocol.
+#[test]
+fn losses_byte_identical_across_wire_knobs_vanilla() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    let reports = common::assert_losses_identical(
+        CFG,
+        SystemKind::DglMetis,
+        EPOCHS,
+        &[
+            variant("channel/diff/star/k0", |c| wire(c, WireSnapshots::Diff, WireExchange::Star)),
+            variant("channel/full/star/k0", |c| wire(c, WireSnapshots::Full, WireExchange::Star)),
+            variant_tcp("tcp/full/star/k0", |c| wire(c, WireSnapshots::Full, WireExchange::Star)),
+            variant_tcp("tcp/diff/star/k0", |c| wire(c, WireSnapshots::Diff, WireExchange::Star)),
+            variant_tcp("tcp/diff/mesh/k0", |c| wire(c, WireSnapshots::Diff, WireExchange::Mesh)),
+        ],
+    );
+    let sent = |i: usize| reports[i].iter().map(|r| r.wire.real_sent).sum::<u64>();
+    assert!(
+        sent(3) < sent(2),
+        "diff snapshots must shrink the vanilla leader's bytes too: diff {} >= full {}",
+        sent(3),
+        sent(2)
+    );
+}
+
+#[test]
+fn losses_byte_identical_across_wire_knobs_vanilla_staleness_1() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::DglMetis,
+        EPOCHS,
+        &[
+            variant("channel/diff/star/k1", |c| {
+                wire(c, WireSnapshots::Diff, WireExchange::Star);
+                c.train.staleness = 1;
+            }),
+            variant_tcp("tcp/full/star/k1", |c| {
+                wire(c, WireSnapshots::Full, WireExchange::Star);
+                c.train.staleness = 1;
+            }),
+            variant_tcp("tcp/diff/mesh/k1", |c| {
+                wire(c, WireSnapshots::Diff, WireExchange::Mesh);
+                c.train.staleness = 1;
+            }),
+        ],
+    );
+}
+
+// ---- artifact-gated: recovery resyncs the diff chain ----
+
+/// The fault fires in epoch 1, so attempt one completes epoch 0 and
+/// checkpoints; the restarted epoch rebuilds both chains — its first
+/// frame is a full snapshot against the *restored* store, which is
+/// exactly the resync protocol. The trajectory must not notice.
+#[test]
+fn recovery_resyncs_the_diff_chain_byte_identical() {
+    if !heta::util::artifacts_ready(CFG) {
+        return;
+    }
+    common::assert_losses_identical(
+        CFG,
+        SystemKind::Heta,
+        EPOCHS,
+        &[
+            variant_tcp("tcp/diff/fault-free/k0", |c| {
+                wire(c, WireSnapshots::Diff, WireExchange::Star)
+            }),
+            variant_chaos("tcp/diff/kill-rank1/k0", |c| {
+                wire(c, WireSnapshots::Diff, WireExchange::Star);
+                c.train.fail = Some(FaultSpec::parse("1:2:exit:1").unwrap());
+            }),
+        ],
+    );
+}
