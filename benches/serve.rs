@@ -1,0 +1,172 @@
+//! Serving-mode A/B (the PR-9 tentpole): embedding reuse + frontier
+//! dedup vs the no-reuse baseline, over the deadline-driven batcher.
+//!
+//! The artifact-free half measures the batcher mechanics alone —
+//! stream generation and the close rule on a simulated service clock.
+//! The artifact-gated half (skipped without `make artifacts`) serves a
+//! deterministic 256-request Zipf stream through real forwards on
+//! `mag-tiny` in three arms — reuse+dedup, no-reuse, and
+//! no-reuse+no-dedup — asserting byte-identical served embeddings
+//! across all arms and strictly fewer fetched rows per request with
+//! reuse on. Always emits `BENCH_serve.json` with p50/p99 latency, QPS,
+//! deadline misses, and the per-arm fetch ledger.
+
+use heta::config::Config;
+use heta::coordinator::SystemKind;
+use heta::datagen::{generate, GenParams, Preset};
+use heta::net::Backend;
+use heta::serve::{batcher, run_serve, synthetic_stream, BatcherOpts, ServeOpts, StreamOpts};
+use heta::util::bench::{black_box, report, table, Bench};
+use heta::util::json::Json;
+
+fn bench_opts() -> ServeOpts {
+    ServeOpts {
+        requests: 256,
+        qps: 2000.0,
+        deadline_ms: 250.0,
+        zipf_alpha: 1.1,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let b = Bench::new("serve").with_budget(1.5);
+
+    // ---- artifact-free: stream generation + the close rule ----
+    let g = generate(Preset::Mag, 1e-3, &GenParams::default());
+    let stream_opts = StreamOpts {
+        requests: 4096,
+        qps: 20_000.0,
+        deadline_ms: 10.0,
+        zipf_alpha: 1.1,
+        seed: 7,
+    };
+    let reqs = synthetic_stream(&g, &stream_opts).expect("synthetic stream");
+    let r_stream = b.run("serve/stream_gen", || {
+        black_box(synthetic_stream(&g, &stream_opts).unwrap());
+    });
+    let bopts = BatcherOpts { capacity: 64, service_bound_us: 2_000 };
+    let r_batcher = b.run("serve/batcher_close_rule", || {
+        black_box(batcher::run(&reqs, &bopts, |batch| Ok(batch.len() as u64 * 20)).unwrap());
+    });
+    let timeline =
+        batcher::run(&reqs, &bopts, |batch| Ok(batch.len() as u64 * 20)).expect("batcher");
+    report("serve/micro_batches", timeline.batches);
+    report("serve/micro_misses", timeline.misses);
+    let mut micro_pairs = vec![
+        ("stream_requests", Json::num(reqs.len() as f64)),
+        ("batches", Json::num(timeline.batches as f64)),
+        ("misses", Json::num(timeline.misses as f64)),
+        ("max_batch", Json::num(timeline.max_batch as f64)),
+    ];
+    if let (Some(rs), Some(rb)) = (&r_stream, &r_batcher) {
+        report("serve/stream_gen_s", format!("{:.9}", rs.mean_s));
+        report("serve/batcher_s", format!("{:.9}", rb.mean_s));
+        micro_pairs.push(("stream_gen_s", Json::num(rs.mean_s)));
+        micro_pairs.push(("batcher_s", Json::num(rb.mean_s)));
+    }
+    let micro = Json::from_pairs(micro_pairs);
+
+    // ---- artifact-gated: real forwards, reuse/dedup A/B ----
+    let cfg_name = "mag-tiny";
+    let arms = if heta::util::artifacts_ready(cfg_name) {
+        let cfg = Config::load(&format!("configs/{cfg_name}.json"))
+            .unwrap_or_else(|e| panic!("loading config {cfg_name}: {e}"));
+        let dir = format!("artifacts/{cfg_name}");
+        let base = bench_opts();
+        let arms = [
+            ("reuse_dedup", ServeOpts { ..base.clone() }),
+            ("no_reuse", ServeOpts { reuse: false, ..base.clone() }),
+            ("no_reuse_no_dedup", ServeOpts { reuse: false, dedup_fetch: false, ..base }),
+        ];
+        let mut reps = Vec::new();
+        for (name, opts) in &arms {
+            let rep = run_serve(&cfg, &dir, SystemKind::Heta, opts, Backend::Channel)
+                .unwrap_or_else(|e| panic!("serve arm {name}: {e:#}"));
+            assert_eq!(rep.served, opts.requests, "{name}: every request must be served");
+            reps.push((*name, rep));
+        }
+        // The invariant the cache is allowed to exist under: no arm
+        // changes a single served byte.
+        for (name, rep) in &reps[1..] {
+            assert_eq!(
+                rep.embeds, reps[0].1.embeds,
+                "{name} must serve byte-identical embeddings to reuse_dedup"
+            );
+        }
+        let full = &reps[0].1;
+        let noreuse = &reps[1].1;
+        assert!(
+            full.ledger.fetched_rows < noreuse.ledger.fetched_rows,
+            "embedding reuse must strictly reduce fetched rows ({} vs {})",
+            full.ledger.fetched_rows,
+            noreuse.ledger.fetched_rows
+        );
+        assert!(
+            full.ledger.rows_per_request() < noreuse.ledger.rows_per_request(),
+            "reuse must fetch fewer rows per request"
+        );
+        let nodedup = &reps[2].1;
+        assert!(
+            noreuse.ledger.fetched_rows <= nodedup.ledger.fetched_rows,
+            "frontier dedup must not increase fetched rows"
+        );
+        let mut rows = Vec::new();
+        let mut entries = Vec::new();
+        for (name, rep) in &reps {
+            rows.push(vec![
+                name.to_string(),
+                format!("{:.2}", rep.p50_ms()),
+                format!("{:.2}", rep.p99_ms()),
+                format!("{:.0}", rep.qps),
+                format!("{}", rep.deadline_misses),
+                format!("{:.1}", rep.ledger.rows_per_request()),
+                format!("{:.2}", rep.ledger.hit_rate()),
+            ]);
+            entries.push((
+                name.to_string(),
+                Json::from_pairs(vec![
+                    ("p50_ms", Json::num(rep.p50_ms())),
+                    ("p99_ms", Json::num(rep.p99_ms())),
+                    ("qps", Json::num(rep.qps)),
+                    ("deadline_misses", Json::num(rep.deadline_misses as f64)),
+                    ("served", Json::num(rep.served as f64)),
+                    ("batches", Json::num(rep.batches as f64)),
+                    ("fetched_rows", Json::num(rep.ledger.fetched_rows as f64)),
+                    ("fetched_bytes", Json::num(rep.ledger.fetched_bytes as f64)),
+                    ("rows_per_request", Json::num(rep.ledger.rows_per_request())),
+                    ("embed_hits", Json::num(rep.ledger.embed_hits as f64)),
+                    ("embed_misses", Json::num(rep.ledger.embed_misses as f64)),
+                    ("computed_targets", Json::num(rep.ledger.computed_targets as f64)),
+                ]),
+            ));
+        }
+        table(
+            "Serving A/B on mag-tiny (256 Zipf requests)",
+            &["arm", "p50 ms", "p99 ms", "qps", "misses", "rows/req", "hit rate"],
+            &rows,
+        );
+        report("serve/p50_ms", format!("{:.3}", full.p50_ms()));
+        report("serve/p99_ms", format!("{:.3}", full.p99_ms()));
+        report("serve/qps", format!("{:.1}", full.qps));
+        report(
+            "serve/rows_per_request_reduction",
+            format!(
+                "{:.2}x",
+                noreuse.ledger.rows_per_request() / full.ledger.rows_per_request().max(1e-9)
+            ),
+        );
+        Some(Json::Obj(entries.into_iter().collect()))
+    } else {
+        println!("skipping serve A/B: artifacts/{cfg_name} missing (run `make artifacts`)");
+        None
+    };
+
+    let mut top = vec![("micro", micro)];
+    if let Some(a) = arms {
+        top.push(("arms", a));
+    }
+    let out = Json::from_pairs(vec![("serve", Json::from_pairs(top))]).to_string();
+    std::fs::write("BENCH_serve.json", &out).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

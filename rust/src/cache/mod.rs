@@ -317,6 +317,62 @@ impl FeatureCache {
     }
 }
 
+/// Accounting for one serving run: what the request stream cost end to
+/// end, across every reuse layer (embedding cache, in-batch target
+/// dedup, frontier fetch dedup). The serve A/B bench compares ledgers
+/// between the reuse and no-reuse arms — `rows_per_request` is the
+/// headline number (fetched feature rows per served request).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeLedger {
+    pub requests: u64,
+    pub batches: u64,
+    /// Targets that actually went through the forward plan (after
+    /// embed-cache hits and in-batch dedup).
+    pub computed_targets: u64,
+    /// Requests folded away because the same target already appeared
+    /// earlier in the same microbatch.
+    pub batch_dups: u64,
+    pub embed_hits: u64,
+    pub embed_misses: u64,
+    pub embed_invalidations: u64,
+    /// Feature rows gathered from the KV store across all workers.
+    pub fetched_rows: u64,
+    pub fetched_bytes: u64,
+}
+
+impl ServeLedger {
+    pub fn merge(&mut self, other: &ServeLedger) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.computed_targets += other.computed_targets;
+        self.batch_dups += other.batch_dups;
+        self.embed_hits += other.embed_hits;
+        self.embed_misses += other.embed_misses;
+        self.embed_invalidations += other.embed_invalidations;
+        self.fetched_rows += other.fetched_rows;
+        self.fetched_bytes += other.fetched_bytes;
+    }
+
+    /// Embedding-cache hit rate over all lookups (NaN when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.embed_hits + self.embed_misses;
+        if total == 0 {
+            return f64::NAN;
+        }
+        self.embed_hits as f64 / total as f64
+    }
+
+    /// The A/B headline: KV rows fetched per served request (NaN when
+    /// idle). Reuse layers push this down without changing the bytes
+    /// served.
+    pub fn rows_per_request(&self) -> f64 {
+        if self.requests == 0 {
+            return f64::NAN;
+        }
+        self.fetched_rows as f64 / self.requests as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -479,6 +535,30 @@ mod tests {
         owner.absorb_ledger(&fork);
         assert_eq!(owner.types[0].hits, 2 * oh);
         assert_eq!(owner.types[0].misses, 2 * om);
+    }
+
+    #[test]
+    fn serve_ledger_merges_and_rates() {
+        let mut a = ServeLedger {
+            requests: 10,
+            batches: 2,
+            computed_targets: 6,
+            batch_dups: 1,
+            embed_hits: 3,
+            embed_misses: 7,
+            embed_invalidations: 0,
+            fetched_rows: 120,
+            fetched_bytes: 4800,
+        };
+        let b = ServeLedger { requests: 10, embed_hits: 7, embed_misses: 3, ..a };
+        a.merge(&b);
+        assert_eq!(a.requests, 20);
+        assert_eq!(a.embed_hits + a.embed_misses, 20);
+        assert!((a.hit_rate() - 0.5).abs() < 1e-12);
+        assert!((a.rows_per_request() - 12.0).abs() < 1e-12);
+        let idle = ServeLedger::default();
+        assert!(idle.hit_rate().is_nan());
+        assert!(idle.rows_per_request().is_nan());
     }
 
     #[test]

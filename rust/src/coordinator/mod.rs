@@ -483,10 +483,13 @@ pub fn bench_run(cfg_name: &str, system: SystemKind, epochs: usize) -> (EpochRep
     let dir = format!("artifacts/{cfg_name}");
     let mut sess = Session::new(&cfg, &dir)
         .unwrap_or_else(|e| panic!("session for {cfg_name}: {e} (run `make artifacts`)"));
-    let mut engine = Engine::build(&mut sess, system).unwrap();
+    let mut engine = Engine::build(&mut sess, system)
+        .unwrap_or_else(|e| panic!("building {} engine for {cfg_name}: {e:#}", system.name()));
     let mut total = EpochReport::default();
     for ep in 0..epochs {
-        let rep = engine.run_epoch(&mut sess, ep).unwrap();
+        let rep = engine
+            .run_epoch(&mut sess, ep)
+            .unwrap_or_else(|e| panic!("{}/{cfg_name} epoch {ep}: {e:#}", system.name()));
         total.absorb(&rep);
     }
     total.epoch_time_s /= epochs.max(1) as f64;

@@ -95,6 +95,34 @@ impl BatchPlan {
         })
     }
 
+    /// Resolve the forward-only serving pipeline: the per-partition
+    /// `worker_fwd_p*` artifacts with **no** backward and **no** leader
+    /// step. Serving never touches gradients or the optimizer, and the
+    /// fused `vanilla` artifact has no standalone embedding output, so
+    /// both engines serve through this decomposition; the per-target
+    /// embedding is the worker partials folded in worker order (the same
+    /// fold the training leader stage consumes).
+    pub fn forward_only(manifest: &Manifest, parts: usize) -> Result<BatchPlan> {
+        let mut workers = Vec::with_capacity(parts);
+        for p in 0..parts {
+            let fwd_art = format!("worker_fwd_p{p}");
+            let spec_fwd = manifest.spec(&fwd_art)?.clone();
+            let needs_root = spec_fwd.inputs.iter().any(|i| i.kind == "target_feat");
+            workers.push(WorkerPlan {
+                fwd_art,
+                spec_fwd,
+                bwd_art: None,
+                spec_bwd: None,
+                needs_root,
+            });
+        }
+        Ok(BatchPlan {
+            workers,
+            leader_art: String::new(),
+            leader_spec: None,
+        })
+    }
+
     /// Resolve the vanilla pipeline: every worker drives the same fused
     /// `vanilla` train-step artifact; there is no leader artifact.
     pub fn vanilla(manifest: &Manifest, parts: usize) -> Result<BatchPlan> {

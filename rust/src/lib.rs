@@ -109,3 +109,4 @@ pub mod net;
 pub mod obs;
 pub mod cluster;
 pub mod coordinator;
+pub mod serve;

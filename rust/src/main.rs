@@ -4,6 +4,7 @@
 //!   plan       --config <file> --out <plan.json>   emit the AOT artifact plan
 //!   partition  --config <file> [--method m]        run + report a partitioning
 //!   train      --config <file> --engine raf|vanilla [--epochs n]
+//!   serve      --config <file> [--engine raf|vanilla] [--qps Q]    deadline-driven serving
 //!   launch     --config <file> [-n K]              spawn a local K-worker TCP cluster
 //!   info       --config <file>                     dataset/schema summary
 //!
@@ -33,11 +34,12 @@ fn main() -> Result<()> {
         "plan" => cmd_plan(&args),
         "partition" => cmd_partition(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "launch" => cmd_launch(&args),
         "info" => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: heta <plan|partition|train|launch|info> --config <cfg.json> [options]\n\
+                "usage: heta <plan|partition|train|serve|launch|info> --config <cfg.json> [options]\n\
                  \n\
                  plan       --out <plan.json>      emit AOT artifact plan\n\
                  partition  [--method meta|random|metis|bytype] [--parts p]\n\
@@ -51,6 +53,12 @@ fn main() -> Result<()> {
                  \x20          [--fail rank:batch:kind[:epoch]]  (kind: exit|stall|\n\
                  \x20          drop-conn|corrupt-frame; rank 1..=K)\n\
                  \x20          [--trace [out.json]] [--log-level error|warn|info|debug]\n\
+                 serve      [--engine raf|vanilla] [--requests N] [--qps Q]\n\
+                 \x20          [--deadline-ms D] [--zipf A] [--request-trace file]\n\
+                 \x20          [--no-reuse] [--no-dedup-fetch] [--embed-cache N]\n\
+                 \x20          [--service-bound-ms B] [--artifacts dir] [--loopback]\n\
+                 \x20          [--transport tcp --rank R --peers host:port[,...]]\n\
+                 \x20          [--log-level error|warn|info|debug]\n\
                  launch     [-n K] [--port P] [--max-restarts R] + train options:\n\
                  \x20          spawn leader + K worker processes over loopback TCP,\n\
                  \x20          reap them, and (with --checkpoint-dir) respawn the\n\
@@ -316,6 +324,92 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let level = args.get_or("log-level", "info");
+    heta::obs::set_log_level(
+        heta::obs::LogLevel::parse(&level)
+            .with_context(|| format!("unknown log level '{level}' (error|warn|info|debug)"))?,
+    );
+    let engine = args.get_or("engine", "raf");
+    let system = heta::coordinator::SystemKind::parse(&engine)
+        .with_context(|| format!("unknown engine '{engine}' (raf|vanilla)"))?;
+    let artifacts = args.get_or("artifacts", &format!("artifacts/{}", cfg.name));
+    let opts = heta::serve::ServeOpts {
+        requests: args.get_usize("requests", 256),
+        qps: args.get_f64("qps", 200.0),
+        deadline_ms: args.get_f64("deadline-ms", 50.0),
+        zipf_alpha: args.get_f64("zipf", 1.1),
+        trace_path: args.get("request-trace").map(str::to_string),
+        reuse: !args.has_flag("no-reuse"),
+        dedup_fetch: !args.has_flag("no-dedup-fetch"),
+        embed_cap: args.get_usize("embed-cache", 4096),
+        service_bound_ms: args.get_f64("service-bound-ms", 0.0),
+    };
+    ensure!(
+        opts.deadline_ms > 0.0 && opts.qps > 0.0,
+        "--deadline-ms and --qps must be positive"
+    );
+    if args.has_flag("loopback") {
+        // One process, one OS thread per rank, real sockets on an
+        // ephemeral loopback port — the CI smoke path.
+        let rep = heta::serve::run_loopback_tcp_serve(&cfg, &artifacts, system, &opts)?;
+        rep.print(&format!("{}/{}/loopback-tcp", cfg.name, engine));
+        return Ok(());
+    }
+    let backend = match args.get("transport") {
+        None | Some("channel") => heta::net::Backend::Channel,
+        Some("tcp") => {
+            // One process per rank, exactly like `train --transport tcp`
+            // (the serving star has no mesh lane — responses are
+            // leader-composed).
+            let parts = cfg.train.num_partitions;
+            let rank: usize = args
+                .get("rank")
+                .context("--transport tcp needs --rank R (0 = leader, 1..=K = workers)")?
+                .parse()
+                .context("--rank expects a non-negative integer")?;
+            ensure!(
+                rank <= parts,
+                "--rank {rank} outside this {parts}-partition cluster (0 = leader, 1..={parts})"
+            );
+            let peers = args
+                .get("peers")
+                .context("--transport tcp needs --peers host:port[,...] (first entry = leader)")?;
+            let leader_addr = peers
+                .split(',')
+                .next()
+                .map(str::trim)
+                .filter(|a| !a.is_empty())
+                .context("--peers must name the leader's host:port first")?;
+            heta::obs::set_log_rank(rank as i64);
+            let node = if rank == 0 {
+                heta::log!(Info, "serve leader: listening on {leader_addr} for {parts} workers");
+                heta::net::tcp::listen(leader_addr, parts)?
+            } else {
+                heta::net::tcp::dial(leader_addr, rank - 1, parts, heta::net::tcp::DIAL_TIMEOUT)?
+            };
+            heta::net::Backend::Tcp(node)
+        }
+        Some(other) => bail!("unknown transport '{other}' (channel|tcp)"),
+    };
+    let worker_rank = backend.is_tcp_worker();
+    let rep = heta::serve::run_serve(&cfg, &artifacts, system, &opts, backend)?;
+    if worker_rank {
+        heta::log!(
+            Info,
+            "[{}/{}] serve worker rank done: wire {} sent / {} received",
+            cfg.name,
+            engine,
+            heta::util::fmt_bytes(rep.wire.real_sent),
+            heta::util::fmt_bytes(rep.wire.real_recv),
+        );
+    } else {
+        rep.print(&format!("{}/{}", cfg.name, engine));
+    }
+    Ok(())
+}
+
 /// How long surviving ranks get to unwind on their own after the first
 /// rank of an attempt fails, before the launcher kills them. Normally
 /// hangup-as-error and the heartbeat timeout tear the cluster down in
@@ -574,7 +668,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
         if attempt == max_attempts {
             bail!("launch: rank(s) {failed:?} failed — see their output above");
         }
-        let backoff = 250u64 << (attempt - 1);
+        let backoff = restart_backoff_ms(attempt);
         heta::log!(
             Warn,
             "launch: rank(s) {failed:?} failed; respawning with --resume in {backoff} ms"
@@ -582,6 +676,25 @@ fn cmd_launch(args: &Args) -> Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(backoff));
     }
     bail!("launch: no attempts were made (max-restarts underflow)")
+}
+
+/// Restart backoff for launch attempt `attempt` (1-based): exponential
+/// from 250 ms, capped at [`MAX_RESTART_BACKOFF_MS`]. The cap also keeps
+/// the doubling well-defined for huge `--max-restarts` values — a bare
+/// `250 << (attempt - 1)` overflows the shift at attempt 65 (a debug
+/// panic, UB-adjacent wrap in release), so saturate once the exponent
+/// alone would clear the cap.
+const MAX_RESTART_BACKOFF_MS: u64 = 30_000;
+
+fn restart_backoff_ms(attempt: usize) -> u64 {
+    debug_assert!(attempt >= 1);
+    let exp = attempt.saturating_sub(1);
+    if exp >= 7 {
+        // 250 << 7 = 32_000 already exceeds the cap; larger exponents
+        // would overflow the shift entirely.
+        return MAX_RESTART_BACKOFF_MS;
+    }
+    (250u64 << exp).min(MAX_RESTART_BACKOFF_MS)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -610,4 +723,29 @@ fn cmd_info(args: &Args) -> Result<()> {
         heta::util::fmt_bytes(g.storage_bytes(2))
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn restart_backoff_schedule_is_capped() {
+        // Doubling from 250 ms...
+        assert_eq!(restart_backoff_ms(1), 250);
+        assert_eq!(restart_backoff_ms(2), 500);
+        assert_eq!(restart_backoff_ms(3), 1_000);
+        assert_eq!(restart_backoff_ms(7), 16_000);
+        // ...saturates at the cap instead of 32 s...
+        assert_eq!(restart_backoff_ms(8), MAX_RESTART_BACKOFF_MS);
+        // ...and stays there for the attempts that used to overflow the
+        // shift (`250u64 << 64` panics in debug builds): --max-restarts
+        // 100 must produce a finite, capped schedule.
+        for attempt in [9, 64, 65, 100, usize::MAX] {
+            assert_eq!(restart_backoff_ms(attempt), MAX_RESTART_BACKOFF_MS);
+        }
+        // Monotone non-decreasing end to end.
+        let sched: Vec<u64> = (1..=80).map(restart_backoff_ms).collect();
+        assert!(sched.windows(2).all(|w| w[0] <= w[1]));
+    }
 }

@@ -276,6 +276,16 @@ pub fn snapshot_and_reset() -> MetricsSnapshot {
     GLOBAL.snapshot_and_reset()
 }
 
+/// Publish a serving run's headline latency/throughput gauges
+/// (`serve.p50_ms` / `serve.p99_ms` / `serve.qps`) — the same numbers
+/// `BENCH_serve.json` reports, so the trace and the bench agree by
+/// construction. No-op unless tracing is enabled.
+pub fn record_serve_summary(p50_ms: f64, p99_ms: f64, qps: f64) {
+    gauge_max("serve.p50_ms", p50_ms);
+    gauge_max("serve.p99_ms", p99_ms);
+    gauge_max("serve.qps", qps);
+}
+
 /// Publish per-node-type cache traffic for one epoch: `before`/`after`
 /// are `(hits, misses)` ledger readings per node type, `names` the node
 /// type names, `penalty_ratios` each type's miss-penalty ratio. Ticks

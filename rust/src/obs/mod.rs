@@ -47,7 +47,7 @@ pub use export::{chrome_trace_json, export_chrome};
 pub use logging::{log_enabled, log_line, set_log_level, set_log_rank, LogLevel};
 pub use metrics::{
     cache_obs_base, counter_add, gauge_max, hist_observe, record_cache_counters, record_cache_obs,
-    snapshot_and_reset, HistSummary, MetricsRegistry, MetricsSnapshot,
+    record_serve_summary, snapshot_and_reset, HistSummary, MetricsRegistry, MetricsSnapshot,
 };
 pub use recorder::{
     clock_offset_us, current_batch, enabled, kind_name, now_us, rebase_tracks, set_batch,

@@ -1,0 +1,165 @@
+//! The embedding-reuse cache: served embeddings for hot targets, keyed
+//! on (target id, parameter version, feature-store generation).
+//!
+//! Serving samples each target with a **fixed per-target seed** (see
+//! [`super::ServeEngine`]), so a target's embedding is a pure function
+//! of `(target, params, store)` — cacheable bit-for-bit. The validity
+//! stamp makes the invalidation rule exact: any parameter update
+//! (`ParamStore::step` bumps the version) or learnable-feature update
+//! (`StoreDelta` application bumps the serve loop's store generation)
+//! changes the stamp, and [`EmbedCache::ensure_stamp`] flushes every
+//! entry — a served embedding is always byte-identical to a fresh
+//! forward at the current parameters.
+//!
+//! Eviction is FIFO at capacity: deterministic (no clocks, no
+//! randomness), so a serving run's hit sequence is reproducible from
+//! its request stream alone.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::hetgraph::NodeId;
+
+/// One cached embedding: the two layer-partial sums the forward fold
+/// produces for the target's row (the RAF serving response).
+pub type Embed = (Vec<f32>, Vec<f32>);
+
+/// Validity stamp: (parameter-store version, feature-store generation).
+pub type Stamp = (u64, u64);
+
+#[derive(Debug, Default)]
+pub struct EmbedCache {
+    cap: usize,
+    stamp: Option<Stamp>,
+    map: HashMap<NodeId, Embed>,
+    fifo: VecDeque<NodeId>,
+    pub hits: u64,
+    pub misses: u64,
+    /// Stamp changes that dropped live entries.
+    pub invalidations: u64,
+}
+
+impl EmbedCache {
+    /// `cap = 0` disables caching (every lookup misses, puts are
+    /// dropped) — the no-reuse baseline arm.
+    pub fn new(cap: usize) -> EmbedCache {
+        EmbedCache { cap, ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Align the cache to the current (param version, store generation).
+    /// A stamp change flushes everything: entries were computed against
+    /// other weights and may no longer be byte-identical to a fresh
+    /// forward.
+    pub fn ensure_stamp(&mut self, stamp: Stamp) {
+        if self.stamp == Some(stamp) {
+            return;
+        }
+        if !self.map.is_empty() {
+            self.invalidations += 1;
+            self.map.clear();
+            self.fifo.clear();
+        }
+        self.stamp = Some(stamp);
+    }
+
+    /// Look up a target under the current stamp, counting hit/miss.
+    pub fn get(&mut self, target: NodeId) -> Option<&Embed> {
+        match self.map.get(&target) {
+            Some(e) => {
+                self.hits += 1;
+                Some(e)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly computed embedding, evicting FIFO at capacity.
+    /// Re-inserting a resident target refreshes the value without
+    /// growing the FIFO (its original queue position stands).
+    pub fn put(&mut self, target: NodeId, embed: Embed) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.map.insert(target, embed).is_some() {
+            return;
+        }
+        self.fifo.push_back(target);
+        while self.map.len() > self.cap {
+            if let Some(old) = self.fifo.pop_front() {
+                self.map.remove(&old);
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(v: f32) -> Embed {
+        (vec![v], vec![v + 0.5])
+    }
+
+    #[test]
+    fn hit_after_put_miss_before() {
+        let mut c = EmbedCache::new(4);
+        c.ensure_stamp((1, 0));
+        assert!(c.get(7).is_none());
+        c.put(7, e(1.0));
+        assert_eq!(c.get(7), Some(&e(1.0)));
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn stamp_change_flushes_and_counts() {
+        let mut c = EmbedCache::new(4);
+        c.ensure_stamp((1, 0));
+        c.put(7, e(1.0));
+        c.ensure_stamp((1, 0)); // unchanged: no flush
+        assert_eq!(c.len(), 1);
+        c.ensure_stamp((2, 0)); // param step landed
+        assert!(c.is_empty());
+        assert_eq!(c.invalidations, 1);
+        c.put(7, e(2.0));
+        c.ensure_stamp((2, 1)); // store delta landed
+        assert!(c.is_empty());
+        assert_eq!(c.invalidations, 2);
+        // Flushing an already-empty cache is not an invalidation.
+        c.ensure_stamp((3, 1));
+        assert_eq!(c.invalidations, 2);
+    }
+
+    #[test]
+    fn fifo_eviction_is_insertion_ordered() {
+        let mut c = EmbedCache::new(2);
+        c.ensure_stamp((0, 0));
+        c.put(1, e(1.0));
+        c.put(2, e(2.0));
+        c.put(1, e(1.5)); // refresh, not re-enqueue
+        c.put(3, e(3.0)); // evicts 1 (oldest insertion)
+        assert!(c.get(1).is_none());
+        assert_eq!(c.get(2), Some(&e(2.0)));
+        assert_eq!(c.get(3), Some(&e(3.0)));
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = EmbedCache::new(0);
+        c.ensure_stamp((0, 0));
+        c.put(1, e(1.0));
+        assert!(c.get(1).is_none());
+        assert_eq!(c.len(), 0);
+    }
+}

@@ -1,0 +1,1113 @@
+//! The serving mode (`heta serve`): deadline-driven microbatched
+//! inference over the existing exec layer — forward-only, no backward,
+//! no updates.
+//!
+//! The pieces, each its own submodule:
+//!
+//! * [`request`] — the deterministic request stream: Zipf-popular
+//!   targets, Poisson arrivals, per-request latency budgets (or the
+//!   same shape loaded from a trace file).
+//! * [`batcher`] — the deadline-driven microbatcher: a batch closes
+//!   when the *oldest* pending request's budget would otherwise be
+//!   breached, not at a fixed size. Waiting is simulated on the stream
+//!   clock; compute is real and its measured service time feeds back
+//!   into the close rule.
+//! * [`cache`] — the embedding-reuse cache, keyed on (target, param
+//!   version, store generation) and flushed whole on any stamp change,
+//!   so a served embedding is always byte-identical to a fresh forward.
+//!
+//! This module owns the engine that ties them to the exec layer.
+//! Serving reuses the *training* worker-forward decomposition
+//! ([`BatchPlan::forward_only`] — `worker_fwd_p{p}` per partition,
+//! summed partials, no leader/backward artifacts) on **both** engines:
+//! the vanilla fused train-step artifact has no per-target embedding
+//! output, so the baseline serves through the same decomposition and
+//! the engine choice controls only the feature-cache policy. A serving
+//! "embedding" is the pair of layer partial sums the RAF fold produces
+//! for a target's row.
+//!
+//! **Splice sampling.** Training samples key their RNG on the global
+//! slot index, so a target's neighborhood depends on its batch
+//! position — useless for caching. Serving samples each target as its
+//! own single-target tree (`sample_tree(&[t], 0, serve_seed, ..)`) and
+//! splices the per-target blocks into one padded batch tree: block `i`
+//! of every metatree vertex is target `i`'s block, because vertex
+//! sizes are linear in the batch (`sizes_b[v] = b · sizes_1[v]`) and
+//! child slots of a parent block land in the child's same block. A
+//! target's embedding is then a pure function of `(target, serve_seed,
+//! params, store)` — cacheable bit-for-bit, independent of microbatch
+//! composition. `tests/test_serve.rs` pins both properties.
+//!
+//! Over TCP the protocol is two messages: the leader broadcasts the
+//! deduplicated padded chunk, workers return their partial sums, and
+//! the leader composes responses — per batch per worker the wire
+//! carries `2·[B,H]` floats up and the target ids down, independent of
+//! fan-out, exactly the training forward's Θ(|targets|) guarantee.
+
+pub mod batcher;
+pub mod cache;
+pub mod request;
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::cache::{FeatureCache, Policy, ServeLedger, TypeProfile};
+use crate::cluster::collective::{Hub, Port, RoundTag};
+use crate::cluster::mailbox::{slice_bytes, Wire};
+use crate::config::{partition_edge_filter, Config, RuntimeKind};
+use crate::coordinator::{Session, SystemKind};
+use crate::exec::{BatchArena, BatchPlan, EpochWorld, ExecContext, ExecGate, ParamsView};
+use crate::hetgraph::{HetGraph, MetaTree, NodeId};
+use crate::kvstore::FetchStats;
+use crate::net::codec::{ByteReader, ByteWriter, WireCodec};
+use crate::net::{Backend, Role, WireTraffic};
+use crate::partition::meta::meta_partition;
+use crate::partition::MetaPartition;
+use crate::sampling::{presample_hotness, sample_tree, vertex_sizes, Frontier, TreeSample, PAD};
+use crate::util::add_assign;
+use crate::util::stats::Samples;
+
+pub use batcher::{BatcherOpts, TimelineReport};
+pub use cache::{Embed, EmbedCache, Stamp};
+pub use request::{synthetic_stream, trace_stream, Request, StreamOpts};
+
+/// Serving knobs (CLI flags of `heta serve`).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Synthetic-stream length (ignored with a trace).
+    pub requests: usize,
+    /// Synthetic offered load (Poisson arrivals).
+    pub qps: f64,
+    /// Per-request latency budget.
+    pub deadline_ms: f64,
+    /// Synthetic popularity skew.
+    pub zipf_alpha: f64,
+    /// Request trace file (`target_id [arrival_us]` per line) instead
+    /// of the synthetic stream.
+    pub trace_path: Option<String>,
+    /// Embedding-reuse cache on (`--no-reuse` clears it — the A/B
+    /// baseline arm).
+    pub reuse: bool,
+    /// Cross-request frontier fetch dedup on (`--no-dedup-fetch`).
+    pub dedup_fetch: bool,
+    /// Embedding-cache capacity (entries).
+    pub embed_cap: usize,
+    /// Initial batcher service-time estimate; `0` derives `deadline/2`.
+    pub service_bound_ms: f64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            requests: 256,
+            qps: 200.0,
+            deadline_ms: 50.0,
+            zipf_alpha: 1.1,
+            trace_path: None,
+            reuse: true,
+            dedup_fetch: true,
+            embed_cap: 4096,
+            service_bound_ms: 0.0,
+        }
+    }
+}
+
+/// The serving seed: fixed per config, decoupled from the training
+/// batch seeds so a target's served neighborhood never depends on
+/// epoch or batch index.
+pub fn serve_seed(cfg: &Config) -> u64 {
+    cfg.train.seed ^ 0x5345_5256 // "SERV"
+}
+
+/// Outcome of one serving run (the leader's view; TCP worker ranks
+/// return an empty report carrying only their wire counters).
+#[derive(Debug, Default)]
+pub struct ServeReport {
+    pub served: usize,
+    pub batches: usize,
+    pub deadline_misses: usize,
+    pub max_batch: usize,
+    /// Per-request latency (stream-clock arrival → completion).
+    pub latencies_ms: Samples,
+    pub ledger: ServeLedger,
+    /// Served embeddings in request order — the byte-identity evidence
+    /// the tests and the bench A/B compare.
+    pub embeds: Vec<Embed>,
+    pub qps: f64,
+    /// Real socket traffic (zero for the channel backend).
+    pub wire: WireTraffic,
+}
+
+impl ServeReport {
+    pub fn p50_ms(&self) -> f64 {
+        self.latencies_ms.p50()
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latencies_ms.p99()
+    }
+
+    /// Human-readable summary. The `key=value` tokens (`p50_ms=`,
+    /// `p99_ms=`, `qps=`, `deadline_misses=`) are what CI's serve-smoke
+    /// step parses — keep them stable.
+    pub fn print(&self, label: &str) {
+        println!("== serve: {label} ==");
+        println!(
+            "  requests={} batches={} max_batch={} deadline_misses={}",
+            self.served, self.batches, self.max_batch, self.deadline_misses
+        );
+        println!(
+            "  p50_ms={:.3} p99_ms={:.3} qps={:.1}",
+            self.p50_ms(),
+            self.p99_ms(),
+            self.qps
+        );
+        println!(
+            "  embed: hits={} misses={} invalidations={} hit_rate={:.3}",
+            self.ledger.embed_hits,
+            self.ledger.embed_misses,
+            self.ledger.embed_invalidations,
+            self.ledger.hit_rate()
+        );
+        println!(
+            "  fetch: rows={} bytes={} rows_per_request={:.2} batch_dups={} computed={}",
+            self.ledger.fetched_rows,
+            self.ledger.fetched_bytes,
+            self.ledger.rows_per_request(),
+            self.ledger.batch_dups,
+            self.ledger.computed_targets
+        );
+        println!(
+            "  wire: sent={} recv={}",
+            crate::util::fmt_bytes(self.wire.real_sent),
+            crate::util::fmt_bytes(self.wire.real_recv)
+        );
+    }
+}
+
+/// The serving engine: the forward-only slice of the training engines'
+/// state (per-partition contexts, frontiers, arenas) plus the serving
+/// additions (embedding cache, store generation). Both [`SystemKind`]
+/// engines serve through the same meta-partitioned worker-forward
+/// decomposition; the engine choice selects only the feature-cache
+/// policy (Heta: the config's policy; the vanilla label: none).
+pub struct ServeEngine {
+    pub mp: MetaPartition,
+    plan: BatchPlan,
+    contexts: Vec<ExecContext>,
+    frontiers: Vec<Frontier>,
+    arenas: Vec<BatchArena>,
+    /// The embedding-reuse cache; counters are cumulative across runs
+    /// (each run's report ledgers the deltas).
+    pub embed: EmbedCache,
+    serve_seed: u64,
+    /// Feature-store generation: bumped by [`note_store_update`]
+    /// whenever a learnable-feature update lands, invalidating the
+    /// embedding cache through the stamp.
+    ///
+    /// [`note_store_update`]: ServeEngine::note_store_update
+    store_gen: u64,
+    dedup_fetch: bool,
+    gate: Option<ExecGate>,
+}
+
+impl ServeEngine {
+    pub fn new(sess: &mut Session, system: SystemKind, opts: &ServeOpts) -> Result<ServeEngine> {
+        let cfg = &sess.cfg;
+        let policy = match system {
+            SystemKind::Heta => cfg.train.cache_policy,
+            _ => Policy::None,
+        };
+        let (mp, _) = meta_partition(&sess.g, cfg.train.num_partitions, cfg.model.layers, None);
+        // Same cache construction as training (presampled hotness,
+        // per-partition budget over the types the partition holds), so
+        // serve-time feature hit rates are comparable to Fig. 12's.
+        let hotness = presample_hotness(
+            &sess.g,
+            &sess.tree,
+            &cfg.model.fanouts,
+            cfg.train.batch_size,
+            2,
+            cfg.train.seed ^ 0x807,
+        );
+        let gpus = cfg.train.gpus_per_machine.max(1);
+        // Role-gated construction, exactly like training: a TCP process
+        // plays one rank and only that rank's context gets an eager
+        // PJRT client (the leader composes, it never executes worker
+        // artifacts). Channel serving plays every rank in-process.
+        let role = match &sess.net {
+            Backend::Tcp(node) => Some(node.role()),
+            Backend::Channel => None,
+        };
+        let mut contexts = Vec::with_capacity(mp.num_parts);
+        for part in 0..mp.num_parts {
+            let present = mp.types_in_part(&sess.g, part);
+            let profiles: Vec<TypeProfile> = sess
+                .g
+                .schema
+                .node_types
+                .iter()
+                .map(|t| TypeProfile {
+                    name: t.name.clone(),
+                    count: t.count,
+                    feat_dim: t.feat_dim,
+                    learnable: t.learnable,
+                })
+                .collect();
+            let hot: Vec<Vec<u32>> = hotness
+                .iter()
+                .enumerate()
+                .map(|(ty, h)| {
+                    if present.contains(&ty) {
+                        h.clone()
+                    } else {
+                        vec![0; h.len()]
+                    }
+                })
+                .collect();
+            let cache = FeatureCache::build(
+                policy,
+                &profiles,
+                &hot,
+                &cfg.cost,
+                cfg.train.cache_bytes_per_gpu * cfg.train.gpus_per_machine as u64,
+                cfg.train.gpus_per_machine,
+            );
+            let eager = match role {
+                None => true,
+                Some(Role::Worker(w)) => w == part,
+                Some(Role::Leader) => false,
+            };
+            contexts.push(if eager {
+                ExecContext::new(
+                    part,
+                    part % gpus,
+                    &sess.artifacts_dir,
+                    Arc::clone(&sess.manifest),
+                    Some(cache),
+                )?
+            } else {
+                ExecContext::deferred(
+                    part,
+                    part % gpus,
+                    &sess.artifacts_dir,
+                    Arc::clone(&sess.manifest),
+                    Some(cache),
+                )
+            });
+        }
+        let plan = BatchPlan::forward_only(&sess.manifest, mp.num_parts)?;
+        let art_names: Vec<String> = plan.workers.iter().map(|w| w.fwd_art.clone()).collect();
+        sess.params
+            .ensure_artifacts(&sess.manifest, art_names.iter().map(|s| s.as_str()));
+        let frontiers = vec![Frontier::default(); mp.num_parts];
+        let arenas = (0..mp.num_parts).map(|_| BatchArena::new()).collect();
+        let gate = cfg.train.shared_session.then(ExecGate::new);
+        let cap = if opts.reuse { opts.embed_cap.max(1) } else { 0 };
+        Ok(ServeEngine {
+            mp,
+            plan,
+            contexts,
+            frontiers,
+            arenas,
+            embed: EmbedCache::new(cap),
+            serve_seed: serve_seed(cfg),
+            store_gen: 0,
+            dedup_fetch: opts.dedup_fetch,
+            gate,
+        })
+    }
+
+    /// A learnable-feature update landed in the KV store (a training
+    /// step's `StoreDelta`, a replication frame): bump the store
+    /// generation so the embedding cache's stamp invalidates.
+    pub fn note_store_update(&mut self) {
+        self.store_gen += 1;
+    }
+
+    /// Serve the request stream in-process (the channel backend; every
+    /// partition's forward runs on this thread in partition order, so
+    /// the fold matches the TCP gather's worker-id order exactly).
+    pub fn run_channel(
+        &mut self,
+        sess: &Session,
+        reqs: &[Request],
+        opts: &ServeOpts,
+    ) -> Result<ServeReport> {
+        let cfg = sess.cfg.clone();
+        let b = cfg.train.batch_size;
+        let h = cfg.model.hidden;
+        let ServeEngine {
+            mp,
+            plan,
+            contexts,
+            frontiers,
+            arenas,
+            embed,
+            serve_seed,
+            store_gen,
+            dedup_fetch,
+            gate,
+        } = self;
+        let parts = mp.num_parts;
+        let world = EpochWorld {
+            cfg: &cfg,
+            g: &sess.g,
+            tree: &sess.tree,
+            store: &sess.store,
+            gate: gate.as_ref(),
+            epoch_t0: Instant::now(),
+        };
+        let (hits0, miss0, inv0) = (embed.hits, embed.misses, embed.invalidations);
+        let mut ledger = ServeLedger::default();
+        let mut embeds_out: Vec<Embed> = Vec::with_capacity(reqs.len());
+        let bopts = BatcherOpts { capacity: b, service_bound_us: service_bound_us(opts) };
+        let timeline = batcher::run(reqs, &bopts, |batch| {
+            let t0 = Instant::now();
+            let targets: Vec<NodeId> = batch.iter().map(|r| r.target).collect();
+            let stamp = (sess.params.version(), *store_gen);
+            let served = serve_batch_with(embed, stamp, b, h, &targets, |chunk| {
+                let mut partials = [vec![0f32; b * h], vec![0f32; b * h]];
+                let mut fetch = FetchStats::default();
+                for p in 0..parts {
+                    let (p1, p2, stats) = worker_forward(
+                        plan,
+                        mp,
+                        &mut contexts[p],
+                        &mut frontiers[p],
+                        &mut arenas[p],
+                        &world,
+                        ParamsView::Owner(&sess.params),
+                        *serve_seed,
+                        *dedup_fetch,
+                        p,
+                        chunk,
+                    )?;
+                    ensure!(
+                        p1.len() == b * h && p2.len() == b * h,
+                        "partition {p}: partial shape ({}, {}) != {}",
+                        p1.len(),
+                        p2.len(),
+                        b * h
+                    );
+                    add_assign(&mut partials[0], &p1);
+                    add_assign(&mut partials[1], &p2);
+                    fetch.merge(stats);
+                }
+                Ok((partials, fetch))
+            })?;
+            absorb_batch(&mut ledger, batch.len(), &served);
+            embeds_out.extend(served.embeds);
+            Ok(t0.elapsed().as_micros().max(1) as u64)
+        })?;
+        ledger.embed_hits = embed.hits - hits0;
+        ledger.embed_misses = embed.misses - miss0;
+        ledger.embed_invalidations = embed.invalidations - inv0;
+        Ok(finish(timeline, ledger, embeds_out, WireTraffic::default()))
+    }
+}
+
+/// Fold one served batch into the run ledger.
+fn absorb_batch(ledger: &mut ServeLedger, requests: usize, served: &BatchServed) {
+    ledger.requests += requests as u64;
+    ledger.batches += 1;
+    ledger.computed_targets += served.computed as u64;
+    ledger.batch_dups += served.dups as u64;
+    ledger.fetched_rows += served.stats.rows;
+    ledger.fetched_bytes += served.stats.bytes;
+}
+
+fn service_bound_us(opts: &ServeOpts) -> u64 {
+    let ms = if opts.service_bound_ms > 0.0 {
+        opts.service_bound_ms
+    } else {
+        opts.deadline_ms / 2.0
+    };
+    (ms * 1e3).max(1.0) as u64
+}
+
+/// Per-target splice sampling (module docs): sample each non-[`PAD`]
+/// target as its own single-target tree under `seed` and splice block
+/// `i` of every vertex from target `i`'s blocks. Padded targets leave
+/// their blocks all-[`PAD`] — exactly what a padded root slot produces.
+fn splice_sample(
+    g: &HetGraph,
+    tree: &MetaTree,
+    fanouts: &[usize],
+    chunk: &[NodeId],
+    seed: u64,
+    filter: &impl Fn(usize) -> bool,
+) -> TreeSample {
+    let b = chunk.len();
+    let sizes_b = vertex_sizes(tree, fanouts, b);
+    let sizes_1 = vertex_sizes(tree, fanouts, 1);
+    let mut ids: Vec<Vec<NodeId>> = sizes_b.iter().map(|&s| vec![PAD; s]).collect();
+    for (i, &t) in chunk.iter().enumerate() {
+        if t == PAD {
+            continue;
+        }
+        let one = sample_tree(g, tree, fanouts, &[t], 0, seed, filter);
+        for (v, block) in one.ids.iter().enumerate() {
+            let m = sizes_1[v];
+            ids[v][i * m..(i + 1) * m].copy_from_slice(block);
+        }
+    }
+    TreeSample { ids, fanouts: fanouts.to_vec() }
+}
+
+/// One partition's forward over the deduplicated padded chunk: splice
+/// sample, optional frontier dedup, `worker_fwd_p{p}` — the training
+/// forward stage minus backward bookkeeping.
+#[allow(clippy::too_many_arguments)]
+fn worker_forward(
+    plan: &BatchPlan,
+    mp: &MetaPartition,
+    ctx: &mut ExecContext,
+    frontier: &mut Frontier,
+    arena: &mut BatchArena,
+    world: &EpochWorld<'_>,
+    params: ParamsView<'_>,
+    seed: u64,
+    dedup: bool,
+    p: usize,
+    chunk: &[NodeId],
+) -> Result<(Vec<f32>, Vec<f32>, FetchStats)> {
+    let wp = &plan.workers[p];
+    let filter = partition_edge_filter(world.tree, mp, p);
+    let sample = splice_sample(world.g, world.tree, &world.cfg.model.fanouts, chunk, seed, &filter);
+    if dedup {
+        let ntypes = world.g.schema.node_types.len();
+        frontier.rebuild(world.tree, &sample, ntypes, wp.needs_root);
+    }
+    let fr = dedup.then_some(&*frontier);
+    // sample_s = 0: serving charges real wall time through the batcher,
+    // not the modeled stage clock.
+    let fwd = wp.raf_forward(ctx, world, params, &sample, fr, chunk, 0.0, arena)?;
+    Ok((fwd.p1, fwd.p2, fwd.stats))
+}
+
+/// What serving one microbatch produced.
+pub struct BatchServed {
+    /// One embedding per request, in the batch's request order.
+    pub embeds: Vec<Embed>,
+    /// KV fetch accounting of the compute call (zero on an all-hit batch).
+    pub stats: FetchStats,
+    /// Targets that actually went through the forward plan.
+    pub computed: usize,
+    /// Requests deduplicated away inside this batch.
+    pub dups: usize,
+}
+
+/// Serve one microbatch through the embedding cache: dedup targets
+/// within the batch, look up survivors under `stamp`, run `compute`
+/// once over the padded chunk of misses (skipped entirely on an
+/// all-hit batch), insert fresh embeddings, and compose one response
+/// per request. `compute` returns the summed `[2][capacity·h]`
+/// partials plus fetch accounting.
+fn serve_batch_with(
+    embed: &mut EmbedCache,
+    stamp: Stamp,
+    capacity: usize,
+    h: usize,
+    targets: &[NodeId],
+    compute: impl FnOnce(&[NodeId]) -> Result<([Vec<f32>; 2], FetchStats)>,
+) -> Result<BatchServed> {
+    embed.ensure_stamp(stamp);
+    let mut have: HashMap<NodeId, Embed> = HashMap::new();
+    let mut seen: HashSet<NodeId> = HashSet::new();
+    let mut fresh: Vec<NodeId> = Vec::new();
+    let mut dups = 0usize;
+    for &t in targets {
+        ensure!(t != PAD, "the request stream contains a PAD target");
+        if !seen.insert(t) {
+            dups += 1;
+            continue;
+        }
+        if let Some(e) = embed.get(t) {
+            have.insert(t, e.clone());
+        } else {
+            fresh.push(t);
+        }
+    }
+    ensure!(
+        fresh.len() <= capacity,
+        "{} distinct uncached targets exceed the artifact batch capacity {capacity}",
+        fresh.len()
+    );
+    let mut stats = FetchStats::default();
+    if !fresh.is_empty() {
+        let mut chunk = fresh.clone();
+        chunk.resize(capacity, PAD);
+        let (partials, fetch) = compute(&chunk)?;
+        ensure!(
+            partials[0].len() == capacity * h && partials[1].len() == capacity * h,
+            "computed partials have shape ({}, {}), expected {}",
+            partials[0].len(),
+            partials[1].len(),
+            capacity * h
+        );
+        for (i, &t) in fresh.iter().enumerate() {
+            let e: Embed = (
+                partials[0][i * h..(i + 1) * h].to_vec(),
+                partials[1][i * h..(i + 1) * h].to_vec(),
+            );
+            embed.put(t, e.clone());
+            have.insert(t, e);
+        }
+        stats = fetch;
+    }
+    let embeds = targets
+        .iter()
+        .map(|t| {
+            have.get(t)
+                .cloned()
+                .ok_or_else(|| anyhow!("target {t} missing from the served batch"))
+        })
+        .collect::<Result<Vec<Embed>>>()?;
+    Ok(BatchServed { embeds, stats, computed: fresh.len(), dups })
+}
+
+/// Build the run's report and publish the flight-recorder view of it.
+fn finish(
+    timeline: TimelineReport,
+    ledger: ServeLedger,
+    embeds: Vec<Embed>,
+    wire: WireTraffic,
+) -> ServeReport {
+    for &l in timeline.latencies_ms.values() {
+        crate::obs::hist_observe("serve.latency_ms", l);
+    }
+    crate::obs::counter_add("serve.requests", timeline.served as u64);
+    crate::obs::counter_add("serve.deadline_misses", timeline.misses as u64);
+    crate::obs::counter_add("serve.embed_hits", ledger.embed_hits);
+    crate::obs::counter_add("serve.embed_misses", ledger.embed_misses);
+    crate::obs::counter_add("serve.embed_invalidations", ledger.embed_invalidations);
+    let rep = ServeReport {
+        served: timeline.served,
+        batches: timeline.batches,
+        deadline_misses: timeline.misses,
+        max_batch: timeline.max_batch,
+        qps: timeline.qps(),
+        latencies_ms: timeline.latencies_ms,
+        ledger,
+        embeds,
+        wire,
+    };
+    crate::obs::record_serve_summary(rep.p50_ms(), rep.p99_ms(), rep.qps);
+    rep
+}
+
+// ---- the TCP serving protocol ----
+
+/// Worker → leader: one partition's partial sums for a serve batch.
+#[derive(Debug, PartialEq)]
+enum ServeUp {
+    Fwd {
+        bi: usize,
+        p1: Vec<f32>,
+        p2: Vec<f32>,
+        stats: FetchStats,
+    },
+    /// Best-effort death notice (same role as training's): aborts the
+    /// leader's gather with the worker's own diagnosis instead of a
+    /// bare hangup.
+    Failed { bi: usize, msg: String },
+}
+
+/// Leader → worker: the deduplicated padded chunk to forward, or the
+/// end of the stream.
+#[derive(Clone, Debug, PartialEq)]
+enum ServeDown {
+    Batch { bi: usize, chunk: Vec<NodeId> },
+    Done,
+}
+
+fn serve_up_tag(u: &ServeUp) -> RoundTag {
+    match u {
+        ServeUp::Fwd { bi, .. } => RoundTag::Round(*bi as u64),
+        ServeUp::Failed { bi, msg } => RoundTag::abort_for(*bi, msg),
+    }
+}
+
+impl Wire for ServeUp {
+    fn wire_bytes(&self) -> u64 {
+        match self {
+            // The 2·[B,H] partials — the modeled response traffic.
+            ServeUp::Fwd { p1, p2, .. } => slice_bytes(p1) + slice_bytes(p2),
+            ServeUp::Failed { .. } => 0,
+        }
+    }
+}
+
+impl Wire for ServeDown {
+    fn wire_bytes(&self) -> u64 {
+        match self {
+            // The target ids to embed — the modeled request traffic.
+            ServeDown::Batch { chunk, .. } => 4 * chunk.len() as u64,
+            ServeDown::Done => 0,
+        }
+    }
+}
+
+impl WireCodec for ServeUp {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            ServeUp::Fwd { bi, p1, p2, stats } => {
+                w.u8(0);
+                w.usize(*bi);
+                w.f32s(p1);
+                w.f32s(p2);
+                stats.encode(w);
+            }
+            ServeUp::Failed { bi, msg } => {
+                w.u8(1);
+                w.usize(*bi);
+                w.str(msg);
+            }
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<ServeUp> {
+        match r.u8()? {
+            0 => {
+                let bi = r.usize()?;
+                let p1 = r.f32s()?;
+                let p2 = r.f32s()?;
+                let stats = FetchStats::decode(r)?;
+                Ok(ServeUp::Fwd { bi, p1, p2, stats })
+            }
+            1 => {
+                let bi = r.usize()?;
+                let msg = r.str()?;
+                Ok(ServeUp::Failed { bi, msg })
+            }
+            t => bail!("unknown serve worker-message tag {t}"),
+        }
+    }
+}
+
+impl WireCodec for ServeDown {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            ServeDown::Batch { bi, chunk } => {
+                w.u8(0);
+                w.usize(*bi);
+                w.u32s(chunk);
+            }
+            ServeDown::Done => w.u8(1),
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<ServeDown> {
+        match r.u8()? {
+            0 => {
+                let bi = r.usize()?;
+                let chunk = r.u32s()?;
+                Ok(ServeDown::Batch { bi, chunk })
+            }
+            1 => Ok(ServeDown::Done),
+            t => bail!("unknown serve leader-message tag {t}"),
+        }
+    }
+}
+
+/// This process's typed socket lanes for the serving protocol.
+type ServeLanes = crate::cluster::Lanes<ServeUp, ServeDown>;
+
+/// Serve the stream over a multi-process TCP star: this process plays
+/// exactly the rank its lanes were opened for. The leader runs the
+/// batcher and the embedding cache, broadcasting only batches with at
+/// least one uncached target; workers forward chunks until `Done`.
+fn run_tcp(
+    eng: &mut ServeEngine,
+    sess: &Session,
+    reqs: &[Request],
+    opts: &ServeOpts,
+    lanes: &ServeLanes,
+) -> Result<ServeReport> {
+    let cfg = sess.cfg.clone();
+    let b = cfg.train.batch_size;
+    let h = cfg.model.hidden;
+    let wire0 = lanes.traffic();
+    let ServeEngine {
+        mp,
+        plan,
+        contexts,
+        frontiers,
+        arenas,
+        embed,
+        serve_seed,
+        store_gen,
+        dedup_fetch,
+        gate,
+    } = eng;
+    let parts = mp.num_parts;
+    let world = EpochWorld {
+        cfg: &cfg,
+        g: &sess.g,
+        tree: &sess.tree,
+        store: &sess.store,
+        gate: gate.as_ref(),
+        epoch_t0: Instant::now(),
+    };
+    match lanes.role {
+        Role::Leader => {
+            let mut hub = Hub::from_endpoints(&lanes.up, &lanes.down, parts);
+            let bhub = Hub::from_endpoints(&lanes.bar_up, &lanes.bar_down, parts);
+            bhub.barrier().context("serve: opening barrier")?;
+            let (hits0, miss0, inv0) = (embed.hits, embed.misses, embed.invalidations);
+            let mut ledger = ServeLedger::default();
+            let mut embeds_out: Vec<Embed> = Vec::with_capacity(reqs.len());
+            let mut next_bi = 0usize;
+            let bopts = BatcherOpts { capacity: b, service_bound_us: service_bound_us(opts) };
+            let run = batcher::run(reqs, &bopts, |batch| {
+                let t0 = Instant::now();
+                let targets: Vec<NodeId> = batch.iter().map(|r| r.target).collect();
+                let stamp = (sess.params.version(), *store_gen);
+                let served = serve_batch_with(embed, stamp, b, h, &targets, |chunk| {
+                    let this = next_bi;
+                    next_bi += 1;
+                    hub.broadcast(ServeDown::Batch { bi: this, chunk: chunk.to_vec() })?;
+                    let ups = hub.gather_round(this as u64, serve_up_tag).with_context(|| {
+                        format!("serve batch {this}: collecting forward partials")
+                    })?;
+                    let mut partials = [vec![0f32; b * h], vec![0f32; b * h]];
+                    let mut fetch = FetchStats::default();
+                    for (w, up) in ups.into_iter().enumerate() {
+                        match up {
+                            ServeUp::Fwd { bi: ubi, p1, p2, stats } => {
+                                ensure!(
+                                    ubi == this,
+                                    "protocol error: batch {ubi} partials in serve batch \
+                                     {this}'s round"
+                                );
+                                ensure!(
+                                    p1.len() == b * h && p2.len() == b * h,
+                                    "worker {w}: partial shape ({}, {}) != {}",
+                                    p1.len(),
+                                    p2.len(),
+                                    b * h
+                                );
+                                add_assign(&mut partials[0], &p1);
+                                add_assign(&mut partials[1], &p2);
+                                fetch.merge(stats);
+                            }
+                            ServeUp::Failed { bi: fbi, msg } => bail!(
+                                "batch {fbi} death notice escaped gather_round's abort path \
+                                 (protocol bug): {msg}"
+                            ),
+                        }
+                    }
+                    Ok((partials, fetch))
+                })?;
+                absorb_batch(&mut ledger, batch.len(), &served);
+                embeds_out.extend(served.embeds);
+                Ok(t0.elapsed().as_micros().max(1) as u64)
+            });
+            // Release the workers whether the run succeeded or not —
+            // on error they would otherwise block in recv forever.
+            let _ = hub.broadcast(ServeDown::Done);
+            let timeline = run?;
+            ledger.embed_hits = embed.hits - hits0;
+            ledger.embed_misses = embed.misses - miss0;
+            ledger.embed_invalidations = embed.invalidations - inv0;
+            let mut rep = finish(timeline, ledger, embeds_out, WireTraffic::default());
+            rep.wire = lanes.traffic().since(&wire0);
+            Ok(rep)
+        }
+        Role::Worker(w) => {
+            let port = Port::from_endpoints(&lanes.up, &lanes.down, parts);
+            let bport = Port::from_endpoints(&lanes.bar_up, &lanes.bar_down, parts);
+            bport.barrier().context("serve: opening barrier")?;
+            let ctx = contexts
+                .get_mut(w)
+                .ok_or_else(|| anyhow!("worker rank {w} outside the {parts}-partition plan"))?;
+            loop {
+                match port.recv()? {
+                    ServeDown::Batch { bi, chunk } => {
+                        // Every serving rank derives bit-identical
+                        // parameters from the config seed (deterministic
+                        // init, version 0, no updates), so workers read
+                        // their own store — no snapshot broadcast.
+                        let fwd = worker_forward(
+                            plan,
+                            mp,
+                            ctx,
+                            &mut frontiers[w],
+                            &mut arenas[w],
+                            &world,
+                            ParamsView::Owner(&sess.params),
+                            *serve_seed,
+                            *dedup_fetch,
+                            w,
+                            &chunk,
+                        );
+                        match fwd {
+                            Ok((p1, p2, stats)) => {
+                                port.send(ServeUp::Fwd { bi, p1, p2, stats })?
+                            }
+                            Err(e) => {
+                                let _ = port.send(ServeUp::Failed {
+                                    bi,
+                                    msg: format!("{e:#}"),
+                                });
+                                return Err(e.context(format!("serve worker {w}, batch {bi}")));
+                            }
+                        }
+                    }
+                    ServeDown::Done => break,
+                }
+            }
+            let mut rep = ServeReport::default();
+            rep.wire = lanes.traffic().since(&wire0);
+            Ok(rep)
+        }
+    }
+}
+
+/// Build the request stream a config + opts describe (synthetic unless
+/// a trace file is named).
+pub fn build_stream(sess: &Session, opts: &ServeOpts) -> Result<Vec<Request>> {
+    match &opts.trace_path {
+        Some(path) => {
+            let n = sess.g.schema.node_types[sess.g.schema.target].count;
+            trace_stream(path, opts.deadline_ms, n)
+        }
+        None => synthetic_stream(
+            &sess.g,
+            &StreamOpts {
+                requests: opts.requests,
+                qps: opts.qps,
+                deadline_ms: opts.deadline_ms,
+                zipf_alpha: opts.zipf_alpha,
+                seed: sess.cfg.train.seed ^ 0x5354_5245, // "STRE"
+            },
+        ),
+    }
+}
+
+/// CLI entry point: build a session + serving engine and drive the
+/// request stream over the given transport backend. With `Backend::Tcp`
+/// this process plays exactly one rank (the leader batches and serves,
+/// workers forward); the channel backend plays every rank in-process.
+pub fn run_serve(
+    cfg: &Config,
+    artifacts_dir: &str,
+    system: SystemKind,
+    opts: &ServeOpts,
+    net: Backend,
+) -> Result<ServeReport> {
+    let mut cfg = cfg.clone();
+    if matches!(net, Backend::Tcp(_)) {
+        // The socket star only exists under the cluster runtime.
+        cfg.train.runtime = RuntimeKind::Cluster;
+    }
+    let cfg = &cfg;
+    let mut sess = Session::new(cfg, artifacts_dir)?;
+    sess.net = net;
+    let mut eng = ServeEngine::new(&mut sess, system, opts)?;
+    // Only the rank that runs the batcher needs the stream; TCP worker
+    // ranks receive their work over the wire.
+    let reqs = if sess.net.is_tcp_worker() {
+        Vec::new()
+    } else {
+        build_stream(&sess, opts)?
+    };
+    let lanes = match &sess.net {
+        Backend::Tcp(node) => Some(ServeLanes::open(node, eng.mp.num_parts)?),
+        Backend::Channel => None,
+    };
+    match &lanes {
+        Some(lanes) => run_tcp(&mut eng, &sess, &reqs, opts, lanes),
+        None => eng.run_channel(&sess, &reqs, opts),
+    }
+}
+
+/// Serve over a loopback TCP star: one OS thread per rank, each with
+/// its own [`Session`] (its own stores and contexts), connected through
+/// real sockets on an ephemeral `127.0.0.1` port. Returns the leader's
+/// report; worker reports (wire counters only) are discarded. The
+/// TCP half of `tests/test_serve.rs` and CI's serve-smoke step.
+pub fn run_loopback_tcp_serve(
+    cfg: &Config,
+    artifacts_dir: &str,
+    system: SystemKind,
+    opts: &ServeOpts,
+) -> Result<ServeReport> {
+    let mut cfg = cfg.clone();
+    cfg.train.runtime = RuntimeKind::Cluster;
+    let cfg = &cfg;
+    let parts = cfg.train.num_partitions;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| anyhow!("binding a loopback listener: {e}"))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| anyhow!("reading the loopback address: {e}"))?
+        .to_string();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..parts)
+            .map(|w| {
+                let addr = addr.clone();
+                s.spawn(move || -> Result<()> {
+                    let node =
+                        crate::net::tcp::dial(&addr, w, parts, crate::net::tcp::DIAL_TIMEOUT)?;
+                    run_serve(cfg, artifacts_dir, system, opts, Backend::Tcp(node))?;
+                    Ok(())
+                })
+            })
+            .collect();
+        let led = (|| -> Result<ServeReport> {
+            let node = crate::net::tcp::accept_workers(listener, parts)?;
+            run_serve(cfg, artifacts_dir, system, opts, Backend::Tcp(node))
+        })();
+        let mut worker_err: Option<anyhow::Error> = None;
+        for (w, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if worker_err.is_none() {
+                        worker_err = Some(e.context(format!("loopback worker rank {w}")));
+                    }
+                }
+                Err(_) => {
+                    if worker_err.is_none() {
+                        worker_err = Some(anyhow!("loopback worker rank {w} panicked"));
+                    }
+                }
+            }
+        }
+        match (led, worker_err) {
+            (Ok(rep), None) => Ok(rep),
+            (Err(e), _) => Err(e),
+            (Ok(_), Some(we)) => Err(we),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, GenParams, Preset};
+    use crate::net::codec::{decode_message, encode_message};
+
+    #[test]
+    fn splice_matches_per_target_blocks() {
+        let g = generate(Preset::Mag, 1e-4, &GenParams::default());
+        let tree = MetaTree::build(&g.schema, 2);
+        let fanouts = vec![3, 2];
+        let targets = g.train_nodes();
+        assert!(targets.len() >= 3);
+        let chunk = [targets[0], targets[1], PAD, targets[2]];
+        let seed = 0xC0FFEE;
+        let combined = splice_sample(&g, &tree, &fanouts, &chunk, seed, &|_| true);
+        let sizes_1 = vertex_sizes(&tree, &fanouts, 1);
+        let sizes_b = vertex_sizes(&tree, &fanouts, chunk.len());
+        for (v, &m) in sizes_1.iter().enumerate() {
+            // Vertex sizes are linear in the batch — the invariant the
+            // whole splice layout rests on.
+            assert_eq!(sizes_b[v], chunk.len() * m);
+        }
+        for (i, &t) in chunk.iter().enumerate() {
+            if t == PAD {
+                for (v, &m) in sizes_1.iter().enumerate() {
+                    assert!(
+                        combined.ids[v][i * m..(i + 1) * m].iter().all(|&id| id == PAD),
+                        "padded target's vertex-{v} block must stay PAD"
+                    );
+                }
+                continue;
+            }
+            // Block i of every vertex is exactly the single-target tree
+            // of target i — position-independent, hence cacheable.
+            let one = sample_tree(&g, &tree, &fanouts, &[t], 0, seed, |_| true);
+            for (v, &m) in sizes_1.iter().enumerate() {
+                assert_eq!(
+                    &combined.ids[v][i * m..(i + 1) * m],
+                    &one.ids[v][..],
+                    "vertex {v}, block {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn serve_batch_caches_dedups_and_composes() {
+        let mut embed = EmbedCache::new(8);
+        let h = 2;
+        // Batch 1: [7, 7, 9] — one in-batch dup, two computed.
+        let mut calls = 0usize;
+        let served = serve_batch_with(&mut embed, (0, 0), 4, h, &[7, 7, 9], |chunk| {
+            calls += 1;
+            assert_eq!(chunk, &[7, 9, PAD, PAD]);
+            let mut p1 = vec![0f32; 4 * h];
+            let mut p2 = vec![0f32; 4 * h];
+            for (i, &t) in chunk.iter().enumerate() {
+                if t == PAD {
+                    continue;
+                }
+                p1[i * h..(i + 1) * h].fill(t as f32);
+                p2[i * h..(i + 1) * h].fill(-(t as f32));
+            }
+            Ok(([p1, p2], FetchStats { rows: 6, bytes: 48, ..Default::default() }))
+        })
+        .unwrap();
+        assert_eq!((calls, served.computed, served.dups), (1, 2, 1));
+        assert_eq!(served.embeds.len(), 3);
+        assert_eq!(served.embeds[0], (vec![7.0; 2], vec![-7.0; 2]));
+        assert_eq!(served.embeds[1], served.embeds[0]);
+        assert_eq!(served.embeds[2], (vec![9.0; 2], vec![-9.0; 2]));
+        assert_eq!(served.stats.rows, 6);
+        // Batch 2: all hits — compute must not run at all.
+        let served = serve_batch_with(&mut embed, (0, 0), 4, h, &[9, 7], |_| {
+            panic!("an all-hit batch must skip compute")
+        })
+        .unwrap();
+        assert_eq!((served.computed, served.dups), (0, 0));
+        assert_eq!(served.embeds[1], (vec![7.0; 2], vec![-7.0; 2]));
+        assert_eq!(served.stats.rows, 0);
+        // Stamp change: everything recomputes.
+        let served = serve_batch_with(&mut embed, (1, 0), 4, h, &[7], |chunk| {
+            assert_eq!(chunk[0], 7);
+            Ok(([vec![1.0; 4 * h], vec![2.0; 4 * h]], FetchStats::default()))
+        })
+        .unwrap();
+        assert_eq!(served.computed, 1);
+        assert_eq!(embed.invalidations, 1);
+    }
+
+    #[test]
+    fn serve_protocol_round_trips() {
+        let ups = [
+            ServeUp::Fwd {
+                bi: 3,
+                p1: vec![1.0, -2.0, 0.5],
+                p2: vec![0.25],
+                stats: FetchStats { rows: 5, bytes: 80, remote_rows: 1, remote_bytes: 16 },
+            },
+            ServeUp::Failed { bi: 9, msg: "worker 1: artifact missing".into() },
+        ];
+        for m in &ups {
+            let bytes = encode_message(m);
+            let back: ServeUp = decode_message(&bytes).unwrap();
+            assert_eq!(&back, m);
+        }
+        let downs = [
+            ServeDown::Batch { bi: 1, chunk: vec![1, 2, PAD] },
+            ServeDown::Done,
+        ];
+        for m in &downs {
+            let bytes = encode_message(m);
+            let back: ServeDown = decode_message(&bytes).unwrap();
+            assert_eq!(&back, m);
+        }
+        // Modeled wire accounting: partials and target ids count,
+        // control frames don't.
+        assert_eq!(ups[0].wire_bytes(), 4 * 4);
+        assert_eq!(ups[1].wire_bytes(), 0);
+        assert_eq!(downs[0].wire_bytes(), 3 * 4);
+        assert_eq!(ServeDown::Done.wire_bytes(), 0);
+    }
+}

@@ -1,0 +1,208 @@
+//! The serving request model: a deterministic, seed-derived stream of
+//! (target node, arrival time, latency budget) triples, or the same
+//! shape loaded from a trace file.
+//!
+//! Synthetic streams model the workload the north star describes —
+//! heavy online traffic over a skewed popularity distribution: targets
+//! are drawn Zipf(α) over a seed-shuffled ranking of the training
+//! targets (so *which* nodes are hot is itself seed-derived), and
+//! arrivals follow a Poisson process at the requested QPS
+//! (exponential interarrivals from the same seeded RNG). Everything
+//! downstream — microbatch composition, cache hits, served bytes — is
+//! a pure function of `(config seed, stream knobs)`.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::hetgraph::{HetGraph, NodeId};
+use crate::util::rng::{Rng, Zipf};
+
+/// One inference request: embed `target`, arriving at `arrival_us` on
+/// the stream clock, due by `deadline_us` (absolute, not a budget).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub id: usize,
+    pub target: NodeId,
+    pub arrival_us: u64,
+    pub deadline_us: u64,
+}
+
+impl Request {
+    /// The request's latency budget (deadline − arrival).
+    pub fn budget_us(&self) -> u64 {
+        self.deadline_us.saturating_sub(self.arrival_us)
+    }
+}
+
+/// Knobs of the synthetic stream (CLI defaults in `heta serve`).
+#[derive(Debug, Clone)]
+pub struct StreamOpts {
+    /// Total requests to generate.
+    pub requests: usize,
+    /// Mean offered load (Poisson arrivals).
+    pub qps: f64,
+    /// Per-request latency budget.
+    pub deadline_ms: f64,
+    /// Popularity skew over the target pool (α of Zipf).
+    pub zipf_alpha: f64,
+    /// Stream seed — derive from the config seed so a config pins its
+    /// serving workload the way it pins its training batches.
+    pub seed: u64,
+}
+
+/// Generate the deterministic synthetic stream: Zipf-popular targets
+/// from the graph's training set, Poisson arrivals at `qps`. Sorted by
+/// arrival; ids are positions in that order.
+pub fn synthetic_stream(g: &HetGraph, opts: &StreamOpts) -> Result<Vec<Request>> {
+    ensure!(opts.requests > 0, "a serving run needs at least one request");
+    ensure!(
+        opts.qps > 0.0 && opts.qps.is_finite(),
+        "--qps must be a positive rate, got {}",
+        opts.qps
+    );
+    ensure!(
+        opts.deadline_ms > 0.0 && opts.deadline_ms.is_finite(),
+        "--deadline-ms must be a positive budget, got {}",
+        opts.deadline_ms
+    );
+    let mut pool = g.train_nodes();
+    ensure!(!pool.is_empty(), "the graph has no training targets to serve");
+    let mut rng = Rng::new(opts.seed);
+    // The Zipf rank→node map is a seeded shuffle: rank 0 (the hottest)
+    // is an arbitrary-but-reproducible target, not always node 0.
+    rng.shuffle(&mut pool);
+    let zipf = Zipf::new(pool.len(), opts.zipf_alpha);
+    let mean_gap_us = 1e6 / opts.qps;
+    let budget_us = (opts.deadline_ms * 1e3).ceil() as u64;
+    let mut arrival = 0f64;
+    let mut reqs = Vec::with_capacity(opts.requests);
+    for id in 0..opts.requests {
+        // Exponential interarrival; clamp the log away from u = 0.
+        arrival += -(1.0 - rng.f64()).max(1e-12).ln() * mean_gap_us;
+        let arrival_us = arrival as u64;
+        reqs.push(Request {
+            id,
+            target: pool[zipf.sample(&mut rng)],
+            arrival_us,
+            deadline_us: arrival_us + budget_us,
+        });
+    }
+    Ok(reqs)
+}
+
+/// Load a request trace: one request per non-empty, non-`#` line, as
+/// `target_id [arrival_us]` (whitespace-separated). A missing arrival
+/// inherits the previous line's (burst semantics); arrivals must be
+/// non-decreasing. Every request gets the same `deadline_ms` budget.
+pub fn trace_stream(path: &str, deadline_ms: f64, num_targets: usize) -> Result<Vec<Request>> {
+    ensure!(
+        deadline_ms > 0.0 && deadline_ms.is_finite(),
+        "--deadline-ms must be a positive budget, got {deadline_ms}"
+    );
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading the request trace {path}"))?;
+    let budget_us = (deadline_ms * 1e3).ceil() as u64;
+    let mut reqs: Vec<Request> = Vec::new();
+    let mut last_arrival = 0u64;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut fields = line.split_whitespace();
+        let target: NodeId = fields
+            .next()
+            .unwrap_or_default()
+            .parse()
+            .with_context(|| format!("{path}:{}: expected a target node id", lineno + 1))?;
+        ensure!(
+            (target as usize) < num_targets,
+            "{path}:{}: target {target} outside the {num_targets}-node target type",
+            lineno + 1
+        );
+        let arrival_us = match fields.next() {
+            Some(f) => f
+                .parse()
+                .with_context(|| format!("{path}:{}: bad arrival_us '{f}'", lineno + 1))?,
+            None => last_arrival,
+        };
+        ensure!(
+            arrival_us >= last_arrival,
+            "{path}:{}: arrivals must be non-decreasing ({arrival_us} < {last_arrival})",
+            lineno + 1
+        );
+        last_arrival = arrival_us;
+        reqs.push(Request {
+            id: reqs.len(),
+            target,
+            arrival_us,
+            deadline_us: arrival_us + budget_us,
+        });
+    }
+    ensure!(!reqs.is_empty(), "{path}: the trace names no requests");
+    Ok(reqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, GenParams, Preset};
+
+    fn graph() -> HetGraph {
+        generate(Preset::Mag, 1e-4, &GenParams::default())
+    }
+
+    fn opts(seed: u64) -> StreamOpts {
+        StreamOpts { requests: 200, qps: 500.0, deadline_ms: 40.0, zipf_alpha: 1.1, seed }
+    }
+
+    #[test]
+    fn synthetic_stream_is_deterministic_and_ordered() {
+        let g = graph();
+        let a = synthetic_stream(&g, &opts(7)).unwrap();
+        let b = synthetic_stream(&g, &opts(7)).unwrap();
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+        assert!(a.iter().all(|r| r.budget_us() == 40_000));
+        let c = synthetic_stream(&g, &opts(8)).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn synthetic_stream_is_skewed() {
+        let g = graph();
+        let reqs = synthetic_stream(
+            &g,
+            &StreamOpts { requests: 2000, ..opts(3) },
+        )
+        .unwrap();
+        let mut counts = std::collections::HashMap::new();
+        for r in &reqs {
+            *counts.entry(r.target).or_insert(0usize) += 1;
+        }
+        // Zipf(1.1) over hundreds of targets: the hottest target must
+        // dominate the mean occupancy by a wide margin.
+        let hottest = counts.values().copied().max().unwrap();
+        let mean = reqs.len() / counts.len();
+        assert!(hottest >= 5 * mean.max(1), "hottest {hottest} vs mean {mean}");
+    }
+
+    #[test]
+    fn trace_stream_parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("heta-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trace.txt");
+        std::fs::write(&p, "# a burst then a straggler\n3\n5 0\n7 2500\n").unwrap();
+        let reqs = trace_stream(p.to_str().unwrap(), 10.0, 100).unwrap();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[0].target, 3);
+        assert_eq!(reqs[1].arrival_us, 0);
+        assert_eq!(reqs[2].arrival_us, 2500);
+        assert_eq!(reqs[2].deadline_us, 12_500);
+
+        let bad = dir.join("bad.txt");
+        std::fs::write(&bad, "5 100\n6 50\n").unwrap();
+        assert!(trace_stream(bad.to_str().unwrap(), 10.0, 100).is_err());
+        std::fs::write(&bad, "999\n").unwrap();
+        assert!(trace_stream(bad.to_str().unwrap(), 10.0, 100).is_err());
+    }
+}

@@ -157,10 +157,12 @@ impl Zipf {
 
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let x = rng.f64();
-        match self
-            .cdf
-            .binary_search_by(|c| c.partial_cmp(&x).unwrap())
-        {
+        // `total_cmp`, not `partial_cmp().unwrap()`: a degenerate alpha
+        // (NaN/Inf) yields NaN CDF entries, and the sampler must keep
+        // returning *some* in-range rank instead of panicking whatever
+        // consumes the stream. NaN compares greater than every real x
+        // under the total order, so the search still lands in range.
+        match self.cdf.binary_search_by(|c| c.total_cmp(&x)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }
@@ -276,6 +278,28 @@ mod tests {
         // Rank 0 should dominate rank 500 heavily under a power law.
         assert!(counts[0] > 20 * counts[500].max(1) / 2, "not skewed: {} vs {}", counts[0], counts[500]);
         assert!(counts[0] > counts[100]);
+    }
+
+    #[test]
+    fn zipf_nan_cdf_does_not_panic() {
+        // alpha = NaN poisons every CDF entry; the old
+        // partial_cmp().unwrap() comparator panicked inside
+        // binary_search_by. The sampler must instead keep returning
+        // in-range ranks (NaN > x under the total order, so the search
+        // resolves to rank 0).
+        let z = Zipf::new(16, f64::NAN);
+        assert!(z.cdf.iter().all(|c| c.is_nan()));
+        let mut r = Rng::new(11);
+        for _ in 0..100 {
+            assert!(z.sample(&mut r) < 16);
+        }
+        // A degenerate-but-finite CDF (alpha = inf puts all mass on
+        // rank 0) must also stay in range.
+        let z = Zipf::new(16, f64::INFINITY);
+        let mut r = Rng::new(12);
+        for _ in 0..100 {
+            assert!(z.sample(&mut r) < 16);
+        }
     }
 
     #[test]

@@ -53,6 +53,11 @@ impl Samples {
         self.xs.iter().sum()
     }
 
+    /// The raw samples, in push order.
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+
     /// Percentile via linear interpolation between order statistics
     /// (`q` in [0, 100]).
     pub fn percentile(&self, q: f64) -> f64 {
@@ -60,7 +65,11 @@ impl Samples {
             return f64::NAN;
         }
         let mut sorted = self.xs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // `total_cmp`, not `partial_cmp().unwrap()`: one NaN sample (a
+        // diverged loss, a 0/0 rate) must report as NaN, not panic the
+        // bench/report path mid-run. NaNs sort last under the IEEE 754
+        // total order, so they only surface in the top percentiles.
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let rank = q / 100.0 * (sorted.len() - 1) as f64;
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
@@ -121,6 +130,23 @@ mod tests {
         assert_eq!(s.percentile(0.0), 0.0);
         assert_eq!(s.percentile(100.0), 100.0);
         assert!((s.p99() - 99.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // A diverged run pushes one NaN loss; the percentile sort must
+        // not panic (the old partial_cmp().unwrap() did) and must keep
+        // real order statistics usable below the NaN tail.
+        let mut s = Samples::new();
+        for x in [3.0, f64::NAN, 1.0, 2.0] {
+            s.push(x);
+        }
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert!((s.p50() - 2.5).abs() < 1e-12); // 1,2,3,NaN → midpoint of 2 and 3
+        assert!(s.percentile(100.0).is_nan()); // NaN sorts last under total_cmp
+        let mut all_nan = Samples::new();
+        all_nan.push(f64::NAN);
+        assert!(all_nan.p99().is_nan());
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! Serving-mode correctness (the PR-9 tentpole).
+//!
+//! Property tests (artifact-free): the deadline-driven batcher misses
+//! zero deadlines whenever capacity never binds, per-batch service
+//! stays within the declared bound, and every budget covers two bounds
+//! (one batch's close-wait plus its service) — over random synthetic
+//! streams; and batches never exceed capacity under any load.
+//!
+//! The artifact-gated half (skipped until `make artifacts`) pins the
+//! serving invariant from `docs/SERVING.md`: a served embedding is
+//! **byte-identical** to a fresh forward of the same target —
+//! independent of microbatch composition (splice sampling), of the
+//! engine label (Heta vs the vanilla baseline share the forward-only
+//! decomposition), of the transport (channel vs loopback TCP), and of
+//! cache history (second runs serve from cache; a parameter-version
+//! bump or a store update invalidates and recomputes to the same
+//! bytes).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use heta::config::{partition_edge_filter, Config};
+use heta::coordinator::{Session, SystemKind};
+use heta::datagen::{generate, GenParams, Preset};
+use heta::exec::{BatchArena, BatchPlan, EpochWorld, ExecContext, ParamsView};
+use heta::net::Backend;
+use heta::partition::meta::meta_partition;
+use heta::sampling::{sample_tree, PAD};
+use heta::serve::{
+    batcher, build_stream, run_loopback_tcp_serve, run_serve, serve_seed, synthetic_stream,
+    BatcherOpts, ServeEngine, ServeOpts, StreamOpts,
+};
+use heta::util::{artifacts_ready, proptest};
+
+const CFG: &str = "configs/mag-tiny.json";
+const DIR: &str = "artifacts/mag-tiny";
+
+fn load_cfg() -> Config {
+    Config::load(CFG).unwrap_or_else(|e| panic!("loading {CFG}: {e}"))
+}
+
+/// Fast-drain opts: offered load high enough that batches fill, few
+/// enough requests that every test stays sub-second per forward set.
+fn quick_opts() -> ServeOpts {
+    ServeOpts {
+        requests: 24,
+        qps: 2000.0,
+        deadline_ms: 200.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_no_deadline_misses_when_budget_covers_two_bounds() {
+    proptest::run("serve_deadline_budget", |rng, _| {
+        let g = generate(
+            Preset::Mag,
+            1e-4,
+            &GenParams { seed: rng.next_u64(), ..Default::default() },
+        );
+        let deadline_ms = 2.0 + rng.f64() * 80.0;
+        let reqs = synthetic_stream(
+            &g,
+            &StreamOpts {
+                requests: 20 + rng.below(120),
+                qps: 50.0 + rng.f64() * 5000.0,
+                deadline_ms,
+                zipf_alpha: 0.8 + rng.f64(),
+                seed: rng.next_u64(),
+            },
+        )
+        .map_err(|e| format!("synthetic_stream: {e}"))?;
+        // The batcher's guarantee: with capacity unbounded (never
+        // binds), service within the bound, and budget >= 2*bound, the
+        // close rule leaves room for every admitted request.
+        let bound_us = (deadline_ms * 1000.0 / 2.0).max(1.0) as u64;
+        let service_us = 1 + rng.below(bound_us as usize) as u64;
+        let rep = batcher::run(
+            &reqs,
+            &BatcherOpts { capacity: reqs.len(), service_bound_us: bound_us },
+            |_batch| Ok(service_us),
+        )
+        .map_err(|e| format!("batcher: {e}"))?;
+        if rep.misses != 0 {
+            return Err(format!(
+                "{} misses with service {service_us}us <= bound {bound_us}us and budget \
+                 {deadline_ms}ms >= 2*bound",
+                rep.misses
+            ));
+        }
+        if rep.served != reqs.len() {
+            return Err(format!("served {} of {} requests", rep.served, reqs.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batches_respect_capacity_under_any_load() {
+    proptest::run("serve_batch_capacity", |rng, _| {
+        let g = generate(
+            Preset::Mag,
+            1e-4,
+            &GenParams { seed: rng.next_u64(), ..Default::default() },
+        );
+        let reqs = synthetic_stream(
+            &g,
+            &StreamOpts {
+                requests: 10 + rng.below(200),
+                qps: 10.0 + rng.f64() * 50_000.0,
+                deadline_ms: 0.5 + rng.f64() * 20.0,
+                zipf_alpha: 1.1,
+                seed: rng.next_u64(),
+            },
+        )
+        .map_err(|e| format!("synthetic_stream: {e}"))?;
+        let capacity = 1 + rng.below(16);
+        // Service may breach the bound (overload): deadlines can miss,
+        // but batch sizes and the served count must hold regardless.
+        let service_us = 1 + rng.below(40_000) as u64;
+        let mut seen = 0usize;
+        let rep = batcher::run(
+            &reqs,
+            &BatcherOpts { capacity, service_bound_us: 500 },
+            |batch| {
+                if batch.is_empty() || batch.len() > capacity {
+                    return Err(anyhow::anyhow!("batch of {} at capacity {capacity}", batch.len()));
+                }
+                seen += batch.len();
+                Ok(service_us)
+            },
+        )
+        .map_err(|e| format!("batcher: {e}"))?;
+        if rep.max_batch > capacity {
+            return Err(format!("max batch {} > capacity {capacity}", rep.max_batch));
+        }
+        if seen != reqs.len() || rep.served != reqs.len() {
+            return Err(format!("served {}/{} ({} through exec)", rep.served, reqs.len(), seen));
+        }
+        Ok(())
+    });
+}
+
+/// The tentpole invariant: every served embedding equals, byte for
+/// byte, an independently-built fresh forward of its target alone
+/// (slot 0 of a padded single-target batch through the same
+/// forward-only plan) — whatever microbatch the batcher grouped it
+/// into and whether it came from the cache or the compute path.
+#[test]
+fn served_embeddings_byte_identical_to_fresh_forward() {
+    if !artifacts_ready("mag-tiny") {
+        return;
+    }
+    let cfg = load_cfg();
+    let opts = quick_opts();
+    let rep = run_serve(&cfg, DIR, SystemKind::Heta, &opts, Backend::Channel)
+        .expect("channel serve");
+    assert_eq!(rep.served, opts.requests);
+    assert_eq!(rep.embeds.len(), rep.served);
+
+    // The reference path shares no state with the serving engine: a
+    // fresh session, its own contexts, no frontier dedup, no cache.
+    let mut sess = Session::new(&cfg, DIR).expect("reference session");
+    let (mp, _) = meta_partition(&sess.g, cfg.train.num_partitions, cfg.model.layers, None);
+    let plan = BatchPlan::forward_only(&sess.manifest, mp.num_parts).expect("forward-only plan");
+    sess.params
+        .ensure_artifacts(&sess.manifest, plan.workers.iter().map(|w| w.fwd_art.as_str()));
+    let gpus = cfg.train.gpus_per_machine.max(1);
+    let mut ctxs: Vec<ExecContext> = (0..mp.num_parts)
+        .map(|p| {
+            ExecContext::new(p, p % gpus, DIR, Arc::clone(&sess.manifest), None)
+                .expect("reference context")
+        })
+        .collect();
+    let mut arenas: Vec<BatchArena> = (0..mp.num_parts).map(|_| BatchArena::new()).collect();
+    let world = EpochWorld {
+        cfg: &cfg,
+        g: &sess.g,
+        tree: &sess.tree,
+        store: &sess.store,
+        gate: None,
+        epoch_t0: Instant::now(),
+    };
+    let b = cfg.train.batch_size;
+    let h = cfg.model.hidden;
+    let seed = serve_seed(&cfg);
+    let reqs = build_stream(&sess, &opts).expect("stream");
+    assert_eq!(reqs.len(), rep.embeds.len());
+    for (r, got) in reqs.iter().zip(&rep.embeds) {
+        let mut chunk = vec![PAD; b];
+        chunk[0] = r.target;
+        let mut want = (vec![0f32; h], vec![0f32; h]);
+        for p in 0..mp.num_parts {
+            let filter = partition_edge_filter(&sess.tree, &mp, p);
+            let sample =
+                sample_tree(&sess.g, &sess.tree, &cfg.model.fanouts, &chunk, 0, seed, &filter);
+            let fwd = plan.workers[p]
+                .raf_forward(
+                    &mut ctxs[p],
+                    &world,
+                    ParamsView::Owner(&sess.params),
+                    &sample,
+                    None,
+                    &chunk,
+                    0.0,
+                    &mut arenas[p],
+                )
+                .expect("reference forward");
+            for i in 0..h {
+                want.0[i] += fwd.p1[i];
+                want.1[i] += fwd.p2[i];
+            }
+        }
+        assert_eq!(
+            got, &want,
+            "target {} must serve byte-identical to a fresh single-target forward",
+            r.target
+        );
+    }
+}
+
+/// Engine label and transport must not change a single served byte:
+/// Heta and the vanilla baseline share the forward-only decomposition,
+/// and the loopback TCP star reproduces the channel run exactly.
+#[test]
+fn engines_and_transports_serve_identical_bytes() {
+    if !artifacts_ready("mag-tiny") {
+        return;
+    }
+    let cfg = load_cfg();
+    let opts = quick_opts();
+    let heta = run_serve(&cfg, DIR, SystemKind::Heta, &opts, Backend::Channel)
+        .expect("heta channel serve");
+    let vanilla = run_serve(&cfg, DIR, SystemKind::DglMetis, &opts, Backend::Channel)
+        .expect("vanilla channel serve");
+    assert_eq!(
+        heta.embeds, vanilla.embeds,
+        "Heta and the vanilla baseline must serve identical embeddings"
+    );
+    let tcp = run_loopback_tcp_serve(&cfg, DIR, SystemKind::Heta, &opts)
+        .expect("loopback TCP serve");
+    assert_eq!(tcp.served, opts.requests);
+    assert_eq!(
+        tcp.embeds, heta.embeds,
+        "loopback TCP must serve the channel run's exact bytes"
+    );
+    assert!(tcp.wire.real_sent > 0, "TCP serving must move real bytes");
+    assert!(tcp.wire.real_recv > 0);
+}
+
+/// Cache lifecycle: a repeat run serves entirely from cache; a
+/// parameter-version bump and a store-generation bump each flush it;
+/// and every recompute lands on the same bytes (the zero-grad Adam
+/// step leaves weights bitwise unchanged, so the fixture has a real
+/// invalidation with a known-good expected value).
+#[test]
+fn embed_cache_invalidates_on_param_and_store_updates() {
+    if !artifacts_ready("mag-tiny") {
+        return;
+    }
+    let cfg = load_cfg();
+    let opts = quick_opts();
+    let mut sess = Session::new(&cfg, DIR).expect("session");
+    let mut eng = ServeEngine::new(&mut sess, SystemKind::Heta, &opts).expect("engine");
+    let reqs = build_stream(&sess, &opts).expect("stream");
+
+    let first = eng.run_channel(&sess, &reqs, &opts).expect("first run");
+    assert!(first.ledger.computed_targets > 0);
+    assert!(first.ledger.fetched_rows > 0, "a cold run must fetch features");
+
+    // Same stamp: everything the first run computed is reusable.
+    let warm = eng.run_channel(&sess, &reqs, &opts).expect("warm run");
+    assert_eq!(warm.ledger.embed_misses, 0, "a warm repeat run must be all hits");
+    assert_eq!(warm.ledger.computed_targets, 0);
+    assert_eq!(warm.ledger.fetched_rows, 0, "all-hit batches must skip the forward entirely");
+    assert_eq!(warm.embeds, first.embeds);
+
+    // A parameter update lands: the stamp changes, the cache flushes,
+    // and (zero gradient ⇒ bitwise-unchanged weights) the recompute
+    // reproduces the original bytes.
+    let weight = sess.manifest.artifacts["worker_fwd_p0"]
+        .inputs
+        .iter()
+        .find(|i| i.kind == "weight")
+        .expect("forward artifact declares a weight")
+        .clone();
+    let v0 = sess.params.version();
+    sess.params
+        .step(&weight.name, &vec![0.0; weight.shape.iter().product()])
+        .expect("zero-grad step");
+    assert!(sess.params.version() > v0);
+    let after_param = eng.run_channel(&sess, &reqs, &opts).expect("post-update run");
+    assert!(after_param.ledger.embed_invalidations >= 1, "param bump must invalidate");
+    assert!(after_param.ledger.computed_targets > 0, "post-invalidation run must recompute");
+    assert_eq!(after_param.embeds, first.embeds);
+
+    // A learnable-feature store update: same flush through store_gen.
+    eng.note_store_update();
+    let after_store = eng.run_channel(&sess, &reqs, &opts).expect("post-store run");
+    assert!(after_store.ledger.embed_invalidations >= 1, "store bump must invalidate");
+    assert_eq!(after_store.embeds, first.embeds);
+
+    // The A/B baseline arm: reuse off serves the same bytes with zero
+    // hits and strictly more fetched rows per request.
+    let no_reuse = ServeOpts { reuse: false, ..opts.clone() };
+    let mut sess2 = Session::new(&cfg, DIR).expect("baseline session");
+    let mut cold = ServeEngine::new(&mut sess2, SystemKind::Heta, &no_reuse).expect("baseline");
+    let base = cold.run_channel(&sess2, &reqs, &no_reuse).expect("baseline run");
+    assert_eq!(base.ledger.embed_hits, 0);
+    assert_eq!(base.embeds, first.embeds);
+    assert!(
+        base.ledger.fetched_rows >= first.ledger.fetched_rows,
+        "reuse must not fetch more rows than the no-reuse baseline"
+    );
+}
