@@ -209,6 +209,9 @@ pub fn run_training_ckpt(
     let mut engine = Engine::build(&mut sess, system)?;
     let mut total = EpochReport::default();
     for ep in start_epoch..epochs.max(start_epoch) {
+        // /healthz progress: a no-op (one relaxed load) unless this
+        // rank armed its telemetry plane with --metrics-addr.
+        crate::obs::health_set_epoch(ep as i64);
         let rep = engine.run_epoch(&mut sess, ep)?;
         if worker_rank {
             crate::log!(

@@ -6,6 +6,8 @@
 //!   train      --config <file> --engine raf|vanilla [--epochs n]
 //!   serve      --config <file> [--engine raf|vanilla] [--qps Q]    deadline-driven serving
 //!   launch     --config <file> [-n K]              spawn a local K-worker TCP cluster
+//!   analyze    TRACE.json [--baseline T.json]      trace analytics (stalls, critical path)
+//!   bench-gate --current B.json --baseline B.json  perf-regression gate
 //!   info       --config <file>                     dataset/schema summary
 //!
 //! `plan` is the build-time half of the Rust↔Python contract: it computes
@@ -36,10 +38,13 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "launch" => cmd_launch(&args),
+        "analyze" => cmd_analyze(&args),
+        "bench-gate" => cmd_bench_gate(&args),
         "info" => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: heta <plan|partition|train|serve|launch|info> --config <cfg.json> [options]\n\
+                "usage: heta <plan|partition|train|serve|launch|analyze|bench-gate|info> \
+                 --config <cfg.json> [options]\n\
                  \n\
                  plan       --out <plan.json>      emit AOT artifact plan\n\
                  partition  [--method meta|random|metis|bytype] [--parts p]\n\
@@ -53,12 +58,14 @@ fn main() -> Result<()> {
                  \x20          [--fail rank:batch:kind[:epoch]]  (kind: exit|stall|\n\
                  \x20          drop-conn|corrupt-frame; rank 1..=K)\n\
                  \x20          [--trace [out.json]] [--log-level error|warn|info|debug]\n\
+                 \x20          [--log-format human|json] [--metrics-addr host:port]\n\
                  serve      [--engine raf|vanilla] [--requests N] [--qps Q]\n\
                  \x20          [--deadline-ms D] [--zipf A] [--request-trace file]\n\
                  \x20          [--no-reuse] [--no-dedup-fetch] [--embed-cache N]\n\
                  \x20          [--service-bound-ms B] [--artifacts dir] [--loopback]\n\
                  \x20          [--transport tcp --rank R --peers host:port[,...]]\n\
                  \x20          [--log-level error|warn|info|debug]\n\
+                 \x20          [--log-format human|json] [--metrics-addr host:port]\n\
                  launch     [-n K] [--port P] [--max-restarts R] + train options:\n\
                  \x20          spawn leader + K worker processes over loopback TCP,\n\
                  \x20          reap them, and (with --checkpoint-dir) respawn the\n\
@@ -67,6 +74,13 @@ fn main() -> Result<()> {
                  \x20          (leader on hosts[0]; non-local hosts spawn via ssh)\n\
                  \x20          [--spawn-shell cmd] shell that execs each spawn line\n\
                  \x20          (default '/bin/sh -c'; try 'echo' for a dry run)\n\
+                 \x20          [--metrics-addr host:port] rank r serves on port+r\n\
+                 analyze    TRACE.json [--baseline OTHER.json] [--tolerance T]\n\
+                 \x20          [--json]: per-rank/per-lane stall rollups, top stalls,\n\
+                 \x20          critical path; with --baseline, exits 1 on regression\n\
+                 bench-gate --current BENCH_x.json --baseline baselines/BENCH_x.json\n\
+                 \x20          [--tolerance 0.15]: directional perf gate, exits 1\n\
+                 \x20          when any matched metric regresses past the tolerance\n\
                  info"
             );
             Ok(())
@@ -214,6 +228,28 @@ fn cmd_train(args: &Args) -> Result<()> {
         heta::obs::LogLevel::parse(&level)
             .with_context(|| format!("unknown log level '{level}' (error|warn|info|debug)"))?,
     );
+    if let Some(f) = args.get("log-format") {
+        heta::obs::set_log_format(
+            heta::obs::LogFormat::parse(f)
+                .with_context(|| format!("unknown log format '{f}' (human|json)"))?,
+        );
+    }
+    // `--metrics-addr host:port` arms this rank's live telemetry plane
+    // (/metrics, /healthz, /buildinfo on a detached thread). Armed
+    // *before* the transport handshake so the heartbeat monitor's
+    // per-peer liveness taps register with /healthz.
+    if let Some(addr) = args.get("metrics-addr") {
+        let rank: i64 = match cfg.train.transport {
+            TransportKind::Tcp => args
+                .get("rank")
+                .context("--metrics-addr over --transport tcp needs --rank to label the scrape")?
+                .parse()
+                .context("--rank expects a non-negative integer")?,
+            TransportKind::Channel => 0,
+        };
+        let role = if rank == 0 { "leader" } else { "worker" };
+        heta::obs::http::start(addr, rank, role)?;
+    }
     // `--trace out.json` names the Chrome-trace file; a bare `--trace`
     // picks a default. Either form flips `train.trace` on for this rank
     // (workers record and ship their buffers; only the leader exports).
@@ -331,6 +367,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         heta::obs::LogLevel::parse(&level)
             .with_context(|| format!("unknown log level '{level}' (error|warn|info|debug)"))?,
     );
+    if let Some(f) = args.get("log-format") {
+        heta::obs::set_log_format(
+            heta::obs::LogFormat::parse(f)
+                .with_context(|| format!("unknown log format '{f}' (human|json)"))?,
+        );
+    }
     let engine = args.get_or("engine", "raf");
     let system = heta::coordinator::SystemKind::parse(&engine)
         .with_context(|| format!("unknown engine '{engine}' (raf|vanilla)"))?;
@@ -350,6 +392,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         opts.deadline_ms > 0.0 && opts.qps > 0.0,
         "--deadline-ms and --qps must be positive"
     );
+    // Same telemetry plane as `train`: armed before any transport or
+    // loopback machinery so the serve SLO families (`serve.latency_ms`,
+    // `serve.deadline_miss_total`, `serve.qps`) tick live from the
+    // batcher and a mid-run scrape sees them grow.
+    if let Some(addr) = args.get("metrics-addr") {
+        let rank: i64 = match args.get("transport") {
+            Some("tcp") => args
+                .get("rank")
+                .context("--metrics-addr over --transport tcp needs --rank to label the scrape")?
+                .parse()
+                .context("--rank expects a non-negative integer")?,
+            _ => 0,
+        };
+        let role = if rank == 0 { "leader" } else { "worker" };
+        heta::obs::http::start(addr, rank, role)?;
+    }
     if args.has_flag("loopback") {
         // One process, one OS thread per rank, real sockets on an
         // ephemeral loopback port — the CI smoke path.
@@ -548,6 +606,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
         "staleness",
         "trace",
         "log-level",
+        "log-format",
         "checkpoint-dir",
         "hb-interval-ms",
         "hb-timeout-ms",
@@ -575,6 +634,24 @@ fn cmd_launch(args: &Args) -> Result<()> {
         // Validate here so a typo fails the launcher, not K+1 children.
         heta::config::FaultSpec::parse(s)?;
     }
+    // `--metrics-addr host:port`: every rank is its own process and
+    // needs its own listener, so rank r scrapes on port + r.
+    let metrics_addr: Option<(String, u16)> = args
+        .get("metrics-addr")
+        .map(|a| -> Result<(String, u16)> {
+            let (host, port) = a
+                .rsplit_once(':')
+                .context("--metrics-addr expects host:port")?;
+            let port: u16 = port
+                .parse()
+                .with_context(|| format!("--metrics-addr port must be numeric, got '{port}'"))?;
+            ensure!(
+                (port as usize) + n <= u16::MAX as usize,
+                "--metrics-addr port {port} + {n} worker ranks overflows the port space"
+            );
+            Ok((host.to_string(), port))
+        })
+        .transpose()?;
     // `--hosts h0,h1,...`: place rank i on hosts[i % len] (the leader,
     // rank 0, always lands on hosts[0], which every rank dials). Local
     // entries spawn through `--spawn-shell`; anything else gets an
@@ -629,10 +706,15 @@ fn cmd_launch(args: &Args) -> Result<()> {
         );
         let mut children = Vec::with_capacity(n + 1);
         for rank in 0..=n {
+            let mut rank_args = vec!["--rank".to_string(), rank.to_string()];
+            if let Some((host, port)) = &metrics_addr {
+                rank_args.push("--metrics-addr".into());
+                rank_args.push(format!("{host}:{}", port + rank as u16));
+            }
             let child = if let Some(hs) = &hosts {
                 let host = hs[rank % hs.len()].as_str();
                 let mut line = shell_quote(&exe.to_string_lossy());
-                for a in argv.iter().chain([&"--rank".to_string(), &rank.to_string()]) {
+                for a in argv.iter().chain(rank_args.iter()) {
                     line.push(' ');
                     line.push_str(&shell_quote(a));
                 }
@@ -652,8 +734,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
             } else {
                 std::process::Command::new(&exe)
                     .args(&argv)
-                    .arg("--rank")
-                    .arg(rank.to_string())
+                    .args(&rank_args)
                     .spawn()
                     .with_context(|| format!("spawning rank {rank}"))?
             };
@@ -695,6 +776,92 @@ fn restart_backoff_ms(attempt: usize) -> u64 {
         return MAX_RESTART_BACKOFF_MS;
     }
     (250u64 << exp).min(MAX_RESTART_BACKOFF_MS)
+}
+
+/// `heta analyze TRACE.json [--baseline OTHER.json] [--tolerance T]
+/// [--json]` — offline analytics over a `--trace` export: per-rank and
+/// per-lane stall rollups, the top-N longest stalls, and the per-batch
+/// critical path. With `--baseline`, regressions past the tolerance
+/// (default 15%, with a 1 ms absolute floor) exit nonzero so the
+/// command can gate CI.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let path = args.positional.get(1).context(
+        "usage: heta analyze TRACE.json [--baseline OTHER.json] [--tolerance T] [--json]",
+    )?;
+    let cur = heta::obs::analyze::analyze_file(path)?;
+    ensure!(
+        cur.events > 0,
+        "{path} holds no complete events — was the run traced (--trace)?"
+    );
+    if args.has_flag("json") {
+        println!("{}", heta::obs::analyze::render_json(&cur));
+    } else {
+        print!("{}", heta::obs::analyze::render_text(&cur));
+    }
+    if let Some(base_path) = args.get("baseline") {
+        let base = heta::obs::analyze::analyze_file(base_path)?;
+        let tol = args.get_f64("tolerance", 0.15);
+        let regs = heta::obs::analyze::diff(&cur, &base, tol);
+        if regs.is_empty() {
+            println!("baseline {base_path}: no regressions past {:.0}%", tol * 100.0);
+        } else {
+            for r in &regs {
+                println!(
+                    "REGRESSION rank {} {}: {:.2} ms -> {:.2} ms ({:.2}x baseline)",
+                    r.rank,
+                    r.kind,
+                    r.base_ms,
+                    r.cur_ms,
+                    r.ratio()
+                );
+            }
+            bail!(
+                "analyze: {} rank/kind cell(s) regressed past {:.0}% vs {base_path}",
+                regs.len(),
+                tol * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `heta bench-gate --current BENCH_x.json --baseline
+/// baselines/BENCH_x.json [--tolerance 0.15]` — compare two bench
+/// documents leaf-by-leaf with directional judgement (latencies must
+/// not grow, rates must not shrink) and exit nonzero on any regression
+/// past the tolerance. CI runs this against the committed baselines.
+fn cmd_bench_gate(args: &Args) -> Result<()> {
+    let cur_path = args
+        .get("current")
+        .context("--current BENCH_x.json is required")?;
+    let base_path = args
+        .get("baseline")
+        .context("--baseline baselines/BENCH_x.json is required")?;
+    let tol = args.get_f64("tolerance", 0.15);
+    let load = |p: &str| -> Result<heta::util::json::Json> {
+        let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        heta::util::json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e:?}"))
+    };
+    let report = heta::obs::analyze::bench_gate(&load(cur_path)?, &load(base_path)?, tol)?;
+    print!("{}", heta::obs::analyze::render_gate(&report, tol));
+    ensure!(
+        !report.rows.is_empty(),
+        "bench-gate: no metric of {cur_path} matched {base_path} — wrong file pair?"
+    );
+    if !report.passed() {
+        bail!(
+            "bench-gate: {} metric(s) regressed past {:.0}% — see FAIL rows above",
+            report.failures().len(),
+            tol * 100.0
+        );
+    }
+    heta::log!(
+        Info,
+        "bench-gate: {} metrics within {:.0}% of {base_path}",
+        report.rows.len(),
+        tol * 100.0
+    );
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

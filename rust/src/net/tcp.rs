@@ -559,6 +559,9 @@ fn build_node(
         raw.push(stream.try_clone().context("cloning the shutdown handle")?);
         let last_heard = Arc::new(AtomicU64::new(crate::obs::now_us()));
         let timed_out = Arc::new(AtomicBool::new(false));
+        // Share the liveness stamps with /healthz (no-op unless the
+        // telemetry plane is armed via --metrics-addr).
+        crate::obs::health_register_peer(peer, Arc::clone(&last_heard), Arc::clone(&timed_out));
         if is_leader && hb.timeout_ms > 0 {
             watch.push((
                 peer,
@@ -589,7 +592,19 @@ fn build_node(
                     for (peer, stream, last_heard, timed_out) in &watch {
                         let silent = crate::obs::now_us()
                             .saturating_sub(last_heard.load(Ordering::SeqCst));
+                        // Degrading-signal gauges (PR 10): a silent
+                        // rank shows up as a climbing last-heard lag
+                        // long before the terminal hangup. The enabled
+                        // gate keeps the untraced monitor allocation-
+                        // free; gauge_set re-checks it internally.
+                        if crate::obs::enabled() {
+                            crate::obs::gauge_set(
+                                &format!("hb.rank{peer}.last_heard_ms"),
+                                silent as f64 / 1000.0,
+                            );
+                        }
                         if silent > timeout_us && !timed_out.swap(true, Ordering::SeqCst) {
+                            crate::obs::counter_add("hb.missed_deadlines", 1);
                             crate::log!(
                                 Warn,
                                 "leader: declaring rank {peer} dead — silent for \
@@ -636,6 +651,11 @@ fn build_node(
                     if res.is_err() {
                         break; // connection gone; the reader reports it
                     }
+                    // Worker-side hb.* family for /metrics: proof-of-
+                    // life beats sent (gated internally; liveness
+                    // frames still skip the wire.lane* traffic
+                    // counters — liveness is not traffic).
+                    crate::obs::counter_add("hb.sent_total", 1);
                 }
             })
             .context("spawning the heartbeat sender thread")?;

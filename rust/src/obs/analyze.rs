@@ -1,0 +1,750 @@
+//! Offline trace analytics (`heta analyze`) and the perf-regression
+//! gate (`heta bench-gate`).
+//!
+//! `analyze` consumes the Chrome-trace JSON written by `--trace`
+//! ([`super::export::chrome_trace_json`]): complete events (`ph:"X"`)
+//! with `pid` = rank, `cat` = span kind (compute / marshal / wire-wait
+//! / barrier-wait), and `args.batch` / `args.lane` for drill-down. It
+//! produces:
+//!
+//! - per-rank stall-attribution rollups (µs by kind),
+//! - per-rank/per-lane wire-wait rollups,
+//! - the top-N longest stalls with their batch indices,
+//! - a critical-path extraction: per-batch wall windows and which
+//!   rank's span ends each window (the batch's critical rank),
+//! - and, with `--baseline`, a diff that prints regressions.
+//!
+//! `bench-gate` compares two `BENCH_*.json` documents leaf-by-leaf:
+//! every numeric leaf is flattened to a dotted path, matched against
+//! the baseline, and judged directionally — latency/bytes/miss-like
+//! keys must not grow past `1 + tolerance`, qps/throughput-like keys
+//! must not shrink below `1 - tolerance`. Keys with no known
+//! direction are reported but never fail the gate. The self-test
+//! below injects a 2x slowdown and asserts the gate trips.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Span-kind order used by every rollup (mirrors `recorder::KIND_*`).
+pub const KINDS: [&str; 4] = ["compute", "marshal", "wire-wait", "barrier-wait"];
+
+/// Stall kinds — the subset of [`KINDS`] that means "waiting".
+const STALL_KINDS: [&str; 2] = ["wire-wait", "barrier-wait"];
+
+/// One complete event pulled out of `traceEvents`.
+#[derive(Debug, Clone)]
+struct Ev {
+    rank: u64,
+    cat: String,
+    name: String,
+    ts_us: u64,
+    dur_us: u64,
+    batch: Option<u64>,
+    lane: Option<u64>,
+}
+
+/// Per-rank rollup: µs attributed to each kind, in [`KINDS`] order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RankRollup {
+    pub rank: u64,
+    pub by_kind_us: [u64; 4],
+    pub events: usize,
+}
+
+impl RankRollup {
+    pub fn total_us(&self) -> u64 {
+        self.by_kind_us.iter().sum()
+    }
+
+    pub fn stall_us(&self) -> u64 {
+        self.by_kind_us[2] + self.by_kind_us[3]
+    }
+}
+
+/// Wire-wait µs for one (rank, lane) pair.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LaneRollup {
+    pub rank: u64,
+    pub lane: u64,
+    pub wait_us: u64,
+    pub events: usize,
+}
+
+/// One stall span, for the top-N table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stall {
+    pub rank: u64,
+    pub kind: String,
+    pub name: String,
+    pub batch: Option<u64>,
+    pub lane: Option<u64>,
+    pub ts_us: u64,
+    pub dur_us: u64,
+}
+
+/// One batch's wall window across every rank, and the rank whose span
+/// closes it — the batch's critical rank (the cluster cannot advance
+/// past the batch before that span ends).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchWindow {
+    pub batch: u64,
+    pub t0_us: u64,
+    pub t1_us: u64,
+    pub crit_rank: u64,
+    pub crit_kind: String,
+    pub crit_name: String,
+}
+
+impl BatchWindow {
+    pub fn span_us(&self) -> u64 {
+        self.t1_us.saturating_sub(self.t0_us)
+    }
+}
+
+/// Everything `heta analyze` extracts from one trace.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSummary {
+    pub ranks: Vec<RankRollup>,
+    pub lanes: Vec<LaneRollup>,
+    /// Longest stalls, descending by duration (capped at [`TOP_N`]).
+    pub stalls: Vec<Stall>,
+    /// Per-batch windows in batch order — the critical path.
+    pub windows: Vec<BatchWindow>,
+    /// Batches whose critical span belongs to each rank.
+    pub crit_batches_by_rank: BTreeMap<u64, usize>,
+    pub events: usize,
+}
+
+pub const TOP_N: usize = 10;
+
+fn parse_events(doc: &Json) -> Result<Vec<Ev>> {
+    let events = doc
+        .get("traceEvents")
+        .as_arr()
+        .context("not a Chrome trace: missing traceEvents array")?;
+    let mut out = Vec::new();
+    for e in events {
+        if e.get("ph").as_str() != Some("X") {
+            continue; // metadata rows
+        }
+        out.push(Ev {
+            rank: e.get("pid").as_u64().unwrap_or(0),
+            cat: e.get("cat").as_str().unwrap_or("unknown").to_string(),
+            name: e.get("name").as_str().unwrap_or("?").to_string(),
+            ts_us: e.get("ts").as_u64().unwrap_or(0),
+            dur_us: e.get("dur").as_u64().unwrap_or(0),
+            batch: e.get("args").get("batch").as_u64(),
+            lane: e.get("args").get("lane").as_u64(),
+        });
+    }
+    Ok(out)
+}
+
+fn kind_idx(cat: &str) -> Option<usize> {
+    KINDS.iter().position(|&k| k == cat)
+}
+
+/// Analyze one parsed trace document.
+pub fn analyze(doc: &Json) -> Result<TraceSummary> {
+    let evs = parse_events(doc)?;
+    let mut ranks: BTreeMap<u64, RankRollup> = BTreeMap::new();
+    let mut lanes: BTreeMap<(u64, u64), LaneRollup> = BTreeMap::new();
+    let mut stalls: Vec<Stall> = Vec::new();
+    let mut windows: BTreeMap<u64, (u64, u64, u64, String, String)> = BTreeMap::new();
+    for e in &evs {
+        let r = ranks.entry(e.rank).or_insert_with(|| RankRollup {
+            rank: e.rank,
+            ..Default::default()
+        });
+        r.events += 1;
+        if let Some(k) = kind_idx(&e.cat) {
+            r.by_kind_us[k] += e.dur_us;
+        }
+        if e.cat == "wire-wait" {
+            if let Some(lane) = e.lane {
+                let l = lanes.entry((e.rank, lane)).or_insert_with(|| LaneRollup {
+                    rank: e.rank,
+                    lane,
+                    ..Default::default()
+                });
+                l.wait_us += e.dur_us;
+                l.events += 1;
+            }
+        }
+        if STALL_KINDS.contains(&e.cat.as_str()) {
+            stalls.push(Stall {
+                rank: e.rank,
+                kind: e.cat.clone(),
+                name: e.name.clone(),
+                batch: e.batch,
+                lane: e.lane,
+                ts_us: e.ts_us,
+                dur_us: e.dur_us,
+            });
+        }
+        if let Some(b) = e.batch {
+            let end = e.ts_us + e.dur_us;
+            let w = windows
+                .entry(b)
+                .or_insert((e.ts_us, end, e.rank, e.cat.clone(), e.name.clone()));
+            w.0 = w.0.min(e.ts_us);
+            if end >= w.1 {
+                w.1 = end;
+                w.2 = e.rank;
+                w.3 = e.cat.clone();
+                w.4 = e.name.clone();
+            }
+        }
+    }
+    stalls.sort_by(|a, b| b.dur_us.cmp(&a.dur_us).then(a.ts_us.cmp(&b.ts_us)));
+    stalls.truncate(TOP_N);
+    let windows: Vec<BatchWindow> = windows
+        .into_iter()
+        .map(|(batch, (t0, t1, rank, kind, name))| BatchWindow {
+            batch,
+            t0_us: t0,
+            t1_us: t1,
+            crit_rank: rank,
+            crit_kind: kind,
+            crit_name: name,
+        })
+        .collect();
+    let mut crit_batches_by_rank: BTreeMap<u64, usize> = BTreeMap::new();
+    for w in &windows {
+        *crit_batches_by_rank.entry(w.crit_rank).or_insert(0) += 1;
+    }
+    Ok(TraceSummary {
+        ranks: ranks.into_values().collect(),
+        lanes: lanes.into_values().collect(),
+        stalls,
+        windows,
+        crit_batches_by_rank,
+        events: evs.len(),
+    })
+}
+
+/// Load + parse + analyze a trace file.
+pub fn analyze_file(path: &str) -> Result<TraceSummary> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let doc = crate::util::json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing trace {path}: {e:?}"))?;
+    analyze(&doc).with_context(|| format!("analyzing trace {path}"))
+}
+
+fn ms(us: u64) -> f64 {
+    us as f64 / 1000.0
+}
+
+/// Render the human-readable report.
+pub fn render_text(s: &TraceSummary) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== trace: {} events, {} ranks ==\n", s.events, s.ranks.len()));
+    out.push_str("per-rank stall attribution (ms):\n");
+    out.push_str("  rank   compute   marshal wire-wait  barr-wait  stall%\n");
+    for r in &s.ranks {
+        let total = r.total_us().max(1);
+        out.push_str(&format!(
+            "  {:>4} {:>9.2} {:>9.2} {:>9.2} {:>10.2} {:>6.1}\n",
+            r.rank,
+            ms(r.by_kind_us[0]),
+            ms(r.by_kind_us[1]),
+            ms(r.by_kind_us[2]),
+            ms(r.by_kind_us[3]),
+            100.0 * r.stall_us() as f64 / total as f64,
+        ));
+    }
+    if !s.lanes.is_empty() {
+        out.push_str("per-lane wire-wait (ms):\n");
+        for l in &s.lanes {
+            out.push_str(&format!(
+                "  rank {} lane {}: {:.2} ms over {} waits\n",
+                l.rank,
+                l.lane,
+                ms(l.wait_us),
+                l.events
+            ));
+        }
+    }
+    if !s.stalls.is_empty() {
+        out.push_str(&format!("top {} stalls:\n", s.stalls.len()));
+        for st in &s.stalls {
+            let batch = st.batch.map_or("-".to_string(), |b| b.to_string());
+            let lane = st.lane.map_or("-".to_string(), |l| l.to_string());
+            out.push_str(&format!(
+                "  {:>9.3} ms  rank {} batch {:>4} lane {:>2}  {} ({})\n",
+                ms(st.dur_us),
+                st.rank,
+                batch,
+                lane,
+                st.name,
+                st.kind
+            ));
+        }
+    }
+    if !s.windows.is_empty() {
+        let mut longest: Vec<&BatchWindow> = s.windows.iter().collect();
+        longest.sort_by(|a, b| b.span_us().cmp(&a.span_us()));
+        out.push_str("critical path (longest batch windows):\n");
+        for w in longest.iter().take(5) {
+            out.push_str(&format!(
+                "  batch {:>4}: {:>9.3} ms, closed by rank {} {} ({})\n",
+                w.batch,
+                ms(w.span_us()),
+                w.crit_rank,
+                w.crit_name,
+                w.crit_kind
+            ));
+        }
+        out.push_str("critical batches by rank:");
+        for (rank, n) in &s.crit_batches_by_rank {
+            out.push_str(&format!(" r{rank}={n}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render the `--json` report.
+pub fn render_json(s: &TraceSummary) -> Json {
+    let ranks: Vec<Json> = s
+        .ranks
+        .iter()
+        .map(|r| {
+            let kinds: BTreeMap<String, Json> = KINDS
+                .iter()
+                .zip(r.by_kind_us.iter())
+                .map(|(k, &us)| (k.to_string(), Json::num(ms(us))))
+                .collect();
+            Json::from_pairs(vec![
+                ("rank", Json::num(r.rank as f64)),
+                ("events", Json::num(r.events as f64)),
+                ("ms_by_kind", Json::Obj(kinds)),
+                ("stall_ms", Json::num(ms(r.stall_us()))),
+            ])
+        })
+        .collect();
+    let lanes: Vec<Json> = s
+        .lanes
+        .iter()
+        .map(|l| {
+            Json::from_pairs(vec![
+                ("rank", Json::num(l.rank as f64)),
+                ("lane", Json::num(l.lane as f64)),
+                ("wait_ms", Json::num(ms(l.wait_us))),
+                ("events", Json::num(l.events as f64)),
+            ])
+        })
+        .collect();
+    let stalls: Vec<Json> = s
+        .stalls
+        .iter()
+        .map(|st| {
+            Json::from_pairs(vec![
+                ("rank", Json::num(st.rank as f64)),
+                ("kind", Json::str(st.kind.clone())),
+                ("name", Json::str(st.name.clone())),
+                ("batch", st.batch.map_or(Json::Null, |b| Json::num(b as f64))),
+                ("lane", st.lane.map_or(Json::Null, |l| Json::num(l as f64))),
+                ("dur_ms", Json::num(ms(st.dur_us))),
+            ])
+        })
+        .collect();
+    let windows: Vec<Json> = s
+        .windows
+        .iter()
+        .map(|w| {
+            Json::from_pairs(vec![
+                ("batch", Json::num(w.batch as f64)),
+                ("span_ms", Json::num(ms(w.span_us()))),
+                ("crit_rank", Json::num(w.crit_rank as f64)),
+                ("crit_kind", Json::str(w.crit_kind.clone())),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![
+        ("events", Json::num(s.events as f64)),
+        ("ranks", Json::Arr(ranks)),
+        ("lanes", Json::Arr(lanes)),
+        ("top_stalls", Json::Arr(stalls)),
+        ("batch_windows", Json::Arr(windows)),
+    ])
+}
+
+/// One per-rank/per-kind regression found by the diff mode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    pub rank: u64,
+    pub kind: String,
+    pub base_ms: f64,
+    pub cur_ms: f64,
+}
+
+impl Regression {
+    pub fn ratio(&self) -> f64 {
+        self.cur_ms / self.base_ms.max(1e-9)
+    }
+}
+
+/// Diff two summaries: a (rank, kind) cell regresses when the current
+/// time exceeds baseline by more than `tolerance` (relative) *and* by
+/// at least 1 ms (absolute — microsecond jitter is not a regression).
+pub fn diff(current: &TraceSummary, baseline: &TraceSummary, tolerance: f64) -> Vec<Regression> {
+    let base: BTreeMap<u64, &RankRollup> = baseline.ranks.iter().map(|r| (r.rank, r)).collect();
+    let mut out = Vec::new();
+    for r in &current.ranks {
+        let Some(b) = base.get(&r.rank) else { continue };
+        for (k, name) in KINDS.iter().enumerate() {
+            let cur_ms = ms(r.by_kind_us[k]);
+            let base_ms = ms(b.by_kind_us[k]);
+            if cur_ms > base_ms * (1.0 + tolerance) && cur_ms - base_ms >= 1.0 {
+                out.push(Regression {
+                    rank: r.rank,
+                    kind: name.to_string(),
+                    base_ms,
+                    cur_ms,
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// bench-gate
+
+/// Direction of "better" for one bench metric, inferred from the last
+/// segment of its dotted path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    LowerIsBetter,
+    HigherIsBetter,
+    Informational,
+}
+
+/// Infer the gate direction from a metric path. Matching is on the
+/// leaf segment, case-insensitive: times/bytes/misses shrink, rates
+/// grow, anything unrecognized is informational (never fails).
+pub fn direction(path: &str) -> Direction {
+    let leaf = path.rsplit('.').next().unwrap_or(path).to_ascii_lowercase();
+    const LOWER: [&str; 10] = [
+        "_ms", "_us", "_s", "seconds", "misses", "miss", "bytes", "rows", "lag", "stall",
+    ];
+    const HIGHER: [&str; 6] = ["qps", "throughput", "hit_rate", "hits", "speedup", "rate"];
+    if HIGHER.iter().any(|h| leaf == *h || leaf.ends_with(h)) {
+        return Direction::HigherIsBetter;
+    }
+    if LOWER.iter().any(|l| leaf == *l || leaf.ends_with(l)) {
+        return Direction::LowerIsBetter;
+    }
+    Direction::Informational
+}
+
+/// Flatten every numeric leaf of a JSON document to `path → value`
+/// with dotted paths (arrays index numerically).
+pub fn flatten_numeric(doc: &Json) -> BTreeMap<String, f64> {
+    fn walk(j: &Json, prefix: &str, out: &mut BTreeMap<String, f64>) {
+        match j {
+            Json::Num(n) => {
+                out.insert(prefix.to_string(), *n);
+            }
+            Json::Obj(o) => {
+                for (k, v) in o {
+                    let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                    walk(v, &p, out);
+                }
+            }
+            Json::Arr(a) => {
+                for (i, v) in a.iter().enumerate() {
+                    walk(v, &format!("{prefix}.{i}"), out);
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(doc, "", &mut out);
+    out
+}
+
+/// One compared metric in a gate run.
+#[derive(Debug, Clone)]
+pub struct GateRow {
+    pub path: String,
+    pub baseline: f64,
+    pub current: f64,
+    pub direction: Direction,
+    pub failed: bool,
+}
+
+/// Result of a gate run: every matched metric, plus the verdict.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    pub rows: Vec<GateRow>,
+    /// Paths present in only one of the two documents (reported, not
+    /// failing — arms legitimately appear/disappear across runs).
+    pub unmatched: Vec<String>,
+}
+
+impl GateReport {
+    pub fn failures(&self) -> Vec<&GateRow> {
+        self.rows.iter().filter(|r| r.failed).collect()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.rows.iter().all(|r| !r.failed)
+    }
+}
+
+/// Compare `current` against `baseline` with a relative `tolerance`
+/// (0.15 = 15%). Directional: lower-is-better metrics fail when
+/// `current > baseline * (1 + tolerance)`, higher-is-better when
+/// `current < baseline * (1 - tolerance)`. Near-zero baselines
+/// (|baseline| < 1e-9) are informational — a ratio against zero means
+/// nothing.
+pub fn bench_gate(current: &Json, baseline: &Json, tolerance: f64) -> Result<GateReport> {
+    if tolerance < 0.0 {
+        bail!("tolerance must be >= 0, got {tolerance}");
+    }
+    let cur = flatten_numeric(current);
+    let base = flatten_numeric(baseline);
+    let mut report = GateReport::default();
+    for (path, &b) in &base {
+        let Some(&c) = cur.get(path) else {
+            report.unmatched.push(path.clone());
+            continue;
+        };
+        let dir = if b.abs() < 1e-9 { Direction::Informational } else { direction(path) };
+        let failed = match dir {
+            Direction::LowerIsBetter => c > b * (1.0 + tolerance),
+            Direction::HigherIsBetter => c < b * (1.0 - tolerance),
+            Direction::Informational => false,
+        };
+        report.rows.push(GateRow {
+            path: path.clone(),
+            baseline: b,
+            current: c,
+            direction: dir,
+            failed,
+        });
+    }
+    for path in cur.keys() {
+        if !base.contains_key(path) {
+            report.unmatched.push(path.clone());
+        }
+    }
+    Ok(report)
+}
+
+/// Render a gate report for humans. Failures first, then the rest.
+pub fn render_gate(report: &GateReport, tolerance: f64) -> String {
+    let mut out = String::new();
+    let fails = report.failures();
+    out.push_str(&format!(
+        "== bench-gate: {} metrics compared, {} regressions (tolerance {:.0}%) ==\n",
+        report.rows.len(),
+        fails.len(),
+        tolerance * 100.0
+    ));
+    for r in &fails {
+        out.push_str(&format!(
+            "  FAIL {}: {} -> {} ({:+.1}%)\n",
+            r.path,
+            r.baseline,
+            r.current,
+            100.0 * (r.current - r.baseline) / r.baseline.abs().max(1e-9)
+        ));
+    }
+    for r in &report.rows {
+        if r.failed {
+            continue;
+        }
+        let tag = match r.direction {
+            Direction::Informational => "info",
+            _ => "ok  ",
+        };
+        out.push_str(&format!("  {tag} {}: {} -> {}\n", r.path, r.baseline, r.current));
+    }
+    for p in &report.unmatched {
+        out.push_str(&format!("  only-one-side {p}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::{
+        ObsEvent, TraceTrack, KIND_BARRIER_WAIT, KIND_COMPUTE, KIND_WIRE_WAIT, LANE_NONE,
+        NO_BATCH_U64,
+    };
+    use crate::obs::{chrome_trace_json, MetricsSnapshot, ObsReport};
+
+    fn ev(batch: u64, kind: u8, lane: u8, t0: u64, t1: u64) -> ObsEvent {
+        ObsEvent {
+            batch,
+            kind,
+            lane,
+            name_idx: 0,
+            t0_us: t0,
+            t1_us: t1,
+        }
+    }
+
+    fn two_rank_report() -> ObsReport {
+        ObsReport {
+            tracks: vec![
+                TraceTrack {
+                    rank: 0,
+                    thread: "w".into(),
+                    dropped: 0,
+                    names: vec!["s".into()],
+                    events: vec![
+                        ev(0, KIND_COMPUTE, LANE_NONE, 0, 1_000),
+                        ev(0, KIND_WIRE_WAIT, 1, 1_000, 4_000),
+                        ev(1, KIND_COMPUTE, LANE_NONE, 4_000, 5_000),
+                        ev(NO_BATCH_U64, KIND_BARRIER_WAIT, LANE_NONE, 5_000, 5_500),
+                    ],
+                },
+                TraceTrack {
+                    rank: 1,
+                    thread: "w".into(),
+                    dropped: 0,
+                    names: vec!["s".into()],
+                    events: vec![
+                        ev(0, KIND_COMPUTE, LANE_NONE, 0, 2_000),
+                        ev(1, KIND_WIRE_WAIT, 0, 2_000, 9_000),
+                    ],
+                },
+            ],
+            metrics: MetricsSnapshot::default(),
+        }
+    }
+
+    #[test]
+    fn rollups_stalls_and_critical_path() {
+        let doc = chrome_trace_json(&two_rank_report());
+        let s = analyze(&doc).expect("analyze");
+        assert_eq!(s.events, 6);
+        assert_eq!(s.ranks.len(), 2);
+        let r0 = &s.ranks[0];
+        assert_eq!(r0.rank, 0);
+        assert_eq!(r0.by_kind_us, [2_000, 0, 3_000, 500]);
+        let r1 = &s.ranks[1];
+        assert_eq!(r1.by_kind_us, [2_000, 0, 7_000, 0]);
+        // Lane rollups: only wire-wait events with a lane.
+        assert_eq!(s.lanes.len(), 2);
+        assert_eq!((s.lanes[0].rank, s.lanes[0].lane, s.lanes[0].wait_us), (0, 1, 3_000));
+        assert_eq!((s.lanes[1].rank, s.lanes[1].lane, s.lanes[1].wait_us), (1, 0, 7_000));
+        // Top stalls descend by duration; the longest is rank 1's
+        // 7 ms wire wait on batch 1.
+        assert_eq!(s.stalls[0].dur_us, 7_000);
+        assert_eq!(s.stalls[0].rank, 1);
+        assert_eq!(s.stalls[0].batch, Some(1));
+        // Batch windows: batch 0 spans 0..4000 closed by rank 0's wire
+        // wait; batch 1 spans 2000..9000 closed by rank 1.
+        assert_eq!(s.windows.len(), 2);
+        assert_eq!(s.windows[0].span_us(), 4_000);
+        assert_eq!(s.windows[0].crit_rank, 0);
+        assert_eq!(s.windows[1].span_us(), 7_000);
+        assert_eq!(s.windows[1].crit_rank, 1);
+        assert_eq!(s.crit_batches_by_rank.get(&0), Some(&1));
+        assert_eq!(s.crit_batches_by_rank.get(&1), Some(&1));
+        // Both renderers produce non-empty, parseable output.
+        let text = render_text(&s);
+        assert!(text.contains("per-rank stall attribution"));
+        assert!(text.contains("critical path"));
+        let j = render_json(&s).to_string();
+        let back = crate::util::json::parse(&j).expect("render_json parses");
+        assert_eq!(back.get("ranks").as_arr().map(<[Json]>::len), Some(2));
+    }
+
+    #[test]
+    fn diff_flags_only_real_regressions() {
+        let doc = chrome_trace_json(&two_rank_report());
+        let base = analyze(&doc).unwrap();
+        let mut cur = base.clone();
+        // Inflate rank 1's wire-wait by 2x (7 ms → 14 ms): past 15%
+        // tolerance and past the 1 ms absolute floor.
+        cur.ranks[1].by_kind_us[2] *= 2;
+        // Inflate rank 0's barrier wait by 2x but only 0.5 ms → under
+        // the absolute floor, not a regression.
+        cur.ranks[0].by_kind_us[3] *= 2;
+        let regs = diff(&cur, &base, 0.15);
+        assert_eq!(regs.len(), 1);
+        assert_eq!((regs[0].rank, regs[0].kind.as_str()), (1, "wire-wait"));
+        assert!((regs[0].ratio() - 2.0).abs() < 1e-9);
+        assert!(diff(&base, &base, 0.15).is_empty(), "self-diff is clean");
+    }
+
+    #[test]
+    fn analyze_rejects_non_trace_json() {
+        let doc = crate::util::json::parse("{\"foo\": 1}").unwrap();
+        assert!(analyze(&doc).is_err());
+    }
+
+    #[test]
+    fn directions_are_sensible() {
+        assert_eq!(direction("serve.full.p99_ms"), Direction::LowerIsBetter);
+        assert_eq!(direction("serve.full.qps"), Direction::HigherIsBetter);
+        assert_eq!(direction("serve.full.fetched_bytes"), Direction::LowerIsBetter);
+        assert_eq!(direction("serve.full.deadline_misses"), Direction::LowerIsBetter);
+        assert_eq!(direction("serve.full.hit_rate"), Direction::HigherIsBetter);
+        assert_eq!(direction("serve.arms.0"), Direction::Informational);
+        assert_eq!(direction("served"), Direction::Informational);
+    }
+
+    #[test]
+    fn bench_gate_catches_injected_2x_slowdown() {
+        let baseline = crate::util::json::parse(
+            r#"{"serve": {"full": {"p50_ms": 2.0, "p99_ms": 8.0, "qps": 500.0,
+                 "deadline_misses": 1, "served": 256}}}"#,
+        )
+        .unwrap();
+        // Identical current: gate passes.
+        let clean = bench_gate(&baseline, &baseline, 0.15).unwrap();
+        assert!(clean.passed(), "self-compare must pass");
+        // Inject a 2x p99 slowdown.
+        let current = crate::util::json::parse(
+            r#"{"serve": {"full": {"p50_ms": 2.0, "p99_ms": 16.0, "qps": 500.0,
+                 "deadline_misses": 1, "served": 256}}}"#,
+        )
+        .unwrap();
+        let gated = bench_gate(&current, &baseline, 0.15).unwrap();
+        assert!(!gated.passed(), "a 2x p99 regression must fail the gate");
+        let fails = gated.failures();
+        assert_eq!(fails.len(), 1);
+        assert_eq!(fails[0].path, "serve.full.p99_ms");
+        // A qps collapse also fails (higher-is-better direction).
+        let slow = crate::util::json::parse(
+            r#"{"serve": {"full": {"p50_ms": 2.0, "p99_ms": 8.0, "qps": 200.0,
+                 "deadline_misses": 1, "served": 256}}}"#,
+        )
+        .unwrap();
+        assert!(!bench_gate(&slow, &baseline, 0.15).unwrap().passed());
+        // Within tolerance: 10% slower p99 passes a 15% gate.
+        let near = crate::util::json::parse(
+            r#"{"serve": {"full": {"p50_ms": 2.0, "p99_ms": 8.8, "qps": 500.0,
+                 "deadline_misses": 1, "served": 256}}}"#,
+        )
+        .unwrap();
+        assert!(bench_gate(&near, &baseline, 0.15).unwrap().passed());
+        // Renderer mentions the failing path.
+        assert!(render_gate(&gated, 0.15).contains("serve.full.p99_ms"));
+    }
+
+    #[test]
+    fn gate_handles_shape_drift_and_zero_baselines() {
+        let baseline =
+            crate::util::json::parse(r#"{"a": {"p99_ms": 0.0, "gone_ms": 3.0}}"#).unwrap();
+        let current =
+            crate::util::json::parse(r#"{"a": {"p99_ms": 99.0, "new_ms": 1.0}}"#).unwrap();
+        let rep = bench_gate(&current, &baseline, 0.15).unwrap();
+        // Zero baseline → informational, not an infinite-ratio fail.
+        assert!(rep.passed());
+        assert_eq!(rep.unmatched, vec!["a.gone_ms".to_string(), "a.new_ms".to_string()]);
+    }
+}

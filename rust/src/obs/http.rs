@@ -1,0 +1,618 @@
+//! Live telemetry plane (PR 10): a hand-rolled, dependency-free
+//! HTTP/1.1 server every rank can arm with `--metrics-addr host:port`.
+//!
+//! Three endpoints:
+//!
+//! - `/metrics` — Prometheus text exposition (version 0.0.4) rendered
+//!   from the cumulative [`metrics::peek`] view, so a scrape never
+//!   steals epoch deltas from `EpochReport.obs`. Dotted metric keys
+//!   are sanitized to exposition names (`wire.lane0.tx_bytes` →
+//!   `wire_lane0_tx_bytes`); every sample carries a `rank` label.
+//! - `/healthz` — JSON liveness: rank, role, epoch/batch progress, and
+//!   per-peer heartbeat lag read from the same `LANE_HB` last-heard
+//!   stamps the leader's monitor thread watches. Returns 503 once any
+//!   registered peer has been declared dead, so a plain HTTP check
+//!   sees a degraded cluster. The leader's page shows every worker —
+//!   cluster-wide liveness from one scrape.
+//! - `/buildinfo` — name/version/codec, for fleet inventory.
+//!
+//! Arming the plane flips [`recorder::set_enabled`] on, so the
+//! `wire.lane*` / `cache.*` / `hb.*` / `serve.*` families tick even
+//! without `--trace`. Like everything in `obs/`, the plane is
+//! observationally free: with no `--metrics-addr` there is no listener
+//! thread, no clock read, and no registered peer state — the hooks
+//! below all gate on a relaxed [`armed`] load and return immediately.
+//! Losses are byte-identical either way (pinned in
+//! `tests/test_obs_trace.rs`).
+//!
+//! The server itself reuses the `net/` socket idioms (blocking
+//! accept loop, `BufReader` framing, explicit shutdown) but speaks
+//! HTTP/1.1 with `Connection: close` — one request per connection is
+//! plenty for a scraper.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::metrics::{self, LiveView, BUCKET_BOUNDS};
+use super::recorder;
+
+// ---- health state ----
+
+/// One watched peer connection: the same atomics the TCP reader /
+/// heartbeat monitor stamp, shared here so `/healthz` reads liveness
+/// without its own socket traffic.
+#[derive(Clone)]
+pub struct PeerHealth {
+    pub peer: usize,
+    /// `recorder::now_us` stamp of the last complete frame from this
+    /// peer (any lane — data proves liveness as well as heartbeats).
+    pub last_heard_us: Arc<AtomicU64>,
+    /// Set once by the heartbeat monitor when it declares the peer
+    /// dead and shuts the connection.
+    pub timed_out: Arc<AtomicBool>,
+}
+
+/// What `/healthz` serves: identity, progress, and the watched peers.
+/// An instance type (like [`metrics::MetricsRegistry`]) so the
+/// dead-peer fixture test drives its own; the process-global one is
+/// fed through the `health_*` free functions.
+pub struct HealthState {
+    rank: AtomicI64,
+    role: Mutex<String>,
+    epoch: AtomicI64,
+    batch: AtomicI64,
+    peers: Mutex<Vec<PeerHealth>>,
+}
+
+impl HealthState {
+    pub const fn new() -> HealthState {
+        HealthState {
+            rank: AtomicI64::new(-1),
+            role: Mutex::new(String::new()),
+            epoch: AtomicI64::new(-1),
+            batch: AtomicI64::new(-1),
+            peers: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn set_identity(&self, rank: i64, role: &str) {
+        self.rank.store(rank, Ordering::Relaxed);
+        *lock(&self.role) = role.to_string();
+    }
+
+    pub fn set_epoch(&self, epoch: i64) {
+        self.epoch.store(epoch, Ordering::Relaxed);
+    }
+
+    pub fn set_batch(&self, batch: i64) {
+        self.batch.store(batch, Ordering::Relaxed);
+    }
+
+    /// Register (or re-register, after a reconnect) a peer's liveness
+    /// stamps. Keyed by peer rank — the newest connection wins.
+    pub fn register_peer(&self, p: PeerHealth) {
+        let mut peers = lock(&self.peers);
+        if let Some(slot) = peers.iter_mut().find(|q| q.peer == p.peer) {
+            *slot = p;
+        } else {
+            peers.push(p);
+            peers.sort_by_key(|q| q.peer);
+        }
+    }
+
+    /// The `/healthz` page at clock reading `now_us`, plus whether the
+    /// cluster view is fully alive (false ⇒ HTTP 503). `now_us` is a
+    /// parameter so the fixture test is deterministic.
+    pub fn healthz_json(&self, now_us: u64) -> (Json, bool) {
+        let opt = |v: i64| if v < 0 { Json::Null } else { Json::num(v as f64) };
+        let mut all_alive = true;
+        let peers: Vec<Json> = lock(&self.peers)
+            .iter()
+            .map(|p| {
+                let lag_us = now_us.saturating_sub(p.last_heard_us.load(Ordering::SeqCst));
+                let dead = p.timed_out.load(Ordering::SeqCst);
+                all_alive &= !dead;
+                Json::from_pairs(vec![
+                    ("rank", Json::num(p.peer as f64)),
+                    ("last_heard_ms", Json::num(lag_us as f64 / 1000.0)),
+                    ("alive", Json::Bool(!dead)),
+                ])
+            })
+            .collect();
+        let body = Json::from_pairs(vec![
+            ("status", Json::str(if all_alive { "ok" } else { "degraded" })),
+            ("rank", opt(self.rank.load(Ordering::Relaxed))),
+            ("role", {
+                let r = lock(&self.role);
+                if r.is_empty() { Json::Null } else { Json::str(r.as_str()) }
+            }),
+            ("epoch", opt(self.epoch.load(Ordering::Relaxed))),
+            ("batch", opt(self.batch.load(Ordering::Relaxed))),
+            ("peers", Json::Arr(peers)),
+        ]);
+        (body, all_alive)
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+static HEALTH: HealthState = HealthState::new();
+
+/// Flipped once by [`start`]. Every health hook below gates on this
+/// relaxed load, so an unarmed run does no work past one atomic read.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Is the telemetry plane armed (`--metrics-addr` given)?
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Record this process's identity on the global health page.
+pub fn health_set_identity(rank: i64, role: &str) {
+    if armed() {
+        HEALTH.set_identity(rank, role);
+    }
+}
+
+/// Epoch-progress hook, called from the coordinator's epoch loop.
+pub fn health_set_epoch(epoch: i64) {
+    if armed() {
+        HEALTH.set_epoch(epoch);
+    }
+}
+
+/// Batch-progress hook, called from [`recorder::set_batch`] — one
+/// relaxed load when unarmed, one extra relaxed store per batch when
+/// armed. Never reads a clock.
+pub fn health_note_batch(batch: i64) {
+    if armed() {
+        HEALTH.set_batch(batch);
+    }
+}
+
+/// Share a connection's liveness stamps with `/healthz` (called from
+/// `net/tcp.rs` as each star connection is built).
+pub fn health_register_peer(peer: usize, last_heard_us: Arc<AtomicU64>, timed_out: Arc<AtomicBool>) {
+    if armed() {
+        HEALTH.register_peer(PeerHealth {
+            peer,
+            last_heard_us,
+            timed_out,
+        });
+    }
+}
+
+// ---- the exposition renderer ----
+
+/// Sanitize a dotted metric key into a Prometheus metric name:
+/// `[a-zA-Z0-9_:]` pass through, everything else becomes `_`, and a
+/// leading digit gets a `_` prefix.
+pub fn sanitize_name(key: &str) -> String {
+    let mut out = String::with_capacity(key.len() + 1);
+    for (i, c) in key.chars().enumerate() {
+        let ok = c.is_ascii_alphanumeric() || c == '_' || c == ':';
+        if i == 0 && c.is_ascii_digit() {
+            out.push('_');
+        }
+        out.push(if ok { c } else { '_' });
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Escape a label value per the text exposition format: backslash,
+/// double-quote, and newline.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a HELP line: backslash and newline (quotes are legal there).
+pub fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a [`LiveView`] as Prometheus text exposition. Histograms
+/// expand into cumulative `_bucket{le=...}` series over
+/// [`BUCKET_BOUNDS`] plus `+Inf`, `_sum`, and `_count`; `le` counts
+/// are monotone non-decreasing and the `+Inf` bucket equals `_count`
+/// by construction (pinned by the round-trip test).
+pub fn render_prometheus(view: &LiveView, rank: u64) -> String {
+    let mut out = String::new();
+    let label = format!("rank=\"{}\"", escape_label(&rank.to_string()));
+    for (key, v) in &view.counters {
+        let name = sanitize_name(key);
+        out.push_str(&format!(
+            "# HELP {name} heta counter `{}` (cumulative since process start)\n",
+            escape_help(key)
+        ));
+        out.push_str(&format!("# TYPE {name} counter\n"));
+        out.push_str(&format!("{name}{{{label}}} {v}\n"));
+    }
+    for (key, v) in &view.gauges {
+        let name = sanitize_name(key);
+        out.push_str(&format!("# HELP {name} heta gauge `{}`\n", escape_help(key)));
+        out.push_str(&format!("# TYPE {name} gauge\n"));
+        out.push_str(&format!("{name}{{{label}}} {v}\n"));
+    }
+    for (key, summary, buckets) in &view.hists {
+        let name = sanitize_name(key);
+        out.push_str(&format!("# HELP {name} heta histogram `{}`\n", escape_help(key)));
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let mut cum = 0u64;
+        for (i, bound) in BUCKET_BOUNDS.iter().enumerate() {
+            cum += buckets.get(i).copied().unwrap_or(0);
+            out.push_str(&format!("{name}_bucket{{{label},le=\"{bound}\"}} {cum}\n"));
+        }
+        out.push_str(&format!(
+            "{name}_bucket{{{label},le=\"+Inf\"}} {}\n",
+            summary.count
+        ));
+        out.push_str(&format!("{name}_sum{{{label}}} {}\n", summary.sum));
+        out.push_str(&format!("{name}_count{{{label}}} {}\n", summary.count));
+    }
+    out
+}
+
+// ---- the server ----
+
+/// A running telemetry listener. The accept thread is detached — it
+/// lives until process exit, like the `net/` reader threads; there is
+/// nothing to join because a scraper can connect at any time.
+pub struct TelemetryServer {
+    /// The bound address (resolves `:0` for tests).
+    pub addr: SocketAddr,
+}
+
+/// Bind `addr`, arm the health hooks, flip the recorder on (so the
+/// metric families tick without `--trace`), and spawn the accept
+/// loop. Call once, early, before the transport dials — peers
+/// register their liveness stamps only while armed.
+pub fn start(addr: &str, rank: i64, role: &str) -> Result<TelemetryServer> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding the telemetry listener on {addr}"))?;
+    let local = listener.local_addr().context("reading the bound telemetry address")?;
+    ARMED.store(true, Ordering::SeqCst);
+    HEALTH.set_identity(rank, role);
+    recorder::set_enabled(true);
+    std::thread::Builder::new()
+        .name("heta-telemetry".to_string())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if let Ok(stream) = conn {
+                    let _ = handle_conn(stream);
+                }
+            }
+        })
+        .context("spawning the telemetry accept thread")?;
+    crate::log!(
+        Info,
+        "telemetry: serving /metrics /healthz /buildinfo on http://{local}"
+    );
+    Ok(TelemetryServer { addr: local })
+}
+
+/// One request per connection: read the request line, drain headers,
+/// route, respond, close. Malformed input gets a 400; anything that
+/// is not `GET`/`HEAD` gets a 405.
+fn handle_conn(stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    // Drain headers (bounded — a scraper sends a handful).
+    let mut hdr = String::new();
+    for _ in 0..128 {
+        hdr.clear();
+        let n = reader.read_line(&mut hdr)?;
+        if n == 0 || hdr == "\r\n" || hdr == "\n" {
+            break;
+        }
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, ctype, body) = route(method, path);
+    let head_only = method == "HEAD";
+    respond(stream, status, ctype, &body, head_only)
+}
+
+/// Route one request to `(status line, content type, body)`.
+fn route(method: &str, path: &str) -> (&'static str, &'static str, String) {
+    if method != "GET" && method != "HEAD" {
+        return (
+            "405 Method Not Allowed",
+            "text/plain; charset=utf-8",
+            "method not allowed\n".to_string(),
+        );
+    }
+    // Ignore any query string — scrapers add ?format= etc.
+    let path = path.split('?').next().unwrap_or(path);
+    match path {
+        "/metrics" => {
+            let rank = HEALTH.rank.load(Ordering::Relaxed).max(0) as u64;
+            (
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                render_prometheus(&metrics::peek(), rank),
+            )
+        }
+        "/healthz" => {
+            let (body, alive) = HEALTH.healthz_json(recorder::now_us());
+            (
+                if alive { "200 OK" } else { "503 Service Unavailable" },
+                "application/json",
+                format!("{body}\n"),
+            )
+        }
+        "/buildinfo" => {
+            let body = Json::from_pairs(vec![
+                ("name", Json::str("heta")),
+                ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+                (
+                    "codec_version",
+                    Json::num(crate::net::codec::CODEC_VERSION as f64),
+                ),
+                ("debug_assertions", Json::Bool(cfg!(debug_assertions))),
+            ]);
+            ("200 OK", "application/json", format!("{body}\n"))
+        }
+        "/" => (
+            "200 OK",
+            "text/plain; charset=utf-8",
+            "heta telemetry: /metrics /healthz /buildinfo\n".to_string(),
+        ),
+        _ => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found\n".to_string(),
+        ),
+    }
+}
+
+fn respond(
+    mut stream: TcpStream,
+    status: &str,
+    ctype: &str,
+    body: &str,
+    head_only: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    if !head_only {
+        stream.write_all(body.as_bytes())?;
+    }
+    stream.flush()?;
+    let _ = stream.shutdown(Shutdown::Both);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::MetricsRegistry;
+    use std::collections::BTreeMap;
+
+    // A tiny exposition parser for the round-trip tests: returns
+    // sample name → (labels → value), plus the set of TYPE lines.
+    fn parse_exposition(
+        text: &str,
+    ) -> (BTreeMap<String, Vec<(BTreeMap<String, String>, f64)>>, BTreeMap<String, String>) {
+        let mut samples: BTreeMap<String, Vec<(BTreeMap<String, String>, f64)>> = BTreeMap::new();
+        let mut types = BTreeMap::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().expect("TYPE name").to_string();
+                let ty = it.next().expect("TYPE kind").to_string();
+                types.insert(name, ty);
+                continue;
+            }
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let (head, value) = line.rsplit_once(' ').expect("sample line");
+            let value: f64 = value.parse().expect("sample value");
+            let (name, labels) = match head.split_once('{') {
+                Some((n, rest)) => {
+                    let rest = rest.strip_suffix('}').expect("closing brace");
+                    let mut map = BTreeMap::new();
+                    // Labels in our renderer never contain escaped
+                    // commas inside values other than via backslash;
+                    // split naively then unescape.
+                    for pair in rest.split(',') {
+                        let (k, v) = pair.split_once('=').expect("label pair");
+                        let v = v.trim_matches('"').replace("\\\"", "\"").replace("\\\\", "\\");
+                        map.insert(k.to_string(), v);
+                    }
+                    (n.to_string(), map)
+                }
+                None => (head.to_string(), BTreeMap::new()),
+            };
+            samples.entry(name).or_default().push((labels, value));
+        }
+        (samples, types)
+    }
+
+    #[test]
+    fn name_sanitization_and_escaping() {
+        assert_eq!(sanitize_name("wire.lane0.tx_bytes"), "wire_lane0_tx_bytes");
+        assert_eq!(sanitize_name("cache.paper-v2.hits"), "cache_paper_v2_hits");
+        assert_eq!(sanitize_name("0weird"), "_0weird");
+        assert_eq!(sanitize_name(""), "_");
+        // Property over a grid of hostile inputs: sanitized names are
+        // always legal, escapes always single-line and reversible.
+        let hostiles = [
+            "a b", "ab\"c", "x\\y", "new\nline", "ünïcode", "1.2.3", "::", "-",
+        ];
+        for h in hostiles {
+            let n = sanitize_name(h);
+            assert!(!n.is_empty());
+            assert!(
+                n.chars().enumerate().all(|(i, c)| {
+                    (c.is_ascii_alphanumeric() && (i > 0 || !c.is_ascii_digit()))
+                        || c == '_'
+                        || c == ':'
+                        || (i > 0 && c.is_ascii_digit())
+                }),
+                "sanitize({h:?}) = {n:?} has an illegal char"
+            );
+            let e = escape_label(h);
+            assert!(!e.contains('\n'), "escape_label({h:?}) leaked a newline");
+            let back = e.replace("\\n", "\n").replace("\\\"", "\"").replace("\\\\", "\\");
+            // Unescaping in reverse order differs only for inputs
+            // containing literal \n / \" sequences, which our keys
+            // never do; for this grid the round trip must hold.
+            assert_eq!(back, h, "escape_label not reversible for {h:?}");
+            assert!(!escape_help(h).contains('\n'));
+        }
+    }
+
+    #[test]
+    fn exposition_round_trips_through_parser() {
+        let reg = MetricsRegistry::new();
+        reg.counter_add("wire.lane0.tx_bytes", 123);
+        reg.counter_add("wire.lane1.rx_bytes", 7);
+        reg.gauge_set("hb.rank1.last_heard_ms", 41.5);
+        for v in [0.05, 0.3, 3.0, 40.0, 1e9] {
+            reg.hist_observe("serve.latency_ms", v);
+        }
+        let text = render_prometheus(&reg.peek(), 3);
+        let (samples, types) = parse_exposition(&text);
+        assert_eq!(types.get("wire_lane0_tx_bytes").map(String::as_str), Some("counter"));
+        assert_eq!(types.get("hb_rank1_last_heard_ms").map(String::as_str), Some("gauge"));
+        assert_eq!(types.get("serve_latency_ms").map(String::as_str), Some("histogram"));
+        let one = |name: &str| {
+            let s = &samples[name];
+            assert_eq!(s.len(), 1, "{name} should have one sample");
+            assert_eq!(s[0].0.get("rank").map(String::as_str), Some("3"));
+            s[0].1
+        };
+        assert_eq!(one("wire_lane0_tx_bytes"), 123.0);
+        assert_eq!(one("wire_lane1_rx_bytes"), 7.0);
+        assert_eq!(one("hb_rank1_last_heard_ms"), 41.5);
+        assert_eq!(one("serve_latency_ms_count"), 5.0);
+        // Bucket cumulativity: le-ordered counts are monotone and the
+        // +Inf bucket equals _count.
+        let buckets = &samples["serve_latency_ms_bucket"];
+        assert_eq!(buckets.len(), BUCKET_BOUNDS.len() + 1);
+        let mut prev = 0.0;
+        for (labels, v) in buckets {
+            assert!(*v >= prev, "le buckets must be monotone");
+            prev = *v;
+            assert!(labels.contains_key("le"));
+        }
+        let inf = buckets.last().expect("+Inf bucket");
+        assert_eq!(inf.0.get("le").map(String::as_str), Some("+Inf"));
+        assert_eq!(inf.1, 5.0, "+Inf bucket must equal the total count");
+        // 1e9 is above every bound: the last finite bucket excludes it.
+        assert_eq!(buckets[BUCKET_BOUNDS.len() - 1].1, 4.0);
+    }
+
+    #[test]
+    fn healthz_reports_dead_peer_as_degraded() {
+        let h = HealthState::new();
+        h.set_identity(2, "leader");
+        h.set_epoch(4);
+        h.set_batch(17);
+        let alive_stamp = Arc::new(AtomicU64::new(1_000_000));
+        let dead_stamp = Arc::new(AtomicU64::new(200_000));
+        let dead_flag = Arc::new(AtomicBool::new(true));
+        h.register_peer(PeerHealth {
+            peer: 0,
+            last_heard_us: Arc::clone(&alive_stamp),
+            timed_out: Arc::new(AtomicBool::new(false)),
+        });
+        h.register_peer(PeerHealth {
+            peer: 1,
+            last_heard_us: Arc::clone(&dead_stamp),
+            timed_out: Arc::clone(&dead_flag),
+        });
+        let (body, all_alive) = h.healthz_json(1_500_000);
+        assert!(!all_alive, "a timed-out peer must degrade the page");
+        assert_eq!(body.get("status").as_str(), Some("degraded"));
+        assert_eq!(body.get("rank").as_u64(), Some(2));
+        assert_eq!(body.get("role").as_str(), Some("leader"));
+        assert_eq!(body.get("epoch").as_u64(), Some(4));
+        assert_eq!(body.get("batch").as_u64(), Some(17));
+        let peers = body.get("peers").as_arr().expect("peers array");
+        assert_eq!(peers.len(), 2);
+        assert_eq!(peers[0].get("alive").as_bool(), Some(true));
+        assert_eq!(peers[0].get("last_heard_ms").as_f64(), Some(0.5));
+        assert_eq!(peers[1].get("alive").as_bool(), Some(false));
+        assert_eq!(peers[1].get("last_heard_ms").as_f64(), Some(1.3));
+        // Revive: the flag clears (fresh connection re-registers) and
+        // the page goes green again.
+        h.register_peer(PeerHealth {
+            peer: 1,
+            last_heard_us: dead_stamp,
+            timed_out: Arc::new(AtomicBool::new(false)),
+        });
+        let (body, all_alive) = h.healthz_json(1_500_000);
+        assert!(all_alive);
+        assert_eq!(body.get("status").as_str(), Some("ok"));
+        // The JSON body is parseable by our own parser.
+        let text = format!("{body}");
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn server_serves_all_endpoints_over_real_http() {
+        use std::io::Read;
+        // Drive the real listener + routing on a loopback socket. The
+        // request is hand-written HTTP/1.1, the response read raw.
+        let server = start("127.0.0.1:0", 0, "leader").expect("bind telemetry");
+        let fetch = |path: &str| -> (String, String) {
+            let mut s = TcpStream::connect(server.addr).expect("connect");
+            let req = format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n");
+            s.write_all(req.as_bytes()).unwrap();
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap();
+            let (head, body) = buf.split_once("\r\n\r\n").expect("header/body split");
+            (head.to_string(), body.to_string())
+        };
+        let (head, body) = fetch("/buildinfo");
+        assert!(head.starts_with("HTTP/1.1 200"), "buildinfo: {head}");
+        let info = crate::util::json::parse(&body).expect("buildinfo json");
+        assert_eq!(info.get("name").as_str(), Some("heta"));
+        let (head, _) = fetch("/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"), "metrics: {head}");
+        assert!(head.contains("text/plain"));
+        let (head, body) = fetch("/healthz");
+        assert!(head.starts_with("HTTP/1.1 200"), "healthz: {head}");
+        assert!(crate::util::json::parse(&body).is_ok());
+        let (head, _) = fetch("/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "404: {head}");
+    }
+}

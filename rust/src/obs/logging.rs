@@ -14,6 +14,11 @@
 //!
 //! Format arguments are only evaluated when the level passes — the
 //! macro checks [`log_enabled`] before calling `format!`.
+//!
+//! `--log-format json` switches every line to JSON-lines
+//! (`{"ts_us":..,"rank":..,"batch":..,"level":"INFO","msg":".."}`) for
+//! machine ingestion; the level gate is unchanged, so filtered-out
+//! arguments stay unevaluated in both formats.
 
 use std::sync::atomic::{AtomicI64, AtomicU8, Ordering};
 
@@ -50,13 +55,46 @@ impl LogLevel {
     }
 }
 
+/// Output shape of one log line: the grep-friendly human prefix or
+/// one JSON object per line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LogFormat {
+    Human = 0,
+    Json = 1,
+}
+
+impl LogFormat {
+    /// Parse a `--log-format` value (`human|json`).
+    pub fn parse(s: &str) -> Option<LogFormat> {
+        match s {
+            "human" => Some(LogFormat::Human),
+            "json" => Some(LogFormat::Json),
+            _ => None,
+        }
+    }
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(LogLevel::Info as u8);
+
+static FORMAT: AtomicU8 = AtomicU8::new(LogFormat::Human as u8);
 
 /// This process's rank for log prefixes; -1 (unset) omits the prefix.
 static RANK: AtomicI64 = AtomicI64::new(-1);
 
 pub fn set_log_level(level: LogLevel) {
     LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn set_log_format(format: LogFormat) {
+    FORMAT.store(format as u8, Ordering::Relaxed);
+}
+
+fn log_format() -> LogFormat {
+    if FORMAT.load(Ordering::Relaxed) == LogFormat::Json as u8 {
+        LogFormat::Json
+    } else {
+        LogFormat::Human
+    }
 }
 
 pub fn set_log_rank(rank: i64) {
@@ -72,6 +110,13 @@ pub fn log_enabled(level: LogLevel) -> bool {
 /// Emit one prefixed line to stderr. Called by the `log!` macro after
 /// the level check; usable directly when the message is preformatted.
 pub fn log_line(level: LogLevel, msg: String) {
+    match log_format() {
+        LogFormat::Human => eprintln!("{} {msg}", human_prefix(level)),
+        LogFormat::Json => eprintln!("{}", json_line(level, &msg)),
+    }
+}
+
+fn human_prefix(level: LogLevel) -> String {
     let mut prefix = String::from("[heta");
     let rank = RANK.load(Ordering::Relaxed);
     if rank >= 0 {
@@ -83,7 +128,26 @@ pub fn log_line(level: LogLevel, msg: String) {
     prefix.push(' ');
     prefix.push_str(level.name());
     prefix.push(']');
-    eprintln!("{prefix} {msg}");
+    prefix
+}
+
+/// One JSON-lines record: `ts_us` on the recorder clock so log lines
+/// and trace spans share a timebase; `rank`/`batch` are null when
+/// unset, matching the human prefix's omission.
+fn json_line(level: LogLevel, msg: &str) -> String {
+    use crate::util::json::Json;
+    let rank = RANK.load(Ordering::Relaxed);
+    Json::from_pairs(vec![
+        ("ts_us", Json::num(recorder::now_us() as f64)),
+        ("rank", if rank >= 0 { Json::num(rank as f64) } else { Json::Null }),
+        (
+            "batch",
+            recorder::current_batch().map_or(Json::Null, |b| Json::num(b as f64)),
+        ),
+        ("level", Json::str(level.name())),
+        ("msg", Json::str(msg)),
+    ])
+    .to_string()
 }
 
 /// Leveled log with rank+batch prefix: `log!(Info, "fmt {}", args)`.
@@ -110,6 +174,26 @@ mod tests {
         assert_eq!(LogLevel::parse("debug"), Some(LogLevel::Debug));
         assert_eq!(LogLevel::parse("verbose"), None);
         assert_eq!(LogLevel::Warn.name(), "WARN");
+    }
+
+    #[test]
+    fn log_format_parse_and_json_lines() {
+        assert_eq!(LogFormat::parse("human"), Some(LogFormat::Human));
+        assert_eq!(LogFormat::parse("json"), Some(LogFormat::Json));
+        assert_eq!(LogFormat::parse("yaml"), None);
+        // The JSON record parses and escapes hostile messages.
+        let line = json_line(LogLevel::Warn, "quote \" backslash \\ newline \n done");
+        let doc = crate::util::json::parse(&line).expect("json log line must parse");
+        assert_eq!(doc.get("level").as_str(), Some("WARN"));
+        assert_eq!(
+            doc.get("msg").as_str(),
+            Some("quote \" backslash \\ newline \n done")
+        );
+        assert!(doc.get("ts_us").as_f64().is_some());
+        assert!(!line.contains('\n'), "JSON-lines records must be single lines");
+        // Unset rank/batch serialize as null, like the human prefix
+        // omits them.
+        assert!(matches!(doc.get("batch"), crate::util::json::Json::Null));
     }
 
     #[test]

@@ -4,10 +4,19 @@
 //! A [`MetricsRegistry`] is an instance: unit tests build their own so
 //! they never race the process-global one. Engine code ticks the
 //! module-level free functions ([`counter_add`], [`gauge_max`],
-//! [`hist_observe`]), which gate on [`recorder::enabled`] (zero work
-//! when tracing is off) and delegate to the process-global registry;
-//! [`snapshot_and_reset`] drains that registry into the epoch's
-//! [`MetricsSnapshot`].
+//! [`gauge_set`], [`hist_observe`]), which gate on
+//! [`recorder::enabled`] (zero work when tracing is off) and delegate
+//! to the process-global registry; [`snapshot_and_reset`] drains that
+//! registry into the epoch's [`MetricsSnapshot`].
+//!
+//! Every tick lands in two places: the *epoch* maps, drained by
+//! [`snapshot_and_reset`] into `EpochReport.obs`, and the *cumulative*
+//! maps, read non-destructively by [`MetricsRegistry::peek`] for the
+//! live `/metrics` endpoint (`obs::http`). A scrape therefore never
+//! steals deltas from the epoch report. Cumulative histograms
+//! additionally bin samples into the fixed [`BUCKET_BOUNDS`] ladder so
+//! the exposition can emit Prometheus `le` buckets without touching
+//! [`HistSummary`]'s wire shape (the codec stays at version 4).
 //!
 //! Naming convention: dotted paths, lowest-cardinality first —
 //! `wire.lane0.tx_bytes`, `cache.<node-type>.hits`, `staleness.open`,
@@ -178,13 +187,80 @@ impl WireCodec for MetricsSnapshot {
     }
 }
 
+/// Fixed upper bounds for the live exposition's histogram buckets, in
+/// the native unit of the observed series (ours are milliseconds). An
+/// exponential 0.1 ms → 2.5 s ladder; samples above the last bound
+/// only land in the implicit `+Inf` bucket (= total count).
+pub const BUCKET_BOUNDS: [f64; 14] = [
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0,
+];
+
+/// Cumulative histogram cell: the summary plus per-bound sample counts
+/// (non-cumulative — the exposition renderer accumulates them into
+/// monotone `le` buckets).
+#[derive(Debug, Clone)]
+struct CumHist {
+    summary: HistSummary,
+    buckets: [u64; BUCKET_BOUNDS.len()],
+}
+
+impl Default for CumHist {
+    fn default() -> CumHist {
+        CumHist {
+            summary: HistSummary::default(),
+            buckets: [0; BUCKET_BOUNDS.len()],
+        }
+    }
+}
+
+impl CumHist {
+    fn observe(&mut self, v: f64) {
+        self.summary.observe(v);
+        if let Some(i) = BUCKET_BOUNDS.iter().position(|&b| v <= b) {
+            self.buckets[i] += 1;
+        }
+    }
+}
+
+/// Non-draining view of the cumulative maps — what a live `/metrics`
+/// scrape renders. `hists` carries each key's summary plus its
+/// per-bound (non-cumulative) bucket counts aligned with
+/// [`BUCKET_BOUNDS`]; the `+Inf` overflow is `summary.count` minus the
+/// bucket sum.
+#[derive(Debug, Clone, Default)]
+pub struct LiveView {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, HistSummary, Vec<u64>)>,
+}
+
+impl LiveView {
+    /// Counter value by key (0 when absent) — test convenience.
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    }
+}
+
 /// A set of live metric cells. Instance methods never gate on the
 /// recorder switch — gating belongs to the free functions below, so
-/// tests drive their own registries unconditionally.
+/// tests drive their own registries unconditionally. Each tick is
+/// double-written: once into the epoch maps ([`snapshot_and_reset`]
+/// drains those) and once into the cumulative maps ([`peek`] reads
+/// them without draining).
+///
+/// [`snapshot_and_reset`]: MetricsRegistry::snapshot_and_reset
+/// [`peek`]: MetricsRegistry::peek
 pub struct MetricsRegistry {
     counters: Mutex<BTreeMap<String, u64>>,
     gauges: Mutex<BTreeMap<String, f64>>,
     hists: Mutex<BTreeMap<String, HistSummary>>,
+    cum_counters: Mutex<BTreeMap<String, u64>>,
+    cum_gauges: Mutex<BTreeMap<String, f64>>,
+    cum_hists: Mutex<BTreeMap<String, CumHist>>,
 }
 
 fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
@@ -197,6 +273,9 @@ impl MetricsRegistry {
             counters: Mutex::new(BTreeMap::new()),
             gauges: Mutex::new(BTreeMap::new()),
             hists: Mutex::new(BTreeMap::new()),
+            cum_counters: Mutex::new(BTreeMap::new()),
+            cum_gauges: Mutex::new(BTreeMap::new()),
+            cum_hists: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -204,23 +283,41 @@ impl MetricsRegistry {
         if delta == 0 {
             return;
         }
-        let mut c = lock(&self.counters);
-        match c.get_mut(key) {
-            Some(v) => *v += delta,
-            None => {
-                c.insert(key.to_string(), delta);
+        fn bump(map: &Mutex<BTreeMap<String, u64>>, key: &str, delta: u64) {
+            let mut c = lock(map);
+            match c.get_mut(key) {
+                Some(v) => *v += delta,
+                None => {
+                    c.insert(key.to_string(), delta);
+                }
             }
         }
+        bump(&self.counters, key, delta);
+        bump(&self.cum_counters, key, delta);
     }
 
     pub fn gauge_max(&self, key: &str, value: f64) {
-        let mut g = lock(&self.gauges);
-        match g.get_mut(key) {
-            Some(v) => *v = v.max(value),
-            None => {
-                g.insert(key.to_string(), value);
+        fn raise(map: &Mutex<BTreeMap<String, f64>>, key: &str, value: f64) {
+            let mut g = lock(map);
+            match g.get_mut(key) {
+                Some(v) => *v = v.max(value),
+                None => {
+                    g.insert(key.to_string(), value);
+                }
             }
         }
+        raise(&self.gauges, key, value);
+        raise(&self.cum_gauges, key, value);
+    }
+
+    /// Last-value gauge write (vs [`gauge_max`]'s high-water
+    /// semantics) — for signals that move both ways, like heartbeat
+    /// lag or instantaneous QPS.
+    ///
+    /// [`gauge_max`]: MetricsRegistry::gauge_max
+    pub fn gauge_set(&self, key: &str, value: f64) {
+        lock(&self.gauges).insert(key.to_string(), value);
+        lock(&self.cum_gauges).insert(key.to_string(), value);
     }
 
     pub fn hist_observe(&self, key: &str, value: f64) {
@@ -228,15 +325,42 @@ impl MetricsRegistry {
             .entry(key.to_string())
             .or_default()
             .observe(value);
+        lock(&self.cum_hists)
+            .entry(key.to_string())
+            .or_default()
+            .observe(value);
     }
 
     /// Drain everything recorded since the last snapshot. BTreeMap
-    /// iteration keeps the snapshot's vectors sorted by key.
+    /// iteration keeps the snapshot's vectors sorted by key. The
+    /// cumulative maps are untouched — a concurrent [`peek`] never
+    /// changes what this returns.
+    ///
+    /// [`peek`]: MetricsRegistry::peek
     pub fn snapshot_and_reset(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             counters: std::mem::take(&mut *lock(&self.counters)).into_iter().collect(),
             gauges: std::mem::take(&mut *lock(&self.gauges)).into_iter().collect(),
             hists: std::mem::take(&mut *lock(&self.hists)).into_iter().collect(),
+        }
+    }
+
+    /// Non-draining snapshot of the cumulative maps — the live
+    /// `/metrics` read path. Sorted by key like every snapshot.
+    pub fn peek(&self) -> LiveView {
+        LiveView {
+            counters: lock(&self.cum_counters)
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+            gauges: lock(&self.cum_gauges)
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+            hists: lock(&self.cum_hists)
+                .iter()
+                .map(|(k, h)| (k.clone(), h.summary.clone(), h.buckets.to_vec()))
+                .collect(),
         }
     }
 }
@@ -263,6 +387,13 @@ pub fn gauge_max(key: &str, value: f64) {
     }
 }
 
+/// Overwrite a process-global last-value gauge (no-op unless enabled).
+pub fn gauge_set(key: &str, value: f64) {
+    if recorder::enabled() {
+        GLOBAL.gauge_set(key, value);
+    }
+}
+
 /// Record one sample into a process-global histogram (no-op unless
 /// enabled).
 pub fn hist_observe(key: &str, value: f64) {
@@ -274,6 +405,13 @@ pub fn hist_observe(key: &str, value: f64) {
 /// Drain the process-global registry for this epoch's blob.
 pub fn snapshot_and_reset() -> MetricsSnapshot {
     GLOBAL.snapshot_and_reset()
+}
+
+/// Non-draining view of the process-global cumulative maps — what the
+/// `/metrics` endpoint renders. Not gated: the only caller is the
+/// telemetry server, which exists only when `--metrics-addr` armed it.
+pub fn peek() -> LiveView {
+    GLOBAL.peek()
 }
 
 /// Publish a serving run's headline latency/throughput gauges
@@ -441,6 +579,58 @@ mod tests {
         sample.observe(2.0);
         h.merge(&sample);
         assert_eq!((h.count, h.min, h.max), (1, 2.0, 2.0));
+    }
+
+    #[test]
+    fn peek_is_cumulative_and_never_steals_epoch_deltas() {
+        let reg = MetricsRegistry::new();
+        reg.counter_add("wire.lane0.tx_bytes", 10);
+        reg.gauge_max("staleness.open", 2.0);
+        reg.hist_observe("serve.latency_ms", 1.5);
+        // A live scrape between ticks must not perturb the epoch drain.
+        let live = reg.peek();
+        assert_eq!(live.counter("wire.lane0.tx_bytes"), 10);
+        let epoch = reg.snapshot_and_reset();
+        assert_eq!(epoch.counter("wire.lane0.tx_bytes"), 10, "peek stole the delta");
+        assert_eq!(epoch.gauges, vec![("staleness.open".to_string(), 2.0)]);
+        // Epoch maps drained; cumulative keeps accumulating across epochs.
+        reg.counter_add("wire.lane0.tx_bytes", 5);
+        assert_eq!(reg.peek().counter("wire.lane0.tx_bytes"), 15);
+        assert_eq!(reg.snapshot_and_reset().counter("wire.lane0.tx_bytes"), 5);
+        // And peek itself is non-draining.
+        assert_eq!(reg.peek().counter("wire.lane0.tx_bytes"), 15);
+    }
+
+    #[test]
+    fn gauge_set_is_last_value_both_views() {
+        let reg = MetricsRegistry::new();
+        reg.gauge_set("hb.rank1.last_heard_ms", 100.0);
+        reg.gauge_set("hb.rank1.last_heard_ms", 3.0); // falls — set, not max
+        assert_eq!(reg.peek().gauges, vec![("hb.rank1.last_heard_ms".to_string(), 3.0)]);
+        assert_eq!(
+            reg.snapshot_and_reset().gauges,
+            vec![("hb.rank1.last_heard_ms".to_string(), 3.0)]
+        );
+    }
+
+    #[test]
+    fn cumulative_hist_buckets_bin_samples() {
+        let reg = MetricsRegistry::new();
+        // One sample per interesting region: below the first bound,
+        // exactly on a bound (le is inclusive), and above the last.
+        reg.hist_observe("serve.latency_ms", 0.05);
+        reg.hist_observe("serve.latency_ms", 1.0);
+        reg.hist_observe("serve.latency_ms", 1e6);
+        let live = reg.peek();
+        let (key, summary, buckets) = &live.hists[0];
+        assert_eq!(key, "serve.latency_ms");
+        assert_eq!(summary.count, 3);
+        assert_eq!(buckets.len(), BUCKET_BOUNDS.len());
+        assert_eq!(buckets[0], 1, "0.05 lands in le=0.1");
+        let i = BUCKET_BOUNDS.iter().position(|&b| b == 1.0).unwrap();
+        assert_eq!(buckets[i], 1, "1.0 lands in le=1.0 inclusively");
+        let binned: u64 = buckets.iter().sum();
+        assert_eq!(summary.count - binned, 1, "1e6 only in the implicit +Inf");
     }
 
     #[test]

@@ -18,6 +18,18 @@
 //!   out.json`), one track per rank×thread, stall spans colored by
 //!   lane.
 //!
+//! Two more layers ride on those (PR 10):
+//!
+//! - [`http`] — the live telemetry plane: per-rank `/metrics`
+//!   (Prometheus text exposition over the registry's cumulative
+//!   [`MetricsRegistry::peek`] view), `/healthz` (rank/role/progress +
+//!   per-peer heartbeat lag), and `/buildinfo`, armed with
+//!   `--metrics-addr host:port`.
+//! - [`analyze`] — offline analytics over the exported trace
+//!   (`heta analyze`): per-rank/per-lane stall rollups, top-N stalls,
+//!   critical-path extraction, baseline diffing — plus the
+//!   `heta bench-gate` perf-regression comparator.
+//!
 //! Cross-process collection: each worker packs its epoch into a
 //! [`TraceBlob`] (serialized via the existing `WireCodec`) and ships
 //! it to the leader on the stats path at epoch end; TCP workers
@@ -34,7 +46,9 @@
 //!
 //! See `docs/OBSERVABILITY.md` for the user-facing guide.
 
+pub mod analyze;
 pub mod export;
+pub mod http;
 pub mod logging;
 pub mod metrics;
 pub mod recorder;
@@ -44,10 +58,16 @@ use anyhow::Result;
 use crate::net::codec::{ByteReader, ByteWriter, WireCodec};
 
 pub use export::{chrome_trace_json, export_chrome};
-pub use logging::{log_enabled, log_line, set_log_level, set_log_rank, LogLevel};
+pub use http::{
+    health_register_peer, health_set_epoch, health_set_identity, HealthState, TelemetryServer,
+};
+pub use logging::{
+    log_enabled, log_line, set_log_format, set_log_level, set_log_rank, LogFormat, LogLevel,
+};
 pub use metrics::{
-    cache_obs_base, counter_add, gauge_max, hist_observe, record_cache_counters, record_cache_obs,
-    record_serve_summary, snapshot_and_reset, HistSummary, MetricsRegistry, MetricsSnapshot,
+    cache_obs_base, counter_add, gauge_max, gauge_set, hist_observe, peek, record_cache_counters,
+    record_cache_obs, record_serve_summary, snapshot_and_reset, HistSummary, LiveView,
+    MetricsRegistry, MetricsSnapshot, BUCKET_BOUNDS,
 };
 pub use recorder::{
     clock_offset_us, current_batch, enabled, kind_name, now_us, rebase_tracks, set_batch,

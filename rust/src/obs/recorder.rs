@@ -327,6 +327,12 @@ pub fn set_rank(rank: u32) {
 /// Tag subsequent spans with the batch index ([`NO_BATCH_U64`] between
 /// batches).
 pub fn set_batch(batch: u64) {
+    // Feed /healthz batch progress: one relaxed load when the
+    // telemetry plane is unarmed, one extra store per batch when armed
+    // (works even when no thread is registered, i.e. without --trace).
+    if batch != NO_BATCH_U64 {
+        super::http::health_note_batch(batch as i64);
+    }
     BUF.with(|b| {
         if let Some(buf) = b.borrow_mut().as_mut() {
             buf.batch = batch;

@@ -109,9 +109,16 @@ pub fn run(
         let service = exec(batch)?;
         let t_done = t_start + service;
         for r in batch {
-            rep.latencies_ms.push((t_done - r.arrival_us) as f64 / 1e3);
+            let lat_ms = (t_done - r.arrival_us) as f64 / 1e3;
+            rep.latencies_ms.push(lat_ms);
+            // Live SLO families (PR 10): ticked per batch so a
+            // mid-run /metrics scrape sees the latency distribution
+            // and miss count as they grow, not at run end. Gated
+            // internally on the recorder switch — zero work untraced.
+            crate::obs::hist_observe("serve.latency_ms", lat_ms);
             if t_done > r.deadline_us {
                 rep.misses += 1;
+                crate::obs::counter_add("serve.deadline_miss_total", 1);
             }
         }
         rep.served += batch.len();
@@ -121,6 +128,11 @@ pub fn run(
         now = t_done; // single-lane executor: the next batch queues behind
         last_done = t_done;
         i = j;
+        // Running throughput so far — a live gauge, not a high-water.
+        let span_us = last_done.saturating_sub(t0);
+        if span_us > 0 {
+            crate::obs::gauge_set("serve.qps", rep.served as f64 / (span_us as f64 / 1e6));
+        }
     }
     rep.makespan_us = last_done.saturating_sub(t0);
     Ok(rep)

@@ -577,11 +577,10 @@ fn finish(
     embeds: Vec<Embed>,
     wire: WireTraffic,
 ) -> ServeReport {
-    for &l in timeline.latencies_ms.values() {
-        crate::obs::hist_observe("serve.latency_ms", l);
-    }
+    // `serve.latency_ms` / `serve.deadline_miss_total` / `serve.qps`
+    // tick live, per batch, inside `batcher::run` (PR 10) so mid-run
+    // scrapes see them — only the run-end ledger families land here.
     crate::obs::counter_add("serve.requests", timeline.served as u64);
-    crate::obs::counter_add("serve.deadline_misses", timeline.misses as u64);
     crate::obs::counter_add("serve.embed_hits", ledger.embed_hits);
     crate::obs::counter_add("serve.embed_misses", ledger.embed_misses);
     crate::obs::counter_add("serve.embed_invalidations", ledger.embed_invalidations);

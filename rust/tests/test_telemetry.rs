@@ -1,0 +1,210 @@
+//! The live telemetry plane (the PR-10 tentpole).
+//!
+//! One sequential test, deliberately: arming the plane
+//! (`obs::http::start`) is process-global and sticky, so the unarmed
+//! reference trajectories must be captured *before* the process ever
+//! arms — multiple `#[test]` functions run on parallel threads and
+//! could not guarantee that order.
+//!
+//! Phases:
+//!
+//! 1. (artifact-gated) Unarmed reference: both engines × both
+//!    transports through the shared `tests/common` harness.
+//! 2. Arm the plane on an ephemeral loopback port and start a scraper
+//!    thread that hammers `/metrics` + `/healthz` continuously.
+//! 3. (artifact-free) Exposition semantics over real HTTP: scrapes are
+//!    cumulative and non-draining, histograms expose the bucket
+//!    ladder, `/healthz` and `/buildinfo` parse.
+//! 4. (artifact-gated) Re-run the phase-1 matrix armed and under
+//!    continuous scraping; losses must be **byte-identical** to the
+//!    unarmed reference, and the post-run scrape must carry the
+//!    `wire.lane*` and `cache.*` families.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use heta::config::RuntimeKind;
+use heta::coordinator::SystemKind;
+use heta::metrics::EpochReport;
+
+use common::{run_reports_on, Runner};
+
+const CFG: &str = "mag-tiny";
+const EPOCHS: usize = 2;
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect to the telemetry listener");
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n")
+        .expect("write request");
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read response");
+    buf
+}
+
+/// Split an HTTP/1.1 response into (status line, body).
+fn split_response(raw: &str) -> (&str, &str) {
+    let status = raw.lines().next().unwrap_or("");
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    (status, body)
+}
+
+/// Run the PR-9 equivalence surface: both engines over the in-process
+/// cluster transport and the loopback-TCP star.
+fn run_matrix(phase: &str) -> Vec<(String, Vec<EpochReport>)> {
+    let mut out = Vec::new();
+    for system in [SystemKind::Heta, SystemKind::DglMetis] {
+        let label = format!("{phase}/{system:?}/cluster");
+        let reps = run_reports_on(
+            CFG,
+            system,
+            EPOCHS,
+            &label,
+            |c| c.train.runtime = RuntimeKind::Cluster,
+            Runner::InProcess,
+        );
+        out.push((label, reps));
+        let label = format!("{phase}/{system:?}/tcp");
+        let reps = run_reports_on(CFG, system, EPOCHS, &label, |_| {}, Runner::LoopbackTcp);
+        out.push((label, reps));
+    }
+    out
+}
+
+/// Bitwise trajectory equality, batch by batch, with the first
+/// diverging index in the failure message.
+fn assert_identical(reference: &[(String, Vec<EpochReport>)], armed: &[(String, Vec<EpochReport>)]) {
+    assert_eq!(reference.len(), armed.len());
+    for ((ref_label, r_reps), (armed_label, a_reps)) in reference.iter().zip(armed) {
+        assert_eq!(r_reps.len(), a_reps.len(), "[{armed_label}] epoch count");
+        for (ep, (r, a)) in r_reps.iter().zip(a_reps).enumerate() {
+            assert_eq!(
+                r.batch_losses.len(),
+                a.batch_losses.len(),
+                "[{armed_label}] epoch {ep}: batch count diverged from [{ref_label}]",
+            );
+            for (bi, (x, y)) in r.batch_losses.iter().zip(&a.batch_losses).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "[{armed_label}] diverged from [{ref_label}] at epoch {ep} batch {bi}: \
+                     {y} != {x} — arming the telemetry plane (and scraping it mid-run) \
+                     must not perturb training",
+                );
+            }
+            assert_eq!(r.loss_mean, a.loss_mean, "[{armed_label}] epoch {ep}: loss mean");
+            assert_eq!(r.accuracy, a.accuracy, "[{armed_label}] epoch {ep}: accuracy");
+        }
+    }
+}
+
+#[test]
+fn telemetry_plane_is_observationally_free_and_scrapable() {
+    // Nothing in this binary may have armed the plane yet — that is
+    // exactly why this file holds a single test function.
+    assert!(
+        !heta::obs::enabled(),
+        "the recorder is already on: the unarmed reference would be meaningless"
+    );
+
+    // -- phase 1: unarmed reference trajectories (artifact-gated) --
+    let gated = heta::util::artifacts_ready(CFG);
+    let reference = gated.then(|| run_matrix("unarmed"));
+
+    // -- phase 2: arm + hammer --
+    let srv = heta::obs::http::start("127.0.0.1:0", 0, "leader").expect("bind telemetry");
+    let addr = srv.addr;
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut scrapes = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let (status, _) = split_response(&http_get(addr, "/metrics"));
+                assert!(status.contains("200"), "mid-run /metrics scrape failed: {status}");
+                // /healthz may be 200 or 503; it must always answer.
+                let raw = http_get(addr, "/healthz");
+                assert!(!raw.is_empty(), "mid-run /healthz scrape got an empty response");
+                scrapes += 1;
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            scrapes
+        })
+    };
+
+    // -- phase 3: exposition semantics over real HTTP --
+    heta::obs::counter_add("telemetry.e2e.ticks", 3);
+    heta::obs::gauge_set("telemetry.e2e.level", 1.5);
+    heta::obs::hist_observe("telemetry.e2e.lat_ms", 2.0);
+    let (_, first) = {
+        let raw = http_get(addr, "/metrics");
+        let (s, b) = split_response(&raw);
+        (s.to_string(), b.to_string())
+    };
+    let raw = http_get(addr, "/metrics");
+    let (_, second) = split_response(&raw);
+    for (i, page) in [first.as_str(), second].into_iter().enumerate() {
+        // Identical on both scrapes: /metrics reads the cumulative
+        // view and never drains the epoch deltas.
+        assert!(
+            page.contains("telemetry_e2e_ticks{rank=\"0\"} 3"),
+            "scrape {i} lost the counter:\n{page}"
+        );
+        assert!(page.contains("telemetry_e2e_level{rank=\"0\"} 1.5"), "scrape {i}: gauge");
+        // The 2.0 ms sample lands in the 2.5 ms bucket and the +Inf
+        // bucket equals the count.
+        assert!(
+            page.contains("telemetry_e2e_lat_ms_bucket{rank=\"0\",le=\"2.5\"} 1"),
+            "scrape {i}: bucket ladder"
+        );
+        assert!(
+            page.contains("telemetry_e2e_lat_ms_bucket{rank=\"0\",le=\"+Inf\"} 1"),
+            "scrape {i}: +Inf bucket"
+        );
+        assert!(page.contains("telemetry_e2e_lat_ms_count{rank=\"0\"} 1"), "scrape {i}: count");
+    }
+    let raw = http_get(addr, "/healthz");
+    let (_, body) = split_response(&raw);
+    let health = heta::util::json::parse(body).expect("/healthz body must be JSON");
+    assert_eq!(health.get("role").as_str(), Some("leader"));
+    assert!(health.get("status").as_str().is_some());
+    let raw = http_get(addr, "/buildinfo");
+    let (status, body) = split_response(&raw);
+    assert!(status.contains("200"), "/buildinfo: {status}");
+    let info = heta::util::json::parse(body).expect("/buildinfo body must be JSON");
+    assert_eq!(info.get("name").as_str(), Some("heta"));
+
+    // -- phase 4: armed + scraped runs match the reference bitwise --
+    if let Some(reference) = reference {
+        let armed = run_matrix("armed");
+        assert_identical(&reference, &armed);
+        // The acceptance families are live after a TCP training run:
+        // lane traffic and per-node-type cache counters ticked with no
+        // --trace flag, purely from arming.
+        let raw = http_get(addr, "/metrics");
+        let (_, page) = split_response(&raw);
+        assert!(
+            page.contains("wire_lane"),
+            "armed TCP run exposed no wire.lane* family:\n{page}"
+        );
+        assert!(
+            page.contains("cache_"),
+            "armed run exposed no cache.* family:\n{page}"
+        );
+        // Training progress reached /healthz via the recorder's batch
+        // tag (no clock reads, no extra instrumentation in the loop).
+        let raw = http_get(addr, "/healthz");
+        let (_, body) = split_response(&raw);
+        let health = heta::util::json::parse(body).expect("/healthz body must be JSON");
+        assert!(
+            health.get("batch").as_f64().is_some(),
+            "armed run left /healthz batch progress null: {body}"
+        );
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let scrapes = scraper.join().expect("scraper thread");
+    assert!(scrapes > 0, "the scraper thread never completed a scrape");
+}
